@@ -1,0 +1,64 @@
+//! **Layout ablation** (DESIGN.md E6) — the paper's §2.1.2 design choice:
+//! NHWC over NCHW for the SIMD transforms.
+//!
+//! Under NHWC a vector load yields four channels of one pixel, so the
+//! transform kernels stream whole channel groups; under NCHW the same
+//! transform must either work single-channel (wasting lanes whenever the
+//! spatial tile isn't a lane multiple) or transpose on the fly. We measure
+//! the end-to-end Winograd convolution with (a) native NHWC input vs
+//! (b) NCHW input converted at the layer boundary — the realistic cost a
+//! framework pays for the wrong layout — plus the raw conversion overhead.
+
+use winoconv::bench::{measure, BenchConfig, Table};
+use winoconv::parallel::ThreadPool;
+use winoconv::tensor::{nchw_to_nhwc, nhwc_to_nchw, Tensor};
+use winoconv::util::cli::Args;
+use winoconv::winograd::{WinogradConvolution, WinogradVariant};
+
+fn main() -> winoconv::Result<()> {
+    let args = Args::from_env(&["quick", "bench"])?;
+    let threads: usize = args.get_parse_or(
+        "threads",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    )?;
+    let pool = ThreadPool::new(threads);
+    let cfg = if args.flag("quick") { BenchConfig::quick() } else { BenchConfig::from_env() };
+
+    let mut table = Table::new(
+        "E6: NHWC vs NCHW-at-the-boundary, F(4x4,3x3) end-to-end",
+        &["layer", "NHWC ms", "NCHW+convert ms", "convert-only ms", "penalty"],
+    );
+    for (h, c, m) in [(56usize, 64usize, 64usize), (28, 128, 128), (14, 256, 256)] {
+        let input = Tensor::randn(&[1, h, h, c], 1);
+        let input_nchw = nhwc_to_nchw(&input)?;
+        let weights = Tensor::randn(&[m, 3, 3, c], 2);
+        let wino = WinogradConvolution::new(WinogradVariant::F4x4_3x3, &weights, (1, 1))?;
+
+        let nhwc = measure(&cfg, || {
+            let _ = wino.run(&input, Some(&pool)).unwrap();
+        });
+        let nchw = measure(&cfg, || {
+            // A NCHW-resident framework must convert in and out.
+            let x = nchw_to_nhwc(&input_nchw).unwrap();
+            let y = wino.run(&x, Some(&pool)).unwrap();
+            let _ = nhwc_to_nchw(&y).unwrap();
+        });
+        let conv_only = measure(&cfg, || {
+            let x = nchw_to_nhwc(&input_nchw).unwrap();
+            std::hint::black_box(&x);
+        });
+        table.row(&[
+            format!("{h}x{h}x{c} -> {m}"),
+            format!("{:.2}", nhwc.median / 1e6),
+            format!("{:.2}", nchw.median / 1e6),
+            format!("{:.2}", conv_only.median / 1e6),
+            format!("{:.1}%", (nchw.median / nhwc.median - 1.0) * 100.0),
+        ]);
+    }
+    table.print();
+    println!(
+        "shape check (paper §2.1.2): NHWC wins — channel-innermost data feeds the\n\
+         4-lane transforms directly; NCHW pays conversion on every layer boundary."
+    );
+    Ok(())
+}

@@ -1,0 +1,99 @@
+//! **Figure 3 reproduction** (DESIGN.md E3): normalized whole-network
+//! runtime for all five CNNs, both schemes, with the Winograd-suitable
+//! ("fast") fraction split out — rendered as a table plus an ASCII bar
+//! chart, batch size 1 as in the paper.
+//!
+//! Every bar is normalized to that model's im2row total (= 1.00), so the
+//! figure shows (a) how much of each network is accelerable and (b) how far
+//! the fast fraction shrinks under the region-wise scheme.
+
+use winoconv::bench::Table;
+use winoconv::nn::{PreparedModel, Scheme};
+use winoconv::parallel::ThreadPool;
+use winoconv::tensor::Tensor;
+use winoconv::util::cli::Args;
+use winoconv::zoo::ModelKind;
+
+fn main() -> winoconv::Result<()> {
+    let args = Args::from_env(&["quick", "bench"])?;
+    let threads: usize = args.get_parse_or(
+        "threads",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    )?;
+    let quick = args.flag("quick")
+        || std::env::var("WINOCONV_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let reps: usize = args.get_parse_or("reps", if quick { 1 } else { 3 })?;
+    let pool = ThreadPool::new(threads);
+
+    let models: Vec<ModelKind> = match args.get("model") {
+        Some(name) => vec![ModelKind::parse(name)
+            .ok_or_else(|| winoconv::Error::Config(format!("unknown model {name:?}")))?],
+        None => ModelKind::ALL.to_vec(),
+    };
+
+    let mut table = Table::new(
+        &format!("Figure 3: normalized runtime (im2row total = 1.00), batch 1, {threads} thread(s)"),
+        &["Model", "scheme", "fast fraction", "other fraction", "total"],
+    );
+    let mut bars: Vec<(String, f64, f64, f64, f64)> = Vec::new();
+
+    for model in models {
+        eprintln!("benching {model} ...");
+        let graph = model.build(1)?;
+        let shape = model.input_shape(1);
+        let input = Tensor::randn(&shape, 7);
+        let mut full = [0.0f64; 2];
+        let mut fast = [0.0f64; 2];
+        for (i, scheme) in [Scheme::Im2RowOnly, Scheme::WinogradWhereSuitable]
+            .into_iter()
+            .enumerate()
+        {
+            let prepared = PreparedModel::prepare(model.name(), &graph, &shape, scheme)?;
+            let _ = prepared.run(&input, Some(&pool))?;
+            for _ in 0..reps {
+                let t0 = std::time::Instant::now();
+                let (_, timings) = prepared.run(&input, Some(&pool))?;
+                full[i] += t0.elapsed().as_nanos() as f64;
+                fast[i] += timings
+                    .iter()
+                    .filter(|t| t.fast_layer)
+                    .map(|t| t.ns as f64)
+                    .sum::<f64>();
+            }
+            full[i] /= reps as f64;
+            fast[i] /= reps as f64;
+        }
+        let norm = full[0];
+        for (i, scheme) in ["im2row", "ours"].into_iter().enumerate() {
+            table.row(&[
+                model.display().to_string(),
+                scheme.into(),
+                format!("{:.3}", fast[i] / norm),
+                format!("{:.3}", (full[i] - fast[i]) / norm),
+                format!("{:.3}", full[i] / norm),
+            ]);
+        }
+        bars.push((
+            model.display().to_string(),
+            fast[0] / norm,
+            (full[0] - fast[0]) / norm,
+            fast[1] / norm,
+            (full[1] - fast[1]) / norm,
+        ));
+    }
+    table.print();
+
+    // ASCII rendition of the paper's stacked-bar figure.
+    println!("\nFigure 3 (ASCII): '#' = fast-layer time, '.' = other, 50 cols = im2row total\n");
+    for (name, bf, bo, of_, oo) in bars {
+        let render = |fast: f64, other: f64| {
+            let f = (fast * 50.0).round() as usize;
+            let o = (other * 50.0).round() as usize;
+            format!("{}{}", "#".repeat(f), ".".repeat(o))
+        };
+        println!("{name:>13} im2row |{}", render(bf, bo));
+        println!("{:>13} ours   |{}", "", render(of_, oo));
+    }
+    println!("\nshape check: the '#' segment shrinks 2-3x under ours; '.' stays put.");
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! GEMM substrate micro-benchmark (perf-pass instrumentation, DESIGN.md
+//! §Perf): GFLOP/s of the packed blocked GEMM across the shapes the two
+//! convolution schemes actually produce, plus the batched Winograd shape and
+//! the three pipeline stages of one representative layer — the data that
+//! drives the bottleneck ranking in EXPERIMENTS.md §Perf.
+
+use winoconv::bench::{measure, BenchConfig, Table};
+use winoconv::gemm::{sgemm_simple, BatchedGemm};
+use winoconv::im2row::Im2RowConvolution;
+use winoconv::parallel::ThreadPool;
+use winoconv::tensor::Tensor;
+use winoconv::util::cli::Args;
+use winoconv::winograd::{WinogradConvolution, WinogradVariant};
+
+fn main() -> winoconv::Result<()> {
+    let args = Args::from_env(&["quick", "bench"])?;
+    let cfg = if args.flag("quick") { BenchConfig::quick() } else { BenchConfig::from_env() };
+    let threads: usize = args.get_parse_or(
+        "threads",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    )?;
+    let pool = ThreadPool::new(threads);
+
+    // ---- square + conv-shaped GEMMs ----
+    let mut table = Table::new(
+        "GEMM GFLOP/s (single call, serial)",
+        &["shape m x n x k", "median ms", "GFLOP/s"],
+    );
+    for (m, n, k) in [
+        (256usize, 256usize, 256usize),
+        (512, 512, 512),
+        (784, 128, 1152),  // im2row VGG-ish: R x M x (9C)
+        (3136, 64, 576),   // im2row early layer
+        (196, 512, 4608),  // im2row late layer
+    ] {
+        let a = Tensor::randn(&[m, k], 1).into_vec();
+        let b = Tensor::randn(&[k, n], 2).into_vec();
+        let mut c = vec![0.0f32; m * n];
+        let s = measure(&cfg, || {
+            sgemm_simple(m, n, k, &a, &b, &mut c);
+        });
+        let gflops = (2.0 * m as f64 * n as f64 * k as f64) / s.median;
+        table.row(&[
+            format!("{m} x {n} x {k}"),
+            format!("{:.3}", s.median / 1e6),
+            format!("{gflops:.2}"),
+        ]);
+    }
+    table.print();
+
+    // ---- the Winograd batched shape ----
+    let bgd = BatchedGemm { batch: 36, m: 196, k: 128, n: 128 };
+    let a = Tensor::randn(&[bgd.batch * bgd.a_stride()], 3).into_vec();
+    let b = Tensor::randn(&[bgd.batch * bgd.b_stride()], 4).into_vec();
+    let mut c = vec![0.0f32; bgd.batch * bgd.c_stride()];
+    let s = measure(&cfg, || {
+        bgd.run(&a, &b, &mut c);
+    });
+    println!(
+        "batched GEMM 36 x [196x128 . 128x128]: {:.3} ms, {:.2} GFLOP/s",
+        s.median / 1e6,
+        bgd.flops() as f64 / s.median
+    );
+
+    // ---- stage split of one representative Winograd layer ----
+    let (h, c_in, m_out) = (28usize, 128usize, 128usize);
+    let input = Tensor::randn(&[1, h, h, c_in], 5);
+    let weights = Tensor::randn(&[m_out, 3, 3, c_in], 6);
+    let wino = WinogradConvolution::new(WinogradVariant::F4x4_3x3, &weights, (1, 1))?;
+    let im2row = Im2RowConvolution::new(&weights, (1, 1), (1, 1))?;
+    let total = measure(&cfg, || {
+        let _ = wino.run(&input, Some(&pool)).unwrap();
+    });
+    let base = measure(&cfg, || {
+        let _ = im2row.run(&input, Some(&pool)).unwrap();
+    });
+    let flops = 2.0 * (h * h * 9 * c_in * m_out) as f64;
+    println!(
+        "\nlayer 28x28x128 -> 128 (3x3): wino {:.2} ms ({:.2} effective GFLOP/s), \
+         im2row {:.2} ms ({:.2} GFLOP/s), speedup {:.2}x",
+        total.median / 1e6,
+        flops / total.median,
+        base.median / 1e6,
+        flops / base.median,
+        base.median / total.median,
+    );
+    println!(
+        "note: 'effective' GFLOP/s counts direct-conv FLOPs — Winograd executes\n\
+         ~4x fewer multiplies, so effective > raw roofline is expected at high speedup."
+    );
+    Ok(())
+}

@@ -1,0 +1,138 @@
+//! **Table 1 reproduction** (DESIGN.md E2): whole-network mean absolute
+//! runtime (ms) at batch 1, for both schemes, split into Full Network and
+//! Fast Layers — plus the derived speedup rows, exactly like the paper's
+//! Table 1 (VGG-16, GoogleNet, Inception-v3, SqueezeNet; VGG-19 appears in
+//! Figure 3 only, so `--model vgg19` is opt-in here too).
+//!
+//! Paper reference (4× A73): speedups 60.7% / 41.6% / 40.9% / 29.6% —
+//! ordered by the fraction of runtime spent in Winograd-suitable layers.
+
+use winoconv::bench::{ms, Table};
+use winoconv::nn::{PreparedModel, Scheme};
+use winoconv::parallel::ThreadPool;
+use winoconv::tensor::Tensor;
+use winoconv::util::cli::Args;
+use winoconv::zoo::ModelKind;
+
+struct Row {
+    model: ModelKind,
+    base_full: f64,
+    base_fast: f64,
+    ours_full: f64,
+    ours_fast: f64,
+}
+
+fn main() -> winoconv::Result<()> {
+    let args = Args::from_env(&["quick", "bench"])?;
+    let threads: usize = args.get_parse_or(
+        "threads",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    )?;
+    let quick = args.flag("quick")
+        || std::env::var("WINOCONV_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let reps: usize = args.get_parse_or("reps", if quick { 1 } else { 3 })?;
+    let pool = ThreadPool::new(threads);
+
+    let models: Vec<ModelKind> = match args.get("model") {
+        Some(name) => vec![ModelKind::parse(name)
+            .ok_or_else(|| winoconv::Error::Config(format!("unknown model {name:?}")))?],
+        None => vec![
+            ModelKind::Vgg16,
+            ModelKind::GoogleNet,
+            ModelKind::InceptionV3,
+            ModelKind::SqueezeNet,
+        ],
+    };
+
+    let mut rows = Vec::new();
+    for model in models {
+        eprintln!("benching {model} (both schemes, {reps} rep(s)) ...");
+        let graph = model.build(1)?;
+        let shape = model.input_shape(1);
+        let input = Tensor::randn(&shape, 99);
+        let mut full = [0.0f64; 2];
+        let mut fast = [0.0f64; 2];
+        for (i, scheme) in [Scheme::Im2RowOnly, Scheme::WinogradWhereSuitable]
+            .into_iter()
+            .enumerate()
+        {
+            let prepared = PreparedModel::prepare(model.name(), &graph, &shape, scheme)?;
+            let _ = prepared.run(&input, Some(&pool))?; // warm-up
+            for _ in 0..reps {
+                let t0 = std::time::Instant::now();
+                let (_, timings) = prepared.run(&input, Some(&pool))?;
+                full[i] += t0.elapsed().as_nanos() as f64;
+                fast[i] += timings
+                    .iter()
+                    .filter(|t| t.fast_layer)
+                    .map(|t| t.ns as f64)
+                    .sum::<f64>();
+            }
+            full[i] /= reps as f64;
+            fast[i] /= reps as f64;
+            eprintln!("  {scheme}: full {} ms, fast-layers {} ms", ms(full[i]), ms(fast[i]));
+        }
+        rows.push(Row {
+            model,
+            base_full: full[0],
+            base_fast: fast[0],
+            ours_full: full[1],
+            ours_fast: fast[1],
+        });
+    }
+
+    let mut table = Table::new(
+        &format!(
+            "Table 1: whole-network mean absolute runtime (ms), batch 1, {threads} thread(s)"
+        ),
+        &["Model", "scheme", "Full Network", "Fast Layers"],
+    );
+    for r in &rows {
+        table.row(&[
+            r.model.display().to_string(),
+            "Im2Row".into(),
+            ms(r.base_full),
+            ms(r.base_fast),
+        ]);
+        table.row(&[
+            r.model.display().to_string(),
+            "Ours".into(),
+            ms(r.ours_full),
+            ms(r.ours_fast),
+        ]);
+    }
+    table.print();
+
+    let mut table = Table::new(
+        "Table 1 (derived): speedup",
+        &["Model", "full ms saved", "full %", "fast ms saved", "fast %", "paper full %"],
+    );
+    let paper = [
+        (ModelKind::Vgg16, "60.7%"),
+        (ModelKind::GoogleNet, "41.6%"),
+        (ModelKind::InceptionV3, "40.9%"),
+        (ModelKind::SqueezeNet, "29.6%"),
+        (ModelKind::Vgg19, "-"),
+    ];
+    for r in &rows {
+        let paper_pct = paper
+            .iter()
+            .find(|(m, _)| *m == r.model)
+            .map(|(_, p)| *p)
+            .unwrap_or("-");
+        table.row(&[
+            r.model.display().to_string(),
+            ms(r.base_full - r.ours_full),
+            format!("{:.1}%", (1.0 - r.ours_full / r.base_full) * 100.0),
+            ms(r.base_fast - r.ours_fast),
+            format!("{:.1}%", (1.0 - r.ours_fast / r.base_fast) * 100.0),
+            paper_pct.to_string(),
+        ]);
+    }
+    table.print();
+    println!(
+        "shape check: gains should be bounded by the fast-layer fraction\n\
+         (VGG >> GoogleNet ≈ Inception-v3 > SqueezeNet, as in the paper)."
+    );
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Walk the model zoo: build each of the paper's five CNNs, run one
+//! inference under both schemes, and print the per-model layer census plus
+//! the slowest layers — a quick structural sanity check of the whole stack.
+//!
+//! ```sh
+//! cargo run --release --example model_zoo -- [--model squeezenet] [--threads 4]
+//! ```
+//! Without `--model`, only the two small models run (VGG/Inception take
+//! minutes in a debug-ish environment; use the benches for full tables).
+
+use winoconv::bench::{ms, Table};
+use winoconv::nn::{PreparedModel, Scheme};
+use winoconv::parallel::ThreadPool;
+use winoconv::tensor::Tensor;
+use winoconv::util::cli::Args;
+use winoconv::zoo::ModelKind;
+
+fn main() -> winoconv::Result<()> {
+    let args = Args::from_env(&[])?;
+    let threads: usize = args.get_parse_or("threads", 4)?;
+    let pool = ThreadPool::new(threads);
+
+    let models: Vec<ModelKind> = match args.get("model") {
+        Some(name) => vec![ModelKind::parse(name)
+            .ok_or_else(|| winoconv::Error::Config(format!("unknown model {name:?}")))?],
+        None => vec![ModelKind::SqueezeNet, ModelKind::GoogleNet],
+    };
+
+    for model in models {
+        let graph = model.build(1)?;
+        let shape = model.input_shape(1);
+        let shapes = graph.infer_shapes(&shape)?;
+        println!(
+            "\n=== {model}: {} nodes, {} convs, input {:?} ===",
+            graph.nodes.len(),
+            graph.conv_count(),
+            shape
+        );
+
+        let input = Tensor::randn(&shape, 3);
+        let mut rows: Vec<(String, f64, f64, bool)> = Vec::new();
+        let mut totals = (0.0f64, 0.0f64);
+        for (si, scheme) in [Scheme::Im2RowOnly, Scheme::WinogradWhereSuitable]
+            .into_iter()
+            .enumerate()
+        {
+            let prepared = PreparedModel::prepare(model.name(), &graph, &shape, scheme)?;
+            let _ = prepared.run(&input, Some(&pool))?; // warm-up
+            let t0 = std::time::Instant::now();
+            let (out, timings) = prepared.run(&input, Some(&pool))?;
+            let total = t0.elapsed().as_nanos() as f64;
+            assert_eq!(out.shape().last(), Some(&1000));
+            if si == 0 {
+                totals.0 = total;
+                for t in &timings {
+                    rows.push((t.name.clone(), t.ns as f64, 0.0, t.fast_layer));
+                }
+            } else {
+                totals.1 = total;
+                for (row, t) in rows.iter_mut().zip(&timings) {
+                    row.2 = t.ns as f64;
+                }
+            }
+        }
+
+        // Top-5 slowest layers under the baseline.
+        let mut by_cost = rows.clone();
+        by_cost.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let mut table = Table::new(
+            &format!("{model}: 5 costliest layers (im2row baseline vs ours)"),
+            &["layer", "im2row ms", "ours ms", "fast layer"],
+        );
+        for (name, base, ours, fast) in by_cost.into_iter().take(5) {
+            table.row(&[name, ms(base), ms(ours), fast.to_string()]);
+        }
+        table.print();
+        println!(
+            "whole network: im2row {} ms -> ours {} ms ({:.1}% faster)",
+            ms(totals.0),
+            ms(totals.1),
+            (1.0 - totals.1 / totals.0) * 100.0
+        );
+
+        // Output-shape audit for the curious.
+        let final_shape = shapes.last().unwrap();
+        println!("output shape: {final_shape:?}");
+    }
+    Ok(())
+}

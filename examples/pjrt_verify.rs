@@ -1,0 +1,18 @@
+//! Cross-validate the three-layer stack (DESIGN.md E9): every AOT artifact
+//! (L2 JAX graph calling L1 Pallas kernels, lowered to HLO text) is executed
+//! through the PJRT runtime and compared against the native Rust (L3)
+//! implementation of the same function on identical inputs.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example pjrt_verify
+//! ```
+
+use winoconv::util::cli::Args;
+
+fn main() -> winoconv::Result<()> {
+    let args = Args::from_env(&[])?;
+    let dir = args.get_or("artifacts", "artifacts");
+    winoconv::runtime::verify::verify_all(std::path::Path::new(&dir), true)?;
+    println!("\nrust engine == JAX/Pallas artifacts — three-layer stack verified");
+    Ok(())
+}

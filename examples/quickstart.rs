@@ -1,0 +1,47 @@
+//! Quickstart: one convolution, three algorithms, identical numbers.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use winoconv::conv::{Conv2d, ConvAlgorithm};
+use winoconv::parallel::ThreadPool;
+use winoconv::tensor::Tensor;
+use winoconv::winograd::WinogradVariant;
+
+fn main() -> winoconv::Result<()> {
+    // A VGG-ish layer: 3×3 stride-1 convolution, 64 → 64 channels, 56×56.
+    let conv = Conv2d::new(64, 64, (3, 3)).with_padding((1, 1));
+    let input = Tensor::randn(&[1, 56, 56, 64], 42);
+    let weights = conv.random_weights(7);
+    let pool = ThreadPool::new(4);
+
+    println!("layer: 56x56x64 -> 64, 3x3 stride 1 pad 1");
+    println!("auto-selected algorithm: {}\n", conv.resolved_algorithm());
+
+    let mut reference: Option<Tensor> = None;
+    for alg in [
+        ConvAlgorithm::Im2Row,
+        ConvAlgorithm::Winograd(WinogradVariant::F2x2_3x3),
+        ConvAlgorithm::Winograd(WinogradVariant::F4x4_3x3),
+    ] {
+        let conv = conv.clone().with_algorithm(alg);
+        let t0 = std::time::Instant::now();
+        let out = conv.run_with(&input, &weights, Some(&pool))?;
+        let dt = t0.elapsed();
+        match &reference {
+            None => {
+                reference = Some(out);
+                println!("{alg:<28} {dt:>10.2?}   (reference)");
+            }
+            Some(r) => {
+                let ok = out.allclose(r, 1e-3);
+                println!("{alg:<28} {dt:>10.2?}   matches reference: {ok}");
+                assert!(ok, "algorithms disagree!");
+            }
+        }
+    }
+
+    println!("\nall algorithms agree — see `winoconv layers --model vgg16` for the full table");
+    Ok(())
+}

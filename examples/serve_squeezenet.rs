@@ -1,0 +1,100 @@
+//! End-to-end driver (DESIGN.md E4): load SqueezeNet, serve a stream of
+//! batched requests through the coordinator, and report latency/throughput —
+//! the reproduction of the paper's deployment claim (§1: "an average
+//! inference rate of 47 frames/sec" on 4× Cortex-A73).
+//!
+//! Two phases:
+//! 1. *closed-loop latency*: one in-flight request at a time (batch size 1,
+//!    the paper's setting) — reports per-frame latency and fps.
+//! 2. *open-loop throughput*: several client threads keep the queue full —
+//!    shows the batcher/backpressure machinery under load.
+//!
+//! ```sh
+//! cargo run --release --example serve_squeezenet -- [--seconds 20] [--threads 4] [--clients 3]
+//! ```
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use winoconv::coordinator::{EngineConfig, InferenceEngine};
+use winoconv::nn::{PreparedModel, Scheme};
+use winoconv::tensor::Tensor;
+use winoconv::util::cli::Args;
+use winoconv::zoo::ModelKind;
+
+fn main() -> winoconv::Result<()> {
+    let args = Args::from_env(&[])?;
+    let seconds: u64 = args.get_parse_or("seconds", 20)?;
+    let threads: usize = args.get_parse_or("threads", 4)?;
+    let clients: usize = args.get_parse_or("clients", 3)?;
+
+    let model = ModelKind::SqueezeNet;
+    let shape = model.input_shape(1);
+    println!("building {model} ({:?} input) ...", shape);
+    let graph = model.build(1)?;
+    println!(
+        "prepared: {} conv layers, scheme = region-wise Winograd where suitable",
+        graph.conv_count()
+    );
+    let prepared = PreparedModel::prepare(model.name(), &graph, &shape, Scheme::WinogradWhereSuitable)?;
+
+    // ---- Phase 1: closed-loop, batch 1 (the paper's measurement) ----
+    let engine = InferenceEngine::start(
+        prepared,
+        EngineConfig {
+            threads,
+            ..EngineConfig::default()
+        },
+    );
+    println!("\n[phase 1] closed-loop single-stream for {}s on {threads} threads", seconds / 2);
+    let deadline = Instant::now() + Duration::from_secs(seconds / 2);
+    let mut frames = 0u64;
+    while Instant::now() < deadline {
+        let input = Tensor::randn(&shape, frames);
+        let resp = engine.infer(input)?;
+        assert_eq!(resp.output.shape(), &[1, 1000]);
+        frames += 1;
+    }
+    let snap = engine.metrics();
+    println!("  {}", snap.report());
+    println!(
+        "  single-stream rate: {:.1} frames/sec (paper: 47 fps on 4x Cortex-A73)",
+        snap.throughput_fps
+    );
+
+    // ---- Phase 2: open-loop with several clients ----
+    println!("\n[phase 2] open-loop, {clients} clients for {}s", seconds - seconds / 2);
+    let stop = Arc::new(AtomicBool::new(false));
+    let engine = Arc::new(engine);
+    let handles: Vec<_> = (0..clients)
+        .map(|cid| {
+            let engine = Arc::clone(&engine);
+            let stop = Arc::clone(&stop);
+            let shape = shape.clone();
+            std::thread::spawn(move || {
+                let mut sent = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let input = Tensor::randn(&shape, (cid as u64) << 32 | sent);
+                    match engine.infer(input) {
+                        Ok(_) => sent += 1,
+                        Err(_) => std::thread::sleep(Duration::from_millis(2)),
+                    }
+                }
+                sent
+            })
+        })
+        .collect();
+    std::thread::sleep(Duration::from_secs(seconds - seconds / 2));
+    stop.store(true, Ordering::Relaxed);
+    let per_client: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let snap = engine.metrics();
+    println!("  per-client frames: {per_client:?}");
+    println!("  {}", snap.report());
+
+    let engine = Arc::try_unwrap(engine).map_err(|_| {
+        winoconv::Error::Runtime("engine still referenced".into())
+    })?;
+    engine.shutdown();
+    println!("\ndone — record these numbers in EXPERIMENTS.md E4");
+    Ok(())
+}

@@ -1,0 +1,85 @@
+"""AOT lowering: JAX/Pallas computations → HLO *text* artifacts for the Rust
+PJRT runtime.
+
+HLO text, NOT serialized HloModuleProto: jax ≥ 0.5 emits protos with 64-bit
+instruction ids that xla_extension 0.5.1 rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md). Every entry is
+lowered with ``return_tuple=True`` so the Rust side unpacks one tuple.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, example_args):
+    """Lower a jitted function to HLO text via StableHLO.
+
+    ``print_large_constants=True`` is load-bearing: the default printer
+    elides big constant arrays as ``constant({...})`` and xla_extension
+    0.5.1's text parser silently reads those as zeros — the transform
+    matrices would vanish from the artifact.
+    """
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions.short_parsable()
+    opts.print_large_constants = True
+    return comp.as_hlo_module().to_string(opts)
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def conv_entry(variant_name, n, h, w, c, m, kh, kw, ph, pw):
+    """A single Winograd conv layer artifact: inputs (x, weights)."""
+
+    def fn(x, wt):
+        return (model.winograd_conv2d(x, wt, variant_name, (ph, pw)),)
+
+    return fn, (spec(n, h, w, c), spec(m, kh, kw, c))
+
+
+#: name → (fn, example_args). Shapes are small on purpose: these artifacts
+#: exist for cross-validation (examples/pjrt_verify.rs), not throughput.
+ENTRIES = {
+    "conv_f2x2_3x3": conv_entry("f2x2_3x3", 1, 16, 16, 8, 16, 3, 3, 1, 1),
+    "conv_f4x4_3x3": conv_entry("f4x4_3x3", 1, 24, 24, 16, 32, 3, 3, 1, 1),
+    "conv_f2x2_5x5": conv_entry("f2x2_5x5", 1, 12, 12, 8, 8, 5, 5, 2, 2),
+    "conv_f2_1x7": conv_entry("f2_1x7", 1, 8, 32, 8, 16, 1, 7, 0, 3),
+    "mini_cnn": (
+        model.mini_cnn,
+        (spec(1, 16, 16, 4), spec(8, 3, 3, 4), spec(8, 3, 3, 8), spec(8, 10)),
+    ),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", help="build a single entry by name")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = [args.only] if args.only else list(ENTRIES)
+    for name in names:
+        fn, example_args = ENTRIES[name]
+        text = to_hlo_text(fn, example_args)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Pure-jnp correctness oracles for the L1 kernels and the L2 model.
+
+No Pallas anywhere in this file — every result here is computed by plain
+XLA ops (``lax.conv_general_dilated`` or explicit einsums) and is the ground
+truth the pytest/hypothesis suite holds the kernels to.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def direct_conv2d(x, w, stride=(1, 1), pad=(0, 0)):
+    """Direct NHWC convolution oracle.
+
+    Args:
+      x: ``[N, H, W, C]`` input.
+      w: ``[M, KH, KW, C]`` filters (the engine's canonical layout).
+      stride: ``(sh, sw)``.
+      pad: symmetric ``(ph, pw)`` zero padding.
+
+    Returns:
+      ``[N, OH, OW, M]``.
+    """
+    # lax expects HWIO filter layout for NHWC.
+    w_hwio = jnp.transpose(w, (1, 2, 3, 0))
+    return lax.conv_general_dilated(
+        x,
+        w_hwio,
+        window_strides=stride,
+        padding=((pad[0], pad[0]), (pad[1], pad[1])),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def winograd_stage_reference(tiles, kb, u, ka):
+    """Pure-jnp reference of the three Winograd stages over flattened tiles.
+
+    Args:
+      tiles: ``[R, t², C]``.
+      kb: ``[t², t²]`` input transform.
+      u: ``[t², C, M]`` transformed weights.
+      ka: ``[m², t²]`` output transform.
+
+    Returns:
+      ``[R, m², M]`` output tiles — what the three Pallas kernels chained
+      together must reproduce.
+    """
+    v = jnp.einsum("ts,rsc->trc", kb, tiles)  # input transform + scatter
+    y = jnp.einsum("trc,tcm->trm", v, u)  # batched GEMM
+    return jnp.einsum("pt,trm->rpm", ka, y)  # gather + output transform
+
+
+def extract_tiles(x_padded, th, tw, mh, mw, tiles_h, tiles_w):
+    """Slice overlapping ``th×tw`` regions on the ``mh×mw`` output grid.
+
+    Returns ``[N·tiles_h·tiles_w, th·tw, C]`` flattened tiles. Shared by the
+    reference and the real model (tile extraction is data movement, not the
+    compute hot-spot the Pallas kernels own).
+    """
+    n, _, _, c = x_padded.shape
+
+    def one(r):
+        b = r // (tiles_h * tiles_w)
+        rem = r % (tiles_h * tiles_w)
+        ty, tx = rem // tiles_w, rem % tiles_w
+        tile = lax.dynamic_slice(x_padded, (b, ty * mh, tx * mw, 0), (1, th, tw, c))
+        return tile.reshape(th * tw, c)
+
+    r_total = n * tiles_h * tiles_w
+    return jax.vmap(one)(jnp.arange(r_total))

@@ -1,0 +1,147 @@
+"""L1 Pallas kernels for the region-wise multi-channel Winograd pipeline.
+
+Three kernels, one per pipeline stage (the paper's §2 steps):
+
+1. :func:`input_transform`  — scatter: tiles ``[R, t², C]`` → Winograd-domain
+   A-matrices ``[t², R, C]`` (``V = KB @ d`` per region).
+2. :func:`batched_gemm`     — the ``t²`` GEMMs ``[R×C]·[C×M]``.
+3. :func:`output_transform` — gather: ``[t², R, M]`` → spatial output tiles
+   ``[R, m², M]`` (``y = KA @ prod`` per region).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): tiles are flattened so each
+stage is a *single matmul per grid step* — the transform matrices hit the
+MXU instead of being scalar add/sub chains, channels stay innermost (lane
+dimension), and the region axis is the grid. ``interpret=True`` everywhere:
+the CPU PJRT plugin cannot execute Mosaic custom-calls, and correctness (not
+wallclock) is what the L1 layer asserts; VMEM/MXU characteristics are
+estimated statically in DESIGN.md.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def input_transform(tiles, kb, *, block_r=64):
+    """``V[t, r, c] = Σ_s KB[t, s] · tiles[r, s, c]`` via Pallas.
+
+    Args:
+      tiles: ``[R, t², C]`` flattened input regions.
+      kb: ``[t², t²]`` Kronecker input-transform matrix (constant).
+      block_r: regions per grid step.
+
+    Returns:
+      ``[t², R, C]`` — the stacked GEMM A-matrices (scatter layout: writing
+      the transposed layout here is exactly the paper's scatter step).
+    """
+    r_total, t2, c = tiles.shape
+    kb = jnp.asarray(kb, dtype=tiles.dtype)
+    assert kb.shape == (t2, t2), f"KB {kb.shape} vs t²={t2}"
+    block_r = min(block_r, r_total)
+
+    def kernel(kb_ref, t_ref, o_ref):
+        d = t_ref[...]  # [block_r, t2, C]
+        # One MXU-shaped contraction per grid step.
+        v = jnp.einsum("ts,rsc->trc", kb_ref[...], d, preferred_element_type=jnp.float32)
+        o_ref[...] = v.astype(o_ref.dtype)
+
+    grid = (pl.cdiv(r_total, block_r),)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t2, t2), lambda r: (0, 0)),
+            pl.BlockSpec((block_r, t2, c), lambda r: (r, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((t2, block_r, c), lambda r: (0, r, 0)),
+        out_shape=jax.ShapeDtypeStruct((t2, r_total, c), tiles.dtype),
+        interpret=True,
+    )(kb, tiles)
+
+
+def batched_gemm(v, u, *, block_r=128):
+    """``Y[t] = V[t] @ U[t]`` for every tile position ``t`` via Pallas.
+
+    Args:
+      v: ``[t², R, C]`` transformed input matrices.
+      u: ``[t², C, M]`` transformed weight matrices.
+      block_r: rows of V per grid step.
+
+    Returns:
+      ``[t², R, M]``.
+    """
+    t2, r_total, c = v.shape
+    t2u, cu, m = u.shape
+    assert (t2u, cu) == (t2, c), f"V {v.shape} vs U {u.shape}"
+    block_r = min(block_r, r_total)
+
+    def kernel(v_ref, u_ref, o_ref):
+        o_ref[...] = jnp.einsum(
+            "trc,tcm->trm",
+            v_ref[...],
+            u_ref[...],
+            preferred_element_type=jnp.float32,
+        ).astype(o_ref.dtype)
+
+    grid = (t2, pl.cdiv(r_total, block_r))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_r, c), lambda t, r: (t, r, 0)),
+            pl.BlockSpec((1, c, m), lambda t, r: (t, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_r, m), lambda t, r: (t, r, 0)),
+        out_shape=jax.ShapeDtypeStruct((t2, r_total, m), v.dtype),
+        interpret=True,
+    )(v, u)
+
+
+def output_transform(y, ka, *, block_r=64):
+    """``out[r] = KA @ Y[:, r, :]`` via Pallas (the gather step).
+
+    Args:
+      y: ``[t², R, M]`` GEMM outputs in the Winograd domain.
+      ka: ``[m², t²]`` Kronecker output-transform matrix.
+      block_r: regions per grid step.
+
+    Returns:
+      ``[R, m², M]`` spatial output tiles.
+    """
+    t2, r_total, m = y.shape
+    ka = jnp.asarray(ka, dtype=y.dtype)
+    assert ka.shape[1] == t2, f"KA {ka.shape} vs t²={t2}"
+    m2 = ka.shape[0]
+    block_r = min(block_r, r_total)
+
+    def kernel(ka_ref, y_ref, o_ref):
+        t = y_ref[...]  # [t2, block_r, M]
+        out = jnp.einsum("pt,trm->rpm", ka_ref[...], t, preferred_element_type=jnp.float32)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+    grid = (pl.cdiv(r_total, block_r),)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m2, t2), lambda r: (0, 0)),
+            pl.BlockSpec((t2, block_r, m), lambda r: (0, r, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, m2, m), lambda r: (r, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((r_total, m2, m), y.dtype),
+        interpret=True,
+    )(ka, y)
+
+
+def weight_transform(w_flat, kg):
+    """``U[t², C, M] = KG @ g`` — once per layer, plain XLA (off the request
+    path, like the Rust engine's prepare step).
+
+    Args:
+      w_flat: ``[r², C, M]`` filter taps (flattened spatially, row-major).
+      kg: ``[t², r²]`` Kronecker filter-transform matrix.
+    """
+    r2, c, m = w_flat.shape
+    kg = jnp.asarray(kg, dtype=w_flat.dtype)
+    assert kg.shape[1] == r2, f"KG {kg.shape} vs r²={r2}"
+    return jnp.einsum("ts,scm->tcm", kg, w_flat)

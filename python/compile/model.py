@@ -1,0 +1,95 @@
+"""L2: the JAX compute graph — region-wise Winograd convolution built from
+the L1 Pallas kernels, plus a small CNN used by the end-to-end artifact.
+
+Everything here is build-time: ``aot.py`` lowers these functions to HLO text
+once, and the Rust engine executes the artifacts via PJRT with Python out of
+the loop.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref, winograd as wk
+from .transforms import VARIANTS
+
+
+def winograd_conv2d(x, w, variant_name, pad=(0, 0)):
+    """Region-wise multi-channel Winograd convolution (stride 1).
+
+    Args:
+      x: ``[N, H, W, C]`` NHWC input.
+      w: ``[M, KH, KW, C]`` filters.
+      variant_name: key into :data:`~compile.transforms.VARIANTS`.
+      pad: symmetric ``(ph, pw)`` padding.
+
+    Returns:
+      ``[N, OH, OW, M]``.
+    """
+    v = VARIANTS[variant_name]
+    kb, kg, ka = v.kron_matrices()
+    (mh, mw), (rh, rw) = v.out_tile, v.kernel
+    th, tw = v.in_tile
+
+    n, h, w_in, c = x.shape
+    m, kh, kw, wc = w.shape
+    assert (kh, kw) == (rh, rw), f"filter {kh}x{kw} vs variant {v.name}"
+    assert wc == c, f"channels {wc} vs {c}"
+    ph, pw = pad
+    oh, ow = h + 2 * ph - rh + 1, w_in + 2 * pw - rw + 1
+    tiles_h, tiles_w = -(-oh // mh), -(-ow // mw)
+
+    # Pad so the tile grid is fully in-bounds.
+    need_h = tiles_h * mh + th - mh
+    need_w = tiles_w * mw + tw - mw
+    x_p = jnp.pad(
+        x, ((0, 0), (ph, need_h - h - ph), (pw, need_w - w_in - pw), (0, 0))
+    )
+
+    # Stage 0 (data movement): overlapping tiles, flattened row-major.
+    tiles = ref.extract_tiles(x_p, th, tw, mh, mw, tiles_h, tiles_w)
+
+    # Filter transform (prepare step): [M,KH,KW,C] → [r², C, M] → U [t²,C,M].
+    w_flat = jnp.transpose(w.reshape(m, rh * rw, c), (1, 2, 0))
+    u = wk.weight_transform(w_flat, kg)
+
+    # Stages 1–3 (the Pallas hot path).
+    v_mat = wk.input_transform(tiles, kb)
+    y_mat = wk.batched_gemm(v_mat, u)
+    out_tiles = wk.output_transform(y_mat, ka)  # [R, m², M]
+
+    # Reassemble and clip ragged edges.
+    out = out_tiles.reshape(n, tiles_h, tiles_w, mh, mw, m)
+    out = jnp.transpose(out, (0, 1, 3, 2, 4, 5)).reshape(
+        n, tiles_h * mh, tiles_w * mw, m
+    )
+    return out[:, :oh, :ow, :]
+
+
+def conv_layer(x, w, pad=(0, 0), variant_name=None):
+    """A conv layer that routes through Winograd when a variant is given,
+    else through the XLA direct conv (the selector lives in Rust; here the
+    caller picks explicitly at build time)."""
+    if variant_name is None:
+        return ref.direct_conv2d(x, w, (1, 1), pad)
+    return winograd_conv2d(x, w, variant_name, pad)
+
+
+def mini_cnn(x, w1, w2, wfc):
+    """The end-to-end artifact model: two Winograd 3×3 conv layers + ReLU,
+    global average pool, and a linear classifier.
+
+    Args:
+      x: ``[N, 16, 16, C1]`` input.
+      w1: ``[C2, 3, 3, C1]`` first conv filters.
+      w2: ``[C3, 3, 3, C2]`` second conv filters.
+      wfc: ``[C3, K]`` classifier weights.
+
+    Returns:
+      ``(logits [N, K],)``.
+    """
+    h = conv_layer(x, w1, pad=(1, 1), variant_name="f4x4_3x3")
+    h = jax.nn.relu(h)
+    h = conv_layer(h, w2, pad=(1, 1), variant_name="f2x2_3x3")
+    h = jax.nn.relu(h)
+    h = jnp.mean(h, axis=(1, 2))  # global average pool
+    return (h @ wfc,)

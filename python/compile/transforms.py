@@ -1,0 +1,156 @@
+"""Cook-Toom / Winograd transform-matrix construction (exact rationals).
+
+Mirror of ``rust/src/winograd/cook_toom.rs`` — same interpolation points,
+same construction, so the L1 Pallas kernels and the L3 Rust engine compute
+with *identical* matrices. Derivation and the correctness identity are
+documented in the Rust module; here we keep the construction and the exact
+identity check used by the pytest suite.
+"""
+
+from dataclasses import dataclass
+from fractions import Fraction
+
+import numpy as np
+
+#: Canonical interpolation points (small values + reciprocal pairs keep both
+#: matrix magnitudes and fp error growth low). Must match the Rust sequence.
+DEFAULT_POINTS = [
+    Fraction(0), Fraction(1), Fraction(-1), Fraction(2), Fraction(-2),
+    Fraction(1, 2), Fraction(-1, 2), Fraction(3), Fraction(-3),
+    Fraction(1, 3), Fraction(-1, 3), Fraction(4), Fraction(-4),
+]
+
+
+def _poly_from_roots(roots):
+    """Coefficients (ascending powers) of prod(x - r) over exact Fractions."""
+    coeffs = [Fraction(1)]
+    for root in roots:
+        nxt = [Fraction(0)] * (len(coeffs) + 1)
+        for p, c in enumerate(coeffs):
+            nxt[p + 1] += c
+            nxt[p] -= c * root
+        coeffs = nxt
+    return coeffs
+
+
+def cook_toom_exact(m, r, points=None):
+    """Exact (Fraction) matrices ``(BT (n,n), G (n,r), AT (m,n))`` for F(m,r).
+
+    ``n = m + r - 1`` multiplications; ``points`` are the n-1 finite
+    interpolation points (∞ is implicit).
+    """
+    n = m + r - 1
+    pts = list(DEFAULT_POINTS[: n - 1] if points is None else points)
+    assert len(pts) == n - 1, f"need {n - 1} points"
+    assert len(set(pts)) == len(pts), "points must be distinct"
+
+    # AT (m×n): Vandermonde columns + ∞ column e_{m-1}.
+    at = [[Fraction(0)] * n for _ in range(m)]
+    for k, a in enumerate(pts):
+        p = Fraction(1)
+        for i in range(m):
+            at[i][k] = p
+            p *= a
+    at[m - 1][n - 1] = Fraction(1)
+
+    # G (n×r): scaled Vandermonde rows + ∞ row e_{r-1}.
+    g = [[Fraction(0)] * r for _ in range(n)]
+    for i, a in enumerate(pts):
+        norm = Fraction(1)
+        for k, b in enumerate(pts):
+            if k != i:
+                norm *= a - b
+        p = Fraction(1)
+        for j in range(r):
+            g[i][j] = p / norm
+            p *= a
+    g[n - 1][r - 1] = Fraction(1)
+
+    # BT (n×n): rows are coefficients of N_i(x) = prod_{k≠i}(x − α_k);
+    # last row: coefficients of M(x) = prod_k (x − α_k).
+    bt = [[Fraction(0)] * n for _ in range(n)]
+    for i in range(n - 1):
+        omit = [a for k, a in enumerate(pts) if k != i]
+        for l, c in enumerate(_poly_from_roots(omit)):
+            bt[i][l] = c
+    for l, c in enumerate(_poly_from_roots(pts)):
+        bt[n - 1][l] = c
+
+    return bt, g, at
+
+
+def verify_identity_exact(bt, g, at):
+    """Exactly check Σ_k AT[i][k]·G[k][j]·BT[k][l] == δ(l == i+j)."""
+    m, n = len(at), len(at[0])
+    r = len(g[0])
+    for i in range(m):
+        for j in range(r):
+            for l in range(n):
+                s = sum(at[i][k] * g[k][j] * bt[k][l] for k in range(n))
+                if s != (1 if l == i + j else 0):
+                    return False
+    return True
+
+
+def cook_toom(m, r, points=None, dtype=np.float32):
+    """float matrices ``(BT, G, AT)`` for F(m, r)."""
+    bt, g, at = cook_toom_exact(m, r, points)
+    to_np = lambda rows: np.array([[float(v) for v in row] for row in rows], dtype=dtype)
+    return to_np(bt), to_np(g), to_np(at)
+
+
+@dataclass(frozen=True)
+class Variant:
+    """A 2-D (or 1-D via identity axis) Winograd variant, mirroring
+    ``rust/src/winograd/mod.rs::WinogradVariant``."""
+
+    name: str
+    out_tile: tuple  # (mh, mw)
+    kernel: tuple  # (rh, rw)
+
+    @property
+    def in_tile(self):
+        return (
+            self.out_tile[0] + self.kernel[0] - 1,
+            self.out_tile[1] + self.kernel[1] - 1,
+        )
+
+    def axis_matrices(self, axis):
+        """(BT, G, AT) for one axis; identity when the filter is flat there."""
+        m = self.out_tile[axis]
+        r = self.kernel[axis]
+        if r == 1:
+            eye = np.ones((1, 1), dtype=np.float32)
+            return eye, eye, eye
+        return cook_toom(m, r)
+
+    def kron_matrices(self):
+        """2-D transforms as Kronecker products, flattening tiles row-major:
+
+        * ``KB (t²×t²)``  — input transform:  ``V = KB @ d_flat``
+        * ``KG (t²×r²)``  — filter transform: ``U = KG @ g_flat``
+        * ``KA (m²×t²)``  — output transform: ``y = KA @ prod_flat``
+
+        (kron because ``vec(L·X·Rᵀ) = (L ⊗ R)·vec(X)`` for row-major vec.)
+        """
+        bt_h, g_h, at_h = self.axis_matrices(0)
+        bt_w, g_w, at_w = self.axis_matrices(1)
+        return (
+            np.kron(bt_h, bt_w).astype(np.float32),
+            np.kron(g_h, g_w).astype(np.float32),
+            np.kron(at_h, at_w).astype(np.float32),
+        )
+
+
+#: The shipped variants (same registry as the Rust engine).
+VARIANTS = {
+    "f2x2_3x3": Variant("f2x2_3x3", (2, 2), (3, 3)),
+    "f4x4_3x3": Variant("f4x4_3x3", (4, 4), (3, 3)),
+    "f6x6_3x3": Variant("f6x6_3x3", (6, 6), (3, 3)),
+    "f2x2_5x5": Variant("f2x2_5x5", (2, 2), (5, 5)),
+    "f4x4_5x5": Variant("f4x4_5x5", (4, 4), (5, 5)),
+    "f2_1x7": Variant("f2_1x7", (1, 2), (1, 7)),
+    "f2_7x1": Variant("f2_7x1", (2, 1), (7, 1)),
+    "f4_1x3": Variant("f4_1x3", (1, 4), (1, 3)),
+    "f4_3x1": Variant("f4_3x1", (4, 1), (3, 1)),
+}

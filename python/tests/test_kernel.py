@@ -1,0 +1,172 @@
+"""L1 Pallas kernels vs the pure-jnp oracle — the core correctness signal.
+
+Hypothesis sweeps randomise shapes, channel counts and variants so edge
+cases (ragged tiles, C=1, single-region inputs) are exercised, not just the
+happy path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref, winograd as wk
+from compile.transforms import VARIANTS
+
+
+def rand(shape, seed):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape), dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------- stage level
+
+
+@pytest.mark.parametrize("name", ["f2x2_3x3", "f4x4_3x3", "f2x2_5x5", "f2_1x7"])
+def test_stages_match_reference(name):
+    v = VARIANTS[name]
+    kb, kg, ka = v.kron_matrices()
+    t2 = v.in_tile[0] * v.in_tile[1]
+    r_total, c, m = 10, 6, 9
+    tiles = rand((r_total, t2, c), 1)
+    u = rand((t2, c, m), 2)
+
+    want = ref.winograd_stage_reference(tiles, kb, u, ka)
+    v_mat = wk.input_transform(tiles, kb)
+    y_mat = wk.batched_gemm(v_mat, u)
+    got = wk.output_transform(y_mat, ka)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_input_transform_scatter_layout():
+    """The kernel's output layout IS the scatter: [t², R, C]."""
+    v = VARIANTS["f2x2_3x3"]
+    kb, _, _ = v.kron_matrices()
+    tiles = rand((5, 16, 3), 3)
+    out = wk.input_transform(tiles, kb)
+    assert out.shape == (16, 5, 3)
+    want = jnp.einsum("ts,rsc->trc", jnp.asarray(kb), tiles)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5)
+
+
+def test_batched_gemm_blocks_partition_r():
+    """block_r smaller than R still covers every region exactly once."""
+    v_mat = rand((4, 37, 5), 4)
+    u = rand((4, 5, 6), 5)
+    got = wk.batched_gemm(v_mat, u, block_r=8)
+    want = jnp.einsum("trc,tcm->trm", v_mat, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+# ----------------------------------------------------------------- conv level
+
+
+@pytest.mark.parametrize(
+    "name,h,w,c,m,pad",
+    [
+        ("f2x2_3x3", 8, 8, 4, 8, (1, 1)),
+        ("f2x2_3x3", 7, 9, 3, 5, (0, 0)),
+        ("f4x4_3x3", 12, 12, 8, 16, (1, 1)),
+        ("f4x4_3x3", 9, 10, 3, 5, (1, 1)),  # ragged tiles
+        ("f6x6_3x3", 14, 14, 4, 4, (1, 1)),
+        ("f2x2_5x5", 12, 12, 4, 6, (2, 2)),
+        ("f4x4_5x5", 13, 13, 3, 4, (2, 2)),
+        ("f2_1x7", 6, 17, 4, 6, (0, 3)),
+        ("f2_7x1", 17, 6, 4, 6, (3, 0)),
+        ("f4_1x3", 5, 15, 3, 4, (0, 1)),
+        ("f4_3x1", 15, 5, 3, 4, (1, 0)),
+    ],
+)
+def test_winograd_conv_matches_direct(name, h, w, c, m, pad):
+    v = VARIANTS[name]
+    x = rand((1, h, w, c), h * w)
+    wt = rand((m, v.kernel[0], v.kernel[1], c), c * m)
+    got = model.winograd_conv2d(x, wt, name, pad)
+    want = ref.direct_conv2d(x, wt, (1, 1), pad)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    name=st.sampled_from(["f2x2_3x3", "f4x4_3x3", "f2x2_5x5"]),
+    h=st.integers(min_value=5, max_value=20),
+    w=st.integers(min_value=5, max_value=20),
+    c=st.integers(min_value=1, max_value=9),
+    m=st.integers(min_value=1, max_value=9),
+    padded=st.booleans(),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_winograd_conv_hypothesis_2d(name, h, w, c, m, padded, seed):
+    v = VARIANTS[name]
+    rh, rw = v.kernel
+    pad = (rh // 2, rw // 2) if padded else (0, 0)
+    if h + 2 * pad[0] < rh or w + 2 * pad[1] < rw:
+        return  # invalid geometry, skip
+    x = rand((1, h, w, c), seed % 100000)
+    wt = rand((m, rh, rw, c), (seed + 1) % 100000)
+    got = model.winograd_conv2d(x, wt, name, pad)
+    want = ref.direct_conv2d(x, wt, (1, 1), pad)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-3, atol=5e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    name=st.sampled_from(["f2_1x7", "f2_7x1", "f4_1x3", "f4_3x1"]),
+    span=st.integers(min_value=8, max_value=24),
+    other=st.integers(min_value=1, max_value=6),
+    c=st.integers(min_value=1, max_value=6),
+    m=st.integers(min_value=1, max_value=6),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_winograd_conv_hypothesis_1d(name, span, other, c, m, seed):
+    v = VARIANTS[name]
+    rh, rw = v.kernel
+    h, w = (other, span) if rh == 1 else (span, other)
+    x = rand((1, h, w, c), seed % 100000)
+    wt = rand((m, rh, rw, c), (seed + 7) % 100000)
+    got = model.winograd_conv2d(x, wt, name, (0, 0))
+    want = ref.direct_conv2d(x, wt, (1, 1), (0, 0))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-3, atol=5e-3)
+
+
+def test_batch_dimension():
+    x = rand((3, 8, 8, 4), 11)
+    wt = rand((6, 3, 3, 4), 12)
+    got = model.winograd_conv2d(x, wt, "f2x2_3x3", (1, 1))
+    want = ref.direct_conv2d(x, wt, (1, 1), (1, 1))
+    assert got.shape == (3, 8, 8, 6)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+def test_wrong_kernel_shape_asserts():
+    x = rand((1, 8, 8, 4), 1)
+    wt = rand((4, 5, 5, 4), 2)
+    with pytest.raises(AssertionError):
+        model.winograd_conv2d(x, wt, "f2x2_3x3", (0, 0))
+
+
+# ----------------------------------------------------------------- model level
+
+
+def test_mini_cnn_shapes_and_gradability():
+    x = rand((2, 16, 16, 4), 1)
+    w1 = rand((8, 3, 3, 4), 2) * 0.2
+    w2 = rand((8, 3, 3, 8), 3) * 0.2
+    wfc = rand((8, 10), 4) * 0.2
+    (logits,) = model.mini_cnn(x, w1, w2, wfc)
+    assert logits.shape == (2, 10)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_mini_cnn_matches_direct_composition():
+    x = rand((1, 16, 16, 4), 5)
+    w1 = rand((8, 3, 3, 4), 6) * 0.2
+    w2 = rand((8, 3, 3, 8), 7) * 0.2
+    wfc = rand((8, 10), 8) * 0.2
+    (got,) = model.mini_cnn(x, w1, w2, wfc)
+    h = jax.nn.relu(ref.direct_conv2d(x, w1, (1, 1), (1, 1)))
+    h = jax.nn.relu(ref.direct_conv2d(h, w2, (1, 1), (1, 1)))
+    want = jnp.mean(h, axis=(1, 2)) @ wfc
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)

@@ -1,0 +1,88 @@
+"""Exact and numerical checks of the Cook-Toom matrix construction."""
+
+import numpy as np
+import pytest
+
+from compile import transforms as T
+
+
+ALL_FMR = [(2, 3), (4, 3), (6, 3), (2, 5), (4, 5), (2, 7), (4, 7)]
+
+
+@pytest.mark.parametrize("m,r", ALL_FMR)
+def test_identity_exact(m, r):
+    """The minimal-filtering identity holds exactly over rationals."""
+    bt, g, at = T.cook_toom_exact(m, r)
+    assert T.verify_identity_exact(bt, g, at)
+
+
+def test_identity_detects_corruption():
+    bt, g, at = T.cook_toom_exact(2, 3)
+    bt[0][0] += 1
+    assert not T.verify_identity_exact(bt, g, at)
+
+
+@pytest.mark.parametrize("m,r", ALL_FMR)
+def test_1d_correlation_matches_direct(m, r):
+    """y = AT[(G·g) ⊙ (BT·d)] equals the direct valid correlation."""
+    rng = np.random.RandomState(m * 100 + r)
+    bt, g_m, at = T.cook_toom(m, r, dtype=np.float64)
+    n = m + r - 1
+    g = rng.randn(r)
+    d = rng.randn(n)
+    y = at @ ((g_m @ g) * (bt @ d))
+    want = np.array([np.dot(g, d[i : i + r]) for i in range(m)])
+    np.testing.assert_allclose(y, want, rtol=1e-9, atol=1e-9)
+
+
+def test_f4_3_matches_lavin_published_matrices():
+    """With points (0, 1, −1, 2, −2) the construction reproduces Lavin's
+    F(4,3) matrices exactly — pinning us to the literature."""
+    bt, g, at = T.cook_toom(4, 3, dtype=np.float64)
+    bt_lavin = np.array([
+        [4, 0, -5, 0, 1, 0],
+        [0, -4, -4, 1, 1, 0],
+        [0, 4, -4, -1, 1, 0],
+        [0, -2, -1, 2, 1, 0],
+        [0, 2, -1, -2, 1, 0],
+        [0, 4, 0, -5, 0, 1],
+    ], dtype=np.float64)
+    at_lavin = np.array([
+        [1, 1, 1, 1, 1, 0],
+        [0, 1, -1, 2, -2, 0],
+        [0, 1, 1, 4, 4, 0],
+        [0, 1, -1, 8, -8, 1],
+    ], dtype=np.float64)
+    np.testing.assert_allclose(bt, bt_lavin)
+    np.testing.assert_allclose(at, at_lavin)
+    np.testing.assert_allclose(g[0], [0.25, 0, 0])
+    np.testing.assert_allclose(g[-1], [0, 0, 1])
+
+
+@pytest.mark.parametrize("name", list(T.VARIANTS))
+def test_variant_geometry(name):
+    v = T.VARIANTS[name]
+    th, tw = v.in_tile
+    assert th == v.out_tile[0] + v.kernel[0] - 1
+    assert tw == v.out_tile[1] + v.kernel[1] - 1
+    kb, kg, ka = v.kron_matrices()
+    assert kb.shape == (th * tw, th * tw)
+    assert kg.shape == (th * tw, v.kernel[0] * v.kernel[1])
+    assert ka.shape == (v.out_tile[0] * v.out_tile[1], th * tw)
+
+
+def test_kron_equals_two_pass_transform():
+    """(L ⊗ R) vec(X) == vec(L X Rᵀ) for the row-major flattening."""
+    v = T.VARIANTS["f2x2_3x3"]
+    bt_h, _, _ = v.axis_matrices(0)
+    bt_w, _, _ = v.axis_matrices(1)
+    kb, _, _ = v.kron_matrices()
+    rng = np.random.RandomState(0)
+    x = rng.randn(4, 4).astype(np.float32)
+    two_pass = bt_h @ x @ bt_w.T
+    np.testing.assert_allclose(kb @ x.reshape(-1), two_pass.reshape(-1), rtol=1e-5)
+
+
+def test_duplicate_points_rejected():
+    with pytest.raises(AssertionError):
+        T.cook_toom_exact(2, 3, points=[0, 1, 1])

@@ -1,0 +1,228 @@
+//! Statistical benchmarking harness + the table printers that regenerate the
+//! paper's artifacts (offline build: no `criterion`).
+//!
+//! Methodology: the paper measures PMU cycles on an isolated big cluster; on
+//! a noisy host we (1) warm up until the code path is steady, (2) take many
+//! wall-clock samples, (3) report the median / 5%-trimmed mean
+//! ([`crate::util::stats::Summary`]), which are robust to scheduler spikes.
+
+pub mod workloads;
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Configuration of a measurement run.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    /// Warm-up iterations (not recorded).
+    pub warmup_iters: usize,
+    /// Recorded samples.
+    pub samples: usize,
+    /// Lower bound on total measured time; samples are added until both
+    /// `samples` and this budget are satisfied (cheap benchmarks take more
+    /// samples, expensive ones stop at `samples`).
+    pub min_time_ns: u64,
+    /// Hard cap on samples regardless of the time budget.
+    pub max_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 3,
+            samples: 10,
+            min_time_ns: 200_000_000, // 0.2 s
+            max_samples: 200,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// A faster profile for CI/tests.
+    pub fn quick() -> Self {
+        BenchConfig {
+            warmup_iters: 1,
+            samples: 3,
+            min_time_ns: 10_000_000,
+            max_samples: 20,
+        }
+    }
+
+    /// Scale sample counts from the environment (`WINOCONV_BENCH_QUICK=1`).
+    pub fn from_env() -> Self {
+        if std::env::var("WINOCONV_BENCH_QUICK").map(|v| v == "1").unwrap_or(false) {
+            BenchConfig::quick()
+        } else {
+            BenchConfig::default()
+        }
+    }
+}
+
+/// Measure a closure under `cfg`, returning robust summary statistics.
+pub fn measure<F: FnMut()>(cfg: &BenchConfig, mut f: F) -> Summary {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(cfg.samples);
+    let start = Instant::now();
+    loop {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+        let enough_samples = samples.len() >= cfg.samples;
+        let enough_time = start.elapsed().as_nanos() as u64 >= cfg.min_time_ns;
+        if (enough_samples && enough_time) || samples.len() >= cfg.max_samples {
+            break;
+        }
+    }
+    Summary::from_samples(&samples)
+}
+
+/// A named measurement, for table assembly.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// Row label.
+    pub name: String,
+    /// Timing summary.
+    pub summary: Summary,
+}
+
+/// Simple fixed-width ASCII table printer used by every bench target so the
+/// regenerated tables read like the paper's.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with a title and column headers.
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match the header arity).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "table row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render to a string.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("| ");
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!("{c:<w$} | "));
+            }
+            s.trim_end().to_string()
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('\n');
+        let total: usize = widths.iter().sum::<usize>() + 3 * widths.len() + 1;
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Format a throughput in GFLOP/s given work and a summary.
+pub fn gflops(flops: usize, s: &Summary) -> f64 {
+    flops as f64 / s.median
+}
+
+/// One-line bench report helper.
+pub fn report(name: &str, s: &Summary) {
+    println!("{name:<48} {}", s.display_line());
+}
+
+/// Pretty milliseconds for table cells.
+pub fn ms(ns: f64) -> String {
+    format!("{:.2}", ns / 1e6)
+}
+
+/// Pretty speedup factor.
+pub fn speedup(baseline_ns: f64, ours_ns: f64) -> String {
+    format!("{:.2}x", baseline_ns / ours_ns)
+}
+
+/// Re-export for bench binaries.
+pub use crate::util::stats::fmt_ns as format_ns;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_samples() {
+        let cfg = BenchConfig {
+            warmup_iters: 1,
+            samples: 5,
+            min_time_ns: 0,
+            max_samples: 10,
+        };
+        let mut calls = 0usize;
+        let s = measure(&cfg, || {
+            calls += 1;
+        });
+        assert_eq!(s.n, 5);
+        assert_eq!(calls, 6); // warmup + samples
+    }
+
+    #[test]
+    fn max_samples_caps_cheap_benchmarks() {
+        let cfg = BenchConfig {
+            warmup_iters: 0,
+            samples: 5,
+            min_time_ns: u64::MAX,
+            max_samples: 12,
+        };
+        let s = measure(&cfg, || {});
+        assert_eq!(s.n, 12);
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(&["1".into(), "hello".into()]);
+        t.row(&["22".into(), "x".into()]);
+        let s = t.render();
+        assert!(s.contains("demo"));
+        assert!(s.contains("hello"));
+        assert!(s.matches('\n').count() >= 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn helpers_format() {
+        assert_eq!(ms(1_500_000.0), "1.50");
+        assert_eq!(speedup(200.0, 100.0), "2.00x");
+        assert!(format_ns(1.0).contains("ns"));
+    }
+}

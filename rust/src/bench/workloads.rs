@@ -1,0 +1,153 @@
+//! Benchmark workloads: the conv layers of the five evaluated CNNs as
+//! standalone specs (for the per-layer Table 2 benches) plus helpers shared
+//! by the whole-network benches.
+
+use crate::conv::select::is_winograd_suitable;
+use crate::nn::{Graph, Op};
+use crate::tensor::Tensor;
+use crate::zoo::ModelKind;
+use crate::Result;
+
+/// One conv layer lifted out of a model, with its concrete input shape.
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    /// Owning model.
+    pub model: ModelKind,
+    /// Layer name inside the model.
+    pub name: String,
+    /// NHWC input shape at batch 1.
+    pub input_shape: Vec<usize>,
+    /// Input channels.
+    pub cin: usize,
+    /// Output channels.
+    pub cout: usize,
+    /// Filter `(kh, kw)`.
+    pub kernel: (usize, usize),
+    /// Stride.
+    pub stride: (usize, usize),
+    /// Padding.
+    pub pad: (usize, usize),
+}
+
+impl LayerSpec {
+    /// The paper's layer-type label (`"3x3"`, `"5x5"`, `"1x7"`, `"7x1"`, …).
+    pub fn layer_type(&self) -> String {
+        format!("{}x{}", self.kernel.0, self.kernel.1)
+    }
+
+    /// Is the layer Winograd-suitable (a "fast layer")?
+    pub fn fast(&self) -> bool {
+        is_winograd_suitable(self.kernel, self.stride)
+    }
+
+    /// Deterministic input tensor for benching.
+    pub fn input(&self, seed: u64) -> Tensor {
+        Tensor::randn(&self.input_shape, seed)
+    }
+
+    /// Deterministic weights `[M, KH, KW, C]`.
+    pub fn weights(&self, seed: u64) -> Tensor {
+        crate::conv::Conv2d::new(self.cin, self.cout, self.kernel).random_weights(seed)
+    }
+
+    /// FLOPs of this layer (direct-conv count).
+    pub fn flops(&self) -> usize {
+        let oh = (self.input_shape[1] + 2 * self.pad.0 - self.kernel.0) / self.stride.0 + 1;
+        let ow = (self.input_shape[2] + 2 * self.pad.1 - self.kernel.1) / self.stride.1 + 1;
+        crate::conv::direct::conv_flops(
+            self.input_shape[0],
+            oh,
+            ow,
+            self.kernel.0,
+            self.kernel.1,
+            self.cin,
+            self.cout,
+        )
+    }
+}
+
+/// Extract every conv layer of `model` (batch 1) with resolved input shapes.
+pub fn conv_layers(model: ModelKind, seed: u64) -> Result<Vec<LayerSpec>> {
+    let graph: Graph = model.build(seed)?;
+    let shapes = graph.infer_shapes(&model.input_shape(1))?;
+    let mut out = Vec::new();
+    for node in graph.nodes.iter() {
+        if let Op::Conv { desc, .. } = &node.op {
+            let in_shape = shapes[node.inputs[0]].clone();
+            out.push(LayerSpec {
+                model,
+                name: node.name.clone(),
+                input_shape: in_shape,
+                cin: desc.cin,
+                cout: desc.cout,
+                kernel: desc.kernel,
+                stride: desc.stride,
+                pad: desc.padding,
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// The fast (Winograd-suitable) conv layers of a model, deduplicated by
+/// shape signature so per-layer benches don't redundantly re-measure
+/// identical layers (e.g. VGG's repeated blocks, Inception's twin modules).
+pub fn unique_fast_layers(model: ModelKind, seed: u64) -> Result<Vec<(LayerSpec, usize)>> {
+    let mut seen: Vec<(LayerSpec, usize)> = Vec::new();
+    for spec in conv_layers(model, seed)?.into_iter().filter(LayerSpec::fast) {
+        match seen.iter_mut().find(|(s, _)| {
+            s.input_shape == spec.input_shape
+                && s.cin == spec.cin
+                && s.cout == spec.cout
+                && s.kernel == spec.kernel
+        }) {
+            Some((_, count)) => *count += 1,
+            None => seen.push((spec, 1)),
+        }
+    }
+    Ok(seen)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg16_layers_extracted() {
+        let layers = conv_layers(ModelKind::Vgg16, 1).unwrap();
+        assert_eq!(layers.len(), 13);
+        assert!(layers.iter().all(|l| l.layer_type() == "3x3" && l.fast()));
+        // conv1_1 sees the raw image.
+        assert_eq!(layers[0].input_shape, vec![1, 224, 224, 3]);
+        // conv5_x sees 14×14×512.
+        assert_eq!(layers[12].input_shape, vec![1, 14, 14, 512]);
+    }
+
+    #[test]
+    fn inception_v3_has_1d_layers() {
+        let layers = conv_layers(ModelKind::InceptionV3, 1).unwrap();
+        let types: std::collections::HashSet<String> =
+            layers.iter().filter(|l| l.fast()).map(|l| l.layer_type()).collect();
+        for t in ["3x3", "5x5", "1x7", "7x1", "1x3", "3x1"] {
+            assert!(types.contains(t), "missing {t}");
+        }
+    }
+
+    #[test]
+    fn dedup_compresses_vgg() {
+        let unique = unique_fast_layers(ModelKind::Vgg16, 1).unwrap();
+        let total: usize = unique.iter().map(|(_, c)| c).sum();
+        assert_eq!(total, 13);
+        assert!(unique.len() < 13, "VGG has repeated block shapes");
+    }
+
+    #[test]
+    fn flops_positive_and_plausible() {
+        for (spec, _) in unique_fast_layers(ModelKind::SqueezeNet, 1).unwrap() {
+            assert!(spec.flops() > 0);
+        }
+        // VGG conv1_1: 2·224·224·9·3·64 ≈ 0.17 GFLOP.
+        let l = &conv_layers(ModelKind::Vgg16, 1).unwrap()[0];
+        assert_eq!(l.flops(), 2 * 224 * 224 * 9 * 3 * 64);
+    }
+}

@@ -1,0 +1,161 @@
+//! Direct (naive) convolution — the correctness oracle every fast path is
+//! validated against. Seven nested loops, no tricks; the innermost loop runs
+//! over NHWC channels so it is at least cache-coherent, but this path is for
+//! tests, tiny problems and the bench baselines, not production.
+
+use crate::tensor::Tensor;
+use crate::{bail_shape, Result};
+
+/// `output[n, oy, ox, m] = Σ_{a,b,c} input[n, oy·sh+a−ph, ox·sw+b−pw, c] ·
+/// weights[m, a, b, c]` with zero padding.
+pub fn direct_conv2d(
+    input: &Tensor,
+    weights: &Tensor,
+    stride: (usize, usize),
+    pad: (usize, usize),
+) -> Result<Tensor> {
+    if input.rank() != 4 || weights.rank() != 4 {
+        bail_shape!(
+            "direct_conv2d expects rank-4 input/weights, got {:?} / {:?}",
+            input.shape(),
+            weights.shape()
+        );
+    }
+    let (n, h, w, c) = (
+        input.shape()[0],
+        input.shape()[1],
+        input.shape()[2],
+        input.shape()[3],
+    );
+    let (m, kh, kw, wc) = (
+        weights.shape()[0],
+        weights.shape()[1],
+        weights.shape()[2],
+        weights.shape()[3],
+    );
+    if wc != c {
+        bail_shape!("channel mismatch: input {c}, weights {wc}");
+    }
+    let (sh, sw) = stride;
+    let (ph, pw) = pad;
+    if sh == 0 || sw == 0 {
+        bail_shape!("stride must be positive");
+    }
+    if h + 2 * ph < kh || w + 2 * pw < kw {
+        bail_shape!("input {h}x{w} (pad {ph},{pw}) smaller than filter {kh}x{kw}");
+    }
+    let oh = (h + 2 * ph - kh) / sh + 1;
+    let ow = (w + 2 * pw - kw) / sw + 1;
+
+    let mut out = Tensor::zeros(&[n, oh, ow, m]);
+    for b in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for mi in 0..m {
+                    let mut acc = 0.0f32;
+                    for a in 0..kh {
+                        let iy = (oy * sh + a) as isize - ph as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for bx in 0..kw {
+                            let ix = (ox * sw + bx) as isize - pw as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            let px = input.pixel(b, iy as usize, ix as usize);
+                            for ch in 0..c {
+                                acc += px[ch] * weights.at4(mi, a, bx, ch);
+                            }
+                        }
+                    }
+                    *out.at4_mut(b, oy, ox, mi) = acc;
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// FLOP count of a direct convolution (the roofline denominator used in the
+/// bench reports): 2·N·OH·OW·KH·KW·C·M.
+pub fn conv_flops(
+    n: usize,
+    oh: usize,
+    ow: usize,
+    kh: usize,
+    kw: usize,
+    c: usize,
+    m: usize,
+) -> usize {
+    2 * n * oh * ow * kh * kw * c * m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_kernel_passthrough() {
+        // 1×1 kernel with identity channel-mixing copies the input.
+        let input = Tensor::randn(&[1, 4, 4, 2], 1);
+        let mut w = Tensor::zeros(&[2, 1, 1, 2]);
+        *w.at4_mut(0, 0, 0, 0) = 1.0;
+        *w.at4_mut(1, 0, 0, 1) = 1.0;
+        let out = direct_conv2d(&input, &w, (1, 1), (0, 0)).unwrap();
+        assert_eq!(out, input);
+    }
+
+    #[test]
+    fn hand_computed_3x3() {
+        // All-ones 3×3 input, all-ones 3×3 kernel, no pad: single output = 9.
+        let input = Tensor::full(&[1, 3, 3, 1], 1.0);
+        let w = Tensor::full(&[1, 3, 3, 1], 1.0);
+        let out = direct_conv2d(&input, &w, (1, 1), (0, 0)).unwrap();
+        assert_eq!(out.shape(), &[1, 1, 1, 1]);
+        assert_eq!(out.data()[0], 9.0);
+        // With pad 1 the corner output sees only 4 taps.
+        let out = direct_conv2d(&input, &w, (1, 1), (1, 1)).unwrap();
+        assert_eq!(out.shape(), &[1, 3, 3, 1]);
+        assert_eq!(out.at4(0, 0, 0, 0), 4.0);
+        assert_eq!(out.at4(0, 1, 1, 0), 9.0);
+        assert_eq!(out.at4(0, 0, 1, 0), 6.0);
+    }
+
+    #[test]
+    fn stride_two_downsamples() {
+        let input = Tensor::randn(&[1, 7, 7, 1], 2);
+        let w = Tensor::randn(&[1, 3, 3, 1], 3);
+        let out = direct_conv2d(&input, &w, (2, 2), (0, 0)).unwrap();
+        assert_eq!(out.shape(), &[1, 3, 3, 1]);
+    }
+
+    #[test]
+    fn channel_summation() {
+        // Two input channels with weights (1, 10): output = c0 + 10·c1.
+        let mut input = Tensor::zeros(&[1, 1, 1, 2]);
+        input.data_mut()[0] = 3.0;
+        input.data_mut()[1] = 5.0;
+        let mut w = Tensor::zeros(&[1, 1, 1, 2]);
+        w.data_mut()[0] = 1.0;
+        w.data_mut()[1] = 10.0;
+        let out = direct_conv2d(&input, &w, (1, 1), (0, 0)).unwrap();
+        assert_eq!(out.data()[0], 53.0);
+    }
+
+    #[test]
+    fn errors_on_bad_config() {
+        let input = Tensor::zeros(&[1, 4, 4, 2]);
+        let w = Tensor::zeros(&[1, 3, 3, 3]);
+        assert!(direct_conv2d(&input, &w, (1, 1), (0, 0)).is_err()); // channel mismatch
+        let w = Tensor::zeros(&[1, 5, 5, 2]);
+        assert!(direct_conv2d(&input, &w, (1, 1), (0, 0)).is_err()); // too small
+        let w = Tensor::zeros(&[1, 3, 3, 2]);
+        assert!(direct_conv2d(&input, &w, (0, 1), (0, 0)).is_err()); // zero stride
+    }
+
+    #[test]
+    fn flops_formula() {
+        assert_eq!(conv_flops(1, 2, 2, 3, 3, 4, 5), 2 * 2 * 2 * 9 * 4 * 5);
+    }
+}

@@ -1,0 +1,240 @@
+//! Public convolution API: one descriptor, pluggable algorithms, plus the
+//! per-layer selection heuristic (§3.2 of the paper: "layers suitable for
+//! Winograd-based acceleration use our scheme, the rest use im2row").
+
+pub mod direct;
+pub mod select;
+
+pub use select::select_algorithm;
+
+use crate::im2row::Im2RowConvolution;
+use crate::parallel::ThreadPool;
+use crate::tensor::Tensor;
+use crate::winograd::{WinogradConvolution, WinogradVariant};
+use crate::{bail_unsupported, Result};
+
+/// Which implementation executes a convolution layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ConvAlgorithm {
+    /// Naive oracle (tests / tiny shapes).
+    Direct,
+    /// Classical im2row + single GEMM (the paper's baseline).
+    Im2Row,
+    /// Region-wise multi-channel Winograd with an explicit variant.
+    Winograd(WinogradVariant),
+    /// Pick automatically per layer shape ([`select_algorithm`]).
+    Auto,
+}
+
+impl std::fmt::Display for ConvAlgorithm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConvAlgorithm::Direct => write!(f, "direct"),
+            ConvAlgorithm::Im2Row => write!(f, "im2row"),
+            ConvAlgorithm::Winograd(v) => write!(f, "winograd-{v}"),
+            ConvAlgorithm::Auto => write!(f, "auto"),
+        }
+    }
+}
+
+/// Shorthand constructors used across benches/examples.
+impl ConvAlgorithm {
+    /// The paper's headline 3×3 configuration.
+    pub const WINOGRAD_F4X4_3X3: ConvAlgorithm = ConvAlgorithm::Winograd(WinogradVariant::F4x4_3x3);
+}
+
+/// A 2-D convolution layer descriptor with a chosen algorithm.
+///
+/// ```no_run
+/// use winoconv::conv::{Conv2d, ConvAlgorithm};
+/// use winoconv::tensor::Tensor;
+/// let conv = Conv2d::new(32, 64, (3, 3)).with_padding((1, 1));
+/// let x = Tensor::randn(&[1, 28, 28, 32], 1);
+/// let w = conv.random_weights(2);
+/// let y = conv.run(&x, &w).unwrap();
+/// assert_eq!(y.shape(), &[1, 28, 28, 64]);
+/// ```
+#[derive(Debug, Clone)]
+pub struct Conv2d {
+    /// Input channels.
+    pub cin: usize,
+    /// Output channels.
+    pub cout: usize,
+    /// Filter extent `(kh, kw)`.
+    pub kernel: (usize, usize),
+    /// Stride `(sh, sw)`.
+    pub stride: (usize, usize),
+    /// Symmetric zero padding `(ph, pw)`.
+    pub padding: (usize, usize),
+    /// Algorithm choice (default [`ConvAlgorithm::Auto`]).
+    pub algorithm: ConvAlgorithm,
+}
+
+impl Conv2d {
+    /// New stride-1, unpadded, auto-algorithm layer.
+    pub fn new(cin: usize, cout: usize, kernel: (usize, usize)) -> Conv2d {
+        Conv2d {
+            cin,
+            cout,
+            kernel,
+            stride: (1, 1),
+            padding: (0, 0),
+            algorithm: ConvAlgorithm::Auto,
+        }
+    }
+
+    /// Builder: set the stride.
+    pub fn with_stride(mut self, stride: (usize, usize)) -> Conv2d {
+        self.stride = stride;
+        self
+    }
+
+    /// Builder: set the padding.
+    pub fn with_padding(mut self, padding: (usize, usize)) -> Conv2d {
+        self.padding = padding;
+        self
+    }
+
+    /// Builder: force an algorithm.
+    pub fn with_algorithm(mut self, algorithm: ConvAlgorithm) -> Conv2d {
+        self.algorithm = algorithm;
+        self
+    }
+
+    /// Deterministic He-style random weights `[M, KH, KW, C]`.
+    pub fn random_weights(&self, seed: u64) -> Tensor {
+        let fan_in = (self.kernel.0 * self.kernel.1 * self.cin) as f32;
+        let mut w = Tensor::randn(&[self.cout, self.kernel.0, self.kernel.1, self.cin], seed);
+        let scale = (2.0 / fan_in).sqrt();
+        for v in w.data_mut() {
+            *v *= scale;
+        }
+        w
+    }
+
+    /// Resolve [`ConvAlgorithm::Auto`] for this layer shape.
+    pub fn resolved_algorithm(&self) -> ConvAlgorithm {
+        match self.algorithm {
+            ConvAlgorithm::Auto => select_algorithm(self.kernel, self.stride, self.cin, self.cout),
+            a => a,
+        }
+    }
+
+    /// Execute serially.
+    pub fn run(&self, input: &Tensor, weights: &Tensor) -> Result<Tensor> {
+        self.run_with(input, weights, None)
+    }
+
+    /// Execute, optionally parallelised over `pool`.
+    pub fn run_with(
+        &self,
+        input: &Tensor,
+        weights: &Tensor,
+        pool: Option<&ThreadPool>,
+    ) -> Result<Tensor> {
+        match self.resolved_algorithm() {
+            ConvAlgorithm::Direct => direct::direct_conv2d(input, weights, self.stride, self.padding),
+            ConvAlgorithm::Im2Row => {
+                Im2RowConvolution::new(weights, self.stride, self.padding)?.run(input, pool)
+            }
+            ConvAlgorithm::Winograd(v) => {
+                if self.stride != (1, 1) {
+                    bail_unsupported!("Winograd requires stride 1, layer has {:?}", self.stride);
+                }
+                WinogradConvolution::new(v, weights, self.padding)?.run(input, pool)
+            }
+            ConvAlgorithm::Auto => unreachable!("resolved above"),
+        }
+    }
+
+    /// Output shape for a given input shape.
+    pub fn output_shape(&self, input: &[usize]) -> Result<Vec<usize>> {
+        let (n, h, w) = (input[0], input[1], input[2]);
+        let (kh, kw) = self.kernel;
+        let (ph, pw) = self.padding;
+        let (sh, sw) = self.stride;
+        if h + 2 * ph < kh || w + 2 * pw < kw {
+            crate::bail_shape!("input {h}x{w} too small for {kh}x{kw} (pad {ph},{pw})");
+        }
+        Ok(vec![
+            n,
+            (h + 2 * ph - kh) / sh + 1,
+            (w + 2 * pw - kw) / sw + 1,
+            self.cout,
+        ])
+    }
+
+    /// FLOPs for one inference through this layer on `input` shape.
+    pub fn flops(&self, input: &[usize]) -> Result<usize> {
+        let out = self.output_shape(input)?;
+        Ok(direct::conv_flops(
+            out[0], out[1], out[2], self.kernel.0, self.kernel.1, self.cin, self.cout,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_algorithms_agree() {
+        let conv = Conv2d::new(4, 8, (3, 3)).with_padding((1, 1));
+        let x = Tensor::randn(&[1, 10, 10, 4], 1);
+        let w = conv.random_weights(2);
+        let direct = conv
+            .clone()
+            .with_algorithm(ConvAlgorithm::Direct)
+            .run(&x, &w)
+            .unwrap();
+        for alg in [
+            ConvAlgorithm::Im2Row,
+            ConvAlgorithm::Winograd(WinogradVariant::F2x2_3x3),
+            ConvAlgorithm::Winograd(WinogradVariant::F4x4_3x3),
+            ConvAlgorithm::Auto,
+        ] {
+            let got = conv.clone().with_algorithm(alg).run(&x, &w).unwrap();
+            assert!(got.allclose(&direct, 5e-4), "algorithm {alg} disagrees");
+        }
+    }
+
+    #[test]
+    fn winograd_rejects_stride() {
+        let conv = Conv2d::new(2, 2, (3, 3))
+            .with_stride((2, 2))
+            .with_algorithm(ConvAlgorithm::Winograd(WinogradVariant::F4x4_3x3));
+        let x = Tensor::randn(&[1, 8, 8, 2], 1);
+        let w = conv.random_weights(2);
+        assert!(conv.run(&x, &w).is_err());
+    }
+
+    #[test]
+    fn auto_resolves_per_shape() {
+        // 3×3 s1 → Winograd; 3×3 s2 → im2row; 1×1 → im2row.
+        let a = Conv2d::new(16, 16, (3, 3)).resolved_algorithm();
+        assert!(matches!(a, ConvAlgorithm::Winograd(_)));
+        let a = Conv2d::new(16, 16, (3, 3)).with_stride((2, 2)).resolved_algorithm();
+        assert_eq!(a, ConvAlgorithm::Im2Row);
+        let a = Conv2d::new(16, 16, (1, 1)).resolved_algorithm();
+        assert_eq!(a, ConvAlgorithm::Im2Row);
+    }
+
+    #[test]
+    fn output_shape_and_flops() {
+        let conv = Conv2d::new(3, 8, (3, 3)).with_padding((1, 1));
+        assert_eq!(conv.output_shape(&[2, 8, 8, 3]).unwrap(), vec![2, 8, 8, 8]);
+        assert_eq!(
+            conv.flops(&[1, 8, 8, 3]).unwrap(),
+            2 * 8 * 8 * 9 * 3 * 8
+        );
+        let unpadded = Conv2d::new(3, 8, (3, 3));
+        assert!(unpadded.output_shape(&[1, 1, 1, 3]).is_err());
+    }
+
+    #[test]
+    fn weights_scaled_by_fan_in() {
+        let big = Conv2d::new(512, 4, (3, 3)).random_weights(1).max_abs();
+        let small = Conv2d::new(2, 4, (3, 3)).random_weights(1).max_abs();
+        assert!(big < small);
+    }
+}

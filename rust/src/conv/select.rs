@@ -1,0 +1,136 @@
+//! Per-layer algorithm selection — the policy behind the paper's
+//! "Winograd-suitable layers" split (§3.2).
+//!
+//! Suitability rules distilled from the paper:
+//! * Winograd/Cook-Toom requires **stride 1** (the tiling assumes dense
+//!   output coverage).
+//! * `3×3` layers get `F(4×4, 3×3)` — the biggest measured win (2.2–3.1×
+//!   average in Table 2) — unless the spatial extent is too small for 4×4
+//!   output tiles, where `F(2×2, 3×3)` wastes less on partial tiles.
+//! * `5×5` layers get `F(2×2, 5×5)` (GoogleNet/Inception rows of Table 2).
+//! * `1×7`/`7×1` layers get the 1-D Cook-Toom `F(2, 7)` variants
+//!   (Inception-v3 rows, ~2.0–2.1×).
+//! * `1×3`/`3×1` get 1-D `F(4, 3)`.
+//! * Everything else — `1×1`, strided, `7×7` stem layers, exotic shapes —
+//!   falls back to im2row (they are either GEMM-dominated already or not
+//!   expressible in the shipped variants).
+//! * Very shallow channel counts (C·M small) cannot amortise the transform
+//!   cost (§4 of the paper) and also fall back to im2row.
+
+use super::ConvAlgorithm;
+use crate::winograd::WinogradVariant;
+
+/// Minimum `C·M` product below which transform overhead dominates and
+/// im2row wins (from the amortization argument in §4; validated by the
+/// `ablation_amortization` bench).
+pub const MIN_CHANNEL_PRODUCT: usize = 64;
+
+/// Choose the algorithm for a layer shape.
+pub fn select_algorithm(
+    kernel: (usize, usize),
+    stride: (usize, usize),
+    cin: usize,
+    cout: usize,
+) -> ConvAlgorithm {
+    if stride != (1, 1) {
+        return ConvAlgorithm::Im2Row;
+    }
+    if cin * cout < MIN_CHANNEL_PRODUCT {
+        return ConvAlgorithm::Im2Row;
+    }
+    match WinogradVariant::for_kernel(kernel.0, kernel.1) {
+        Some(v) => ConvAlgorithm::Winograd(v),
+        None => ConvAlgorithm::Im2Row,
+    }
+}
+
+/// Variant choice refined by spatial extent: small outputs prefer the 2×2
+/// tile (fewer wasted partial-tile lanes). Used by the model zoo where
+/// layer spatial sizes are known statically.
+pub fn select_variant_spatial(
+    kernel: (usize, usize),
+    out_h: usize,
+    out_w: usize,
+) -> Option<WinogradVariant> {
+    match kernel {
+        (3, 3) => {
+            if out_h * out_w < 36 || out_h < 4 || out_w < 4 {
+                Some(WinogradVariant::F2x2_3x3)
+            } else {
+                Some(WinogradVariant::F4x4_3x3)
+            }
+        }
+        _ => WinogradVariant::for_kernel(kernel.0, kernel.1),
+    }
+}
+
+/// True if the paper's scheme applies to the layer at all — the
+/// "fast layer" predicate used to split Table 1 / Figure 3.
+pub fn is_winograd_suitable(kernel: (usize, usize), stride: (usize, usize)) -> bool {
+    stride == (1, 1) && WinogradVariant::for_kernel(kernel.0, kernel.1).is_some()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stride_forces_im2row() {
+        assert_eq!(
+            select_algorithm((3, 3), (2, 2), 64, 64),
+            ConvAlgorithm::Im2Row
+        );
+    }
+
+    #[test]
+    fn shallow_channels_force_im2row() {
+        assert_eq!(select_algorithm((3, 3), (1, 1), 3, 8), ConvAlgorithm::Im2Row);
+        assert!(matches!(
+            select_algorithm((3, 3), (1, 1), 64, 64),
+            ConvAlgorithm::Winograd(_)
+        ));
+    }
+
+    #[test]
+    fn kernel_shapes_route_to_expected_variants() {
+        assert_eq!(
+            select_algorithm((5, 5), (1, 1), 32, 64),
+            ConvAlgorithm::Winograd(WinogradVariant::F2x2_5x5)
+        );
+        assert_eq!(
+            select_algorithm((1, 7), (1, 1), 32, 64),
+            ConvAlgorithm::Winograd(WinogradVariant::F4_1x7)
+        );
+        assert_eq!(
+            select_algorithm((7, 1), (1, 1), 32, 64),
+            ConvAlgorithm::Winograd(WinogradVariant::F4_7x1)
+        );
+        assert_eq!(select_algorithm((1, 1), (1, 1), 64, 64), ConvAlgorithm::Im2Row);
+        assert_eq!(select_algorithm((7, 7), (1, 1), 64, 64), ConvAlgorithm::Im2Row);
+    }
+
+    #[test]
+    fn spatial_refinement_prefers_small_tiles_on_small_maps() {
+        assert_eq!(
+            select_variant_spatial((3, 3), 56, 56),
+            Some(WinogradVariant::F4x4_3x3)
+        );
+        assert_eq!(
+            select_variant_spatial((3, 3), 4, 4),
+            Some(WinogradVariant::F2x2_3x3)
+        );
+        assert_eq!(
+            select_variant_spatial((5, 5), 14, 14),
+            Some(WinogradVariant::F2x2_5x5)
+        );
+    }
+
+    #[test]
+    fn suitability_predicate() {
+        assert!(is_winograd_suitable((3, 3), (1, 1)));
+        assert!(is_winograd_suitable((1, 7), (1, 1)));
+        assert!(!is_winograd_suitable((3, 3), (2, 2)));
+        assert!(!is_winograd_suitable((1, 1), (1, 1)));
+        assert!(!is_winograd_suitable((7, 7), (2, 2)));
+    }
+}

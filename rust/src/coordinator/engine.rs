@@ -1,0 +1,286 @@
+//! The inference engine: dispatcher thread pulling batches off the queue,
+//! executing them on the prepared model over the compute threadpool, and
+//! delivering responses to per-request channels.
+
+use super::metrics::ServerMetrics;
+use super::queue::{Request, RequestQueue, Response};
+use crate::nn::PreparedModel;
+use crate::parallel::ThreadPool;
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Engine tuning knobs.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Compute threads (the paper's big cluster = 4).
+    pub threads: usize,
+    /// Queue capacity before backpressure.
+    pub queue_capacity: usize,
+    /// Max requests drained per dispatch round.
+    pub max_batch: usize,
+    /// How long the dispatcher waits for work per round.
+    pub poll: Duration,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            threads: 4,
+            queue_capacity: 64,
+            max_batch: 8,
+            poll: Duration::from_millis(5),
+        }
+    }
+}
+
+/// Response mailbox shared between dispatcher and waiting clients.
+#[derive(Default)]
+struct Mailbox {
+    slots: Mutex<HashMap<u64, Result<Response>>>,
+    ready: Condvar,
+}
+
+/// A running inference engine over one prepared model.
+///
+/// ```no_run
+/// use winoconv::coordinator::{EngineConfig, InferenceEngine};
+/// use winoconv::nn::{PreparedModel, Scheme};
+/// use winoconv::tensor::Tensor;
+/// use winoconv::zoo::ModelKind;
+///
+/// let graph = ModelKind::SqueezeNet.build(1).unwrap();
+/// let model = PreparedModel::prepare(
+///     "squeezenet", &graph, &[1, 224, 224, 3], Scheme::WinogradWhereSuitable).unwrap();
+/// let engine = InferenceEngine::start(model, EngineConfig::default());
+/// let out = engine.infer(Tensor::randn(&[1, 224, 224, 3], 1)).unwrap();
+/// println!("{}", engine.metrics().report());
+/// engine.shutdown();
+/// ```
+pub struct InferenceEngine {
+    queue: RequestQueue,
+    mailbox: Arc<Mailbox>,
+    metrics: Arc<ServerMetrics>,
+    next_id: AtomicU64,
+    dispatcher: Option<thread::JoinHandle<()>>,
+}
+
+impl InferenceEngine {
+    /// Spawn the dispatcher and its compute pool.
+    pub fn start(model: PreparedModel, cfg: EngineConfig) -> InferenceEngine {
+        let queue = RequestQueue::new(cfg.queue_capacity);
+        let mailbox = Arc::new(Mailbox::default());
+        let metrics = Arc::new(ServerMetrics::new());
+
+        let dispatcher = {
+            let queue = queue.clone();
+            let mailbox = Arc::clone(&mailbox);
+            let metrics = Arc::clone(&metrics);
+            thread::Builder::new()
+                .name("winoconv-dispatcher".into())
+                .spawn(move || {
+                    let pool = ThreadPool::new(cfg.threads);
+                    loop {
+                        match queue.pop_batch(cfg.max_batch, cfg.poll) {
+                            None => break, // closed and drained
+                            Some(batch) if batch.is_empty() => continue,
+                            Some(batch) => {
+                                for req in batch {
+                                    let queued = req.submitted.elapsed();
+                                    let t0 = Instant::now();
+                                    let result = model.run(&req.input, Some(&pool));
+                                    let compute = t0.elapsed();
+                                    let resp = result.map(|(output, _)| Response {
+                                        id: req.id,
+                                        output,
+                                        queue_ns: queued.as_nanos() as u64,
+                                        compute_ns: compute.as_nanos() as u64,
+                                    });
+                                    if resp.is_ok() {
+                                        metrics.record(
+                                            queued.as_nanos() as u64,
+                                            compute.as_nanos() as u64,
+                                            req.submitted.elapsed().as_nanos() as u64,
+                                        );
+                                    }
+                                    let mut slots = mailbox.slots.lock().unwrap();
+                                    slots.insert(req.id, resp);
+                                    mailbox.ready.notify_all();
+                                }
+                            }
+                        }
+                    }
+                })
+                .expect("spawn dispatcher")
+        };
+
+        InferenceEngine {
+            queue,
+            mailbox,
+            metrics,
+            next_id: AtomicU64::new(1),
+            dispatcher: Some(dispatcher),
+        }
+    }
+
+    /// Submit a request without waiting; returns its id, or an error when
+    /// the queue is saturated (backpressure).
+    pub fn submit(&self, input: Tensor) -> Result<u64> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = Request {
+            id,
+            input,
+            submitted: Instant::now(),
+        };
+        match self.queue.try_push(req) {
+            Ok(()) => Ok(id),
+            Err(_) => {
+                self.metrics.record_rejected();
+                Err(Error::Runtime("queue full (backpressure)".into()))
+            }
+        }
+    }
+
+    /// Block until request `id` completes.
+    pub fn wait(&self, id: u64) -> Result<Response> {
+        let mut slots = self.mailbox.slots.lock().unwrap();
+        loop {
+            if let Some(resp) = slots.remove(&id) {
+                return resp;
+            }
+            slots = self.mailbox.ready.wait(slots).unwrap();
+        }
+    }
+
+    /// Synchronous convenience: submit (blocking on backpressure) + wait.
+    pub fn infer(&self, input: Tensor) -> Result<Response> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = Request {
+            id,
+            input,
+            submitted: Instant::now(),
+        };
+        if !self.queue.push(req) {
+            return Err(Error::Runtime("engine is shut down".into()));
+        }
+        self.wait(id)
+    }
+
+    /// Current metrics.
+    pub fn metrics(&self) -> super::metrics::MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Pending queue depth.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Drain and stop. Safe to call once; drop also triggers it.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.queue.close();
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for InferenceEngine {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::Conv2d;
+    use crate::nn::{Graph, Op, Scheme};
+
+    /// A tiny but real model for engine tests.
+    fn tiny_model() -> PreparedModel {
+        let mut g = Graph::new();
+        let input = g.input();
+        let desc = Conv2d::new(4, 16, (3, 3)).with_padding((1, 1));
+        let w = desc.random_weights(1);
+        let c = g.add(
+            "conv",
+            Op::Conv { desc, weights: w, bias: vec![0.0; 16], relu: true },
+            &[input],
+        );
+        let gap = g.add("gap", Op::GlobalAvgPool, &[c]);
+        let fcw = crate::tensor::Tensor::randn(&[16, 10], 2);
+        let fc = g.add("fc", Op::Fc { weights: fcw, bias: vec![0.0; 10], relu: false }, &[gap]);
+        g.add("softmax", Op::Softmax, &[fc]);
+        PreparedModel::prepare("tiny", &g, &[1, 16, 16, 4], Scheme::WinogradWhereSuitable).unwrap()
+    }
+
+    #[test]
+    fn sync_inference_roundtrip() {
+        let engine = InferenceEngine::start(tiny_model(), EngineConfig {
+            threads: 2,
+            ..EngineConfig::default()
+        });
+        let resp = engine.infer(Tensor::randn(&[1, 16, 16, 4], 3)).unwrap();
+        assert_eq!(resp.output.shape(), &[1, 10]);
+        let sum: f32 = resp.output.data().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "softmax output sums to 1");
+        assert_eq!(engine.metrics().completed, 1);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn async_submit_wait_many() {
+        let engine = InferenceEngine::start(tiny_model(), EngineConfig::default());
+        let ids: Vec<u64> = (0..20)
+            .map(|i| loop {
+                match engine.submit(Tensor::randn(&[1, 16, 16, 4], i)) {
+                    Ok(id) => break id,
+                    Err(_) => std::thread::sleep(Duration::from_millis(1)),
+                }
+            })
+            .collect();
+        for id in ids {
+            let resp = engine.wait(id).unwrap();
+            assert_eq!(resp.id, id);
+        }
+        assert_eq!(engine.metrics().completed, 20);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn wrong_shape_is_error_not_hang() {
+        let engine = InferenceEngine::start(tiny_model(), EngineConfig::default());
+        let r = engine.infer(Tensor::zeros(&[1, 8, 8, 4]));
+        assert!(r.is_err());
+        engine.shutdown();
+    }
+
+    #[test]
+    fn metrics_track_throughput() {
+        let engine = InferenceEngine::start(tiny_model(), EngineConfig::default());
+        for i in 0..5 {
+            engine.infer(Tensor::randn(&[1, 16, 16, 4], i)).unwrap();
+        }
+        let m = engine.metrics();
+        assert_eq!(m.completed, 5);
+        assert!(m.throughput_fps > 0.0);
+        assert!(m.compute_ms.0 > 0.0);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn shutdown_via_drop_does_not_hang() {
+        let engine = InferenceEngine::start(tiny_model(), EngineConfig::default());
+        engine.infer(Tensor::randn(&[1, 16, 16, 4], 1)).unwrap();
+        drop(engine);
+    }
+}

@@ -1,0 +1,154 @@
+//! Serving metrics: counters and latency reservoirs with percentile
+//! snapshots (the numbers the paper's deployment claim — frames/sec on the
+//! big cluster — is made of).
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Thread-safe metrics registry for one engine.
+pub struct ServerMetrics {
+    inner: Mutex<Inner>,
+    started: Instant,
+}
+
+struct Inner {
+    completed: u64,
+    rejected: u64,
+    queue_ns: Vec<u64>,
+    compute_ns: Vec<u64>,
+    e2e_ns: Vec<u64>,
+}
+
+/// Point-in-time view of the metrics.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    /// Completed requests.
+    pub completed: u64,
+    /// Requests rejected by backpressure.
+    pub rejected: u64,
+    /// Wall-clock seconds since engine start.
+    pub uptime_s: f64,
+    /// Completed / uptime.
+    pub throughput_fps: f64,
+    /// End-to-end latency percentiles in ms: (p50, p90, p99).
+    pub e2e_ms: (f64, f64, f64),
+    /// Compute-only latency percentiles in ms: (p50, p90, p99).
+    pub compute_ms: (f64, f64, f64),
+    /// Mean queue wait in ms.
+    pub mean_queue_ms: f64,
+}
+
+impl Default for ServerMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServerMetrics {
+    /// Fresh registry; the throughput clock starts now.
+    pub fn new() -> ServerMetrics {
+        ServerMetrics {
+            inner: Mutex::new(Inner {
+                completed: 0,
+                rejected: 0,
+                queue_ns: Vec::new(),
+                compute_ns: Vec::new(),
+                e2e_ns: Vec::new(),
+            }),
+            started: Instant::now(),
+        }
+    }
+
+    /// Record one completed request.
+    pub fn record(&self, queue_ns: u64, compute_ns: u64, e2e_ns: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.completed += 1;
+        m.queue_ns.push(queue_ns);
+        m.compute_ns.push(compute_ns);
+        m.e2e_ns.push(e2e_ns);
+    }
+
+    /// Record a backpressure rejection.
+    pub fn record_rejected(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    /// Take a snapshot.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = self.inner.lock().unwrap();
+        let uptime = self.started.elapsed().as_secs_f64().max(1e-9);
+        let pct = |xs: &[u64]| -> (f64, f64, f64) {
+            if xs.is_empty() {
+                return (0.0, 0.0, 0.0);
+            }
+            let mut v: Vec<f64> = xs.iter().map(|&x| x as f64).collect();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let p = |q: f64| crate::util::stats::percentile_sorted(&v, q) / 1e6;
+            (p(50.0), p(90.0), p(99.0))
+        };
+        let mean_queue_ms = if m.queue_ns.is_empty() {
+            0.0
+        } else {
+            m.queue_ns.iter().sum::<u64>() as f64 / m.queue_ns.len() as f64 / 1e6
+        };
+        MetricsSnapshot {
+            completed: m.completed,
+            rejected: m.rejected,
+            uptime_s: uptime,
+            throughput_fps: m.completed as f64 / uptime,
+            e2e_ms: pct(&m.e2e_ns),
+            compute_ms: pct(&m.compute_ns),
+            mean_queue_ms,
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// One-paragraph human-readable report.
+    pub fn report(&self) -> String {
+        format!(
+            "requests: {} completed, {} rejected | throughput: {:.1} fps | \
+             e2e ms p50/p90/p99: {:.2}/{:.2}/{:.2} | \
+             compute ms p50/p90/p99: {:.2}/{:.2}/{:.2} | mean queue {:.2} ms",
+            self.completed,
+            self.rejected,
+            self.throughput_fps,
+            self.e2e_ms.0,
+            self.e2e_ms.1,
+            self.e2e_ms.2,
+            self.compute_ms.0,
+            self.compute_ms.1,
+            self.compute_ms.2,
+            self.mean_queue_ms,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_accumulate() {
+        let m = ServerMetrics::new();
+        for i in 1..=100u64 {
+            m.record(i * 1000, i * 2000, i * 3000);
+        }
+        m.record_rejected();
+        let s = m.snapshot();
+        assert_eq!(s.completed, 100);
+        assert_eq!(s.rejected, 1);
+        assert!(s.throughput_fps > 0.0);
+        // p50 of 1..=100 µs-scale e2e values ≈ 0.1515 ms.
+        assert!((s.e2e_ms.0 - 0.1515).abs() < 0.01, "{:?}", s.e2e_ms);
+        assert!(s.e2e_ms.2 > s.e2e_ms.0);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zeroes() {
+        let s = ServerMetrics::new().snapshot();
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.e2e_ms, (0.0, 0.0, 0.0));
+        assert!(s.report().contains("0 completed"));
+    }
+}

@@ -1,0 +1,19 @@
+//! L3 serving coordinator: request queue → dynamic batcher → worker pool →
+//! per-request latency metrics.
+//!
+//! The paper's headline deployment claim is real-time single-stream
+//! inference ("47 frames/sec SqueezeNet on 4× Cortex-A73", §1); this module
+//! is the engine a downstream user would wrap around the kernels to get
+//! there: clients submit NHWC frames, the dispatcher coalesces them into
+//! batches (the prepared models are shape-specialised, so batching here
+//! means queueing batch-1 executions back-to-back — exactly the paper's
+//! batch-size-1 setting — while keeping the worker pipeline full), and a
+//! metrics registry tracks latency percentiles and throughput.
+
+pub mod metrics;
+pub mod queue;
+pub mod engine;
+
+pub use engine::{EngineConfig, InferenceEngine};
+pub use metrics::{MetricsSnapshot, ServerMetrics};
+pub use queue::{Request, RequestQueue, Response};

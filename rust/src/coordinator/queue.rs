@@ -1,0 +1,232 @@
+//! Bounded MPMC request queue with blocking pop and backpressure
+//! (offline build: no crossbeam/tokio — Mutex + Condvar).
+
+use crate::tensor::Tensor;
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One inference request.
+#[derive(Debug)]
+pub struct Request {
+    /// Client-assigned id, echoed in the [`Response`].
+    pub id: u64,
+    /// NHWC input frame (batch 1).
+    pub input: Tensor,
+    /// Submission timestamp (for end-to-end latency).
+    pub submitted: Instant,
+}
+
+/// One inference response.
+#[derive(Debug)]
+pub struct Response {
+    /// Request id.
+    pub id: u64,
+    /// Output tensor (class scores).
+    pub output: Tensor,
+    /// Queue wait time.
+    pub queue_ns: u64,
+    /// Pure compute time.
+    pub compute_ns: u64,
+}
+
+struct Inner {
+    queue: Mutex<QueueState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+struct QueueState {
+    items: VecDeque<Request>,
+    closed: bool,
+}
+
+/// A bounded blocking queue of [`Request`]s shared between clients and the
+/// engine's dispatcher.
+#[derive(Clone)]
+pub struct RequestQueue {
+    inner: Arc<Inner>,
+}
+
+impl RequestQueue {
+    /// New queue holding at most `capacity` pending requests.
+    pub fn new(capacity: usize) -> RequestQueue {
+        RequestQueue {
+            inner: Arc::new(Inner {
+                queue: Mutex::new(QueueState {
+                    items: VecDeque::new(),
+                    closed: false,
+                }),
+                not_empty: Condvar::new(),
+                not_full: Condvar::new(),
+                capacity: capacity.max(1),
+            }),
+        }
+    }
+
+    /// Blocking push; applies backpressure when full. Returns `false` if the
+    /// queue has been closed.
+    pub fn push(&self, req: Request) -> bool {
+        let mut st = self.inner.queue.lock().unwrap();
+        loop {
+            if st.closed {
+                return false;
+            }
+            if st.items.len() < self.inner.capacity {
+                st.items.push_back(req);
+                self.inner.not_empty.notify_one();
+                return true;
+            }
+            st = self.inner.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking push. `Err(req)` when full or closed.
+    pub fn try_push(&self, req: Request) -> Result<(), Request> {
+        let mut st = self.inner.queue.lock().unwrap();
+        if st.closed || st.items.len() >= self.inner.capacity {
+            return Err(req);
+        }
+        st.items.push_back(req);
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Pop up to `max` requests, waiting up to `wait` for the first one.
+    /// Returns an empty vec on timeout; `None` when closed and drained.
+    pub fn pop_batch(&self, max: usize, wait: Duration) -> Option<Vec<Request>> {
+        let deadline = Instant::now() + wait;
+        let mut st = self.inner.queue.lock().unwrap();
+        while st.items.is_empty() {
+            if st.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Some(Vec::new());
+            }
+            let (guard, _timeout) = self
+                .inner
+                .not_empty
+                .wait_timeout(st, deadline - now)
+                .unwrap();
+            st = guard;
+        }
+        let take = st.items.len().min(max.max(1));
+        let batch: Vec<Request> = st.items.drain(..take).collect();
+        self.inner.not_full.notify_all();
+        Some(batch)
+    }
+
+    /// Pending request count.
+    pub fn len(&self) -> usize {
+        self.inner.queue.lock().unwrap().items.len()
+    }
+
+    /// True when no requests are pending.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close: pushes fail, pops drain then return `None`.
+    pub fn close(&self) {
+        let mut st = self.inner.queue.lock().unwrap();
+        st.closed = true;
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn req(id: u64) -> Request {
+        Request {
+            id,
+            input: Tensor::zeros(&[1, 1, 1, 1]),
+            submitted: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn fifo_order_and_batching() {
+        let q = RequestQueue::new(8);
+        for i in 0..5 {
+            assert!(q.push(req(i)));
+        }
+        let batch = q.pop_batch(3, Duration::from_millis(10)).unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        let batch = q.pop_batch(10, Duration::from_millis(10)).unwrap();
+        assert_eq!(batch.len(), 2);
+    }
+
+    #[test]
+    fn timeout_returns_empty() {
+        let q = RequestQueue::new(2);
+        let batch = q.pop_batch(4, Duration::from_millis(5)).unwrap();
+        assert!(batch.is_empty());
+    }
+
+    #[test]
+    fn try_push_respects_capacity() {
+        let q = RequestQueue::new(2);
+        assert!(q.try_push(req(0)).is_ok());
+        assert!(q.try_push(req(1)).is_ok());
+        assert!(q.try_push(req(2)).is_err());
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = RequestQueue::new(4);
+        q.push(req(1));
+        q.close();
+        assert!(!q.push(req(2)));
+        let batch = q.pop_batch(4, Duration::from_millis(5)).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(q.pop_batch(4, Duration::from_millis(5)).is_none());
+    }
+
+    #[test]
+    fn blocking_push_wakes_on_pop() {
+        let q = RequestQueue::new(1);
+        q.push(req(0));
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.push(req(1)));
+        thread::sleep(Duration::from_millis(20));
+        let b = q.pop_batch(1, Duration::from_millis(100)).unwrap();
+        assert_eq!(b[0].id, 0);
+        assert!(h.join().unwrap());
+        let b = q.pop_batch(1, Duration::from_millis(100)).unwrap();
+        assert_eq!(b[0].id, 1);
+    }
+
+    #[test]
+    fn cross_thread_producer_consumer() {
+        let q = RequestQueue::new(16);
+        let producer = {
+            let q = q.clone();
+            thread::spawn(move || {
+                for i in 0..100 {
+                    q.push(req(i));
+                }
+                q.close();
+            })
+        };
+        let mut seen = Vec::new();
+        loop {
+            match q.pop_batch(7, Duration::from_millis(50)) {
+                None => break,
+                Some(batch) => seen.extend(batch.iter().map(|r| r.id)),
+            }
+        }
+        producer.join().unwrap();
+        assert_eq!(seen.len(), 100);
+        let mut sorted = seen.clone();
+        sorted.sort_unstable();
+        assert_eq!(seen, sorted, "FIFO per producer");
+    }
+}

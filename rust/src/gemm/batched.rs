@@ -1,0 +1,242 @@
+//! Batched GEMM: the `x²` independent `[R×C]·[C×M]` products at the heart of
+//! the region-wise Winograd scheme (Figure 2(d) of the paper).
+//!
+//! All `x²` A-matrices live in one contiguous buffer (`[tile][R][C]`), as do
+//! the B-matrices (`[tile][C][M]`) and outputs (`[tile][R][M]`) — exactly the
+//! buffers the scatter (input transform) writes and the gather (output
+//! transform) reads. Parallelism goes across (tile, M-block) pairs.
+
+use super::{sgemm_blocked, sgemm_prepacked, Blocking, PackedB};
+use crate::parallel::ThreadPool;
+
+/// Descriptor for a uniform batch of GEMMs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchedGemm {
+    /// Number of independent GEMMs (`x²` for an `x×x` Winograd tile).
+    pub batch: usize,
+    /// Rows per GEMM — the number of output regions R.
+    pub m: usize,
+    /// Inner dimension — input channels C.
+    pub k: usize,
+    /// Columns per GEMM — output channels M.
+    pub n: usize,
+}
+
+impl BatchedGemm {
+    /// Elements in each A matrix.
+    pub fn a_stride(&self) -> usize {
+        self.m * self.k
+    }
+
+    /// Elements in each B matrix.
+    pub fn b_stride(&self) -> usize {
+        self.k * self.n
+    }
+
+    /// Elements in each C matrix.
+    pub fn c_stride(&self) -> usize {
+        self.m * self.n
+    }
+
+    /// Total FLOPs for the whole batch (2·M·N·K each).
+    pub fn flops(&self) -> usize {
+        2 * self.batch * self.m * self.n * self.k
+    }
+
+    /// Execute serially: `C[t] = A[t]·B[t]` for every tile `t`.
+    pub fn run(&self, a: &[f32], b: &[f32], c: &mut [f32]) {
+        self.validate(a, b, c);
+        for t in 0..self.batch {
+            sgemm_blocked(
+                self.m,
+                self.n,
+                self.k,
+                &a[t * self.a_stride()..],
+                self.k,
+                &b[t * self.b_stride()..],
+                self.n,
+                &mut c[t * self.c_stride()..],
+                self.n,
+                false,
+                Blocking::default(),
+                None,
+            );
+        }
+    }
+
+    /// Execute with tiles distributed across the threadpool.
+    ///
+    /// Each tile's GEMM is independent, so tiles are the natural parallel
+    /// axis (the paper runs them across the A73 big cluster). Tiles are
+    /// chunked one-at-a-time: with x²∈{16,36,64} tiles and ≤16 threads every
+    /// worker gets ≥1 whole GEMM.
+    pub fn run_with_pool(&self, pool: &ThreadPool, a: &[f32], b: &[f32], c: &mut [f32]) {
+        self.validate(a, b, c);
+        let c_addr = c.as_mut_ptr() as usize;
+        let (bgd, a_ref, b_ref) = (*self, a, b);
+        pool.parallel_for(self.batch, move |t| {
+            // SAFETY: tile t writes only its own c_stride window; tiles are
+            // disjoint.
+            let ct: &mut [f32] = unsafe {
+                std::slice::from_raw_parts_mut(
+                    (c_addr as *mut f32).add(t * bgd.c_stride()),
+                    bgd.c_stride(),
+                )
+            };
+            sgemm_blocked(
+                bgd.m,
+                bgd.n,
+                bgd.k,
+                &a_ref[t * bgd.a_stride()..],
+                bgd.k,
+                &b_ref[t * bgd.b_stride()..],
+                bgd.n,
+                ct,
+                bgd.n,
+                false,
+                Blocking::default(),
+                None,
+            );
+        });
+    }
+
+    /// Pre-pack the B operand of every tile (done once per layer at prepare
+    /// time; see EXPERIMENTS.md §Perf).
+    pub fn prepack_b(&self, b: &[f32]) -> Vec<PackedB> {
+        assert!(b.len() >= self.batch * self.b_stride(), "batched B too small");
+        (0..self.batch)
+            .map(|t| PackedB::pack(&b[t * self.b_stride()..], self.n, self.k, self.n))
+            .collect()
+    }
+
+    /// Execute against pre-packed B matrices, tiles across the pool.
+    pub fn run_prepacked(
+        &self,
+        pool: Option<&ThreadPool>,
+        a: &[f32],
+        b: &[PackedB],
+        c: &mut [f32],
+    ) {
+        assert_eq!(b.len(), self.batch, "prepacked batch size mismatch");
+        assert!(a.len() >= self.batch * self.a_stride(), "batched A too small");
+        assert!(c.len() >= self.batch * self.c_stride(), "batched C too small");
+        let c_addr = c.as_mut_ptr() as usize;
+        let (bgd, a_ref) = (*self, a);
+        let run_tile = |t: usize| {
+            // SAFETY: tile t writes only its own c window; tiles disjoint.
+            let ct: &mut [f32] = unsafe {
+                std::slice::from_raw_parts_mut(
+                    (c_addr as *mut f32).add(t * bgd.c_stride()),
+                    bgd.c_stride(),
+                )
+            };
+            sgemm_prepacked(
+                bgd.m,
+                &a_ref[t * bgd.a_stride()..],
+                bgd.k,
+                &b[t],
+                ct,
+                bgd.n,
+                false,
+                None,
+            );
+        };
+        match pool {
+            Some(pool) => pool.parallel_for(self.batch, run_tile),
+            None => (0..self.batch).for_each(run_tile),
+        }
+    }
+
+    fn validate(&self, a: &[f32], b: &[f32], c: &[f32]) {
+        assert!(a.len() >= self.batch * self.a_stride(), "batched A too small");
+        assert!(b.len() >= self.batch * self.b_stride(), "batched B too small");
+        assert!(c.len() >= self.batch * self.c_stride(), "batched C too small");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::sgemm_ref;
+    use crate::util::{rel_error, XorShiftRng};
+
+    fn reference(bgd: &BatchedGemm, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut c = vec![0.0; bgd.batch * bgd.c_stride()];
+        for t in 0..bgd.batch {
+            let mut ct = vec![0.0; bgd.c_stride()];
+            sgemm_ref(
+                bgd.m,
+                bgd.n,
+                bgd.k,
+                &a[t * bgd.a_stride()..(t + 1) * bgd.a_stride()],
+                &b[t * bgd.b_stride()..(t + 1) * bgd.b_stride()],
+                &mut ct,
+            );
+            c[t * bgd.c_stride()..(t + 1) * bgd.c_stride()].copy_from_slice(&ct);
+        }
+        c
+    }
+
+    fn random(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = XorShiftRng::new(seed);
+        let mut v = vec![0.0; n];
+        rng.fill_normal(&mut v);
+        v
+    }
+
+    #[test]
+    fn serial_matches_reference() {
+        let bgd = BatchedGemm { batch: 16, m: 9, k: 7, n: 11 };
+        let a = random(bgd.batch * bgd.a_stride(), 1);
+        let b = random(bgd.batch * bgd.b_stride(), 2);
+        let mut c = vec![0.0; bgd.batch * bgd.c_stride()];
+        bgd.run(&a, &b, &mut c);
+        assert!(rel_error(&c, &reference(&bgd, &a, &b)) < 1e-4);
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let pool = ThreadPool::new(4);
+        let bgd = BatchedGemm { batch: 36, m: 25, k: 16, n: 32 };
+        let a = random(bgd.batch * bgd.a_stride(), 3);
+        let b = random(bgd.batch * bgd.b_stride(), 4);
+        let mut c1 = vec![0.0; bgd.batch * bgd.c_stride()];
+        let mut c2 = vec![0.0; bgd.batch * bgd.c_stride()];
+        bgd.run(&a, &b, &mut c1);
+        bgd.run_with_pool(&pool, &a, &b, &mut c2);
+        assert!(rel_error(&c2, &c1) < 1e-6);
+    }
+
+    #[test]
+    fn prepacked_matches_plain() {
+        let bgd = BatchedGemm { batch: 8, m: 5, k: 37, n: 19 };
+        let a = random(bgd.batch * bgd.a_stride(), 7);
+        let b = random(bgd.batch * bgd.b_stride(), 8);
+        let packed = bgd.prepack_b(&b);
+        let mut c1 = vec![0.0; bgd.batch * bgd.c_stride()];
+        let mut c2 = vec![0.0; bgd.batch * bgd.c_stride()];
+        bgd.run(&a, &b, &mut c1);
+        bgd.run_prepacked(None, &a, &packed, &mut c2);
+        assert!(rel_error(&c2, &c1) < 1e-6);
+        let pool = ThreadPool::new(3);
+        let mut c3 = vec![0.0; bgd.batch * bgd.c_stride()];
+        bgd.run_prepacked(Some(&pool), &a, &packed, &mut c3);
+        assert!(rel_error(&c3, &c1) < 1e-6);
+    }
+
+    #[test]
+    fn flops_formula() {
+        let bgd = BatchedGemm { batch: 16, m: 10, k: 3, n: 4 };
+        assert_eq!(bgd.flops(), 2 * 16 * 10 * 3 * 4);
+    }
+
+    #[test]
+    fn single_tile_batch() {
+        let bgd = BatchedGemm { batch: 1, m: 8, k: 8, n: 8 };
+        let a = random(64, 5);
+        let b = random(64, 6);
+        let mut c = vec![0.0; 64];
+        bgd.run(&a, &b, &mut c);
+        assert!(rel_error(&c, &reference(&bgd, &a, &b)) < 1e-4);
+    }
+}

@@ -1,0 +1,155 @@
+//! The register-tile micro-kernel at the bottom of the GEMM.
+//!
+//! An `MR×NR = 8×8` tile of C is held in accumulator registers while the
+//! packed A panel (column-major within the panel) and packed B panel
+//! (row-major within the panel) stream through. Eight rows × two [`F32x4`]
+//! accumulators per row; LLVM fuses the adjacent 4-lane pairs into 8-lane
+//! AVX registers on x86, and the identical code maps to NEON `vfmaq_f32` on
+//! aarch64 — the instruction the paper's GEMM (BLASFEO-class) is built on.
+
+use crate::simd::F32x4;
+
+/// Rows of C computed per micro-kernel invocation.
+///
+/// Register budget: the accumulator tile holds `MR × NR/4` `F32x4`s, which
+/// LLVM keeps in individual xmm registers (it does not fuse adjacent
+/// 4-lane arrays into zmm). AVX-512 exposes 32 xmm: 6×4 acc + 4 B + 1 A
+/// broadcast = 29 fits; the earlier 8×16 attempt needed 37 and spilled to
+/// a 20× slowdown (EXPERIMENTS.md §Perf step 3).
+pub const MR: usize = 6;
+/// Columns of C computed per micro-kernel invocation.
+pub const NR: usize = 16;
+
+/// Compute `C[MR×NR] (+)= Apanel · Bpanel` over `kc` rank-1 updates.
+///
+/// * `a` — packed A panel: `kc` groups of `MR` values (column of the tile).
+/// * `b` — packed B panel: `kc` groups of `NR` values (row of the tile).
+/// * `c` — row-major C with leading dimension `ldc`; the full `MR×NR` tile
+///   must be in-bounds (edge tiles go through a scratch buffer in the driver).
+/// * `accumulate` — false ⇒ overwrite C, true ⇒ add into C.
+#[inline]
+pub fn kernel_8x8(kc: usize, a: &[f32], b: &[f32], c: &mut [f32], ldc: usize, accumulate: bool) {
+    debug_assert!(a.len() >= kc * MR);
+    debug_assert!(b.len() >= kc * NR);
+
+    let mut acc = [[F32x4::zero(); NR / 4]; MR];
+
+    // Stream kc rank-1 updates through the accumulators.
+    for p in 0..kc {
+        let bp = &b[p * NR..p * NR + NR];
+        let b0 = F32x4::load(&bp[0..4]);
+        let b1 = F32x4::load(&bp[4..8]);
+        let b2 = F32x4::load(&bp[8..12]);
+        let b3 = F32x4::load(&bp[12..16]);
+        let ap = &a[p * MR..p * MR + MR];
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let ar = F32x4::splat(ap[r]);
+            accr[0] = accr[0].fma(ar, b0);
+            accr[1] = accr[1].fma(ar, b1);
+            accr[2] = accr[2].fma(ar, b2);
+            accr[3] = accr[3].fma(ar, b3);
+        }
+    }
+
+    // Write back.
+    for (r, accr) in acc.iter().enumerate() {
+        let row = &mut c[r * ldc..r * ldc + NR];
+        if accumulate {
+            for (j, av) in accr.iter().enumerate() {
+                let cv = F32x4::load(&row[j * 4..j * 4 + 4]) + *av;
+                cv.store(&mut row[j * 4..j * 4 + 4]);
+            }
+        } else {
+            for (j, av) in accr.iter().enumerate() {
+                av.store(&mut row[j * 4..j * 4 + 4]);
+            }
+        }
+    }
+}
+
+/// Reference (scalar) version of the micro-kernel used in tests.
+#[cfg(test)]
+pub fn kernel_ref(kc: usize, a: &[f32], b: &[f32], c: &mut [f32], ldc: usize, accumulate: bool) {
+    for r in 0..MR {
+        for j in 0..NR {
+            let mut s = 0.0f32;
+            for p in 0..kc {
+                s += a[p * MR + r] * b[p * NR + j];
+            }
+            if accumulate {
+                c[r * ldc + j] += s;
+            } else {
+                c[r * ldc + j] = s;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShiftRng;
+
+    fn random_panels(kc: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = XorShiftRng::new(seed);
+        let mut a = vec![0.0; kc * MR];
+        let mut b = vec![0.0; kc * NR];
+        rng.fill_normal(&mut a);
+        rng.fill_normal(&mut b);
+        (a, b)
+    }
+
+    #[test]
+    fn matches_reference_overwrite() {
+        for kc in [1, 2, 7, 64] {
+            let (a, b) = random_panels(kc, kc as u64);
+            let mut c1 = vec![9.0; MR * NR];
+            let mut c2 = vec![-3.0; MR * NR];
+            kernel_8x8(kc, &a, &b, &mut c1, NR, false);
+            kernel_ref(kc, &a, &b, &mut c2, NR, false);
+            for (x, y) in c1.iter().zip(&c2) {
+                assert!((x - y).abs() < 1e-4, "kc={kc}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_reference_accumulate() {
+        let kc = 33;
+        let (a, b) = random_panels(kc, 5);
+        let init: Vec<f32> = (0..MR * NR).map(|i| i as f32).collect();
+        let mut c1 = init.clone();
+        let mut c2 = init;
+        kernel_8x8(kc, &a, &b, &mut c1, NR, true);
+        kernel_ref(kc, &a, &b, &mut c2, NR, true);
+        for (x, y) in c1.iter().zip(&c2) {
+            assert!((x - y).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn respects_leading_dimension() {
+        let kc = 4;
+        let ldc = NR + 5;
+        let (a, b) = random_panels(kc, 7);
+        let mut c = vec![77.0; MR * ldc];
+        kernel_8x8(kc, &a, &b, &mut c, ldc, false);
+        // Padding columns untouched.
+        for r in 0..MR {
+            for j in NR..ldc {
+                assert_eq!(c[r * ldc + j], 77.0);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_kc_zeroes_or_keeps() {
+        let a = [0.0; 0];
+        let b = [0.0; 0];
+        let mut c = vec![5.0; MR * NR];
+        kernel_8x8(0, &a, &b, &mut c, NR, true);
+        assert!(c.iter().all(|&x| x == 5.0));
+        kernel_8x8(0, &a, &b, &mut c, NR, false);
+        assert!(c.iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,484 @@
+//! Packed, blocked single-precision GEMM (BLIS/BLASFEO-style).
+//!
+//! This is the shared substrate under **both** convolution schemes — the
+//! paper benchmarks its region-wise Winograd GEMMs against im2row GEMMs
+//! running on the same GEMM engine (Arm Compute Library); keeping one engine
+//! here likewise isolates the algorithmic difference.
+//!
+//! Structure: the classical five-loop blocking
+//! (`NC`→`KC`→`MC`→`NR`→`MR`) around an 8×8 SIMD micro-kernel, with A/B
+//! packed into panel buffers per block. `sgemm_with_pool` parallelises the
+//! `MC` loop across the threadpool.
+
+pub mod microkernel;
+pub mod pack;
+pub mod batched;
+
+pub use batched::BatchedGemm;
+pub use microkernel::{MR, NR};
+
+#[cfg(test)]
+mod prepack_tests {
+    use super::*;
+    use crate::util::{rel_error, XorShiftRng};
+
+    #[test]
+    fn prepacked_matches_blocked_across_block_boundaries() {
+        // k and n cross KC/NC boundaries with the small blocking.
+        let blk = Blocking { mc: 16, kc: 8, nc: 16 };
+        let (m, n, k) = (21, 37, 29);
+        let mut rng = XorShiftRng::new(3);
+        let mut a = vec![0.0; m * k];
+        let mut b = vec![0.0; k * n];
+        rng.fill_normal(&mut a);
+        rng.fill_normal(&mut b);
+        let packed = PackedB::pack_with(&b, n, k, n, blk);
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        sgemm_blocked(m, n, k, &a, k, &b, n, &mut c1, n, false, blk, None);
+        sgemm_prepacked(m, &a, k, &packed, &mut c2, n, false, None);
+        assert!(rel_error(&c2, &c1) < 1e-6);
+    }
+
+    #[test]
+    fn prepacked_accumulate_and_edge_m() {
+        let (m, n, k) = (1, 9, 300); // skinny-R case the pack exists for
+        let mut rng = XorShiftRng::new(4);
+        let mut a = vec![0.0; m * k];
+        let mut b = vec![0.0; k * n];
+        rng.fill_normal(&mut a);
+        rng.fill_normal(&mut b);
+        let packed = PackedB::pack(&b, n, k, n);
+        let init: Vec<f32> = (0..m * n).map(|i| i as f32).collect();
+        let mut c = init.clone();
+        sgemm_prepacked(m, &a, k, &packed, &mut c, n, true, None);
+        let mut prod = vec![0.0; m * n];
+        sgemm_ref(m, n, k, &a, &b, &mut prod);
+        let want: Vec<f32> = init.iter().zip(&prod).map(|(x, y)| x + y).collect();
+        assert!(rel_error(&c, &want) < 1e-4);
+        assert!(packed.bytes() >= k * n * 4);
+    }
+}
+
+use crate::parallel::ThreadPool;
+use pack::{pack_a, pack_b};
+
+/// Cache-blocking parameters. Defaults target a ~32 KiB L1 / ~1 MiB L2 core.
+#[derive(Debug, Clone, Copy)]
+pub struct Blocking {
+    /// Rows of A kept in L2 per block.
+    pub mc: usize,
+    /// Depth kept in L1 per block.
+    pub kc: usize,
+    /// Columns of B kept in L3/L2 per block.
+    pub nc: usize,
+}
+
+impl Default for Blocking {
+    fn default() -> Self {
+        Blocking {
+            mc: 128,
+            kc: 256,
+            nc: 2048,
+        }
+    }
+}
+
+/// `C[m×n] (+)= A[m×k] · B[k×n]`, all row-major with explicit leading
+/// dimensions. `accumulate=false` overwrites C.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+    accumulate: bool,
+) {
+    sgemm_blocked(m, n, k, a, lda, b, ldb, c, ldc, accumulate, Blocking::default(), None)
+}
+
+/// Convenience wrapper for contiguous row-major operands.
+pub fn sgemm_simple(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    sgemm(m, n, k, a, k, b, n, c, n, false)
+}
+
+/// [`sgemm`] with the `MC` loop parallelised over `pool`.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_with_pool(
+    pool: &ThreadPool,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+    accumulate: bool,
+) {
+    sgemm_blocked(m, n, k, a, lda, b, ldb, c, ldc, accumulate, Blocking::default(), Some(pool))
+}
+
+/// Full-control entry point.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_blocked(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+    accumulate: bool,
+    blk: Blocking,
+    pool: Option<&ThreadPool>,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        if !accumulate {
+            for r in 0..m {
+                for v in c[r * ldc..r * ldc + n].iter_mut() {
+                    *v = 0.0;
+                }
+            }
+        }
+        return;
+    }
+    debug_assert!(a.len() >= (m - 1) * lda + k, "A buffer too small");
+    debug_assert!(b.len() >= (k - 1) * ldb + n, "B buffer too small");
+    debug_assert!(c.len() >= (m - 1) * ldc + n, "C buffer too small");
+
+    // C as raw pointer so MC-disjoint row blocks can be written in parallel.
+    let c_addr = c.as_mut_ptr() as usize;
+
+    for jc in (0..n).step_by(blk.nc) {
+        let nc = (n - jc).min(blk.nc);
+        for pc in (0..k).step_by(blk.kc) {
+            let kc = (k - pc).min(blk.kc);
+            // First K-block writes/overwrites, later ones accumulate.
+            let acc_block = accumulate || pc > 0;
+            let mut bbuf = vec![0.0f32; nc.div_ceil(NR) * NR * kc];
+            pack_b(&b[pc * ldb + jc..], ldb, kc, nc, &mut bbuf);
+            let bbuf = &bbuf;
+
+            let run_mc_block = |ic: usize| {
+                let mc = (m - ic).min(blk.mc);
+                let mut abuf = vec![0.0f32; mc.div_ceil(MR) * MR * kc];
+                pack_a(&a[ic * lda + pc..], lda, mc, kc, &mut abuf);
+                // SAFETY: each ic block touches rows [ic, ic+mc) of C only;
+                // blocks are disjoint across parallel invocations.
+                let c_block: &mut [f32] = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        (c_addr as *mut f32).add(ic * ldc + jc),
+                        (mc - 1) * ldc + nc,
+                    )
+                };
+                macro_kernel(mc, nc, kc, &abuf, bbuf, c_block, ldc, acc_block);
+            };
+
+            let n_blocks = m.div_ceil(blk.mc);
+            match pool {
+                Some(pool) if n_blocks > 1 => {
+                    pool.parallel_for(n_blocks, |bi| run_mc_block(bi * blk.mc));
+                }
+                _ => {
+                    for bi in 0..n_blocks {
+                        run_mc_block(bi * blk.mc);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Run the micro-kernel over every `MR×NR` tile of an `mc×nc` block.
+fn macro_kernel(
+    mc: usize,
+    nc: usize,
+    kc: usize,
+    abuf: &[f32],
+    bbuf: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+    accumulate: bool,
+) {
+    let mut edge = [0.0f32; MR * NR];
+    for jp in 0..nc.div_ceil(NR) {
+        let j0 = jp * NR;
+        let cols = (nc - j0).min(NR);
+        let bpanel = &bbuf[jp * NR * kc..(jp + 1) * NR * kc];
+        for ip in 0..mc.div_ceil(MR) {
+            let r0 = ip * MR;
+            let rows = (mc - r0).min(MR);
+            let apanel = &abuf[ip * MR * kc..(ip + 1) * MR * kc];
+            if rows == MR && cols == NR {
+                let off = r0 * ldc + j0;
+                microkernel::kernel_8x8(kc, apanel, bpanel, &mut c[off..], ldc, accumulate);
+            } else {
+                // Edge tile: compute into scratch, copy the valid region.
+                microkernel::kernel_8x8(kc, apanel, bpanel, &mut edge, NR, false);
+                for r in 0..rows {
+                    let dst = &mut c[(r0 + r) * ldc + j0..(r0 + r) * ldc + j0 + cols];
+                    let src = &edge[r * NR..r * NR + cols];
+                    if accumulate {
+                        for (d, s) in dst.iter_mut().zip(src) {
+                            *d += *s;
+                        }
+                    } else {
+                        dst.copy_from_slice(src);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// B pre-packed into panel layout for repeated GEMMs against a constant
+/// right-hand side (transformed conv weights). Packing once at
+/// layer-prepare time removes the dominant per-call cost of skinny-R GEMMs
+/// (small feature maps) — see EXPERIMENTS.md §Perf step 2.
+#[derive(Debug, Clone)]
+pub struct PackedB {
+    /// Inner dimension.
+    pub k: usize,
+    /// Columns.
+    pub n: usize,
+    blk: Blocking,
+    /// Blocks in (jc, pc) iteration order, each `ceil(nc/NR)·NR·kc` long.
+    data: Vec<f32>,
+}
+
+impl PackedB {
+    /// Pack row-major `b` (`k×n`, leading dimension `ldb`).
+    pub fn pack(b: &[f32], ldb: usize, k: usize, n: usize) -> PackedB {
+        Self::pack_with(b, ldb, k, n, Blocking::default())
+    }
+
+    /// Pack with explicit blocking (must match the execution blocking).
+    pub fn pack_with(b: &[f32], ldb: usize, k: usize, n: usize, blk: Blocking) -> PackedB {
+        let mut data = Vec::new();
+        for jc in (0..n).step_by(blk.nc) {
+            let nc = (n - jc).min(blk.nc);
+            for pc in (0..k).step_by(blk.kc) {
+                let kc = (k - pc).min(blk.kc);
+                let start = data.len();
+                data.resize(start + nc.div_ceil(NR) * NR * kc, 0.0);
+                pack_b(&b[pc * ldb + jc..], ldb, kc, nc, &mut data[start..]);
+            }
+        }
+        PackedB { k, n, blk, data }
+    }
+
+    /// Bytes held by the packed representation.
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// `C[m×n] (+)= A[m×k] · B` with `B` pre-packed by [`PackedB::pack`].
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_prepacked(
+    m: usize,
+    a: &[f32],
+    lda: usize,
+    b: &PackedB,
+    c: &mut [f32],
+    ldc: usize,
+    accumulate: bool,
+    pool: Option<&ThreadPool>,
+) {
+    let (n, k, blk) = (b.n, b.k, b.blk);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        if !accumulate {
+            for r in 0..m {
+                for v in c[r * ldc..r * ldc + n].iter_mut() {
+                    *v = 0.0;
+                }
+            }
+        }
+        return;
+    }
+    debug_assert!(a.len() >= (m - 1) * lda + k, "A buffer too small");
+    debug_assert!(c.len() >= (m - 1) * ldc + n, "C buffer too small");
+    let c_addr = c.as_mut_ptr() as usize;
+
+    let mut offset = 0usize;
+    for jc in (0..n).step_by(blk.nc) {
+        let nc = (n - jc).min(blk.nc);
+        for pc in (0..k).step_by(blk.kc) {
+            let kc = (k - pc).min(blk.kc);
+            let len = nc.div_ceil(NR) * NR * kc;
+            let bbuf = &b.data[offset..offset + len];
+            offset += len;
+            let acc_block = accumulate || pc > 0;
+
+            let run_mc_block = |ic: usize| {
+                let mc = (m - ic).min(blk.mc);
+                let mut abuf = vec![0.0f32; mc.div_ceil(MR) * MR * kc];
+                pack_a(&a[ic * lda + pc..], lda, mc, kc, &mut abuf);
+                // SAFETY: disjoint row blocks of C (same as sgemm_blocked).
+                let c_block: &mut [f32] = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        (c_addr as *mut f32).add(ic * ldc + jc),
+                        (mc - 1) * ldc + nc,
+                    )
+                };
+                macro_kernel(mc, nc, kc, &abuf, bbuf, c_block, ldc, acc_block);
+            };
+            let n_blocks = m.div_ceil(blk.mc);
+            match pool {
+                Some(pool) if n_blocks > 1 => {
+                    pool.parallel_for(n_blocks, |bi| run_mc_block(bi * blk.mc));
+                }
+                _ => {
+                    for bi in 0..n_blocks {
+                        run_mc_block(bi * blk.mc);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Naive triple-loop reference GEMM (tests and tiny problems).
+pub fn sgemm_ref(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    for r in 0..m {
+        for j in 0..n {
+            let mut s = 0.0f32;
+            for p in 0..k {
+                s += a[r * k + p] * b[p * n + j];
+            }
+            c[r * n + j] = s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{rel_error, XorShiftRng};
+
+    fn random_matrix(rows: usize, cols: usize, seed: u64) -> Vec<f32> {
+        let mut rng = XorShiftRng::new(seed);
+        let mut v = vec![0.0; rows * cols];
+        rng.fill_normal(&mut v);
+        v
+    }
+
+    fn check_case(m: usize, n: usize, k: usize) {
+        let a = random_matrix(m, k, (m * 31 + k) as u64);
+        let b = random_matrix(k, n, (n * 17 + k) as u64 + 1);
+        let mut c = vec![0.0; m * n];
+        let mut cref = vec![0.0; m * n];
+        sgemm_simple(m, n, k, &a, &b, &mut c);
+        sgemm_ref(m, n, k, &a, &b, &mut cref);
+        assert!(
+            rel_error(&c, &cref) < 1e-4,
+            "GEMM mismatch at m={m} n={n} k={k}: err={}",
+            rel_error(&c, &cref)
+        );
+    }
+
+    #[test]
+    fn matches_reference_exact_tiles() {
+        check_case(8, 8, 16);
+        check_case(16, 32, 64);
+        check_case(64, 64, 256);
+    }
+
+    #[test]
+    fn matches_reference_ragged_edges() {
+        check_case(1, 1, 1);
+        check_case(3, 5, 7);
+        check_case(9, 17, 33);
+        check_case(130, 70, 300); // crosses MC and KC boundaries
+        check_case(7, 250, 2);
+    }
+
+    #[test]
+    fn accumulate_adds_to_existing() {
+        let (m, n, k) = (10, 12, 9);
+        let a = random_matrix(m, k, 3);
+        let b = random_matrix(k, n, 4);
+        let init = random_matrix(m, n, 5);
+        let mut c = init.clone();
+        sgemm(m, n, k, &a, k, &b, n, &mut c, n, true);
+        let mut prod = vec![0.0; m * n];
+        sgemm_ref(m, n, k, &a, &b, &mut prod);
+        let expect: Vec<f32> = init.iter().zip(&prod).map(|(x, y)| x + y).collect();
+        assert!(rel_error(&c, &expect) < 1e-4);
+    }
+
+    #[test]
+    fn strided_operands() {
+        // Operate on the top-left m×k / k×n corners of larger buffers.
+        let (m, n, k) = (5, 6, 7);
+        let (lda, ldb, ldc) = (k + 3, n + 2, n + 4);
+        let abig = random_matrix(m, lda, 6);
+        let bbig = random_matrix(k, ldb, 7);
+        let mut cbig = vec![42.0; m * ldc];
+        sgemm(m, n, k, &abig, lda, &bbig, ldb, &mut cbig, ldc, false);
+
+        let a: Vec<f32> = (0..m).flat_map(|r| abig[r * lda..r * lda + k].to_vec()).collect();
+        let b: Vec<f32> = (0..k).flat_map(|r| bbig[r * ldb..r * ldb + n].to_vec()).collect();
+        let mut cref = vec![0.0; m * n];
+        sgemm_ref(m, n, k, &a, &b, &mut cref);
+        for r in 0..m {
+            for j in 0..n {
+                assert!((cbig[r * ldc + j] - cref[r * n + j]).abs() < 1e-3);
+            }
+            // untouched past n
+            for j in n..ldc {
+                assert_eq!(cbig[r * ldc + j], 42.0);
+            }
+        }
+    }
+
+    #[test]
+    fn k_zero_zeroes_or_keeps_c() {
+        let mut c = vec![3.0; 4];
+        sgemm(2, 2, 0, &[], 1, &[], 1, &mut c, 2, true);
+        assert_eq!(c, vec![3.0; 4]);
+        sgemm(2, 2, 0, &[], 1, &[], 1, &mut c, 2, false);
+        assert_eq!(c, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let pool = ThreadPool::new(4);
+        let (m, n, k) = (300, 120, 96);
+        let a = random_matrix(m, k, 8);
+        let b = random_matrix(k, n, 9);
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        sgemm_simple(m, n, k, &a, &b, &mut c1);
+        sgemm_with_pool(&pool, m, n, k, &a, k, &b, n, &mut c2, n, false);
+        assert!(rel_error(&c2, &c1) < 1e-5);
+    }
+
+    #[test]
+    fn small_blocking_params_still_correct() {
+        let (m, n, k) = (37, 29, 41);
+        let a = random_matrix(m, k, 10);
+        let b = random_matrix(k, n, 11);
+        let mut c = vec![0.0; m * n];
+        let blk = Blocking { mc: 16, kc: 8, nc: 16 };
+        sgemm_blocked(m, n, k, &a, k, &b, n, &mut c, n, false, blk, None);
+        let mut cref = vec![0.0; m * n];
+        sgemm_ref(m, n, k, &a, &b, &mut cref);
+        assert!(rel_error(&c, &cref) < 1e-4);
+    }
+}

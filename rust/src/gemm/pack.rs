@@ -1,0 +1,113 @@
+//! Panel packing for the blocked GEMM.
+//!
+//! A is repacked into `MR`-row panels stored column-major-within-panel, B
+//! into `NR`-column panels stored row-major-within-panel, so the micro-kernel
+//! streams both with unit stride. Edge panels are zero-padded — the
+//! micro-kernel always runs full `MR×NR` tiles and edge results are sliced
+//! out by the driver.
+
+use super::microkernel::{MR, NR};
+
+/// Pack an `mc × kc` block of row-major `A` (leading dimension `lda`)
+/// starting at `a`, into `buf`.
+///
+/// Layout: panel-major; panel `i` covers rows `i*MR..`, stored as `kc`
+/// consecutive columns of `MR` values. `buf` must hold
+/// `ceil(mc/MR)*MR * kc` values.
+pub fn pack_a(a: &[f32], lda: usize, mc: usize, kc: usize, buf: &mut [f32]) {
+    let panels = mc.div_ceil(MR);
+    debug_assert!(buf.len() >= panels * MR * kc);
+    for ip in 0..panels {
+        let r0 = ip * MR;
+        let rows = (mc - r0).min(MR);
+        let dst = &mut buf[ip * MR * kc..(ip + 1) * MR * kc];
+        for p in 0..kc {
+            let col = &mut dst[p * MR..p * MR + MR];
+            for r in 0..rows {
+                col[r] = a[(r0 + r) * lda + p];
+            }
+            for v in col[rows..].iter_mut() {
+                *v = 0.0;
+            }
+        }
+    }
+}
+
+/// Pack a `kc × nc` block of row-major `B` (leading dimension `ldb`)
+/// starting at `b`, into `buf`.
+///
+/// Layout: panel-major; panel `j` covers columns `j*NR..`, stored as `kc`
+/// consecutive rows of `NR` values. `buf` must hold
+/// `ceil(nc/NR)*NR * kc` values.
+pub fn pack_b(b: &[f32], ldb: usize, kc: usize, nc: usize, buf: &mut [f32]) {
+    let panels = nc.div_ceil(NR);
+    debug_assert!(buf.len() >= panels * NR * kc);
+    for jp in 0..panels {
+        let c0 = jp * NR;
+        let cols = (nc - c0).min(NR);
+        let dst = &mut buf[jp * NR * kc..(jp + 1) * NR * kc];
+        for p in 0..kc {
+            let row = &mut dst[p * NR..p * NR + NR];
+            let src = &b[p * ldb + c0..p * ldb + c0 + cols];
+            row[..cols].copy_from_slice(src);
+            for v in row[cols..].iter_mut() {
+                *v = 0.0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_a_layout() {
+        // 3×2 block of a row-major 3×5 matrix, MR=8 ⇒ one zero-padded panel.
+        let lda = 5;
+        let a: Vec<f32> = (0..15).map(|i| i as f32).collect();
+        let (mc, kc) = (3, 2);
+        let mut buf = vec![f32::NAN; MR * kc];
+        pack_a(&a, lda, mc, kc, &mut buf);
+        // Column p=0 holds a[0][0], a[1][0], a[2][0], then zeros.
+        assert_eq!(&buf[0..4], &[0.0, 5.0, 10.0, 0.0]);
+        // Column p=1 holds a[0][1], a[1][1], a[2][1], then zeros.
+        assert_eq!(&buf[MR..MR + 4], &[1.0, 6.0, 11.0, 0.0]);
+        assert!(buf.iter().all(|v| !v.is_nan()));
+    }
+
+    #[test]
+    fn pack_b_layout() {
+        // 2×3 block of a row-major 2×5 matrix, NR=8 ⇒ one zero-padded panel.
+        let ldb = 5;
+        let b: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let (kc, nc) = (2, 3);
+        let mut buf = vec![f32::NAN; NR * kc];
+        pack_b(&b, ldb, kc, nc, &mut buf);
+        // Row p=0 holds b[0][0..3] then zeros.
+        assert_eq!(&buf[0..4], &[0.0, 1.0, 2.0, 0.0]);
+        // Row p=1 holds b[1][0..3] then zeros.
+        assert_eq!(&buf[NR..NR + 4], &[5.0, 6.0, 7.0, 0.0]);
+        assert!(buf.iter().all(|v| !v.is_nan()));
+    }
+
+    #[test]
+    fn multi_panel_pack() {
+        // Sizes chosen to force ≥2 panels on each side plus padding.
+        let (mc, kc, nc): (usize, usize, usize) = (MR + MR / 2, 3, NR + 1);
+        let a: Vec<f32> = (0..mc * kc).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..kc * nc).map(|i| i as f32).collect();
+        let mut abuf = vec![0.0; mc.div_ceil(MR) * MR * kc];
+        let mut bbuf = vec![0.0; nc.div_ceil(NR) * NR * kc];
+        pack_a(&a, kc, mc, kc, &mut abuf);
+        pack_b(&b, nc, kc, nc, &mut bbuf);
+        // Panel 1 of A starts at row MR: a[MR][0] = MR·kc.
+        assert_eq!(abuf[MR * kc], (MR * kc) as f32);
+        // Panel 1 of B starts at col NR: b[0][NR] = NR.
+        assert_eq!(bbuf[NR * kc], NR as f32);
+        // Zero padding in A panel 1: rows mc..2·MR pad column p=0.
+        assert_eq!(abuf[MR * kc + (mc - MR)], 0.0);
+        // Zero padding in B panel 1: cols nc..2·NR pad row p=0.
+        assert_eq!(bbuf[NR * kc + (nc - NR)], 0.0);
+    }
+}

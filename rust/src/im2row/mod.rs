@@ -1,0 +1,239 @@
+//! The classical im2row + GEMM baseline (the paper's comparator, as used by
+//! the Arm Compute Library).
+//!
+//! im2row materialises, for every output pixel, the `KH·KW·C` receptive
+//! field as one row of a patch matrix; the convolution is then a single
+//! GEMM `[N·OH·OW × KH·KW·C] · [KH·KW·C × M]`. Under NHWC each `(kh, kw)`
+//! contributes a contiguous `C`-run, so row construction is `KH·KW` memcpys.
+//! The GEMM runs on the same engine as the Winograd scheme's batched GEMMs —
+//! benchmark deltas therefore isolate the algorithmic difference, exactly as
+//! in the paper's evaluation.
+
+use crate::gemm::{sgemm_prepacked, PackedB};
+use crate::parallel::ThreadPool;
+use crate::tensor::Tensor;
+use crate::{bail_shape, Result};
+
+/// An im2row convolution with a pre-transposed weight matrix, reusable
+/// across inputs (mirrors [`crate::winograd::WinogradConvolution`]).
+#[derive(Debug, Clone)]
+pub struct Im2RowConvolution {
+    cin: usize,
+    cout: usize,
+    kernel: (usize, usize),
+    stride: (usize, usize),
+    pad: (usize, usize),
+    /// Weights reshaped+transposed to `[KH·KW·C, M]` and pre-packed into
+    /// GEMM panel layout (packed once per layer — the same prepare-time
+    /// treatment the Winograd scheme gets, keeping the baseline fair; see
+    /// EXPERIMENTS.md §Perf step 2).
+    wt_packed: PackedB,
+}
+
+impl Im2RowConvolution {
+    /// Prepare from `[M, KH, KW, C]` weights.
+    pub fn new(weights: &Tensor, stride: (usize, usize), pad: (usize, usize)) -> Result<Self> {
+        if weights.rank() != 4 {
+            bail_shape!("weights must be [M, KH, KW, C], got {:?}", weights.shape());
+        }
+        let (m, kh, kw, c) = (
+            weights.shape()[0],
+            weights.shape()[1],
+            weights.shape()[2],
+            weights.shape()[3],
+        );
+        if stride.0 == 0 || stride.1 == 0 {
+            bail_shape!("stride must be positive");
+        }
+        // W[k][m] with k = (a·KW + b)·C + ch — matches the patch-row order.
+        let k_total = kh * kw * c;
+        let mut wt = vec![0.0f32; k_total * m];
+        for mi in 0..m {
+            for a in 0..kh {
+                for b in 0..kw {
+                    for ch in 0..c {
+                        let k = (a * kw + b) * c + ch;
+                        wt[k * m + mi] = weights.at4(mi, a, b, ch);
+                    }
+                }
+            }
+        }
+        Ok(Im2RowConvolution {
+            cin: c,
+            cout: m,
+            kernel: (kh, kw),
+            stride,
+            pad,
+            wt_packed: PackedB::pack(&wt, m, k_total, m),
+        })
+    }
+
+    /// Output spatial size for an `h×w` input.
+    pub fn output_hw(&self, h: usize, w: usize) -> Result<(usize, usize)> {
+        let (kh, kw) = self.kernel;
+        let (ph, pw) = self.pad;
+        let (sh, sw) = self.stride;
+        if h + 2 * ph < kh || w + 2 * pw < kw {
+            bail_shape!("input {h}x{w} (pad {ph},{pw}) smaller than filter {kh}x{kw}");
+        }
+        Ok(((h + 2 * ph - kh) / sh + 1, (w + 2 * pw - kw) / sw + 1))
+    }
+
+    /// Build the patch matrix `[N·OH·OW, KH·KW·C]`.
+    pub fn im2row(&self, input: &Tensor, pool: Option<&ThreadPool>) -> Result<Vec<f32>> {
+        let (n, h, w, c) = (
+            input.shape()[0],
+            input.shape()[1],
+            input.shape()[2],
+            input.shape()[3],
+        );
+        if c != self.cin {
+            bail_shape!("input has {c} channels, weights expect {}", self.cin);
+        }
+        let (oh, ow) = self.output_hw(h, w)?;
+        let (kh, kw) = self.kernel;
+        let (ph, pw) = self.pad;
+        let (sh, sw) = self.stride;
+        let padded = if ph == 0 && pw == 0 {
+            None
+        } else {
+            Some(input.pad_spatial(ph, ph, pw, pw))
+        };
+        let src = padded.as_ref().unwrap_or(input);
+        let k_total = kh * kw * c;
+        let rows = n * oh * ow;
+        let mut patches = vec![0.0f32; rows * k_total];
+        let p_addr = patches.as_mut_ptr() as usize;
+        let fill_row = |row: usize| {
+            let b = row / (oh * ow);
+            let rem = row % (oh * ow);
+            let (oy, ox) = (rem / ow, rem % ow);
+            let (y0, x0) = (oy * sh, ox * sw);
+            // SAFETY: each row writes its own k_total slice.
+            let dst: &mut [f32] = unsafe {
+                std::slice::from_raw_parts_mut((p_addr as *mut f32).add(row * k_total), k_total)
+            };
+            for a in 0..kh {
+                for bx in 0..kw {
+                    let px = src.pixel(b, y0 + a, x0 + bx);
+                    let off = (a * kw + bx) * c;
+                    dst[off..off + c].copy_from_slice(px);
+                }
+            }
+        };
+        match pool {
+            Some(pool) => pool.parallel_for(rows, fill_row),
+            None => (0..rows).for_each(fill_row),
+        }
+        Ok(patches)
+    }
+
+    /// Full convolution: im2row + one GEMM.
+    pub fn run(&self, input: &Tensor, pool: Option<&ThreadPool>) -> Result<Tensor> {
+        if input.rank() != 4 {
+            bail_shape!("input must be [N, H, W, C], got {:?}", input.shape());
+        }
+        let (n, h, w) = (input.shape()[0], input.shape()[1], input.shape()[2]);
+        let (oh, ow) = self.output_hw(h, w)?;
+        let patches = self.im2row(input, pool)?;
+        let rows = n * oh * ow;
+        let k_total = self.kernel.0 * self.kernel.1 * self.cin;
+        let mut out = Tensor::zeros(&[n, oh, ow, self.cout]);
+        sgemm_prepacked(
+            rows,
+            &patches,
+            k_total,
+            &self.wt_packed,
+            out.data_mut(),
+            self.cout,
+            false,
+            pool,
+        );
+        Ok(out)
+    }
+}
+
+/// One-shot convenience wrapper.
+pub fn im2row_conv2d(
+    input: &Tensor,
+    weights: &Tensor,
+    stride: (usize, usize),
+    pad: (usize, usize),
+    pool: Option<&ThreadPool>,
+) -> Result<Tensor> {
+    Im2RowConvolution::new(weights, stride, pad)?.run(input, pool)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::direct::direct_conv2d;
+
+    fn check(n: usize, h: usize, w: usize, c: usize, m: usize, k: (usize, usize), s: (usize, usize), p: (usize, usize)) {
+        let input = Tensor::randn(&[n, h, w, c], (h * w) as u64);
+        let weights = Tensor::randn(&[m, k.0, k.1, c], (c * m) as u64);
+        let got = im2row_conv2d(&input, &weights, s, p, None).unwrap();
+        let want = direct_conv2d(&input, &weights, s, p).unwrap();
+        assert_eq!(got.shape(), want.shape());
+        assert!(
+            got.allclose(&want, 1e-4),
+            "mismatch k={k:?} s={s:?} p={p:?}: {}",
+            crate::util::rel_error(got.data(), want.data())
+        );
+    }
+
+    #[test]
+    fn matches_direct_3x3() {
+        check(1, 8, 8, 4, 8, (3, 3), (1, 1), (1, 1));
+        check(2, 7, 9, 3, 5, (3, 3), (1, 1), (0, 0));
+    }
+
+    #[test]
+    fn matches_direct_strided() {
+        check(1, 11, 11, 3, 4, (3, 3), (2, 2), (1, 1));
+        check(1, 224 / 4, 224 / 4, 3, 8, (7, 7), (2, 2), (3, 3));
+    }
+
+    #[test]
+    fn matches_direct_1x1_and_1d() {
+        check(1, 6, 6, 8, 4, (1, 1), (1, 1), (0, 0));
+        check(1, 6, 12, 4, 4, (1, 7), (1, 1), (0, 3));
+        check(1, 12, 6, 4, 4, (7, 1), (1, 1), (3, 0));
+    }
+
+    #[test]
+    fn matches_direct_5x5() {
+        check(1, 10, 10, 3, 6, (5, 5), (1, 1), (2, 2));
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let pool = ThreadPool::new(4);
+        let input = Tensor::randn(&[1, 16, 16, 8], 1);
+        let weights = Tensor::randn(&[16, 3, 3, 8], 2);
+        let a = im2row_conv2d(&input, &weights, (1, 1), (1, 1), None).unwrap();
+        let b = im2row_conv2d(&input, &weights, (1, 1), (1, 1), Some(&pool)).unwrap();
+        assert!(b.allclose(&a, 1e-6));
+    }
+
+    #[test]
+    fn patch_matrix_layout() {
+        // 1×1 input region, 1 channel: patch row equals flattened kernel window.
+        let input = Tensor::from_vec(&[1, 3, 3, 1], (1..=9).map(|x| x as f32).collect()).unwrap();
+        let weights = Tensor::randn(&[1, 3, 3, 1], 1);
+        let conv = Im2RowConvolution::new(&weights, (1, 1), (0, 0)).unwrap();
+        let patches = conv.im2row(&input, None).unwrap();
+        assert_eq!(patches, (1..=9).map(|x| x as f32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let weights = Tensor::randn(&[4, 3, 3, 2], 1);
+        let conv = Im2RowConvolution::new(&weights, (1, 1), (0, 0)).unwrap();
+        let too_small = Tensor::zeros(&[1, 2, 2, 2]);
+        assert!(conv.run(&too_small, None).is_err());
+        let wrong_c = Tensor::zeros(&[1, 5, 5, 3]);
+        assert!(conv.run(&wrong_c, None).is_err());
+        assert!(Im2RowConvolution::new(&weights, (0, 1), (0, 0)).is_err());
+    }
+}

@@ -1,0 +1,116 @@
+//! # winoconv — region-wise multi-channel Winograd / Cook-Toom convolution
+//!
+//! A reproduction of *"Efficient Winograd or Cook-Toom Convolution Kernel
+//! Implementation on Widely Used Mobile CPUs"* (Maji et al., 2019) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate is organised bottom-up:
+//!
+//! * [`simd`] — a portable 4-lane `f32` vector mirroring the ARMv8-A NEON
+//!   op set used by the paper's hand-coded transforms.
+//! * [`tensor`] — NHWC/NCHW 4-D tensors and layout conversion (§2.1 of the
+//!   paper studies exactly this choice).
+//! * [`gemm`] — a packed, blocked GEMM with a SIMD micro-kernel; both the
+//!   Winograd scheme and the im2row baseline sit on this shared substrate so
+//!   benchmarks isolate the *algorithmic* difference.
+//! * [`winograd`] — the paper's contribution: Cook-Toom transform generation,
+//!   hard-coded fast transforms for the five variants, and the region-wise
+//!   multi-channel scatter → x² GEMMs → gather pipeline.
+//! * [`im2row`] — the classical im2row/im2col + GEMM comparator.
+//! * [`conv`] — the public convolution API, direct-convolution oracle and the
+//!   per-layer algorithm selector.
+//! * [`nn`] / [`zoo`] — a small graph executor and definitions of the five
+//!   CNNs the paper evaluates (VGG-16/19, GoogleNet, Inception-v3,
+//!   SqueezeNet).
+//! * [`coordinator`] — the L3 serving runtime: request queue, batcher,
+//!   worker pool and metrics.
+//! * [`runtime`] — PJRT loader that executes the JAX/Pallas-lowered HLO
+//!   artifacts for cross-validation.
+//! * [`bench`] — the statistical benchmarking harness and the table printers
+//!   that regenerate the paper's Tables 1–2 and Figure 3.
+//! * [`parallel`], [`util`], [`testkit`] — threadpool, RNG/CLI/stats
+//!   helpers and a tiny property-testing framework (the crate builds fully
+//!   offline, so these substrates are in-repo rather than external deps).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use winoconv::conv::{Conv2d, ConvAlgorithm};
+//! use winoconv::tensor::Tensor;
+//!
+//! // A 3×3 convolution over a 32-channel 56×56 NHWC input, 64 filters.
+//! let conv = Conv2d::new(32, 64, (3, 3)).with_algorithm(ConvAlgorithm::WINOGRAD_F4X4_3X3);
+//! let x = Tensor::randn(&[1, 56, 56, 32], 42);
+//! let w = conv.random_weights(7);
+//! let y = conv.run(&x, &w).unwrap();
+//! assert_eq!(y.shape(), &[1, 54, 54, 64]);
+//! ```
+
+pub mod util;
+pub mod simd;
+pub mod tensor;
+pub mod parallel;
+pub mod gemm;
+pub mod winograd;
+pub mod im2row;
+pub mod conv;
+pub mod nn;
+pub mod zoo;
+pub mod coordinator;
+pub mod runtime;
+pub mod bench;
+pub mod testkit;
+
+/// Crate-wide result type.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Crate-wide error type.
+#[derive(Debug)]
+pub enum Error {
+    /// Shape or layout mismatch between tensors/operands.
+    Shape(String),
+    /// Unsupported configuration (e.g. Winograd on stride-2).
+    Unsupported(String),
+    /// Failure in the PJRT runtime layer.
+    Runtime(String),
+    /// Invalid CLI or config input.
+    Config(String),
+    /// I/O failure (artifact files, traces).
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Unsupported(m) => write!(f, "unsupported: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[macro_export]
+/// `bail_shape!("...")` — early-return a [`Error::Shape`] with formatting.
+macro_rules! bail_shape {
+    ($($arg:tt)*) => {
+        return Err($crate::Error::Shape(format!($($arg)*)))
+    };
+}
+
+#[macro_export]
+/// `bail_unsupported!("...")` — early-return a [`Error::Unsupported`].
+macro_rules! bail_unsupported {
+    ($($arg:tt)*) => {
+        return Err($crate::Error::Unsupported(format!($($arg)*)))
+    };
+}

@@ -1,0 +1,222 @@
+//! `winoconv` CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//! * `layers --model <name>`   — per-layer im2row vs Winograd comparison
+//!   (Table 2 rows for one model).
+//! * `network --model <name>`  — whole-network runtime under both schemes
+//!   (Table 1 row for one model).
+//! * `serve --model <name>`    — run the serving coordinator on synthetic
+//!   frames and print latency/throughput metrics.
+//! * `verify`                  — cross-check the Rust engine against the
+//!   AOT JAX/Pallas artifacts via PJRT.
+//! * `variants`                — list shipped Winograd variants and their
+//!   theoretical speedups.
+
+use std::time::{Duration, Instant};
+use winoconv::bench::workloads::unique_fast_layers;
+use winoconv::bench::{measure, ms, speedup, BenchConfig, Table};
+use winoconv::coordinator::{EngineConfig, InferenceEngine};
+use winoconv::im2row::Im2RowConvolution;
+use winoconv::nn::{PreparedModel, Scheme};
+use winoconv::parallel::ThreadPool;
+use winoconv::tensor::Tensor;
+use winoconv::util::cli::Args;
+use winoconv::winograd::{WinogradConvolution, WinogradVariant};
+use winoconv::zoo::ModelKind;
+use winoconv::{conv::select::select_variant_spatial, Error, Result};
+
+fn main() {
+    let args = match Args::from_env(&["help", "quick"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    if args.flag("help") || args.subcommand().is_none() {
+        print_help();
+        return;
+    }
+    let result = match args.subcommand().unwrap() {
+        "layers" => cmd_layers(&args),
+        "network" => cmd_network(&args),
+        "serve" => cmd_serve(&args),
+        "verify" => cmd_verify(&args),
+        "variants" => cmd_variants(),
+        other => Err(Error::Config(format!("unknown subcommand {other:?}"))),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "winoconv — region-wise multi-channel Winograd/Cook-Toom convolution engine\n\
+         \n\
+         USAGE: winoconv <subcommand> [options]\n\
+         \n\
+         SUBCOMMANDS\n\
+         \x20 layers   --model <vgg16|vgg19|googlenet|inception-v3|squeezenet> [--threads N] [--quick]\n\
+         \x20 network  --model <name> [--threads N] [--reps N] [--quick]\n\
+         \x20 serve    --model <name> [--threads N] [--seconds S]\n\
+         \x20 verify   [--artifacts DIR]\n\
+         \x20 variants"
+    );
+}
+
+fn parse_model(args: &Args) -> Result<ModelKind> {
+    let name = args.get_or("model", "squeezenet");
+    ModelKind::parse(&name).ok_or_else(|| Error::Config(format!("unknown model {name:?}")))
+}
+
+fn bench_config(args: &Args) -> BenchConfig {
+    if args.flag("quick") {
+        BenchConfig::quick()
+    } else {
+        BenchConfig::from_env()
+    }
+}
+
+/// Per-layer comparison (Table 2 rows for one model).
+fn cmd_layers(args: &Args) -> Result<()> {
+    let model = parse_model(args)?;
+    let threads: usize = args.get_parse_or("threads", 4)?;
+    let pool = ThreadPool::new(threads);
+    let cfg = bench_config(args);
+
+    let mut table = Table::new(
+        &format!("{model}: per-layer im2row vs region-wise Winograd ({threads} threads)"),
+        &["layer", "type", "shape", "im2row ms", "ours ms", "speedup", "variant"],
+    );
+    for (spec, count) in unique_fast_layers(model, 1)? {
+        let input = spec.input(11);
+        let weights = spec.weights(12);
+        let im2row = Im2RowConvolution::new(&weights, spec.stride, spec.pad)?;
+        let oh = spec.input_shape[1] + 2 * spec.pad.0 - spec.kernel.0 + 1;
+        let ow = spec.input_shape[2] + 2 * spec.pad.1 - spec.kernel.1 + 1;
+        let variant = select_variant_spatial(spec.kernel, oh, ow)
+            .ok_or_else(|| Error::Unsupported(format!("no variant for {:?}", spec.kernel)))?;
+        let wino = WinogradConvolution::new(variant, &weights, spec.pad)?;
+
+        let base = measure(&cfg, || {
+            let _ = im2row.run(&input, Some(&pool)).unwrap();
+        });
+        let ours = measure(&cfg, || {
+            let _ = wino.run(&input, Some(&pool)).unwrap();
+        });
+        let label = if count > 1 {
+            format!("{} (x{count})", spec.name)
+        } else {
+            spec.name.clone()
+        };
+        table.row(&[
+            label,
+            spec.layer_type(),
+            format!(
+                "{}x{}x{} -> {}",
+                spec.input_shape[1], spec.input_shape[2], spec.cin, spec.cout
+            ),
+            ms(base.median),
+            ms(ours.median),
+            speedup(base.median, ours.median),
+            variant.name().to_string(),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+/// Whole-network comparison (Table 1 row for one model).
+fn cmd_network(args: &Args) -> Result<()> {
+    let model = parse_model(args)?;
+    let threads: usize = args.get_parse_or("threads", 4)?;
+    let reps: usize = args.get_parse_or("reps", if args.flag("quick") { 2 } else { 5 })?;
+    let pool = ThreadPool::new(threads);
+    let graph = model.build(1)?;
+    let input = Tensor::randn(&model.input_shape(1), 99);
+
+    let mut table = Table::new(
+        &format!("{model}: whole-network runtime, batch 1, {threads} threads (mean of {reps})"),
+        &["scheme", "full net ms", "fast layers ms", "other ms"],
+    );
+    for scheme in [Scheme::Im2RowOnly, Scheme::WinogradWhereSuitable] {
+        let prepared = PreparedModel::prepare(model.name(), &graph, input.shape(), scheme)?;
+        let _ = prepared.run(&input, Some(&pool))?; // warm-up
+        let mut total = 0.0f64;
+        let mut fast = 0.0f64;
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let (_, timings) = prepared.run(&input, Some(&pool))?;
+            total += t0.elapsed().as_nanos() as f64;
+            fast += timings
+                .iter()
+                .filter(|t| t.fast_layer)
+                .map(|t| t.ns as f64)
+                .sum::<f64>();
+        }
+        total /= reps as f64;
+        fast /= reps as f64;
+        table.row(&[scheme.to_string(), ms(total), ms(fast), ms(total - fast)]);
+    }
+    table.print();
+    Ok(())
+}
+
+/// Run the serving coordinator for a while and report metrics.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model = parse_model(args)?;
+    let threads: usize = args.get_parse_or("threads", 4)?;
+    let seconds: u64 = args.get_parse_or("seconds", 10)?;
+    let graph = model.build(1)?;
+    let shape = model.input_shape(1);
+    let prepared =
+        PreparedModel::prepare(model.name(), &graph, &shape, Scheme::WinogradWhereSuitable)?;
+    println!("serving {model} on {threads} threads for {seconds}s ...");
+    let engine = InferenceEngine::start(
+        prepared,
+        EngineConfig {
+            threads,
+            ..EngineConfig::default()
+        },
+    );
+    let deadline = Instant::now() + Duration::from_secs(seconds);
+    let mut frame = 0u64;
+    while Instant::now() < deadline {
+        let input = Tensor::randn(&shape, frame);
+        let _ = engine.infer(input)?;
+        frame += 1;
+    }
+    println!("{}", engine.metrics().report());
+    engine.shutdown();
+    Ok(())
+}
+
+/// Cross-validate against the AOT artifacts (same as examples/pjrt_verify).
+fn cmd_verify(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    winoconv::runtime::verify::verify_all(std::path::Path::new(&dir), true)
+}
+
+fn cmd_variants() -> Result<()> {
+    let mut table = Table::new(
+        "Shipped Winograd/Cook-Toom variants",
+        &["variant", "kernel", "out tile", "in tile", "GEMMs", "theoretical speedup"],
+    );
+    for v in WinogradVariant::ALL {
+        let (kh, kw) = v.kernel();
+        let (mh, mw) = v.out_tile();
+        let (th, tw) = v.in_tile();
+        table.row(&[
+            v.name().to_string(),
+            format!("{kh}x{kw}"),
+            format!("{mh}x{mw}"),
+            format!("{th}x{tw}"),
+            v.gemm_count().to_string(),
+            format!("{:.2}x", v.theoretical_speedup()),
+        ]);
+    }
+    table.print();
+    Ok(())
+}

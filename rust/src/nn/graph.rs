@@ -1,0 +1,535 @@
+//! A small inference graph (DAG) with shape inference and a prepared
+//! executor.
+//!
+//! Models are built once (weights deterministic from a seed), then
+//! **prepared** against an execution policy: every conv layer is bound to a
+//! concrete algorithm (im2row baseline vs region-wise Winograd where
+//! suitable) with its weights pre-transformed — mirroring how the paper's
+//! two benchmark configurations are built (§3.2). Execution records
+//! per-layer wall-clock so the bench harness can split "fast layers" from
+//! the rest (Table 1 / Figure 3).
+
+use super::ops;
+use crate::conv::select::{is_winograd_suitable, select_variant_spatial, MIN_CHANNEL_PRODUCT};
+use crate::conv::Conv2d;
+use crate::im2row::Im2RowConvolution;
+use crate::parallel::ThreadPool;
+use crate::tensor::Tensor;
+use crate::winograd::WinogradConvolution;
+use crate::{bail_shape, Result};
+use std::time::Instant;
+
+/// Node identifier within a [`Graph`].
+pub type NodeId = usize;
+
+/// Graph operation.
+#[derive(Debug, Clone)]
+pub enum Op {
+    /// Graph input placeholder.
+    Input,
+    /// Convolution (+ bias + optional fused ReLU).
+    Conv {
+        /// Layer descriptor (its algorithm field is ignored; the policy decides).
+        desc: Conv2d,
+        /// `[M, KH, KW, C]` weights.
+        weights: Tensor,
+        /// Per-output-channel bias.
+        bias: Vec<f32>,
+        /// Fuse a ReLU after bias.
+        relu: bool,
+    },
+    /// Max pooling.
+    MaxPool {
+        /// Window.
+        kernel: (usize, usize),
+        /// Stride.
+        stride: (usize, usize),
+        /// Padding.
+        pad: (usize, usize),
+        /// Ceil-mode output size (Caffe legacy nets).
+        ceil: bool,
+    },
+    /// Average pooling.
+    AvgPool {
+        /// Window.
+        kernel: (usize, usize),
+        /// Stride.
+        stride: (usize, usize),
+        /// Padding.
+        pad: (usize, usize),
+        /// Ceil-mode output size.
+        ceil: bool,
+    },
+    /// Global average pooling to `[N,1,1,C]`.
+    GlobalAvgPool,
+    /// Channel concat of all inputs.
+    Concat,
+    /// Fully connected (+ optional ReLU).
+    Fc {
+        /// `[K, M]` weights.
+        weights: Tensor,
+        /// Bias of length M.
+        bias: Vec<f32>,
+        /// Fuse ReLU.
+        relu: bool,
+    },
+    /// Row softmax (rank-2 input).
+    Softmax,
+    /// Local response normalisation (legacy GoogleNet).
+    Lrn {
+        /// Window size across channels.
+        size: usize,
+        /// Alpha.
+        alpha: f32,
+        /// Beta.
+        beta: f32,
+        /// K offset.
+        k: f32,
+    },
+}
+
+impl Op {
+    /// Short kind string for reports.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Op::Input => "input",
+            Op::Conv { .. } => "conv",
+            Op::MaxPool { .. } => "maxpool",
+            Op::AvgPool { .. } => "avgpool",
+            Op::GlobalAvgPool => "gavgpool",
+            Op::Concat => "concat",
+            Op::Fc { .. } => "fc",
+            Op::Softmax => "softmax",
+            Op::Lrn { .. } => "lrn",
+        }
+    }
+}
+
+/// A named node and its input edges.
+#[derive(Debug, Clone)]
+pub struct Node {
+    /// Human-readable layer name (paper-style, e.g. `conv3_2`).
+    pub name: String,
+    /// Operation.
+    pub op: Op,
+    /// Producer nodes.
+    pub inputs: Vec<NodeId>,
+}
+
+/// An inference DAG in topological order (builders append producers before
+/// consumers).
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    /// Nodes in topological order.
+    pub nodes: Vec<Node>,
+}
+
+impl Graph {
+    /// Empty graph.
+    pub fn new() -> Graph {
+        Graph::default()
+    }
+
+    /// Append a node; `inputs` must already exist.
+    pub fn add(&mut self, name: &str, op: Op, inputs: &[NodeId]) -> NodeId {
+        for &i in inputs {
+            assert!(i < self.nodes.len(), "input {i} of node {name} not yet defined");
+        }
+        self.nodes.push(Node {
+            name: name.to_string(),
+            op,
+            inputs: inputs.to_vec(),
+        });
+        self.nodes.len() - 1
+    }
+
+    /// Add the input placeholder (must be node 0).
+    pub fn input(&mut self) -> NodeId {
+        assert!(self.nodes.is_empty(), "input must be the first node");
+        self.add("input", Op::Input, &[])
+    }
+
+    /// Number of convolution nodes.
+    pub fn conv_count(&self) -> usize {
+        self.nodes.iter().filter(|n| matches!(n.op, Op::Conv { .. })).count()
+    }
+
+    /// Infer every node's output shape from the graph-input shape.
+    pub fn infer_shapes(&self, input_shape: &[usize]) -> Result<Vec<Vec<usize>>> {
+        let mut shapes: Vec<Vec<usize>> = Vec::with_capacity(self.nodes.len());
+        for node in &self.nodes {
+            let shape = match &node.op {
+                Op::Input => input_shape.to_vec(),
+                Op::Conv { desc, .. } => desc.output_shape(&shapes[node.inputs[0]])?,
+                Op::MaxPool { kernel, stride, pad, ceil }
+                | Op::AvgPool { kernel, stride, pad, ceil } => {
+                    let s = &shapes[node.inputs[0]];
+                    let (h, w) = (s[1], s[2]);
+                    if h + 2 * pad.0 < kernel.0 || w + 2 * pad.1 < kernel.1 {
+                        bail_shape!("{}: pool window larger than input", node.name);
+                    }
+                    let span_h = h + 2 * pad.0 - kernel.0;
+                    let span_w = w + 2 * pad.1 - kernel.1;
+                    let (oh, ow) = if *ceil {
+                        (span_h.div_ceil(stride.0) + 1, span_w.div_ceil(stride.1) + 1)
+                    } else {
+                        (span_h / stride.0 + 1, span_w / stride.1 + 1)
+                    };
+                    vec![s[0], oh, ow, s[3]]
+                }
+                Op::GlobalAvgPool => {
+                    let s = &shapes[node.inputs[0]];
+                    vec![s[0], 1, 1, s[3]]
+                }
+                Op::Concat => {
+                    let first = shapes[node.inputs[0]].clone();
+                    let mut c = 0;
+                    for &i in &node.inputs {
+                        let s = &shapes[i];
+                        if s[0] != first[0] || s[1] != first[1] || s[2] != first[2] {
+                            bail_shape!("{}: concat mismatch {:?} vs {:?}", node.name, s, first);
+                        }
+                        c += s[3];
+                    }
+                    vec![first[0], first[1], first[2], c]
+                }
+                Op::Fc { weights, .. } => {
+                    let s = &shapes[node.inputs[0]];
+                    let k: usize = s[1..].iter().product();
+                    if weights.shape()[0] != k {
+                        bail_shape!("{}: fc expects K={}, got {k}", node.name, weights.shape()[0]);
+                    }
+                    vec![s[0], weights.shape()[1]]
+                }
+                Op::Softmax | Op::Lrn { .. } => shapes[node.inputs[0]].clone(),
+            };
+            shapes.push(shape);
+        }
+        Ok(shapes)
+    }
+}
+
+/// How conv layers are bound at preparation time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheme {
+    /// Every conv uses im2row + GEMM (the paper's baseline configuration).
+    Im2RowOnly,
+    /// Winograd-suitable convs use the region-wise scheme, rest im2row
+    /// (the paper's "our scheme" configuration).
+    WinogradWhereSuitable,
+}
+
+impl std::fmt::Display for Scheme {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Scheme::Im2RowOnly => write!(f, "im2row"),
+            Scheme::WinogradWhereSuitable => write!(f, "ours"),
+        }
+    }
+}
+
+/// A conv node bound to a concrete, weight-pre-transformed implementation.
+enum PreparedConv {
+    Winograd(WinogradConvolution),
+    Im2Row(Im2RowConvolution),
+}
+
+/// One executable step.
+enum PreparedOp {
+    Passthrough,
+    Conv {
+        conv: PreparedConv,
+        bias: Vec<f32>,
+        relu: bool,
+    },
+    Other(Op),
+}
+
+/// Per-layer record of one executed inference.
+#[derive(Debug, Clone)]
+pub struct LayerTiming {
+    /// Layer name.
+    pub name: String,
+    /// Op kind (`conv`, `maxpool`, …).
+    pub kind: &'static str,
+    /// Nanoseconds spent.
+    pub ns: u64,
+    /// For conv nodes: was it bound to the Winograd scheme?
+    pub winograd: bool,
+    /// For conv nodes: is the layer Winograd-suitable at all (the paper's
+    /// "fast layer" predicate — true for 3×3/5×5/1×7/7×1 stride-1)?
+    pub fast_layer: bool,
+}
+
+/// A graph prepared for a fixed input shape and scheme.
+pub struct PreparedModel {
+    /// Model name.
+    pub name: String,
+    /// Scheme the convs were bound with.
+    pub scheme: Scheme,
+    nodes: Vec<Node>,
+    prepared: Vec<PreparedOp>,
+    shapes: Vec<Vec<usize>>,
+}
+
+impl PreparedModel {
+    /// Bind every conv layer of `graph` per `scheme` for `input_shape`.
+    pub fn prepare(
+        name: &str,
+        graph: &Graph,
+        input_shape: &[usize],
+        scheme: Scheme,
+    ) -> Result<PreparedModel> {
+        let shapes = graph.infer_shapes(input_shape)?;
+        let mut prepared = Vec::with_capacity(graph.nodes.len());
+        for (idx, node) in graph.nodes.iter().enumerate() {
+            let p = match &node.op {
+                Op::Input => PreparedOp::Passthrough,
+                Op::Conv { desc, weights, bias, relu } => {
+                    let out_shape = &shapes[idx];
+                    let use_wino = scheme == Scheme::WinogradWhereSuitable
+                        && is_winograd_suitable(desc.kernel, desc.stride)
+                        && desc.cin * desc.cout >= MIN_CHANNEL_PRODUCT;
+                    let conv = if use_wino {
+                        let v = select_variant_spatial(desc.kernel, out_shape[1], out_shape[2])
+                            .expect("suitable layer must have a variant");
+                        PreparedConv::Winograd(WinogradConvolution::new(v, weights, desc.padding)?)
+                    } else {
+                        PreparedConv::Im2Row(Im2RowConvolution::new(
+                            weights,
+                            desc.stride,
+                            desc.padding,
+                        )?)
+                    };
+                    PreparedOp::Conv {
+                        conv,
+                        bias: bias.clone(),
+                        relu: *relu,
+                    }
+                }
+                other => PreparedOp::Other(other.clone()),
+            };
+            prepared.push(p);
+        }
+        Ok(PreparedModel {
+            name: name.to_string(),
+            scheme,
+            nodes: graph.nodes.clone(),
+            prepared,
+            shapes,
+        })
+    }
+
+    /// Expected input shape.
+    pub fn input_shape(&self) -> &[usize] {
+        &self.shapes[0]
+    }
+
+    /// Output shape of the final node.
+    pub fn output_shape(&self) -> &[usize] {
+        self.shapes.last().unwrap()
+    }
+
+    /// Execute one inference, returning the final tensor and per-layer
+    /// timings.
+    pub fn run(
+        &self,
+        input: &Tensor,
+        pool: Option<&ThreadPool>,
+    ) -> Result<(Tensor, Vec<LayerTiming>)> {
+        if input.shape() != self.input_shape() {
+            bail_shape!(
+                "{}: input {:?}, prepared for {:?}",
+                self.name,
+                input.shape(),
+                self.input_shape()
+            );
+        }
+        let n = self.nodes.len();
+        // Reference counts so intermediate tensors free eagerly.
+        let mut refcount = vec![0usize; n];
+        for node in &self.nodes {
+            for &i in &node.inputs {
+                refcount[i] += 1;
+            }
+        }
+        refcount[n - 1] += 1; // keep the output alive
+
+        let mut values: Vec<Option<Tensor>> = (0..n).map(|_| None).collect();
+        let mut timings = Vec::with_capacity(n);
+        for (idx, node) in self.nodes.iter().enumerate() {
+            let t0 = Instant::now();
+            let mut winograd = false;
+            let mut fast_layer = false;
+            let out = match &self.prepared[idx] {
+                PreparedOp::Passthrough => input.clone(),
+                PreparedOp::Conv { conv, bias, relu } => {
+                    let x = values[node.inputs[0]].as_ref().unwrap();
+                    match conv {
+                        PreparedConv::Winograd(wc) => {
+                            winograd = true;
+                            fast_layer = true;
+                            // Bias + ReLU fused into the output transform.
+                            wc.run_fused(x, pool, Some(bias), *relu)?
+                        }
+                        PreparedConv::Im2Row(ic) => {
+                            if let Op::Conv { desc, .. } = &node.op {
+                                fast_layer = is_winograd_suitable(desc.kernel, desc.stride);
+                            }
+                            let mut y = ic.run(x, pool)?;
+                            ops::bias_relu_inplace(&mut y, bias, *relu)?;
+                            y
+                        }
+                    }
+                }
+                PreparedOp::Other(op) => {
+                    let x = values[node.inputs[0]].as_ref().unwrap();
+                    match op {
+                        Op::MaxPool { kernel, stride, pad, ceil } => {
+                            ops::max_pool2d(x, *kernel, *stride, *pad, *ceil)?
+                        }
+                        Op::AvgPool { kernel, stride, pad, ceil } => {
+                            ops::avg_pool2d(x, *kernel, *stride, *pad, *ceil)?
+                        }
+                        Op::GlobalAvgPool => ops::global_avg_pool(x)?,
+                        Op::Concat => {
+                            let parts: Vec<&Tensor> = node
+                                .inputs
+                                .iter()
+                                .map(|&i| values[i].as_ref().unwrap())
+                                .collect();
+                            ops::concat_channels(&parts)?
+                        }
+                        Op::Fc { weights, bias, relu } => {
+                            let flat = x.reshape(&[x.shape()[0], x.len() / x.shape()[0]])?;
+                            ops::fully_connected(&flat, weights, bias, *relu)?
+                        }
+                        Op::Softmax => ops::softmax(x)?,
+                        Op::Lrn { size, alpha, beta, k } => {
+                            ops::lrn_across_channels(x, *size, *alpha, *beta, *k)?
+                        }
+                        Op::Input | Op::Conv { .. } => unreachable!(),
+                    }
+                }
+            };
+            timings.push(LayerTiming {
+                name: node.name.clone(),
+                kind: node.op.kind(),
+                ns: t0.elapsed().as_nanos() as u64,
+                winograd,
+                fast_layer,
+            });
+            values[idx] = Some(out);
+            // Release inputs whose consumers are all done.
+            for &i in &node.inputs {
+                refcount[i] -= 1;
+                if refcount[i] == 0 {
+                    values[i] = None;
+                }
+            }
+        }
+        Ok((values[n - 1].take().unwrap(), timings))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiny two-branch model: conv → {conv3x3, maxpool} → concat → fc.
+    fn tiny_graph(seed: u64) -> Graph {
+        let mut g = Graph::new();
+        let input = g.input();
+        let c1 = Conv2d::new(3, 8, (3, 3)).with_padding((1, 1));
+        let w1 = c1.random_weights(seed);
+        let n1 = g.add(
+            "conv1",
+            Op::Conv { desc: c1, weights: w1, bias: vec![0.1; 8], relu: true },
+            &[input],
+        );
+        let c2 = Conv2d::new(8, 16, (3, 3)).with_padding((1, 1));
+        let w2 = c2.random_weights(seed + 1);
+        let br_a = g.add(
+            "conv2",
+            Op::Conv { desc: c2, weights: w2, bias: vec![0.0; 16], relu: true },
+            &[n1],
+        );
+        let br_b = g.add(
+            "pool",
+            Op::MaxPool { kernel: (3, 3), stride: (1, 1), pad: (1, 1), ceil: false },
+            &[n1],
+        );
+        let cat = g.add("concat", Op::Concat, &[br_a, br_b]);
+        let gap = g.add("gap", Op::GlobalAvgPool, &[cat]);
+        let fcw = Tensor::randn(&[24, 10], seed + 2);
+        let fc = g.add(
+            "fc",
+            Op::Fc { weights: fcw, bias: vec![0.0; 10], relu: false },
+            &[gap],
+        );
+        g.add("softmax", Op::Softmax, &[fc]);
+        g
+    }
+
+    #[test]
+    fn shape_inference_through_branches() {
+        let g = tiny_graph(1);
+        let shapes = g.infer_shapes(&[1, 8, 8, 3]).unwrap();
+        assert_eq!(shapes[1], vec![1, 8, 8, 8]); // conv1
+        assert_eq!(shapes[2], vec![1, 8, 8, 16]); // conv2
+        assert_eq!(shapes[3], vec![1, 8, 8, 8]); // pool
+        assert_eq!(shapes[4], vec![1, 8, 8, 24]); // concat
+        assert_eq!(shapes[5], vec![1, 1, 1, 24]); // gap
+        assert_eq!(shapes[6], vec![1, 10]); // fc
+        assert_eq!(shapes[7], vec![1, 10]); // softmax
+    }
+
+    #[test]
+    fn schemes_agree_numerically() {
+        let g = tiny_graph(3);
+        let input = Tensor::randn(&[1, 8, 8, 3], 9);
+        let base = PreparedModel::prepare("tiny", &g, input.shape(), Scheme::Im2RowOnly).unwrap();
+        let ours =
+            PreparedModel::prepare("tiny", &g, input.shape(), Scheme::WinogradWhereSuitable)
+                .unwrap();
+        let (y1, t1) = base.run(&input, None).unwrap();
+        let (y2, t2) = ours.run(&input, None).unwrap();
+        assert!(y2.allclose(&y1, 1e-3));
+        assert_eq!(t1.len(), g.nodes.len());
+        // In "ours", conv2 (8·16 = 128 ≥ threshold) must be Winograd-bound.
+        assert!(t2.iter().any(|t| t.name == "conv2" && t.winograd));
+        // In the baseline nothing is Winograd-bound.
+        assert!(t1.iter().all(|t| !t.winograd));
+    }
+
+    #[test]
+    fn fast_layer_flag_independent_of_scheme() {
+        let g = tiny_graph(5);
+        let base = PreparedModel::prepare("tiny", &g, &[1, 8, 8, 3], Scheme::Im2RowOnly).unwrap();
+        let input = Tensor::randn(&[1, 8, 8, 3], 2);
+        let (_, t) = base.run(&input, None).unwrap();
+        let conv2 = t.iter().find(|t| t.name == "conv2").unwrap();
+        assert!(conv2.fast_layer && !conv2.winograd);
+    }
+
+    #[test]
+    fn run_rejects_wrong_input_shape() {
+        let g = tiny_graph(1);
+        let m = PreparedModel::prepare("tiny", &g, &[1, 8, 8, 3], Scheme::Im2RowOnly).unwrap();
+        let bad = Tensor::zeros(&[1, 9, 9, 3]);
+        assert!(m.run(&bad, None).is_err());
+    }
+
+    #[test]
+    fn parallel_execution_matches_serial() {
+        let g = tiny_graph(7);
+        let m =
+            PreparedModel::prepare("tiny", &g, &[1, 8, 8, 3], Scheme::WinogradWhereSuitable)
+                .unwrap();
+        let input = Tensor::randn(&[1, 8, 8, 3], 4);
+        let pool = ThreadPool::new(4);
+        let (a, _) = m.run(&input, None).unwrap();
+        let (b, _) = m.run(&input, Some(&pool)).unwrap();
+        assert!(b.allclose(&a, 1e-5));
+    }
+}

@@ -1,0 +1,8 @@
+//! Neural-network graph layer: ops, DAG, shape inference and the prepared
+//! executor used by the whole-network benchmarks (Table 1, Figure 3) and
+//! the serving coordinator.
+
+pub mod ops;
+pub mod graph;
+
+pub use graph::{Graph, LayerTiming, Node, NodeId, Op, PreparedModel, Scheme};

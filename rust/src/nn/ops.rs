@@ -1,0 +1,375 @@
+//! Non-convolution inference ops (pooling, activation, concat, FC, softmax,
+//! LRN) over NHWC tensors. These are the supporting cast for whole-network
+//! benchmarks — correctness-critical, SIMD where it is free (channel-inner
+//! loops autovectorize), but not the paper's hot path.
+
+use crate::gemm::sgemm_simple;
+use crate::tensor::Tensor;
+use crate::{bail_shape, Result};
+
+/// Max pooling with window `k`, stride `s`, symmetric padding `p`
+/// (padding contributes −∞, i.e. is ignored).
+pub fn max_pool2d(
+    input: &Tensor,
+    k: (usize, usize),
+    s: (usize, usize),
+    p: (usize, usize),
+    ceil_mode: bool,
+) -> Result<Tensor> {
+    pool2d(input, k, s, p, ceil_mode, PoolKind::Max)
+}
+
+/// Average pooling (padding excluded from the divisor, as in Caffe/ACL).
+pub fn avg_pool2d(
+    input: &Tensor,
+    k: (usize, usize),
+    s: (usize, usize),
+    p: (usize, usize),
+    ceil_mode: bool,
+) -> Result<Tensor> {
+    pool2d(input, k, s, p, ceil_mode, PoolKind::Avg)
+}
+
+#[derive(Clone, Copy)]
+enum PoolKind {
+    Max,
+    Avg,
+}
+
+fn pool2d(
+    input: &Tensor,
+    k: (usize, usize),
+    s: (usize, usize),
+    p: (usize, usize),
+    ceil_mode: bool,
+    kind: PoolKind,
+) -> Result<Tensor> {
+    if input.rank() != 4 {
+        bail_shape!("pool2d expects NHWC rank-4, got {:?}", input.shape());
+    }
+    let (n, h, w, c) = (
+        input.shape()[0],
+        input.shape()[1],
+        input.shape()[2],
+        input.shape()[3],
+    );
+    if s.0 == 0 || s.1 == 0 || k.0 == 0 || k.1 == 0 {
+        bail_shape!("pool kernel/stride must be positive");
+    }
+    if h + 2 * p.0 < k.0 || w + 2 * p.1 < k.1 {
+        bail_shape!("input {h}x{w} too small for pool {k:?} pad {p:?}");
+    }
+    let span_h = h + 2 * p.0 - k.0;
+    let span_w = w + 2 * p.1 - k.1;
+    let (oh, ow) = if ceil_mode {
+        (span_h.div_ceil(s.0) + 1, span_w.div_ceil(s.1) + 1)
+    } else {
+        (span_h / s.0 + 1, span_w / s.1 + 1)
+    };
+    let mut out = Tensor::zeros(&[n, oh, ow, c]);
+    for b in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let y0 = (oy * s.0) as isize - p.0 as isize;
+                let x0 = (ox * s.1) as isize - p.1 as isize;
+                let y_lo = y0.max(0) as usize;
+                let x_lo = x0.max(0) as usize;
+                let y_hi = ((y0 + k.0 as isize) as usize).min(h);
+                let x_hi = ((x0 + k.1 as isize) as usize).min(w);
+                let count = ((y_hi - y_lo) * (x_hi - x_lo)).max(1) as f32;
+                let dst_base = out.idx4(b, oy, ox, 0);
+                // Initialise.
+                match kind {
+                    PoolKind::Max => {
+                        for ch in 0..c {
+                            out.data_mut()[dst_base + ch] = f32::NEG_INFINITY;
+                        }
+                    }
+                    PoolKind::Avg => {}
+                }
+                for iy in y_lo..y_hi {
+                    for ix in x_lo..x_hi {
+                        let src = input.idx4(b, iy, ix, 0);
+                        match kind {
+                            PoolKind::Max => {
+                                for ch in 0..c {
+                                    let v = input.data()[src + ch];
+                                    let d = &mut out.data_mut()[dst_base + ch];
+                                    if v > *d {
+                                        *d = v;
+                                    }
+                                }
+                            }
+                            PoolKind::Avg => {
+                                for ch in 0..c {
+                                    out.data_mut()[dst_base + ch] += input.data()[src + ch];
+                                }
+                            }
+                        }
+                    }
+                }
+                if let PoolKind::Avg = kind {
+                    for ch in 0..c {
+                        out.data_mut()[dst_base + ch] /= count;
+                    }
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Global average pooling: `[N, H, W, C] → [N, 1, 1, C]`.
+pub fn global_avg_pool(input: &Tensor) -> Result<Tensor> {
+    if input.rank() != 4 {
+        bail_shape!("global_avg_pool expects rank-4, got {:?}", input.shape());
+    }
+    let (n, h, w, c) = (
+        input.shape()[0],
+        input.shape()[1],
+        input.shape()[2],
+        input.shape()[3],
+    );
+    let mut out = Tensor::zeros(&[n, 1, 1, c]);
+    let scale = 1.0 / (h * w) as f32;
+    for b in 0..n {
+        for y in 0..h {
+            for x in 0..w {
+                let px = input.pixel(b, y, x);
+                let dst = out.idx4(b, 0, 0, 0);
+                for ch in 0..c {
+                    out.data_mut()[dst + ch] += px[ch] * scale;
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// In-place ReLU.
+pub fn relu_inplace(t: &mut Tensor) {
+    for v in t.data_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Add a per-channel bias (length C) in place, optionally fused with ReLU.
+pub fn bias_relu_inplace(t: &mut Tensor, bias: &[f32], relu: bool) -> Result<()> {
+    if t.rank() != 4 || t.shape()[3] != bias.len() {
+        bail_shape!("bias length {} vs channels {:?}", bias.len(), t.shape());
+    }
+    let c = bias.len();
+    for px in t.data_mut().chunks_mut(c) {
+        for (v, b) in px.iter_mut().zip(bias) {
+            *v += *b;
+            if relu && *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Concatenate NHWC tensors along the channel axis.
+pub fn concat_channels(parts: &[&Tensor]) -> Result<Tensor> {
+    if parts.is_empty() {
+        bail_shape!("concat of zero tensors");
+    }
+    let (n, h, w) = (parts[0].shape()[0], parts[0].shape()[1], parts[0].shape()[2]);
+    let mut c_total = 0;
+    for p in parts {
+        if p.rank() != 4 || p.shape()[0] != n || p.shape()[1] != h || p.shape()[2] != w {
+            bail_shape!("concat spatial mismatch: {:?} vs [{n},{h},{w},_]", p.shape());
+        }
+        c_total += p.shape()[3];
+    }
+    let mut out = Tensor::zeros(&[n, h, w, c_total]);
+    for b in 0..n {
+        for y in 0..h {
+            for x in 0..w {
+                let mut off = out.idx4(b, y, x, 0);
+                for p in parts {
+                    let src = p.pixel(b, y, x);
+                    out.data_mut()[off..off + src.len()].copy_from_slice(src);
+                    off += src.len();
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Fully-connected layer: flatten to `[N, K]`, multiply `[K, M]`, add bias.
+pub fn fully_connected(
+    input: &Tensor,
+    weights: &Tensor,
+    bias: &[f32],
+    relu: bool,
+) -> Result<Tensor> {
+    let n = input.shape()[0];
+    let k: usize = input.shape()[1..].iter().product();
+    if weights.rank() != 2 || weights.shape()[0] != k || weights.shape()[1] != bias.len() {
+        bail_shape!(
+            "fc weights {:?} incompatible with input K={k}, bias {}",
+            weights.shape(),
+            bias.len()
+        );
+    }
+    let m = weights.shape()[1];
+    let mut out = Tensor::zeros(&[n, m]);
+    sgemm_simple(n, m, k, input.data(), weights.data(), out.data_mut());
+    for row in out.data_mut().chunks_mut(m) {
+        for (v, b) in row.iter_mut().zip(bias) {
+            *v += *b;
+            if relu && *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Row-wise softmax over the last axis of a rank-2 tensor.
+pub fn softmax(input: &Tensor) -> Result<Tensor> {
+    if input.rank() != 2 {
+        bail_shape!("softmax expects [N, M], got {:?}", input.shape());
+    }
+    let m = input.shape()[1];
+    let mut out = input.clone();
+    for row in out.data_mut().chunks_mut(m) {
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+    Ok(out)
+}
+
+/// Local response normalisation across channels (GoogleNet/AlexNet style):
+/// `out = in / (k + α/n · Σ_{window} in²)^β`.
+pub fn lrn_across_channels(
+    input: &Tensor,
+    size: usize,
+    alpha: f32,
+    beta: f32,
+    k: f32,
+) -> Result<Tensor> {
+    if input.rank() != 4 {
+        bail_shape!("lrn expects rank-4, got {:?}", input.shape());
+    }
+    let c = input.shape()[3];
+    let half = size / 2;
+    let mut out = input.clone();
+    let src = input.data();
+    for (pix_idx, px) in out.data_mut().chunks_mut(c).enumerate() {
+        let base = pix_idx * c;
+        for ch in 0..c {
+            let lo = ch.saturating_sub(half);
+            let hi = (ch + half + 1).min(c);
+            let mut ss = 0.0;
+            for j in lo..hi {
+                let v = src[base + j];
+                ss += v * v;
+            }
+            px[ch] = src[base + ch] / (k + alpha / size as f32 * ss).powf(beta);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_pool_basic() {
+        // 4×4 single-channel ramp, 2×2/2 pool: max of each quadrant.
+        let t = Tensor::from_vec(&[1, 4, 4, 1], (0..16).map(|x| x as f32).collect()).unwrap();
+        let p = max_pool2d(&t, (2, 2), (2, 2), (0, 0), false).unwrap();
+        assert_eq!(p.shape(), &[1, 2, 2, 1]);
+        assert_eq!(p.data(), &[5.0, 7.0, 13.0, 15.0]);
+    }
+
+    #[test]
+    fn max_pool_ceil_mode() {
+        // 6×6, 3×3/2: span 3 ⇒ floor 2×2, ceil 3×3 (SqueezeNet/GoogleNet use ceil).
+        let t = Tensor::randn(&[1, 6, 6, 2], 1);
+        assert_eq!(max_pool2d(&t, (3, 3), (2, 2), (0, 0), false).unwrap().shape(), &[1, 2, 2, 2]);
+        assert_eq!(max_pool2d(&t, (3, 3), (2, 2), (0, 0), true).unwrap().shape(), &[1, 3, 3, 2]);
+    }
+
+    #[test]
+    fn avg_pool_excludes_padding() {
+        let t = Tensor::full(&[1, 2, 2, 1], 4.0);
+        let p = avg_pool2d(&t, (3, 3), (1, 1), (1, 1), false).unwrap();
+        assert_eq!(p.shape(), &[1, 2, 2, 1]);
+        // Each window sees the same four 4.0s (padding excluded) ⇒ avg 4.0.
+        assert!(p.data().iter().all(|&v| (v - 4.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn global_avg_pool_means() {
+        let t = Tensor::from_vec(&[1, 2, 2, 2], vec![1.0, 10.0, 2.0, 20.0, 3.0, 30.0, 4.0, 40.0])
+            .unwrap();
+        let g = global_avg_pool(&t).unwrap();
+        assert_eq!(g.shape(), &[1, 1, 1, 2]);
+        assert_eq!(g.data(), &[2.5, 25.0]);
+    }
+
+    #[test]
+    fn relu_and_bias() {
+        let mut t = Tensor::from_vec(&[1, 1, 1, 3], vec![-1.0, 0.5, 2.0]).unwrap();
+        bias_relu_inplace(&mut t, &[0.2, -1.0, 0.0], true).unwrap();
+        assert_eq!(t.data(), &[0.0, 0.0, 2.0]);
+        let mut t = Tensor::from_vec(&[1, 1], vec![-3.0]).unwrap();
+        relu_inplace(&mut t);
+        assert_eq!(t.data(), &[0.0]);
+    }
+
+    #[test]
+    fn concat_interleaves_channels() {
+        let a = Tensor::full(&[1, 1, 2, 1], 1.0);
+        let b = Tensor::full(&[1, 1, 2, 2], 2.0);
+        let c = concat_channels(&[&a, &b]).unwrap();
+        assert_eq!(c.shape(), &[1, 1, 2, 3]);
+        assert_eq!(c.data(), &[1.0, 2.0, 2.0, 1.0, 2.0, 2.0]);
+        let bad = Tensor::zeros(&[1, 2, 2, 1]);
+        assert!(concat_channels(&[&a, &bad]).is_err());
+    }
+
+    #[test]
+    fn fc_matches_manual() {
+        let x = Tensor::from_vec(&[1, 3], vec![1.0, 2.0, 3.0]).unwrap();
+        let w = Tensor::from_vec(&[3, 2], vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]).unwrap();
+        let y = fully_connected(&x, &w, &[10.0, -100.0], false).unwrap();
+        assert_eq!(y.data(), &[14.0, -95.0]);
+        let y = fully_connected(&x, &w, &[10.0, -100.0], true).unwrap();
+        assert_eq!(y.data(), &[14.0, 0.0]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let x = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0]).unwrap();
+        let s = softmax(&x).unwrap();
+        for row in s.data().chunks(3) {
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+            assert!(row.windows(2).all(|w| w[0] < w[1])); // monotone inputs
+        }
+    }
+
+    #[test]
+    fn lrn_unit_norm_case() {
+        // k=1, alpha=0 ⇒ identity.
+        let t = Tensor::randn(&[1, 2, 2, 4], 1);
+        let l = lrn_across_channels(&t, 5, 0.0, 0.75, 1.0).unwrap();
+        assert!(l.allclose(&t, 1e-6));
+    }
+}

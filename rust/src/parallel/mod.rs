@@ -1,0 +1,238 @@
+//! A small static threadpool modelling the paper's 4× Cortex-A73 'big'
+//! cluster (offline build: no `rayon`).
+//!
+//! The region-wise pipeline parallelises over output regions / GEMM tiles
+//! with [`ThreadPool::parallel_for`], a blocking chunked index-space
+//! dispatch. Work is split into contiguous chunks (one per worker by
+//! default) because the per-item cost inside a layer is uniform — static
+//! chunking beats work-stealing here and mirrors how the paper pins work to
+//! the big cluster.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<Vec<Job>>,
+    available: Condvar,
+    shutdown: Mutex<bool>,
+}
+
+/// A fixed-size pool of worker threads.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<thread::JoinHandle<()>>,
+    n_threads: usize,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `n` worker threads (minimum 1).
+    pub fn new(n: usize) -> ThreadPool {
+        let n = n.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Vec::new()),
+            available: Condvar::new(),
+            shutdown: Mutex::new(false),
+        });
+        let workers = (0..n)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("winoconv-worker-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool {
+            shared,
+            workers,
+            n_threads: n,
+        }
+    }
+
+    /// Pool with one thread per available core (capped at 16).
+    pub fn per_core() -> ThreadPool {
+        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        ThreadPool::new(n.min(16))
+    }
+
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.n_threads
+    }
+
+    /// Submit a fire-and-forget job.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push(Box::new(f));
+        }
+        self.shared.available.notify_one();
+    }
+
+    /// Run `body(i)` for every `i` in `0..n`, blocking until all complete.
+    ///
+    /// The index space is cut into `threads × chunks_per_thread` contiguous
+    /// chunks claimed from an atomic cursor, so mild imbalance self-levels
+    /// while cache locality within a chunk is preserved.
+    pub fn parallel_for<F>(&self, n: usize, body: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        self.parallel_for_chunked(n, 1, |start, end| {
+            for i in start..end {
+                body(i);
+            }
+        });
+    }
+
+    /// Run `body(start, end)` over disjoint chunks covering `0..n`.
+    ///
+    /// `granularity` is the minimum chunk size (e.g. a register-tile height).
+    pub fn parallel_for_chunked<F>(&self, n: usize, granularity: usize, body: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let granularity = granularity.max(1);
+        // Aim for ~4 chunks per thread for self-levelling, but never below
+        // the granularity.
+        let target_chunks = self.n_threads * 4;
+        let chunk = (n.div_ceil(target_chunks)).max(granularity);
+        let cursor = AtomicUsize::new(0);
+        // SAFETY of lifetimes: achieved with std::thread::scope — workers in
+        // the pool cannot borrow `body`, so we run the chunked loop on scoped
+        // threads instead of the pool's own queue. The pool still bounds the
+        // parallelism degree.
+        let k = self.n_threads.min(n.div_ceil(chunk));
+        thread::scope(|s| {
+            for _ in 0..k.saturating_sub(1) {
+                s.spawn(|| {
+                    loop {
+                        let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                        if start >= n {
+                            break;
+                        }
+                        body(start, (start + chunk).min(n));
+                    }
+                });
+            }
+            // The calling thread participates too.
+            loop {
+                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                body(start, (start + chunk).min(n));
+            }
+        });
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop() {
+                    break Some(job);
+                }
+                if *shared.shutdown.lock().unwrap() {
+                    break None;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        match job {
+            Some(job) => job(),
+            None => return,
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        *self.shared.shutdown.lock().unwrap() = true;
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_covers_every_index_once() {
+        let pool = ThreadPool::new(4);
+        let n = 10_000;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        pool.parallel_for(n, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_chunked_partitions_exactly() {
+        let pool = ThreadPool::new(3);
+        let n = 1001;
+        let total = AtomicU64::new(0);
+        pool.parallel_for_chunked(n, 8, |s, e| {
+            assert!(s < e && e <= n);
+            total.fetch_add((e - s) as u64, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), n as u64);
+    }
+
+    #[test]
+    fn zero_items_is_noop() {
+        let pool = ThreadPool::new(2);
+        pool.parallel_for(0, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn single_thread_pool_works() {
+        let pool = ThreadPool::new(1);
+        let sum = AtomicU64::new(0);
+        pool.parallel_for(100, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4950);
+    }
+
+    #[test]
+    fn submit_runs_jobs() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..32 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        // Dropping the pool joins all workers after the queue drains.
+        drop(pool);
+        assert_eq!(counter.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn results_match_serial_reduction() {
+        let pool = ThreadPool::new(4);
+        let data: Vec<f64> = (0..5000).map(|i| (i as f64).sqrt()).collect();
+        let parallel_sum = Mutex::new(0.0f64);
+        pool.parallel_for_chunked(data.len(), 1, |s, e| {
+            let partial: f64 = data[s..e].iter().sum();
+            *parallel_sum.lock().unwrap() += partial;
+        });
+        let serial: f64 = data.iter().sum();
+        assert!((serial - *parallel_sum.lock().unwrap()).abs() < 1e-6);
+    }
+}

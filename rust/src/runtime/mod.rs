@@ -1,0 +1,142 @@
+//! PJRT runtime: load AOT-compiled HLO text artifacts (produced by
+//! `python/compile/aot.py` from the JAX/Pallas layers) and execute them on
+//! the CPU PJRT client from the Rust hot path.
+//!
+//! Interchange format is HLO **text**, not serialized `HloModuleProto` —
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids (see
+//! `/opt/xla-example/README.md`). Python never runs at request time: the
+//! artifacts directory is compiled once by `make artifacts`.
+
+pub mod verify;
+
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// A compiled HLO executable bound to the CPU PJRT client.
+pub struct HloExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Path the module was loaded from (for reports).
+    pub path: PathBuf,
+}
+
+/// Wrapper that owns the PJRT client and hands out executables.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    /// Connect to the CPU PJRT client.
+    pub fn cpu() -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        Ok(PjrtRuntime { client })
+    }
+
+    /// Platform string (e.g. `"cpu"`) and device count.
+    pub fn describe(&self) -> String {
+        format!(
+            "platform={} devices={}",
+            self.client.platform_name(),
+            self.client.device_count()
+        )
+    }
+
+    /// Load + compile an HLO text file.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<HloExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Runtime(format!("non-utf8 path {path:?}")))?,
+        )
+        .map_err(wrap)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(wrap)?;
+        Ok(HloExecutable {
+            exe,
+            path: path.to_path_buf(),
+        })
+    }
+
+    /// List `*.hlo.txt` artifacts under a directory.
+    pub fn list_artifacts(dir: &Path) -> Result<Vec<PathBuf>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(dir)? {
+            let p = entry?.path();
+            if p.to_string_lossy().ends_with(".hlo.txt") {
+                out.push(p);
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+}
+
+impl HloExecutable {
+    /// Execute with NHWC tensors; the module must have been lowered with
+    /// `return_tuple=True` (aot.py does), so the single tuple result is
+    /// unpacked into its element tensors.
+    pub fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(t.data())
+                    .reshape(&dims)
+                    .map_err(wrap)
+            })
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals).map_err(wrap)?;
+        let tuple = result[0][0].to_literal_sync().map_err(wrap)?;
+        let elements = tuple.to_tuple().map_err(wrap)?;
+        elements
+            .into_iter()
+            .map(|lit| {
+                let shape = lit.array_shape().map_err(wrap)?;
+                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                let data = lit.to_vec::<f32>().map_err(wrap)?;
+                Tensor::from_vec(&dims, data)
+            })
+            .collect()
+    }
+}
+
+fn wrap(e: xla::Error) -> Error {
+    Error::Runtime(e.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PJRT tests are gated: they need libxla_extension.so at runtime and a
+    // generated artifact. The full cross-validation lives in
+    // `examples/pjrt_verify.rs`; here we only check client bring-up.
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = PjrtRuntime::cpu().expect("PJRT CPU client");
+        let desc = rt.describe();
+        assert!(desc.contains("devices="), "{desc}");
+    }
+
+    #[test]
+    fn list_artifacts_filters_and_sorts() {
+        let dir = std::env::temp_dir().join(format!("winoconv-art-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("b.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.join("a.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.join("ignore.bin"), "x").unwrap();
+        let arts = PjrtRuntime::list_artifacts(&dir).unwrap();
+        let names: Vec<String> = arts
+            .iter()
+            .map(|p| p.file_name().unwrap().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, vec!["a.hlo.txt", "b.hlo.txt"]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn loading_missing_file_is_error() {
+        let rt = PjrtRuntime::cpu().unwrap();
+        assert!(rt.load_hlo_text(Path::new("/nonexistent.hlo.txt")).is_err());
+    }
+}

@@ -1,0 +1,101 @@
+//! NHWC ⇄ NCHW layout conversion (§2.1 of the paper).
+//!
+//! Under NCHW each channel plane is contiguous; under NHWC all channels of a
+//! pixel are contiguous. The paper picks NHWC so a single 128-bit load gives
+//! four channels of one pixel, making the transform kernels width-agnostic.
+//! Conversion exists for the layout ablation and interop with NCHW frameworks.
+
+use super::Tensor;
+use crate::{bail_shape, Result};
+
+/// Memory layout of a rank-4 activation tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Layout {
+    /// Batch, Height, Width, Channels — channels innermost (engine default).
+    Nhwc,
+    /// Batch, Channels, Height, Width — channel planes contiguous.
+    Nchw,
+}
+
+impl std::fmt::Display for Layout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Layout::Nhwc => write!(f, "NHWC"),
+            Layout::Nchw => write!(f, "NCHW"),
+        }
+    }
+}
+
+/// Convert an NHWC `[N, H, W, C]` tensor to NCHW `[N, C, H, W]`.
+pub fn nhwc_to_nchw(t: &Tensor) -> Result<Tensor> {
+    if t.rank() != 4 {
+        bail_shape!("nhwc_to_nchw expects rank-4, got {:?}", t.shape());
+    }
+    let (n, h, w, c) = (t.shape()[0], t.shape()[1], t.shape()[2], t.shape()[3]);
+    let mut out = Tensor::zeros(&[n, c, h, w]);
+    let src = t.data();
+    let dst = out.data_mut();
+    for b in 0..n {
+        for y in 0..h {
+            for x in 0..w {
+                let s = ((b * h + y) * w + x) * c;
+                for ch in 0..c {
+                    dst[((b * c + ch) * h + y) * w + x] = src[s + ch];
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Convert an NCHW `[N, C, H, W]` tensor to NHWC `[N, H, W, C]`.
+pub fn nchw_to_nhwc(t: &Tensor) -> Result<Tensor> {
+    if t.rank() != 4 {
+        bail_shape!("nchw_to_nhwc expects rank-4, got {:?}", t.shape());
+    }
+    let (n, c, h, w) = (t.shape()[0], t.shape()[1], t.shape()[2], t.shape()[3]);
+    let mut out = Tensor::zeros(&[n, h, w, c]);
+    let src = t.data();
+    let dst = out.data_mut();
+    for b in 0..n {
+        for ch in 0..c {
+            for y in 0..h {
+                let s = ((b * c + ch) * h + y) * w;
+                for x in 0..w {
+                    dst[((b * h + y) * w + x) * c + ch] = src[s + x];
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_preserves_values() {
+        let t = Tensor::randn(&[2, 3, 4, 5], 11);
+        let nchw = nhwc_to_nchw(&t).unwrap();
+        assert_eq!(nchw.shape(), &[2, 5, 3, 4]);
+        let back = nchw_to_nhwc(&nchw).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn known_small_case() {
+        // NHWC [1,1,2,2]: pixels (c0,c1) = (1,2) then (3,4)
+        let t = Tensor::from_vec(&[1, 1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let nchw = nhwc_to_nchw(&t).unwrap();
+        // NCHW: plane c0 = [1,3], plane c1 = [2,4]
+        assert_eq!(nchw.data(), &[1.0, 3.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn rejects_wrong_rank() {
+        let t = Tensor::zeros(&[2, 2]);
+        assert!(nhwc_to_nchw(&t).is_err());
+        assert!(nchw_to_nhwc(&t).is_err());
+    }
+}

@@ -1,0 +1,270 @@
+//! Dense row-major `f32` tensors plus the NHWC/NCHW layout machinery the
+//! paper's §2.1 studies.
+//!
+//! The engine standardises on **NHWC** activations (channels innermost) —
+//! the layout the paper selects so that a 128-bit SIMD load yields four
+//! channels of one pixel — and `[M, KH, KW, C]` weights. NCHW support exists
+//! for the layout ablation (DESIGN.md E6) and for interop.
+
+mod layout;
+
+pub use layout::{nchw_to_nhwc, nhwc_to_nchw, Layout};
+
+use crate::util::XorShiftRng;
+use crate::{bail_shape, Result};
+
+/// A dense row-major tensor of `f32` values.
+///
+/// Shapes are arbitrary-rank, though the engine mostly uses rank-4
+/// `[N, H, W, C]` activations and `[M, KH, KW, C]` weights.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    /// Tensor filled with a constant.
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![v; n],
+        }
+    }
+
+    /// Tensor with standard-normal entries from a deterministic seed.
+    pub fn randn(shape: &[usize], seed: u64) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        let mut rng = XorShiftRng::new(seed);
+        rng.fill_normal(&mut t.data);
+        t
+    }
+
+    /// Tensor with uniform entries in `[lo, hi)` from a deterministic seed.
+    pub fn rand_uniform(shape: &[usize], lo: f32, hi: f32, seed: u64) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        let mut rng = XorShiftRng::new(seed);
+        rng.fill_uniform(&mut t.data, lo, hi);
+        t
+    }
+
+    /// Wrap an existing buffer. Errors if the element count mismatches.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail_shape!("from_vec: shape {:?} needs {} elems, got {}", shape, n, data.len());
+        }
+        Ok(Tensor {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+
+    /// Tensor shape.
+    #[inline]
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Rank (number of dimensions).
+    #[inline]
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Total element count.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when the tensor has no elements.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Immutable view of the underlying buffer.
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable view of the underlying buffer.
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the underlying buffer.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshape(&self, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail_shape!("reshape {:?} -> {:?}: element count mismatch", self.shape, shape);
+        }
+        Ok(Tensor {
+            shape: shape.to_vec(),
+            data: self.data.clone(),
+        })
+    }
+
+    // ---- rank-4 NHWC accessors (the engine's canonical activation view) ----
+
+    /// Flat index of `(n, h, w, c)` for an NHWC rank-4 tensor.
+    #[inline(always)]
+    pub fn idx4(&self, n: usize, h: usize, w: usize, c: usize) -> usize {
+        debug_assert_eq!(self.shape.len(), 4);
+        ((n * self.shape[1] + h) * self.shape[2] + w) * self.shape[3] + c
+    }
+
+    /// Value at `(n, h, w, c)` (NHWC).
+    #[inline(always)]
+    pub fn at4(&self, n: usize, h: usize, w: usize, c: usize) -> f32 {
+        self.data[self.idx4(n, h, w, c)]
+    }
+
+    /// Mutable value at `(n, h, w, c)` (NHWC).
+    #[inline(always)]
+    pub fn at4_mut(&mut self, n: usize, h: usize, w: usize, c: usize) -> &mut f32 {
+        let i = self.idx4(n, h, w, c);
+        &mut self.data[i]
+    }
+
+    /// The contiguous channel slice at pixel `(n, h, w)` (NHWC) — the unit
+    /// the paper's SIMD transforms consume four lanes at a time.
+    #[inline(always)]
+    pub fn pixel(&self, n: usize, h: usize, w: usize) -> &[f32] {
+        let c = self.shape[3];
+        let base = self.idx4(n, h, w, 0);
+        &self.data[base..base + c]
+    }
+
+    /// Mutable channel slice at pixel `(n, h, w)` (NHWC).
+    #[inline(always)]
+    pub fn pixel_mut(&mut self, n: usize, h: usize, w: usize) -> &mut [f32] {
+        let c = self.shape[3];
+        let base = self.idx4(n, h, w, 0);
+        &mut self.data[base..base + c]
+    }
+
+    /// Zero-pad a rank-4 NHWC tensor spatially (same N and C).
+    pub fn pad_spatial(&self, pad_top: usize, pad_bottom: usize, pad_left: usize, pad_right: usize) -> Tensor {
+        assert_eq!(self.rank(), 4, "pad_spatial expects NHWC rank-4");
+        let (n, h, w, c) = (self.shape[0], self.shape[1], self.shape[2], self.shape[3]);
+        let (oh, ow) = (h + pad_top + pad_bottom, w + pad_left + pad_right);
+        let mut out = Tensor::zeros(&[n, oh, ow, c]);
+        for b in 0..n {
+            for y in 0..h {
+                for x in 0..w {
+                    let src = self.idx4(b, y, x, 0);
+                    let dst = out.idx4(b, y + pad_top, x + pad_left, 0);
+                    out.data[dst..dst + c].copy_from_slice(&self.data[src..src + c]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Max absolute entry.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().map(|x| x.abs()).fold(0.0, f32::max)
+    }
+
+    /// True when all entries of `self` and `other` are within `tol` of each
+    /// other, scaled by the dynamic range of `other`.
+    pub fn allclose(&self, other: &Tensor, tol: f32) -> bool {
+        self.shape == other.shape && crate::util::rel_error(&self.data, &other.data) <= tol
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_full() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert!(t.data().iter().all(|&x| x == 0.0));
+        let u = Tensor::full(&[2, 2], 3.5);
+        assert!(u.data().iter().all(|&x| x == 3.5));
+    }
+
+    #[test]
+    fn randn_is_deterministic() {
+        let a = Tensor::randn(&[4, 4], 9);
+        let b = Tensor::randn(&[4, 4], 9);
+        assert_eq!(a, b);
+        let c = Tensor::randn(&[4, 4], 10);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn from_vec_checks_len() {
+        assert!(Tensor::from_vec(&[2, 2], vec![1.0; 4]).is_ok());
+        assert!(Tensor::from_vec(&[2, 2], vec![1.0; 5]).is_err());
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
+        let r = t.reshape(&[3, 2]).unwrap();
+        assert_eq!(r.shape(), &[3, 2]);
+        assert_eq!(r.data(), t.data());
+        assert!(t.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn nhwc_indexing() {
+        // shape [1, 2, 2, 3]: value = 100h + 10w + c
+        let mut t = Tensor::zeros(&[1, 2, 2, 3]);
+        for h in 0..2 {
+            for w in 0..2 {
+                for c in 0..3 {
+                    *t.at4_mut(0, h, w, c) = (100 * h + 10 * w + c) as f32;
+                }
+            }
+        }
+        assert_eq!(t.at4(0, 1, 0, 2), 102.0);
+        assert_eq!(t.pixel(0, 0, 1), &[10.0, 11.0, 12.0]);
+        // channels are innermost/contiguous
+        assert_eq!(&t.data()[..3], &[0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn pad_spatial_places_data() {
+        let t = Tensor::full(&[1, 1, 1, 2], 5.0);
+        let p = t.pad_spatial(1, 2, 0, 1);
+        assert_eq!(p.shape(), &[1, 4, 2, 2]);
+        assert_eq!(p.at4(0, 1, 0, 0), 5.0);
+        assert_eq!(p.at4(0, 1, 0, 1), 5.0);
+        assert_eq!(p.at4(0, 0, 0, 0), 0.0);
+        assert_eq!(p.at4(0, 1, 1, 0), 0.0);
+        let total: f32 = p.data().iter().sum();
+        assert_eq!(total, 10.0);
+    }
+
+    #[test]
+    fn allclose_tolerates_small_error() {
+        let a = Tensor::full(&[2, 2], 100.0);
+        let mut b = a.clone();
+        b.data_mut()[0] = 100.001;
+        assert!(a.allclose(&b, 1e-4));
+        assert!(!a.allclose(&b, 1e-9));
+    }
+}

@@ -1,0 +1,208 @@
+//! A miniature property-based testing framework (offline build: no
+//! `proptest`/`quickcheck`).
+//!
+//! [`check`] runs a property over many deterministically-seeded random cases
+//! and, on failure, performs greedy shrinking over the case's integer
+//! parameters before reporting the minimal failing case and the seed that
+//! reproduces it.
+//!
+//! ```
+//! use winoconv::testkit::{check, Gen};
+//! check("addition commutes", 100, |g: &mut Gen| {
+//!     let a = g.usize_in(0, 1000);
+//!     let b = g.usize_in(0, 1000);
+//!     a + b == b + a
+//! });
+//! ```
+
+use crate::util::XorShiftRng;
+
+/// Case generator handed to properties; records the integer choices made so
+/// the framework can replay and shrink them.
+pub struct Gen {
+    rng: XorShiftRng,
+    /// (lo, hi, chosen) for every `usize_in` call, in order.
+    trace: Vec<(usize, usize, usize)>,
+    /// When replaying a shrunk trace, choices come from here instead.
+    replay: Option<Vec<usize>>,
+    cursor: usize,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Gen {
+        Gen {
+            rng: XorShiftRng::new(seed),
+            trace: Vec::new(),
+            replay: None,
+            cursor: 0,
+        }
+    }
+
+    fn replaying(seed: u64, choices: Vec<usize>) -> Gen {
+        Gen {
+            rng: XorShiftRng::new(seed),
+            trace: Vec::new(),
+            replay: Some(choices),
+            cursor: 0,
+        }
+    }
+
+    /// An integer in `[lo, hi]` inclusive. The fundamental generator; sizes,
+    /// channel counts etc. should flow through it so shrinking works.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        let v = match &self.replay {
+            Some(choices) if self.cursor < choices.len() => {
+                choices[self.cursor].clamp(lo, hi)
+            }
+            _ => self.rng.range(lo, hi),
+        };
+        self.cursor += 1;
+        self.trace.push((lo, hi, v));
+        v
+    }
+
+    /// A uniform `f32` in `[lo, hi)` (not part of the shrink space).
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform(lo, hi)
+    }
+
+    /// A vector of `n` standard-normal floats.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        let mut v = vec![0.0; n];
+        self.rng.fill_normal(&mut v);
+        v
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.usize_in(0, xs.len() - 1);
+        &xs[i]
+    }
+}
+
+/// Run `prop` over `cases` random cases. Panics with the seed and the
+/// (shrunk) parameter trace on the first failure.
+///
+/// Set `WINOCONV_PT_SEED` to reproduce a specific base seed.
+pub fn check<F: Fn(&mut Gen) -> bool>(name: &str, cases: usize, prop: F) {
+    let base_seed = std::env::var("WINOCONV_PT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen::new(seed);
+        if !run_case(&prop, &mut g) {
+            let shrunk = shrink(&prop, seed, &g.trace);
+            panic!(
+                "property {name:?} failed (case {case}, seed {seed}).\n\
+                 minimal failing choices: {shrunk:?}\n\
+                 reproduce with WINOCONV_PT_SEED={base_seed}"
+            );
+        }
+    }
+}
+
+fn run_case<F: Fn(&mut Gen) -> bool>(prop: &F, g: &mut Gen) -> bool {
+    // A panicking property counts as a failure (assert-style properties).
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(g)));
+    matches!(result, Ok(true))
+}
+
+/// Greedy shrink: repeatedly try lowering each recorded choice toward its
+/// lower bound (binary-search style) while the property still fails.
+fn shrink<F: Fn(&mut Gen) -> bool>(
+    prop: &F,
+    seed: u64,
+    trace: &[(usize, usize, usize)],
+) -> Vec<usize> {
+    let mut current: Vec<usize> = trace.iter().map(|t| t.2).collect();
+    let lows: Vec<usize> = trace.iter().map(|t| t.0).collect();
+    let mut improved = true;
+    let mut budget = 200;
+    while improved && budget > 0 {
+        improved = false;
+        for i in 0..current.len() {
+            while current[i] > lows[i] && budget > 0 {
+                budget -= 1;
+                let mut candidate = current.clone();
+                // Try the midpoint toward the lower bound; if that passes,
+                // fall back to a single decrement so we land exactly on the
+                // failure boundary.
+                candidate[i] = lows[i] + (current[i] - lows[i]) / 2;
+                let mut g = Gen::replaying(seed, candidate.clone());
+                if !run_case(prop, &mut g) {
+                    current = candidate;
+                    improved = true;
+                    continue;
+                }
+                candidate[i] = current[i] - 1;
+                let mut g = Gen::replaying(seed, candidate.clone());
+                if !run_case(prop, &mut g) {
+                    current = candidate;
+                    improved = true;
+                } else {
+                    break;
+                }
+            }
+        }
+    }
+    current
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("reverse-reverse is identity", 50, |g| {
+            let n = g.usize_in(0, 20);
+            let v: Vec<f32> = g.normal_vec(n);
+            let mut r = v.clone();
+            r.reverse();
+            r.reverse();
+            r == v
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics() {
+        check("all ints are below 5", 100, |g| g.usize_in(0, 100) < 5);
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        // Property fails iff n >= 10; the shrunk choice must be exactly 10.
+        let result = std::panic::catch_unwind(|| {
+            check("n < 10", 100, |g| g.usize_in(0, 1000) < 10)
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().expect("panic payload"),
+            Ok(_) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("[10]"), "expected shrunk [10], got: {msg}");
+    }
+
+    #[test]
+    fn panicking_property_is_failure() {
+        let result = std::panic::catch_unwind(|| {
+            check("panics are failures", 5, |g| {
+                let _ = g.usize_in(0, 3);
+                panic!("inner panic");
+            })
+        });
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn choose_picks_from_slice() {
+        let mut g = Gen::new(1);
+        let options = [2usize, 4, 8];
+        for _ in 0..20 {
+            assert!(options.contains(g.choose(&options)));
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! A minimal command-line argument parser (offline build: no `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments.
+//! Typed getters parse on access and produce [`crate::Error::Config`] with a
+//! clear message on malformed values.
+
+use crate::{Error, Result};
+use std::collections::HashMap;
+
+/// Parsed command line: options by name plus positionals in order.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    ///
+    /// `known_flags` lists boolean options that take no value; anything else
+    /// beginning with `--` consumes the following token (or its `=` suffix)
+    /// as a value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, known_flags: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminator: the rest is positional.
+                    out.positional.extend(iter);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if let Some(v) = iter.peek() {
+                    if v.starts_with("--") {
+                        return Err(Error::Config(format!(
+                            "option --{body} expects a value, got {v}"
+                        )));
+                    }
+                    let v = iter.next().unwrap();
+                    out.opts.insert(body.to_string(), v);
+                } else {
+                    return Err(Error::Config(format!("option --{body} expects a value")));
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse directly from the process environment.
+    pub fn from_env(known_flags: &[&str]) -> Result<Args> {
+        Args::parse(std::env::args().skip(1), known_flags)
+    }
+
+    /// True if a boolean flag was given.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Raw string value of `--name`, if present.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    /// String value with a default.
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// Typed value with a default; errors if present but malformed.
+    pub fn get_parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse::<T>().map_err(|_| {
+                Error::Config(format!("--{name}: cannot parse {s:?}"))
+            }),
+        }
+    }
+
+    /// Positional arguments in order.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// First positional (the subcommand, by convention).
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str], flags: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()), flags).unwrap()
+    }
+
+    #[test]
+    fn parses_key_value_both_styles() {
+        let a = parse(&["--threads", "4", "--model=vgg16"], &[]);
+        assert_eq!(a.get("threads"), Some("4"));
+        assert_eq!(a.get("model"), Some("vgg16"));
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = parse(&["bench", "--verbose", "layer1"], &["verbose"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.subcommand(), Some("bench"));
+        assert_eq!(a.positional(), &["bench".to_string(), "layer1".to_string()]);
+    }
+
+    #[test]
+    fn typed_getter_with_default() {
+        let a = parse(&["--reps", "30"], &[]);
+        assert_eq!(a.get_parse_or("reps", 10usize).unwrap(), 30);
+        assert_eq!(a.get_parse_or("threads", 4usize).unwrap(), 4);
+    }
+
+    #[test]
+    fn typed_getter_rejects_garbage() {
+        let a = parse(&["--reps", "abc"], &[]);
+        assert!(a.get_parse_or("reps", 1usize).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let r = Args::parse(["--threads".to_string()].into_iter(), &[]);
+        assert!(r.is_err());
+        let r = Args::parse(
+            ["--threads".to_string(), "--other".to_string()].into_iter(),
+            &[],
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn double_dash_terminates_options() {
+        let a = parse(&["--", "--not-an-option"], &[]);
+        assert_eq!(a.positional(), &["--not-an-option".to_string()]);
+    }
+}

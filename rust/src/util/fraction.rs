@@ -1,0 +1,209 @@
+//! Exact rational arithmetic over `i128`.
+//!
+//! The Cook-Toom transform-matrix construction ([`crate::winograd::cook_toom`])
+//! interpolates polynomials at small rational points (0, ±1, ±2, ±1/2, …, ∞).
+//! Doing that in floating point loses the exact small-integer structure that
+//! the paper's hand-coded transforms rely on, so we derive B, G, A over exact
+//! rationals and convert to `f32` at the very end.
+
+use std::cmp::Ordering;
+use std::fmt;
+use std::ops::{Add, Div, Mul, Neg, Sub};
+
+/// An exact rational number `num/den`, always kept in lowest terms with a
+/// positive denominator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Fraction {
+    num: i128,
+    den: i128,
+}
+
+fn gcd(mut a: i128, mut b: i128) -> i128 {
+    a = a.abs();
+    b = b.abs();
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+impl Fraction {
+    /// The rational `num/den`. Panics on a zero denominator.
+    pub fn new(num: i128, den: i128) -> Self {
+        assert!(den != 0, "Fraction with zero denominator");
+        let g = gcd(num, den).max(1);
+        let sign = if den < 0 { -1 } else { 1 };
+        Self {
+            num: sign * num / g,
+            den: sign * den / g,
+        }
+    }
+
+    /// The integer `n` as a rational.
+    pub const fn int(n: i128) -> Self {
+        Self { num: n, den: 1 }
+    }
+
+    /// Zero.
+    pub const ZERO: Fraction = Fraction { num: 0, den: 1 };
+    /// One.
+    pub const ONE: Fraction = Fraction { num: 1, den: 1 };
+
+    /// Numerator (lowest terms).
+    pub fn numerator(&self) -> i128 {
+        self.num
+    }
+
+    /// Denominator (lowest terms, always positive).
+    pub fn denominator(&self) -> i128 {
+        self.den
+    }
+
+    /// True iff the value is zero.
+    pub fn is_zero(&self) -> bool {
+        self.num == 0
+    }
+
+    /// Multiplicative inverse. Panics on zero.
+    pub fn recip(&self) -> Self {
+        assert!(self.num != 0, "reciprocal of zero");
+        Fraction::new(self.den, self.num)
+    }
+
+    /// Lossy conversion to `f32` (used once transforms are finalised).
+    pub fn to_f32(&self) -> f32 {
+        self.num as f32 / self.den as f32
+    }
+
+    /// Lossy conversion to `f64`.
+    pub fn to_f64(&self) -> f64 {
+        self.num as f64 / self.den as f64
+    }
+}
+
+impl fmt::Display for Fraction {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.den == 1 {
+            write!(f, "{}", self.num)
+        } else {
+            write!(f, "{}/{}", self.num, self.den)
+        }
+    }
+}
+
+impl Add for Fraction {
+    type Output = Fraction;
+    fn add(self, rhs: Fraction) -> Fraction {
+        Fraction::new(self.num * rhs.den + rhs.num * self.den, self.den * rhs.den)
+    }
+}
+
+impl Sub for Fraction {
+    type Output = Fraction;
+    fn sub(self, rhs: Fraction) -> Fraction {
+        Fraction::new(self.num * rhs.den - rhs.num * self.den, self.den * rhs.den)
+    }
+}
+
+impl Mul for Fraction {
+    type Output = Fraction;
+    fn mul(self, rhs: Fraction) -> Fraction {
+        Fraction::new(self.num * rhs.num, self.den * rhs.den)
+    }
+}
+
+impl Div for Fraction {
+    type Output = Fraction;
+    fn div(self, rhs: Fraction) -> Fraction {
+        assert!(rhs.num != 0, "division by zero fraction");
+        Fraction::new(self.num * rhs.den, self.den * rhs.num)
+    }
+}
+
+impl Neg for Fraction {
+    type Output = Fraction;
+    fn neg(self) -> Fraction {
+        Fraction {
+            num: -self.num,
+            den: self.den,
+        }
+    }
+}
+
+impl PartialOrd for Fraction {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Fraction {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Denominators are positive, so cross-multiplication preserves order.
+        (self.num * other.den).cmp(&(other.num * self.den))
+    }
+}
+
+impl From<i128> for Fraction {
+    fn from(n: i128) -> Self {
+        Fraction::int(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduces_to_lowest_terms() {
+        let f = Fraction::new(6, 4);
+        assert_eq!(f.numerator(), 3);
+        assert_eq!(f.denominator(), 2);
+    }
+
+    #[test]
+    fn denominator_sign_normalised() {
+        let f = Fraction::new(1, -2);
+        assert_eq!(f.numerator(), -1);
+        assert_eq!(f.denominator(), 2);
+        assert_eq!(Fraction::new(-3, -6), Fraction::new(1, 2));
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Fraction::new(1, 2);
+        let b = Fraction::new(1, 3);
+        assert_eq!(a + b, Fraction::new(5, 6));
+        assert_eq!(a - b, Fraction::new(1, 6));
+        assert_eq!(a * b, Fraction::new(1, 6));
+        assert_eq!(a / b, Fraction::new(3, 2));
+        assert_eq!(-a, Fraction::new(-1, 2));
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(Fraction::new(1, 3) < Fraction::new(1, 2));
+        assert!(Fraction::new(-1, 2) < Fraction::ZERO);
+        assert_eq!(Fraction::new(2, 4).cmp(&Fraction::new(1, 2)), Ordering::Equal);
+    }
+
+    #[test]
+    fn recip_and_zero() {
+        assert_eq!(Fraction::new(2, 3).recip(), Fraction::new(3, 2));
+        assert!(Fraction::ZERO.is_zero());
+        assert!(!Fraction::ONE.is_zero());
+    }
+
+    #[test]
+    fn to_float() {
+        assert_eq!(Fraction::new(1, 4).to_f32(), 0.25);
+        assert_eq!(Fraction::new(-3, 2).to_f64(), -1.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_denominator_panics() {
+        let _ = Fraction::new(1, 0);
+    }
+}

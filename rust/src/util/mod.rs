@@ -1,0 +1,72 @@
+//! Small self-contained utilities: RNG, exact rational arithmetic, CLI
+//! parsing and summary statistics. These live in-repo because the build is
+//! fully offline (only `xla` + `anyhow` are vendored).
+
+pub mod rng;
+pub mod fraction;
+pub mod cli;
+pub mod stats;
+
+pub use fraction::Fraction;
+pub use rng::XorShiftRng;
+
+/// Round `n` up to the next multiple of `m` (`m > 0`).
+#[inline]
+pub fn round_up(n: usize, m: usize) -> usize {
+    n.div_ceil(m) * m
+}
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(n: usize, m: usize) -> usize {
+    n.div_ceil(m)
+}
+
+/// Maximum absolute difference between two slices (∞-norm of the diff).
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "max_abs_diff: length mismatch");
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+/// Relative error metric used throughout the test-suite: max |a-b| scaled by
+/// the dynamic range of the reference.
+pub fn rel_error(actual: &[f32], reference: &[f32]) -> f32 {
+    let scale = reference
+        .iter()
+        .map(|x| x.abs())
+        .fold(0.0f32, f32::max)
+        .max(1e-6);
+    max_abs_diff(actual, reference) / scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 4), 0);
+        assert_eq!(round_up(1, 4), 4);
+        assert_eq!(round_up(4, 4), 4);
+        assert_eq!(round_up(5, 4), 8);
+        assert_eq!(round_up(17, 8), 24);
+    }
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 3), 0);
+        assert_eq!(ceil_div(1, 3), 1);
+        assert_eq!(ceil_div(3, 3), 1);
+        assert_eq!(ceil_div(4, 3), 2);
+    }
+
+    #[test]
+    fn rel_error_scales() {
+        let a = [100.0, 200.0];
+        let b = [100.0, 201.0];
+        assert!((rel_error(&a, &b) - 1.0 / 201.0).abs() < 1e-6);
+    }
+}

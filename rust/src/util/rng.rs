@@ -1,0 +1,154 @@
+//! A small, fast, deterministic PRNG (xorshift64*) used for synthetic
+//! weights/inputs and by the property-testing framework. Determinism matters:
+//! every test failure is reproducible from its seed.
+
+/// xorshift64* generator. Not cryptographic; statistically fine for test
+/// data and workload generation.
+#[derive(Debug, Clone)]
+pub struct XorShiftRng {
+    state: u64,
+}
+
+impl XorShiftRng {
+    /// Create a generator from a seed. A zero seed is remapped (xorshift
+    /// cannot leave the all-zero state).
+    pub fn new(seed: u64) -> Self {
+        Self {
+            state: if seed == 0 { 0x9E37_79B9_7F4A_7C15 } else { seed },
+        }
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Next 32-bit value.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform `f32` in `[0, 1)`.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1 << 24) as f32)
+    }
+
+    /// Uniform `f32` in `[lo, hi)`.
+    #[inline]
+    pub fn uniform(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.next_f32()
+    }
+
+    /// Standard normal via Box–Muller. Two uniforms per call; we discard the
+    /// second output for simplicity (generation is not on any hot path).
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.next_f32().max(1e-9);
+        let u2 = self.next_f32();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
+    }
+
+    /// Uniform integer in `[0, n)`. `n` must be non-zero.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform integer in `[lo, hi]` inclusive.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Fill a slice with standard-normal values.
+    pub fn fill_normal(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.normal();
+        }
+    }
+
+    /// Fill a slice with uniform values in `[lo, hi)`.
+    pub fn fill_uniform(&mut self, out: &mut [f32], lo: f32, hi: f32) {
+        for v in out.iter_mut() {
+            *v = self.uniform(lo, hi);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = XorShiftRng::new(123);
+        let mut b = XorShiftRng::new(123);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = XorShiftRng::new(1);
+        let mut b = XorShiftRng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn zero_seed_is_remapped() {
+        let mut r = XorShiftRng::new(0);
+        assert_ne!(r.next_u64(), 0);
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = XorShiftRng::new(7);
+        for _ in 0..1000 {
+            let v = r.next_f32();
+            assert!((0.0..1.0).contains(&v), "{v}");
+            let u = r.uniform(-2.0, 3.0);
+            assert!((-2.0..3.0).contains(&u), "{u}");
+        }
+    }
+
+    #[test]
+    fn uniform_mean_is_roughly_half() {
+        let mut r = XorShiftRng::new(99);
+        let n = 20_000;
+        let mean: f32 = (0..n).map(|_| r.next_f32()).sum::<f32>() / n as f32;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_mean_and_var() {
+        let mut r = XorShiftRng::new(1234);
+        let n = 40_000;
+        let xs: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn below_and_range_bounds() {
+        let mut r = XorShiftRng::new(5);
+        for _ in 0..1000 {
+            assert!(r.below(7) < 7);
+            let v = r.range(3, 9);
+            assert!((3..=9).contains(&v));
+        }
+        assert_eq!(r.range(4, 4), 4);
+    }
+}

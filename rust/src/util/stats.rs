@@ -1,0 +1,144 @@
+//! Summary statistics for the benchmarking harness.
+//!
+//! The paper reports mean absolute runtimes measured with PMU cycle counters;
+//! on a noisy general-purpose host we instead take many wall-clock samples and
+//! report robust statistics (median, trimmed mean, MAD) so single-run noise
+//! does not move the tables.
+
+/// Summary of a set of timing samples, all in nanoseconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    /// Number of samples.
+    pub n: usize,
+    /// Arithmetic mean.
+    pub mean: f64,
+    /// Median (50th percentile).
+    pub median: f64,
+    /// Minimum sample.
+    pub min: f64,
+    /// Maximum sample.
+    pub max: f64,
+    /// Standard deviation (population).
+    pub std_dev: f64,
+    /// Median absolute deviation, scaled to be σ-comparable (×1.4826).
+    pub mad: f64,
+    /// 5%-trimmed mean — the statistic the tables report.
+    pub trimmed_mean: f64,
+}
+
+impl Summary {
+    /// Compute a summary from raw samples. Panics on an empty slice.
+    pub fn from_samples(samples: &[f64]) -> Self {
+        assert!(!samples.is_empty(), "Summary of empty sample set");
+        let n = samples.len();
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let median = percentile_sorted(&sorted, 50.0);
+        let var = sorted.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        let mut devs: Vec<f64> = sorted.iter().map(|x| (x - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = percentile_sorted(&devs, 50.0) * 1.4826;
+        let trim = (n as f64 * 0.05).floor() as usize;
+        let kept = &sorted[trim..n - trim];
+        let trimmed_mean = kept.iter().sum::<f64>() / kept.len() as f64;
+        Summary {
+            n,
+            mean,
+            median,
+            min: sorted[0],
+            max: sorted[n - 1],
+            std_dev: var.sqrt(),
+            mad,
+            trimmed_mean,
+        }
+    }
+
+    /// Human-readable single line, in a unit auto-chosen from the median.
+    pub fn display_line(&self) -> String {
+        format!(
+            "median {} (trimmed-mean {}, min {}, n={})",
+            fmt_ns(self.median),
+            fmt_ns(self.trimmed_mean),
+            fmt_ns(self.min),
+            self.n
+        )
+    }
+}
+
+/// Percentile (0–100) of an already-sorted slice, with linear interpolation.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Format a duration given in nanoseconds with an auto-selected unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_constant_samples() {
+        let s = Summary::from_samples(&[5.0; 10]);
+        assert_eq!(s.mean, 5.0);
+        assert_eq!(s.median, 5.0);
+        assert_eq!(s.std_dev, 0.0);
+        assert_eq!(s.mad, 0.0);
+        assert_eq!(s.trimmed_mean, 5.0);
+    }
+
+    #[test]
+    fn median_odd_even() {
+        let s = Summary::from_samples(&[1.0, 2.0, 3.0]);
+        assert_eq!(s.median, 2.0);
+        let s = Summary::from_samples(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.median, 2.5);
+    }
+
+    #[test]
+    fn trimmed_mean_ignores_outliers() {
+        // 38 well-behaved samples + 2 huge outliers; 5% trim drops exactly
+        // one sample from each end.
+        let mut xs = vec![10.0; 38];
+        xs.push(1e9);
+        xs.push(0.0);
+        let s = Summary::from_samples(&xs);
+        assert_eq!(s.trimmed_mean, 10.0);
+        assert!(s.mean > 10.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert_eq!(percentile_sorted(&xs, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&xs, 50.0), 5.0);
+        assert_eq!(percentile_sorted(&xs, 100.0), 10.0);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5_000_000_000.0).contains(" s"));
+    }
+}

@@ -1,0 +1,460 @@
+//! The region-wise multi-channel pipeline (the paper's §2, Figure 2):
+//!
+//! 1. **Input transform** — walk the regions of the NHWC input, transform
+//!    each `th×tw` tile into the Winograd domain four channels at a time and
+//!    *scatter* the results into the `x²` GEMM A-matrices `[R×C]`.
+//! 2. **GEMM** — `x²` batched products with the pre-transformed weight
+//!    B-matrices `[C×M]` (channel summation of Hadamard products becomes the
+//!    GEMM inner dimension).
+//! 3. **Output transform** — *gather* each region's `x²` values back out of
+//!    the C-matrices `[R×M]`, apply the inverse transform and write the
+//!    spatial output tile.
+//!
+//! The GEMM shape is `[R×C]·[C×M]` (not `[M×C]·[C×R]`) following §2.1.3:
+//! under NHWC the scattered channel vectors land contiguously in the rows of
+//! an `R×C` matrix (plain `STR` stores, no `ST4` interleaving).
+
+use super::{fast, transform::transform_tile_lanes, transform::transform_tile_scalar};
+use super::{WinogradPlan, WinogradVariant};
+use crate::gemm::{BatchedGemm, PackedB};
+use crate::parallel::ThreadPool;
+use crate::simd::F32x4;
+use crate::tensor::Tensor;
+use crate::util::ceil_div;
+use crate::{bail_shape, bail_unsupported, Result};
+
+/// Maximum input-tile edge among shipped variants (F(4,7) ⇒ 10).
+const MAX_T: usize = 10;
+
+/// A Winograd convolution with pre-transformed weights, reusable across
+/// inputs (weights are transformed once per layer, as in the paper — filter
+/// transform cost is off the inference path).
+#[derive(Debug, Clone)]
+pub struct WinogradConvolution {
+    plan: WinogradPlan,
+    cin: usize,
+    cout: usize,
+    pad: (usize, usize),
+    /// Transformed weights `[tile][C][M]` pre-packed into GEMM panel
+    /// layout, one per tile position (EXPERIMENTS.md §Perf step 2: packing
+    /// B per call dominated skinny-R layers; now it happens once here).
+    u_packed: Vec<PackedB>,
+}
+
+impl WinogradConvolution {
+    /// Transform `weights` (`[M, KH, KW, C]`) for `variant` with symmetric
+    /// spatial padding `pad = (ph, pw)`.
+    pub fn new(variant: WinogradVariant, weights: &Tensor, pad: (usize, usize)) -> Result<Self> {
+        if weights.rank() != 4 {
+            bail_shape!("weights must be [M, KH, KW, C], got {:?}", weights.shape());
+        }
+        let (m_out, kh, kw, cin) = (
+            weights.shape()[0],
+            weights.shape()[1],
+            weights.shape()[2],
+            weights.shape()[3],
+        );
+        let plan = WinogradPlan::new(variant);
+        plan.check_kernel(kh, kw)?;
+        let (th, tw) = (plan.h.t, plan.w.t);
+        let tiles = th * tw;
+
+        // U[(i,j)][c][m] = (G_h · g · G_wᵀ)[i][j] for filter (m, c).
+        let mut u = vec![0.0f32; tiles * cin * m_out];
+        let mut g_tile = vec![0.0f32; kh * kw];
+        let mut out = vec![0.0f32; tiles];
+        let mut tmp = vec![0.0f32; th * kw];
+        for m in 0..m_out {
+            for c in 0..cin {
+                for a in 0..kh {
+                    for b in 0..kw {
+                        g_tile[a * kw + b] = weights.at4(m, a, b, c);
+                    }
+                }
+                transform_tile_scalar(&plan.h.g, &plan.w.g, &g_tile, &mut out, &mut tmp);
+                for t in 0..tiles {
+                    u[t * cin * m_out + c * m_out + m] = out[t];
+                }
+            }
+        }
+
+        let u_packed = (0..tiles)
+            .map(|t| PackedB::pack(&u[t * cin * m_out..], m_out, cin, m_out))
+            .collect();
+
+        Ok(WinogradConvolution {
+            plan,
+            cin,
+            cout: m_out,
+            pad,
+            u_packed,
+        })
+    }
+
+    /// The plan in use.
+    pub fn plan(&self) -> &WinogradPlan {
+        &self.plan
+    }
+
+    /// Output channels.
+    pub fn out_channels(&self) -> usize {
+        self.cout
+    }
+
+    /// Output spatial size for an `[N, H, W, C]` input (stride is always 1 —
+    /// the Winograd/Cook-Toom formulation requires it; strided layers fall
+    /// back to im2row in the selector).
+    pub fn output_hw(&self, h: usize, w: usize) -> Result<(usize, usize)> {
+        let (kh, kw) = self.plan.variant.kernel();
+        let (ph, pw) = self.pad;
+        if h + 2 * ph < kh || w + 2 * pw < kw {
+            bail_shape!("input {h}x{w} (pad {ph},{pw}) smaller than filter {kh}x{kw}");
+        }
+        Ok((h + 2 * ph - kh + 1, w + 2 * pw - kw + 1))
+    }
+
+    /// Run the three-stage pipeline. `pool` parallelises regions and GEMMs.
+    pub fn run(&self, input: &Tensor, pool: Option<&ThreadPool>) -> Result<Tensor> {
+        self.run_fused(input, pool, None, false)
+    }
+
+    /// [`run`](Self::run) with a fused epilogue: per-output-channel bias and
+    /// optional ReLU applied inside the output-transform stage, while the
+    /// tile is still in registers — saving one full pass over the output
+    /// tensor (EXPERIMENTS.md §Perf step 6).
+    pub fn run_fused(
+        &self,
+        input: &Tensor,
+        pool: Option<&ThreadPool>,
+        bias: Option<&[f32]>,
+        relu: bool,
+    ) -> Result<Tensor> {
+        if input.rank() != 4 {
+            bail_shape!("input must be [N, H, W, C], got {:?}", input.shape());
+        }
+        let (n, h, w, c) = (
+            input.shape()[0],
+            input.shape()[1],
+            input.shape()[2],
+            input.shape()[3],
+        );
+        if c != self.cin {
+            bail_shape!("input has {c} channels, weights expect {}", self.cin);
+        }
+        if let Some(b) = bias {
+            if b.len() != self.cout {
+                bail_shape!("bias length {} vs {} output channels", b.len(), self.cout);
+            }
+        }
+        let (oh, ow) = self.output_hw(h, w)?;
+        let v = self.plan.variant;
+        let (mh, mw) = v.out_tile();
+        let (th, tw) = v.in_tile();
+        let tiles = th * tw;
+        let (tiles_h, tiles_w) = (ceil_div(oh, mh), ceil_div(ow, mw));
+        let regions = n * tiles_h * tiles_w;
+
+        // Stage 0: pad so every tile is in-bounds (right/bottom rounded up
+        // to the tile grid).
+        let (ph, pw) = self.pad;
+        let need_h = tiles_h * mh + th - mh; // = tiles_h*mh + kh - 1
+        let need_w = tiles_w * mw + tw - mw;
+        let padded = input.pad_spatial(ph, need_h - h - ph, pw, need_w - w - pw);
+
+        // Stage 1: input transform + scatter into A `[tile][R][C]`.
+        let mut a_mat = vec![0.0f32; tiles * regions * c];
+        {
+            let a_addr = a_mat.as_mut_ptr() as usize;
+            let transform_region = |region: usize| {
+                let b = region / (tiles_h * tiles_w);
+                let rem = region % (tiles_h * tiles_w);
+                let (ty, tx) = (rem / tiles_w, rem % tiles_w);
+                let (y0, x0) = (ty * mh, tx * mw);
+                let mut d = [F32x4::zero(); MAX_T * MAX_T];
+                let mut out = [F32x4::zero(); MAX_T * MAX_T];
+                let mut tmp = [F32x4::zero(); MAX_T * MAX_T];
+                for cg in (0..c).step_by(4) {
+                    let lanes = (c - cg).min(4);
+                    // Gather the th×tw tile for this 4-channel group.
+                    for i in 0..th {
+                        for j in 0..tw {
+                            let px = padded.pixel(b, y0 + i, x0 + j);
+                            d[i * tw + j] = if lanes == 4 {
+                                F32x4::load(&px[cg..cg + 4])
+                            } else {
+                                F32x4::load_partial(&px[cg..])
+                            };
+                        }
+                    }
+                    // Transform (fast path when available).
+                    match v {
+                        WinogradVariant::F2x2_3x3 => fast::input_transform_4x4(&d, &mut out),
+                        // F(2,5) shares F(4,3)'s interpolation points, hence
+                        // the identical 6×6 Bᵀ (pinned by a fast.rs test).
+                        WinogradVariant::F4x4_3x3 | WinogradVariant::F2x2_5x5 => {
+                            fast::input_transform_6x6(&d, &mut out)
+                        }
+                        _ => transform_tile_lanes(
+                            &self.plan.h.bt,
+                            &self.plan.w.bt,
+                            &d[..th * tw],
+                            &mut out,
+                            &mut tmp,
+                        ),
+                    }
+                    // Scatter: A[t][region][cg..] — contiguous channel run in
+                    // the row of an R×C matrix (§2.1.3 unstructured stores).
+                    for t in 0..tiles {
+                        // SAFETY: each region writes its own row slice only.
+                        let dst: &mut [f32] = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                (a_addr as *mut f32).add(t * regions * c + region * c + cg),
+                                lanes,
+                            )
+                        };
+                        out[t].store_partial(dst, lanes);
+                    }
+                }
+            };
+            match pool {
+                Some(pool) => pool.parallel_for(regions, transform_region),
+                None => (0..regions).for_each(transform_region),
+            }
+        }
+
+        // Stage 2: x² batched GEMMs — [R×C]·[C×M] per tile position.
+        let bgd = BatchedGemm {
+            batch: tiles,
+            m: regions,
+            k: c,
+            n: self.cout,
+        };
+        let mut c_mat = vec![0.0f32; tiles * regions * self.cout];
+        bgd.run_prepacked(pool, &a_mat, &self.u_packed, &mut c_mat);
+        drop(a_mat);
+
+        // Stage 3: gather + output transform.
+        let mut output = Tensor::zeros(&[n, oh, ow, self.cout]);
+        {
+            let out_addr = output.data_mut().as_mut_ptr() as usize;
+            let m_total = self.cout;
+            let inverse_region = |region: usize| {
+                let b = region / (tiles_h * tiles_w);
+                let rem = region % (tiles_h * tiles_w);
+                let (ty, tx) = (rem / tiles_w, rem % tiles_w);
+                let (y0, x0) = (ty * mh, tx * mw);
+                let valid_h = (oh - y0).min(mh);
+                let valid_w = (ow - x0).min(mw);
+                let mut t_in = [F32x4::zero(); MAX_T * MAX_T];
+                let mut y_out = [F32x4::zero(); MAX_T * MAX_T];
+                let mut tmp = [F32x4::zero(); MAX_T * MAX_T];
+                for mg in (0..m_total).step_by(4) {
+                    let lanes = (m_total - mg).min(4);
+                    // Gather the x² values of this region/channel-group.
+                    for t in 0..tiles {
+                        let src = &c_mat[t * regions * m_total + region * m_total + mg..];
+                        t_in[t] = if lanes == 4 {
+                            F32x4::load(&src[..4])
+                        } else {
+                            F32x4::load_partial(&src[..lanes])
+                        };
+                    }
+                    match v {
+                        WinogradVariant::F2x2_3x3 => fast::output_transform_4x4(&t_in, &mut y_out),
+                        WinogradVariant::F4x4_3x3 => fast::output_transform_6x6(&t_in, &mut y_out),
+                        WinogradVariant::F2x2_5x5 => {
+                            fast::output_transform_6x6_to_2x2(&t_in, &mut y_out)
+                        }
+                        _ => transform_tile_lanes(
+                            &self.plan.h.at,
+                            &self.plan.w.at,
+                            &t_in[..tiles],
+                            &mut y_out,
+                            &mut tmp,
+                        ),
+                    }
+                    // Fused epilogue: bias + ReLU while the tile is hot.
+                    if bias.is_some() || relu {
+                        let bv = match bias {
+                            Some(b) => F32x4::load_partial(&b[mg..mg + lanes]),
+                            None => F32x4::zero(),
+                        };
+                        for yv in y_out[..mh * mw].iter_mut() {
+                            let mut t = *yv + bv;
+                            if relu {
+                                t = t.max(F32x4::zero());
+                            }
+                            *yv = t;
+                        }
+                    }
+                    // Write the valid part of the mh×mw output tile.
+                    for i in 0..valid_h {
+                        for j in 0..valid_w {
+                            let off = (((b * oh + y0 + i) * ow) + x0 + j) * m_total + mg;
+                            // SAFETY: output tiles are disjoint across regions.
+                            let dst: &mut [f32] = unsafe {
+                                std::slice::from_raw_parts_mut(
+                                    (out_addr as *mut f32).add(off),
+                                    lanes,
+                                )
+                            };
+                            y_out[i * mw + j].store_partial(dst, lanes);
+                        }
+                    }
+                }
+            };
+            match pool {
+                Some(pool) => pool.parallel_for(regions, inverse_region),
+                None => (0..regions).for_each(inverse_region),
+            }
+        }
+
+        Ok(output)
+    }
+
+    /// Size of the Winograd-domain workspace in bytes for an input
+    /// `[n, h, w, c]` (A + C matrices) — the number the paper's memory
+    /// budget discussion cares about.
+    pub fn workspace_bytes(&self, n: usize, h: usize, w: usize) -> Result<usize> {
+        let (oh, ow) = self.output_hw(h, w)?;
+        let (mh, mw) = self.plan.variant.out_tile();
+        let regions = n * ceil_div(oh, mh) * ceil_div(ow, mw);
+        let tiles = self.plan.variant.gemm_count();
+        Ok((tiles * regions * (self.cin + self.cout)) * std::mem::size_of::<f32>())
+    }
+}
+
+/// One-shot convenience: transform weights and run a single input.
+pub fn winograd_conv2d(
+    variant: WinogradVariant,
+    input: &Tensor,
+    weights: &Tensor,
+    pad: (usize, usize),
+    pool: Option<&ThreadPool>,
+) -> Result<Tensor> {
+    if input.rank() == 4 && weights.rank() == 4 {
+        // Winograd is a stride-1 algorithm; reject anything else upstream.
+    } else {
+        bail_unsupported!("winograd_conv2d expects rank-4 input and weights");
+    }
+    WinogradConvolution::new(variant, weights, pad)?.run(input, pool)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::direct::direct_conv2d;
+
+    fn check_variant(
+        v: WinogradVariant,
+        n: usize,
+        h: usize,
+        w: usize,
+        c: usize,
+        m: usize,
+        pad: (usize, usize),
+    ) {
+        let (kh, kw) = v.kernel();
+        let input = Tensor::randn(&[n, h, w, c], 42 + h as u64);
+        let weights = Tensor::randn(&[m, kh, kw, c], 7 + c as u64);
+        let got = winograd_conv2d(v, &input, &weights, pad, None).unwrap();
+        let want = direct_conv2d(&input, &weights, (1, 1), pad).unwrap();
+        assert_eq!(got.shape(), want.shape(), "{v}");
+        assert!(
+            got.allclose(&want, 5e-4),
+            "{v} mismatch: rel err {}",
+            crate::util::rel_error(got.data(), want.data())
+        );
+    }
+
+    #[test]
+    fn f2x2_3x3_matches_direct() {
+        check_variant(WinogradVariant::F2x2_3x3, 1, 8, 8, 4, 8, (0, 0));
+        check_variant(WinogradVariant::F2x2_3x3, 2, 9, 11, 3, 5, (1, 1));
+    }
+
+    #[test]
+    fn f4x4_3x3_matches_direct() {
+        check_variant(WinogradVariant::F4x4_3x3, 1, 12, 12, 8, 16, (1, 1));
+        check_variant(WinogradVariant::F4x4_3x3, 1, 7, 13, 5, 3, (0, 0));
+    }
+
+    #[test]
+    fn f6x6_3x3_matches_direct() {
+        check_variant(WinogradVariant::F6x6_3x3, 1, 14, 14, 4, 4, (1, 1));
+    }
+
+    #[test]
+    fn f2x2_5x5_matches_direct() {
+        check_variant(WinogradVariant::F2x2_5x5, 1, 12, 12, 4, 6, (2, 2));
+        check_variant(WinogradVariant::F2x2_5x5, 1, 9, 9, 3, 4, (0, 0));
+    }
+
+    #[test]
+    fn f4x4_5x5_matches_direct() {
+        check_variant(WinogradVariant::F4x4_5x5, 1, 13, 13, 3, 4, (2, 2));
+    }
+
+    #[test]
+    fn one_d_variants_match_direct() {
+        check_variant(WinogradVariant::F2_1x7, 1, 6, 17, 4, 6, (0, 3));
+        check_variant(WinogradVariant::F2_7x1, 1, 17, 6, 4, 6, (3, 0));
+        check_variant(WinogradVariant::F4_1x7, 1, 6, 19, 4, 6, (0, 3));
+        check_variant(WinogradVariant::F4_7x1, 1, 19, 6, 4, 6, (3, 0));
+        check_variant(WinogradVariant::F4_1x3, 1, 5, 15, 3, 4, (0, 1));
+        check_variant(WinogradVariant::F4_3x1, 1, 15, 5, 3, 4, (1, 0));
+    }
+
+    #[test]
+    fn ragged_output_tiles() {
+        // Output sizes that don't divide the tile: exercises gather clipping.
+        check_variant(WinogradVariant::F4x4_3x3, 1, 9, 10, 3, 5, (1, 1));
+        check_variant(WinogradVariant::F2x2_3x3, 1, 6, 5, 2, 3, (0, 0));
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let pool = ThreadPool::new(4);
+        let v = WinogradVariant::F4x4_3x3;
+        let input = Tensor::randn(&[1, 20, 20, 16], 1);
+        let weights = Tensor::randn(&[32, 3, 3, 16], 2);
+        let serial = winograd_conv2d(v, &input, &weights, (1, 1), None).unwrap();
+        let parallel = winograd_conv2d(v, &input, &weights, (1, 1), Some(&pool)).unwrap();
+        assert!(parallel.allclose(&serial, 1e-5));
+    }
+
+    #[test]
+    fn reusable_transformed_weights() {
+        let weights = Tensor::randn(&[8, 3, 3, 4], 3);
+        let conv = WinogradConvolution::new(WinogradVariant::F2x2_3x3, &weights, (1, 1)).unwrap();
+        for seed in [10, 20] {
+            let input = Tensor::randn(&[1, 8, 8, 4], seed);
+            let got = conv.run(&input, None).unwrap();
+            let want = direct_conv2d(&input, &weights, (1, 1), (1, 1)).unwrap();
+            assert!(got.allclose(&want, 5e-4));
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_kernel_shape() {
+        let weights = Tensor::randn(&[8, 5, 5, 4], 3);
+        assert!(WinogradConvolution::new(WinogradVariant::F2x2_3x3, &weights, (0, 0)).is_err());
+    }
+
+    #[test]
+    fn rejects_channel_mismatch() {
+        let weights = Tensor::randn(&[8, 3, 3, 4], 3);
+        let conv = WinogradConvolution::new(WinogradVariant::F2x2_3x3, &weights, (0, 0)).unwrap();
+        let input = Tensor::randn(&[1, 8, 8, 5], 1);
+        assert!(conv.run(&input, None).is_err());
+    }
+
+    #[test]
+    fn workspace_accounting() {
+        let weights = Tensor::randn(&[16, 3, 3, 8], 3);
+        let conv = WinogradConvolution::new(WinogradVariant::F2x2_3x3, &weights, (1, 1)).unwrap();
+        // 8×8 input, pad 1 ⇒ 8×8 output ⇒ 4×4 regions = 16; 16 tiles.
+        let ws = conv.workspace_bytes(1, 8, 8).unwrap();
+        assert_eq!(ws, 16 * 16 * (8 + 16) * 4);
+    }
+}

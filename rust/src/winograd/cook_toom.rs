@@ -1,0 +1,324 @@
+//! Cook-Toom / Winograd minimal-filtering matrix construction over exact
+//! rationals.
+//!
+//! For `F(m, r)` (m outputs, r-tap filter, n = m+r-1 multiplications) with
+//! distinct finite interpolation points `α_0 … α_{n-2}` plus the implicit
+//! point at infinity, the matrices are:
+//!
+//! * `G  (n×r)` — filter transform. Row `i ≤ n-2`: `α_i^j / N_i` with
+//!   `N_i = Π_{k≠i}(α_i − α_k)`; last row `e_{r-1}`.
+//! * `Bᵀ (n×n)` — input transform. Row `i ≤ n-2`: coefficients of
+//!   `N_i(x) = Π_{k≠i}(x − α_k)`; last row: coefficients of
+//!   `M(x) = Π_k (x − α_k)`.
+//! * `Aᵀ (m×n)` — output transform. Column `k ≤ n-2`: `α_k^i`; last column
+//!   `e_{m-1}`.
+//!
+//! Correctness is equivalent to the tensor identity
+//! `Σ_k Aᵀ[i][k]·G[k][j]·Bᵀ[k][l] = δ_{l,i+j}` which [`verify_identity`]
+//! checks **exactly** (no floating point) — the unit tests run it for every
+//! variant the engine ships.
+
+use crate::util::Fraction;
+
+/// A dense matrix of exact rationals.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FracMatrix {
+    /// Row count.
+    pub rows: usize,
+    /// Column count.
+    pub cols: usize,
+    /// Row-major entries.
+    pub data: Vec<Fraction>,
+}
+
+impl FracMatrix {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> FracMatrix {
+        FracMatrix {
+            rows,
+            cols,
+            data: vec![Fraction::ZERO; rows * cols],
+        }
+    }
+
+    /// Entry accessor.
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> Fraction {
+        self.data[i * self.cols + j]
+    }
+
+    /// Mutable entry accessor.
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut Fraction {
+        &mut self.data[i * self.cols + j]
+    }
+
+    /// Convert to a flat row-major `f32` buffer.
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|f| f.to_f32()).collect()
+    }
+}
+
+/// The three transform matrices of a 1-D `F(m, r)` algorithm.
+#[derive(Debug, Clone)]
+pub struct CookToom {
+    /// Output count `m`.
+    pub m: usize,
+    /// Filter taps `r`.
+    pub r: usize,
+    /// Multiplication count `n = m + r - 1`.
+    pub n: usize,
+    /// Input transform `Bᵀ (n×n)`.
+    pub bt: FracMatrix,
+    /// Filter transform `G (n×r)`.
+    pub g: FracMatrix,
+    /// Output transform `Aᵀ (m×n)`.
+    pub at: FracMatrix,
+}
+
+/// The canonical interpolation-point sequence. Small values and reciprocal
+/// pairs keep both the transform-matrix magnitudes and the floating-point
+/// error growth low (the same points wincnn and Lavin use).
+pub fn default_points(count: usize) -> Vec<Fraction> {
+    let seq: Vec<Fraction> = vec![
+        Fraction::int(0),
+        Fraction::int(1),
+        Fraction::int(-1),
+        Fraction::int(2),
+        Fraction::int(-2),
+        Fraction::new(1, 2),
+        Fraction::new(-1, 2),
+        Fraction::int(3),
+        Fraction::int(-3),
+        Fraction::new(1, 3),
+        Fraction::new(-1, 3),
+        Fraction::int(4),
+        Fraction::int(-4),
+        Fraction::new(1, 4),
+        Fraction::new(-1, 4),
+    ];
+    assert!(count <= seq.len(), "point sequence exhausted: need {count}");
+    seq[..count].to_vec()
+}
+
+/// Construct `F(m, r)` with the default point sequence.
+pub fn cook_toom(m: usize, r: usize) -> CookToom {
+    let n = m + r - 1;
+    cook_toom_with_points(m, r, &default_points(n - 1))
+}
+
+/// Construct `F(m, r)` from explicit finite points (∞ is implicit).
+pub fn cook_toom_with_points(m: usize, r: usize, points: &[Fraction]) -> CookToom {
+    assert!(m >= 1 && r >= 1, "F(m,r) needs m,r >= 1");
+    let n = m + r - 1;
+    assert_eq!(points.len(), n - 1, "need n-1 = {} finite points", n - 1);
+    // Points must be distinct.
+    for i in 0..points.len() {
+        for j in 0..i {
+            assert!(points[i] != points[j], "duplicate interpolation point {}", points[i]);
+        }
+    }
+
+    // Aᵀ (m×n): Vandermonde columns plus the ∞ column e_{m-1}.
+    let mut at = FracMatrix::zeros(m, n);
+    for (k, &alpha) in points.iter().enumerate() {
+        let mut p = Fraction::ONE;
+        for i in 0..m {
+            *at.at_mut(i, k) = p;
+            p = p * alpha;
+        }
+    }
+    *at.at_mut(m - 1, n - 1) = Fraction::ONE;
+
+    // G (n×r): scaled Vandermonde rows plus the ∞ row e_{r-1}.
+    let mut g = FracMatrix::zeros(n, r);
+    for (i, &alpha) in points.iter().enumerate() {
+        let mut norm = Fraction::ONE; // N_i = Π_{k≠i}(α_i - α_k)
+        for (k, &beta) in points.iter().enumerate() {
+            if k != i {
+                norm = norm * (alpha - beta);
+            }
+        }
+        let inv = norm.recip();
+        let mut p = Fraction::ONE;
+        for j in 0..r {
+            *g.at_mut(i, j) = p * inv;
+            p = p * alpha;
+        }
+    }
+    *g.at_mut(n - 1, r - 1) = Fraction::ONE;
+
+    // Bᵀ (n×n): rows are the coefficient vectors of N_i(x), last row M(x).
+    let mut bt = FracMatrix::zeros(n, n);
+    for i in 0..n - 1 {
+        let omit: Vec<Fraction> = points
+            .iter()
+            .enumerate()
+            .filter(|(k, _)| *k != i)
+            .map(|(_, &a)| a)
+            .collect();
+        let coeffs = poly_from_roots(&omit); // degree n-2 ⇒ n-1 coefficients
+        for (l, &c) in coeffs.iter().enumerate() {
+            *bt.at_mut(i, l) = c;
+        }
+    }
+    let m_coeffs = poly_from_roots(points); // degree n-1 ⇒ n coefficients
+    for (l, &c) in m_coeffs.iter().enumerate() {
+        *bt.at_mut(n - 1, l) = c;
+    }
+
+    CookToom { m, r, n, bt, g, at }
+}
+
+/// Coefficients (ascending powers) of `Π (x - root_i)`.
+fn poly_from_roots(roots: &[Fraction]) -> Vec<Fraction> {
+    let mut coeffs = vec![Fraction::ONE]; // the constant polynomial 1
+    for &root in roots {
+        // multiply by (x - root)
+        let mut next = vec![Fraction::ZERO; coeffs.len() + 1];
+        for (p, &c) in coeffs.iter().enumerate() {
+            next[p + 1] = next[p + 1] + c; // c·x^{p+1}
+            next[p] = next[p] - c * root; // -root·c·x^p
+        }
+        coeffs = next;
+    }
+    coeffs
+}
+
+/// Exactly verify the minimal-filtering identity
+/// `Σ_k Aᵀ[i][k] · G[k][j] · Bᵀ[k][l] = δ_{l, i+j}` for all `i<m, j<r, l<n`.
+pub fn verify_identity(ct: &CookToom) -> bool {
+    for i in 0..ct.m {
+        for j in 0..ct.r {
+            for l in 0..ct.n {
+                let mut s = Fraction::ZERO;
+                for k in 0..ct.n {
+                    s = s + ct.at.at(i, k) * ct.g.at(k, j) * ct.bt.at(k, l);
+                }
+                let expect = if l == i + j { Fraction::ONE } else { Fraction::ZERO };
+                if s != expect {
+                    return false;
+                }
+            }
+        }
+    }
+    true
+}
+
+impl CookToom {
+    /// Multiplication saving of the algorithm vs direct: `m·r / n`.
+    pub fn theoretical_speedup(&self) -> f64 {
+        (self.m * self.r) as f64 / self.n as f64
+    }
+
+    /// Apply the algorithm to concrete `f32` data (reference path, used by
+    /// tests and the generic pipeline): `y = Aᵀ[(G·g) ⊙ (Bᵀ·d)]`.
+    pub fn apply_1d(&self, g_taps: &[f32], d: &[f32]) -> Vec<f32> {
+        assert_eq!(g_taps.len(), self.r);
+        assert_eq!(d.len(), self.n);
+        let gm = self.g.to_f32();
+        let btm = self.bt.to_f32();
+        let atm = self.at.to_f32();
+        // U = G·g  (n)
+        let u: Vec<f32> = (0..self.n)
+            .map(|i| (0..self.r).map(|j| gm[i * self.r + j] * g_taps[j]).sum())
+            .collect();
+        // V = Bᵀ·d (n)
+        let v: Vec<f32> = (0..self.n)
+            .map(|i| (0..self.n).map(|j| btm[i * self.n + j] * d[j]).sum())
+            .collect();
+        // y = Aᵀ·(U ⊙ V) (m)
+        (0..self.m)
+            .map(|i| {
+                (0..self.n)
+                    .map(|k| atm[i * self.n + k] * u[k] * v[k])
+                    .sum()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Direct valid correlation: y[i] = Σ_j g[j]·d[i+j].
+    fn direct_correlation(g: &[f32], d: &[f32]) -> Vec<f32> {
+        let m = d.len() - g.len() + 1;
+        (0..m)
+            .map(|i| g.iter().enumerate().map(|(j, &gj)| gj * d[i + j]).sum())
+            .collect()
+    }
+
+    #[test]
+    fn identity_holds_for_all_shipped_variants() {
+        for (m, r) in [(2, 3), (4, 3), (2, 5), (2, 7), (6, 3), (4, 5)] {
+            let ct = cook_toom(m, r);
+            assert!(verify_identity(&ct), "identity failed for F({m},{r})");
+        }
+    }
+
+    #[test]
+    fn f2_3_matches_direct() {
+        let ct = cook_toom(2, 3);
+        assert_eq!(ct.n, 4);
+        let g = [1.0, -2.0, 3.0];
+        let d = [4.0, -1.0, 0.5, 2.0];
+        let y = ct.apply_1d(&g, &d);
+        let want = direct_correlation(&g, &d);
+        for (a, b) in y.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5, "{y:?} vs {want:?}");
+        }
+    }
+
+    #[test]
+    fn larger_variants_match_direct() {
+        for (m, r) in [(4, 3), (2, 5), (2, 7), (6, 3)] {
+            let ct = cook_toom(m, r);
+            let mut rng = crate::util::XorShiftRng::new((m * 100 + r) as u64);
+            let mut g = vec![0.0; r];
+            let mut d = vec![0.0; ct.n];
+            rng.fill_normal(&mut g);
+            rng.fill_normal(&mut d);
+            let y = ct.apply_1d(&g, &d);
+            let want = direct_correlation(&g, &d);
+            for (a, b) in y.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-3, "F({m},{r}): {y:?} vs {want:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn theoretical_speedups_match_paper_claims() {
+        // F(2,3): 6/4 = 1.5 per dim ⇒ 2.25× in 2D; F(4,3): 12/6 = 2 ⇒ 4×.
+        assert!((cook_toom(2, 3).theoretical_speedup() - 1.5).abs() < 1e-9);
+        assert!((cook_toom(4, 3).theoretical_speedup() - 2.0).abs() < 1e-9);
+        // F(2,5): 10/6 ≈ 1.67 per dim ⇒ 2.78× in 2D.
+        assert!((cook_toom(2, 5).theoretical_speedup() - 10.0 / 6.0).abs() < 1e-9);
+        // F(2,7): 14/8 = 1.75 (1-D layers: paper measures ~2.0 incl. GEMM reuse).
+        assert!((cook_toom(2, 7).theoretical_speedup() - 1.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn poly_from_roots_expands() {
+        // (x-1)(x+1) = x² - 1
+        let c = poly_from_roots(&[Fraction::int(1), Fraction::int(-1)]);
+        assert_eq!(c, vec![Fraction::int(-1), Fraction::ZERO, Fraction::ONE]);
+        // empty product = 1
+        assert_eq!(poly_from_roots(&[]), vec![Fraction::ONE]);
+    }
+
+    #[test]
+    fn rejects_duplicate_points() {
+        let pts = [Fraction::int(0), Fraction::int(1), Fraction::int(1)];
+        let r = std::panic::catch_unwind(|| cook_toom_with_points(2, 3, &pts));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn identity_fails_for_corrupted_matrix() {
+        let mut ct = cook_toom(2, 3);
+        *ct.bt.at_mut(0, 0) = Fraction::int(7);
+        assert!(!verify_identity(&ct));
+    }
+}

@@ -1,0 +1,298 @@
+//! Hand-unrolled transform kernels for the hottest variants — the analog of
+//! the paper's hand-written NEON sequences (Listing 2), operating on four
+//! channels per vector under NHWC.
+//!
+//! These implement **exactly** the matrices produced by
+//! [`super::cook_toom`] for the default point set (the unit tests pin them
+//! against the generic path), so fast and generic paths are interchangeable
+//! inside one convolution.
+//!
+//! `F(2×2, 3×3)` 1-D building blocks (points 0, 1, −1):
+//! ```text
+//! Bᵀd: v0 = d2−d0   v1 = d1+d2   v2 = d2−d1   v3 = d3−d1
+//! Aᵀm: y0 = m0+m1+m2             y1 = m1−m2+m3
+//! ```
+//! `F(4×4, 3×3)` (points 0, 1, −1, 2, −2) matches Lavin's published
+//! matrices exactly.
+
+use crate::simd::F32x4;
+
+// ---------------------------------------------------------------- F(2x2,3x3)
+
+/// 1-D input transform of `F(2,3)`: 4 values → 4 values.
+#[inline(always)]
+fn bt4(d: [F32x4; 4]) -> [F32x4; 4] {
+    [
+        d[2] - d[0], // v0 = d2 − d0
+        d[1] + d[2], // v1 = d1 + d2
+        d[2] - d[1], // v2 = d2 − d1
+        d[3] - d[1], // v3 = d3 − d1
+    ]
+}
+
+/// 1-D output transform of `F(2,3)`: 4 products → 2 outputs.
+#[inline(always)]
+fn at4(m: [F32x4; 4]) -> [F32x4; 2] {
+    [
+        m[0] + m[1] + m[2], // y0
+        m[1] - m[2] + m[3], // y1
+    ]
+}
+
+/// 2-D input transform for `F(2×2, 3×3)`: `V = Bᵀ d B` over a 4×4 tile of
+/// channel vectors (row-major `d[i*4+j]`).
+pub fn input_transform_4x4(d: &[F32x4], out: &mut [F32x4]) {
+    debug_assert!(d.len() >= 16 && out.len() >= 16);
+    // Rows: tmp[i][j] = Σ_a Bᵀ[i][a] d[a][j]  — column-wise over j.
+    let mut tmp = [F32x4::zero(); 16];
+    for j in 0..4 {
+        let col = bt4([d[j], d[4 + j], d[8 + j], d[12 + j]]);
+        tmp[j] = col[0];
+        tmp[4 + j] = col[1];
+        tmp[8 + j] = col[2];
+        tmp[12 + j] = col[3];
+    }
+    // Columns: out[i][j] = Σ_b tmp[i][b] Bᵀ[j][b] — row-wise over i.
+    for i in 0..4 {
+        let row = bt4([tmp[i * 4], tmp[i * 4 + 1], tmp[i * 4 + 2], tmp[i * 4 + 3]]);
+        out[i * 4] = row[0];
+        out[i * 4 + 1] = row[1];
+        out[i * 4 + 2] = row[2];
+        out[i * 4 + 3] = row[3];
+    }
+}
+
+/// 2-D output transform for `F(2×2, 3×3)`: `Y = Aᵀ t A` over a 4×4 tile.
+pub fn output_transform_4x4(t: &[F32x4], out: &mut [F32x4]) {
+    debug_assert!(t.len() >= 16 && out.len() >= 4);
+    let mut tmp = [F32x4::zero(); 8]; // 2×4
+    for j in 0..4 {
+        let col = at4([t[j], t[4 + j], t[8 + j], t[12 + j]]);
+        tmp[j] = col[0];
+        tmp[4 + j] = col[1];
+    }
+    for i in 0..2 {
+        let row = at4([tmp[i * 4], tmp[i * 4 + 1], tmp[i * 4 + 2], tmp[i * 4 + 3]]);
+        out[i * 2] = row[0];
+        out[i * 2 + 1] = row[1];
+    }
+}
+
+// ---------------------------------------------------------------- F(4x4,3x3)
+
+/// 1-D input transform of `F(4,3)`: 6 values → 6 values (Lavin Bᵀ).
+#[inline(always)]
+fn bt6(d: [F32x4; 6]) -> [F32x4; 6] {
+    let d4_sub_d2 = d[4] - d[2];
+    let d3_sub_d1 = d[3] - d[1];
+    [
+        // v0 = 4d0 − 5d2 + d4
+        d[4].fma_scalar(d[0], 4.0).fma_scalar(d[2], -5.0),
+        // v1 = (d3 + d4) − 4(d1 + d2)
+        (d[3] + d[4]).fma_scalar(d[1] + d[2], -4.0),
+        // v2 = (d4 − d3) + 4(d1 − d2)
+        (d[4] - d[3]).fma_scalar(d[1] - d[2], 4.0),
+        // v3 = (d4 − d2) + 2(d3 − d1)
+        d4_sub_d2.fma_scalar(d3_sub_d1, 2.0),
+        // v4 = (d4 − d2) − 2(d3 − d1)
+        d4_sub_d2.fma_scalar(d3_sub_d1, -2.0),
+        // v5 = 4d1 − 5d3 + d5
+        d[5].fma_scalar(d[1], 4.0).fma_scalar(d[3], -5.0),
+    ]
+}
+
+/// 1-D output transform of `F(4,3)`: 6 products → 4 outputs (Lavin Aᵀ).
+#[inline(always)]
+fn at6(m: [F32x4; 6]) -> [F32x4; 4] {
+    let s12 = m[1] + m[2]; // m1 + m2
+    let d12 = m[1] - m[2]; // m1 − m2
+    let s34 = m[3] + m[4]; // m3 + m4
+    let d34 = m[3] - m[4]; // m3 − m4
+    [
+        m[0] + s12 + s34,                  // y0 = m0 + Σ
+        d12.fma_scalar(d34, 2.0),          // y1 = d12 + 2·d34
+        s12.fma_scalar(s34, 4.0),          // y2 = s12 + 4·s34
+        (d12 + m[5]).fma_scalar(d34, 8.0), // y3 = d12 + 8·d34 + m5
+    ]
+}
+
+/// 2-D input transform for `F(4×4, 3×3)`: 6×6 tile → 6×6.
+pub fn input_transform_6x6(d: &[F32x4], out: &mut [F32x4]) {
+    debug_assert!(d.len() >= 36 && out.len() >= 36);
+    let mut tmp = [F32x4::zero(); 36];
+    for j in 0..6 {
+        let col = bt6([d[j], d[6 + j], d[12 + j], d[18 + j], d[24 + j], d[30 + j]]);
+        for (i, v) in col.into_iter().enumerate() {
+            tmp[i * 6 + j] = v;
+        }
+    }
+    for i in 0..6 {
+        let row = bt6([
+            tmp[i * 6],
+            tmp[i * 6 + 1],
+            tmp[i * 6 + 2],
+            tmp[i * 6 + 3],
+            tmp[i * 6 + 4],
+            tmp[i * 6 + 5],
+        ]);
+        for (j, v) in row.into_iter().enumerate() {
+            out[i * 6 + j] = v;
+        }
+    }
+}
+
+/// 2-D output transform for `F(4×4, 3×3)`: 6×6 products → 4×4 outputs.
+pub fn output_transform_6x6(t: &[F32x4], out: &mut [F32x4]) {
+    debug_assert!(t.len() >= 36 && out.len() >= 16);
+    let mut tmp = [F32x4::zero(); 24]; // 4×6
+    for j in 0..6 {
+        let col = at6([t[j], t[6 + j], t[12 + j], t[18 + j], t[24 + j], t[30 + j]]);
+        for (i, v) in col.into_iter().enumerate() {
+            tmp[i * 6 + j] = v;
+        }
+    }
+    for i in 0..4 {
+        let row = at6([
+            tmp[i * 6],
+            tmp[i * 6 + 1],
+            tmp[i * 6 + 2],
+            tmp[i * 6 + 3],
+            tmp[i * 6 + 4],
+            tmp[i * 6 + 5],
+        ]);
+        for (j, v) in row.into_iter().enumerate() {
+            out[i * 4 + j] = v;
+        }
+    }
+}
+
+// ---------------------------------------------------------------- F(2x2,5x5)
+//
+// F(2,5) uses the same six interpolation points as F(4,3), so its Bᵀ — and
+// therefore the 6×6 input transform — is *identical* to [`bt6`]; only the
+// output transform differs (Aᵀ is 2×6).
+
+/// 1-D output transform of `F(2,5)`: 6 products → 2 outputs.
+/// Aᵀ rows: `[1,1,1,1,1,0]`, `[0,1,−1,2,−2,1]`.
+#[inline(always)]
+fn at2_6(m: [F32x4; 6]) -> [F32x4; 2] {
+    [
+        m[0] + m[1] + m[2] + m[3] + m[4],
+        (m[1] - m[2] + m[5]).fma_scalar(m[3] - m[4], 2.0),
+    ]
+}
+
+/// 2-D output transform for `F(2×2, 5×5)`: 6×6 products → 2×2 outputs.
+pub fn output_transform_6x6_to_2x2(t: &[F32x4], out: &mut [F32x4]) {
+    debug_assert!(t.len() >= 36 && out.len() >= 4);
+    let mut tmp = [F32x4::zero(); 12]; // 2×6
+    for j in 0..6 {
+        let col = at2_6([t[j], t[6 + j], t[12 + j], t[18 + j], t[24 + j], t[30 + j]]);
+        tmp[j] = col[0];
+        tmp[6 + j] = col[1];
+    }
+    for i in 0..2 {
+        let row = at2_6([
+            tmp[i * 6],
+            tmp[i * 6 + 1],
+            tmp[i * 6 + 2],
+            tmp[i * 6 + 3],
+            tmp[i * 6 + 4],
+            tmp[i * 6 + 5],
+        ]);
+        out[i * 2] = row[0];
+        out[i * 2 + 1] = row[1];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::winograd::transform::transform_tile_lanes;
+    use crate::winograd::{WinogradPlan, WinogradVariant};
+
+    fn random_lanes(n: usize, seed: u64) -> Vec<F32x4> {
+        let mut rng = crate::util::XorShiftRng::new(seed);
+        (0..n)
+            .map(|_| F32x4([rng.normal(), rng.normal(), rng.normal(), rng.normal()]))
+            .collect()
+    }
+
+    fn assert_lanes_close(a: &[F32x4], b: &[F32x4], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            for l in 0..4 {
+                assert!(
+                    (x.0[l] - y.0[l]).abs() < tol,
+                    "elem {i} lane {l}: {} vs {}",
+                    x.0[l],
+                    y.0[l]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn input_4x4_matches_generic() {
+        let plan = WinogradPlan::new(WinogradVariant::F2x2_3x3);
+        let d = random_lanes(16, 1);
+        let mut fast = vec![F32x4::zero(); 16];
+        input_transform_4x4(&d, &mut fast);
+        let mut generic = vec![F32x4::zero(); 16];
+        let mut tmp = vec![F32x4::zero(); 16];
+        transform_tile_lanes(&plan.h.bt, &plan.w.bt, &d, &mut generic, &mut tmp);
+        assert_lanes_close(&fast, &generic, 1e-4);
+    }
+
+    #[test]
+    fn output_4x4_matches_generic() {
+        let plan = WinogradPlan::new(WinogradVariant::F2x2_3x3);
+        let t = random_lanes(16, 2);
+        let mut fast = vec![F32x4::zero(); 4];
+        output_transform_4x4(&t, &mut fast);
+        let mut generic = vec![F32x4::zero(); 4];
+        let mut tmp = vec![F32x4::zero(); 8];
+        transform_tile_lanes(&plan.h.at, &plan.w.at, &t, &mut generic, &mut tmp);
+        assert_lanes_close(&fast, &generic, 1e-4);
+    }
+
+    #[test]
+    fn input_6x6_matches_generic() {
+        let plan = WinogradPlan::new(WinogradVariant::F4x4_3x3);
+        let d = random_lanes(36, 3);
+        let mut fast = vec![F32x4::zero(); 36];
+        input_transform_6x6(&d, &mut fast);
+        let mut generic = vec![F32x4::zero(); 36];
+        let mut tmp = vec![F32x4::zero(); 36];
+        transform_tile_lanes(&plan.h.bt, &plan.w.bt, &d, &mut generic, &mut tmp);
+        assert_lanes_close(&fast, &generic, 1e-3);
+    }
+
+    #[test]
+    fn f2x2_5x5_shares_bt6_and_output_matches_generic() {
+        // Input transform: the F(2×2,5×5) plan's Bᵀ must equal F(4×4,3×3)'s.
+        let p33 = WinogradPlan::new(WinogradVariant::F4x4_3x3);
+        let p55 = WinogradPlan::new(WinogradVariant::F2x2_5x5);
+        assert_eq!(p33.h.bt, p55.h.bt, "same points ⇒ same Bᵀ");
+        // Output transform: fast path vs generic.
+        let t = random_lanes(36, 9);
+        let mut fast = vec![F32x4::zero(); 4];
+        output_transform_6x6_to_2x2(&t, &mut fast);
+        let mut generic = vec![F32x4::zero(); 4];
+        let mut tmp = vec![F32x4::zero(); 12];
+        transform_tile_lanes(&p55.h.at, &p55.w.at, &t, &mut generic, &mut tmp);
+        assert_lanes_close(&fast, &generic, 1e-3);
+    }
+
+    #[test]
+    fn output_6x6_matches_generic() {
+        let plan = WinogradPlan::new(WinogradVariant::F4x4_3x3);
+        let t = random_lanes(36, 4);
+        let mut fast = vec![F32x4::zero(); 16];
+        output_transform_6x6(&t, &mut fast);
+        let mut generic = vec![F32x4::zero(); 16];
+        let mut tmp = vec![F32x4::zero(); 24];
+        transform_tile_lanes(&plan.h.at, &plan.w.at, &t, &mut generic, &mut tmp);
+        assert_lanes_close(&fast, &generic, 1e-3);
+    }
+}

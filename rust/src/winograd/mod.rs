@@ -1,0 +1,344 @@
+//! The paper's contribution: region-wise multi-channel Winograd / Cook-Toom
+//! convolution.
+//!
+//! * [`cook_toom`] — exact construction of the `Bᵀ/G/Aᵀ` transform matrices
+//!   for any `F(m, r)`, verified against the minimal-filtering identity.
+//! * [`transform`] — channel-lane (SIMD) tile transforms: the NHWC
+//!   formulation of the paper's Listing 2, generic over the variant.
+//! * [`fast`] — hard-coded add/sub transform kernels for the hottest
+//!   variants, exactly like the paper's hand-written NEON sequences.
+//! * [`convolve`] — the three-step pipeline: input transform (*scatter*) →
+//!   `x²` batched GEMMs → output transform (*gather*).
+//!
+//! Variant naming follows the paper's `F(z×z, w×w, x×x)`: output tile,
+//! filter, input tile.
+
+pub mod cook_toom;
+pub mod transform;
+pub mod fast;
+pub mod convolve;
+
+pub use convolve::{winograd_conv2d, WinogradConvolution};
+pub use cook_toom::{cook_toom, CookToom};
+
+use crate::{bail_unsupported, Result};
+
+/// A dense row-major `f32` matrix (transform matrices are tiny: ≤ 8×8).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatF {
+    /// Row count.
+    pub rows: usize,
+    /// Column count.
+    pub cols: usize,
+    /// Row-major entries.
+    pub data: Vec<f32>,
+}
+
+impl MatF {
+    /// Build from rows×cols and flat data.
+    pub fn new(rows: usize, cols: usize, data: Vec<f32>) -> MatF {
+        assert_eq!(data.len(), rows * cols);
+        MatF { rows, cols, data }
+    }
+
+    /// The 1×1 identity (used for the passive axis of 1-D variants).
+    pub fn identity1() -> MatF {
+        MatF::new(1, 1, vec![1.0])
+    }
+
+    /// Entry accessor.
+    #[inline(always)]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+}
+
+/// The shipped algorithm variants (the paper implements five; the `F6x6_3x3`
+/// and 1-D 3-tap variants are the paper's natural extensions and feed the
+/// ablation benches).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WinogradVariant {
+    /// `F(2×2, 3×3, 4×4)` — 16 GEMMs, 2.25× theoretical multiply saving.
+    F2x2_3x3,
+    /// `F(4×4, 3×3, 6×6)` — 36 GEMMs, 4× theoretical.
+    F4x4_3x3,
+    /// `F(6×6, 3×3, 8×8)` — 64 GEMMs, 5.06× theoretical (extension).
+    F6x6_3x3,
+    /// `F(2×2, 5×5, 6×6)` — 36 GEMMs, 2.78× theoretical.
+    F2x2_5x5,
+    /// `F(4×4, 5×5, 8×8)` — 64 GEMMs, 6.25× theoretical (extension).
+    F4x4_5x5,
+    /// 1-D Cook-Toom `F(2, 7)` on a `1×7` filter (Inception-v3 rows).
+    F2_1x7,
+    /// 1-D Cook-Toom `F(4, 7)` on a `1×7` filter — 10 points, 2.8×
+    /// theoretical; the default for 1×7 since EXPERIMENTS.md §Perf step 5.
+    F4_1x7,
+    /// 1-D Cook-Toom `F(4, 7)` on a `7×1` filter.
+    F4_7x1,
+    /// 1-D Cook-Toom `F(2, 7)` on a `7×1` filter (Inception-v3 columns).
+    F2_7x1,
+    /// 1-D Cook-Toom `F(4, 3)` on a `1×3` filter (extension).
+    F4_1x3,
+    /// 1-D Cook-Toom `F(4, 3)` on a `3×1` filter (extension).
+    F4_3x1,
+}
+
+impl WinogradVariant {
+    /// Every shipped variant (ablation sweeps iterate this).
+    pub const ALL: [WinogradVariant; 11] = [
+        WinogradVariant::F2x2_3x3,
+        WinogradVariant::F4x4_3x3,
+        WinogradVariant::F6x6_3x3,
+        WinogradVariant::F2x2_5x5,
+        WinogradVariant::F4x4_5x5,
+        WinogradVariant::F2_1x7,
+        WinogradVariant::F4_1x7,
+        WinogradVariant::F4_7x1,
+        WinogradVariant::F2_7x1,
+        WinogradVariant::F4_1x3,
+        WinogradVariant::F4_3x1,
+    ];
+
+    /// `(kh, kw)` of the filter this variant accepts.
+    pub fn kernel(&self) -> (usize, usize) {
+        match self {
+            WinogradVariant::F2x2_3x3 | WinogradVariant::F4x4_3x3 | WinogradVariant::F6x6_3x3 => (3, 3),
+            WinogradVariant::F2x2_5x5 | WinogradVariant::F4x4_5x5 => (5, 5),
+            WinogradVariant::F2_1x7 | WinogradVariant::F4_1x7 => (1, 7),
+            WinogradVariant::F2_7x1 | WinogradVariant::F4_7x1 => (7, 1),
+            WinogradVariant::F4_1x3 => (1, 3),
+            WinogradVariant::F4_3x1 => (3, 1),
+        }
+    }
+
+    /// `(mh, mw)` output-tile shape.
+    pub fn out_tile(&self) -> (usize, usize) {
+        match self {
+            WinogradVariant::F2x2_3x3 | WinogradVariant::F2x2_5x5 => (2, 2),
+            WinogradVariant::F4x4_3x3 | WinogradVariant::F4x4_5x5 => (4, 4),
+            WinogradVariant::F6x6_3x3 => (6, 6),
+            WinogradVariant::F2_1x7 => (1, 2),
+            WinogradVariant::F4_1x7 => (1, 4),
+            WinogradVariant::F2_7x1 => (2, 1),
+            WinogradVariant::F4_7x1 => (4, 1),
+            WinogradVariant::F4_1x3 => (1, 4),
+            WinogradVariant::F4_3x1 => (4, 1),
+        }
+    }
+
+    /// `(th, tw)` input-tile shape (`t = m + r - 1` per active axis).
+    pub fn in_tile(&self) -> (usize, usize) {
+        let (kh, kw) = self.kernel();
+        let (mh, mw) = self.out_tile();
+        (mh + kh - 1, mw + kw - 1)
+    }
+
+    /// Number of GEMMs (`th·tw`) in the batched stage.
+    pub fn gemm_count(&self) -> usize {
+        let (th, tw) = self.in_tile();
+        th * tw
+    }
+
+    /// Theoretical multiply-reduction vs direct convolution.
+    pub fn theoretical_speedup(&self) -> f64 {
+        let (kh, kw) = self.kernel();
+        let (mh, mw) = self.out_tile();
+        let (th, tw) = self.in_tile();
+        (kh * kw * mh * mw) as f64 / (th * tw) as f64
+    }
+
+    /// Short display name matching the paper's notation.
+    pub fn name(&self) -> &'static str {
+        match self {
+            WinogradVariant::F2x2_3x3 => "F(2x2,3x3)",
+            WinogradVariant::F4x4_3x3 => "F(4x4,3x3)",
+            WinogradVariant::F6x6_3x3 => "F(6x6,3x3)",
+            WinogradVariant::F2x2_5x5 => "F(2x2,5x5)",
+            WinogradVariant::F4x4_5x5 => "F(4x4,5x5)",
+            WinogradVariant::F2_1x7 => "F(2,1x7)",
+            WinogradVariant::F4_1x7 => "F(4,1x7)",
+            WinogradVariant::F2_7x1 => "F(2,7x1)",
+            WinogradVariant::F4_7x1 => "F(4,7x1)",
+            WinogradVariant::F4_1x3 => "F(4,1x3)",
+            WinogradVariant::F4_3x1 => "F(4,3x1)",
+        }
+    }
+
+    /// The variant that handles a `(kh, kw)` stride-1 filter, if any —
+    /// the default selection policy (see `conv::select` for the full
+    /// heuristic).
+    pub fn for_kernel(kh: usize, kw: usize) -> Option<WinogradVariant> {
+        match (kh, kw) {
+            (3, 3) => Some(WinogradVariant::F4x4_3x3),
+            (5, 5) => Some(WinogradVariant::F2x2_5x5),
+            (1, 7) => Some(WinogradVariant::F4_1x7),
+            (7, 1) => Some(WinogradVariant::F4_7x1),
+            (1, 3) => Some(WinogradVariant::F4_1x3),
+            (3, 1) => Some(WinogradVariant::F4_3x1),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for WinogradVariant {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// Per-axis transform matrices in `f32` form.
+#[derive(Debug, Clone)]
+pub struct AxisTransforms {
+    /// Input-tile extent on this axis.
+    pub t: usize,
+    /// Output-tile extent on this axis.
+    pub m: usize,
+    /// Filter extent on this axis.
+    pub r: usize,
+    /// Input transform `Bᵀ (t×t)`.
+    pub bt: MatF,
+    /// Filter transform `G (t×r)`.
+    pub g: MatF,
+    /// Output transform `Aᵀ (m×t)`.
+    pub at: MatF,
+}
+
+impl AxisTransforms {
+    /// The passive axis of a 1-D variant: everything is 1×1 identity.
+    pub fn identity() -> AxisTransforms {
+        AxisTransforms {
+            t: 1,
+            m: 1,
+            r: 1,
+            bt: MatF::identity1(),
+            g: MatF::identity1(),
+            at: MatF::identity1(),
+        }
+    }
+
+    /// Build from an exact Cook-Toom construction.
+    pub fn from_cook_toom(ct: &CookToom) -> AxisTransforms {
+        AxisTransforms {
+            t: ct.n,
+            m: ct.m,
+            r: ct.r,
+            bt: MatF::new(ct.n, ct.n, ct.bt.to_f32()),
+            g: MatF::new(ct.n, ct.r, ct.g.to_f32()),
+            at: MatF::new(ct.m, ct.n, ct.at.to_f32()),
+        }
+    }
+}
+
+/// A fully-materialised plan: per-axis matrices plus derived extents.
+#[derive(Debug, Clone)]
+pub struct WinogradPlan {
+    /// Which variant this plan implements.
+    pub variant: WinogradVariant,
+    /// Vertical-axis transforms.
+    pub h: AxisTransforms,
+    /// Horizontal-axis transforms.
+    pub w: AxisTransforms,
+}
+
+impl WinogradPlan {
+    /// Materialise the plan for a variant (matrices built exactly, then
+    /// converted to `f32`).
+    pub fn new(variant: WinogradVariant) -> WinogradPlan {
+        let (kh, kw) = variant.kernel();
+        let (mh, mw) = variant.out_tile();
+        let axis = |m: usize, r: usize| -> AxisTransforms {
+            if r == 1 {
+                AxisTransforms::identity()
+            } else {
+                AxisTransforms::from_cook_toom(&cook_toom(m, r))
+            }
+        };
+        WinogradPlan {
+            variant,
+            h: axis(mh, kh),
+            w: axis(mw, kw),
+        }
+    }
+
+    /// Validate that a filter shape matches this plan.
+    pub fn check_kernel(&self, kh: usize, kw: usize) -> Result<()> {
+        let (ekh, ekw) = self.variant.kernel();
+        if (kh, kw) != (ekh, ekw) {
+            bail_unsupported!(
+                "{} expects a {}x{} filter, got {}x{}",
+                self.variant,
+                ekh,
+                ekw,
+                kh,
+                kw
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_geometry_is_consistent() {
+        for v in WinogradVariant::ALL {
+            let (kh, kw) = v.kernel();
+            let (mh, mw) = v.out_tile();
+            let (th, tw) = v.in_tile();
+            assert_eq!(th, mh + kh - 1, "{v}");
+            assert_eq!(tw, mw + kw - 1, "{v}");
+            assert_eq!(v.gemm_count(), th * tw);
+            assert!(v.theoretical_speedup() > 1.0, "{v}");
+        }
+    }
+
+    #[test]
+    fn headline_theoretical_speedups() {
+        assert!((WinogradVariant::F2x2_3x3.theoretical_speedup() - 2.25).abs() < 1e-9);
+        assert!((WinogradVariant::F4x4_3x3.theoretical_speedup() - 4.0).abs() < 1e-9);
+        assert!((WinogradVariant::F2_1x7.theoretical_speedup() - 1.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn plans_have_matching_matrix_shapes() {
+        for v in WinogradVariant::ALL {
+            let p = WinogradPlan::new(v);
+            assert_eq!(p.h.bt.rows, p.h.t);
+            assert_eq!(p.h.bt.cols, p.h.t);
+            assert_eq!(p.h.g.rows, p.h.t);
+            assert_eq!(p.h.g.cols, p.h.r);
+            assert_eq!(p.h.at.rows, p.h.m);
+            assert_eq!(p.h.at.cols, p.h.t);
+            assert_eq!(p.w.bt.rows, p.w.t);
+        }
+    }
+
+    #[test]
+    fn one_d_variants_have_identity_axis() {
+        let p = WinogradPlan::new(WinogradVariant::F2_1x7);
+        assert_eq!(p.h.t, 1);
+        assert_eq!(p.w.t, 8);
+        let p = WinogradPlan::new(WinogradVariant::F2_7x1);
+        assert_eq!(p.h.t, 8);
+        assert_eq!(p.w.t, 1);
+    }
+
+    #[test]
+    fn kernel_check() {
+        let p = WinogradPlan::new(WinogradVariant::F4x4_3x3);
+        assert!(p.check_kernel(3, 3).is_ok());
+        assert!(p.check_kernel(5, 5).is_err());
+    }
+
+    #[test]
+    fn for_kernel_selects_expected_variants() {
+        assert_eq!(WinogradVariant::for_kernel(3, 3), Some(WinogradVariant::F4x4_3x3));
+        assert_eq!(WinogradVariant::for_kernel(5, 5), Some(WinogradVariant::F2x2_5x5));
+        assert_eq!(WinogradVariant::for_kernel(1, 7), Some(WinogradVariant::F4_1x7));
+        assert_eq!(WinogradVariant::for_kernel(7, 1), Some(WinogradVariant::F4_7x1));
+        assert_eq!(WinogradVariant::for_kernel(1, 1), None);
+        assert_eq!(WinogradVariant::for_kernel(11, 11), None);
+    }
+}

@@ -1,0 +1,182 @@
+//! Generic channel-lane tile transforms.
+//!
+//! Under NHWC, one [`F32x4`] holds four channels of one pixel, so a tile of
+//! `th×tw` pixels (for one 4-channel group) is `th·tw` vectors and the 2-D
+//! transform `T_L · tile · T_Rᵀ` is two passes of small row combinations over
+//! whole vectors — the NHWC formulation of the paper's Listing 2, generic
+//! over the transform matrices so every `F(m, r)` variant shares this code.
+//! The hottest variants additionally have hand-unrolled versions in
+//! [`super::fast`].
+
+use super::MatF;
+use crate::simd::F32x4;
+
+/// `out[p×q] = L (p×a) · tile (a×b) · Rᵀ  — with R given as (q×b)` —
+/// over `F32x4` channel lanes.
+///
+/// `tmp` must hold `p·b` vectors; `out` must hold `p·q`.
+#[inline]
+pub fn transform_tile_lanes(
+    l: &MatF,
+    r: &MatF,
+    tile: &[F32x4],
+    out: &mut [F32x4],
+    tmp: &mut [F32x4],
+) {
+    let (p, a) = (l.rows, l.cols);
+    let (q, b) = (r.rows, r.cols);
+    debug_assert_eq!(tile.len(), a * b);
+    debug_assert!(tmp.len() >= p * b);
+    debug_assert!(out.len() >= p * q);
+
+    // Pass 1: tmp[i][j] = Σ_k L[i][k] · tile[k][j]
+    for i in 0..p {
+        for j in 0..b {
+            let mut acc = F32x4::zero();
+            for k in 0..a {
+                let c = l.at(i, k);
+                if c != 0.0 {
+                    acc = acc.fma_scalar(tile[k * b + j], c);
+                }
+            }
+            tmp[i * b + j] = acc;
+        }
+    }
+    // Pass 2: out[i][j] = Σ_k tmp[i][k] · R[j][k]
+    for i in 0..p {
+        for j in 0..q {
+            let mut acc = F32x4::zero();
+            for k in 0..b {
+                let c = r.at(j, k);
+                if c != 0.0 {
+                    acc = acc.fma_scalar(tmp[i * b + k], c);
+                }
+            }
+            out[i * q + j] = acc;
+        }
+    }
+}
+
+/// Scalar version of [`transform_tile_lanes`] for the (once-per-layer)
+/// weight transform: `out[p×q] = L · tile · Rᵀ`.
+pub fn transform_tile_scalar(l: &MatF, r: &MatF, tile: &[f32], out: &mut [f32], tmp: &mut [f32]) {
+    let (p, a) = (l.rows, l.cols);
+    let (q, b) = (r.rows, r.cols);
+    debug_assert_eq!(tile.len(), a * b);
+    for i in 0..p {
+        for j in 0..b {
+            let mut acc = 0.0;
+            for k in 0..a {
+                acc += l.at(i, k) * tile[k * b + j];
+            }
+            tmp[i * b + j] = acc;
+        }
+    }
+    for i in 0..p {
+        for j in 0..q {
+            let mut acc = 0.0;
+            for k in 0..b {
+                acc += tmp[i * b + k] * r.at(j, k);
+            }
+            out[i * q + j] = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShiftRng;
+
+    /// Naive reference: out = L · tile · Rᵀ with plain nested loops.
+    fn reference(l: &MatF, r: &MatF, tile: &[f32]) -> Vec<f32> {
+        let (p, a) = (l.rows, l.cols);
+        let (q, b) = (r.rows, r.cols);
+        let mut out = vec![0.0; p * q];
+        for i in 0..p {
+            for j in 0..q {
+                let mut acc = 0.0;
+                for x in 0..a {
+                    for y in 0..b {
+                        acc += l.at(i, x) * tile[x * b + y] * r.at(j, y);
+                    }
+                }
+                out[i * q + j] = acc;
+            }
+        }
+        out
+    }
+
+    fn random_mat(rows: usize, cols: usize, seed: u64) -> MatF {
+        let mut rng = XorShiftRng::new(seed);
+        let mut data = vec![0.0; rows * cols];
+        rng.fill_normal(&mut data);
+        MatF::new(rows, cols, data)
+    }
+
+    #[test]
+    fn scalar_matches_reference() {
+        let l = random_mat(4, 6, 1);
+        let r = random_mat(3, 5, 2);
+        let mut rng = XorShiftRng::new(3);
+        let mut tile = vec![0.0; 6 * 5];
+        rng.fill_normal(&mut tile);
+        let mut out = vec![0.0; 4 * 3];
+        let mut tmp = vec![0.0; 4 * 5];
+        transform_tile_scalar(&l, &r, &tile, &mut out, &mut tmp);
+        let want = reference(&l, &r, &tile);
+        for (a, b) in out.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn lanes_match_scalar_per_lane() {
+        let l = random_mat(6, 6, 4);
+        let r = random_mat(6, 6, 5);
+        let mut rng = XorShiftRng::new(6);
+        // One tile of 6×6 pixels × 4 channels.
+        let mut lanes = vec![F32x4::zero(); 36];
+        for v in lanes.iter_mut() {
+            *v = F32x4([rng.normal(), rng.normal(), rng.normal(), rng.normal()]);
+        }
+        let mut out = vec![F32x4::zero(); 36];
+        let mut tmp = vec![F32x4::zero(); 36];
+        transform_tile_lanes(&l, &r, &lanes, &mut out, &mut tmp);
+
+        for lane in 0..4 {
+            let tile: Vec<f32> = lanes.iter().map(|v| v.0[lane]).collect();
+            let want = reference(&l, &r, &tile);
+            for (i, w) in want.iter().enumerate() {
+                assert!(
+                    (out[i].0[lane] - w).abs() < 1e-3,
+                    "lane {lane} elem {i}: {} vs {w}",
+                    out[i].0[lane]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn identity_axes_passthrough() {
+        // L = 1×1 identity, R = 4×4 identity ⇒ out == tile (1×4).
+        let l = MatF::identity1();
+        let eye = MatF::new(
+            4,
+            4,
+            (0..16).map(|i| if i % 5 == 0 { 1.0 } else { 0.0 }).collect(),
+        );
+        let tile = [
+            F32x4::splat(1.0),
+            F32x4::splat(2.0),
+            F32x4::splat(3.0),
+            F32x4::splat(4.0),
+        ];
+        let mut out = [F32x4::zero(); 4];
+        let mut tmp = [F32x4::zero(); 4];
+        transform_tile_lanes(&l, &eye, &tile, &mut out, &mut tmp);
+        for (o, t) in out.iter().zip(&tile) {
+            assert_eq!(o, t);
+        }
+    }
+}

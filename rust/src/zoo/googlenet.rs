@@ -1,0 +1,113 @@
+//! GoogleNet / Inception-v1 (Szegedy et al. 2015), main branch (auxiliary
+//! classifiers are inference-time no-ops and omitted).
+//!
+//! Each inception module mixes 1×1, 3×3 and 5×5 convs — the paper's Table 2
+//! measures both the 3×3 (2.6× avg, **4.1× peak** — the headline) and 5×5
+//! (2.3× avg) layers of this network.
+
+use super::Builder;
+use crate::nn::{Graph, NodeId};
+use crate::Result;
+
+/// Inception module: four parallel branches concatenated.
+/// `(b1, b3r, b3, b5r, b5, pp)` = 1×1, 3×3-reduce, 3×3, 5×5-reduce, 5×5,
+/// pool-proj widths, as in Table 1 of the GoogleNet paper.
+#[allow(clippy::too_many_arguments)]
+fn inception(
+    b: &mut Builder,
+    name: &str,
+    from: NodeId,
+    cin: usize,
+    b1: usize,
+    b3r: usize,
+    b3: usize,
+    b5r: usize,
+    b5: usize,
+    pp: usize,
+) -> NodeId {
+    let br1 = b.conv(&format!("{name}/1x1"), from, cin, b1, (1, 1), (1, 1), (0, 0));
+    let r3 = b.conv(&format!("{name}/3x3_reduce"), from, cin, b3r, (1, 1), (1, 1), (0, 0));
+    let br3 = b.conv(&format!("{name}/3x3"), r3, b3r, b3, (3, 3), (1, 1), (1, 1));
+    let r5 = b.conv(&format!("{name}/5x5_reduce"), from, cin, b5r, (1, 1), (1, 1), (0, 0));
+    let br5 = b.conv(&format!("{name}/5x5"), r5, b5r, b5, (5, 5), (1, 1), (2, 2));
+    let mp = b.maxpool(&format!("{name}/pool"), from, 3, 1, 1, false);
+    let brp = b.conv(&format!("{name}/pool_proj"), mp, cin, pp, (1, 1), (1, 1), (0, 0));
+    b.concat(&format!("{name}/output"), &[br1, br3, br5, brp])
+}
+
+/// Build GoogleNet (224×224×3 → 1000 classes).
+pub fn build(seed: u64) -> Result<Graph> {
+    let (mut b, input) = Builder::new(seed);
+    // Stem.
+    let c1 = b.conv("conv1/7x7_s2", input, 3, 64, (7, 7), (2, 2), (3, 3));
+    let p1 = b.maxpool("pool1/3x3_s2", c1, 3, 2, 0, true);
+    let n1 = b.lrn("pool1/norm1", p1);
+    let c2r = b.conv("conv2/3x3_reduce", n1, 64, 64, (1, 1), (1, 1), (0, 0));
+    let c2 = b.conv("conv2/3x3", c2r, 64, 192, (3, 3), (1, 1), (1, 1));
+    let n2 = b.lrn("conv2/norm2", c2);
+    let p2 = b.maxpool("pool2/3x3_s2", n2, 3, 2, 0, true);
+    // Inception stacks (widths from the GoogleNet paper's Table 1).
+    let i3a = inception(&mut b, "inception_3a", p2, 192, 64, 96, 128, 16, 32, 32); // → 256
+    let i3b = inception(&mut b, "inception_3b", i3a, 256, 128, 128, 192, 32, 96, 64); // → 480
+    let p3 = b.maxpool("pool3/3x3_s2", i3b, 3, 2, 0, true);
+    let i4a = inception(&mut b, "inception_4a", p3, 480, 192, 96, 208, 16, 48, 64); // → 512
+    let i4b = inception(&mut b, "inception_4b", i4a, 512, 160, 112, 224, 24, 64, 64); // → 512
+    let i4c = inception(&mut b, "inception_4c", i4b, 512, 128, 128, 256, 24, 64, 64); // → 512
+    let i4d = inception(&mut b, "inception_4d", i4c, 512, 112, 144, 288, 32, 64, 64); // → 528
+    let i4e = inception(&mut b, "inception_4e", i4d, 528, 256, 160, 320, 32, 128, 128); // → 832
+    let p4 = b.maxpool("pool4/3x3_s2", i4e, 3, 2, 0, true);
+    let i5a = inception(&mut b, "inception_5a", p4, 832, 256, 160, 320, 32, 128, 128); // → 832
+    let i5b = inception(&mut b, "inception_5b", i5a, 832, 384, 192, 384, 48, 128, 128); // → 1024
+    let gap = b.gap("pool5/7x7_s1", i5b);
+    let fc = b.fc("loss3/classifier", gap, 1024, 1000, false);
+    b.softmax("prob", fc);
+    Ok(b.g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Op;
+
+    #[test]
+    fn structure() {
+        let g = build(1).unwrap();
+        // Stem 3 convs + 9 modules × 6 convs = 57 convs.
+        assert_eq!(g.conv_count(), 57);
+        let shapes = g.infer_shapes(&[1, 224, 224, 3]).unwrap();
+        assert_eq!(shapes.last().unwrap(), &vec![1, 1000]);
+    }
+
+    #[test]
+    fn module_output_widths() {
+        let g = build(1).unwrap();
+        let shapes = g.infer_shapes(&[1, 224, 224, 3]).unwrap();
+        for (name, c) in [
+            ("inception_3a/output", 256),
+            ("inception_3b/output", 480),
+            ("inception_4e/output", 832),
+            ("inception_5b/output", 1024),
+        ] {
+            let idx = g.nodes.iter().position(|n| n.name == name).unwrap();
+            assert_eq!(shapes[idx][3], c, "{name}");
+        }
+    }
+
+    #[test]
+    fn has_both_3x3_and_5x5_fast_layers() {
+        let g = build(1).unwrap();
+        let mut k33 = 0;
+        let mut k55 = 0;
+        for n in &g.nodes {
+            if let Op::Conv { desc, .. } = &n.op {
+                match desc.kernel {
+                    (3, 3) if desc.stride == (1, 1) => k33 += 1,
+                    (5, 5) => k55 += 1,
+                    _ => {}
+                }
+            }
+        }
+        assert_eq!(k33, 10); // conv2/3x3 + 9 modules
+        assert_eq!(k55, 9);
+    }
+}

@@ -1,0 +1,164 @@
+//! Inception-v3 (Szegedy et al. 2016), inference branch.
+//!
+//! The interesting model for the paper's **1-D Cook-Toom** variants: the
+//! 17×17 modules factorise 7×7 convolutions into `1×7`/`7×1` pairs (Table 2
+//! rows "1×7" and "7×1", ~2.0–2.1×), the 8×8 modules use `1×3`/`3×1`
+//! splits, and the 35×35 modules carry the 5×5 layers (2.7× avg).
+
+use super::Builder;
+use crate::nn::{Graph, NodeId};
+use crate::Result;
+
+/// avgpool(3×3, s1, p1) → 1×1 projection, the pool branch of every module.
+fn pool_proj(b: &mut Builder, name: &str, from: NodeId, cin: usize, cout: usize) -> NodeId {
+    let p = b.avgpool(&format!("{name}/pool"), from, 3, 1, 1);
+    b.conv(&format!("{name}/pool_proj"), p, cin, cout, (1, 1), (1, 1), (0, 0))
+}
+
+/// Inception-A (35×35): 1×1 / 5×5 / double-3×3 / pool branches.
+fn module_a(b: &mut Builder, name: &str, from: NodeId, cin: usize, pp: usize) -> NodeId {
+    let b1 = b.conv(&format!("{name}/1x1"), from, cin, 64, (1, 1), (1, 1), (0, 0));
+    let r5 = b.conv(&format!("{name}/5x5_reduce"), from, cin, 48, (1, 1), (1, 1), (0, 0));
+    let b5 = b.conv(&format!("{name}/5x5"), r5, 48, 64, (5, 5), (1, 1), (2, 2));
+    let r3 = b.conv(&format!("{name}/3x3dbl_reduce"), from, cin, 64, (1, 1), (1, 1), (0, 0));
+    let d1 = b.conv(&format!("{name}/3x3dbl_1"), r3, 64, 96, (3, 3), (1, 1), (1, 1));
+    let d2 = b.conv(&format!("{name}/3x3dbl_2"), d1, 96, 96, (3, 3), (1, 1), (1, 1));
+    let bp = pool_proj(b, name, from, cin, pp);
+    b.concat(&format!("{name}/output"), &[b1, b5, d2, bp])
+}
+
+/// Reduction-A (35→17).
+fn reduction_a(b: &mut Builder, name: &str, from: NodeId, cin: usize) -> NodeId {
+    let b3 = b.conv(&format!("{name}/3x3"), from, cin, 384, (3, 3), (2, 2), (0, 0));
+    let r = b.conv(&format!("{name}/3x3dbl_reduce"), from, cin, 64, (1, 1), (1, 1), (0, 0));
+    let d1 = b.conv(&format!("{name}/3x3dbl_1"), r, 64, 96, (3, 3), (1, 1), (1, 1));
+    let d2 = b.conv(&format!("{name}/3x3dbl_2"), d1, 96, 96, (3, 3), (2, 2), (0, 0));
+    let mp = b.maxpool(&format!("{name}/pool"), from, 3, 2, 0, false);
+    b.concat(&format!("{name}/output"), &[b3, d2, mp])
+}
+
+/// Inception-B (17×17): factorised 7×7 via `1×7`/`7×1` chains.
+fn module_b(b: &mut Builder, name: &str, from: NodeId, cin: usize, c7: usize) -> NodeId {
+    let b1 = b.conv(&format!("{name}/1x1"), from, cin, 192, (1, 1), (1, 1), (0, 0));
+    // 7×7 branch: 1×1 → 1×7 → 7×1.
+    let r7 = b.conv(&format!("{name}/7x7_reduce"), from, cin, c7, (1, 1), (1, 1), (0, 0));
+    let a = b.conv(&format!("{name}/1x7"), r7, c7, c7, (1, 7), (1, 1), (0, 3));
+    let b7 = b.conv(&format!("{name}/7x1"), a, c7, 192, (7, 1), (1, 1), (3, 0));
+    // Double 7×7 branch: 1×1 → 7×1 → 1×7 → 7×1 → 1×7.
+    let rd = b.conv(&format!("{name}/7x7dbl_reduce"), from, cin, c7, (1, 1), (1, 1), (0, 0));
+    let d1 = b.conv(&format!("{name}/7x7dbl_1"), rd, c7, c7, (7, 1), (1, 1), (3, 0));
+    let d2 = b.conv(&format!("{name}/7x7dbl_2"), d1, c7, c7, (1, 7), (1, 1), (0, 3));
+    let d3 = b.conv(&format!("{name}/7x7dbl_3"), d2, c7, c7, (7, 1), (1, 1), (3, 0));
+    let d4 = b.conv(&format!("{name}/7x7dbl_4"), d3, c7, 192, (1, 7), (1, 1), (0, 3));
+    let bp = pool_proj(b, name, from, cin, 192);
+    b.concat(&format!("{name}/output"), &[b1, b7, d4, bp])
+}
+
+/// Reduction-B (17→8).
+fn reduction_b(b: &mut Builder, name: &str, from: NodeId, cin: usize) -> NodeId {
+    let r3 = b.conv(&format!("{name}/3x3_reduce"), from, cin, 192, (1, 1), (1, 1), (0, 0));
+    let b3 = b.conv(&format!("{name}/3x3"), r3, 192, 320, (3, 3), (2, 2), (0, 0));
+    let r7 = b.conv(&format!("{name}/7x7x3_reduce"), from, cin, 192, (1, 1), (1, 1), (0, 0));
+    let a = b.conv(&format!("{name}/1x7"), r7, 192, 192, (1, 7), (1, 1), (0, 3));
+    let c = b.conv(&format!("{name}/7x1"), a, 192, 192, (7, 1), (1, 1), (3, 0));
+    let d = b.conv(&format!("{name}/3x3_2"), c, 192, 192, (3, 3), (2, 2), (0, 0));
+    let mp = b.maxpool(&format!("{name}/pool"), from, 3, 2, 0, false);
+    b.concat(&format!("{name}/output"), &[b3, d, mp])
+}
+
+/// Inception-C (8×8): `1×3`/`3×1` output splits.
+fn module_c(b: &mut Builder, name: &str, from: NodeId, cin: usize) -> NodeId {
+    let b1 = b.conv(&format!("{name}/1x1"), from, cin, 320, (1, 1), (1, 1), (0, 0));
+    let r3 = b.conv(&format!("{name}/3x3_reduce"), from, cin, 384, (1, 1), (1, 1), (0, 0));
+    let s1 = b.conv(&format!("{name}/3x3_a"), r3, 384, 384, (1, 3), (1, 1), (0, 1));
+    let s2 = b.conv(&format!("{name}/3x3_b"), r3, 384, 384, (3, 1), (1, 1), (1, 0));
+    let rd = b.conv(&format!("{name}/3x3dbl_reduce"), from, cin, 448, (1, 1), (1, 1), (0, 0));
+    let d0 = b.conv(&format!("{name}/3x3dbl_1"), rd, 448, 384, (3, 3), (1, 1), (1, 1));
+    let d1 = b.conv(&format!("{name}/3x3dbl_a"), d0, 384, 384, (1, 3), (1, 1), (0, 1));
+    let d2 = b.conv(&format!("{name}/3x3dbl_b"), d0, 384, 384, (3, 1), (1, 1), (1, 0));
+    let bp = pool_proj(b, name, from, cin, 192);
+    b.concat(&format!("{name}/output"), &[b1, s1, s2, d1, d2, bp])
+}
+
+/// Build Inception-v3 (299×299×3 → 1000 classes).
+pub fn build(seed: u64) -> Result<Graph> {
+    let (mut b, input) = Builder::new(seed);
+    // Stem: 299 → 35×35×192.
+    let c1 = b.conv("conv1_3x3_s2", input, 3, 32, (3, 3), (2, 2), (0, 0)); // 149
+    let c2 = b.conv("conv2_3x3", c1, 32, 32, (3, 3), (1, 1), (0, 0)); // 147
+    let c3 = b.conv("conv3_3x3", c2, 32, 64, (3, 3), (1, 1), (1, 1)); // 147
+    let p1 = b.maxpool("pool1_3x3_s2", c3, 3, 2, 0, false); // 73
+    let c4 = b.conv("conv4_1x1", p1, 64, 80, (1, 1), (1, 1), (0, 0));
+    let c5 = b.conv("conv5_3x3", c4, 80, 192, (3, 3), (1, 1), (0, 0)); // 71
+    let p2 = b.maxpool("pool2_3x3_s2", c5, 3, 2, 0, false); // 35
+    // 35×35 stack.
+    let m5b = module_a(&mut b, "mixed_5b", p2, 192, 32); // 256
+    let m5c = module_a(&mut b, "mixed_5c", m5b, 256, 64); // 288
+    let m5d = module_a(&mut b, "mixed_5d", m5c, 288, 64); // 288
+    let m6a = reduction_a(&mut b, "mixed_6a", m5d, 288); // 768 @ 17
+    // 17×17 stack.
+    let m6b = module_b(&mut b, "mixed_6b", m6a, 768, 128);
+    let m6c = module_b(&mut b, "mixed_6c", m6b, 768, 160);
+    let m6d = module_b(&mut b, "mixed_6d", m6c, 768, 160);
+    let m6e = module_b(&mut b, "mixed_6e", m6d, 768, 192);
+    let m7a = reduction_b(&mut b, "mixed_7a", m6e, 768); // 1280 @ 8
+    // 8×8 stack.
+    let m7b = module_c(&mut b, "mixed_7b", m7a, 1280); // 2048
+    let m7c = module_c(&mut b, "mixed_7c", m7b, 2048); // 2048
+    let gap = b.gap("pool3", m7c);
+    let fc = b.fc("fc", gap, 2048, 1000, false);
+    b.softmax("prob", fc);
+    Ok(b.g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Op;
+
+    #[test]
+    fn structure_and_output() {
+        let g = build(1).unwrap();
+        // Stem 5 + 3×A(7) + redA(4) + 4×B(10) + redB(6) + 2×C(9) = 94 convs.
+        assert_eq!(g.conv_count(), 94);
+        let shapes = g.infer_shapes(&[1, 299, 299, 3]).unwrap();
+        assert_eq!(shapes.last().unwrap(), &vec![1, 1000]);
+    }
+
+    #[test]
+    fn stage_spatial_sizes() {
+        let g = build(1).unwrap();
+        let shapes = g.infer_shapes(&[1, 299, 299, 3]).unwrap();
+        for (name, hw, c) in [
+            ("mixed_5b/output", 35, 256),
+            ("mixed_5d/output", 35, 288),
+            ("mixed_6a/output", 17, 768),
+            ("mixed_6e/output", 17, 768),
+            ("mixed_7a/output", 8, 1280),
+            ("mixed_7c/output", 8, 2048),
+        ] {
+            let idx = g.nodes.iter().position(|n| n.name == name).unwrap();
+            assert_eq!(shapes[idx][1], hw, "{name} height");
+            assert_eq!(shapes[idx][3], c, "{name} channels");
+        }
+    }
+
+    #[test]
+    fn has_all_four_fast_layer_types() {
+        let g = build(1).unwrap();
+        let mut counts = std::collections::HashMap::new();
+        for n in &g.nodes {
+            if let Op::Conv { desc, .. } = &n.op {
+                if desc.stride == (1, 1) {
+                    *counts.entry(desc.kernel).or_insert(0usize) += 1;
+                }
+            }
+        }
+        assert!(counts[&(3, 3)] >= 8, "3x3: {:?}", counts.get(&(3, 3)));
+        assert_eq!(counts[&(5, 5)], 3);
+        assert_eq!(counts[&(1, 7)], 13); // 4 modules ×3 + reduction-B
+        assert_eq!(counts[&(7, 1)], 13);
+        assert_eq!(counts[&(1, 3)], 4);
+        assert_eq!(counts[&(3, 1)], 4);
+    }
+}

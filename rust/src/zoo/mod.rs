@@ -1,0 +1,253 @@
+//! The five CNNs the paper evaluates (§3): VGG-16, VGG-19, GoogleNet
+//! (Inception-v1), Inception-v3 and SqueezeNet (v1.0), built as [`Graph`]s
+//! with deterministic synthetic weights (runtime of dense fp32 conv is
+//! data-independent, so synthetic weights preserve every timing property —
+//! see DESIGN.md §Substitutions).
+//!
+//! Architectures follow the original papers' layer tables; layer names match
+//! the conventions used in each paper so Table 2 rows are recognisable.
+
+pub mod vgg;
+pub mod squeezenet;
+pub mod googlenet;
+pub mod inception_v3;
+
+use crate::conv::Conv2d;
+use crate::nn::{Graph, NodeId, Op};
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// The evaluated model set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    /// VGG-16 (224×224 input).
+    Vgg16,
+    /// VGG-19 (224×224 input).
+    Vgg19,
+    /// GoogleNet / Inception-v1 (224×224 input).
+    GoogleNet,
+    /// Inception-v3 (299×299 input).
+    InceptionV3,
+    /// SqueezeNet v1.0 (224×224 input).
+    SqueezeNet,
+}
+
+impl ModelKind {
+    /// All five models, in the paper's table order.
+    pub const ALL: [ModelKind; 5] = [
+        ModelKind::Vgg16,
+        ModelKind::Vgg19,
+        ModelKind::GoogleNet,
+        ModelKind::InceptionV3,
+        ModelKind::SqueezeNet,
+    ];
+
+    /// Canonical lowercase name (CLI `--model` values).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Vgg16 => "vgg16",
+            ModelKind::Vgg19 => "vgg19",
+            ModelKind::GoogleNet => "googlenet",
+            ModelKind::InceptionV3 => "inception-v3",
+            ModelKind::SqueezeNet => "squeezenet",
+        }
+    }
+
+    /// Display name as the paper's tables print it.
+    pub fn display(&self) -> &'static str {
+        match self {
+            ModelKind::Vgg16 => "VGG-16",
+            ModelKind::Vgg19 => "VGG-19",
+            ModelKind::GoogleNet => "GoogleNet",
+            ModelKind::InceptionV3 => "Inception-v3",
+            ModelKind::SqueezeNet => "SqueezeNet",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<ModelKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "vgg16" | "vgg-16" => Some(ModelKind::Vgg16),
+            "vgg19" | "vgg-19" => Some(ModelKind::Vgg19),
+            "googlenet" | "inception-v1" => Some(ModelKind::GoogleNet),
+            "inception-v3" | "inceptionv3" | "inception3" => Some(ModelKind::InceptionV3),
+            "squeezenet" => Some(ModelKind::SqueezeNet),
+            _ => None,
+        }
+    }
+
+    /// NHWC input shape at batch size `n`.
+    pub fn input_shape(&self, n: usize) -> Vec<usize> {
+        match self {
+            ModelKind::InceptionV3 => vec![n, 299, 299, 3],
+            _ => vec![n, 224, 224, 3],
+        }
+    }
+
+    /// Build the graph with deterministic weights derived from `seed`.
+    pub fn build(&self, seed: u64) -> Result<Graph> {
+        match self {
+            ModelKind::Vgg16 => vgg::build(16, seed),
+            ModelKind::Vgg19 => vgg::build(19, seed),
+            ModelKind::GoogleNet => googlenet::build(seed),
+            ModelKind::InceptionV3 => inception_v3::build(seed),
+            ModelKind::SqueezeNet => squeezenet::build(seed),
+        }
+    }
+}
+
+impl std::fmt::Display for ModelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.display())
+    }
+}
+
+/// Shared builder: wraps a [`Graph`] and hands out deterministic weights
+/// from an internal seed counter.
+pub(crate) struct Builder {
+    pub g: Graph,
+    seed: u64,
+}
+
+impl Builder {
+    pub fn new(seed: u64) -> (Builder, NodeId) {
+        let mut g = Graph::new();
+        let input = g.input();
+        (Builder { g, seed }, input)
+    }
+
+    fn next_seed(&mut self) -> u64 {
+        self.seed = self.seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.seed
+    }
+
+    /// Conv + bias + ReLU.
+    pub fn conv(
+        &mut self,
+        name: &str,
+        from: NodeId,
+        cin: usize,
+        cout: usize,
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        pad: (usize, usize),
+    ) -> NodeId {
+        let desc = Conv2d::new(cin, cout, kernel)
+            .with_stride(stride)
+            .with_padding(pad);
+        let weights = desc.random_weights(self.next_seed());
+        let bias_seed = self.next_seed();
+        let bias = Tensor::rand_uniform(&[cout], -0.05, 0.05, bias_seed).into_vec();
+        self.g.add(
+            name,
+            Op::Conv { desc, weights, bias, relu: true },
+            &[from],
+        )
+    }
+
+    pub fn maxpool(
+        &mut self,
+        name: &str,
+        from: NodeId,
+        k: usize,
+        s: usize,
+        pad: usize,
+        ceil: bool,
+    ) -> NodeId {
+        self.g.add(
+            name,
+            Op::MaxPool { kernel: (k, k), stride: (s, s), pad: (pad, pad), ceil },
+            &[from],
+        )
+    }
+
+    pub fn avgpool(
+        &mut self,
+        name: &str,
+        from: NodeId,
+        k: usize,
+        s: usize,
+        pad: usize,
+    ) -> NodeId {
+        self.g.add(
+            name,
+            Op::AvgPool { kernel: (k, k), stride: (s, s), pad: (pad, pad), ceil: false },
+            &[from],
+        )
+    }
+
+    pub fn gap(&mut self, name: &str, from: NodeId) -> NodeId {
+        self.g.add(name, Op::GlobalAvgPool, &[from])
+    }
+
+    pub fn concat(&mut self, name: &str, from: &[NodeId]) -> NodeId {
+        self.g.add(name, Op::Concat, from)
+    }
+
+    pub fn fc(&mut self, name: &str, from: NodeId, k: usize, m: usize, relu: bool) -> NodeId {
+        let w_seed = self.next_seed();
+        let scale = (2.0 / k as f32).sqrt();
+        let mut weights = Tensor::randn(&[k, m], w_seed);
+        for v in weights.data_mut() {
+            *v *= scale;
+        }
+        self.g.add(
+            name,
+            Op::Fc { weights, bias: vec![0.0; m], relu },
+            &[from],
+        )
+    }
+
+    pub fn softmax(&mut self, name: &str, from: NodeId) -> NodeId {
+        self.g.add(name, Op::Softmax, &[from])
+    }
+
+    pub fn lrn(&mut self, name: &str, from: NodeId) -> NodeId {
+        self.g.add(
+            name,
+            Op::Lrn { size: 5, alpha: 1e-4, beta: 0.75, k: 1.0 },
+            &[from],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for kind in ModelKind::ALL {
+            assert_eq!(ModelKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(ModelKind::parse("resnet"), None);
+    }
+
+    #[test]
+    fn input_shapes() {
+        assert_eq!(ModelKind::Vgg16.input_shape(1), vec![1, 224, 224, 3]);
+        assert_eq!(ModelKind::InceptionV3.input_shape(2), vec![2, 299, 299, 3]);
+    }
+
+    #[test]
+    fn all_models_build_and_infer_shapes() {
+        for kind in ModelKind::ALL {
+            let g = kind.build(1).unwrap();
+            let shapes = g.infer_shapes(&kind.input_shape(1)).unwrap();
+            // Every model ends in a 1000-way classifier.
+            assert_eq!(shapes.last().unwrap(), &vec![1, 1000], "{kind}");
+            assert!(g.conv_count() > 5, "{kind} suspiciously small");
+        }
+    }
+
+    #[test]
+    fn weights_are_deterministic_per_seed() {
+        let a = ModelKind::SqueezeNet.build(1).unwrap();
+        let b = ModelKind::SqueezeNet.build(1).unwrap();
+        let (wa, wb) = match (&a.nodes[1].op, &b.nodes[1].op) {
+            (Op::Conv { weights: wa, .. }, Op::Conv { weights: wb, .. }) => (wa, wb),
+            _ => panic!("node 1 should be a conv"),
+        };
+        assert_eq!(wa, wb);
+    }
+}

@@ -1,0 +1,92 @@
+//! SqueezeNet v1.0 (Iandola et al. 2016).
+//!
+//! Fire modules: a 1×1 *squeeze* conv followed by parallel 1×1 and 3×3
+//! *expand* convs, concatenated. Only the 3×3 expand halves are
+//! Winograd-suitable — which is why SqueezeNet shows the paper's smallest
+//! whole-network gain (29.6%, Table 1) despite a 53% fast-layer gain; the
+//! paper still reports 47 frames/sec for it on 4× Cortex-A73 (§1).
+
+use super::Builder;
+use crate::nn::{Graph, NodeId};
+use crate::Result;
+
+/// One fire module; returns the concat node.
+fn fire(
+    b: &mut Builder,
+    name: &str,
+    from: NodeId,
+    cin: usize,
+    squeeze: usize,
+    expand1: usize,
+    expand3: usize,
+) -> NodeId {
+    let s = b.conv(&format!("{name}/squeeze1x1"), from, cin, squeeze, (1, 1), (1, 1), (0, 0));
+    let e1 = b.conv(&format!("{name}/expand1x1"), s, squeeze, expand1, (1, 1), (1, 1), (0, 0));
+    let e3 = b.conv(&format!("{name}/expand3x3"), s, squeeze, expand3, (3, 3), (1, 1), (1, 1));
+    b.concat(&format!("{name}/concat"), &[e1, e3])
+}
+
+/// Build SqueezeNet v1.0 (224×224×3 → 1000 classes).
+pub fn build(seed: u64) -> Result<Graph> {
+    let (mut b, input) = Builder::new(seed);
+    // conv1: 7×7/2, 96 filters (v1.0).
+    let c1 = b.conv("conv1", input, 3, 96, (7, 7), (2, 2), (3, 3));
+    let p1 = b.maxpool("pool1", c1, 3, 2, 0, true); // 109→55 ceil ⇒ 27? see infer
+    let f2 = fire(&mut b, "fire2", p1, 96, 16, 64, 64);
+    let f3 = fire(&mut b, "fire3", f2, 128, 16, 64, 64);
+    let f4 = fire(&mut b, "fire4", f3, 128, 32, 128, 128);
+    let p4 = b.maxpool("pool4", f4, 3, 2, 0, true);
+    let f5 = fire(&mut b, "fire5", p4, 256, 32, 128, 128);
+    let f6 = fire(&mut b, "fire6", f5, 256, 48, 192, 192);
+    let f7 = fire(&mut b, "fire7", f6, 384, 48, 192, 192);
+    let f8 = fire(&mut b, "fire8", f7, 384, 64, 256, 256);
+    let p8 = b.maxpool("pool8", f8, 3, 2, 0, true);
+    let f9 = fire(&mut b, "fire9", p8, 512, 64, 256, 256);
+    // conv10: 1×1 to 1000 classes, then global average pool.
+    let c10 = b.conv("conv10", f9, 512, 1000, (1, 1), (1, 1), (0, 0));
+    let gap = b.gap("pool10", c10);
+    let flat = b.fc("flatten", gap, 1000, 1000, false);
+    b.softmax("prob", flat);
+    Ok(b.g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Op;
+
+    #[test]
+    fn structure() {
+        let g = build(1).unwrap();
+        // conv1 + 8 fires × 3 convs + conv10 = 26 convs.
+        assert_eq!(g.conv_count(), 26);
+        let shapes = g.infer_shapes(&[1, 224, 224, 3]).unwrap();
+        assert_eq!(shapes.last().unwrap(), &vec![1, 1000]);
+    }
+
+    #[test]
+    fn fire_concat_widths() {
+        let g = build(1).unwrap();
+        let shapes = g.infer_shapes(&[1, 224, 224, 3]).unwrap();
+        let idx = g.nodes.iter().position(|n| n.name == "fire9/concat").unwrap();
+        assert_eq!(shapes[idx][3], 512);
+    }
+
+    #[test]
+    fn only_expand3x3_is_wino_suitable() {
+        let g = build(1).unwrap();
+        for n in &g.nodes {
+            if let Op::Conv { desc, .. } = &n.op {
+                let suitable =
+                    crate::conv::select::is_winograd_suitable(desc.kernel, desc.stride);
+                assert_eq!(
+                    suitable,
+                    n.name.contains("expand3x3"),
+                    "{}: kernel {:?}",
+                    n.name,
+                    desc.kernel
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! VGG-16 / VGG-19 (Simonyan & Zisserman, configurations D and E).
+//!
+//! All conv layers are 3×3 stride-1 pad-1 — the paper's best case: nearly
+//! the whole network is Winograd-suitable (Table 1 shows a 60.7% whole-
+//! network win on VGG-16).
+
+use super::Builder;
+use crate::nn::Graph;
+use crate::Result;
+
+/// Build VGG-16 (`depth = 16`) or VGG-19 (`depth = 19`).
+pub fn build(depth: usize, seed: u64) -> Result<Graph> {
+    assert!(depth == 16 || depth == 19, "VGG depth must be 16 or 19");
+    // Convs per block: VGG-16 = [2,2,3,3,3], VGG-19 = [2,2,4,4,4].
+    let per_block: [usize; 5] = if depth == 16 { [2, 2, 3, 3, 3] } else { [2, 2, 4, 4, 4] };
+    let widths = [64usize, 128, 256, 512, 512];
+
+    let (mut b, input) = Builder::new(seed);
+    let mut x = input;
+    let mut cin = 3usize;
+    for (bi, (&n_convs, &width)) in per_block.iter().zip(&widths).enumerate() {
+        for li in 0..n_convs {
+            let name = format!("conv{}_{}", bi + 1, li + 1);
+            x = b.conv(&name, x, cin, width, (3, 3), (1, 1), (1, 1));
+            cin = width;
+        }
+        x = b.maxpool(&format!("pool{}", bi + 1), x, 2, 2, 0, false);
+    }
+    // 224/2^5 = 7 ⇒ 7·7·512 = 25088 features.
+    x = b.fc("fc6", x, 7 * 7 * 512, 4096, true);
+    x = b.fc("fc7", x, 4096, 4096, true);
+    x = b.fc("fc8", x, 4096, 1000, false);
+    b.softmax("prob", x);
+    Ok(b.g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Op;
+
+    #[test]
+    fn vgg16_structure() {
+        let g = build(16, 1).unwrap();
+        assert_eq!(g.conv_count(), 13);
+        let shapes = g.infer_shapes(&[1, 224, 224, 3]).unwrap();
+        assert_eq!(shapes.last().unwrap(), &vec![1, 1000]);
+        // conv5_3 output is 14×14×512 before the final pool.
+        let idx = g.nodes.iter().position(|n| n.name == "conv5_3").unwrap();
+        assert_eq!(shapes[idx], vec![1, 14, 14, 512]);
+    }
+
+    #[test]
+    fn vgg19_has_16_convs() {
+        let g = build(19, 1).unwrap();
+        assert_eq!(g.conv_count(), 16);
+    }
+
+    #[test]
+    fn all_convs_are_3x3_stride1() {
+        let g = build(16, 1).unwrap();
+        for n in &g.nodes {
+            if let Op::Conv { desc, .. } = &n.op {
+                assert_eq!(desc.kernel, (3, 3));
+                assert_eq!(desc.stride, (1, 1));
+                assert_eq!(desc.padding, (1, 1));
+            }
+        }
+    }
+}

@@ -1,0 +1,186 @@
+//! Cross-module integration tests: model zoo → prepared executor →
+//! coordinator, algorithm-equivalence matrices, and property-based checks
+//! over the full convolution stack (the crate's own `testkit` substitutes
+//! for proptest in this offline build).
+
+use winoconv::conv::direct::direct_conv2d;
+use winoconv::conv::{Conv2d, ConvAlgorithm};
+use winoconv::coordinator::{EngineConfig, InferenceEngine};
+use winoconv::im2row::im2row_conv2d;
+use winoconv::nn::{PreparedModel, Scheme};
+use winoconv::parallel::ThreadPool;
+use winoconv::tensor::Tensor;
+use winoconv::testkit::{check, Gen};
+use winoconv::winograd::{winograd_conv2d, WinogradVariant};
+use winoconv::zoo::ModelKind;
+
+/// Property: for any geometry a variant accepts, the region-wise pipeline
+/// equals direct convolution.
+#[test]
+fn property_winograd_equals_direct() {
+    check("winograd == direct over random geometry", 40, |g: &mut Gen| {
+        let variants = [
+            WinogradVariant::F2x2_3x3,
+            WinogradVariant::F4x4_3x3,
+            WinogradVariant::F2x2_5x5,
+            WinogradVariant::F4_1x3,
+            WinogradVariant::F2_7x1,
+        ];
+        let v = *g.choose(&variants);
+        let (kh, kw) = v.kernel();
+        let h = g.usize_in(kh, kh + 12);
+        let w = g.usize_in(kw, kw + 12);
+        let c = g.usize_in(1, 8);
+        let m = g.usize_in(1, 8);
+        let n = g.usize_in(1, 2);
+        let pad = (g.usize_in(0, kh / 2), g.usize_in(0, kw / 2));
+        let input = Tensor::from_vec(&[n, h, w, c], g.normal_vec(n * h * w * c)).unwrap();
+        let weights =
+            Tensor::from_vec(&[m, kh, kw, c], g.normal_vec(m * kh * kw * c)).unwrap();
+        let got = winograd_conv2d(v, &input, &weights, pad, None).unwrap();
+        let want = direct_conv2d(&input, &weights, (1, 1), pad).unwrap();
+        got.allclose(&want, 2e-3)
+    });
+}
+
+/// Property: im2row equals direct for arbitrary stride/pad/kernel.
+#[test]
+fn property_im2row_equals_direct() {
+    check("im2row == direct over random geometry", 40, |g: &mut Gen| {
+        let kh = g.usize_in(1, 5);
+        let kw = g.usize_in(1, 5);
+        let sh = g.usize_in(1, 3);
+        let sw = g.usize_in(1, 3);
+        let h = g.usize_in(kh, kh + 10);
+        let w = g.usize_in(kw, kw + 10);
+        let c = g.usize_in(1, 6);
+        let m = g.usize_in(1, 6);
+        let pad = (g.usize_in(0, 2), g.usize_in(0, 2));
+        let input = Tensor::from_vec(&[1, h, w, c], g.normal_vec(h * w * c)).unwrap();
+        let weights =
+            Tensor::from_vec(&[m, kh, kw, c], g.normal_vec(m * kh * kw * c)).unwrap();
+        let got = im2row_conv2d(&input, &weights, (sh, sw), pad, None).unwrap();
+        let want = direct_conv2d(&input, &weights, (sh, sw), pad).unwrap();
+        got.allclose(&want, 1e-3)
+    });
+}
+
+/// The two whole-network schemes agree numerically on a real model.
+#[test]
+fn squeezenet_schemes_agree() {
+    let model = ModelKind::SqueezeNet;
+    let graph = model.build(5).unwrap();
+    let shape = model.input_shape(1);
+    let input = Tensor::randn(&shape, 17);
+    let pool = ThreadPool::new(2);
+    let base = PreparedModel::prepare("sq", &graph, &shape, Scheme::Im2RowOnly).unwrap();
+    let ours = PreparedModel::prepare("sq", &graph, &shape, Scheme::WinogradWhereSuitable).unwrap();
+    let (y1, t1) = base.run(&input, Some(&pool)).unwrap();
+    let (y2, t2) = ours.run(&input, Some(&pool)).unwrap();
+    assert_eq!(y1.shape(), &[1, 1000]);
+    assert!(y2.allclose(&y1, 5e-3), "schemes diverge");
+    // The "ours" run must actually have bound Winograd layers.
+    assert!(t2.iter().filter(|t| t.winograd).count() >= 8);
+    assert!(t1.iter().all(|t| !t.winograd));
+    // Softmax output is a distribution either way.
+    let s: f32 = y2.data().iter().sum();
+    assert!((s - 1.0).abs() < 1e-3);
+}
+
+/// GoogleNet end-to-end through branches/concats/LRN under the Winograd
+/// scheme, checked against the im2row scheme.
+#[test]
+fn googlenet_schemes_agree() {
+    let model = ModelKind::GoogleNet;
+    let graph = model.build(6).unwrap();
+    let shape = model.input_shape(1);
+    let input = Tensor::randn(&shape, 8);
+    let pool = ThreadPool::new(2);
+    let base = PreparedModel::prepare("gn", &graph, &shape, Scheme::Im2RowOnly).unwrap();
+    let ours = PreparedModel::prepare("gn", &graph, &shape, Scheme::WinogradWhereSuitable).unwrap();
+    let (y1, _) = base.run(&input, Some(&pool)).unwrap();
+    let (y2, _) = ours.run(&input, Some(&pool)).unwrap();
+    assert!(y2.allclose(&y1, 5e-3));
+}
+
+/// Coordinator end-to-end: many concurrent clients on a real (small) model.
+#[test]
+fn engine_serves_squeezenet_concurrently() {
+    let model = ModelKind::SqueezeNet;
+    let graph = model.build(9).unwrap();
+    let shape = model.input_shape(1);
+    let prepared =
+        PreparedModel::prepare("sq", &graph, &shape, Scheme::WinogradWhereSuitable).unwrap();
+    let engine = std::sync::Arc::new(InferenceEngine::start(
+        prepared,
+        EngineConfig {
+            threads: 2,
+            queue_capacity: 8,
+            ..EngineConfig::default()
+        },
+    ));
+    let handles: Vec<_> = (0..3)
+        .map(|cid| {
+            let engine = std::sync::Arc::clone(&engine);
+            let shape = shape.clone();
+            std::thread::spawn(move || {
+                for i in 0..2 {
+                    let input = Tensor::randn(&shape, cid * 100 + i);
+                    let resp = engine.infer(input).unwrap();
+                    assert_eq!(resp.output.shape(), &[1, 1000]);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = engine.metrics();
+    assert_eq!(m.completed, 6);
+    assert!(m.throughput_fps > 0.0);
+}
+
+/// Every algorithm the public API exposes computes the same 3×3 layer.
+#[test]
+fn conv2d_algorithm_matrix() {
+    let conv = Conv2d::new(8, 16, (3, 3)).with_padding((1, 1));
+    let x = Tensor::randn(&[2, 12, 12, 8], 1);
+    let w = conv.random_weights(2);
+    let pool = ThreadPool::new(2);
+    let reference = conv
+        .clone()
+        .with_algorithm(ConvAlgorithm::Direct)
+        .run(&x, &w)
+        .unwrap();
+    for alg in [
+        ConvAlgorithm::Im2Row,
+        ConvAlgorithm::Winograd(WinogradVariant::F2x2_3x3),
+        ConvAlgorithm::Winograd(WinogradVariant::F4x4_3x3),
+        ConvAlgorithm::Winograd(WinogradVariant::F6x6_3x3),
+        ConvAlgorithm::Auto,
+    ] {
+        let got = conv
+            .clone()
+            .with_algorithm(alg)
+            .run_with(&x, &w, Some(&pool))
+            .unwrap();
+        assert!(got.allclose(&reference, 2e-3), "{alg} diverges");
+    }
+}
+
+/// Inception-v3's 1-D factorised layers run through the real variants.
+#[test]
+fn inception_1d_layers_equal_direct() {
+    for (v, kh, kw, ph, pw) in [
+        (WinogradVariant::F4_1x7, 1usize, 7usize, 0usize, 3usize),
+        (WinogradVariant::F4_7x1, 7, 1, 3, 0),
+        (WinogradVariant::F4_1x3, 1, 3, 0, 1),
+        (WinogradVariant::F4_3x1, 3, 1, 1, 0),
+    ] {
+        let input = Tensor::randn(&[1, 17, 17, 12], 3);
+        let weights = Tensor::randn(&[8, kh, kw, 12], 4);
+        let got = winograd_conv2d(v, &input, &weights, (ph, pw), None).unwrap();
+        let want = direct_conv2d(&input, &weights, (1, 1), (ph, pw)).unwrap();
+        assert!(got.allclose(&want, 2e-3), "{v} diverges from direct");
+    }
+}
