@@ -57,9 +57,11 @@ fn main() -> winoconv::Result<()> {
         bgd.run(&a, &b, &mut c);
     });
     println!(
-        "batched GEMM 36 x [196x128 . 128x128]: {:.3} ms, {:.2} GFLOP/s",
+        "batched GEMM 36 x [196x128 . 128x128]: {:.3} ms, {:.2} GFLOP/s \
+         (unblocked A+C working set {} KiB)",
         s.median / 1e6,
-        bgd.flops() as f64 / s.median
+        bgd.flops() as f64 / s.median,
+        bgd.workspace_elems() * 4 / 1024
     );
 
     // ---- stage split of one representative Winograd layer ----
@@ -83,6 +85,14 @@ fn main() -> winoconv::Result<()> {
         base.median / 1e6,
         flops / base.median,
         base.median / total.median,
+    );
+    println!(
+        "region blocking: L2 budget {} KiB, {} regions/block, per-block workspace {} KiB \
+         (vs {} KiB unblocked)",
+        wino.block_budget() / 1024,
+        wino.regions_per_block(1, h, h)?,
+        wino.block_workspace_bytes(1, h, h)? / 1024,
+        wino.workspace_bytes(1, h, h)? / 1024,
     );
     println!(
         "note: 'effective' GFLOP/s counts direct-conv FLOPs — Winograd executes\n\

@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# CI gate for winoconv. The missing-manifest class of regression (a repo
+# that cannot even `cargo build`) can never land silently again: every step
+# here is fatal.
+#
+# Usage: ./ci.sh [--no-lint]
+#   --no-lint   skip the fmt/clippy steps (e.g. on toolchains without them)
+set -euo pipefail
+cd "$(dirname "$0")"
+
+run() {
+    echo "==> $*"
+    "$@"
+}
+
+run cargo build --release
+run cargo test -q
+
+if [[ "${1:-}" != "--no-lint" ]]; then
+    if cargo fmt --version >/dev/null 2>&1; then
+        run cargo fmt --check
+    else
+        echo "==> cargo fmt unavailable; skipping (install rustfmt or pass --no-lint)"
+    fi
+    if cargo clippy --version >/dev/null 2>&1; then
+        run cargo clippy --all-targets -- -D warnings
+    else
+        echo "==> cargo clippy unavailable; skipping (install clippy or pass --no-lint)"
+    fi
+fi
+
+echo "==> ci green"

@@ -11,7 +11,9 @@ use crate::im2row::Im2RowConvolution;
 use crate::parallel::ThreadPool;
 use crate::tensor::Tensor;
 use crate::winograd::{WinogradConvolution, WinogradVariant};
+use crate::workspace::Workspace;
 use crate::{bail_unsupported, Result};
+use select::select_variant_spatial;
 
 /// Which implementation executes a convolution layer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -112,10 +114,36 @@ impl Conv2d {
         w
     }
 
-    /// Resolve [`ConvAlgorithm::Auto`] for this layer shape.
+    /// Resolve [`ConvAlgorithm::Auto`] for this layer shape, without input
+    /// shape information (channel/kernel/stride heuristics only). Prefer
+    /// [`resolved_algorithm_for`](Self::resolved_algorithm_for) when the
+    /// input shape is known — small feature maps then get the 2×2-tile
+    /// variant instead of wasting partial 4×4 tiles.
     pub fn resolved_algorithm(&self) -> ConvAlgorithm {
         match self.algorithm {
             ConvAlgorithm::Auto => select_algorithm(self.kernel, self.stride, self.cin, self.cout),
+            a => a,
+        }
+    }
+
+    /// Resolve [`ConvAlgorithm::Auto`] with the input shape in hand: the
+    /// channel/stride heuristics of [`select_algorithm`] pick the family,
+    /// then [`select_variant_spatial`] refines the Winograd variant by the
+    /// output extent (the paper's partial-tile argument). This is what
+    /// [`run_with`](Self::run_with) and the prepared-model binder use.
+    pub fn resolved_algorithm_for(&self, input_shape: &[usize]) -> ConvAlgorithm {
+        let base = self.resolved_algorithm();
+        match base {
+            ConvAlgorithm::Winograd(_) if self.algorithm == ConvAlgorithm::Auto => {
+                match self.output_shape(input_shape) {
+                    Ok(out) => match select_variant_spatial(self.kernel, out[1], out[2]) {
+                        Some(v) => ConvAlgorithm::Winograd(v),
+                        None => base,
+                    },
+                    // Bad shapes fail properly at run time.
+                    Err(_) => base,
+                }
+            }
             a => a,
         }
     }
@@ -132,16 +160,29 @@ impl Conv2d {
         weights: &Tensor,
         pool: Option<&ThreadPool>,
     ) -> Result<Tensor> {
-        match self.resolved_algorithm() {
+        let mut ws = Workspace::new();
+        self.run_with_workspace(input, weights, pool, &mut ws)
+    }
+
+    /// [`run_with`](Self::run_with) drawing all layer scratch from a
+    /// caller-owned arena (see [`crate::workspace`]).
+    pub fn run_with_workspace(
+        &self,
+        input: &Tensor,
+        weights: &Tensor,
+        pool: Option<&ThreadPool>,
+        ws: &mut Workspace,
+    ) -> Result<Tensor> {
+        match self.resolved_algorithm_for(input.shape()) {
             ConvAlgorithm::Direct => direct::direct_conv2d(input, weights, self.stride, self.padding),
-            ConvAlgorithm::Im2Row => {
-                Im2RowConvolution::new(weights, self.stride, self.padding)?.run(input, pool)
-            }
+            ConvAlgorithm::Im2Row => Im2RowConvolution::new(weights, self.stride, self.padding)?
+                .run_with_workspace(input, pool, ws),
             ConvAlgorithm::Winograd(v) => {
                 if self.stride != (1, 1) {
                     bail_unsupported!("Winograd requires stride 1, layer has {:?}", self.stride);
                 }
-                WinogradConvolution::new(v, weights, self.padding)?.run(input, pool)
+                WinogradConvolution::new(v, weights, self.padding)?
+                    .run_fused_with(input, pool, None, false, ws)
             }
             ConvAlgorithm::Auto => unreachable!("resolved above"),
         }
@@ -217,6 +258,50 @@ mod tests {
         assert_eq!(a, ConvAlgorithm::Im2Row);
         let a = Conv2d::new(16, 16, (1, 1)).resolved_algorithm();
         assert_eq!(a, ConvAlgorithm::Im2Row);
+    }
+
+    #[test]
+    fn auto_refines_variant_by_input_shape() {
+        let conv = Conv2d::new(16, 16, (3, 3)).with_padding((1, 1));
+        // Large map: the 4×4 tile amortises best.
+        assert_eq!(
+            conv.resolved_algorithm_for(&[1, 56, 56, 16]),
+            ConvAlgorithm::Winograd(WinogradVariant::F4x4_3x3)
+        );
+        // Small map: partial 4×4 tiles would dominate; refine to 2×2.
+        assert_eq!(
+            conv.resolved_algorithm_for(&[1, 4, 4, 16]),
+            ConvAlgorithm::Winograd(WinogradVariant::F2x2_3x3)
+        );
+        // Non-Winograd resolutions pass through untouched.
+        let strided = Conv2d::new(16, 16, (3, 3)).with_stride((2, 2));
+        assert_eq!(
+            strided.resolved_algorithm_for(&[1, 56, 56, 16]),
+            ConvAlgorithm::Im2Row
+        );
+        // An explicitly forced variant is never second-guessed.
+        let forced = Conv2d::new(16, 16, (3, 3))
+            .with_padding((1, 1))
+            .with_algorithm(ConvAlgorithm::Winograd(WinogradVariant::F4x4_3x3));
+        assert_eq!(
+            forced.resolved_algorithm_for(&[1, 4, 4, 16]),
+            ConvAlgorithm::Winograd(WinogradVariant::F4x4_3x3)
+        );
+    }
+
+    #[test]
+    fn small_map_auto_matches_direct() {
+        // The refined small-map path must stay numerically correct.
+        let conv = Conv2d::new(8, 16, (3, 3)).with_padding((1, 1));
+        let x = Tensor::randn(&[1, 4, 4, 8], 3);
+        let w = conv.random_weights(4);
+        let direct = conv
+            .clone()
+            .with_algorithm(ConvAlgorithm::Direct)
+            .run(&x, &w)
+            .unwrap();
+        let auto = conv.run(&x, &w).unwrap();
+        assert!(auto.allclose(&direct, 5e-4));
     }
 
     #[test]

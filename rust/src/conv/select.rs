@@ -8,8 +8,11 @@
 //!   average in Table 2) — unless the spatial extent is too small for 4×4
 //!   output tiles, where `F(2×2, 3×3)` wastes less on partial tiles.
 //! * `5×5` layers get `F(2×2, 5×5)` (GoogleNet/Inception rows of Table 2).
-//! * `1×7`/`7×1` layers get the 1-D Cook-Toom `F(2, 7)` variants
-//!   (Inception-v3 rows, ~2.0–2.1×).
+//! * `1×7`/`7×1` layers get the 1-D Cook-Toom **`F(4, 7)`** variants. The
+//!   paper ships `F(2, 7)` for its Inception-v3 rows (~2.0–2.1×), but the
+//!   10-point `F(4, 7)` measured faster on this engine (EXPERIMENTS.md
+//!   §Perf step 5), so [`WinogradVariant::for_kernel`] routes there;
+//!   `F(2, 7)` stays available for the `ablation_variants` bench.
 //! * `1×3`/`3×1` get 1-D `F(4, 3)`.
 //! * Everything else — `1×1`, strided, `7×7` stem layers, exotic shapes —
 //!   falls back to im2row (they are either GEMM-dominated already or not
@@ -97,6 +100,9 @@ mod tests {
             select_algorithm((5, 5), (1, 1), 32, 64),
             ConvAlgorithm::Winograd(WinogradVariant::F2x2_5x5)
         );
+        // Policy (module doc + WinogradVariant::F4_1x7 doc): 1-D 7-tap
+        // layers route to F(4, 7), not the paper's F(2, 7) — see
+        // EXPERIMENTS.md §Perf step 5.
         assert_eq!(
             select_algorithm((1, 7), (1, 1), 32, 64),
             ConvAlgorithm::Winograd(WinogradVariant::F4_1x7)

@@ -7,6 +7,7 @@ use super::queue::{Request, RequestQueue, Response};
 use crate::nn::PreparedModel;
 use crate::parallel::ThreadPool;
 use crate::tensor::Tensor;
+use crate::workspace::Workspace;
 use crate::{Error, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -84,6 +85,10 @@ impl InferenceEngine {
                 .name("winoconv-dispatcher".into())
                 .spawn(move || {
                     let pool = ThreadPool::new(cfg.threads);
+                    // The dispatcher (this engine's worker loop) owns one
+                    // arena sized to the model's largest layer: steady-state
+                    // serving performs zero scratch allocations per request.
+                    let mut ws = Workspace::with_capacity(model.workspace_elems());
                     loop {
                         match queue.pop_batch(cfg.max_batch, cfg.poll) {
                             None => break, // closed and drained
@@ -92,7 +97,8 @@ impl InferenceEngine {
                                 for req in batch {
                                     let queued = req.submitted.elapsed();
                                     let t0 = Instant::now();
-                                    let result = model.run(&req.input, Some(&pool));
+                                    let result =
+                                        model.run_with_workspace(&req.input, Some(&pool), &mut ws);
                                     let compute = t0.elapsed();
                                     let resp = result.map(|(output, _)| Response {
                                         id: req.id,

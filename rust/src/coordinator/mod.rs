@@ -8,7 +8,10 @@
 //! batches (the prepared models are shape-specialised, so batching here
 //! means queueing batch-1 executions back-to-back — exactly the paper's
 //! batch-size-1 setting — while keeping the worker pipeline full), and a
-//! metrics registry tracks latency percentiles and throughput.
+//! metrics registry tracks latency percentiles and throughput. Each worker
+//! loop owns one [`crate::workspace::Workspace`] arena pre-sized to the
+//! model's largest layer, so steady-state serving allocates no per-request
+//! scratch.
 
 pub mod metrics;
 pub mod queue;

@@ -5,6 +5,12 @@
 //! the B-matrices (`[tile][C][M]`) and outputs (`[tile][R][M]`) — exactly the
 //! buffers the scatter (input transform) writes and the gather (output
 //! transform) reads. Parallelism goes across (tile, M-block) pairs.
+//!
+//! With region blocking (convolve.rs), `R` is a *block* of regions rather
+//! than the whole feature map, and the A/C buffers are arena slices from
+//! [`crate::workspace::Workspace`]; together with the per-thread pack
+//! scratch in [`super`], a steady-state batched GEMM performs no heap
+//! allocation.
 
 use super::{sgemm_blocked, sgemm_prepacked, Blocking, PackedB};
 use crate::parallel::ThreadPool;
@@ -41,6 +47,12 @@ impl BatchedGemm {
     /// Total FLOPs for the whole batch (2·M·N·K each).
     pub fn flops(&self) -> usize {
         2 * self.batch * self.m * self.n * self.k
+    }
+
+    /// Workspace elements the batch's A + C buffers occupy — what one
+    /// Winograd region block borrows from the arena for this GEMM shape.
+    pub fn workspace_elems(&self) -> usize {
+        self.batch * (self.a_stride() + self.c_stride())
     }
 
     /// Execute serially: `C[t] = A[t]·B[t]` for every tile `t`.
@@ -228,6 +240,7 @@ mod tests {
     fn flops_formula() {
         let bgd = BatchedGemm { batch: 16, m: 10, k: 3, n: 4 };
         assert_eq!(bgd.flops(), 2 * 16 * 10 * 3 * 4);
+        assert_eq!(bgd.workspace_elems(), 16 * (10 * 3 + 10 * 4));
     }
 
     #[test]

@@ -8,7 +8,10 @@
 //! Structure: the classical five-loop blocking
 //! (`NC`→`KC`→`MC`→`NR`→`MR`) around an 8×8 SIMD micro-kernel, with A/B
 //! packed into panel buffers per block. `sgemm_with_pool` parallelises the
-//! `MC` loop across the threadpool.
+//! `MC` loop across the threadpool. Panel buffers come from per-thread
+//! scratch reused across calls, so steady-state GEMMs on a warm thread are
+//! allocation-free (part of the crate-wide zero-steady-state-allocation
+//! property; see [`crate::workspace`]).
 
 pub mod microkernel;
 pub mod pack;
@@ -62,6 +65,36 @@ mod prepack_tests {
 
 use crate::parallel::ThreadPool;
 use pack::{pack_a, pack_b};
+use std::cell::RefCell;
+
+thread_local! {
+    // Per-thread pack scratch reused across GEMM calls. The per-call `vec!`
+    // for the A/B panel buffers was the last steady-state allocation on the
+    // Winograd hot path (convolve.rs stage 2 calls `sgemm_prepacked` per
+    // tile per block); with these, repeat GEMMs on a warm thread are
+    // allocation-free. Two cells because one `sgemm_blocked` call holds the
+    // B scratch across the MC loop while the calling thread also packs A.
+    static PACK_A_SCRATCH: RefCell<Vec<f32>> = RefCell::new(Vec::new());
+    static PACK_B_SCRATCH: RefCell<Vec<f32>> = RefCell::new(Vec::new());
+}
+
+fn with_scratch<R>(
+    cell: &'static std::thread::LocalKey<RefCell<Vec<f32>>>,
+    elems: usize,
+    f: impl FnOnce(&mut [f32]) -> R,
+) -> R {
+    cell.with(|c| match c.try_borrow_mut() {
+        Ok(mut buf) => {
+            if buf.len() < elems {
+                buf.resize(elems, 0.0);
+            }
+            f(&mut buf[..elems])
+        }
+        // Re-entrant GEMM on one thread: not a path the crate takes today,
+        // but stay correct with a one-off buffer rather than panicking.
+        Err(_) => f(&mut vec![0.0f32; elems]),
+    })
+}
 
 /// Cache-blocking parameters. Defaults target a ~32 KiB L1 / ~1 MiB L2 core.
 #[derive(Debug, Clone, Copy)]
@@ -167,36 +200,39 @@ pub fn sgemm_blocked(
             let kc = (k - pc).min(blk.kc);
             // First K-block writes/overwrites, later ones accumulate.
             let acc_block = accumulate || pc > 0;
-            let mut bbuf = vec![0.0f32; nc.div_ceil(NR) * NR * kc];
-            pack_b(&b[pc * ldb + jc..], ldb, kc, nc, &mut bbuf);
-            let bbuf = &bbuf;
+            with_scratch(&PACK_B_SCRATCH, nc.div_ceil(NR) * NR * kc, |bbuf| {
+                pack_b(&b[pc * ldb + jc..], ldb, kc, nc, bbuf);
+                let bbuf = &*bbuf;
 
-            let run_mc_block = |ic: usize| {
-                let mc = (m - ic).min(blk.mc);
-                let mut abuf = vec![0.0f32; mc.div_ceil(MR) * MR * kc];
-                pack_a(&a[ic * lda + pc..], lda, mc, kc, &mut abuf);
-                // SAFETY: each ic block touches rows [ic, ic+mc) of C only;
-                // blocks are disjoint across parallel invocations.
-                let c_block: &mut [f32] = unsafe {
-                    std::slice::from_raw_parts_mut(
-                        (c_addr as *mut f32).add(ic * ldc + jc),
-                        (mc - 1) * ldc + nc,
-                    )
+                let run_mc_block = |ic: usize| {
+                    let mc = (m - ic).min(blk.mc);
+                    with_scratch(&PACK_A_SCRATCH, mc.div_ceil(MR) * MR * kc, |abuf| {
+                        pack_a(&a[ic * lda + pc..], lda, mc, kc, abuf);
+                        // SAFETY: each ic block touches rows [ic, ic+mc) of C
+                        // only; blocks are disjoint across parallel
+                        // invocations.
+                        let c_block: &mut [f32] = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                (c_addr as *mut f32).add(ic * ldc + jc),
+                                (mc - 1) * ldc + nc,
+                            )
+                        };
+                        macro_kernel(mc, nc, kc, abuf, bbuf, c_block, ldc, acc_block);
+                    });
                 };
-                macro_kernel(mc, nc, kc, &abuf, bbuf, c_block, ldc, acc_block);
-            };
 
-            let n_blocks = m.div_ceil(blk.mc);
-            match pool {
-                Some(pool) if n_blocks > 1 => {
-                    pool.parallel_for(n_blocks, |bi| run_mc_block(bi * blk.mc));
-                }
-                _ => {
-                    for bi in 0..n_blocks {
-                        run_mc_block(bi * blk.mc);
+                let n_blocks = m.div_ceil(blk.mc);
+                match pool {
+                    Some(pool) if n_blocks > 1 => {
+                        pool.parallel_for(n_blocks, |bi| run_mc_block(bi * blk.mc));
+                    }
+                    _ => {
+                        for bi in 0..n_blocks {
+                            run_mc_block(bi * blk.mc);
+                        }
                     }
                 }
-            }
+            });
         }
     }
 }
@@ -327,16 +363,17 @@ pub fn sgemm_prepacked(
 
             let run_mc_block = |ic: usize| {
                 let mc = (m - ic).min(blk.mc);
-                let mut abuf = vec![0.0f32; mc.div_ceil(MR) * MR * kc];
-                pack_a(&a[ic * lda + pc..], lda, mc, kc, &mut abuf);
-                // SAFETY: disjoint row blocks of C (same as sgemm_blocked).
-                let c_block: &mut [f32] = unsafe {
-                    std::slice::from_raw_parts_mut(
-                        (c_addr as *mut f32).add(ic * ldc + jc),
-                        (mc - 1) * ldc + nc,
-                    )
-                };
-                macro_kernel(mc, nc, kc, &abuf, bbuf, c_block, ldc, acc_block);
+                with_scratch(&PACK_A_SCRATCH, mc.div_ceil(MR) * MR * kc, |abuf| {
+                    pack_a(&a[ic * lda + pc..], lda, mc, kc, abuf);
+                    // SAFETY: disjoint row blocks of C (same as sgemm_blocked).
+                    let c_block: &mut [f32] = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            (c_addr as *mut f32).add(ic * ldc + jc),
+                            (mc - 1) * ldc + nc,
+                        )
+                    };
+                    macro_kernel(mc, nc, kc, abuf, bbuf, c_block, ldc, acc_block);
+                });
             };
             let n_blocks = m.div_ceil(blk.mc);
             match pool {

@@ -8,6 +8,13 @@
 
 use super::microkernel::{MR, NR};
 
+/// Bytes of one packed-B panel (`NR` columns × `kc` depth) — the B-side
+/// working-set term the Winograd region-block sizing budgets for: while the
+/// micro-kernel streams a tile's GEMM, exactly one such panel is hot.
+pub fn packed_b_panel_bytes(kc: usize) -> usize {
+    NR * kc * std::mem::size_of::<f32>()
+}
+
 /// Pack an `mc × kc` block of row-major `A` (leading dimension `lda`)
 /// starting at `a`, into `buf`.
 ///
@@ -60,6 +67,12 @@ pub fn pack_b(b: &[f32], ldb: usize, kc: usize, nc: usize, buf: &mut [f32]) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn panel_bytes_formula() {
+        assert_eq!(packed_b_panel_bytes(0), 0);
+        assert_eq!(packed_b_panel_bytes(256), NR * 256 * 4);
+    }
 
     #[test]
     fn pack_a_layout() {

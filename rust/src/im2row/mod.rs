@@ -12,6 +12,7 @@
 use crate::gemm::{sgemm_prepacked, PackedB};
 use crate::parallel::ThreadPool;
 use crate::tensor::Tensor;
+use crate::workspace::Workspace;
 use crate::{bail_shape, Result};
 
 /// An im2row convolution with a pre-transposed weight matrix, reusable
@@ -79,8 +80,20 @@ impl Im2RowConvolution {
         Ok(((h + 2 * ph - kh) / sh + 1, (w + 2 * pw - kw) / sw + 1))
     }
 
-    /// Build the patch matrix `[N·OH·OW, KH·KW·C]`.
-    pub fn im2row(&self, input: &Tensor, pool: Option<&ThreadPool>) -> Result<Vec<f32>> {
+    /// Workspace elements ([`f32`]s) one inference over an `[n, h, w, C]`
+    /// input borrows from the arena — the full patch matrix.
+    pub fn workspace_elems_for(&self, n: usize, h: usize, w: usize) -> Result<usize> {
+        let (oh, ow) = self.output_hw(h, w)?;
+        Ok(n * oh * ow * self.kernel.0 * self.kernel.1 * self.cin)
+    }
+
+    /// Fill a caller-provided patch matrix `[N·OH·OW, KH·KW·C]`.
+    fn im2row_into(
+        &self,
+        input: &Tensor,
+        pool: Option<&ThreadPool>,
+        patches: &mut [f32],
+    ) -> Result<()> {
         let (n, h, w, c) = (
             input.shape()[0],
             input.shape()[1],
@@ -102,7 +115,7 @@ impl Im2RowConvolution {
         let src = padded.as_ref().unwrap_or(input);
         let k_total = kh * kw * c;
         let rows = n * oh * ow;
-        let mut patches = vec![0.0f32; rows * k_total];
+        debug_assert_eq!(patches.len(), rows * k_total);
         let p_addr = patches.as_mut_ptr() as usize;
         let fill_row = |row: usize| {
             let b = row / (oh * ow);
@@ -125,23 +138,57 @@ impl Im2RowConvolution {
             Some(pool) => pool.parallel_for(rows, fill_row),
             None => (0..rows).for_each(fill_row),
         }
+        Ok(())
+    }
+
+    /// Build the patch matrix `[N·OH·OW, KH·KW·C]` as a fresh vector.
+    pub fn im2row(&self, input: &Tensor, pool: Option<&ThreadPool>) -> Result<Vec<f32>> {
+        let (n, h, w) = (input.shape()[0], input.shape()[1], input.shape()[2]);
+        let mut patches = vec![0.0f32; self.workspace_elems_for(n, h, w)?];
+        self.im2row_into(input, pool, &mut patches)?;
         Ok(patches)
     }
 
     /// Full convolution: im2row + one GEMM.
+    ///
+    /// Allocates a throwaway [`Workspace`]; hot loops should hold one and
+    /// call [`run_with_workspace`](Self::run_with_workspace) so the im2row
+    /// baseline stays apples-to-apples with the arena-backed Winograd path.
     pub fn run(&self, input: &Tensor, pool: Option<&ThreadPool>) -> Result<Tensor> {
+        let mut ws = Workspace::new();
+        self.run_with_workspace(input, pool, &mut ws)
+    }
+
+    /// [`run`](Self::run) drawing the patch matrix from a caller-owned
+    /// arena — no heap allocation beyond the output tensor (and the padded
+    /// input copy, when the layer pads) once the arena is at size.
+    pub fn run_with_workspace(
+        &self,
+        input: &Tensor,
+        pool: Option<&ThreadPool>,
+        ws: &mut Workspace,
+    ) -> Result<Tensor> {
         if input.rank() != 4 {
             bail_shape!("input must be [N, H, W, C], got {:?}", input.shape());
         }
-        let (n, h, w) = (input.shape()[0], input.shape()[1], input.shape()[2]);
+        let (n, h, w, c) = (
+            input.shape()[0],
+            input.shape()[1],
+            input.shape()[2],
+            input.shape()[3],
+        );
+        if c != self.cin {
+            bail_shape!("input has {c} channels, weights expect {}", self.cin);
+        }
         let (oh, ow) = self.output_hw(h, w)?;
-        let patches = self.im2row(input, pool)?;
         let rows = n * oh * ow;
         let k_total = self.kernel.0 * self.kernel.1 * self.cin;
+        let patches = ws.take(self.workspace_elems_for(n, h, w)?);
+        self.im2row_into(input, pool, patches)?;
         let mut out = Tensor::zeros(&[n, oh, ow, self.cout]);
         sgemm_prepacked(
             rows,
-            &patches,
+            patches,
             k_total,
             &self.wt_packed,
             out.data_mut(),
@@ -214,6 +261,28 @@ mod tests {
         let a = im2row_conv2d(&input, &weights, (1, 1), (1, 1), None).unwrap();
         let b = im2row_conv2d(&input, &weights, (1, 1), (1, 1), Some(&pool)).unwrap();
         assert!(b.allclose(&a, 1e-6));
+    }
+
+    #[test]
+    fn workspace_reused_across_runs() {
+        let weights = Tensor::randn(&[8, 3, 3, 4], 9);
+        let conv = Im2RowConvolution::new(&weights, (1, 1), (1, 1)).unwrap();
+        let mut ws = Workspace::new();
+        let mut outs = Vec::new();
+        for seed in 0..3u64 {
+            let input = Tensor::randn(&[1, 10, 10, 4], seed + 1);
+            outs.push(conv.run_with_workspace(&input, None, &mut ws).unwrap());
+        }
+        assert_eq!(ws.grow_count(), 1, "patch matrix drawn from one arena");
+        assert_eq!(
+            ws.high_water_elems(),
+            conv.workspace_elems_for(1, 10, 10).unwrap(),
+            "sizing formula matches actual borrow"
+        );
+        // Same numbers as the allocating path.
+        let input = Tensor::randn(&[1, 10, 10, 4], 1);
+        let plain = conv.run(&input, None).unwrap();
+        assert!(outs[0].allclose(&plain, 1e-6));
     }
 
     #[test]

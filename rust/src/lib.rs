@@ -13,9 +13,13 @@
 //! * [`gemm`] — a packed, blocked GEMM with a SIMD micro-kernel; both the
 //!   Winograd scheme and the im2row baseline sit on this shared substrate so
 //!   benchmarks isolate the *algorithmic* difference.
+//! * [`workspace`] — the reusable per-thread scratch arena: every executor
+//!   owns one [`workspace::Workspace`] sized to its largest layer, so
+//!   steady-state inference allocates nothing inside the Winograd stages.
 //! * [`winograd`] — the paper's contribution: Cook-Toom transform generation,
-//!   hard-coded fast transforms for the five variants, and the region-wise
-//!   multi-channel scatter → x² GEMMs → gather pipeline.
+//!   hard-coded fast transforms for the five variants, and the **region-
+//!   blocked** region-wise multi-channel scatter → x² GEMMs → gather
+//!   pipeline (blocks of regions sized to an L2 budget, default 512 KiB).
 //! * [`im2row`] — the classical im2row/im2col + GEMM comparator.
 //! * [`conv`] — the public convolution API, direct-convolution oracle and the
 //!   per-layer algorithm selector.
@@ -25,7 +29,8 @@
 //! * [`coordinator`] — the L3 serving runtime: request queue, batcher,
 //!   worker pool and metrics.
 //! * [`runtime`] — PJRT loader that executes the JAX/Pallas-lowered HLO
-//!   artifacts for cross-validation.
+//!   artifacts for cross-validation (behind the `pjrt` cargo feature; a
+//!   stub that reports `Error::Runtime` ships for offline builds).
 //! * [`bench`] — the statistical benchmarking harness and the table printers
 //!   that regenerate the paper's Tables 1–2 and Figure 3.
 //! * [`parallel`], [`util`], [`testkit`] — threadpool, RNG/CLI/stats
@@ -51,6 +56,7 @@ pub mod simd;
 pub mod tensor;
 pub mod parallel;
 pub mod gemm;
+pub mod workspace;
 pub mod winograd;
 pub mod im2row;
 pub mod conv;

@@ -10,13 +10,15 @@
 //! the rest (Table 1 / Figure 3).
 
 use super::ops;
-use crate::conv::select::{is_winograd_suitable, select_variant_spatial, MIN_CHANNEL_PRODUCT};
-use crate::conv::Conv2d;
+use crate::conv::select::is_winograd_suitable;
+use crate::conv::{Conv2d, ConvAlgorithm};
 use crate::im2row::Im2RowConvolution;
 use crate::parallel::ThreadPool;
 use crate::tensor::Tensor;
 use crate::winograd::WinogradConvolution;
+use crate::workspace::Workspace;
 use crate::{bail_shape, Result};
+use std::sync::Mutex;
 use std::time::Instant;
 
 /// Node identifier within a [`Graph`].
@@ -270,10 +272,20 @@ pub struct PreparedModel {
     nodes: Vec<Node>,
     prepared: Vec<PreparedOp>,
     shapes: Vec<Vec<usize>>,
+    /// Arena elements the largest conv layer borrows per inference.
+    ws_elems: usize,
+    /// The built-in arena [`run`](Self::run) uses, pre-sized to `ws_elems`
+    /// at prepare time so steady-state inference never grows it.
+    ws: Mutex<Workspace>,
 }
 
 impl PreparedModel {
     /// Bind every conv layer of `graph` per `scheme` for `input_shape`.
+    ///
+    /// Binding resolves each conv through the shape-aware selector
+    /// ([`Conv2d::resolved_algorithm_for`]) so small feature maps get the
+    /// 2×2-tile variant, and pre-sizes the model's workspace arena to the
+    /// largest layer's scratch requirement.
     pub fn prepare(
         name: &str,
         graph: &Graph,
@@ -282,25 +294,40 @@ impl PreparedModel {
     ) -> Result<PreparedModel> {
         let shapes = graph.infer_shapes(input_shape)?;
         let mut prepared = Vec::with_capacity(graph.nodes.len());
-        for (idx, node) in graph.nodes.iter().enumerate() {
+        let mut ws_elems = 0usize;
+        for node in graph.nodes.iter() {
             let p = match &node.op {
                 Op::Input => PreparedOp::Passthrough,
                 Op::Conv { desc, weights, bias, relu } => {
-                    let out_shape = &shapes[idx];
-                    let use_wino = scheme == Scheme::WinogradWhereSuitable
-                        && is_winograd_suitable(desc.kernel, desc.stride)
-                        && desc.cin * desc.cout >= MIN_CHANNEL_PRODUCT;
-                    let conv = if use_wino {
-                        let v = select_variant_spatial(desc.kernel, out_shape[1], out_shape[2])
-                            .expect("suitable layer must have a variant");
-                        PreparedConv::Winograd(WinogradConvolution::new(v, weights, desc.padding)?)
-                    } else {
-                        PreparedConv::Im2Row(Im2RowConvolution::new(
+                    let in_shape = &shapes[node.inputs[0]];
+                    let auto = Conv2d {
+                        algorithm: ConvAlgorithm::Auto,
+                        ..desc.clone()
+                    };
+                    let resolved = auto.resolved_algorithm_for(in_shape);
+                    let conv = match (scheme, resolved) {
+                        (Scheme::WinogradWhereSuitable, ConvAlgorithm::Winograd(v)) => {
+                            PreparedConv::Winograd(WinogradConvolution::new(
+                                v,
+                                weights,
+                                desc.padding,
+                            )?)
+                        }
+                        _ => PreparedConv::Im2Row(Im2RowConvolution::new(
                             weights,
                             desc.stride,
                             desc.padding,
-                        )?)
+                        )?),
                     };
+                    let need = match &conv {
+                        PreparedConv::Winograd(wc) => {
+                            wc.workspace_elems_for(in_shape[0], in_shape[1], in_shape[2])?
+                        }
+                        PreparedConv::Im2Row(ic) => {
+                            ic.workspace_elems_for(in_shape[0], in_shape[1], in_shape[2])?
+                        }
+                    };
+                    ws_elems = ws_elems.max(need);
                     PreparedOp::Conv {
                         conv,
                         bias: bias.clone(),
@@ -317,7 +344,22 @@ impl PreparedModel {
             nodes: graph.nodes.clone(),
             prepared,
             shapes,
+            ws_elems,
+            ws: Mutex::new(Workspace::with_capacity(ws_elems)),
         })
+    }
+
+    /// Arena elements the largest layer needs — what a per-worker
+    /// [`Workspace`] should be pre-sized to (see [`crate::coordinator`]).
+    pub fn workspace_elems(&self) -> usize {
+        self.ws_elems
+    }
+
+    /// Built-in arena statistics: `(bytes, grow_count)`. `grow_count` must
+    /// stay 0 across inferences — the arena is pre-sized at prepare time.
+    pub fn workspace_stats(&self) -> (usize, usize) {
+        let ws = self.ws.lock().unwrap();
+        (ws.bytes(), ws.grow_count())
     }
 
     /// Expected input shape.
@@ -331,11 +373,29 @@ impl PreparedModel {
     }
 
     /// Execute one inference, returning the final tensor and per-layer
-    /// timings.
+    /// timings. Layer scratch comes from the model's built-in pre-sized
+    /// arena when it is free; a *concurrent* `run` on the same model falls
+    /// back to a throwaway arena rather than serialising behind the mutex
+    /// (callers that want a dedicated steady-state arena per thread — like
+    /// the engine's dispatcher — use
+    /// [`run_with_workspace`](Self::run_with_workspace)).
     pub fn run(
         &self,
         input: &Tensor,
         pool: Option<&ThreadPool>,
+    ) -> Result<(Tensor, Vec<LayerTiming>)> {
+        match self.ws.try_lock() {
+            Ok(mut ws) => self.run_with_workspace(input, pool, &mut ws),
+            Err(_) => self.run_with_workspace(input, pool, &mut Workspace::new()),
+        }
+    }
+
+    /// [`run`](Self::run) with a caller-owned workspace arena.
+    pub fn run_with_workspace(
+        &self,
+        input: &Tensor,
+        pool: Option<&ThreadPool>,
+        ws: &mut Workspace,
     ) -> Result<(Tensor, Vec<LayerTiming>)> {
         if input.shape() != self.input_shape() {
             bail_shape!(
@@ -369,14 +429,15 @@ impl PreparedModel {
                         PreparedConv::Winograd(wc) => {
                             winograd = true;
                             fast_layer = true;
-                            // Bias + ReLU fused into the output transform.
-                            wc.run_fused(x, pool, Some(bias), *relu)?
+                            // Bias + ReLU fused into the output transform;
+                            // A/C blocks drawn from the shared arena.
+                            wc.run_fused_with(x, pool, Some(bias), *relu, ws)?
                         }
                         PreparedConv::Im2Row(ic) => {
                             if let Op::Conv { desc, .. } = &node.op {
                                 fast_layer = is_winograd_suitable(desc.kernel, desc.stride);
                             }
-                            let mut y = ic.run(x, pool)?;
+                            let mut y = ic.run_with_workspace(x, pool, ws)?;
                             ops::bias_relu_inplace(&mut y, bias, *relu)?;
                             y
                         }
@@ -531,5 +592,41 @@ mod tests {
         let (a, _) = m.run(&input, None).unwrap();
         let (b, _) = m.run(&input, Some(&pool)).unwrap();
         assert!(b.allclose(&a, 1e-5));
+    }
+
+    /// The arena-reuse guarantee: prepare() pre-sizes the built-in arena to
+    /// the largest layer, so repeated inferences never grow it.
+    #[test]
+    fn workspace_not_regrown_across_inferences() {
+        let g = tiny_graph(11);
+        let m =
+            PreparedModel::prepare("tiny", &g, &[1, 8, 8, 3], Scheme::WinogradWhereSuitable)
+                .unwrap();
+        assert!(m.workspace_elems() > 0, "model has conv layers needing scratch");
+        let (bytes0, grows0) = m.workspace_stats();
+        assert_eq!(bytes0, m.workspace_elems() * 4);
+        for seed in 0..3 {
+            let input = Tensor::randn(&[1, 8, 8, 3], seed);
+            let _ = m.run(&input, None).unwrap();
+        }
+        let (bytes1, grows1) = m.workspace_stats();
+        assert_eq!(grows0, 0);
+        assert_eq!(grows1, 0, "steady-state inference must not grow the arena");
+        assert_eq!(bytes0, bytes1);
+    }
+
+    /// An explicit per-worker arena (the coordinator's pattern) sized from
+    /// `workspace_elems()` also never grows.
+    #[test]
+    fn explicit_worker_arena_never_grows() {
+        let g = tiny_graph(13);
+        let m = PreparedModel::prepare("tiny", &g, &[1, 8, 8, 3], Scheme::Im2RowOnly).unwrap();
+        let mut ws = Workspace::with_capacity(m.workspace_elems());
+        for seed in 0..2 {
+            let input = Tensor::randn(&[1, 8, 8, 3], seed + 20);
+            let _ = m.run_with_workspace(&input, None, &mut ws).unwrap();
+        }
+        assert_eq!(ws.grow_count(), 0);
+        assert!(ws.high_water_elems() <= m.workspace_elems());
     }
 }

@@ -8,7 +8,7 @@
 //! chunking beats work-stealing here and mirrors how the paper pins work to
 //! the big cluster.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
@@ -103,33 +103,138 @@ impl ThreadPool {
         // the granularity.
         let target_chunks = self.n_threads * 4;
         let chunk = (n.div_ceil(target_chunks)).max(granularity);
-        let cursor = AtomicUsize::new(0);
-        // SAFETY of lifetimes: achieved with std::thread::scope — workers in
-        // the pool cannot borrow `body`, so we run the chunked loop on scoped
-        // threads instead of the pool's own queue. The pool still bounds the
-        // parallelism degree.
         let k = self.n_threads.min(n.div_ceil(chunk));
-        thread::scope(|s| {
-            for _ in 0..k.saturating_sub(1) {
-                s.spawn(|| {
-                    loop {
-                        let start = cursor.fetch_add(chunk, Ordering::Relaxed);
-                        if start >= n {
-                            break;
-                        }
-                        body(start, (start + chunk).min(n));
-                    }
-                });
+        if k <= 1 {
+            // Single-chunk dispatch: run inline and skip the scope setup.
+            // Region-blocked Winograd stages issue many small dispatches
+            // (one per block), so this path is hot.
+            let mut start = 0;
+            while start < n {
+                let end = (start + chunk).min(n);
+                body(start, end);
+                start = end;
             }
-            // The calling thread participates too.
-            loop {
-                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
-                if start >= n {
-                    break;
-                }
-                body(start, (start + chunk).min(n));
-            }
+            return;
+        }
+        // Fork-join over the pool's *persistent* workers. Earlier revisions
+        // spawned scoped threads per call; the region-blocked Winograd
+        // pipeline issues one dispatch per block per stage, which made the
+        // per-call spawn cost a measurable tax. Helpers share an atomic
+        // chunk cursor with the calling thread, which participates and then
+        // blocks until every helper has signalled completion.
+        //
+        // SAFETY of lifetimes: `body` is published to the helpers as a raw
+        // pointer, and the `CompletionGuard` guarantees (on both the normal
+        // and the panicking path) that this call does not return before
+        // every helper is done dereferencing it. Do not call
+        // `parallel_for*` from inside a pool job on the same pool — nested
+        // dispatch could then wait on helpers that have no free worker to
+        // run on.
+        let body_dyn: &(dyn Fn(usize, usize) + Sync) = &body;
+        // SAFETY: pure lifetime erasure of a fat pointer for storage; only
+        // dereferenced under the CompletionGuard's liveness guarantee.
+        let body_ptr: *const (dyn Fn(usize, usize) + Sync) =
+            unsafe { std::mem::transmute(body_dyn) };
+        let job = Arc::new(ForkJoin {
+            cursor: AtomicUsize::new(0),
+            n,
+            chunk,
+            body: body_ptr,
+            pending: Mutex::new(k - 1),
+            done: Condvar::new(),
+            poisoned: AtomicBool::new(false),
         });
+        for _ in 0..k - 1 {
+            let helper = Arc::clone(&job);
+            self.submit(move || {
+                // Decrements `pending` on drop — and records the panic, if
+                // any — even if the body unwinds.
+                let _signal = HelperGuard(&helper);
+                helper.work();
+            });
+        }
+        // The calling thread participates too; the guard then waits for the
+        // helpers whether the body returns or unwinds.
+        let _wait = CompletionGuard(&job);
+        job.work();
+        drop(_wait);
+        // A helper-side body panic must reach the caller like the old
+        // scoped-thread join did, not vanish into a worker thread.
+        if job.poisoned.load(Ordering::Relaxed) {
+            panic!("parallel_for body panicked in a worker thread");
+        }
+    }
+}
+
+/// Shared state of one `parallel_for_chunked` dispatch.
+struct ForkJoin {
+    cursor: AtomicUsize,
+    n: usize,
+    chunk: usize,
+    /// The dispatch body, lifetime-erased. Only dereferenced while the
+    /// dispatching call frame is alive (enforced by `CompletionGuard`); a
+    /// raw pointer rather than a reference so a helper's `Arc<ForkJoin>`
+    /// outliving that frame by a beat carries no validity obligation.
+    body: *const (dyn Fn(usize, usize) + Sync),
+    /// Helpers still running (the caller is not counted).
+    pending: Mutex<usize>,
+    done: Condvar,
+    /// Set when a helper's body panicked; the caller re-raises after the
+    /// join so dispatch panics behave like the scoped-thread version did.
+    poisoned: AtomicBool,
+}
+
+// SAFETY: `body` points at a `Sync` closure and is only dereferenced while
+// the dispatching `parallel_for_chunked` frame keeps it alive; all other
+// fields are thread-safe primitives.
+unsafe impl Send for ForkJoin {}
+unsafe impl Sync for ForkJoin {}
+
+impl ForkJoin {
+    fn work(&self) {
+        // SAFETY: the dispatching frame outlives every `work` call (see
+        // `CompletionGuard`), so the pointee is valid here.
+        let body = unsafe { &*self.body };
+        loop {
+            let start = self.cursor.fetch_add(self.chunk, Ordering::Relaxed);
+            if start >= self.n {
+                break;
+            }
+            body(start, (start + self.chunk).min(self.n));
+        }
+    }
+}
+
+/// Signals helper completion on drop (panic-safe).
+struct HelperGuard<'a>(&'a ForkJoin);
+
+impl Drop for HelperGuard<'_> {
+    fn drop(&mut self) {
+        if thread::panicking() {
+            self.0.poisoned.store(true, Ordering::Relaxed);
+        }
+        let mut pending = self.0.pending.lock().unwrap_or_else(|e| e.into_inner());
+        *pending -= 1;
+        if *pending == 0 {
+            self.0.done.notify_all();
+        }
+    }
+}
+
+/// Blocks until every helper signalled, on drop (panic-safe: the caller's
+/// borrow of `body` must not end while helpers still use it).
+struct CompletionGuard<'a>(&'a ForkJoin);
+
+impl Drop for CompletionGuard<'_> {
+    fn drop(&mut self) {
+        let mut pending = self.0.pending.lock().unwrap_or_else(|e| e.into_inner());
+        while *pending > 0 {
+            pending = self
+                .0
+                .done
+                .wait(pending)
+                .unwrap_or_else(|e| e.into_inner());
+        }
     }
 }
 
@@ -148,7 +253,12 @@ fn worker_loop(shared: Arc<Shared>) {
             }
         };
         match job {
-            Some(job) => job(),
+            // A panicking job must not kill the (persistent) worker: the
+            // fork-join above records and re-raises body panics on the
+            // dispatching thread, and the pool keeps its full width.
+            Some(job) => {
+                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+            }
             None => return,
         }
     }
@@ -221,6 +331,30 @@ mod tests {
         // Dropping the pool joins all workers after the queue drains.
         drop(pool);
         assert_eq!(counter.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    #[should_panic]
+    fn body_panic_reaches_the_caller() {
+        let pool = ThreadPool::new(4);
+        // Every chunk panics, so whichever thread claims work panics; a
+        // helper-side panic must be re-raised on the calling thread.
+        pool.parallel_for(1000, |i| panic!("boom at {i}"));
+    }
+
+    #[test]
+    fn pool_survives_body_panics() {
+        let pool = ThreadPool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.parallel_for(100, |_| panic!("transient"));
+        }));
+        assert!(r.is_err(), "panic must propagate to the dispatching thread");
+        // The persistent workers survived and the pool still dispatches.
+        let sum = AtomicU64::new(0);
+        pool.parallel_for(100, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4950);
     }
 
     #[test]

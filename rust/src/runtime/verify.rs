@@ -3,137 +3,168 @@
 //! lowered to HLO and executed via PJRT, and (b) the native Rust
 //! region-wise pipeline — the numbers must agree. This is experiment E9
 //! in DESIGN.md and the heart of `examples/pjrt_verify.rs`.
+//!
+//! Like the loader in [`super`], the real implementation is behind the
+//! `pjrt` feature; without it [`verify_all`] returns an explanatory
+//! [`Error::Runtime`](crate::Error::Runtime).
 
-use super::PjrtRuntime;
-use crate::conv::direct::direct_conv2d;
-use crate::nn::ops;
-use crate::tensor::Tensor;
-use crate::util::rel_error;
-use crate::winograd::{winograd_conv2d, WinogradVariant};
+#[cfg(not(feature = "pjrt"))]
 use crate::{Error, Result};
+#[cfg(not(feature = "pjrt"))]
 use std::path::Path;
 
-/// One artifact ↔ Rust pairing.
-struct Case {
-    /// Artifact file stem.
-    name: &'static str,
-    /// Input tensor shapes fed to both sides.
-    inputs: Vec<Vec<usize>>,
-    /// Rust-side computation of the same function.
-    rust: fn(&[Tensor]) -> Result<Tensor>,
+/// Stub: PJRT is not compiled in, so nothing can be verified.
+#[cfg(not(feature = "pjrt"))]
+pub fn verify_all(_dir: &Path, verbose: bool) -> Result<()> {
+    if verbose {
+        eprintln!("pjrt feature disabled — skipping artifact cross-validation");
+    }
+    Err(Error::Runtime(
+        "PJRT verification unavailable: rebuild with `--features pjrt` and the vendored `xla` \
+         crate (see Cargo.toml)"
+            .into(),
+    ))
 }
 
-fn cases() -> Vec<Case> {
-    vec![
-        Case {
-            name: "conv_f2x2_3x3",
-            inputs: vec![vec![1, 16, 16, 8], vec![16, 3, 3, 8]],
-            rust: |t| winograd_conv2d(WinogradVariant::F2x2_3x3, &t[0], &t[1], (1, 1), None),
-        },
-        Case {
-            name: "conv_f4x4_3x3",
-            inputs: vec![vec![1, 24, 24, 16], vec![32, 3, 3, 16]],
-            rust: |t| winograd_conv2d(WinogradVariant::F4x4_3x3, &t[0], &t[1], (1, 1), None),
-        },
-        Case {
-            name: "conv_f2x2_5x5",
-            inputs: vec![vec![1, 12, 12, 8], vec![8, 5, 5, 8]],
-            rust: |t| winograd_conv2d(WinogradVariant::F2x2_5x5, &t[0], &t[1], (2, 2), None),
-        },
-        Case {
-            name: "conv_f2_1x7",
-            inputs: vec![vec![1, 8, 32, 8], vec![16, 1, 7, 8]],
-            rust: |t| winograd_conv2d(WinogradVariant::F2_1x7, &t[0], &t[1], (0, 3), None),
-        },
-        Case {
-            name: "mini_cnn",
-            inputs: vec![
-                vec![1, 16, 16, 4],
-                vec![8, 3, 3, 4],
-                vec![8, 3, 3, 8],
-                vec![8, 10],
-            ],
-            rust: |t| {
-                let mut h = direct_conv2d(&t[0], &t[1], (1, 1), (1, 1))?;
-                ops::relu_inplace(&mut h);
-                let mut h = direct_conv2d(&h, &t[2], (1, 1), (1, 1))?;
-                ops::relu_inplace(&mut h);
-                let gap = ops::global_avg_pool(&h)?;
-                let flat = gap.reshape(&[1, 8])?;
-                ops::fully_connected(&flat, &t[3], &[0.0; 10], false)
+#[cfg(feature = "pjrt")]
+pub use real::verify_all;
+
+#[cfg(feature = "pjrt")]
+mod real {
+    use super::super::PjrtRuntime;
+    use crate::conv::direct::direct_conv2d;
+    use crate::nn::ops;
+    use crate::tensor::Tensor;
+    use crate::util::rel_error;
+    use crate::winograd::{winograd_conv2d, WinogradVariant};
+    use crate::{Error, Result};
+    use std::path::Path;
+
+    /// One artifact ↔ Rust pairing.
+    struct Case {
+        /// Artifact file stem.
+        name: &'static str,
+        /// Input tensor shapes fed to both sides.
+        inputs: Vec<Vec<usize>>,
+        /// Rust-side computation of the same function.
+        rust: fn(&[Tensor]) -> Result<Tensor>,
+    }
+
+    fn cases() -> Vec<Case> {
+        vec![
+            Case {
+                name: "conv_f2x2_3x3",
+                inputs: vec![vec![1, 16, 16, 8], vec![16, 3, 3, 8]],
+                rust: |t| winograd_conv2d(WinogradVariant::F2x2_3x3, &t[0], &t[1], (1, 1), None),
             },
-        },
-    ]
-}
+            Case {
+                name: "conv_f4x4_3x3",
+                inputs: vec![vec![1, 24, 24, 16], vec![32, 3, 3, 16]],
+                rust: |t| winograd_conv2d(WinogradVariant::F4x4_3x3, &t[0], &t[1], (1, 1), None),
+            },
+            Case {
+                name: "conv_f2x2_5x5",
+                inputs: vec![vec![1, 12, 12, 8], vec![8, 5, 5, 8]],
+                rust: |t| winograd_conv2d(WinogradVariant::F2x2_5x5, &t[0], &t[1], (2, 2), None),
+            },
+            Case {
+                name: "conv_f2_1x7",
+                inputs: vec![vec![1, 8, 32, 8], vec![16, 1, 7, 8]],
+                rust: |t| winograd_conv2d(WinogradVariant::F2_1x7, &t[0], &t[1], (0, 3), None),
+            },
+            Case {
+                name: "mini_cnn",
+                inputs: vec![
+                    vec![1, 16, 16, 4],
+                    vec![8, 3, 3, 4],
+                    vec![8, 3, 3, 8],
+                    vec![8, 10],
+                ],
+                rust: |t| {
+                    let mut h = direct_conv2d(&t[0], &t[1], (1, 1), (1, 1))?;
+                    ops::relu_inplace(&mut h);
+                    let mut h = direct_conv2d(&h, &t[2], (1, 1), (1, 1))?;
+                    ops::relu_inplace(&mut h);
+                    let gap = ops::global_avg_pool(&h)?;
+                    let flat = gap.reshape(&[1, 8])?;
+                    ops::fully_connected(&flat, &t[3], &[0.0; 10], false)
+                },
+            },
+        ]
+    }
 
-/// Run every artifact found in `dir` against its Rust twin.
-///
-/// Returns `Err` on the first numeric mismatch (rel err > 1e-3) or load
-/// failure; missing artifacts are skipped with a warning so the test suite
-/// can run before `make artifacts`.
-pub fn verify_all(dir: &Path, verbose: bool) -> Result<()> {
-    let rt = PjrtRuntime::cpu()?;
-    if verbose {
-        println!("PJRT: {}", rt.describe());
-    }
-    let mut ran = 0usize;
-    for case in cases() {
-        let path = dir.join(format!("{}.hlo.txt", case.name));
-        if !path.exists() {
-            eprintln!("skipping {} (artifact missing — run `make artifacts`)", case.name);
-            continue;
-        }
-        let exe = rt.load_hlo_text(&path)?;
-        // Deterministic inputs, scaled down so deep products stay tame.
-        let tensors: Vec<Tensor> = case
-            .inputs
-            .iter()
-            .enumerate()
-            .map(|(i, shape)| {
-                let mut t = Tensor::randn(shape, 0xC0FFEE + i as u64);
-                for v in t.data_mut() {
-                    *v *= 0.25;
-                }
-                t
-            })
-            .collect();
-        let refs: Vec<&Tensor> = tensors.iter().collect();
-        let xla_out = exe.run(&refs)?;
-        let rust_out = (case.rust)(&tensors)?;
-        if xla_out.len() != 1 {
-            return Err(Error::Runtime(format!(
-                "{}: expected 1 output, got {}",
-                case.name,
-                xla_out.len()
-            )));
-        }
-        let err = rel_error(rust_out.data(), xla_out[0].data());
+    /// Run every artifact found in `dir` against its Rust twin.
+    ///
+    /// Returns `Err` on the first numeric mismatch (rel err > 1e-3) or load
+    /// failure; missing artifacts are skipped with a warning so the test
+    /// suite can run before `make artifacts`.
+    pub fn verify_all(dir: &Path, verbose: bool) -> Result<()> {
+        let rt = PjrtRuntime::cpu()?;
         if verbose {
-            println!(
-                "{:<16} shapes {:?} -> {:?}  rel-err {err:.2e}",
-                case.name,
-                case.inputs,
-                rust_out.shape()
-            );
+            println!("PJRT: {}", rt.describe());
         }
-        if rust_out.shape() != xla_out[0].shape() {
-            return Err(Error::Runtime(format!(
-                "{}: shape mismatch rust {:?} vs xla {:?}",
-                case.name,
-                rust_out.shape(),
-                xla_out[0].shape()
-            )));
+        let mut ran = 0usize;
+        for case in cases() {
+            let path = dir.join(format!("{}.hlo.txt", case.name));
+            if !path.exists() {
+                eprintln!(
+                    "skipping {} (artifact missing — run `make artifacts`)",
+                    case.name
+                );
+                continue;
+            }
+            let exe = rt.load_hlo_text(&path)?;
+            // Deterministic inputs, scaled down so deep products stay tame.
+            let tensors: Vec<Tensor> = case
+                .inputs
+                .iter()
+                .enumerate()
+                .map(|(i, shape)| {
+                    let mut t = Tensor::randn(shape, 0xC0FFEE + i as u64);
+                    for v in t.data_mut() {
+                        *v *= 0.25;
+                    }
+                    t
+                })
+                .collect();
+            let refs: Vec<&Tensor> = tensors.iter().collect();
+            let xla_out = exe.run(&refs)?;
+            let rust_out = (case.rust)(&tensors)?;
+            if xla_out.len() != 1 {
+                return Err(Error::Runtime(format!(
+                    "{}: expected 1 output, got {}",
+                    case.name,
+                    xla_out.len()
+                )));
+            }
+            let err = rel_error(rust_out.data(), xla_out[0].data());
+            if verbose {
+                println!(
+                    "{:<16} shapes {:?} -> {:?}  rel-err {err:.2e}",
+                    case.name,
+                    case.inputs,
+                    rust_out.shape()
+                );
+            }
+            if rust_out.shape() != xla_out[0].shape() {
+                return Err(Error::Runtime(format!(
+                    "{}: shape mismatch rust {:?} vs xla {:?}",
+                    case.name,
+                    rust_out.shape(),
+                    xla_out[0].shape()
+                )));
+            }
+            if err > 1e-3 {
+                return Err(Error::Runtime(format!(
+                    "{}: rel error {err} exceeds 1e-3",
+                    case.name
+                )));
+            }
+            ran += 1;
         }
-        if err > 1e-3 {
-            return Err(Error::Runtime(format!(
-                "{}: rel error {err} exceeds 1e-3",
-                case.name
-            )));
+        if verbose {
+            println!("verified {ran} artifact(s) against the Rust engine");
         }
-        ran += 1;
+        Ok(())
     }
-    if verbose {
-        println!("verified {ran} artifact(s) against the Rust engine");
-    }
-    Ok(())
 }

@@ -1,4 +1,5 @@
-//! The region-wise multi-channel pipeline (the paper's §2, Figure 2):
+//! The region-wise multi-channel pipeline (the paper's §2, Figure 2),
+//! executed **region-blocked** over a reusable workspace arena:
 //!
 //! 1. **Input transform** — walk the regions of the NHWC input, transform
 //!    each `th×tw` tile into the Winograd domain four channels at a time and
@@ -13,18 +14,48 @@
 //! The GEMM shape is `[R×C]·[C×M]` (not `[M×C]·[C×R]`) following §2.1.3:
 //! under NHWC the scattered channel vectors land contiguously in the rows of
 //! an `R×C` matrix (plain `STR` stores, no `ST4` interleaving).
+//!
+//! ## Region blocking
+//!
+//! Rather than materialising the whole feature map in the Winograd domain
+//! (an `x²·R·C` A buffer plus an `x²·R·M` C buffer per layer — the
+//! cache-hostile working-set blow-up that lets FFT/ im2row catch up on
+//! large layers), the pipeline processes regions in **blocks**: scatter →
+//! `x²` GEMMs → gather run per block of `Rb` regions, where `Rb` is chosen
+//! so the A block, C block and one packed-B panel together fit an L2 budget
+//! ([`DEFAULT_L2_BUDGET`], overridable per convolution with
+//! [`WinogradConvolution::with_block_budget`] or globally with the
+//! `WINOCONV_L2_BUDGET` env var). The block scratch comes from a caller-
+//! provided [`Workspace`] arena, so steady-state inference allocates
+//! nothing inside stages 1–3.
 
 use super::{fast, transform::transform_tile_lanes, transform::transform_tile_scalar};
 use super::{WinogradPlan, WinogradVariant};
-use crate::gemm::{BatchedGemm, PackedB};
+use crate::gemm::{pack::packed_b_panel_bytes, BatchedGemm, Blocking, PackedB};
 use crate::parallel::ThreadPool;
 use crate::simd::F32x4;
 use crate::tensor::Tensor;
 use crate::util::ceil_div;
+use crate::workspace::Workspace;
 use crate::{bail_shape, bail_unsupported, Result};
 
 /// Maximum input-tile edge among shipped variants (F(4,7) ⇒ 10).
 const MAX_T: usize = 10;
+
+/// Default per-block workspace budget: the A block, C block and one
+/// packed-B panel of a region block must fit in this many bytes. Sized for
+/// the ~512 KiB–1 MiB L2 of the mobile cores the paper targets.
+pub const DEFAULT_L2_BUDGET: usize = 512 * 1024;
+
+/// The block budget in effect for new convolutions: `WINOCONV_L2_BUDGET`
+/// (bytes) when set and parseable, else [`DEFAULT_L2_BUDGET`].
+pub fn default_block_budget() -> usize {
+    std::env::var("WINOCONV_L2_BUDGET")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&b| b > 0)
+        .unwrap_or(DEFAULT_L2_BUDGET)
+}
 
 /// A Winograd convolution with pre-transformed weights, reusable across
 /// inputs (weights are transformed once per layer, as in the paper — filter
@@ -35,6 +66,8 @@ pub struct WinogradConvolution {
     cin: usize,
     cout: usize,
     pad: (usize, usize),
+    /// Per-block workspace budget in bytes (see [`DEFAULT_L2_BUDGET`]).
+    block_budget: usize,
     /// Transformed weights `[tile][C][M]` pre-packed into GEMM panel
     /// layout, one per tile position (EXPERIMENTS.md §Perf step 2: packing
     /// B per call dominated skinny-R layers; now it happens once here).
@@ -87,8 +120,22 @@ impl WinogradConvolution {
             cin,
             cout: m_out,
             pad,
+            block_budget: default_block_budget(),
             u_packed,
         })
+    }
+
+    /// Builder: override the per-block workspace budget in bytes. A budget
+    /// smaller than one region's footprint degenerates to one region per
+    /// block; `usize::MAX` disables blocking (one block spans the layer).
+    pub fn with_block_budget(mut self, bytes: usize) -> Self {
+        self.block_budget = bytes.max(1);
+        self
+    }
+
+    /// The per-block workspace budget in bytes.
+    pub fn block_budget(&self) -> usize {
+        self.block_budget
     }
 
     /// The plan in use.
@@ -113,7 +160,48 @@ impl WinogradConvolution {
         Ok((h + 2 * ph - kh + 1, w + 2 * pw - kw + 1))
     }
 
+    /// Regions per block under the budget: the largest `Rb` such that the
+    /// A block (`x²·Rb·C`), C block (`x²·Rb·M`) and one packed-B panel fit
+    /// in [`block_budget`](Self::block_budget) bytes, aligned down to whole
+    /// tile rows when possible and clamped to `[1, regions]`.
+    fn block_regions(&self, regions: usize, tiles_w: usize) -> usize {
+        let tiles = self.plan.variant.gemm_count();
+        let per_region = tiles * (self.cin + self.cout) * std::mem::size_of::<f32>();
+        let panel = packed_b_panel_bytes(Blocking::default().kc.min(self.cin.max(1)));
+        let avail = self.block_budget.saturating_sub(panel);
+        let mut rb = (avail / per_region).max(1);
+        if rb >= tiles_w {
+            rb -= rb % tiles_w;
+        }
+        rb.clamp(1, regions.max(1))
+    }
+
+    /// Regions per block for an `[n, h, w, C]` input (see `block_regions`).
+    pub fn regions_per_block(&self, n: usize, h: usize, w: usize) -> Result<usize> {
+        let (oh, ow) = self.output_hw(h, w)?;
+        let (mh, mw) = self.plan.variant.out_tile();
+        let (tiles_h, tiles_w) = (ceil_div(oh, mh), ceil_div(ow, mw));
+        Ok(self.block_regions(n * tiles_h * tiles_w, tiles_w))
+    }
+
+    /// Per-block workspace bytes (A block + C block) for an `[n, h, w, C]`
+    /// input — the number that must sit under the configured L2 budget.
+    pub fn block_workspace_bytes(&self, n: usize, h: usize, w: usize) -> Result<usize> {
+        Ok(self.workspace_elems_for(n, h, w)? * std::mem::size_of::<f32>())
+    }
+
+    /// Workspace elements ([`f32`]s) one inference over an `[n, h, w, C]`
+    /// input borrows from the arena — used to pre-size per-thread arenas.
+    pub fn workspace_elems_for(&self, n: usize, h: usize, w: usize) -> Result<usize> {
+        let rb = self.regions_per_block(n, h, w)?;
+        let tiles = self.plan.variant.gemm_count();
+        Ok(tiles * rb * (self.cin + self.cout))
+    }
+
     /// Run the three-stage pipeline. `pool` parallelises regions and GEMMs.
+    ///
+    /// Allocates a throwaway [`Workspace`]; hot loops should hold one and
+    /// call [`run_fused_with`](Self::run_fused_with) instead.
     pub fn run(&self, input: &Tensor, pool: Option<&ThreadPool>) -> Result<Tensor> {
         self.run_fused(input, pool, None, false)
     }
@@ -128,6 +216,23 @@ impl WinogradConvolution {
         pool: Option<&ThreadPool>,
         bias: Option<&[f32]>,
         relu: bool,
+    ) -> Result<Tensor> {
+        let mut ws = Workspace::new();
+        self.run_fused_with(input, pool, bias, relu, &mut ws)
+    }
+
+    /// The region-blocked pipeline over a caller-owned arena: blocks of
+    /// `Rb` regions flow through scatter → `x²` batched GEMMs → gather, and
+    /// the only heap traffic is the arena's one-time growth (none at all
+    /// once `ws` is at size — the zero-steady-state-allocation property the
+    /// arena-reuse tests pin).
+    pub fn run_fused_with(
+        &self,
+        input: &Tensor,
+        pool: Option<&ThreadPool>,
+        bias: Option<&[f32]>,
+        relu: bool,
+        ws: &mut Workspace,
     ) -> Result<Tensor> {
         if input.rank() != 4 {
             bail_shape!("input must be [N, H, W, C], got {:?}", input.shape());
@@ -153,6 +258,7 @@ impl WinogradConvolution {
         let tiles = th * tw;
         let (tiles_h, tiles_w) = (ceil_div(oh, mh), ceil_div(ow, mw));
         let regions = n * tiles_h * tiles_w;
+        let m_total = self.cout;
 
         // Stage 0: pad so every tile is in-bounds (right/bottom rounded up
         // to the tile grid).
@@ -161,160 +267,174 @@ impl WinogradConvolution {
         let need_w = tiles_w * mw + tw - mw;
         let padded = input.pad_spatial(ph, need_h - h - ph, pw, need_w - w - pw);
 
-        // Stage 1: input transform + scatter into A `[tile][R][C]`.
-        let mut a_mat = vec![0.0f32; tiles * regions * c];
-        {
-            let a_addr = a_mat.as_mut_ptr() as usize;
-            let transform_region = |region: usize| {
-                let b = region / (tiles_h * tiles_w);
-                let rem = region % (tiles_h * tiles_w);
-                let (ty, tx) = (rem / tiles_w, rem % tiles_w);
-                let (y0, x0) = (ty * mh, tx * mw);
-                let mut d = [F32x4::zero(); MAX_T * MAX_T];
-                let mut out = [F32x4::zero(); MAX_T * MAX_T];
-                let mut tmp = [F32x4::zero(); MAX_T * MAX_T];
-                for cg in (0..c).step_by(4) {
-                    let lanes = (c - cg).min(4);
-                    // Gather the th×tw tile for this 4-channel group.
-                    for i in 0..th {
-                        for j in 0..tw {
-                            let px = padded.pixel(b, y0 + i, x0 + j);
-                            d[i * tw + j] = if lanes == 4 {
-                                F32x4::load(&px[cg..cg + 4])
-                            } else {
-                                F32x4::load_partial(&px[cg..])
-                            };
-                        }
-                    }
-                    // Transform (fast path when available).
-                    match v {
-                        WinogradVariant::F2x2_3x3 => fast::input_transform_4x4(&d, &mut out),
-                        // F(2,5) shares F(4,3)'s interpolation points, hence
-                        // the identical 6×6 Bᵀ (pinned by a fast.rs test).
-                        WinogradVariant::F4x4_3x3 | WinogradVariant::F2x2_5x5 => {
-                            fast::input_transform_6x6(&d, &mut out)
-                        }
-                        _ => transform_tile_lanes(
-                            &self.plan.h.bt,
-                            &self.plan.w.bt,
-                            &d[..th * tw],
-                            &mut out,
-                            &mut tmp,
-                        ),
-                    }
-                    // Scatter: A[t][region][cg..] — contiguous channel run in
-                    // the row of an R×C matrix (§2.1.3 unstructured stores).
-                    for t in 0..tiles {
-                        // SAFETY: each region writes its own row slice only.
-                        let dst: &mut [f32] = unsafe {
-                            std::slice::from_raw_parts_mut(
-                                (a_addr as *mut f32).add(t * regions * c + region * c + cg),
-                                lanes,
-                            )
-                        };
-                        out[t].store_partial(dst, lanes);
-                    }
-                }
-            };
-            match pool {
-                Some(pool) => pool.parallel_for(regions, transform_region),
-                None => (0..regions).for_each(transform_region),
-            }
-        }
+        let mut output = Tensor::zeros(&[n, oh, ow, m_total]);
 
-        // Stage 2: x² batched GEMMs — [R×C]·[C×M] per tile position.
-        let bgd = BatchedGemm {
-            batch: tiles,
-            m: regions,
-            k: c,
-            n: self.cout,
-        };
-        let mut c_mat = vec![0.0f32; tiles * regions * self.cout];
-        bgd.run_prepacked(pool, &a_mat, &self.u_packed, &mut c_mat);
-        drop(a_mat);
+        // One A/C block pair for the whole layer, reused across blocks.
+        let rb = self.block_regions(regions, tiles_w);
+        let (a_blk, c_blk) = ws.split2(tiles * rb * c, tiles * rb * m_total);
 
-        // Stage 3: gather + output transform.
-        let mut output = Tensor::zeros(&[n, oh, ow, self.cout]);
-        {
-            let out_addr = output.data_mut().as_mut_ptr() as usize;
-            let m_total = self.cout;
-            let inverse_region = |region: usize| {
-                let b = region / (tiles_h * tiles_w);
-                let rem = region % (tiles_h * tiles_w);
-                let (ty, tx) = (rem / tiles_w, rem % tiles_w);
-                let (y0, x0) = (ty * mh, tx * mw);
-                let valid_h = (oh - y0).min(mh);
-                let valid_w = (ow - x0).min(mw);
-                let mut t_in = [F32x4::zero(); MAX_T * MAX_T];
-                let mut y_out = [F32x4::zero(); MAX_T * MAX_T];
-                let mut tmp = [F32x4::zero(); MAX_T * MAX_T];
-                for mg in (0..m_total).step_by(4) {
-                    let lanes = (m_total - mg).min(4);
-                    // Gather the x² values of this region/channel-group.
-                    for t in 0..tiles {
-                        let src = &c_mat[t * regions * m_total + region * m_total + mg..];
-                        t_in[t] = if lanes == 4 {
-                            F32x4::load(&src[..4])
-                        } else {
-                            F32x4::load_partial(&src[..lanes])
-                        };
-                    }
-                    match v {
-                        WinogradVariant::F2x2_3x3 => fast::output_transform_4x4(&t_in, &mut y_out),
-                        WinogradVariant::F4x4_3x3 => fast::output_transform_6x6(&t_in, &mut y_out),
-                        WinogradVariant::F2x2_5x5 => {
-                            fast::output_transform_6x6_to_2x2(&t_in, &mut y_out)
-                        }
-                        _ => transform_tile_lanes(
-                            &self.plan.h.at,
-                            &self.plan.w.at,
-                            &t_in[..tiles],
-                            &mut y_out,
-                            &mut tmp,
-                        ),
-                    }
-                    // Fused epilogue: bias + ReLU while the tile is hot.
-                    if bias.is_some() || relu {
-                        let bv = match bias {
-                            Some(b) => F32x4::load_partial(&b[mg..mg + lanes]),
-                            None => F32x4::zero(),
-                        };
-                        for yv in y_out[..mh * mw].iter_mut() {
-                            let mut t = *yv + bv;
-                            if relu {
-                                t = t.max(F32x4::zero());
+        for r0 in (0..regions).step_by(rb) {
+            let bm = (regions - r0).min(rb);
+
+            // Stage 1: input transform + scatter into A `[tile][bm][C]`.
+            {
+                let a_addr = a_blk.as_mut_ptr() as usize;
+                let transform_region = |li: usize| {
+                    let region = r0 + li;
+                    let b = region / (tiles_h * tiles_w);
+                    let rem = region % (tiles_h * tiles_w);
+                    let (ty, tx) = (rem / tiles_w, rem % tiles_w);
+                    let (y0, x0) = (ty * mh, tx * mw);
+                    let mut d = [F32x4::zero(); MAX_T * MAX_T];
+                    let mut out = [F32x4::zero(); MAX_T * MAX_T];
+                    let mut tmp = [F32x4::zero(); MAX_T * MAX_T];
+                    for cg in (0..c).step_by(4) {
+                        let lanes = (c - cg).min(4);
+                        // Gather the th×tw tile for this 4-channel group.
+                        for i in 0..th {
+                            for j in 0..tw {
+                                let px = padded.pixel(b, y0 + i, x0 + j);
+                                d[i * tw + j] = if lanes == 4 {
+                                    F32x4::load(&px[cg..cg + 4])
+                                } else {
+                                    F32x4::load_partial(&px[cg..])
+                                };
                             }
-                            *yv = t;
                         }
-                    }
-                    // Write the valid part of the mh×mw output tile.
-                    for i in 0..valid_h {
-                        for j in 0..valid_w {
-                            let off = (((b * oh + y0 + i) * ow) + x0 + j) * m_total + mg;
-                            // SAFETY: output tiles are disjoint across regions.
+                        // Transform (fast path when available).
+                        match v {
+                            WinogradVariant::F2x2_3x3 => fast::input_transform_4x4(&d, &mut out),
+                            // F(2,5) shares F(4,3)'s interpolation points, hence
+                            // the identical 6×6 Bᵀ (pinned by a fast.rs test).
+                            WinogradVariant::F4x4_3x3 | WinogradVariant::F2x2_5x5 => {
+                                fast::input_transform_6x6(&d, &mut out)
+                            }
+                            _ => transform_tile_lanes(
+                                &self.plan.h.bt,
+                                &self.plan.w.bt,
+                                &d[..th * tw],
+                                &mut out,
+                                &mut tmp,
+                            ),
+                        }
+                        // Scatter: A[t][li][cg..] — contiguous channel run in
+                        // the row of an R×C matrix (§2.1.3 unstructured stores).
+                        for t in 0..tiles {
+                            // SAFETY: each block-local region li writes its
+                            // own row slice only.
                             let dst: &mut [f32] = unsafe {
                                 std::slice::from_raw_parts_mut(
-                                    (out_addr as *mut f32).add(off),
+                                    (a_addr as *mut f32).add(t * bm * c + li * c + cg),
                                     lanes,
                                 )
                             };
-                            y_out[i * mw + j].store_partial(dst, lanes);
+                            out[t].store_partial(dst, lanes);
                         }
                     }
+                };
+                match pool {
+                    Some(pool) => pool.parallel_for(bm, transform_region),
+                    None => (0..bm).for_each(transform_region),
                 }
+            }
+
+            // Stage 2: x² batched GEMMs — [bm×C]·[C×M] per tile position.
+            let bgd = BatchedGemm {
+                batch: tiles,
+                m: bm,
+                k: c,
+                n: m_total,
             };
-            match pool {
-                Some(pool) => pool.parallel_for(regions, inverse_region),
-                None => (0..regions).for_each(inverse_region),
+            bgd.run_prepacked(pool, &a_blk[..], &self.u_packed, &mut c_blk[..]);
+
+            // Stage 3: gather + output transform.
+            {
+                let out_addr = output.data_mut().as_mut_ptr() as usize;
+                let c_ref: &[f32] = &c_blk[..];
+                let inverse_region = |li: usize| {
+                    let region = r0 + li;
+                    let b = region / (tiles_h * tiles_w);
+                    let rem = region % (tiles_h * tiles_w);
+                    let (ty, tx) = (rem / tiles_w, rem % tiles_w);
+                    let (y0, x0) = (ty * mh, tx * mw);
+                    let valid_h = (oh - y0).min(mh);
+                    let valid_w = (ow - x0).min(mw);
+                    let mut t_in = [F32x4::zero(); MAX_T * MAX_T];
+                    let mut y_out = [F32x4::zero(); MAX_T * MAX_T];
+                    let mut tmp = [F32x4::zero(); MAX_T * MAX_T];
+                    for mg in (0..m_total).step_by(4) {
+                        let lanes = (m_total - mg).min(4);
+                        // Gather the x² values of this region/channel-group.
+                        for t in 0..tiles {
+                            let src = &c_ref[t * bm * m_total + li * m_total + mg..];
+                            t_in[t] = if lanes == 4 {
+                                F32x4::load(&src[..4])
+                            } else {
+                                F32x4::load_partial(&src[..lanes])
+                            };
+                        }
+                        match v {
+                            WinogradVariant::F2x2_3x3 => {
+                                fast::output_transform_4x4(&t_in, &mut y_out)
+                            }
+                            WinogradVariant::F4x4_3x3 => {
+                                fast::output_transform_6x6(&t_in, &mut y_out)
+                            }
+                            WinogradVariant::F2x2_5x5 => {
+                                fast::output_transform_6x6_to_2x2(&t_in, &mut y_out)
+                            }
+                            _ => transform_tile_lanes(
+                                &self.plan.h.at,
+                                &self.plan.w.at,
+                                &t_in[..tiles],
+                                &mut y_out,
+                                &mut tmp,
+                            ),
+                        }
+                        // Fused epilogue: bias + ReLU while the tile is hot.
+                        if bias.is_some() || relu {
+                            let bv = match bias {
+                                Some(b) => F32x4::load_partial(&b[mg..mg + lanes]),
+                                None => F32x4::zero(),
+                            };
+                            for yv in y_out[..mh * mw].iter_mut() {
+                                let mut t = *yv + bv;
+                                if relu {
+                                    t = t.max(F32x4::zero());
+                                }
+                                *yv = t;
+                            }
+                        }
+                        // Write the valid part of the mh×mw output tile.
+                        for i in 0..valid_h {
+                            for j in 0..valid_w {
+                                let off = (((b * oh + y0 + i) * ow) + x0 + j) * m_total + mg;
+                                // SAFETY: output tiles are disjoint across regions.
+                                let dst: &mut [f32] = unsafe {
+                                    std::slice::from_raw_parts_mut(
+                                        (out_addr as *mut f32).add(off),
+                                        lanes,
+                                    )
+                                };
+                                y_out[i * mw + j].store_partial(dst, lanes);
+                            }
+                        }
+                    }
+                };
+                match pool {
+                    Some(pool) => pool.parallel_for(bm, inverse_region),
+                    None => (0..bm).for_each(inverse_region),
+                }
             }
         }
 
         Ok(output)
     }
 
-    /// Size of the Winograd-domain workspace in bytes for an input
-    /// `[n, h, w, c]` (A + C matrices) — the number the paper's memory
-    /// budget discussion cares about.
+    /// Size of the **unblocked** Winograd-domain working set in bytes for an
+    /// input `[n, h, w, c]` (full A + C matrices) — the number the paper's
+    /// memory budget discussion cares about, and what region blocking caps
+    /// at [`block_workspace_bytes`](Self::block_workspace_bytes).
     pub fn workspace_bytes(&self, n: usize, h: usize, w: usize) -> Result<usize> {
         let (oh, ow) = self.output_hw(h, w)?;
         let (mh, mw) = self.plan.variant.out_tile();
@@ -435,6 +555,97 @@ mod tests {
         }
     }
 
+    /// The tentpole equivalence: forcing many small region blocks (budget 1
+    /// byte ⇒ one region per block) must reproduce the unblocked result
+    /// (budget `usize::MAX` ⇒ one block) bit-for-bit-close, for every
+    /// shipped variant, on odd shapes with partial tiles, serial and
+    /// pooled.
+    #[test]
+    fn blocked_matches_unblocked_all_variants() {
+        let pool = ThreadPool::new(3);
+        for v in WinogradVariant::ALL {
+            let (kh, kw) = v.kernel();
+            // Odd extents ⇒ ragged tile grids on both axes for 2-D variants.
+            let (h, w) = (kh + 9, kw + 11);
+            let input = Tensor::randn(&[2, h, w, 5], 3);
+            let weights = Tensor::randn(&[7, kh, kw, 5], 4);
+            let unblocked = WinogradConvolution::new(v, &weights, (0, 0))
+                .unwrap()
+                .with_block_budget(usize::MAX);
+            let blocked = WinogradConvolution::new(v, &weights, (0, 0))
+                .unwrap()
+                .with_block_budget(1);
+            let want = unblocked.run(&input, None).unwrap();
+            let got = blocked.run(&input, None).unwrap();
+            assert_eq!(got.shape(), want.shape(), "{v}");
+            assert!(got.allclose(&want, 1e-5), "{v}: blocked != unblocked (serial)");
+            let got_par = blocked.run(&input, Some(&pool)).unwrap();
+            assert!(got_par.allclose(&want, 1e-5), "{v}: blocked != unblocked (pool)");
+            let direct = direct_conv2d(&input, &weights, (1, 1), (0, 0)).unwrap();
+            assert!(got.allclose(&direct, 2e-3), "{v}: blocked != direct");
+        }
+    }
+
+    /// A mid-sized budget that yields several multi-region blocks (the
+    /// realistic configuration, between the two extremes above).
+    #[test]
+    fn blocked_mid_budget_matches_direct() {
+        let weights = Tensor::randn(&[16, 3, 3, 8], 5);
+        let conv = WinogradConvolution::new(WinogradVariant::F4x4_3x3, &weights, (1, 1))
+            .unwrap()
+            .with_block_budget(36 * (8 + 16) * 4 * 3 + packed_b_panel_bytes(8));
+        let rb = conv.regions_per_block(1, 18, 18).unwrap();
+        assert!(rb >= 2, "budget should allow several regions, got {rb}");
+        let regions = 5 * 5; // ceil(18/4)^2
+        assert!(rb < regions, "budget should force multiple blocks, got {rb}");
+        let input = Tensor::randn(&[1, 18, 18, 8], 6);
+        let got = conv.run(&input, None).unwrap();
+        let want = direct_conv2d(&input, &weights, (1, 1), (1, 1)).unwrap();
+        assert!(got.allclose(&want, 5e-4));
+    }
+
+    /// Repeated runs over one arena must not re-grow it, and a pre-sized
+    /// arena must never grow at all.
+    #[test]
+    fn workspace_reused_across_runs() {
+        let weights = Tensor::randn(&[16, 3, 3, 8], 7);
+        let conv = WinogradConvolution::new(WinogradVariant::F4x4_3x3, &weights, (1, 1)).unwrap();
+        let mut ws = Workspace::new();
+        for seed in 0..3 {
+            let input = Tensor::randn(&[1, 12, 12, 8], seed + 10);
+            let _ = conv.run_fused_with(&input, None, None, false, &mut ws).unwrap();
+        }
+        assert_eq!(ws.grow_count(), 1, "one growth on first use, then reuse");
+
+        let elems = conv.workspace_elems_for(1, 12, 12).unwrap();
+        let mut presized = Workspace::with_capacity(elems);
+        let input = Tensor::randn(&[1, 12, 12, 8], 99);
+        let _ = conv
+            .run_fused_with(&input, None, None, false, &mut presized)
+            .unwrap();
+        assert_eq!(presized.grow_count(), 0, "pre-sized arena must not grow");
+        assert_eq!(presized.high_water_elems(), elems, "sizing formula is exact");
+    }
+
+    #[test]
+    fn block_sizing_respects_budget() {
+        let weights = Tensor::randn(&[32, 3, 3, 16], 8);
+        for budget in [64 * 1024, 256 * 1024, DEFAULT_L2_BUDGET] {
+            let conv = WinogradConvolution::new(WinogradVariant::F4x4_3x3, &weights, (1, 1))
+                .unwrap()
+                .with_block_budget(budget);
+            let per_block = conv.block_workspace_bytes(1, 56, 56).unwrap();
+            let rb = conv.regions_per_block(1, 56, 56).unwrap();
+            // Either the block fits the budget, or it degenerated to the
+            // 1-region minimum (budget below one region's footprint).
+            assert!(
+                per_block + packed_b_panel_bytes(16) <= budget || rb == 1,
+                "budget {budget}: per-block {per_block} B, rb {rb}"
+            );
+            assert!(rb >= 1);
+        }
+    }
+
     #[test]
     fn rejects_wrong_kernel_shape() {
         let weights = Tensor::randn(&[8, 5, 5, 4], 3);
@@ -456,5 +667,7 @@ mod tests {
         // 8×8 input, pad 1 ⇒ 8×8 output ⇒ 4×4 regions = 16; 16 tiles.
         let ws = conv.workspace_bytes(1, 8, 8).unwrap();
         assert_eq!(ws, 16 * 16 * (8 + 16) * 4);
+        // The blocked working set never exceeds the unblocked one.
+        assert!(conv.block_workspace_bytes(1, 8, 8).unwrap() <= ws);
     }
 }

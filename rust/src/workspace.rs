@@ -1,0 +1,161 @@
+//! A reusable `f32` workspace arena for the convolution hot path.
+//!
+//! The region-wise Winograd pipeline needs two scratch matrices per layer
+//! (the Winograd-domain A block and C block) and the im2row baseline needs
+//! one (the patch matrix). Allocating them per call is exactly the
+//! working-set churn the paper's memory-budget discussion warns about, so
+//! every executor thread instead owns one [`Workspace`] sized to the largest
+//! layer it will run: [`crate::nn::PreparedModel`] pre-sizes one at prepare
+//! time, and the [`crate::coordinator`] dispatcher owns one per worker loop.
+//! Steady-state inference then performs **zero heap allocations** inside
+//! Winograd stages 1–3 (scatter → batched GEMMs → gather).
+//!
+//! The arena is deliberately dumb: one flat buffer, borrowed as one or two
+//! disjoint slices per layer, fully overwritten by each user (no zeroing on
+//! reuse — every borrower writes its whole slice before reading). The
+//! [`grow_count`](Workspace::grow_count) statistic exists so tests can
+//! assert the no-regrowth property instead of trusting it.
+//!
+//! ```
+//! use winoconv::workspace::Workspace;
+//! let mut ws = Workspace::new();
+//! let (a, c) = ws.split2(8, 4);
+//! a[0] = 1.0;
+//! c[3] = 2.0;
+//! assert_eq!(ws.grow_count(), 1); // first borrow grew the empty arena
+//! let _ = ws.split2(8, 4);
+//! assert_eq!(ws.grow_count(), 1); // reuse does not grow
+//! ```
+
+/// A growable flat `f32` arena handed out as per-layer scratch slices.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    buf: Vec<f32>,
+    grows: usize,
+    high_water: usize,
+}
+
+impl Workspace {
+    /// An empty arena; the first borrow sizes it.
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// An arena pre-sized to `elems` `f32` values, so borrows up to that
+    /// size never grow (and [`grow_count`](Self::grow_count) stays 0).
+    pub fn with_capacity(elems: usize) -> Workspace {
+        Workspace {
+            buf: vec![0.0; elems],
+            grows: 0,
+            high_water: 0,
+        }
+    }
+
+    /// Current arena size in elements.
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Current arena size in bytes.
+    pub fn bytes(&self) -> usize {
+        self.buf.len() * std::mem::size_of::<f32>()
+    }
+
+    /// How many times a borrow had to grow the buffer. A steady-state hot
+    /// loop must keep this constant after the first pass (zero when the
+    /// arena was pre-sized with [`with_capacity`](Self::with_capacity)).
+    pub fn grow_count(&self) -> usize {
+        self.grows
+    }
+
+    /// Largest borrow observed, in elements.
+    pub fn high_water_elems(&self) -> usize {
+        self.high_water
+    }
+
+    fn ensure(&mut self, elems: usize) {
+        self.high_water = self.high_water.max(elems);
+        if self.buf.len() < elems {
+            self.grows += 1;
+            self.buf.resize(elems, 0.0);
+        }
+    }
+
+    /// Borrow one scratch slice of `elems` values. Contents are
+    /// unspecified — the borrower must write before reading.
+    pub fn take(&mut self, elems: usize) -> &mut [f32] {
+        self.ensure(elems);
+        &mut self.buf[..elems]
+    }
+
+    /// Borrow two disjoint scratch slices of `a` and `b` values (the
+    /// Winograd A/C block pair). Contents are unspecified.
+    pub fn split2(&mut self, a: usize, b: usize) -> (&mut [f32], &mut [f32]) {
+        self.ensure(a + b);
+        let (x, rest) = self.buf.split_at_mut(a);
+        (x, &mut rest[..b])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grows_once_then_reuses() {
+        let mut ws = Workspace::new();
+        assert_eq!(ws.capacity(), 0);
+        {
+            let s = ws.take(100);
+            assert_eq!(s.len(), 100);
+        }
+        assert_eq!(ws.grow_count(), 1);
+        for _ in 0..10 {
+            let _ = ws.take(100);
+        }
+        assert_eq!(ws.grow_count(), 1);
+        assert_eq!(ws.capacity(), 100);
+        // A bigger request grows again; smaller ones never shrink it.
+        let _ = ws.take(150);
+        assert_eq!(ws.grow_count(), 2);
+        let _ = ws.take(10);
+        assert_eq!(ws.capacity(), 150);
+        assert_eq!(ws.high_water_elems(), 150);
+    }
+
+    #[test]
+    fn presized_never_grows() {
+        let mut ws = Workspace::with_capacity(64);
+        for n in [1usize, 32, 64] {
+            let _ = ws.split2(n / 2, n - n / 2);
+        }
+        assert_eq!(ws.grow_count(), 0);
+        assert_eq!(ws.bytes(), 64 * 4);
+    }
+
+    #[test]
+    fn split2_slices_are_disjoint_and_sized() {
+        let mut ws = Workspace::new();
+        let (a, b) = ws.split2(5, 7);
+        assert_eq!(a.len(), 5);
+        assert_eq!(b.len(), 7);
+        for v in a.iter_mut() {
+            *v = 1.0;
+        }
+        for v in b.iter_mut() {
+            *v = 2.0;
+        }
+        // Re-borrow and check the writes landed in disjoint regions.
+        let (a, b) = ws.split2(5, 7);
+        assert!(a.iter().all(|&v| v == 1.0));
+        assert!(b.iter().all(|&v| v == 2.0));
+    }
+
+    #[test]
+    fn zero_sized_borrows_are_fine() {
+        let mut ws = Workspace::new();
+        let (a, b) = ws.split2(0, 0);
+        assert!(a.is_empty() && b.is_empty());
+        assert_eq!(ws.grow_count(), 0);
+    }
+}

@@ -11,7 +11,8 @@ use winoconv::nn::{PreparedModel, Scheme};
 use winoconv::parallel::ThreadPool;
 use winoconv::tensor::Tensor;
 use winoconv::testkit::{check, Gen};
-use winoconv::winograd::{winograd_conv2d, WinogradVariant};
+use winoconv::winograd::{winograd_conv2d, WinogradConvolution, WinogradVariant};
+use winoconv::workspace::Workspace;
 use winoconv::zoo::ModelKind;
 
 /// Property: for any geometry a variant accepts, the region-wise pipeline
@@ -85,6 +86,9 @@ fn squeezenet_schemes_agree() {
     // Softmax output is a distribution either way.
     let s: f32 = y2.data().iter().sum();
     assert!((s - 1.0).abs() < 1e-3);
+    // The pre-sized arenas must not have grown during inference.
+    assert_eq!(base.workspace_stats().1, 0, "im2row arena regrew");
+    assert_eq!(ours.workspace_stats().1, 0, "winograd arena regrew");
 }
 
 /// GoogleNet end-to-end through branches/concats/LRN under the Winograd
@@ -166,6 +170,44 @@ fn conv2d_algorithm_matrix() {
             .unwrap();
         assert!(got.allclose(&reference, 2e-3), "{alg} diverges");
     }
+}
+
+/// The public per-layer workspace API: repeated runs over one arena match
+/// the allocating path and never re-grow the arena after the first pass.
+#[test]
+fn conv2d_workspace_api_matches_run() {
+    let conv = Conv2d::new(8, 16, (3, 3)).with_padding((1, 1));
+    let x = Tensor::randn(&[1, 12, 12, 8], 5);
+    let w = conv.random_weights(6);
+    let plain = conv.run(&x, &w).unwrap();
+    let mut ws = Workspace::new();
+    for _ in 0..3 {
+        let got = conv.run_with_workspace(&x, &w, None, &mut ws).unwrap();
+        assert!(got.allclose(&plain, 1e-6));
+    }
+    assert_eq!(ws.grow_count(), 1, "arena grows once, then steady state");
+}
+
+/// Region blocking is a pure execution-strategy change: a tiny block budget
+/// (many blocks) and an unbounded one (single block) agree bit-for-bit-close
+/// on a ragged shape, under a pool.
+#[test]
+fn blocked_execution_equals_unblocked_end_to_end() {
+    let pool = ThreadPool::new(2);
+    let weights = Tensor::randn(&[24, 3, 3, 12], 8);
+    let input = Tensor::randn(&[1, 23, 19, 12], 9);
+    let unblocked = WinogradConvolution::new(WinogradVariant::F4x4_3x3, &weights, (1, 1))
+        .unwrap()
+        .with_block_budget(usize::MAX);
+    let blocked = WinogradConvolution::new(WinogradVariant::F4x4_3x3, &weights, (1, 1))
+        .unwrap()
+        .with_block_budget(8 * 1024);
+    let want = unblocked.run(&input, Some(&pool)).unwrap();
+    let got = blocked.run(&input, Some(&pool)).unwrap();
+    assert!(got.allclose(&want, 1e-5));
+    // And both agree with the oracle.
+    let direct = direct_conv2d(&input, &weights, (1, 1), (1, 1)).unwrap();
+    assert!(got.allclose(&direct, 2e-3));
 }
 
 /// Inception-v3's 1-D factorised layers run through the real variants.
