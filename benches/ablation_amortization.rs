@@ -13,22 +13,85 @@
 //! VGG-ish layer: per-block workspace bytes must stay under each budget
 //! while wall time stays flat-to-better vs the unblocked configuration —
 //! the amortisation argument applied to the memory axis.
+//!
+//! **E6** is the fusion ablation: the fused pipeline (transform-as-pack +
+//! gather-as-epilogue, C never materialised) vs the staged three-pass
+//! pipeline (`run_staged_with`) on the Table-1 flagship's (VGG-16) fast
+//! layers — the wall-clock value of moving Winograd-domain data through
+//! the cache hierarchy once.
+//!
+//! `--smoke` runs a tiny-shape E6 only (with an equality assert) — the CI
+//! bench bit-rot gate wired into `ci.sh`.
 
+use winoconv::bench::workloads::unique_fast_layers;
 use winoconv::bench::{measure, BenchConfig, Table};
 use winoconv::im2row::Im2RowConvolution;
 use winoconv::parallel::ThreadPool;
 use winoconv::tensor::Tensor;
 use winoconv::util::cli::Args;
 use winoconv::winograd::{WinogradConvolution, WinogradVariant};
+use winoconv::workspace::Workspace;
+use winoconv::zoo::ModelKind;
+
+/// E6: fused vs staged on one layer; returns (staged ms, fused ms).
+#[allow(clippy::too_many_arguments)]
+fn e6_layer(
+    pool: &ThreadPool,
+    cfg: &BenchConfig,
+    wino: &WinogradConvolution,
+    input: &Tensor,
+    bias: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    check_equal: bool,
+) -> winoconv::Result<(f64, f64, usize, usize)> {
+    let staged_elems = wino.staged_workspace_elems_for(n, h, w)?;
+    let fused_elems = wino.workspace_elems_for(n, h, w)?;
+    let mut ws_s = Workspace::with_capacity(staged_elems);
+    let mut ws_f = Workspace::with_capacity(fused_elems);
+    if check_equal {
+        let a = wino.run_staged_with(input, Some(pool), Some(bias), true, &mut ws_s)?;
+        let b = wino.run_fused_with(input, Some(pool), Some(bias), true, &mut ws_f)?;
+        assert!(a.allclose(&b, 1e-4), "E6: fused != staged");
+    }
+    let staged = measure(cfg, || {
+        let _ = wino
+            .run_staged_with(input, Some(pool), Some(bias), true, &mut ws_s)
+            .unwrap();
+    });
+    let fused = measure(cfg, || {
+        let _ = wino
+            .run_fused_with(input, Some(pool), Some(bias), true, &mut ws_f)
+            .unwrap();
+    });
+    Ok((staged.median / 1e6, fused.median / 1e6, staged_elems, fused_elems))
+}
 
 fn main() -> winoconv::Result<()> {
-    let args = Args::from_env(&["quick", "bench"])?;
+    let args = Args::from_env(&["quick", "bench", "smoke"])?;
     let threads: usize = args.get_parse_or(
         "threads",
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
     )?;
     let pool = ThreadPool::new(threads);
     let cfg = if args.flag("quick") { BenchConfig::quick() } else { BenchConfig::from_env() };
+
+    if args.flag("smoke") {
+        // CI bit-rot gate: one tiny shape through both pipelines, asserted
+        // equal, under the quick measurement profile.
+        let cfg = BenchConfig::quick();
+        let weights = Tensor::randn(&[32, 3, 3, 32], 2);
+        let wino = WinogradConvolution::new(WinogradVariant::F4x4_3x3, &weights, (1, 1))?;
+        let input = Tensor::randn(&[1, 14, 14, 32], 3);
+        let bias: Vec<f32> = (0..32).map(|i| i as f32 * 1e-3).collect();
+        let (s_ms, f_ms, _, _) = e6_layer(&pool, &cfg, &wino, &input, &bias, 1, 14, 14, true)?;
+        println!(
+            "E6 smoke (14x14x32 -> 32, F(4x4,3x3)): staged {s_ms:.2} ms, fused {f_ms:.2} ms"
+        );
+        println!("smoke ok: benches run and fused == staged");
+        return Ok(());
+    }
 
     let (h, w, c_fixed) = (28usize, 28usize, 64usize);
     let input = Tensor::randn(&[1, h, w, c_fixed], 1);
@@ -109,8 +172,11 @@ fn main() -> winoconv::Result<()> {
         });
         let block_ws = wino.block_workspace_bytes(1, h, h)?;
         if budget != usize::MAX {
+            // The packed-A block is padded to whole MR row panels; a budget
+            // below one panel's footprint degenerates to the 1-region
+            // minimum, which may exceed it (same floor the unit tests pin).
             assert!(
-                block_ws <= budget,
+                block_ws <= budget || wino.regions_per_block(1, h, h)? == 1,
                 "per-block workspace {block_ws} B exceeds the {label} budget"
             );
         }
@@ -124,12 +190,39 @@ fn main() -> winoconv::Result<()> {
     }
     table.print();
 
+    // ---- E6: fused (transform-as-pack + gather-as-epilogue) vs staged ----
+    let mut table = Table::new(
+        "E6: fused vs staged pipeline (VGG-16 fast layers, F(4x4,3x3), bias+ReLU)",
+        &["layer", "staged ms", "fused ms", "speedup", "staged ws KiB", "fused ws KiB"],
+    );
+    for (spec, _count) in unique_fast_layers(ModelKind::Vgg16, 1)? {
+        let input = spec.input(11);
+        let weights = spec.weights(12);
+        let wino = WinogradConvolution::new(WinogradVariant::F4x4_3x3, &weights, spec.pad)?;
+        let bias: Vec<f32> = (0..spec.cout).map(|i| i as f32 * 1e-3).collect();
+        let (n, hh, ww) = (spec.input_shape[0], spec.input_shape[1], spec.input_shape[2]);
+        let (s_ms, f_ms, s_elems, f_elems) =
+            e6_layer(&pool, &cfg, &wino, &input, &bias, n, hh, ww, false)?;
+        table.row(&[
+            spec.name.clone(),
+            format!("{s_ms:.2}"),
+            format!("{f_ms:.2}"),
+            format!("{:.2}x", s_ms / f_ms),
+            format!("{}", s_elems * 4 / 1024),
+            format!("{}", f_elems * 4 / 1024),
+        ]);
+    }
+    table.print();
+
     println!(
         "shape check (paper §4): speedup rises with M and C and saturates;\n\
          at tiny C·M the transforms dominate — that region is why the selector\n\
          (conv::select) keeps shallow layers on im2row. E5c: per-block workspace\n\
          tracks the budget while runtime stays flat — blocking buys the memory\n\
-         cap for free."
+         cap for free. E6: the fused pipeline deletes the pack_a pass and the\n\
+         Winograd-domain C block entirely (fused ws column), so fused <= staged\n\
+         wall-clock is the expected shape on every layer — the paper's\n\
+         'interleave the stages' claim in one table."
     );
     Ok(())
 }

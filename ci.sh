@@ -16,6 +16,12 @@ run() {
 run cargo build --release
 run cargo test -q
 
+# Bench bit-rot gate: the bench binaries must keep building, and one
+# tiny-shape run of the fusion ablation must keep passing its fused==staged
+# assert — bench drift fails CI instead of rotting silently.
+run cargo build --release --benches
+run cargo bench --bench ablation_amortization -- --smoke
+
 if [[ "${1:-}" != "--no-lint" ]]; then
     if cargo fmt --version >/dev/null 2>&1; then
         run cargo fmt --check

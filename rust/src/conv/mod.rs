@@ -45,6 +45,29 @@ impl ConvAlgorithm {
     pub const WINOGRAD_F4X4_3X3: ConvAlgorithm = ConvAlgorithm::Winograd(WinogradVariant::F4x4_3x3);
 }
 
+/// Fused per-output-channel bias + activation, applied inside the conv's
+/// GEMM epilogue (never as a separate pass — conv outputs are written
+/// exactly once, already biased/activated).
+///
+/// Consulted by the `Conv2d::run*` family only. Graph nodes
+/// ([`crate::nn::Op::Conv`]) carry bias/relu directly on the op, and
+/// `PreparedModel::prepare` rejects a non-noop descriptor epilogue to keep
+/// a single source of truth.
+#[derive(Debug, Clone, Default)]
+pub struct ConvEpilogue {
+    /// Per-output-channel bias (length `cout`), added in the epilogue.
+    pub bias: Option<Vec<f32>>,
+    /// Clamp at zero after the bias.
+    pub relu: bool,
+}
+
+impl ConvEpilogue {
+    /// Does this descriptor do anything at all?
+    pub fn is_noop(&self) -> bool {
+        self.bias.is_none() && !self.relu
+    }
+}
+
 /// A 2-D convolution layer descriptor with a chosen algorithm.
 ///
 /// ```no_run
@@ -70,10 +93,13 @@ pub struct Conv2d {
     pub padding: (usize, usize),
     /// Algorithm choice (default [`ConvAlgorithm::Auto`]).
     pub algorithm: ConvAlgorithm,
+    /// Fused bias/ReLU descriptor (default: none) — executed inside the
+    /// GEMM epilogue on every algorithm path.
+    pub epilogue: ConvEpilogue,
 }
 
 impl Conv2d {
-    /// New stride-1, unpadded, auto-algorithm layer.
+    /// New stride-1, unpadded, auto-algorithm layer with no fused epilogue.
     pub fn new(cin: usize, cout: usize, kernel: (usize, usize)) -> Conv2d {
         Conv2d {
             cin,
@@ -82,6 +108,7 @@ impl Conv2d {
             stride: (1, 1),
             padding: (0, 0),
             algorithm: ConvAlgorithm::Auto,
+            epilogue: ConvEpilogue::default(),
         }
     }
 
@@ -100,6 +127,19 @@ impl Conv2d {
     /// Builder: force an algorithm.
     pub fn with_algorithm(mut self, algorithm: ConvAlgorithm) -> Conv2d {
         self.algorithm = algorithm;
+        self
+    }
+
+    /// Builder: fuse a per-output-channel bias (length `cout`) into the
+    /// conv's epilogue.
+    pub fn with_bias(mut self, bias: Vec<f32>) -> Conv2d {
+        self.epilogue.bias = Some(bias);
+        self
+    }
+
+    /// Builder: fuse a ReLU (after any bias) into the conv's epilogue.
+    pub fn with_relu(mut self, relu: bool) -> Conv2d {
+        self.epilogue.relu = relu;
         self
     }
 
@@ -166,6 +206,11 @@ impl Conv2d {
 
     /// [`run_with`](Self::run_with) drawing all layer scratch from a
     /// caller-owned arena (see [`crate::workspace`]).
+    ///
+    /// The layer's [`ConvEpilogue`] (bias/ReLU) executes fused on every
+    /// path: inside the GEMM epilogue for im2row, inside the gather
+    /// epilogue for Winograd, and as a post pass only on the `Direct`
+    /// oracle (which has no GEMM to fuse into).
     pub fn run_with_workspace(
         &self,
         input: &Tensor,
@@ -173,16 +218,27 @@ impl Conv2d {
         pool: Option<&ThreadPool>,
         ws: &mut Workspace,
     ) -> Result<Tensor> {
+        let bias = self.epilogue.bias.as_deref();
+        if let Some(b) = bias {
+            if b.len() != self.cout {
+                crate::bail_shape!("bias length {} vs {} output channels", b.len(), self.cout);
+            }
+        }
+        let relu = self.epilogue.relu;
         match self.resolved_algorithm_for(input.shape()) {
-            ConvAlgorithm::Direct => direct::direct_conv2d(input, weights, self.stride, self.padding),
+            ConvAlgorithm::Direct => {
+                let mut y = direct::direct_conv2d(input, weights, self.stride, self.padding)?;
+                apply_bias_relu(&mut y, bias, relu)?;
+                Ok(y)
+            }
             ConvAlgorithm::Im2Row => Im2RowConvolution::new(weights, self.stride, self.padding)?
-                .run_with_workspace(input, pool, ws),
+                .run_fused_with(input, pool, bias, relu, ws),
             ConvAlgorithm::Winograd(v) => {
                 if self.stride != (1, 1) {
                     bail_unsupported!("Winograd requires stride 1, layer has {:?}", self.stride);
                 }
                 WinogradConvolution::new(v, weights, self.padding)?
-                    .run_fused_with(input, pool, None, false, ws)
+                    .run_fused_with(input, pool, bias, relu, ws)
             }
             ConvAlgorithm::Auto => unreachable!("resolved above"),
         }
@@ -214,6 +270,22 @@ impl Conv2d {
     }
 }
 
+/// Post-pass bias/ReLU for the `Direct` oracle path. The GEMM-backed paths
+/// never call this — their epilogues fuse it. Delegates to the shared
+/// [`crate::nn::ops`] helpers so the oracle semantics have one source of
+/// truth.
+fn apply_bias_relu(t: &mut Tensor, bias: Option<&[f32]>, relu: bool) -> Result<()> {
+    match bias {
+        Some(b) => crate::nn::ops::bias_relu_inplace(t, b, relu),
+        None => {
+            if relu {
+                crate::nn::ops::relu_inplace(t);
+            }
+            Ok(())
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -237,6 +309,39 @@ mod tests {
             let got = conv.clone().with_algorithm(alg).run(&x, &w).unwrap();
             assert!(got.allclose(&direct, 5e-4), "algorithm {alg} disagrees");
         }
+    }
+
+    /// The fused bias/ReLU descriptor must produce identical results on
+    /// every algorithm path (direct applies it as a post pass; im2row and
+    /// Winograd fuse it into their GEMM epilogues).
+    #[test]
+    fn epilogue_descriptor_agrees_across_algorithms() {
+        let bias: Vec<f32> = (0..8).map(|i| i as f32 * 0.4 - 1.2).collect();
+        let conv = Conv2d::new(4, 8, (3, 3))
+            .with_padding((1, 1))
+            .with_bias(bias)
+            .with_relu(true);
+        let x = Tensor::randn(&[1, 10, 10, 4], 21);
+        let w = conv.random_weights(22);
+        let direct = conv
+            .clone()
+            .with_algorithm(ConvAlgorithm::Direct)
+            .run(&x, &w)
+            .unwrap();
+        // ReLU clamps must actually fire somewhere for this to test fusion.
+        assert!(direct.data().iter().any(|&v| v == 0.0));
+        for alg in [
+            ConvAlgorithm::Im2Row,
+            ConvAlgorithm::Winograd(WinogradVariant::F2x2_3x3),
+            ConvAlgorithm::Winograd(WinogradVariant::F4x4_3x3),
+            ConvAlgorithm::Auto,
+        ] {
+            let got = conv.clone().with_algorithm(alg).run(&x, &w).unwrap();
+            assert!(got.allclose(&direct, 5e-4), "algorithm {alg} disagrees");
+        }
+        // A wrong-length bias is rejected on every path.
+        let bad = conv.clone().with_bias(vec![0.0; 3]);
+        assert!(bad.run(&x, &w).is_err());
     }
 
     #[test]

@@ -1,19 +1,40 @@
 //! Batched GEMM: the `x²` independent `[R×C]·[C×M]` products at the heart of
 //! the region-wise Winograd scheme (Figure 2(d) of the paper).
 //!
-//! All `x²` A-matrices live in one contiguous buffer (`[tile][R][C]`), as do
-//! the B-matrices (`[tile][C][M]`) and outputs (`[tile][R][M]`) — exactly the
-//! buffers the scatter (input transform) writes and the gather (output
-//! transform) reads. Parallelism goes across (tile, M-block) pairs.
+//! Two execution styles coexist:
+//!
+//! * **Staged** ([`BatchedGemm::run`] / [`BatchedGemm::run_prepacked`]) —
+//!   all `x²` A-matrices live in one contiguous buffer (`[tile][R][C]`),
+//!   outputs in `[tile][R][M]`; the scatter writes A, the GEMMs run, the
+//!   gather reads C. Parallelism goes across tiles.
+//! * **Fused** ([`BatchedGemm::run_packed_fused`]) — A arrives already in
+//!   packed `MR`-panel layout (`[tile][`[`packed_a_elems`]`(R, C)]`,
+//!   written by the transform via [`super::pack::packed_a_index`]), and C
+//!   is **never materialised**: for each `MR`-region row panel and each
+//!   `NR`-channel column panel, the `x²` per-tile micro-tiles are computed
+//!   into one `[tiles]×MR×NR` per-thread hot cube and immediately handed
+//!   to the [`Epilogue`] (the inverse-transform gather) while L1-hot.
+//!   That is the paper's §2.2 interleaving: Winograd-domain data flows
+//!   registers → epilogue without a round-trip through memory.
 //!
 //! With region blocking (convolve.rs), `R` is a *block* of regions rather
-//! than the whole feature map, and the A/C buffers are arena slices from
-//! [`crate::workspace::Workspace`]; together with the per-thread pack
-//! scratch in [`super`], a steady-state batched GEMM performs no heap
-//! allocation.
+//! than the whole feature map, and the A (and, staged-only, C) buffers are
+//! arena slices from [`crate::workspace::Workspace`]; together with the
+//! per-thread pack scratch in [`super`], a steady-state batched GEMM
+//! performs no heap allocation.
 
-use super::{sgemm_blocked, sgemm_prepacked, Blocking, PackedB};
+use super::microkernel::kernel_mr_nr;
+use super::pack::packed_a_elems;
+use super::{sgemm_blocked, sgemm_prepacked, with_scratch, Blocking, Epilogue, PackedB, MR, NR};
 use crate::parallel::ThreadPool;
+use std::cell::RefCell;
+
+thread_local! {
+    // Per-thread hot cube for the fused driver: `tiles × MR × NR` floats
+    // (≤ 64·6·16 = 24 KiB — L1/L2 resident), reused across row panels and
+    // calls so the fused path allocates nothing in steady state.
+    static HOT_C_SCRATCH: RefCell<Vec<f32>> = RefCell::new(Vec::new());
+}
 
 /// Descriptor for a uniform batch of GEMMs.
 #[derive(Debug, Clone, Copy)]
@@ -50,9 +71,23 @@ impl BatchedGemm {
     }
 
     /// Workspace elements the batch's A + C buffers occupy — what one
-    /// Winograd region block borrows from the arena for this GEMM shape.
+    /// Winograd region block borrows from the arena for the **staged**
+    /// pipeline at this GEMM shape.
     pub fn workspace_elems(&self) -> usize {
         self.batch * (self.a_stride() + self.c_stride())
+    }
+
+    /// Elements of one tile's packed-A image (`MR`-panel layout over
+    /// `m × k`) — the per-tile stride inside the fused driver's A buffer.
+    pub fn packed_a_stride(&self) -> usize {
+        packed_a_elems(self.m, self.k)
+    }
+
+    /// Elements of the whole batch's packed-A buffer — what one Winograd
+    /// region block borrows from the arena for the **fused** pipeline
+    /// (there is no C buffer at all).
+    pub fn packed_a_elems_total(&self) -> usize {
+        self.batch * self.packed_a_stride()
     }
 
     /// Execute serially: `C[t] = A[t]·B[t]` for every tile `t`.
@@ -159,6 +194,91 @@ impl BatchedGemm {
         }
     }
 
+    /// The fused driver: per-tile **packed** A panels in, [`Epilogue`]
+    /// invocations out — no C matrices exist.
+    ///
+    /// `a_packed` holds `batch` per-tile packed-A images of
+    /// [`packed_a_stride`](Self::packed_a_stride) elements each (produced
+    /// by transform-as-pack via [`super::pack::packed_a_index`], dead rows
+    /// of a short last panel zeroed). `b` holds one [`PackedB`] per tile
+    /// (`k×n` each).
+    ///
+    /// For every `MR`-row panel `ip` (the parallel axis) and every
+    /// `NR`-column panel `jp`, the driver accumulates all `batch` per-tile
+    /// `MR×NR` micro-tiles — full depth `k`, KC blocks in registers — into
+    /// a per-thread `[batch]×MR×NR` hot cube, then fires
+    /// `epi.micro_tile(cube, NR, ip·MR, jp·NR, rows, cols)` **once** with
+    /// the whole cube while it is L1-hot. `rows`/`cols` are the valid
+    /// extents (`min(MR, m − ip·MR)`, `min(NR, n − jp·NR)`); tile `t`'s
+    /// micro-tile sits at `cube[t·MR·NR ..]`. This cube convention is the
+    /// one deliberate widening of the [`Epilogue`] contract: the Winograd
+    /// gather needs all `x²` tile values of a region at once.
+    pub fn run_packed_fused<E: Epilogue>(
+        &self,
+        pool: Option<&ThreadPool>,
+        a_packed: &[f32],
+        b: &[PackedB],
+        epi: &E,
+    ) {
+        assert_eq!(b.len(), self.batch, "prepacked batch size mismatch");
+        assert!(
+            a_packed.len() >= self.packed_a_elems_total(),
+            "batched packed A too small"
+        );
+        if self.m == 0 || self.n == 0 || self.batch == 0 {
+            return;
+        }
+        if self.k == 0 {
+            // Degenerate zero-depth batch: C is all zeros, but the epilogue
+            // still fires once per (row panel, col panel) with zeroed cubes
+            // — fused post-processing (bias/ReLU in the gather) must be
+            // applied regardless of the inner dimension, and a stale hot
+            // cube must never reach the epilogue.
+            with_scratch(&HOT_C_SCRATCH, self.batch * MR * NR, |hot| {
+                hot.fill(0.0);
+                for ip in 0..self.m.div_ceil(MR) {
+                    let rows = (self.m - ip * MR).min(MR);
+                    for jp in 0..self.n.div_ceil(NR) {
+                        let cols = (self.n - jp * NR).min(NR);
+                        epi.micro_tile(hot, NR, ip * MR, jp * NR, rows, cols);
+                    }
+                }
+            });
+            return;
+        }
+        debug_assert!(b.iter().all(|pb| pb.k == self.k && pb.n == self.n));
+        let a_stride = self.packed_a_stride();
+        let row_panels = self.m.div_ceil(MR);
+        let col_panels = self.n.div_ceil(NR);
+        let bgd = *self;
+
+        let run_row_panel = |ip: usize| {
+            let row0 = ip * MR;
+            let rows = (bgd.m - row0).min(MR);
+            with_scratch(&HOT_C_SCRATCH, bgd.batch * MR * NR, |hot| {
+                for jp in 0..col_panels {
+                    let col0 = jp * NR;
+                    let cols = (bgd.n - col0).min(NR);
+                    for t in 0..bgd.batch {
+                        let ct = &mut hot[t * MR * NR..(t + 1) * MR * NR];
+                        // Panel `ip` of tile t's packed A: columns advance
+                        // MR apart, so KC slice [pc, pc+kc) is contiguous.
+                        let a_base = t * a_stride + ip * MR * bgd.k;
+                        b[t].for_each_kc_panel(jp, |pc, kc, bpanel| {
+                            let apanel = &a_packed[a_base + pc * MR..a_base + (pc + kc) * MR];
+                            kernel_mr_nr(kc, apanel, bpanel, ct, NR, pc > 0);
+                        });
+                    }
+                    epi.micro_tile(hot, NR, row0, col0, rows, cols);
+                }
+            });
+        };
+        match pool {
+            Some(pool) if row_panels > 1 => pool.parallel_for(row_panels, run_row_panel),
+            _ => (0..row_panels).for_each(run_row_panel),
+        }
+    }
+
     fn validate(&self, a: &[f32], b: &[f32], c: &[f32]) {
         assert!(a.len() >= self.batch * self.a_stride(), "batched A too small");
         assert!(b.len() >= self.batch * self.b_stride(), "batched B too small");
@@ -241,6 +361,96 @@ mod tests {
         let bgd = BatchedGemm { batch: 16, m: 10, k: 3, n: 4 };
         assert_eq!(bgd.flops(), 2 * 16 * 10 * 3 * 4);
         assert_eq!(bgd.workspace_elems(), 16 * (10 * 3 + 10 * 4));
+        assert_eq!(bgd.packed_a_stride(), 10usize.div_ceil(MR) * MR * 3);
+        assert_eq!(bgd.packed_a_elems_total(), 16 * bgd.packed_a_stride());
+    }
+
+    /// Test epilogue: scatter each hot cube into per-tile C matrices so the
+    /// fused driver's output can be compared against the staged reference.
+    struct CubeScatter {
+        c_addr: usize,
+        m: usize,
+        n: usize,
+        batch: usize,
+    }
+
+    impl Epilogue for CubeScatter {
+        fn micro_tile(
+            &self,
+            c: &mut [f32],
+            ldc: usize,
+            row0: usize,
+            col0: usize,
+            rows: usize,
+            cols: usize,
+        ) {
+            for t in 0..self.batch {
+                for r in 0..rows {
+                    for j in 0..cols {
+                        let v = c[t * MR * ldc + r * ldc + j];
+                        let off = t * self.m * self.n + (row0 + r) * self.n + col0 + j;
+                        // SAFETY: (row panel, col panel) regions are disjoint
+                        // across epilogue invocations.
+                        unsafe { *(self.c_addr as *mut f32).add(off) = v };
+                    }
+                }
+            }
+        }
+    }
+
+    /// The fused packed-A driver must match the staged reference on ragged
+    /// shapes (m % MR ≠ 0, n % NR ≠ 0) and across KC block boundaries,
+    /// serial and pooled.
+    #[test]
+    fn packed_fused_matches_reference() {
+        use crate::gemm::pack::PackedAWriter;
+        let pool = ThreadPool::new(3);
+        for bgd in [
+            BatchedGemm { batch: 4, m: 13, k: 37, n: 19 },
+            BatchedGemm { batch: 3, m: 7, k: 300, n: 33 },
+            BatchedGemm { batch: 16, m: MR, k: 5, n: NR },
+            BatchedGemm { batch: 1, m: 1, k: 1, n: 1 },
+        ] {
+            let a = random(bgd.batch * bgd.a_stride(), bgd.m as u64);
+            let b = random(bgd.batch * bgd.b_stride(), bgd.n as u64);
+            let packed_b = bgd.prepack_b(&b);
+            // Pack A per tile via the writer (the transform-as-pack layout).
+            let mut a_packed = vec![f32::NAN; bgd.packed_a_elems_total()];
+            for t in 0..bgd.batch {
+                let mut w = PackedAWriter::new(
+                    &mut a_packed[t * bgd.packed_a_stride()..(t + 1) * bgd.packed_a_stride()],
+                    bgd.m,
+                    bgd.k,
+                );
+                w.zero_pad_rows();
+                for r in 0..bgd.m {
+                    for p in 0..bgd.k {
+                        w.write(r, p, a[t * bgd.a_stride() + r * bgd.k + p]);
+                    }
+                }
+            }
+            let want = reference(&bgd, &a, &b);
+            for use_pool in [false, true] {
+                let mut got = vec![0.0; bgd.batch * bgd.c_stride()];
+                let epi = CubeScatter {
+                    c_addr: got.as_mut_ptr() as usize,
+                    m: bgd.m,
+                    n: bgd.n,
+                    batch: bgd.batch,
+                };
+                let p = if use_pool { Some(&pool) } else { None };
+                bgd.run_packed_fused(p, &a_packed, &packed_b, &epi);
+                assert!(
+                    rel_error(&got, &want) < 1e-4,
+                    "batch={} m={} k={} n={} pool={use_pool}: err={}",
+                    bgd.batch,
+                    bgd.m,
+                    bgd.k,
+                    bgd.n,
+                    rel_error(&got, &want)
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,136 @@
+//! GEMM epilogues: post-processing applied to each finished micro-tile of C
+//! **while it is still cache-hot**, instead of a separate whole-tensor pass
+//! after the GEMM returns.
+//!
+//! The drivers in [`super`] fire [`Epilogue::micro_tile`] exactly once per
+//! output element — on the KC iteration that completes the tile's inner-
+//! product, right after the micro-kernel's write-back, before the tile can
+//! be evicted. Whether that write-back *stores* or *accumulates* stays a
+//! micro-kernel concern (the `accumulate` flag); the epilogue owns what
+//! happens next:
+//!
+//! * [`Store`] — nothing: the plain GEMM.
+//! * [`BiasRelu`] — per-column bias add + optional ReLU. Both convolution
+//!   schemes put output channels in C's columns, so this one epilogue fuses
+//!   the conv bias/activation for im2row (C rows = output pixels) *and* any
+//!   plain prepacked GEMM.
+//! * the Winograd inverse-transform gather — implemented in
+//!   `winograd::convolve` against the batched driver
+//!   ([`super::BatchedGemm::run_packed_fused`]), which hands the epilogue a
+//!   whole `[tiles]×MR×NR` hot cube per region panel (the inverse transform
+//!   needs all `x²` tile values of a region at once).
+//!
+//! This is the output-side half of the paper's §2.2 argument: BLASFEO-class
+//! kernels win on mobile CPUs because data crosses the cache hierarchy
+//! once — outputs are written exactly once, already biased/activated/
+//! inverse-transformed.
+
+/// Post-processing for finished micro-tiles of C.
+///
+/// `Sync` because drivers invoke it from pool workers in parallel over
+/// disjoint tiles.
+pub trait Epilogue: Sync {
+    /// Post-process the valid `rows×cols` region of a finished micro-tile.
+    ///
+    /// * `c` — slice starting at the tile's top-left element, row-major
+    ///   with leading dimension `ldc` (so element `(r, j)` is
+    ///   `c[r * ldc + j]`).
+    /// * `row0`, `col0` — the tile's origin in the full C matrix (what a
+    ///   per-column bias indexes with).
+    /// * `rows`, `cols` — valid extent (≤ `MR`/`NR`; edge tiles are
+    ///   smaller).
+    fn micro_tile(
+        &self,
+        c: &mut [f32],
+        ldc: usize,
+        row0: usize,
+        col0: usize,
+        rows: usize,
+        cols: usize,
+    );
+}
+
+/// The no-op epilogue: leave C exactly as the GEMM wrote it.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Store;
+
+impl Epilogue for Store {
+    #[inline(always)]
+    fn micro_tile(&self, _c: &mut [f32], _ldc: usize, _r0: usize, _c0: usize, _rows: usize, _cols: usize) {
+    }
+}
+
+/// Per-column bias add and optional ReLU — the conv epilogue (C columns are
+/// output channels in both convolution schemes).
+#[derive(Debug, Clone, Copy)]
+pub struct BiasRelu<'a> {
+    /// Bias indexed by absolute C column; `None` ⇒ no add.
+    pub bias: Option<&'a [f32]>,
+    /// Clamp at zero after the bias.
+    pub relu: bool,
+}
+
+impl Epilogue for BiasRelu<'_> {
+    #[inline]
+    fn micro_tile(
+        &self,
+        c: &mut [f32],
+        ldc: usize,
+        _row0: usize,
+        col0: usize,
+        rows: usize,
+        cols: usize,
+    ) {
+        for r in 0..rows {
+            let row = &mut c[r * ldc..r * ldc + cols];
+            if let Some(bias) = self.bias {
+                let b = &bias[col0..col0 + cols];
+                for (v, &bv) in row.iter_mut().zip(b) {
+                    let t = *v + bv;
+                    *v = if self.relu { t.max(0.0) } else { t };
+                }
+            } else if self.relu {
+                for v in row.iter_mut() {
+                    *v = v.max(0.0);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_is_identity() {
+        let mut c = vec![1.0, -2.0, 3.0, -4.0];
+        Store.micro_tile(&mut c, 2, 5, 7, 2, 2);
+        assert_eq!(c, vec![1.0, -2.0, 3.0, -4.0]);
+    }
+
+    #[test]
+    fn bias_relu_respects_origin_and_extent() {
+        // 2×2 valid region of a tile at col0 = 1, inside a 3-wide buffer.
+        let mut c = vec![1.0, -2.0, 99.0, -3.0, 4.0, 99.0];
+        let bias = [100.0, 10.0, 20.0];
+        let epi = BiasRelu { bias: Some(&bias), relu: true };
+        epi.micro_tile(&mut c, 3, 0, 1, 2, 2);
+        // col0=1 ⇒ bias[1], bias[2] apply; ReLU clamps; ldc padding untouched.
+        assert_eq!(c, vec![11.0, 18.0, 99.0, 7.0, 24.0, 99.0]);
+    }
+
+    #[test]
+    fn relu_without_bias() {
+        let mut c = vec![-1.0, 2.0];
+        BiasRelu { bias: None, relu: true }.micro_tile(&mut c, 2, 0, 0, 1, 2);
+        assert_eq!(c, vec![0.0, 2.0]);
+    }
+
+    #[test]
+    fn no_bias_no_relu_is_identity() {
+        let mut c = vec![-1.0, 2.0];
+        BiasRelu { bias: None, relu: false }.micro_tile(&mut c, 2, 0, 0, 1, 2);
+        assert_eq!(c, vec![-1.0, 2.0]);
+    }
+}

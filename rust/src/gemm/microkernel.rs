@@ -1,9 +1,9 @@
 //! The register-tile micro-kernel at the bottom of the GEMM.
 //!
-//! An `MR×NR = 8×8` tile of C is held in accumulator registers while the
+//! An `MR×NR = 6×16` tile of C is held in accumulator registers while the
 //! packed A panel (column-major within the panel) and packed B panel
-//! (row-major within the panel) stream through. Eight rows × two [`F32x4`]
-//! accumulators per row; LLVM fuses the adjacent 4-lane pairs into 8-lane
+//! (row-major within the panel) stream through. Six rows × four [`F32x4`]
+//! accumulators per row; LLVM fuses the adjacent 4-lane quads into wider
 //! AVX registers on x86, and the identical code maps to NEON `vfmaq_f32` on
 //! aarch64 — the instruction the paper's GEMM (BLASFEO-class) is built on.
 
@@ -20,7 +20,8 @@ pub const MR: usize = 6;
 /// Columns of C computed per micro-kernel invocation.
 pub const NR: usize = 16;
 
-/// Compute `C[MR×NR] (+)= Apanel · Bpanel` over `kc` rank-1 updates.
+/// Compute `C[MR×NR] (+)= Apanel · Bpanel` over `kc` rank-1 updates
+/// (`MR = 6`, `NR = 16`).
 ///
 /// * `a` — packed A panel: `kc` groups of `MR` values (column of the tile).
 /// * `b` — packed B panel: `kc` groups of `NR` values (row of the tile).
@@ -28,7 +29,7 @@ pub const NR: usize = 16;
 ///   must be in-bounds (edge tiles go through a scratch buffer in the driver).
 /// * `accumulate` — false ⇒ overwrite C, true ⇒ add into C.
 #[inline]
-pub fn kernel_8x8(kc: usize, a: &[f32], b: &[f32], c: &mut [f32], ldc: usize, accumulate: bool) {
+pub fn kernel_mr_nr(kc: usize, a: &[f32], b: &[f32], c: &mut [f32], ldc: usize, accumulate: bool) {
     debug_assert!(a.len() >= kc * MR);
     debug_assert!(b.len() >= kc * NR);
 
@@ -105,7 +106,7 @@ mod tests {
             let (a, b) = random_panels(kc, kc as u64);
             let mut c1 = vec![9.0; MR * NR];
             let mut c2 = vec![-3.0; MR * NR];
-            kernel_8x8(kc, &a, &b, &mut c1, NR, false);
+            kernel_mr_nr(kc, &a, &b, &mut c1, NR, false);
             kernel_ref(kc, &a, &b, &mut c2, NR, false);
             for (x, y) in c1.iter().zip(&c2) {
                 assert!((x - y).abs() < 1e-4, "kc={kc}: {x} vs {y}");
@@ -120,7 +121,7 @@ mod tests {
         let init: Vec<f32> = (0..MR * NR).map(|i| i as f32).collect();
         let mut c1 = init.clone();
         let mut c2 = init;
-        kernel_8x8(kc, &a, &b, &mut c1, NR, true);
+        kernel_mr_nr(kc, &a, &b, &mut c1, NR, true);
         kernel_ref(kc, &a, &b, &mut c2, NR, true);
         for (x, y) in c1.iter().zip(&c2) {
             assert!((x - y).abs() < 1e-3);
@@ -133,7 +134,7 @@ mod tests {
         let ldc = NR + 5;
         let (a, b) = random_panels(kc, 7);
         let mut c = vec![77.0; MR * ldc];
-        kernel_8x8(kc, &a, &b, &mut c, ldc, false);
+        kernel_mr_nr(kc, &a, &b, &mut c, ldc, false);
         // Padding columns untouched.
         for r in 0..MR {
             for j in NR..ldc {
@@ -147,9 +148,9 @@ mod tests {
         let a = [0.0; 0];
         let b = [0.0; 0];
         let mut c = vec![5.0; MR * NR];
-        kernel_8x8(0, &a, &b, &mut c, NR, true);
+        kernel_mr_nr(0, &a, &b, &mut c, NR, true);
         assert!(c.iter().all(|&x| x == 5.0));
-        kernel_8x8(0, &a, &b, &mut c, NR, false);
+        kernel_mr_nr(0, &a, &b, &mut c, NR, false);
         assert!(c.iter().all(|&x| x == 0.0));
     }
 }

@@ -6,18 +6,31 @@
 //! here likewise isolates the algorithmic difference.
 //!
 //! Structure: the classical five-loop blocking
-//! (`NC`→`KC`→`MC`→`NR`→`MR`) around an 8×8 SIMD micro-kernel, with A/B
-//! packed into panel buffers per block. `sgemm_with_pool` parallelises the
-//! `MC` loop across the threadpool. Panel buffers come from per-thread
-//! scratch reused across calls, so steady-state GEMMs on a warm thread are
-//! allocation-free (part of the crate-wide zero-steady-state-allocation
-//! property; see [`crate::workspace`]).
+//! (`NC`→`KC`→`MC`→`NR`→`MR`) around an `MR×NR = 6×16` SIMD micro-kernel,
+//! with A/B packed into panel buffers per block. `sgemm_with_pool`
+//! parallelises the `MC` loop across the threadpool. Panel buffers come
+//! from per-thread scratch reused across calls, so steady-state GEMMs on a
+//! warm thread are allocation-free (part of the crate-wide
+//! zero-steady-state-allocation property; see [`crate::workspace`]).
+//!
+//! Both ends of the pipeline can fuse into the GEMM instead of running as
+//! separate passes:
+//!
+//! * **input side** — producers may write A directly in packed panel
+//!   layout ([`pack::PackedAWriter`] / [`pack::packed_a_index`]) and run
+//!   the batched driver [`BatchedGemm::run_packed_fused`], skipping the
+//!   `pack_a` copy entirely (transform-as-pack);
+//! * **output side** — every driver takes an [`Epilogue`] fired per
+//!   finished micro-tile while C is cache-hot (bias/ReLU, or the Winograd
+//!   inverse-transform gather), replacing whole-tensor post passes.
 
 pub mod microkernel;
 pub mod pack;
 pub mod batched;
+pub mod epilogue;
 
 pub use batched::BatchedGemm;
+pub use epilogue::{BiasRelu, Epilogue, Store};
 pub use microkernel::{MR, NR};
 
 #[cfg(test)]
@@ -70,15 +83,14 @@ use std::cell::RefCell;
 thread_local! {
     // Per-thread pack scratch reused across GEMM calls. The per-call `vec!`
     // for the A/B panel buffers was the last steady-state allocation on the
-    // Winograd hot path (convolve.rs stage 2 calls `sgemm_prepacked` per
-    // tile per block); with these, repeat GEMMs on a warm thread are
+    // im2row hot path; with these, repeat GEMMs on a warm thread are
     // allocation-free. Two cells because one `sgemm_blocked` call holds the
     // B scratch across the MC loop while the calling thread also packs A.
     static PACK_A_SCRATCH: RefCell<Vec<f32>> = RefCell::new(Vec::new());
     static PACK_B_SCRATCH: RefCell<Vec<f32>> = RefCell::new(Vec::new());
 }
 
-fn with_scratch<R>(
+pub(crate) fn with_scratch<R>(
     cell: &'static std::thread::LocalKey<RefCell<Vec<f32>>>,
     elems: usize,
     f: impl FnOnce(&mut [f32]) -> R,
@@ -158,7 +170,7 @@ pub fn sgemm_with_pool(
     sgemm_blocked(m, n, k, a, lda, b, ldb, c, ldc, accumulate, Blocking::default(), Some(pool))
 }
 
-/// Full-control entry point.
+/// Full-control entry point with the no-op [`Store`] epilogue.
 #[allow(clippy::too_many_arguments)]
 pub fn sgemm_blocked(
     m: usize,
@@ -174,17 +186,61 @@ pub fn sgemm_blocked(
     blk: Blocking,
     pool: Option<&ThreadPool>,
 ) {
+    sgemm_blocked_fused(m, n, k, a, lda, b, ldb, c, ldc, accumulate, blk, pool, &Store)
+}
+
+/// Degenerate `k == 0` GEMM: zero C (or leave it, when accumulating), then
+/// fire the epilogue over every micro-tile anyway — fused post-processing
+/// (bias/ReLU) must be applied exactly once per element regardless of the
+/// inner dimension, or a zero-depth layer would silently drop its bias.
+fn handle_k_zero<E: Epilogue>(
+    m: usize,
+    n: usize,
+    c: &mut [f32],
+    ldc: usize,
+    accumulate: bool,
+    epi: &E,
+) {
+    if !accumulate {
+        for r in 0..m {
+            for v in c[r * ldc..r * ldc + n].iter_mut() {
+                *v = 0.0;
+            }
+        }
+    }
+    for r0 in (0..m).step_by(MR) {
+        let rows = (m - r0).min(MR);
+        for j0 in (0..n).step_by(NR) {
+            let cols = (n - j0).min(NR);
+            epi.micro_tile(&mut c[r0 * ldc + j0..], ldc, r0, j0, rows, cols);
+        }
+    }
+}
+
+/// Full-control entry point. `epi` fires once per finished micro-tile of C
+/// (on the final KC block, while the tile is cache-hot); a degenerate
+/// `k == 0` call fires it over the zeroed C.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_blocked_fused<E: Epilogue>(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+    accumulate: bool,
+    blk: Blocking,
+    pool: Option<&ThreadPool>,
+    epi: &E,
+) {
     if m == 0 || n == 0 {
         return;
     }
     if k == 0 {
-        if !accumulate {
-            for r in 0..m {
-                for v in c[r * ldc..r * ldc + n].iter_mut() {
-                    *v = 0.0;
-                }
-            }
-        }
+        handle_k_zero(m, n, c, ldc, accumulate, epi);
         return;
     }
     debug_assert!(a.len() >= (m - 1) * lda + k, "A buffer too small");
@@ -200,6 +256,7 @@ pub fn sgemm_blocked(
             let kc = (k - pc).min(blk.kc);
             // First K-block writes/overwrites, later ones accumulate.
             let acc_block = accumulate || pc > 0;
+            let last_kc = pc + kc == k;
             with_scratch(&PACK_B_SCRATCH, nc.div_ceil(NR) * NR * kc, |bbuf| {
                 pack_b(&b[pc * ldb + jc..], ldb, kc, nc, bbuf);
                 let bbuf = &*bbuf;
@@ -217,7 +274,9 @@ pub fn sgemm_blocked(
                                 (mc - 1) * ldc + nc,
                             )
                         };
-                        macro_kernel(mc, nc, kc, abuf, bbuf, c_block, ldc, acc_block);
+                        macro_kernel(
+                            mc, nc, kc, abuf, bbuf, c_block, ldc, acc_block, ic, jc, last_kc, epi,
+                        );
                     });
                 };
 
@@ -238,7 +297,12 @@ pub fn sgemm_blocked(
 }
 
 /// Run the micro-kernel over every `MR×NR` tile of an `mc×nc` block.
-fn macro_kernel(
+///
+/// `row_off`/`col_off` locate the block inside the full C matrix; when
+/// `last_kc` is set this KC pass completes every tile's inner product, so
+/// `epi` fires on each tile right after its write-back.
+#[allow(clippy::too_many_arguments)]
+fn macro_kernel<E: Epilogue>(
     mc: usize,
     nc: usize,
     kc: usize,
@@ -247,6 +311,10 @@ fn macro_kernel(
     c: &mut [f32],
     ldc: usize,
     accumulate: bool,
+    row_off: usize,
+    col_off: usize,
+    last_kc: bool,
+    epi: &E,
 ) {
     let mut edge = [0.0f32; MR * NR];
     for jp in 0..nc.div_ceil(NR) {
@@ -257,12 +325,12 @@ fn macro_kernel(
             let r0 = ip * MR;
             let rows = (mc - r0).min(MR);
             let apanel = &abuf[ip * MR * kc..(ip + 1) * MR * kc];
+            let off = r0 * ldc + j0;
             if rows == MR && cols == NR {
-                let off = r0 * ldc + j0;
-                microkernel::kernel_8x8(kc, apanel, bpanel, &mut c[off..], ldc, accumulate);
+                microkernel::kernel_mr_nr(kc, apanel, bpanel, &mut c[off..], ldc, accumulate);
             } else {
                 // Edge tile: compute into scratch, copy the valid region.
-                microkernel::kernel_8x8(kc, apanel, bpanel, &mut edge, NR, false);
+                microkernel::kernel_mr_nr(kc, apanel, bpanel, &mut edge, NR, false);
                 for r in 0..rows {
                     let dst = &mut c[(r0 + r) * ldc + j0..(r0 + r) * ldc + j0 + cols];
                     let src = &edge[r * NR..r * NR + cols];
@@ -274,6 +342,9 @@ fn macro_kernel(
                         dst.copy_from_slice(src);
                     }
                 }
+            }
+            if last_kc {
+                epi.micro_tile(&mut c[off..], ldc, row_off + r0, col_off + j0, rows, cols);
             }
         }
     }
@@ -319,9 +390,51 @@ impl PackedB {
     pub fn bytes(&self) -> usize {
         self.data.len() * std::mem::size_of::<f32>()
     }
+
+    /// Number of `NR`-column panels covering the matrix.
+    pub fn col_panels(&self) -> usize {
+        self.n.div_ceil(NR)
+    }
+
+    /// Visit every KC block of column-panel `jp` in depth order: `f` is
+    /// called with `(pc, kc, panel)` where `panel` is the `kc`-deep ×
+    /// `NR`-wide packed slice the micro-kernel streams for depth rows
+    /// `[pc, pc + kc)` of columns `[jp·NR, (jp+1)·NR)`.
+    ///
+    /// This is how fused drivers consume a `PackedB` without materialising
+    /// C blocks: one column-panel of one tile at a time, accumulating over
+    /// KC blocks in registers. Requires `blk.nc` to be a multiple of `NR`
+    /// when the matrix spans several NC blocks (the default blocking is).
+    pub fn for_each_kc_panel(&self, jp: usize, mut f: impl FnMut(usize, usize, &[f32])) {
+        let col0 = jp * NR;
+        debug_assert!(col0 < self.n, "column panel {jp} out of range");
+        // Hard assert: an unaligned nc would make jp_local index the wrong
+        // panel and return silently wrong data in release builds.
+        assert!(
+            self.n <= self.blk.nc || self.blk.nc % NR == 0,
+            "multi-NC-block PackedB needs NR-aligned nc"
+        );
+        let mut offset = 0usize;
+        for jc in (0..self.n).step_by(self.blk.nc) {
+            let nc = (self.n - jc).min(self.blk.nc);
+            let panels = nc.div_ceil(NR);
+            let in_block = col0 >= jc && col0 < jc + nc;
+            let jp_local = (col0 - jc.min(col0)) / NR;
+            for pc in (0..self.k).step_by(self.blk.kc) {
+                let kc = (self.k - pc).min(self.blk.kc);
+                let len = panels * NR * kc;
+                if in_block {
+                    let p0 = offset + jp_local * NR * kc;
+                    f(pc, kc, &self.data[p0..p0 + NR * kc]);
+                }
+                offset += len;
+            }
+        }
+    }
 }
 
-/// `C[m×n] (+)= A[m×k] · B` with `B` pre-packed by [`PackedB::pack`].
+/// `C[m×n] (+)= A[m×k] · B` with `B` pre-packed by [`PackedB::pack`] and
+/// the no-op [`Store`] epilogue.
 #[allow(clippy::too_many_arguments)]
 pub fn sgemm_prepacked(
     m: usize,
@@ -333,18 +446,30 @@ pub fn sgemm_prepacked(
     accumulate: bool,
     pool: Option<&ThreadPool>,
 ) {
+    sgemm_prepacked_fused(m, a, lda, b, c, ldc, accumulate, pool, &Store)
+}
+
+/// [`sgemm_prepacked`] with a fused [`Epilogue`] fired per finished
+/// micro-tile of C while it is cache-hot (a degenerate `k == 0` call
+/// fires it over the zeroed C).
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_prepacked_fused<E: Epilogue>(
+    m: usize,
+    a: &[f32],
+    lda: usize,
+    b: &PackedB,
+    c: &mut [f32],
+    ldc: usize,
+    accumulate: bool,
+    pool: Option<&ThreadPool>,
+    epi: &E,
+) {
     let (n, k, blk) = (b.n, b.k, b.blk);
     if m == 0 || n == 0 {
         return;
     }
     if k == 0 {
-        if !accumulate {
-            for r in 0..m {
-                for v in c[r * ldc..r * ldc + n].iter_mut() {
-                    *v = 0.0;
-                }
-            }
-        }
+        handle_k_zero(m, n, c, ldc, accumulate, epi);
         return;
     }
     debug_assert!(a.len() >= (m - 1) * lda + k, "A buffer too small");
@@ -360,6 +485,7 @@ pub fn sgemm_prepacked(
             let bbuf = &b.data[offset..offset + len];
             offset += len;
             let acc_block = accumulate || pc > 0;
+            let last_kc = pc + kc == k;
 
             let run_mc_block = |ic: usize| {
                 let mc = (m - ic).min(blk.mc);
@@ -372,7 +498,9 @@ pub fn sgemm_prepacked(
                             (mc - 1) * ldc + nc,
                         )
                     };
-                    macro_kernel(mc, nc, kc, abuf, bbuf, c_block, ldc, acc_block);
+                    macro_kernel(
+                        mc, nc, kc, abuf, bbuf, c_block, ldc, acc_block, ic, jc, last_kc, epi,
+                    );
                 });
             };
             let n_blocks = m.div_ceil(blk.mc);
@@ -517,5 +645,85 @@ mod tests {
         let mut cref = vec![0.0; m * n];
         sgemm_ref(m, n, k, &a, &b, &mut cref);
         assert!(rel_error(&c, &cref) < 1e-4);
+    }
+
+    /// Fused bias+ReLU epilogue == plain GEMM then a separate bias/ReLU
+    /// pass, across KC/MC boundaries, edge tiles and pool execution — the
+    /// epilogue must fire exactly once per element, only when its inner
+    /// product is complete.
+    #[test]
+    fn fused_bias_relu_matches_post_pass() {
+        let pool = ThreadPool::new(3);
+        for (m, n, k) in [(1usize, 1usize, 1usize), (7, 19, 40), (37, 29, 300), (140, 33, 260)] {
+            let a = random_matrix(m, k, (m + k) as u64);
+            let b = random_matrix(k, n, (n + k) as u64);
+            let bias: Vec<f32> = (0..n).map(|j| (j as f32) * 0.25 - 1.0).collect();
+            let packed = PackedB::pack(&b, n, k, n);
+            for use_pool in [false, true] {
+                let p = if use_pool { Some(&pool) } else { None };
+                let mut fused = vec![0.0; m * n];
+                let epi = BiasRelu { bias: Some(&bias), relu: true };
+                sgemm_prepacked_fused(m, &a, k, &packed, &mut fused, n, false, p, &epi);
+                let mut plain = vec![0.0; m * n];
+                sgemm_ref(m, n, k, &a, &b, &mut plain);
+                for r in 0..m {
+                    for j in 0..n {
+                        plain[r * n + j] = (plain[r * n + j] + bias[j]).max(0.0);
+                    }
+                }
+                assert!(
+                    rel_error(&fused, &plain) < 1e-4,
+                    "m={m} n={n} k={k} pool={use_pool}: err={}",
+                    rel_error(&fused, &plain)
+                );
+            }
+        }
+    }
+
+    /// A zero-depth GEMM must still fire the fused epilogue over the zeroed
+    /// C — a degenerate 0-channel conv layer's bias would otherwise be
+    /// silently dropped (diverging from the direct-conv oracle).
+    #[test]
+    fn k_zero_still_fires_epilogue() {
+        let (m, n) = (7usize, 18usize); // ragged vs MR/NR on purpose
+        let bias: Vec<f32> = (0..n).map(|j| j as f32 + 1.0).collect();
+        let packed = PackedB::pack(&[], n, 0, n);
+        let mut c = vec![5.0; m * n];
+        let epi = BiasRelu { bias: Some(&bias), relu: false };
+        sgemm_prepacked_fused(m, &[], 0, &packed, &mut c, n, false, None, &epi);
+        for r in 0..m {
+            for j in 0..n {
+                assert_eq!(c[r * n + j], bias[j], "({r},{j})");
+            }
+        }
+    }
+
+    /// `for_each_kc_panel` must reproduce the exact panel slices pack_b
+    /// produced, covering the full depth in order, including across
+    /// KC/NC block boundaries.
+    #[test]
+    fn kc_panel_walk_reconstructs_b() {
+        let blk = Blocking { mc: 16, kc: 8, nc: 32 }; // nc multiple of NR
+        let (k, n) = (21usize, 37usize);
+        let b = random_matrix(k, n, 12);
+        let packed = PackedB::pack_with(&b, n, k, n, blk);
+        assert_eq!(packed.col_panels(), n.div_ceil(NR));
+        for jp in 0..packed.col_panels() {
+            let col0 = jp * NR;
+            let cols = (n - col0).min(NR);
+            let mut covered = 0usize;
+            packed.for_each_kc_panel(jp, |pc, kc, panel| {
+                assert_eq!(pc, covered, "KC blocks must arrive in depth order");
+                assert_eq!(panel.len(), NR * kc);
+                for p in 0..kc {
+                    for j in 0..NR {
+                        let want = if j < cols { b[(pc + p) * n + col0 + j] } else { 0.0 };
+                        assert_eq!(panel[p * NR + j], want, "jp={jp} pc={pc} p={p} j={j}");
+                    }
+                }
+                covered += kc;
+            });
+            assert_eq!(covered, k, "panels must cover the full depth");
+        }
     }
 }

@@ -5,8 +5,20 @@
 //! streams both with unit stride. Edge panels are zero-padded — the
 //! micro-kernel always runs full `MR×NR` tiles and edge results are sliced
 //! out by the driver.
+//!
+//! Two ways of producing packed A coexist:
+//!
+//! * [`pack_a`] — the classical copy pass: repack an existing row-major
+//!   block (the im2row patch matrix path).
+//! * [`PackedAWriter`] / [`packed_a_index`] — **transform-as-pack**: a
+//!   producer that computes values (the Winograd input transform) writes
+//!   them *directly* into panel layout, so the packed image is the first
+//!   and only materialisation of A — no row-major staging buffer, no
+//!   second memory pass (the BLASFEO-style fusion the paper's §2.2 kernels
+//!   rely on).
 
 use super::microkernel::{MR, NR};
+use crate::simd::F32x4;
 
 /// Bytes of one packed-B panel (`NR` columns × `kc` depth) — the B-side
 /// working-set term the Winograd region-block sizing budgets for: while the
@@ -64,6 +76,95 @@ pub fn pack_b(b: &[f32], ldb: usize, kc: usize, nc: usize, buf: &mut [f32]) {
     }
 }
 
+/// Elements the packed-A image of an `m×k` matrix occupies: whole `MR`-row
+/// panels, the short last panel zero-padded to `MR`.
+pub fn packed_a_elems(m: usize, k: usize) -> usize {
+    m.div_ceil(MR) * MR * k
+}
+
+/// Flat index of logical `A[row][col]` inside the whole-matrix packed-A
+/// layout (`k` logical columns): panel `row / MR` starts at
+/// `(row / MR) * MR * k`, inside which column `col` is a group of `MR`
+/// consecutive values, one per panel row.
+///
+/// Consecutive `col`s for one `row` are therefore `MR` elements apart — the
+/// stride a transform-as-pack producer scatters channel lanes with — while
+/// a micro-kernel consuming `(panel, col)` groups streams with unit stride.
+/// A `kc`-column slice `[pc, pc+kc)` of panel `ip` is the contiguous range
+/// `ip*MR*k + pc*MR ..+ kc*MR`, exactly the panel format
+/// [`super::microkernel::kernel_mr_nr`] expects, so KC-blocked drivers can
+/// feed the kernel straight from this layout without any repack.
+#[inline(always)]
+pub fn packed_a_index(k: usize, row: usize, col: usize) -> usize {
+    (row / MR) * MR * k + col * MR + (row % MR)
+}
+
+/// Incremental writer laying a logical row-major `m×k` matrix directly into
+/// packed-A panel layout — what [`pack_a`] would produce for a single block
+/// spanning the whole matrix, but without the matrix ever existing in
+/// row-major form.
+///
+/// Used by the fused Winograd input transform (`transform_and_pack`): each
+/// region's transformed channel values are scattered straight into their
+/// packed cells. Call [`zero_pad_rows`](Self::zero_pad_rows) once before
+/// (or after) writing so the dead rows of a short last panel multiply as
+/// zero in the micro-kernel.
+#[derive(Debug)]
+pub struct PackedAWriter<'a> {
+    buf: &'a mut [f32],
+    m: usize,
+    k: usize,
+}
+
+impl<'a> PackedAWriter<'a> {
+    /// Wrap `buf` (at least [`packed_a_elems`]`(m, k)` long) as the packed
+    /// image of an `m×k` matrix.
+    pub fn new(buf: &'a mut [f32], m: usize, k: usize) -> PackedAWriter<'a> {
+        debug_assert!(buf.len() >= packed_a_elems(m, k));
+        PackedAWriter { buf, m, k }
+    }
+
+    /// Logical rows.
+    pub fn rows(&self) -> usize {
+        self.m
+    }
+
+    /// Logical columns.
+    pub fn cols(&self) -> usize {
+        self.k
+    }
+
+    /// Write logical `A[row][col] = v`.
+    #[inline(always)]
+    pub fn write(&mut self, row: usize, col: usize, v: f32) {
+        debug_assert!(row < self.m && col < self.k);
+        self.buf[packed_a_index(self.k, row, col)] = v;
+    }
+
+    /// Scatter the first `lanes` values of `v` into columns
+    /// `col..col + lanes` of `row` (`MR`-strided stores in packed layout).
+    #[inline(always)]
+    pub fn write_lanes(&mut self, row: usize, col: usize, v: F32x4, lanes: usize) {
+        debug_assert!(row < self.m && col + lanes <= self.k && lanes <= 4);
+        let base = packed_a_index(self.k, row, col);
+        let vals = v.to_array();
+        for (l, &x) in vals[..lanes].iter().enumerate() {
+            self.buf[base + l * MR] = x;
+        }
+    }
+
+    /// Zero the padding rows of a short last panel (`m..ceil(m/MR)*MR`) so
+    /// edge panels contribute zeros. A no-op when `m` divides `MR` evenly.
+    pub fn zero_pad_rows(&mut self) {
+        let padded = self.m.div_ceil(MR) * MR;
+        for row in self.m..padded {
+            for col in 0..self.k {
+                self.buf[packed_a_index(self.k, row, col)] = 0.0;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -102,6 +203,63 @@ mod tests {
         // Row p=1 holds b[1][0..3] then zeros.
         assert_eq!(&buf[NR..NR + 4], &[5.0, 6.0, 7.0, 0.0]);
         assert!(buf.iter().all(|v| !v.is_nan()));
+    }
+
+    /// The writer's layout must be bit-identical to `pack_a` run over the
+    /// whole matrix as one block — the property that lets the fused
+    /// transform delete the row-major A staging buffer without touching the
+    /// GEMM's consumption side.
+    #[test]
+    fn writer_matches_pack_a_whole_matrix() {
+        for (m, k) in [(1usize, 1usize), (MR, 3), (MR + 2, 7), (3 * MR - 1, 5)] {
+            let a: Vec<f32> = (0..m * k).map(|i| (i as f32).sin()).collect();
+            let mut want = vec![0.0f32; packed_a_elems(m, k)];
+            pack_a(&a, k, m, k, &mut want);
+            let mut got = vec![f32::NAN; packed_a_elems(m, k)];
+            let mut w = PackedAWriter::new(&mut got, m, k);
+            w.zero_pad_rows();
+            for row in 0..m {
+                for col in 0..k {
+                    w.write(row, col, a[row * k + col]);
+                }
+            }
+            assert_eq!(got, want, "m={m} k={k}");
+        }
+    }
+
+    #[test]
+    fn writer_lane_scatter_matches_scalar_writes() {
+        let (m, k) = (MR + 1, 10);
+        let a: Vec<f32> = (0..m * k).map(|i| i as f32 * 0.5).collect();
+        let mut scalar = vec![0.0f32; packed_a_elems(m, k)];
+        let mut lanes = vec![0.0f32; packed_a_elems(m, k)];
+        let mut ws = PackedAWriter::new(&mut scalar, m, k);
+        ws.zero_pad_rows();
+        let mut wl = PackedAWriter::new(&mut lanes, m, k);
+        wl.zero_pad_rows();
+        for row in 0..m {
+            for col in (0..k).step_by(4) {
+                let n = (k - col).min(4);
+                for l in 0..n {
+                    ws.write(row, col + l, a[row * k + col + l]);
+                }
+                wl.write_lanes(row, col, F32x4::load_partial(&a[row * k + col..row * k + col + n]), n);
+            }
+        }
+        assert_eq!(scalar, lanes);
+    }
+
+    #[test]
+    fn packed_a_index_formula() {
+        let k = 5;
+        // Row 0, col 0 → start of panel 0; col advances by MR.
+        assert_eq!(packed_a_index(k, 0, 0), 0);
+        assert_eq!(packed_a_index(k, 0, 1), MR);
+        // Row 1 sits one element into each column group.
+        assert_eq!(packed_a_index(k, 1, 0), 1);
+        // First row of panel 1 starts after MR*k elements.
+        assert_eq!(packed_a_index(k, MR, 0), MR * k);
+        assert_eq!(packed_a_elems(MR + 1, k), 2 * MR * k);
     }
 
     #[test]

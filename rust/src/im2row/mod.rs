@@ -7,9 +7,13 @@
 //! contributes a contiguous `C`-run, so row construction is `KH·KW` memcpys.
 //! The GEMM runs on the same engine as the Winograd scheme's batched GEMMs —
 //! benchmark deltas therefore isolate the algorithmic difference, exactly as
-//! in the paper's evaluation.
+//! in the paper's evaluation. Per-channel bias and ReLU ride as a
+//! [`BiasRelu`] GEMM epilogue ([`Im2RowConvolution::run_fused_with`]):
+//! each micro-tile of the output is biased/activated while cache-hot, so
+//! conv outputs are written exactly once — the same single-pass guarantee
+//! the fused Winograd pipeline makes.
 
-use crate::gemm::{sgemm_prepacked, PackedB};
+use crate::gemm::{sgemm_prepacked_fused, BiasRelu, PackedB};
 use crate::parallel::ThreadPool;
 use crate::tensor::Tensor;
 use crate::workspace::Workspace;
@@ -168,6 +172,22 @@ impl Im2RowConvolution {
         pool: Option<&ThreadPool>,
         ws: &mut Workspace,
     ) -> Result<Tensor> {
+        self.run_fused_with(input, pool, None, false, ws)
+    }
+
+    /// [`run_with_workspace`](Self::run_with_workspace) with per-output-
+    /// channel bias and optional ReLU fused into the GEMM's [`BiasRelu`]
+    /// epilogue: every micro-tile of the output matrix is biased/activated
+    /// right after its inner product completes, while still cache-hot —
+    /// there is no separate whole-tensor bias/ReLU pass.
+    pub fn run_fused_with(
+        &self,
+        input: &Tensor,
+        pool: Option<&ThreadPool>,
+        bias: Option<&[f32]>,
+        relu: bool,
+        ws: &mut Workspace,
+    ) -> Result<Tensor> {
         if input.rank() != 4 {
             bail_shape!("input must be [N, H, W, C], got {:?}", input.shape());
         }
@@ -180,13 +200,18 @@ impl Im2RowConvolution {
         if c != self.cin {
             bail_shape!("input has {c} channels, weights expect {}", self.cin);
         }
+        if let Some(b) = bias {
+            if b.len() != self.cout {
+                bail_shape!("bias length {} vs {} output channels", b.len(), self.cout);
+            }
+        }
         let (oh, ow) = self.output_hw(h, w)?;
         let rows = n * oh * ow;
         let k_total = self.kernel.0 * self.kernel.1 * self.cin;
         let patches = ws.take(self.workspace_elems_for(n, h, w)?);
         self.im2row_into(input, pool, patches)?;
         let mut out = Tensor::zeros(&[n, oh, ow, self.cout]);
-        sgemm_prepacked(
+        sgemm_prepacked_fused(
             rows,
             patches,
             k_total,
@@ -195,6 +220,7 @@ impl Im2RowConvolution {
             self.cout,
             false,
             pool,
+            &BiasRelu { bias, relu },
         );
         Ok(out)
     }
@@ -283,6 +309,29 @@ mod tests {
         let input = Tensor::randn(&[1, 10, 10, 4], 1);
         let plain = conv.run(&input, None).unwrap();
         assert!(outs[0].allclose(&plain, 1e-6));
+    }
+
+    /// The fused bias+ReLU epilogue must equal a separate post pass (and
+    /// reject a bad bias length).
+    #[test]
+    fn fused_bias_relu_matches_post_pass() {
+        let weights = Tensor::randn(&[6, 3, 3, 4], 11);
+        let conv = Im2RowConvolution::new(&weights, (1, 1), (1, 1)).unwrap();
+        let input = Tensor::randn(&[1, 9, 9, 4], 12);
+        let bias: Vec<f32> = (0..6).map(|i| i as f32 * 0.3 - 0.7).collect();
+        let mut ws = Workspace::new();
+        let fused = conv
+            .run_fused_with(&input, None, Some(&bias), true, &mut ws)
+            .unwrap();
+        let mut want = conv.run(&input, None).unwrap();
+        let chans = want.shape()[3];
+        for (i, v) in want.data_mut().iter_mut().enumerate() {
+            *v = (*v + bias[i % chans]).max(0.0);
+        }
+        assert!(fused.allclose(&want, 1e-5));
+        assert!(conv
+            .run_fused_with(&input, None, Some(&bias[..5]), false, &mut ws)
+            .is_err());
     }
 
     #[test]

@@ -6,20 +6,23 @@
 //!
 //! The crate is organised bottom-up:
 //!
-//! * [`simd`] — a portable 4-lane `f32` vector mirroring the ARMv8-A NEON
-//!   op set used by the paper's hand-coded transforms.
+//! * [`simd`] — a 4-lane `f32` vector mirroring the ARMv8-A NEON op set
+//!   used by the paper's hand-coded transforms: real NEON intrinsics on
+//!   `aarch64`, a portable array backend elsewhere, one parity-pinned API.
 //! * [`tensor`] — NHWC/NCHW 4-D tensors and layout conversion (§2.1 of the
 //!   paper studies exactly this choice).
-//! * [`gemm`] — a packed, blocked GEMM with a SIMD micro-kernel; both the
-//!   Winograd scheme and the im2row baseline sit on this shared substrate so
-//!   benchmarks isolate the *algorithmic* difference.
+//! * [`gemm`] — a packed, blocked GEMM with a SIMD micro-kernel plus the
+//!   fusion hooks both conv schemes build on: packed-A written directly by
+//!   producers (transform-as-pack) and per-micro-tile [`gemm::Epilogue`]s
+//!   (bias/ReLU, inverse-transform gather) fired while C is cache-hot.
 //! * [`workspace`] — the reusable per-thread scratch arena: every executor
 //!   owns one [`workspace::Workspace`] sized to its largest layer, so
 //!   steady-state inference allocates nothing inside the Winograd stages.
 //! * [`winograd`] — the paper's contribution: Cook-Toom transform generation,
 //!   hard-coded fast transforms for the five variants, and the **region-
-//!   blocked** region-wise multi-channel scatter → x² GEMMs → gather
-//!   pipeline (blocks of regions sized to an L2 budget, default 512 KiB).
+//!   blocked, fused** region-wise multi-channel pipeline — transform-as-pack
+//!   → x² GEMMs + gather-as-epilogue (blocks of regions sized to an L2
+//!   budget, default 512 KiB; Winograd-domain C never materialised).
 //! * [`im2row`] — the classical im2row/im2col + GEMM comparator.
 //! * [`conv`] — the public convolution API, direct-convolution oracle and the
 //!   per-layer algorithm selector.

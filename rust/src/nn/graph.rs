@@ -17,7 +17,7 @@ use crate::parallel::ThreadPool;
 use crate::tensor::Tensor;
 use crate::winograd::WinogradConvolution;
 use crate::workspace::Workspace;
-use crate::{bail_shape, Result};
+use crate::{bail_shape, bail_unsupported, Result};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -299,6 +299,16 @@ impl PreparedModel {
             let p = match &node.op {
                 Op::Input => PreparedOp::Passthrough,
                 Op::Conv { desc, weights, bias, relu } => {
+                    // Graph nodes carry bias/relu on Op::Conv itself; a
+                    // ConvEpilogue on the descriptor would be silently
+                    // ignored here, so reject the ambiguity outright.
+                    if !desc.epilogue.is_noop() {
+                        bail_unsupported!(
+                            "{}: set bias/relu on Op::Conv, not on the Conv2d descriptor \
+                             (desc.epilogue is only consulted by Conv2d::run*)",
+                            node.name
+                        );
+                    }
                     let in_shape = &shapes[node.inputs[0]];
                     let auto = Conv2d {
                         algorithm: ConvAlgorithm::Auto,
@@ -429,17 +439,18 @@ impl PreparedModel {
                         PreparedConv::Winograd(wc) => {
                             winograd = true;
                             fast_layer = true;
-                            // Bias + ReLU fused into the output transform;
-                            // A/C blocks drawn from the shared arena.
+                            // Bias + ReLU fused into the gather epilogue;
+                            // packed-A blocks drawn from the shared arena.
                             wc.run_fused_with(x, pool, Some(bias), *relu, ws)?
                         }
                         PreparedConv::Im2Row(ic) => {
                             if let Op::Conv { desc, .. } = &node.op {
                                 fast_layer = is_winograd_suitable(desc.kernel, desc.stride);
                             }
-                            let mut y = ic.run_with_workspace(x, pool, ws)?;
-                            ops::bias_relu_inplace(&mut y, bias, *relu)?;
-                            y
+                            // Bias + ReLU fused into the GEMM epilogue —
+                            // conv outputs are written exactly once on
+                            // both scheme paths.
+                            ic.run_fused_with(x, pool, Some(bias), *relu, ws)?
                         }
                     }
                 }
@@ -571,6 +582,22 @@ mod tests {
         let (_, t) = base.run(&input, None).unwrap();
         let conv2 = t.iter().find(|t| t.name == "conv2").unwrap();
         assert!(conv2.fast_layer && !conv2.winograd);
+    }
+
+    /// Bias/ReLU live on Op::Conv for graph nodes; a ConvEpilogue set on
+    /// the descriptor would be silently ignored, so prepare() rejects it.
+    #[test]
+    fn rejects_descriptor_epilogue_on_graph_conv() {
+        let mut g = Graph::new();
+        let input = g.input();
+        let c1 = Conv2d::new(3, 8, (3, 3)).with_padding((1, 1)).with_relu(true);
+        let w1 = c1.random_weights(1);
+        g.add(
+            "conv1",
+            Op::Conv { desc: c1, weights: w1, bias: vec![0.0; 8], relu: true },
+            &[input],
+        );
+        assert!(PreparedModel::prepare("bad", &g, &[1, 8, 8, 3], Scheme::Im2RowOnly).is_err());
     }
 
     #[test]

@@ -156,6 +156,11 @@ pub fn relu_inplace(t: &mut Tensor) {
 }
 
 /// Add a per-channel bias (length C) in place, optionally fused with ReLU.
+///
+/// No longer on the GEMM-backed conv execution paths: both conv schemes
+/// fuse bias/ReLU into their GEMM epilogues ([`crate::gemm::Epilogue`]),
+/// so conv outputs are written exactly once. Kept as the oracle the
+/// `Direct` conv path (and tests) apply as a post pass.
 pub fn bias_relu_inplace(t: &mut Tensor, bias: &[f32], relu: bool) -> Result<()> {
     if t.rank() != 4 || t.shape()[3] != bias.len() {
         bail_shape!("bias length {} vs channels {:?}", bias.len(), t.shape());

@@ -1,197 +1,90 @@
-//! A portable 4-lane `f32` vector mirroring the ARMv8-A NEON operations the
-//! paper's transform listings use (`vaddq_f32`, `vsubq_f32`, `vmulq_f32`,
+//! A 4-lane `f32` vector mirroring the ARMv8-A NEON operations the paper's
+//! transform listings use (`vaddq_f32`, `vsubq_f32`, `vmulq_f32`,
 //! `vfmaq_f32`, …).
 //!
 //! The paper hand-codes its input/output transforms over 128-bit NEON
 //! registers, holding **four channels of one pixel** under NHWC (§2.1). We
-//! keep exactly that granularity: [`F32x4`] is a `#[repr(align(16))]` 4-lane
-//! struct whose operations compile to SSE/AVX vector instructions on x86 and
-//! would map 1:1 to NEON on aarch64 — LLVM reliably autovectorizes this
-//! shape. All transform kernels in [`crate::winograd`] are written against
-//! this type so they read like the paper's Listing 2.
+//! keep exactly that granularity with two interchangeable backends behind
+//! one [`F32x4`] type:
+//!
+//! * [`neon`] (`target_arch = "aarch64"`) — real NEON intrinsics
+//!   (`vld1q_f32` loads, `vfmaq_f32` FMAs, `vtrn1q/vtrn2q` transposes), the
+//!   instructions the paper's Listing 2 is written in.
+//! * [`portable`] (every other target) — a `#[repr(align(16))]` 4-lane
+//!   array struct whose operations LLVM compiles to SSE/AVX vector
+//!   instructions on x86.
+//!
+//! Both expose the identical API (the portable constructors are
+//! additionally `const`), and the parity suite below pins every operation
+//! of whichever backend is active to plain scalar `f32` semantics,
+//! lane for lane — so transform kernels written against [`F32x4`] read like
+//! the paper's Listing 2 and compute identically on every architecture.
 
-use std::ops::{Add, AddAssign, Mul, Neg, Sub};
+#[cfg(target_arch = "aarch64")]
+mod neon;
+#[cfg(target_arch = "aarch64")]
+pub use neon::F32x4;
 
-/// Four `f32` lanes, 16-byte aligned — the NEON `float32x4_t` analog.
-#[derive(Debug, Clone, Copy, PartialEq, Default)]
-#[repr(C, align(16))]
-pub struct F32x4(pub [f32; 4]);
-
-impl F32x4 {
-    /// All lanes zero.
-    #[inline(always)]
-    pub const fn zero() -> Self {
-        F32x4([0.0; 4])
-    }
-
-    /// All lanes set to `v` (NEON `vdupq_n_f32`).
-    #[inline(always)]
-    pub const fn splat(v: f32) -> Self {
-        F32x4([v; 4])
-    }
-
-    /// Load four consecutive values (NEON `vld1q_f32`).
-    ///
-    /// Panics in debug builds if the slice is short.
-    #[inline(always)]
-    pub fn load(src: &[f32]) -> Self {
-        debug_assert!(src.len() >= 4);
-        F32x4([src[0], src[1], src[2], src[3]])
-    }
-
-    /// Load up to four values, zero-filling the tail (for channel remainders).
-    #[inline(always)]
-    pub fn load_partial(src: &[f32]) -> Self {
-        let mut out = [0.0f32; 4];
-        for (o, s) in out.iter_mut().zip(src.iter()) {
-            *o = *s;
-        }
-        F32x4(out)
-    }
-
-    /// Store four values (NEON `vst1q_f32` / A64 `STR q`).
-    #[inline(always)]
-    pub fn store(self, dst: &mut [f32]) {
-        debug_assert!(dst.len() >= 4);
-        dst[..4].copy_from_slice(&self.0);
-    }
-
-    /// Store the first `n ≤ 4` lanes.
-    #[inline(always)]
-    pub fn store_partial(self, dst: &mut [f32], n: usize) {
-        debug_assert!(n <= 4 && dst.len() >= n);
-        dst[..n].copy_from_slice(&self.0[..n]);
-    }
-
-    /// Fused multiply–add: `self + a * b` (NEON `vfmaq_f32`).
-    #[inline(always)]
-    pub fn fma(self, a: F32x4, b: F32x4) -> F32x4 {
-        F32x4([
-            a.0[0].mul_add(b.0[0], self.0[0]),
-            a.0[1].mul_add(b.0[1], self.0[1]),
-            a.0[2].mul_add(b.0[2], self.0[2]),
-            a.0[3].mul_add(b.0[3], self.0[3]),
-        ])
-    }
-
-    /// `self + a * scalar` (NEON `vfmaq_n_f32`).
-    #[inline(always)]
-    pub fn fma_scalar(self, a: F32x4, s: f32) -> F32x4 {
-        self.fma(a, F32x4::splat(s))
-    }
-
-    /// Multiply by a scalar (NEON `vmulq_n_f32`).
-    #[inline(always)]
-    pub fn mul_scalar(self, s: f32) -> F32x4 {
-        self * F32x4::splat(s)
-    }
-
-    /// Lane-wise max (NEON `vmaxq_f32`) — used by ReLU and max-pool.
-    #[inline(always)]
-    pub fn max(self, o: F32x4) -> F32x4 {
-        F32x4([
-            self.0[0].max(o.0[0]),
-            self.0[1].max(o.0[1]),
-            self.0[2].max(o.0[2]),
-            self.0[3].max(o.0[3]),
-        ])
-    }
-
-    /// Horizontal sum of the four lanes (NEON `vaddvq_f32`).
-    #[inline(always)]
-    pub fn horizontal_sum(self) -> f32 {
-        (self.0[0] + self.0[1]) + (self.0[2] + self.0[3])
-    }
-
-    /// 4×4 in-register transpose (the NEON `vtrn`/`vzip` idiom the paper uses
-    /// to apply a row transform twice for `XᵀxX`).
-    #[inline(always)]
-    pub fn transpose4(rows: [F32x4; 4]) -> [F32x4; 4] {
-        let [a, b, c, d] = rows;
-        [
-            F32x4([a.0[0], b.0[0], c.0[0], d.0[0]]),
-            F32x4([a.0[1], b.0[1], c.0[1], d.0[1]]),
-            F32x4([a.0[2], b.0[2], c.0[2], d.0[2]]),
-            F32x4([a.0[3], b.0[3], c.0[3], d.0[3]]),
-        ]
-    }
-}
-
-impl Add for F32x4 {
-    type Output = F32x4;
-    #[inline(always)]
-    fn add(self, o: F32x4) -> F32x4 {
-        F32x4([
-            self.0[0] + o.0[0],
-            self.0[1] + o.0[1],
-            self.0[2] + o.0[2],
-            self.0[3] + o.0[3],
-        ])
-    }
-}
-
-impl Sub for F32x4 {
-    type Output = F32x4;
-    #[inline(always)]
-    fn sub(self, o: F32x4) -> F32x4 {
-        F32x4([
-            self.0[0] - o.0[0],
-            self.0[1] - o.0[1],
-            self.0[2] - o.0[2],
-            self.0[3] - o.0[3],
-        ])
-    }
-}
-
-impl Mul for F32x4 {
-    type Output = F32x4;
-    #[inline(always)]
-    fn mul(self, o: F32x4) -> F32x4 {
-        F32x4([
-            self.0[0] * o.0[0],
-            self.0[1] * o.0[1],
-            self.0[2] * o.0[2],
-            self.0[3] * o.0[3],
-        ])
-    }
-}
-
-impl AddAssign for F32x4 {
-    #[inline(always)]
-    fn add_assign(&mut self, o: F32x4) {
-        *self = *self + o;
-    }
-}
-
-impl Neg for F32x4 {
-    type Output = F32x4;
-    #[inline(always)]
-    fn neg(self) -> F32x4 {
-        F32x4([-self.0[0], -self.0[1], -self.0[2], -self.0[3]])
-    }
-}
+#[cfg(not(target_arch = "aarch64"))]
+mod portable;
+#[cfg(not(target_arch = "aarch64"))]
+pub use portable::F32x4;
 
 #[cfg(test)]
 mod tests {
+    //! Lane-for-lane parity of the active backend against scalar `f32`
+    //! arithmetic. On `aarch64` this validates the NEON intrinsic backend;
+    //! elsewhere the portable one — same expectations either way.
+
     use super::*;
+
+    const A: [f32; 4] = [1.0, 2.0, 3.0, 4.0];
+    const B: [f32; 4] = [10.0, 20.0, 30.0, 40.0];
+
+    #[test]
+    fn construction_roundtrip() {
+        assert_eq!(F32x4::zero().to_array(), [0.0; 4]);
+        assert_eq!(F32x4::splat(2.5).to_array(), [2.5; 4]);
+        let v = F32x4::from_array(A);
+        assert_eq!(v.to_array(), A);
+        for (i, &want) in A.iter().enumerate() {
+            assert_eq!(v.lane(i), want);
+        }
+        assert_eq!(F32x4::default(), F32x4::zero());
+    }
 
     #[test]
     fn arithmetic_lanewise() {
-        let a = F32x4([1.0, 2.0, 3.0, 4.0]);
-        let b = F32x4([10.0, 20.0, 30.0, 40.0]);
-        assert_eq!((a + b).0, [11.0, 22.0, 33.0, 44.0]);
-        assert_eq!((b - a).0, [9.0, 18.0, 27.0, 36.0]);
-        assert_eq!((a * b).0, [10.0, 40.0, 90.0, 160.0]);
-        assert_eq!((-a).0, [-1.0, -2.0, -3.0, -4.0]);
+        let a = F32x4::from_array(A);
+        let b = F32x4::from_array(B);
+        for i in 0..4 {
+            assert_eq!((a + b).lane(i), A[i] + B[i]);
+            assert_eq!((b - a).lane(i), B[i] - A[i]);
+            assert_eq!((a * b).lane(i), A[i] * B[i]);
+            assert_eq!((-a).lane(i), -A[i]);
+        }
+        let mut acc = a;
+        acc += b;
+        assert_eq!(acc, a + b);
     }
 
     #[test]
     fn fma_matches_scalar() {
         let acc = F32x4::splat(1.0);
-        let a = F32x4([1.0, 2.0, 3.0, 4.0]);
-        let b = F32x4([5.0, 6.0, 7.0, 8.0]);
-        assert_eq!(acc.fma(a, b).0, [6.0, 13.0, 22.0, 33.0]);
-        assert_eq!(acc.fma_scalar(a, 2.0).0, [3.0, 5.0, 7.0, 9.0]);
+        let a = F32x4::from_array(A);
+        let b = F32x4::from_array([5.0, 6.0, 7.0, 8.0]);
+        let fused = acc.fma(a, b);
+        for i in 0..4 {
+            assert_eq!(fused.lane(i), A[i].mul_add(b.lane(i), 1.0));
+        }
+        let scaled = acc.fma_scalar(a, 2.0);
+        for i in 0..4 {
+            assert_eq!(scaled.lane(i), A[i].mul_add(2.0, 1.0));
+        }
+        let m = a.mul_scalar(3.0);
+        for i in 0..4 {
+            assert_eq!(m.lane(i), A[i] * 3.0);
+        }
     }
 
     #[test]
@@ -206,7 +99,7 @@ mod tests {
     #[test]
     fn partial_load_store() {
         let v = F32x4::load_partial(&[7.0, 8.0]);
-        assert_eq!(v.0, [7.0, 8.0, 0.0, 0.0]);
+        assert_eq!(v.to_array(), [7.0, 8.0, 0.0, 0.0]);
         let mut dst = [9.0; 4];
         v.store_partial(&mut dst, 2);
         assert_eq!(dst, [7.0, 8.0, 9.0, 9.0]);
@@ -215,20 +108,26 @@ mod tests {
     #[test]
     fn transpose_is_involution() {
         let rows = [
-            F32x4([0.0, 1.0, 2.0, 3.0]),
-            F32x4([4.0, 5.0, 6.0, 7.0]),
-            F32x4([8.0, 9.0, 10.0, 11.0]),
-            F32x4([12.0, 13.0, 14.0, 15.0]),
+            F32x4::from_array([0.0, 1.0, 2.0, 3.0]),
+            F32x4::from_array([4.0, 5.0, 6.0, 7.0]),
+            F32x4::from_array([8.0, 9.0, 10.0, 11.0]),
+            F32x4::from_array([12.0, 13.0, 14.0, 15.0]),
         ];
         let t = F32x4::transpose4(rows);
-        assert_eq!(t[0].0, [0.0, 4.0, 8.0, 12.0]);
+        // Column i of the input becomes row i.
+        for (i, trow) in t.iter().enumerate() {
+            for (j, row) in rows.iter().enumerate() {
+                assert_eq!(trow.lane(j), row.lane(i), "t[{i}][{j}]");
+            }
+        }
         assert_eq!(F32x4::transpose4(t), rows);
     }
 
     #[test]
     fn horizontal_sum_and_max() {
-        let a = F32x4([1.0, -2.0, 3.5, 0.5]);
+        let a = F32x4::from_array([1.0, -2.0, 3.5, 0.5]);
         assert_eq!(a.horizontal_sum(), 3.0);
-        assert_eq!(a.max(F32x4::zero()).0, [1.0, 0.0, 3.5, 0.5]);
+        let m = a.max(F32x4::zero());
+        assert_eq!(m.to_array(), [1.0, 0.0, 3.5, 0.5]);
     }
 }

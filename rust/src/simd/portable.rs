@@ -1,0 +1,183 @@
+//! The portable 4-lane backend: a `#[repr(align(16))]` array struct whose
+//! operations LLVM reliably autovectorizes to SSE/AVX on x86 (and to NEON on
+//! any other 128-bit SIMD target this crate is built for without the
+//! dedicated [`super::neon`] backend).
+
+use std::ops::{Add, AddAssign, Mul, Neg, Sub};
+
+/// Four `f32` lanes, 16-byte aligned — the NEON `float32x4_t` analog.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+#[repr(C, align(16))]
+pub struct F32x4([f32; 4]);
+
+impl F32x4 {
+    /// All lanes zero.
+    #[inline(always)]
+    pub const fn zero() -> Self {
+        F32x4([0.0; 4])
+    }
+
+    /// All lanes set to `v` (NEON `vdupq_n_f32`).
+    #[inline(always)]
+    pub const fn splat(v: f32) -> Self {
+        F32x4([v; 4])
+    }
+
+    /// Build from four lane values.
+    #[inline(always)]
+    pub const fn from_array(a: [f32; 4]) -> Self {
+        F32x4(a)
+    }
+
+    /// The four lane values as an array.
+    #[inline(always)]
+    pub const fn to_array(self) -> [f32; 4] {
+        self.0
+    }
+
+    /// One lane value (`i < 4`).
+    #[inline(always)]
+    pub fn lane(self, i: usize) -> f32 {
+        self.0[i]
+    }
+
+    /// Load four consecutive values (NEON `vld1q_f32`).
+    ///
+    /// Panics in debug builds if the slice is short.
+    #[inline(always)]
+    pub fn load(src: &[f32]) -> Self {
+        debug_assert!(src.len() >= 4);
+        F32x4([src[0], src[1], src[2], src[3]])
+    }
+
+    /// Load up to four values, zero-filling the tail (for channel remainders).
+    #[inline(always)]
+    pub fn load_partial(src: &[f32]) -> Self {
+        let mut out = [0.0f32; 4];
+        for (o, s) in out.iter_mut().zip(src.iter()) {
+            *o = *s;
+        }
+        F32x4(out)
+    }
+
+    /// Store four values (NEON `vst1q_f32` / A64 `STR q`).
+    #[inline(always)]
+    pub fn store(self, dst: &mut [f32]) {
+        debug_assert!(dst.len() >= 4);
+        dst[..4].copy_from_slice(&self.0);
+    }
+
+    /// Store the first `n ≤ 4` lanes.
+    #[inline(always)]
+    pub fn store_partial(self, dst: &mut [f32], n: usize) {
+        debug_assert!(n <= 4 && dst.len() >= n);
+        dst[..n].copy_from_slice(&self.0[..n]);
+    }
+
+    /// Fused multiply–add: `self + a * b` (NEON `vfmaq_f32`).
+    #[inline(always)]
+    pub fn fma(self, a: F32x4, b: F32x4) -> F32x4 {
+        F32x4([
+            a.0[0].mul_add(b.0[0], self.0[0]),
+            a.0[1].mul_add(b.0[1], self.0[1]),
+            a.0[2].mul_add(b.0[2], self.0[2]),
+            a.0[3].mul_add(b.0[3], self.0[3]),
+        ])
+    }
+
+    /// `self + a * scalar` (NEON `vfmaq_n_f32`).
+    #[inline(always)]
+    pub fn fma_scalar(self, a: F32x4, s: f32) -> F32x4 {
+        self.fma(a, F32x4::splat(s))
+    }
+
+    /// Multiply by a scalar (NEON `vmulq_n_f32`).
+    #[inline(always)]
+    pub fn mul_scalar(self, s: f32) -> F32x4 {
+        self * F32x4::splat(s)
+    }
+
+    /// Lane-wise max (NEON `vmaxq_f32`) — used by ReLU and max-pool.
+    #[inline(always)]
+    pub fn max(self, o: F32x4) -> F32x4 {
+        F32x4([
+            self.0[0].max(o.0[0]),
+            self.0[1].max(o.0[1]),
+            self.0[2].max(o.0[2]),
+            self.0[3].max(o.0[3]),
+        ])
+    }
+
+    /// Horizontal sum of the four lanes (NEON `vaddvq_f32`).
+    #[inline(always)]
+    pub fn horizontal_sum(self) -> f32 {
+        (self.0[0] + self.0[1]) + (self.0[2] + self.0[3])
+    }
+
+    /// 4×4 in-register transpose (the NEON `vtrn`/`vzip` idiom the paper uses
+    /// to apply a row transform twice for `XᵀxX`).
+    #[inline(always)]
+    pub fn transpose4(rows: [F32x4; 4]) -> [F32x4; 4] {
+        let [a, b, c, d] = rows;
+        [
+            F32x4([a.0[0], b.0[0], c.0[0], d.0[0]]),
+            F32x4([a.0[1], b.0[1], c.0[1], d.0[1]]),
+            F32x4([a.0[2], b.0[2], c.0[2], d.0[2]]),
+            F32x4([a.0[3], b.0[3], c.0[3], d.0[3]]),
+        ]
+    }
+}
+
+impl Add for F32x4 {
+    type Output = F32x4;
+    #[inline(always)]
+    fn add(self, o: F32x4) -> F32x4 {
+        F32x4([
+            self.0[0] + o.0[0],
+            self.0[1] + o.0[1],
+            self.0[2] + o.0[2],
+            self.0[3] + o.0[3],
+        ])
+    }
+}
+
+impl Sub for F32x4 {
+    type Output = F32x4;
+    #[inline(always)]
+    fn sub(self, o: F32x4) -> F32x4 {
+        F32x4([
+            self.0[0] - o.0[0],
+            self.0[1] - o.0[1],
+            self.0[2] - o.0[2],
+            self.0[3] - o.0[3],
+        ])
+    }
+}
+
+impl Mul for F32x4 {
+    type Output = F32x4;
+    #[inline(always)]
+    fn mul(self, o: F32x4) -> F32x4 {
+        F32x4([
+            self.0[0] * o.0[0],
+            self.0[1] * o.0[1],
+            self.0[2] * o.0[2],
+            self.0[3] * o.0[3],
+        ])
+    }
+}
+
+impl AddAssign for F32x4 {
+    #[inline(always)]
+    fn add_assign(&mut self, o: F32x4) {
+        *self = *self + o;
+    }
+}
+
+impl Neg for F32x4 {
+    type Output = F32x4;
+    #[inline(always)]
+    fn neg(self) -> F32x4 {
+        F32x4([-self.0[0], -self.0[1], -self.0[2], -self.0[3]])
+    }
+}

@@ -1,60 +1,87 @@
 //! The region-wise multi-channel pipeline (the paper's §2, Figure 2),
-//! executed **region-blocked** over a reusable workspace arena:
+//! executed **region-blocked** over a reusable workspace arena with the
+//! transforms fused into the GEMM's pack and epilogue steps:
 //!
-//! 1. **Input transform** — walk the regions of the NHWC input, transform
-//!    each `th×tw` tile into the Winograd domain four channels at a time and
-//!    *scatter* the results into the `x²` GEMM A-matrices `[R×C]`.
-//! 2. **GEMM** — `x²` batched products with the pre-transformed weight
-//!    B-matrices `[C×M]` (channel summation of Hadamard products becomes the
-//!    GEMM inner dimension).
-//! 3. **Output transform** — *gather* each region's `x²` values back out of
-//!    the C-matrices `[R×M]`, apply the inverse transform and write the
-//!    spatial output tile.
+//! 1. **Transform-as-pack** — walk the regions of the NHWC input, transform
+//!    each `th×tw` tile into the Winograd domain four channels at a time
+//!    and scatter the results *directly into `MR`-strided packed-A panel
+//!    layout* ([`crate::gemm::pack::packed_a_index`]), one packed image per
+//!    GEMM tile position. The packed panels are the values' first and only
+//!    materialisation: there is no row-major A staging buffer and no
+//!    separate `pack_a` copy pass inside the GEMM.
+//! 2. **GEMM + gather-as-epilogue** — `x²` batched products against the
+//!    pre-packed weight B-matrices run per `MR`-region row panel
+//!    ([`BatchedGemm::run_packed_fused`]); each finished
+//!    `[x²]×MR×NR` hot cube is handed, still L1-hot, to a
+//!    [`crate::gemm::Epilogue`] that applies the inverse transform, fused
+//!    bias + ReLU, and writes the spatial output tile. The Winograd-domain
+//!    C matrices are **never materialised**, and conv outputs are written
+//!    exactly once.
+//!
+//! This is the paper's §2.2 interleaving argument made structural: its
+//! BLASFEO-class kernels fuse packing and transforms so data moves through
+//! the cache hierarchy once, which is what keeps region-wise Winograd
+//! ahead of im2row/FFT on mobile-class memory systems.
 //!
 //! The GEMM shape is `[R×C]·[C×M]` (not `[M×C]·[C×R]`) following §2.1.3:
-//! under NHWC the scattered channel vectors land contiguously in the rows of
-//! an `R×C` matrix (plain `STR` stores, no `ST4` interleaving).
+//! under NHWC the channel vectors of one region form one logical row of an
+//! `R×C` matrix (in packed layout, the row's cells sit `MR` apart).
 //!
 //! ## Region blocking
 //!
-//! Rather than materialising the whole feature map in the Winograd domain
-//! (an `x²·R·C` A buffer plus an `x²·R·M` C buffer per layer — the
-//! cache-hostile working-set blow-up that lets FFT/ im2row catch up on
-//! large layers), the pipeline processes regions in **blocks**: scatter →
-//! `x²` GEMMs → gather run per block of `Rb` regions, where `Rb` is chosen
-//! so the A block, C block and one packed-B panel together fit an L2 budget
+//! Rather than transforming the whole feature map at once, regions flow
+//! through the two fused stages in **blocks** of `Rb` regions, where `Rb`
+//! is chosen so the packed-A block (padded to whole `MR` row panels), one
+//! packed-B panel and the per-thread hot cube together fit an L2 budget
 //! ([`DEFAULT_L2_BUDGET`], overridable per convolution with
 //! [`WinogradConvolution::with_block_budget`] or globally with the
-//! `WINOCONV_L2_BUDGET` env var). The block scratch comes from a caller-
-//! provided [`Workspace`] arena, so steady-state inference allocates
-//! nothing inside stages 1–3.
+//! `WINOCONV_L2_BUDGET` env var, read once per process). The block scratch
+//! comes from a caller-provided [`Workspace`] arena, so steady-state
+//! inference allocates nothing inside the fused stages.
+//!
+//! The pre-fusion three-stage pipeline (scatter → staged GEMMs → gather)
+//! is kept as [`WinogradConvolution::run_staged_with`]: it is the ablation
+//! baseline (`ablation_amortization` E6) and the oracle the fused path is
+//! property-tested against.
 
-use super::{fast, transform::transform_tile_lanes, transform::transform_tile_scalar};
-use super::{WinogradPlan, WinogradVariant};
-use crate::gemm::{pack::packed_b_panel_bytes, BatchedGemm, Blocking, PackedB};
+use super::transform::{transform_and_pack, transform_tile_lanes, transform_tile_scalar};
+use super::{fast, WinogradPlan, WinogradVariant};
+use crate::gemm::pack::{packed_b_panel_bytes, PackedAWriter};
+use crate::gemm::{BatchedGemm, Blocking, Epilogue, PackedB, MR, NR};
 use crate::parallel::ThreadPool;
 use crate::simd::F32x4;
 use crate::tensor::Tensor;
 use crate::util::ceil_div;
 use crate::workspace::Workspace;
 use crate::{bail_shape, bail_unsupported, Result};
+use std::sync::OnceLock;
 
 /// Maximum input-tile edge among shipped variants (F(4,7) ⇒ 10).
 const MAX_T: usize = 10;
 
-/// Default per-block workspace budget: the A block, C block and one
-/// packed-B panel of a region block must fit in this many bytes. Sized for
-/// the ~512 KiB–1 MiB L2 of the mobile cores the paper targets.
+/// Default per-block workspace budget: the packed-A block, one packed-B
+/// panel and the per-thread hot cube of a region block must fit in this
+/// many bytes. Sized for the ~512 KiB–1 MiB L2 of the mobile cores the
+/// paper targets.
 pub const DEFAULT_L2_BUDGET: usize = 512 * 1024;
 
 /// The block budget in effect for new convolutions: `WINOCONV_L2_BUDGET`
 /// (bytes) when set and parseable, else [`DEFAULT_L2_BUDGET`].
+///
+/// The environment is consulted **once per process** (cached in a
+/// `OnceLock`) — `WinogradConvolution` construction sits on the
+/// model-prepare path, and re-parsing the environment per layer was
+/// measurable noise on many-layer models. Use
+/// [`WinogradConvolution::with_block_budget`] for per-convolution control.
 pub fn default_block_budget() -> usize {
-    std::env::var("WINOCONV_L2_BUDGET")
-        .ok()
-        .and_then(|s| s.parse::<usize>().ok())
-        .filter(|&b| b > 0)
-        .unwrap_or(DEFAULT_L2_BUDGET)
+    static BUDGET: OnceLock<usize> = OnceLock::new();
+    *BUDGET.get_or_init(|| {
+        std::env::var("WINOCONV_L2_BUDGET")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&b| b > 0)
+            .unwrap_or(DEFAULT_L2_BUDGET)
+    })
 }
 
 /// A Winograd convolution with pre-transformed weights, reusable across
@@ -72,6 +99,19 @@ pub struct WinogradConvolution {
     /// layout, one per tile position (EXPERIMENTS.md §Perf step 2: packing
     /// B per call dominated skinny-R layers; now it happens once here).
     u_packed: Vec<PackedB>,
+}
+
+/// Resolved per-run geometry shared by the fused and staged pipelines.
+struct RunGeometry {
+    c: usize,
+    oh: usize,
+    ow: usize,
+    tiles_h: usize,
+    tiles_w: usize,
+    regions: usize,
+    /// Input padded so every tile is in-bounds (right/bottom rounded up to
+    /// the tile grid).
+    padded: Tensor,
 }
 
 impl WinogradConvolution {
@@ -126,8 +166,9 @@ impl WinogradConvolution {
     }
 
     /// Builder: override the per-block workspace budget in bytes. A budget
-    /// smaller than one region's footprint degenerates to one region per
-    /// block; `usize::MAX` disables blocking (one block spans the layer).
+    /// smaller than one `MR`-panel's footprint degenerates to one region
+    /// per block; `usize::MAX` disables blocking (one block spans the
+    /// layer).
     pub fn with_block_budget(mut self, bytes: usize) -> Self {
         self.block_budget = bytes.max(1);
         self
@@ -160,80 +201,82 @@ impl WinogradConvolution {
         Ok((h + 2 * ph - kh + 1, w + 2 * pw - kw + 1))
     }
 
-    /// Regions per block under the budget: the largest `Rb` such that the
-    /// A block (`x²·Rb·C`), C block (`x²·Rb·M`) and one packed-B panel fit
-    /// in [`block_budget`](Self::block_budget) bytes, aligned down to whole
-    /// tile rows when possible and clamped to `[1, regions]`.
-    fn block_regions(&self, regions: usize, tiles_w: usize) -> usize {
+    /// Regions per block under the budget.
+    ///
+    /// Fused (`staged == false`): the largest `Rb` whose packed-A block
+    /// (`x² · ceil(Rb/MR)·MR · C`, padded to whole `MR` row panels), one
+    /// packed-B panel and the per-thread `x²·MR·NR` hot cube fit in
+    /// [`block_budget`](Self::block_budget) bytes. `Rb` is drawn from whole
+    /// `MR` panels so the padding itself stays inside the budget, then
+    /// aligned down to whole tile rows when possible.
+    ///
+    /// Staged: the pre-fusion accounting — A block (`x²·Rb·C`) plus C block
+    /// (`x²·Rb·M`) plus one packed-B panel.
+    fn block_regions(&self, regions: usize, tiles_w: usize, staged: bool) -> usize {
         let tiles = self.plan.variant.gemm_count();
-        let per_region = tiles * (self.cin + self.cout) * std::mem::size_of::<f32>();
+        let f32s = std::mem::size_of::<f32>();
         let panel = packed_b_panel_bytes(Blocking::default().kc.min(self.cin.max(1)));
-        let avail = self.block_budget.saturating_sub(panel);
-        let mut rb = (avail / per_region).max(1);
+        let mut rb = if staged {
+            let per_region = tiles * (self.cin + self.cout) * f32s;
+            let avail = self.block_budget.saturating_sub(panel);
+            (avail / per_region.max(1)).max(1)
+        } else {
+            let hot = tiles * MR * NR * f32s;
+            let per_row = tiles * self.cin * f32s;
+            let avail = self.block_budget.saturating_sub(panel + hot);
+            let max_rows = avail / per_row.max(1);
+            if max_rows >= MR {
+                (max_rows / MR) * MR
+            } else {
+                1
+            }
+        };
         if rb >= tiles_w {
             rb -= rb % tiles_w;
         }
         rb.clamp(1, regions.max(1))
     }
 
-    /// Regions per block for an `[n, h, w, C]` input (see `block_regions`).
+    /// Regions per block for an `[n, h, w, C]` input on the fused pipeline
+    /// (see `block_regions`).
     pub fn regions_per_block(&self, n: usize, h: usize, w: usize) -> Result<usize> {
         let (oh, ow) = self.output_hw(h, w)?;
         let (mh, mw) = self.plan.variant.out_tile();
         let (tiles_h, tiles_w) = (ceil_div(oh, mh), ceil_div(ow, mw));
-        Ok(self.block_regions(n * tiles_h * tiles_w, tiles_w))
+        Ok(self.block_regions(n * tiles_h * tiles_w, tiles_w, false))
     }
 
-    /// Per-block workspace bytes (A block + C block) for an `[n, h, w, C]`
-    /// input — the number that must sit under the configured L2 budget.
+    /// Per-block workspace bytes (the packed-A block) for an `[n, h, w, C]`
+    /// input — the number that must sit under the configured L2 budget
+    /// together with one packed-B panel and the hot cube.
     pub fn block_workspace_bytes(&self, n: usize, h: usize, w: usize) -> Result<usize> {
         Ok(self.workspace_elems_for(n, h, w)? * std::mem::size_of::<f32>())
     }
 
-    /// Workspace elements ([`f32`]s) one inference over an `[n, h, w, C]`
-    /// input borrows from the arena — used to pre-size per-thread arenas.
+    /// Workspace elements ([`f32`]s) one **fused** inference over an
+    /// `[n, h, w, C]` input borrows from the arena — used to pre-size
+    /// per-thread arenas. C blocks no longer exist, so this is exactly the
+    /// packed-A block: `x² · ceil(Rb/MR)·MR · C`.
     pub fn workspace_elems_for(&self, n: usize, h: usize, w: usize) -> Result<usize> {
         let rb = self.regions_per_block(n, h, w)?;
+        let tiles = self.plan.variant.gemm_count();
+        Ok(tiles * rb.div_ceil(MR) * MR * self.cin)
+    }
+
+    /// Workspace elements one **staged** inference borrows (A block + C
+    /// block) — the pre-fusion accounting, kept for the E6 ablation.
+    pub fn staged_workspace_elems_for(&self, n: usize, h: usize, w: usize) -> Result<usize> {
+        let (oh, ow) = self.output_hw(h, w)?;
+        let (mh, mw) = self.plan.variant.out_tile();
+        let (tiles_h, tiles_w) = (ceil_div(oh, mh), ceil_div(ow, mw));
+        let rb = self.block_regions(n * tiles_h * tiles_w, tiles_w, true);
         let tiles = self.plan.variant.gemm_count();
         Ok(tiles * rb * (self.cin + self.cout))
     }
 
-    /// Run the three-stage pipeline. `pool` parallelises regions and GEMMs.
-    ///
-    /// Allocates a throwaway [`Workspace`]; hot loops should hold one and
-    /// call [`run_fused_with`](Self::run_fused_with) instead.
-    pub fn run(&self, input: &Tensor, pool: Option<&ThreadPool>) -> Result<Tensor> {
-        self.run_fused(input, pool, None, false)
-    }
-
-    /// [`run`](Self::run) with a fused epilogue: per-output-channel bias and
-    /// optional ReLU applied inside the output-transform stage, while the
-    /// tile is still in registers — saving one full pass over the output
-    /// tensor (EXPERIMENTS.md §Perf step 6).
-    pub fn run_fused(
-        &self,
-        input: &Tensor,
-        pool: Option<&ThreadPool>,
-        bias: Option<&[f32]>,
-        relu: bool,
-    ) -> Result<Tensor> {
-        let mut ws = Workspace::new();
-        self.run_fused_with(input, pool, bias, relu, &mut ws)
-    }
-
-    /// The region-blocked pipeline over a caller-owned arena: blocks of
-    /// `Rb` regions flow through scatter → `x²` batched GEMMs → gather, and
-    /// the only heap traffic is the arena's one-time growth (none at all
-    /// once `ws` is at size — the zero-steady-state-allocation property the
-    /// arena-reuse tests pin).
-    pub fn run_fused_with(
-        &self,
-        input: &Tensor,
-        pool: Option<&ThreadPool>,
-        bias: Option<&[f32]>,
-        relu: bool,
-        ws: &mut Workspace,
-    ) -> Result<Tensor> {
+    /// Validate shapes and resolve the per-run geometry (incl. stage-0
+    /// padding) shared by the fused and staged pipelines.
+    fn resolve_geometry(&self, input: &Tensor, bias: Option<&[f32]>) -> Result<RunGeometry> {
         if input.rank() != 4 {
             bail_shape!("input must be [N, H, W, C], got {:?}", input.shape());
         }
@@ -252,38 +295,101 @@ impl WinogradConvolution {
             }
         }
         let (oh, ow) = self.output_hw(h, w)?;
-        let v = self.plan.variant;
-        let (mh, mw) = v.out_tile();
-        let (th, tw) = v.in_tile();
-        let tiles = th * tw;
+        let (mh, mw) = self.plan.variant.out_tile();
+        let (th, tw) = self.plan.variant.in_tile();
         let (tiles_h, tiles_w) = (ceil_div(oh, mh), ceil_div(ow, mw));
-        let regions = n * tiles_h * tiles_w;
-        let m_total = self.cout;
-
-        // Stage 0: pad so every tile is in-bounds (right/bottom rounded up
-        // to the tile grid).
         let (ph, pw) = self.pad;
         let need_h = tiles_h * mh + th - mh; // = tiles_h*mh + kh - 1
         let need_w = tiles_w * mw + tw - mw;
         let padded = input.pad_spatial(ph, need_h - h - ph, pw, need_w - w - pw);
+        Ok(RunGeometry {
+            c,
+            oh,
+            ow,
+            tiles_h,
+            tiles_w,
+            regions: n * tiles_h * tiles_w,
+            padded,
+        })
+    }
 
-        let mut output = Tensor::zeros(&[n, oh, ow, m_total]);
+    /// Run the fused two-stage pipeline. `pool` parallelises regions and
+    /// GEMM row panels.
+    ///
+    /// Allocates a throwaway [`Workspace`]; hot loops should hold one and
+    /// call [`run_fused_with`](Self::run_fused_with) instead.
+    pub fn run(&self, input: &Tensor, pool: Option<&ThreadPool>) -> Result<Tensor> {
+        self.run_fused(input, pool, None, false)
+    }
 
-        // One A/C block pair for the whole layer, reused across blocks.
-        let rb = self.block_regions(regions, tiles_w);
-        let (a_blk, c_blk) = ws.split2(tiles * rb * c, tiles * rb * m_total);
+    /// [`run`](Self::run) with per-output-channel bias and optional ReLU
+    /// fused into the gather epilogue — applied while the output tile is
+    /// still in registers, so conv outputs are written exactly once.
+    pub fn run_fused(
+        &self,
+        input: &Tensor,
+        pool: Option<&ThreadPool>,
+        bias: Option<&[f32]>,
+        relu: bool,
+    ) -> Result<Tensor> {
+        let mut ws = Workspace::new();
+        self.run_fused_with(input, pool, bias, relu, &mut ws)
+    }
 
-        for r0 in (0..regions).step_by(rb) {
-            let bm = (regions - r0).min(rb);
+    /// The fused region-blocked pipeline over a caller-owned arena: blocks
+    /// of `Rb` regions flow through transform-as-pack → batched GEMM with
+    /// gather-as-epilogue, and the only heap traffic is the arena's
+    /// one-time growth (none at all once `ws` is at size — the
+    /// zero-steady-state-allocation property the arena-reuse tests pin).
+    pub fn run_fused_with(
+        &self,
+        input: &Tensor,
+        pool: Option<&ThreadPool>,
+        bias: Option<&[f32]>,
+        relu: bool,
+        ws: &mut Workspace,
+    ) -> Result<Tensor> {
+        let g = self.resolve_geometry(input, bias)?;
+        let (mh, mw) = self.plan.variant.out_tile();
+        let (th, tw) = self.plan.variant.in_tile();
+        let tiles = th * tw;
+        let (c, m_total) = (g.c, self.cout);
+        let n = input.shape()[0];
 
-            // Stage 1: input transform + scatter into A `[tile][bm][C]`.
+        let mut output = Tensor::zeros(&[n, g.oh, g.ow, m_total]);
+        let out_addr = output.data_mut().as_mut_ptr() as usize;
+
+        // One packed-A block for the whole layer, reused across blocks.
+        let rb = self.block_regions(g.regions, g.tiles_w, false);
+        let a_blk = ws.take(tiles * rb.div_ceil(MR) * MR * c);
+        // `bm` takes at most two values (rb, then the last remainder), so
+        // the dead rows of a short last panel are zeroed at most twice per
+        // run — not per block.
+        let mut zeroed_for_bm = None;
+
+        for r0 in (0..g.regions).step_by(rb) {
+            let bm = (g.regions - r0).min(rb);
+            let panels = bm.div_ceil(MR);
+            let tile_stride = panels * MR * c;
+
+            // Stage 1: transform-as-pack. Dead rows of a short last panel
+            // must multiply as zero in the micro-kernel.
+            if bm % MR != 0 && zeroed_for_bm != Some(bm) {
+                for t in 0..tiles {
+                    PackedAWriter::new(&mut a_blk[t * tile_stride..(t + 1) * tile_stride], bm, c)
+                        .zero_pad_rows();
+                }
+                zeroed_for_bm = Some(bm);
+            }
             {
                 let a_addr = a_blk.as_mut_ptr() as usize;
+                let a_len = tiles * tile_stride;
+                let padded_in = &g.padded;
                 let transform_region = |li: usize| {
                     let region = r0 + li;
-                    let b = region / (tiles_h * tiles_w);
-                    let rem = region % (tiles_h * tiles_w);
-                    let (ty, tx) = (rem / tiles_w, rem % tiles_w);
+                    let b = region / (g.tiles_h * g.tiles_w);
+                    let rem = region % (g.tiles_h * g.tiles_w);
+                    let (ty, tx) = (rem / g.tiles_w, rem % g.tiles_w);
                     let (y0, x0) = (ty * mh, tx * mw);
                     let mut d = [F32x4::zero(); MAX_T * MAX_T];
                     let mut out = [F32x4::zero(); MAX_T * MAX_T];
@@ -293,7 +399,7 @@ impl WinogradConvolution {
                         // Gather the th×tw tile for this 4-channel group.
                         for i in 0..th {
                             for j in 0..tw {
-                                let px = padded.pixel(b, y0 + i, x0 + j);
+                                let px = padded_in.pixel(b, y0 + i, x0 + j);
                                 d[i * tw + j] = if lanes == 4 {
                                     F32x4::load(&px[cg..cg + 4])
                                 } else {
@@ -301,7 +407,122 @@ impl WinogradConvolution {
                                 };
                             }
                         }
-                        // Transform (fast path when available).
+                        // Each block-local region li writes only its own
+                        // logical row's packed cells (the scatter contract
+                        // transform_and_pack documents); rows are disjoint
+                        // across parallel regions.
+                        transform_and_pack(
+                            &self.plan,
+                            &d[..th * tw],
+                            &mut out,
+                            &mut tmp,
+                            a_addr,
+                            a_len,
+                            tile_stride,
+                            c,
+                            li,
+                            cg,
+                            lanes,
+                        );
+                    }
+                };
+                match pool {
+                    Some(pool) => pool.parallel_for(bm, transform_region),
+                    None => (0..bm).for_each(transform_region),
+                }
+            }
+
+            // Stage 2: x² batched GEMMs over the packed panels; the gather
+            // (inverse transform + bias/ReLU + output store) runs as the
+            // epilogue on each L1-hot [x²]×MR×NR cube.
+            let bgd = BatchedGemm {
+                batch: tiles,
+                m: bm,
+                k: c,
+                n: m_total,
+            };
+            let gather = GatherEpilogue {
+                conv: self,
+                out_addr,
+                r0,
+                tiles_h: g.tiles_h,
+                tiles_w: g.tiles_w,
+                oh: g.oh,
+                ow: g.ow,
+                m_total,
+                bias,
+                relu,
+            };
+            bgd.run_packed_fused(pool, &a_blk[..tiles * tile_stride], &self.u_packed, &gather);
+        }
+
+        Ok(output)
+    }
+
+    /// The pre-fusion three-stage pipeline (scatter → staged `x²` GEMMs →
+    /// gather) with a throwaway arena — the E6 ablation baseline.
+    pub fn run_staged(&self, input: &Tensor, pool: Option<&ThreadPool>) -> Result<Tensor> {
+        let mut ws = Workspace::new();
+        self.run_staged_with(input, pool, None, false, &mut ws)
+    }
+
+    /// The pre-fusion three-stage pipeline over a caller-owned arena: the
+    /// input transform scatters into a row-major A block, `pack_a` repacks
+    /// it inside the GEMM, the Winograd-domain C block is materialised,
+    /// and a separate gather pass reads it back. Kept as the ablation
+    /// baseline (`ablation_amortization` E6) and as the oracle the fused
+    /// path is property-tested against — each extra memory pass here is
+    /// exactly what [`run_fused_with`](Self::run_fused_with) deletes.
+    pub fn run_staged_with(
+        &self,
+        input: &Tensor,
+        pool: Option<&ThreadPool>,
+        bias: Option<&[f32]>,
+        relu: bool,
+        ws: &mut Workspace,
+    ) -> Result<Tensor> {
+        let g = self.resolve_geometry(input, bias)?;
+        let v = self.plan.variant;
+        let (mh, mw) = v.out_tile();
+        let (th, tw) = v.in_tile();
+        let tiles = th * tw;
+        let (c, m_total) = (g.c, self.cout);
+        let n = input.shape()[0];
+
+        let mut output = Tensor::zeros(&[n, g.oh, g.ow, m_total]);
+
+        // One A/C block pair for the whole layer, reused across blocks.
+        let rb = self.block_regions(g.regions, g.tiles_w, true);
+        let (a_blk, c_blk) = ws.split2(tiles * rb * c, tiles * rb * m_total);
+
+        for r0 in (0..g.regions).step_by(rb) {
+            let bm = (g.regions - r0).min(rb);
+
+            // Stage 1: input transform + scatter into A `[tile][bm][C]`.
+            {
+                let a_addr = a_blk.as_mut_ptr() as usize;
+                let padded_in = &g.padded;
+                let transform_region = |li: usize| {
+                    let region = r0 + li;
+                    let b = region / (g.tiles_h * g.tiles_w);
+                    let rem = region % (g.tiles_h * g.tiles_w);
+                    let (ty, tx) = (rem / g.tiles_w, rem % g.tiles_w);
+                    let (y0, x0) = (ty * mh, tx * mw);
+                    let mut d = [F32x4::zero(); MAX_T * MAX_T];
+                    let mut out = [F32x4::zero(); MAX_T * MAX_T];
+                    let mut tmp = [F32x4::zero(); MAX_T * MAX_T];
+                    for cg in (0..c).step_by(4) {
+                        let lanes = (c - cg).min(4);
+                        for i in 0..th {
+                            for j in 0..tw {
+                                let px = padded_in.pixel(b, y0 + i, x0 + j);
+                                d[i * tw + j] = if lanes == 4 {
+                                    F32x4::load(&px[cg..cg + 4])
+                                } else {
+                                    F32x4::load_partial(&px[cg..])
+                                };
+                            }
+                        }
                         match v {
                             WinogradVariant::F2x2_3x3 => fast::input_transform_4x4(&d, &mut out),
                             // F(2,5) shares F(4,3)'s interpolation points, hence
@@ -347,18 +568,19 @@ impl WinogradConvolution {
             };
             bgd.run_prepacked(pool, &a_blk[..], &self.u_packed, &mut c_blk[..]);
 
-            // Stage 3: gather + output transform.
+            // Stage 3: gather + output transform (a separate pass over the
+            // materialised C block — the cost the fused pipeline removes).
             {
                 let out_addr = output.data_mut().as_mut_ptr() as usize;
                 let c_ref: &[f32] = &c_blk[..];
                 let inverse_region = |li: usize| {
                     let region = r0 + li;
-                    let b = region / (tiles_h * tiles_w);
-                    let rem = region % (tiles_h * tiles_w);
-                    let (ty, tx) = (rem / tiles_w, rem % tiles_w);
+                    let b = region / (g.tiles_h * g.tiles_w);
+                    let rem = region % (g.tiles_h * g.tiles_w);
+                    let (ty, tx) = (rem / g.tiles_w, rem % g.tiles_w);
                     let (y0, x0) = (ty * mh, tx * mw);
-                    let valid_h = (oh - y0).min(mh);
-                    let valid_w = (ow - x0).min(mw);
+                    let valid_h = (g.oh - y0).min(mh);
+                    let valid_w = (g.ow - x0).min(mw);
                     let mut t_in = [F32x4::zero(); MAX_T * MAX_T];
                     let mut y_out = [F32x4::zero(); MAX_T * MAX_T];
                     let mut tmp = [F32x4::zero(); MAX_T * MAX_T];
@@ -373,24 +595,7 @@ impl WinogradConvolution {
                                 F32x4::load_partial(&src[..lanes])
                             };
                         }
-                        match v {
-                            WinogradVariant::F2x2_3x3 => {
-                                fast::output_transform_4x4(&t_in, &mut y_out)
-                            }
-                            WinogradVariant::F4x4_3x3 => {
-                                fast::output_transform_6x6(&t_in, &mut y_out)
-                            }
-                            WinogradVariant::F2x2_5x5 => {
-                                fast::output_transform_6x6_to_2x2(&t_in, &mut y_out)
-                            }
-                            _ => transform_tile_lanes(
-                                &self.plan.h.at,
-                                &self.plan.w.at,
-                                &t_in[..tiles],
-                                &mut y_out,
-                                &mut tmp,
-                            ),
-                        }
+                        inverse_transform_dispatch(&self.plan, &t_in, &mut y_out, &mut tmp);
                         // Fused epilogue: bias + ReLU while the tile is hot.
                         if bias.is_some() || relu {
                             let bv = match bias {
@@ -408,7 +613,8 @@ impl WinogradConvolution {
                         // Write the valid part of the mh×mw output tile.
                         for i in 0..valid_h {
                             for j in 0..valid_w {
-                                let off = (((b * oh + y0 + i) * ow) + x0 + j) * m_total + mg;
+                                let off =
+                                    (((b * g.oh + y0 + i) * g.ow) + x0 + j) * m_total + mg;
                                 // SAFETY: output tiles are disjoint across regions.
                                 let dst: &mut [f32] = unsafe {
                                     std::slice::from_raw_parts_mut(
@@ -431,16 +637,130 @@ impl WinogradConvolution {
         Ok(output)
     }
 
-    /// Size of the **unblocked** Winograd-domain working set in bytes for an
-    /// input `[n, h, w, c]` (full A + C matrices) — the number the paper's
-    /// memory budget discussion cares about, and what region blocking caps
-    /// at [`block_workspace_bytes`](Self::block_workspace_bytes).
+    /// Size of the **unblocked, staged** Winograd-domain working set in
+    /// bytes for an input `[n, h, w, c]` (full A + C matrices) — the number
+    /// the paper's memory budget discussion cares about, and what region
+    /// blocking plus fusion cap at [`block_workspace_bytes`](Self::block_workspace_bytes).
     pub fn workspace_bytes(&self, n: usize, h: usize, w: usize) -> Result<usize> {
         let (oh, ow) = self.output_hw(h, w)?;
         let (mh, mw) = self.plan.variant.out_tile();
         let regions = n * ceil_div(oh, mh) * ceil_div(ow, mw);
         let tiles = self.plan.variant.gemm_count();
         Ok((tiles * regions * (self.cin + self.cout)) * std::mem::size_of::<f32>())
+    }
+}
+
+/// Inverse-transform one region's `x²` Winograd-domain lanes into the
+/// spatial output tile, dispatching to the hand-unrolled kernels for the
+/// hottest variants.
+#[inline]
+fn inverse_transform_dispatch(
+    plan: &WinogradPlan,
+    t_in: &[F32x4],
+    y_out: &mut [F32x4],
+    tmp: &mut [F32x4],
+) {
+    let tiles = plan.h.t * plan.w.t;
+    match plan.variant {
+        WinogradVariant::F2x2_3x3 => fast::output_transform_4x4(t_in, y_out),
+        WinogradVariant::F4x4_3x3 => fast::output_transform_6x6(t_in, y_out),
+        WinogradVariant::F2x2_5x5 => fast::output_transform_6x6_to_2x2(t_in, y_out),
+        _ => transform_tile_lanes(&plan.h.at, &plan.w.at, &t_in[..tiles], y_out, tmp),
+    }
+}
+
+/// Stage 3 as a GEMM epilogue: inverse transform + fused bias/ReLU + output
+/// store, fired by [`BatchedGemm::run_packed_fused`] once per finished
+/// `[x²]×MR×NR` hot cube (the cube convention documented there) while it is
+/// still L1-hot — the Winograd-domain C matrices never exist in memory.
+struct GatherEpilogue<'a> {
+    conv: &'a WinogradConvolution,
+    /// Raw base of the output tensor (written through disjoint windows).
+    out_addr: usize,
+    /// First global region of the current block.
+    r0: usize,
+    tiles_h: usize,
+    tiles_w: usize,
+    oh: usize,
+    ow: usize,
+    m_total: usize,
+    bias: Option<&'a [f32]>,
+    relu: bool,
+}
+
+impl Epilogue for GatherEpilogue<'_> {
+    fn micro_tile(
+        &self,
+        c: &mut [f32],
+        ldc: usize,
+        row0: usize,
+        col0: usize,
+        rows: usize,
+        cols: usize,
+    ) {
+        let plan = &self.conv.plan;
+        let tiles = plan.h.t * plan.w.t;
+        let (mh, mw) = plan.variant.out_tile();
+        let mut t_in = [F32x4::zero(); MAX_T * MAX_T];
+        let mut y_out = [F32x4::zero(); MAX_T * MAX_T];
+        let mut tmp = [F32x4::zero(); MAX_T * MAX_T];
+        for r in 0..rows {
+            let region = self.r0 + row0 + r;
+            let b = region / (self.tiles_h * self.tiles_w);
+            let rem = region % (self.tiles_h * self.tiles_w);
+            let (ty, tx) = (rem / self.tiles_w, rem % self.tiles_w);
+            let (y0, x0) = (ty * mh, tx * mw);
+            let valid_h = (self.oh - y0).min(mh);
+            let valid_w = (self.ow - x0).min(mw);
+            for mg in (0..cols).step_by(4) {
+                let lanes = (cols - mg).min(4);
+                let m_abs = col0 + mg;
+                // Gather this region/channel-group across the x² tiles of
+                // the hot cube (tile t's micro-tile at c[t·MR·ldc ..]).
+                for (t, ti) in t_in[..tiles].iter_mut().enumerate() {
+                    let src = &c[t * MR * ldc + r * ldc + mg..];
+                    *ti = if lanes == 4 {
+                        F32x4::load(&src[..4])
+                    } else {
+                        F32x4::load_partial(&src[..lanes])
+                    };
+                }
+                inverse_transform_dispatch(plan, &t_in, &mut y_out, &mut tmp);
+                // Fused bias + ReLU while the tile is in registers.
+                if self.bias.is_some() || self.relu {
+                    let bv = match self.bias {
+                        Some(bb) => F32x4::load_partial(&bb[m_abs..m_abs + lanes]),
+                        None => F32x4::zero(),
+                    };
+                    for yv in y_out[..mh * mw].iter_mut() {
+                        let mut t = *yv + bv;
+                        if self.relu {
+                            t = t.max(F32x4::zero());
+                        }
+                        *yv = t;
+                    }
+                }
+                // Write the valid part of the mh×mw output tile.
+                for i in 0..valid_h {
+                    for j in 0..valid_w {
+                        let off =
+                            (((b * self.oh + y0 + i) * self.ow) + x0 + j) * self.m_total + m_abs;
+                        // SAFETY: regions are disjoint across row panels
+                        // (the fused driver's parallel axis) and channel
+                        // ranges disjoint across column panels within one
+                        // task, so every output element is written by
+                        // exactly one epilogue invocation.
+                        let dst: &mut [f32] = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                (self.out_addr as *mut f32).add(off),
+                                lanes,
+                            )
+                        };
+                        y_out[i * mw + j].store_partial(dst, lanes);
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -555,11 +875,81 @@ mod tests {
         }
     }
 
-    /// The tentpole equivalence: forcing many small region blocks (budget 1
-    /// byte ⇒ one region per block) must reproduce the unblocked result
-    /// (budget `usize::MAX` ⇒ one block) bit-for-bit-close, for every
-    /// shipped variant, on odd shapes with partial tiles, serial and
-    /// pooled.
+    /// The tentpole equivalence (satellite property test): for **every**
+    /// shipped variant, on ragged shapes where the region count is not a
+    /// multiple of `MR` and the channel counts are not multiples of 4, the
+    /// fused pipeline (transform-as-pack + gather-as-epilogue) must match
+    /// the staged three-pass pipeline for every epilogue mode
+    /// {none, bias, bias+ReLU}, serial and pooled — and both must match
+    /// direct convolution with the same bias/ReLU applied as a post pass.
+    #[test]
+    fn fused_matches_staged_all_variants_and_epilogues() {
+        let pool = ThreadPool::new(3);
+        for v in WinogradVariant::ALL {
+            let (kh, kw) = v.kernel();
+            // Odd extents ⇒ ragged tile grids; C=5, M=7 ⇒ lane remainders
+            // on both sides; regions = 2·tiles_h·tiles_w is generically not
+            // a multiple of MR = 6.
+            let (h, w) = (kh + 9, kw + 11);
+            let (c, m) = (5usize, 7usize);
+            let input = Tensor::randn(&[2, h, w, c], 31);
+            let weights = Tensor::randn(&[m, kh, kw, c], 32);
+            let bias: Vec<f32> = (0..m).map(|i| (i as f32) * 0.5 - 1.5).collect();
+            let conv = WinogradConvolution::new(v, &weights, (0, 0)).unwrap();
+            let direct = direct_conv2d(&input, &weights, (1, 1), (0, 0)).unwrap();
+            for (bias_opt, relu) in [
+                (None, false),
+                (Some(bias.as_slice()), false),
+                (Some(bias.as_slice()), true),
+            ] {
+                let mut ws_f = Workspace::new();
+                let mut ws_s = Workspace::new();
+                let fused = conv
+                    .run_fused_with(&input, None, bias_opt, relu, &mut ws_f)
+                    .unwrap();
+                let staged = conv
+                    .run_staged_with(&input, None, bias_opt, relu, &mut ws_s)
+                    .unwrap();
+                assert_eq!(fused.shape(), staged.shape(), "{v}");
+                assert!(
+                    fused.allclose(&staged, 1e-5),
+                    "{v} bias={} relu={relu}: fused != staged, rel err {}",
+                    bias_opt.is_some(),
+                    crate::util::rel_error(fused.data(), staged.data())
+                );
+                let fused_pool = conv
+                    .run_fused_with(&input, Some(&pool), bias_opt, relu, &mut ws_f)
+                    .unwrap();
+                assert!(
+                    fused_pool.allclose(&staged, 1e-5),
+                    "{v} bias={} relu={relu}: pooled fused != staged",
+                    bias_opt.is_some()
+                );
+                // Oracle: direct conv + the same epilogue as a post pass.
+                let mut want = direct.clone();
+                if bias_opt.is_some() || relu {
+                    let chans = want.shape()[3];
+                    for (i, vv) in want.data_mut().iter_mut().enumerate() {
+                        let mut t = *vv + bias_opt.map_or(0.0, |b| b[i % chans]);
+                        if relu {
+                            t = t.max(0.0);
+                        }
+                        *vv = t;
+                    }
+                }
+                assert!(
+                    fused.allclose(&want, 2e-3),
+                    "{v} bias={} relu={relu}: fused != direct oracle",
+                    bias_opt.is_some()
+                );
+            }
+        }
+    }
+
+    /// Forcing many small region blocks (budget 1 byte ⇒ one region per
+    /// block) must reproduce the unblocked result (budget `usize::MAX` ⇒
+    /// one block) for every shipped variant, on odd shapes with partial
+    /// tiles, serial and pooled.
     #[test]
     fn blocked_matches_unblocked_all_variants() {
         let pool = ThreadPool::new(3);
@@ -591,9 +981,12 @@ mod tests {
     #[test]
     fn blocked_mid_budget_matches_direct() {
         let weights = Tensor::randn(&[16, 3, 3, 8], 5);
+        // Budget for exactly 2 MR-panels of packed A (12 regions) on a
+        // 36-tile, C=8 layer, plus the fixed panel + hot-cube terms.
+        let budget = packed_b_panel_bytes(8) + 36 * MR * NR * 4 + 36 * 8 * 4 * (2 * MR);
         let conv = WinogradConvolution::new(WinogradVariant::F4x4_3x3, &weights, (1, 1))
             .unwrap()
-            .with_block_budget(36 * (8 + 16) * 4 * 3 + packed_b_panel_bytes(8));
+            .with_block_budget(budget);
         let rb = conv.regions_per_block(1, 18, 18).unwrap();
         assert!(rb >= 2, "budget should allow several regions, got {rb}");
         let regions = 5 * 5; // ceil(18/4)^2
@@ -604,8 +997,9 @@ mod tests {
         assert!(got.allclose(&want, 5e-4));
     }
 
-    /// Repeated runs over one arena must not re-grow it, and a pre-sized
-    /// arena must never grow at all.
+    /// Repeated fused runs over one arena must not re-grow it, and a
+    /// pre-sized arena must never grow at all — the fused path allocates
+    /// nothing in steady state.
     #[test]
     fn workspace_reused_across_runs() {
         let weights = Tensor::randn(&[16, 3, 3, 8], 7);
@@ -627,19 +1021,41 @@ mod tests {
         assert_eq!(presized.high_water_elems(), elems, "sizing formula is exact");
     }
 
+    /// The staged pipeline's arena accounting stays exact too (it backs the
+    /// E6 ablation baseline).
+    #[test]
+    fn staged_workspace_accounting_is_exact() {
+        let weights = Tensor::randn(&[16, 3, 3, 8], 17);
+        let conv = WinogradConvolution::new(WinogradVariant::F4x4_3x3, &weights, (1, 1)).unwrap();
+        let mut ws = Workspace::new();
+        for seed in 0..2 {
+            let input = Tensor::randn(&[1, 12, 12, 8], seed + 50);
+            let _ = conv.run_staged_with(&input, None, None, false, &mut ws).unwrap();
+        }
+        assert_eq!(ws.grow_count(), 1, "staged arena grows once, then reuses");
+        assert_eq!(
+            ws.high_water_elems(),
+            conv.staged_workspace_elems_for(1, 12, 12).unwrap(),
+            "staged sizing formula is exact"
+        );
+    }
+
     #[test]
     fn block_sizing_respects_budget() {
         let weights = Tensor::randn(&[32, 3, 3, 16], 8);
+        let tiles = WinogradVariant::F4x4_3x3.gemm_count();
+        let hot = tiles * MR * NR * 4;
         for budget in [64 * 1024, 256 * 1024, DEFAULT_L2_BUDGET] {
             let conv = WinogradConvolution::new(WinogradVariant::F4x4_3x3, &weights, (1, 1))
                 .unwrap()
                 .with_block_budget(budget);
             let per_block = conv.block_workspace_bytes(1, 56, 56).unwrap();
             let rb = conv.regions_per_block(1, 56, 56).unwrap();
-            // Either the block fits the budget, or it degenerated to the
-            // 1-region minimum (budget below one region's footprint).
+            // Either the block (plus the fixed B-panel and hot-cube terms)
+            // fits the budget, or it degenerated to the 1-region minimum
+            // (budget below one MR-panel's footprint).
             assert!(
-                per_block + packed_b_panel_bytes(16) <= budget || rb == 1,
+                per_block + packed_b_panel_bytes(16) + hot <= budget || rb == 1,
                 "budget {budget}: per-block {per_block} B, rb {rb}"
             );
             assert!(rb >= 1);
@@ -661,13 +1077,26 @@ mod tests {
     }
 
     #[test]
+    fn rejects_bad_bias_length() {
+        let weights = Tensor::randn(&[8, 3, 3, 4], 3);
+        let conv = WinogradConvolution::new(WinogradVariant::F2x2_3x3, &weights, (1, 1)).unwrap();
+        let input = Tensor::randn(&[1, 8, 8, 4], 1);
+        let bias = vec![0.0; 7]; // != 8 output channels
+        assert!(conv.run_fused(&input, None, Some(&bias), false).is_err());
+        assert!(conv
+            .run_staged_with(&input, None, Some(&bias), false, &mut Workspace::new())
+            .is_err());
+    }
+
+    #[test]
     fn workspace_accounting() {
         let weights = Tensor::randn(&[16, 3, 3, 8], 3);
         let conv = WinogradConvolution::new(WinogradVariant::F2x2_3x3, &weights, (1, 1)).unwrap();
         // 8×8 input, pad 1 ⇒ 8×8 output ⇒ 4×4 regions = 16; 16 tiles.
         let ws = conv.workspace_bytes(1, 8, 8).unwrap();
         assert_eq!(ws, 16 * 16 * (8 + 16) * 4);
-        // The blocked working set never exceeds the unblocked one.
+        // The fused blocked working set never exceeds the staged unblocked
+        // one (C is gone; A is padded to whole MR panels but Rb ≤ regions).
         assert!(conv.block_workspace_bytes(1, 8, 8).unwrap() <= ws);
     }
 }

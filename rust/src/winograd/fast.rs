@@ -214,7 +214,7 @@ mod tests {
     fn random_lanes(n: usize, seed: u64) -> Vec<F32x4> {
         let mut rng = crate::util::XorShiftRng::new(seed);
         (0..n)
-            .map(|_| F32x4([rng.normal(), rng.normal(), rng.normal(), rng.normal()]))
+            .map(|_| F32x4::from_array([rng.normal(), rng.normal(), rng.normal(), rng.normal()]))
             .collect()
     }
 
@@ -223,10 +223,10 @@ mod tests {
         for (i, (x, y)) in a.iter().zip(b).enumerate() {
             for l in 0..4 {
                 assert!(
-                    (x.0[l] - y.0[l]).abs() < tol,
+                    (x.lane(l) - y.lane(l)).abs() < tol,
                     "elem {i} lane {l}: {} vs {}",
-                    x.0[l],
-                    y.0[l]
+                    x.lane(l),
+                    y.lane(l)
                 );
             }
         }

@@ -7,8 +7,10 @@
 //!   formulation of the paper's Listing 2, generic over the variant.
 //! * [`fast`] — hard-coded add/sub transform kernels for the hottest
 //!   variants, exactly like the paper's hand-written NEON sequences.
-//! * [`convolve`] — the three-step pipeline: input transform (*scatter*) →
-//!   `x²` batched GEMMs → output transform (*gather*).
+//! * [`convolve`] — the fused two-stage pipeline: input transform written
+//!   straight into packed GEMM panels (*transform-as-pack*) → `x²` batched
+//!   GEMMs whose epilogue is the output transform (*gather-as-epilogue*);
+//!   the staged three-pass flow is kept as the ablation baseline.
 //!
 //! Variant naming follows the paper's `F(z×z, w×w, x×x)`: output tile,
 //! filter, input tile.

@@ -7,8 +7,17 @@
 //! over the transform matrices so every `F(m, r)` variant shares this code.
 //! The hottest variants additionally have hand-unrolled versions in
 //! [`super::fast`].
+//!
+//! [`transform_and_pack`] is the fused pipeline's stage 1
+//! (**transform-as-pack**): it dispatches the input transform (fast path
+//! where available) and scatters the resulting Winograd-domain values
+//! straight into the GEMM's `MR`-strided packed-A panel cells — the
+//! values' first and only materialisation, deleting the row-major A
+//! staging buffer and the GEMM's `pack_a` copy pass.
 
-use super::MatF;
+use super::{fast, MatF, WinogradPlan, WinogradVariant};
+use crate::gemm::pack::packed_a_index;
+use crate::gemm::MR;
 use crate::simd::F32x4;
 
 /// `out[p×q] = L (p×a) · tile (a×b) · Rᵀ  — with R given as (q×b)` —
@@ -53,6 +62,68 @@ pub fn transform_tile_lanes(
                 }
             }
             out[i * q + j] = acc;
+        }
+    }
+}
+
+/// Input-transform one region's `th×tw` tile of channel lanes (`d`) for
+/// `plan`'s variant and scatter the `x²` results directly into per-tile
+/// packed-A panels (transform-as-pack).
+///
+/// * `a_addr`/`a_len` — base address and length (in `f32`s) of the block's
+///   whole packed-A buffer: `x²` per-tile images of `a_stride` elements
+///   each, laid out by [`packed_a_index`] over `k` logical columns (input
+///   channels). The address form (the crate's raw-window idiom) exists
+///   because regions packing in parallel write interleaved scalar cells of
+///   shared panels — no two regions' cells overlap, but they cannot be
+///   expressed as disjoint subslices.
+/// * `row` — the region's block-local index (the logical A row). **The
+///   caller must guarantee no other thread concurrently writes this row's
+///   cells** (parallelising over regions satisfies this).
+/// * `col`, `lanes` — this 4-channel group: tile `t`'s value lands in
+///   cells `(row, col..col+lanes)` of A_t, which sit `MR` apart in packed
+///   layout ([`crate::gemm::pack::PackedAWriter`] is the safe
+///   single-threaded face of the same layout).
+/// * `out`/`tmp` — caller scratch, ≥ `th·tw` lanes each.
+///
+/// Fast-path dispatch matches the staged pipeline: `F(2×2,3×3)` and the
+/// 6×6 variants use the hand-unrolled kernels (`F(2,5)` shares `F(4,3)`'s
+/// interpolation points, hence the identical 6×6 Bᵀ — pinned by a fast.rs
+/// test); everything else goes through [`transform_tile_lanes`].
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn transform_and_pack(
+    plan: &WinogradPlan,
+    d: &[F32x4],
+    out: &mut [F32x4],
+    tmp: &mut [F32x4],
+    a_addr: usize,
+    a_len: usize,
+    a_stride: usize,
+    k: usize,
+    row: usize,
+    col: usize,
+    lanes: usize,
+) {
+    let tiles = plan.h.t * plan.w.t;
+    debug_assert_eq!(d.len(), tiles);
+    debug_assert!(a_len >= tiles * a_stride);
+    debug_assert!(col + lanes <= k && lanes <= 4);
+    match plan.variant {
+        WinogradVariant::F2x2_3x3 => fast::input_transform_4x4(d, out),
+        WinogradVariant::F4x4_3x3 | WinogradVariant::F2x2_5x5 => fast::input_transform_6x6(d, out),
+        _ => transform_tile_lanes(&plan.h.bt, &plan.w.bt, d, out, tmp),
+    }
+    let base = packed_a_index(k, row, col);
+    for (t, v) in out[..tiles].iter().enumerate() {
+        let cell = t * a_stride + base;
+        let vals = v.to_array();
+        for (l, &x) in vals[..lanes].iter().enumerate() {
+            let idx = cell + l * MR;
+            debug_assert!(idx < a_len);
+            // SAFETY: per the contract above, cell (row, col + l) of tile t
+            // is written by exactly one caller; cells are disjoint scalars.
+            unsafe { *(a_addr as *mut f32).add(idx) = x };
         }
     }
 }
@@ -138,23 +209,74 @@ mod tests {
         // One tile of 6×6 pixels × 4 channels.
         let mut lanes = vec![F32x4::zero(); 36];
         for v in lanes.iter_mut() {
-            *v = F32x4([rng.normal(), rng.normal(), rng.normal(), rng.normal()]);
+            *v = F32x4::from_array([rng.normal(), rng.normal(), rng.normal(), rng.normal()]);
         }
         let mut out = vec![F32x4::zero(); 36];
         let mut tmp = vec![F32x4::zero(); 36];
         transform_tile_lanes(&l, &r, &lanes, &mut out, &mut tmp);
 
         for lane in 0..4 {
-            let tile: Vec<f32> = lanes.iter().map(|v| v.0[lane]).collect();
+            let tile: Vec<f32> = lanes.iter().map(|v| v.lane(lane)).collect();
             let want = reference(&l, &r, &tile);
             for (i, w) in want.iter().enumerate() {
                 assert!(
-                    (out[i].0[lane] - w).abs() < 1e-3,
+                    (out[i].lane(lane) - w).abs() < 1e-3,
                     "lane {lane} elem {i}: {} vs {w}",
-                    out[i].0[lane]
+                    out[i].lane(lane)
                 );
             }
         }
+    }
+
+    /// Transform-as-pack == generic transform followed by a PackedAWriter
+    /// scatter, cell for cell (including zero-padded dead rows), on a shape
+    /// with both a ragged channel group (k % 4 ≠ 0) and a short last panel
+    /// (rows % MR ≠ 0).
+    #[test]
+    fn transform_and_pack_matches_generic_plus_writer() {
+        use crate::gemm::pack::{packed_a_elems, PackedAWriter};
+        // F(4×4,5×5) takes the generic dispatch path (no fast kernel).
+        let plan = WinogradPlan::new(WinogradVariant::F4x4_5x5);
+        let tiles = plan.h.t * plan.w.t;
+        let (rows, k) = (7usize, 6usize);
+        let a_stride = packed_a_elems(rows, k);
+        let mut fused = vec![f32::NAN; tiles * a_stride];
+        let mut manual = vec![f32::NAN; tiles * a_stride];
+        for t in 0..tiles {
+            PackedAWriter::new(&mut fused[t * a_stride..(t + 1) * a_stride], rows, k)
+                .zero_pad_rows();
+            PackedAWriter::new(&mut manual[t * a_stride..(t + 1) * a_stride], rows, k)
+                .zero_pad_rows();
+        }
+        let mut rng = XorShiftRng::new(9);
+        let fused_addr = fused.as_mut_ptr() as usize;
+        let fused_len = fused.len();
+        for row in 0..rows {
+            for cg in (0..k).step_by(4) {
+                let lanes = (k - cg).min(4);
+                let d: Vec<F32x4> = (0..tiles)
+                    .map(|_| {
+                        F32x4::from_array([rng.normal(), rng.normal(), rng.normal(), rng.normal()])
+                    })
+                    .collect();
+                let mut out = vec![F32x4::zero(); tiles];
+                let mut tmp = vec![F32x4::zero(); tiles];
+                transform_and_pack(
+                    &plan, &d, &mut out, &mut tmp, fused_addr, fused_len, a_stride, k, row, cg,
+                    lanes,
+                );
+                let mut out2 = vec![F32x4::zero(); tiles];
+                let mut tmp2 = vec![F32x4::zero(); tiles];
+                transform_tile_lanes(&plan.h.bt, &plan.w.bt, &d, &mut out2, &mut tmp2);
+                for t in 0..tiles {
+                    let mut w =
+                        PackedAWriter::new(&mut manual[t * a_stride..(t + 1) * a_stride], rows, k);
+                    w.write_lanes(row, cg, out2[t], lanes);
+                }
+            }
+        }
+        assert_eq!(fused, manual);
+        assert!(fused.iter().all(|v| !v.is_nan()));
     }
 
     #[test]

@@ -1,14 +1,16 @@
 //! A reusable `f32` workspace arena for the convolution hot path.
 //!
-//! The region-wise Winograd pipeline needs two scratch matrices per layer
-//! (the Winograd-domain A block and C block) and the im2row baseline needs
-//! one (the patch matrix). Allocating them per call is exactly the
-//! working-set churn the paper's memory-budget discussion warns about, so
-//! every executor thread instead owns one [`Workspace`] sized to the largest
-//! layer it will run: [`crate::nn::PreparedModel`] pre-sizes one at prepare
-//! time, and the [`crate::coordinator`] dispatcher owns one per worker loop.
-//! Steady-state inference then performs **zero heap allocations** inside
-//! Winograd stages 1–3 (scatter → batched GEMMs → gather).
+//! The fused region-wise Winograd pipeline needs one scratch buffer per
+//! layer (the packed-A block — Winograd-domain C is never materialised;
+//! the staged ablation pipeline still borrows an A/C pair) and the im2row
+//! baseline needs one (the patch matrix). Allocating them per call is
+//! exactly the working-set churn the paper's memory-budget discussion
+//! warns about, so every executor thread instead owns one [`Workspace`]
+//! sized to the largest layer it will run: [`crate::nn::PreparedModel`]
+//! pre-sizes one at prepare time, and the [`crate::coordinator`]
+//! dispatcher owns one per worker loop. Steady-state inference then
+//! performs **zero heap allocations** inside the fused stages
+//! (transform-as-pack → batched GEMMs + gather-as-epilogue).
 //!
 //! The arena is deliberately dumb: one flat buffer, borrowed as one or two
 //! disjoint slices per layer, fully overwritten by each user (no zeroing on
