@@ -8,11 +8,66 @@
 //! ordered by the fraction of runtime spent in Winograd-suitable layers.
 
 use winoconv::bench::{ms, Table};
-use winoconv::nn::{PreparedModel, Scheme};
+use winoconv::nn::{ActivationPlan, PreparedModel, Scheme};
 use winoconv::parallel::ThreadPool;
 use winoconv::tensor::Tensor;
 use winoconv::util::cli::Args;
+use winoconv::workspace::Workspace;
 use winoconv::zoo::ModelKind;
+
+/// `--smoke`: the CI peak-memory gate. Prints the planner's peak activation
+/// bytes (vs the naive sum-of-all-intermediates) for every zoo model, then
+/// runs SqueezeNet end-to-end over pre-sized arenas asserting grow-count
+/// and fallback-count both stay 0 — peak-memory drift or a
+/// steady-state-allocation regression fails CI the same way bench bit-rot
+/// does.
+fn smoke(pool: &ThreadPool) -> winoconv::Result<()> {
+    let mut table = Table::new(
+        "activation memory plan per zoo model (batch 1)",
+        &["Model", "planned peak KiB", "naive sum KiB", "saving"],
+    );
+    for model in ModelKind::ALL {
+        let graph = model.build(1)?;
+        let shape = model.input_shape(1);
+        let shapes = graph.infer_shapes(&shape)?;
+        let plan = ActivationPlan::for_graph(&graph.nodes, &shapes);
+        assert!(
+            plan.peak_bytes() < plan.naive_bytes(),
+            "{model}: planner found no sharing (peak {} >= naive {})",
+            plan.peak_bytes(),
+            plan.naive_bytes()
+        );
+        table.row(&[
+            model.display().to_string(),
+            format!("{}", plan.peak_bytes() / 1024),
+            format!("{}", plan.naive_bytes() / 1024),
+            format!("{:.1}x", plan.naive_bytes() as f64 / plan.peak_bytes() as f64),
+        ]);
+    }
+    table.print();
+
+    let model = ModelKind::SqueezeNet;
+    let graph = model.build(1)?;
+    let shape = model.input_shape(1);
+    let prepared =
+        PreparedModel::prepare(model.name(), &graph, &shape, Scheme::WinogradWhereSuitable)?;
+    let mut ws = Workspace::with_capacity(prepared.workspace_elems());
+    let mut acts = Workspace::with_capacity(prepared.activation_plan().peak_elems());
+    for seed in 0..2 {
+        let input = Tensor::randn(&shape, seed);
+        let _ = prepared.run_with_workspace(&input, Some(pool), &mut ws, &mut acts)?;
+    }
+    assert_eq!(ws.grow_count(), 0, "smoke: scratch arena grew after pre-sizing");
+    assert_eq!(acts.grow_count(), 0, "smoke: activation arena grew after pre-sizing");
+    assert_eq!(prepared.fallback_count(), 0, "smoke: run() fallback taken");
+    println!(
+        "smoke ok: {} planned activation peak {} KiB (naive {} KiB), grow-count 0, fallback-count 0",
+        model.display(),
+        prepared.activation_plan().peak_bytes() / 1024,
+        prepared.activation_plan().naive_bytes() / 1024,
+    );
+    Ok(())
+}
 
 struct Row {
     model: ModelKind,
@@ -23,7 +78,7 @@ struct Row {
 }
 
 fn main() -> winoconv::Result<()> {
-    let args = Args::from_env(&["quick", "bench"])?;
+    let args = Args::from_env(&["quick", "bench", "smoke"])?;
     let threads: usize = args.get_parse_or(
         "threads",
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
@@ -32,6 +87,10 @@ fn main() -> winoconv::Result<()> {
         || std::env::var("WINOCONV_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
     let reps: usize = args.get_parse_or("reps", if quick { 1 } else { 3 })?;
     let pool = ThreadPool::new(threads);
+
+    if args.flag("smoke") {
+        return smoke(&pool);
+    }
 
     let models: Vec<ModelKind> = match args.get("model") {
         Some(name) => vec![ModelKind::parse(name)
@@ -57,6 +116,15 @@ fn main() -> winoconv::Result<()> {
             .enumerate()
         {
             let prepared = PreparedModel::prepare(model.name(), &graph, &shape, scheme)?;
+            if i == 0 {
+                let plan = prepared.activation_plan();
+                eprintln!(
+                    "  activation plan: peak {} KiB vs naive {} KiB ({:.1}x saving)",
+                    plan.peak_bytes() / 1024,
+                    plan.naive_bytes() / 1024,
+                    plan.naive_bytes() as f64 / plan.peak_bytes().max(1) as f64,
+                );
+            }
             let _ = prepared.run(&input, Some(&pool))?; // warm-up
             for _ in 0..reps {
                 let t0 = std::time::Instant::now();

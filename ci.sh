@@ -22,6 +22,12 @@ run cargo test -q
 run cargo build --release --benches
 run cargo bench --bench ablation_amortization -- --smoke
 
+# Peak-memory gate: the activation planner must keep beating the naive
+# sum-of-all-intermediates on every zoo model, and a SqueezeNet run over
+# pre-sized arenas must stay at grow-count 0 / fallback-count 0 — a
+# steady-state-allocation or peak-memory regression fails CI too.
+run cargo bench --bench table1_whole_network -- --smoke
+
 if [[ "${1:-}" != "--no-lint" ]]; then
     if cargo fmt --version >/dev/null 2>&1; then
         run cargo fmt --check

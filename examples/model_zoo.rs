@@ -45,6 +45,17 @@ fn main() -> winoconv::Result<()> {
             .enumerate()
         {
             let prepared = PreparedModel::prepare(model.name(), &graph, &shape, scheme)?;
+            if si == 0 {
+                let plan = prepared.activation_plan();
+                println!(
+                    "activation plan: peak {} KiB, naive sum-of-intermediates {} KiB ({:.1}x saving); \
+                     conv scratch {} KiB",
+                    plan.peak_bytes() / 1024,
+                    plan.naive_bytes() / 1024,
+                    plan.naive_bytes() as f64 / plan.peak_bytes().max(1) as f64,
+                    prepared.workspace_elems() * 4 / 1024,
+                );
+            }
             let _ = prepared.run(&input, Some(&pool))?; // warm-up
             let t0 = std::time::Instant::now();
             let (out, timings) = prepared.run(&input, Some(&pool))?;

@@ -3,36 +3,27 @@
 //! over NHWC channels so it is at least cache-coherent, but this path is for
 //! tests, tiny problems and the bench baselines, not production.
 
-use crate::tensor::Tensor;
+use crate::tensor::{Tensor, TensorView};
 use crate::{bail_shape, Result};
 
-/// `output[n, oy, ox, m] = Σ_{a,b,c} input[n, oy·sh+a−ph, ox·sw+b−pw, c] ·
-/// weights[m, a, b, c]` with zero padding.
-pub fn direct_conv2d(
-    input: &Tensor,
+/// Validate input/weight shapes, stride and padding, and derive the output
+/// spatial extents — the single copy of the direct-conv geometry both entry
+/// points share.
+fn checked_out_hw(
+    input_shape: &[usize],
     weights: &Tensor,
     stride: (usize, usize),
     pad: (usize, usize),
-) -> Result<Tensor> {
-    if input.rank() != 4 || weights.rank() != 4 {
+) -> Result<(usize, usize)> {
+    if input_shape.len() != 4 || weights.rank() != 4 {
         bail_shape!(
             "direct_conv2d expects rank-4 input/weights, got {:?} / {:?}",
-            input.shape(),
+            input_shape,
             weights.shape()
         );
     }
-    let (n, h, w, c) = (
-        input.shape()[0],
-        input.shape()[1],
-        input.shape()[2],
-        input.shape()[3],
-    );
-    let (m, kh, kw, wc) = (
-        weights.shape()[0],
-        weights.shape()[1],
-        weights.shape()[2],
-        weights.shape()[3],
-    );
+    let (h, w, c) = (input_shape[1], input_shape[2], input_shape[3]);
+    let (kh, kw, wc) = (weights.shape()[1], weights.shape()[2], weights.shape()[3]);
     if wc != c {
         bail_shape!("channel mismatch: input {c}, weights {wc}");
     }
@@ -44,10 +35,48 @@ pub fn direct_conv2d(
     if h + 2 * ph < kh || w + 2 * pw < kw {
         bail_shape!("input {h}x{w} (pad {ph},{pw}) smaller than filter {kh}x{kw}");
     }
-    let oh = (h + 2 * ph - kh) / sh + 1;
-    let ow = (w + 2 * pw - kw) / sw + 1;
+    Ok(((h + 2 * ph - kh) / sh + 1, (w + 2 * pw - kw) / sw + 1))
+}
 
-    let mut out = Tensor::zeros(&[n, oh, ow, m]);
+/// `output[n, oy, ox, m] = Σ_{a,b,c} input[n, oy·sh+a−ph, ox·sw+b−pw, c] ·
+/// weights[m, a, b, c]` with zero padding. Allocating wrapper over
+/// [`direct_conv2d_into`].
+pub fn direct_conv2d(
+    input: &Tensor,
+    weights: &Tensor,
+    stride: (usize, usize),
+    pad: (usize, usize),
+) -> Result<Tensor> {
+    let (oh, ow) = checked_out_hw(input.shape(), weights, stride, pad)?;
+    let mut out = Tensor::zeros(&[input.shape()[0], oh, ow, weights.shape()[0]]);
+    direct_conv2d_into(&input.view(), weights, stride, pad, out.data_mut())?;
+    Ok(out)
+}
+
+/// [`direct_conv2d`] writing into a caller-provided `N·OH·OW·M` slice
+/// (fully overwritten — dirty arena memory is fine). The write-into oracle
+/// matching the conv stack's `run_*_into` entry points.
+pub fn direct_conv2d_into(
+    input: &TensorView,
+    weights: &Tensor,
+    stride: (usize, usize),
+    pad: (usize, usize),
+    out: &mut [f32],
+) -> Result<()> {
+    let (oh, ow) = checked_out_hw(input.shape(), weights, stride, pad)?;
+    let (n, h, w, c) = (
+        input.shape()[0],
+        input.shape()[1],
+        input.shape()[2],
+        input.shape()[3],
+    );
+    let (m, kh, kw) = (weights.shape()[0], weights.shape()[1], weights.shape()[2]);
+    let (sh, sw) = stride;
+    let (ph, pw) = pad;
+    if out.len() != n * oh * ow * m {
+        bail_shape!("output slice has {} elems, conv writes {}", out.len(), n * oh * ow * m);
+    }
+
     for b in 0..n {
         for oy in 0..oh {
             for ox in 0..ow {
@@ -69,12 +98,12 @@ pub fn direct_conv2d(
                             }
                         }
                     }
-                    *out.at4_mut(b, oy, ox, mi) = acc;
+                    out[((b * oh + oy) * ow + ox) * m + mi] = acc;
                 }
             }
         }
     }
-    Ok(out)
+    Ok(())
 }
 
 /// FLOP count of a direct convolution (the roofline denominator used in the
@@ -157,5 +186,18 @@ mod tests {
     #[test]
     fn flops_formula() {
         assert_eq!(conv_flops(1, 2, 2, 3, 3, 4, 5), 2 * 2 * 2 * 9 * 4 * 5);
+    }
+
+    /// The write-into oracle matches the allocating wrapper bit-for-bit on
+    /// a dirty destination, and rejects a wrong-size slice.
+    #[test]
+    fn into_variant_matches_allocating() {
+        let input = Tensor::randn(&[2, 6, 7, 3], 4);
+        let w = Tensor::randn(&[5, 3, 3, 3], 5);
+        let want = direct_conv2d(&input, &w, (2, 1), (1, 0)).unwrap();
+        let mut out = vec![f32::NAN; want.len()];
+        direct_conv2d_into(&input.view(), &w, (2, 1), (1, 0), &mut out).unwrap();
+        assert_eq!(out, want.data());
+        assert!(direct_conv2d_into(&input.view(), &w, (2, 1), (1, 0), &mut out[1..]).is_err());
     }
 }

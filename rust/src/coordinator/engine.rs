@@ -86,9 +86,16 @@ impl InferenceEngine {
                 .spawn(move || {
                     let pool = ThreadPool::new(cfg.threads);
                     // The dispatcher (this engine's worker loop) owns one
-                    // arena sized to the model's largest layer: steady-state
-                    // serving performs zero scratch allocations per request.
+                    // arena pair pre-sized at prepare time: conv scratch to
+                    // the model's largest layer, activations to the
+                    // planner's peak — steady-state serving performs zero
+                    // heap allocation per request inside inference (the
+                    // only per-request allocation left is the response
+                    // tensor handed across the channel).
                     let mut ws = Workspace::with_capacity(model.workspace_elems());
+                    let mut acts =
+                        Workspace::with_capacity(model.activation_plan().peak_elems());
+                    let out_shape: Vec<usize> = model.output_shape().to_vec();
                     loop {
                         match queue.pop_batch(cfg.max_batch, cfg.poll) {
                             None => break, // closed and drained
@@ -97,10 +104,16 @@ impl InferenceEngine {
                                 for req in batch {
                                     let queued = req.submitted.elapsed();
                                     let t0 = Instant::now();
-                                    let result =
-                                        model.run_with_workspace(&req.input, Some(&pool), &mut ws);
+                                    let mut output = Tensor::zeros(&out_shape);
+                                    let result = model.run_planned_into(
+                                        &req.input,
+                                        Some(&pool),
+                                        &mut ws,
+                                        &mut acts,
+                                        output.data_mut(),
+                                    );
                                     let compute = t0.elapsed();
-                                    let resp = result.map(|(output, _)| Response {
+                                    let resp = result.map(|()| Response {
                                         id: req.id,
                                         output,
                                         queue_ns: queued.as_nanos() as u64,
@@ -117,6 +130,15 @@ impl InferenceEngine {
                                     slots.insert(req.id, resp);
                                     mailbox.ready.notify_all();
                                 }
+                                // Surface arena health once per batch: a
+                                // regression that starts allocating in
+                                // steady state shows up in serving stats,
+                                // not just in tests — without a second
+                                // metrics lock on every request.
+                                metrics.record_arena_health(
+                                    model.fallback_count() as u64,
+                                    (ws.grow_count() + acts.grow_count()) as u64,
+                                );
                             }
                         }
                     }
@@ -267,6 +289,26 @@ mod tests {
         let engine = InferenceEngine::start(tiny_model(), EngineConfig::default());
         let r = engine.infer(Tensor::zeros(&[1, 8, 8, 4]));
         assert!(r.is_err());
+        engine.shutdown();
+    }
+
+    /// The engine's per-worker-arena path never takes `PreparedModel::run`'s
+    /// allocating mutex fallback and never grows its pre-sized arenas —
+    /// steady-state serving performs zero heap allocation inside inference,
+    /// and the serving metrics prove it.
+    #[test]
+    fn engine_arena_health_stays_clean() {
+        let engine = InferenceEngine::start(tiny_model(), EngineConfig {
+            threads: 2,
+            ..EngineConfig::default()
+        });
+        for i in 0..8 {
+            engine.infer(Tensor::randn(&[1, 16, 16, 4], i + 40)).unwrap();
+        }
+        let m = engine.metrics();
+        assert_eq!(m.completed, 8);
+        assert_eq!(m.arena_fallbacks, 0, "engine must never hit the run() fallback");
+        assert_eq!(m.arena_grows, 0, "pre-sized worker arenas must never grow");
         engine.shutdown();
     }
 

@@ -17,6 +17,8 @@ struct Inner {
     queue_ns: Vec<u64>,
     compute_ns: Vec<u64>,
     e2e_ns: Vec<u64>,
+    arena_fallbacks: u64,
+    arena_grows: u64,
 }
 
 /// Point-in-time view of the metrics.
@@ -36,6 +38,14 @@ pub struct MetricsSnapshot {
     pub compute_ms: (f64, f64, f64),
     /// Mean queue wait in ms.
     pub mean_queue_ms: f64,
+    /// Arena health: `PreparedModel::run` mutex-contention fallbacks
+    /// observed (each one allocated throwaway arenas). The engine's
+    /// per-worker-arena path must keep this at 0.
+    pub arena_fallbacks: u64,
+    /// Arena health: grow events across the worker's scratch + activation
+    /// arenas. Non-zero after warm-up means a steady-state-allocation
+    /// regression.
+    pub arena_grows: u64,
 }
 
 impl Default for ServerMetrics {
@@ -54,6 +64,8 @@ impl ServerMetrics {
                 queue_ns: Vec::new(),
                 compute_ns: Vec::new(),
                 e2e_ns: Vec::new(),
+                arena_fallbacks: 0,
+                arena_grows: 0,
             }),
             started: Instant::now(),
         }
@@ -71,6 +83,15 @@ impl ServerMetrics {
     /// Record a backpressure rejection.
     pub fn record_rejected(&self) {
         self.inner.lock().unwrap().rejected += 1;
+    }
+
+    /// Update the arena-health gauges (current fallback and grow counts —
+    /// the dispatcher reports its model/arena state after each batch, so
+    /// a steady-state-allocation regression shows up in serving stats).
+    pub fn record_arena_health(&self, fallbacks: u64, grows: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.arena_fallbacks = fallbacks;
+        m.arena_grows = grows;
     }
 
     /// Take a snapshot.
@@ -99,6 +120,8 @@ impl ServerMetrics {
             e2e_ms: pct(&m.e2e_ns),
             compute_ms: pct(&m.compute_ns),
             mean_queue_ms,
+            arena_fallbacks: m.arena_fallbacks,
+            arena_grows: m.arena_grows,
         }
     }
 }
@@ -109,7 +132,8 @@ impl MetricsSnapshot {
         format!(
             "requests: {} completed, {} rejected | throughput: {:.1} fps | \
              e2e ms p50/p90/p99: {:.2}/{:.2}/{:.2} | \
-             compute ms p50/p90/p99: {:.2}/{:.2}/{:.2} | mean queue {:.2} ms",
+             compute ms p50/p90/p99: {:.2}/{:.2}/{:.2} | mean queue {:.2} ms | \
+             arena fallbacks/grows: {}/{}",
             self.completed,
             self.rejected,
             self.throughput_fps,
@@ -120,6 +144,8 @@ impl MetricsSnapshot {
             self.compute_ms.1,
             self.compute_ms.2,
             self.mean_queue_ms,
+            self.arena_fallbacks,
+            self.arena_grows,
         )
     }
 }
@@ -149,6 +175,18 @@ mod tests {
         let s = ServerMetrics::new().snapshot();
         assert_eq!(s.completed, 0);
         assert_eq!(s.e2e_ms, (0.0, 0.0, 0.0));
+        assert_eq!((s.arena_fallbacks, s.arena_grows), (0, 0));
         assert!(s.report().contains("0 completed"));
+    }
+
+    #[test]
+    fn arena_health_gauges_track_latest() {
+        let m = ServerMetrics::new();
+        m.record_arena_health(0, 0);
+        m.record_arena_health(2, 3);
+        let s = m.snapshot();
+        assert_eq!(s.arena_fallbacks, 2);
+        assert_eq!(s.arena_grows, 3);
+        assert!(s.report().contains("arena fallbacks/grows: 2/3"));
     }
 }

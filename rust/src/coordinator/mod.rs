@@ -9,9 +9,12 @@
 //! means queueing batch-1 executions back-to-back — exactly the paper's
 //! batch-size-1 setting — while keeping the worker pipeline full), and a
 //! metrics registry tracks latency percentiles and throughput. Each worker
-//! loop owns one [`crate::workspace::Workspace`] arena pre-sized to the
-//! model's largest layer, so steady-state serving allocates no per-request
-//! scratch.
+//! loop owns a pre-sized [`crate::workspace::Workspace`] arena **pair** —
+//! conv scratch sized to the model's largest layer, activations sized to
+//! the prepare-time plan's peak (`PreparedModel::activation_plan()`) — and
+//! executes via the planned write-into path, so steady-state serving
+//! performs zero heap allocation inside inference. Arena health (run()
+//! fallbacks, grow events) is exported with every metrics snapshot.
 
 pub mod metrics;
 pub mod queue;

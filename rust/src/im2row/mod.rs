@@ -8,14 +8,19 @@
 //! The GEMM runs on the same engine as the Winograd scheme's batched GEMMs —
 //! benchmark deltas therefore isolate the algorithmic difference, exactly as
 //! in the paper's evaluation. Per-channel bias and ReLU ride as a
-//! [`BiasRelu`] GEMM epilogue ([`Im2RowConvolution::run_fused_with`]):
+//! [`BiasRelu`] GEMM epilogue ([`Im2RowConvolution::run_fused_into`]):
 //! each micro-tile of the output is biased/activated while cache-hot, so
 //! conv outputs are written exactly once — the same single-pass guarantee
-//! the fused Winograd pipeline makes.
+//! the fused Winograd pipeline makes. The write-into entry point draws the
+//! padded-input staging buffer and the patch matrix from the caller's
+//! arena and writes the conv output to a caller-provided slice, so a warm
+//! steady-state inference allocates nothing; the allocating
+//! [`Im2RowConvolution::run_fused_with`] is a thin wrapper kept as the
+//! test oracle.
 
 use crate::gemm::{sgemm_prepacked_fused, BiasRelu, PackedB};
 use crate::parallel::ThreadPool;
-use crate::tensor::Tensor;
+use crate::tensor::{Tensor, TensorView};
 use crate::workspace::Workspace;
 use crate::{bail_shape, Result};
 
@@ -84,39 +89,44 @@ impl Im2RowConvolution {
         Ok(((h + 2 * ph - kh) / sh + 1, (w + 2 * pw - kw) / sw + 1))
     }
 
-    /// Workspace elements ([`f32`]s) one inference over an `[n, h, w, C]`
-    /// input borrows from the arena — the full patch matrix.
-    pub fn workspace_elems_for(&self, n: usize, h: usize, w: usize) -> Result<usize> {
+    /// Patch-matrix elements for an `[n, h, w, C]` input: `N·OH·OW·KH·KW·C`.
+    fn patch_elems_for(&self, n: usize, h: usize, w: usize) -> Result<usize> {
         let (oh, ow) = self.output_hw(h, w)?;
         Ok(n * oh * ow * self.kernel.0 * self.kernel.1 * self.cin)
     }
 
-    /// Fill a caller-provided patch matrix `[N·OH·OW, KH·KW·C]`.
-    fn im2row_into(
+    /// Elements of workspace-owned padded-input staging one inference over
+    /// an `[n, h, w, C]` input borrows — 0 for unpadded layers.
+    pub fn staging_elems_for(&self, n: usize, h: usize, w: usize) -> usize {
+        let (ph, pw) = self.pad;
+        if ph == 0 && pw == 0 {
+            0
+        } else {
+            n * (h + 2 * ph) * (w + 2 * pw) * self.cin
+        }
+    }
+
+    /// Workspace elements ([`f32`]s) one inference over an `[n, h, w, C]`
+    /// input borrows from the arena — the full patch matrix plus, for
+    /// padded layers, the padded-input staging buffer.
+    pub fn workspace_elems_for(&self, n: usize, h: usize, w: usize) -> Result<usize> {
+        Ok(self.patch_elems_for(n, h, w)? + self.staging_elems_for(n, h, w))
+    }
+
+    /// Fill a caller-provided patch matrix `[N·OH·OW, KH·KW·C]` from the
+    /// **already padded** source view.
+    fn fill_patches(
         &self,
-        input: &Tensor,
+        src: &TensorView,
+        n: usize,
+        oh: usize,
+        ow: usize,
         pool: Option<&ThreadPool>,
         patches: &mut [f32],
-    ) -> Result<()> {
-        let (n, h, w, c) = (
-            input.shape()[0],
-            input.shape()[1],
-            input.shape()[2],
-            input.shape()[3],
-        );
-        if c != self.cin {
-            bail_shape!("input has {c} channels, weights expect {}", self.cin);
-        }
-        let (oh, ow) = self.output_hw(h, w)?;
+    ) {
+        let c = self.cin;
         let (kh, kw) = self.kernel;
-        let (ph, pw) = self.pad;
         let (sh, sw) = self.stride;
-        let padded = if ph == 0 && pw == 0 {
-            None
-        } else {
-            Some(input.pad_spatial(ph, ph, pw, pw))
-        };
-        let src = padded.as_ref().unwrap_or(input);
         let k_total = kh * kw * c;
         let rows = n * oh * ow;
         debug_assert_eq!(patches.len(), rows * k_total);
@@ -142,14 +152,28 @@ impl Im2RowConvolution {
             Some(pool) => pool.parallel_for(rows, fill_row),
             None => (0..rows).for_each(fill_row),
         }
-        Ok(())
     }
 
     /// Build the patch matrix `[N·OH·OW, KH·KW·C]` as a fresh vector.
     pub fn im2row(&self, input: &Tensor, pool: Option<&ThreadPool>) -> Result<Vec<f32>> {
-        let (n, h, w) = (input.shape()[0], input.shape()[1], input.shape()[2]);
-        let mut patches = vec![0.0f32; self.workspace_elems_for(n, h, w)?];
-        self.im2row_into(input, pool, &mut patches)?;
+        let (n, h, w, c) = (
+            input.shape()[0],
+            input.shape()[1],
+            input.shape()[2],
+            input.shape()[3],
+        );
+        if c != self.cin {
+            bail_shape!("input has {c} channels, weights expect {}", self.cin);
+        }
+        let (oh, ow) = self.output_hw(h, w)?;
+        let (ph, pw) = self.pad;
+        let mut patches = vec![0.0f32; self.patch_elems_for(n, h, w)?];
+        if ph == 0 && pw == 0 {
+            self.fill_patches(&input.view(), n, oh, ow, pool, &mut patches);
+        } else {
+            let padded = input.pad_spatial(ph, ph, pw, pw);
+            self.fill_patches(&padded.view(), n, oh, ow, pool, &mut patches);
+        }
         Ok(patches)
     }
 
@@ -177,9 +201,9 @@ impl Im2RowConvolution {
 
     /// [`run_with_workspace`](Self::run_with_workspace) with per-output-
     /// channel bias and optional ReLU fused into the GEMM's [`BiasRelu`]
-    /// epilogue: every micro-tile of the output matrix is biased/activated
-    /// right after its inner product completes, while still cache-hot —
-    /// there is no separate whole-tensor bias/ReLU pass.
+    /// epilogue. Thin allocating wrapper over
+    /// [`run_fused_into`](Self::run_fused_into) — kept as the oracle the
+    /// write-into path is property-tested against.
     pub fn run_fused_with(
         &self,
         input: &Tensor,
@@ -188,6 +212,33 @@ impl Im2RowConvolution {
         relu: bool,
         ws: &mut Workspace,
     ) -> Result<Tensor> {
+        if input.rank() != 4 {
+            bail_shape!("input must be [N, H, W, C], got {:?}", input.shape());
+        }
+        let (n, h, w) = (input.shape()[0], input.shape()[1], input.shape()[2]);
+        let (oh, ow) = self.output_hw(h, w)?;
+        let mut out = Tensor::zeros(&[n, oh, ow, self.cout]);
+        self.run_fused_into(&input.view(), pool, bias, relu, ws, out.data_mut())?;
+        Ok(out)
+    }
+
+    /// The write-into pipeline: the padded input is staged into
+    /// workspace-owned memory (no copy for unpadded layers), the patch
+    /// matrix is drawn from the same arena, and the single fused GEMM
+    /// (bias/ReLU in its [`BiasRelu`] epilogue, every micro-tile
+    /// biased/activated while cache-hot) lands the conv output directly in
+    /// the caller-provided `out` slice (`N·OH·OW·M` elements, fully
+    /// overwritten — dirty arena memory is fine). With a warm arena this
+    /// path performs **zero heap allocation**.
+    pub fn run_fused_into(
+        &self,
+        input: &TensorView,
+        pool: Option<&ThreadPool>,
+        bias: Option<&[f32]>,
+        relu: bool,
+        ws: &mut Workspace,
+        out: &mut [f32],
+    ) -> Result<()> {
         if input.rank() != 4 {
             bail_shape!("input must be [N, H, W, C], got {:?}", input.shape());
         }
@@ -206,23 +257,38 @@ impl Im2RowConvolution {
             }
         }
         let (oh, ow) = self.output_hw(h, w)?;
+        if out.len() != n * oh * ow * self.cout {
+            bail_shape!(
+                "output slice has {} elems, layer writes {}",
+                out.len(),
+                n * oh * ow * self.cout
+            );
+        }
         let rows = n * oh * ow;
         let k_total = self.kernel.0 * self.kernel.1 * self.cin;
-        let patches = ws.take(self.workspace_elems_for(n, h, w)?);
-        self.im2row_into(input, pool, patches)?;
-        let mut out = Tensor::zeros(&[n, oh, ow, self.cout]);
+        let (ph, pw) = self.pad;
+        let (staging, patches) =
+            ws.split2(self.staging_elems_for(n, h, w), self.patch_elems_for(n, h, w)?);
+        let pshape = [n, h + 2 * ph, w + 2 * pw, c];
+        if staging.is_empty() {
+            self.fill_patches(input, n, oh, ow, pool, patches);
+        } else {
+            input.pad_spatial_into(ph, ph, pw, pw, staging);
+            let padded = TensorView::new(&pshape, staging)?;
+            self.fill_patches(&padded, n, oh, ow, pool, patches);
+        }
         sgemm_prepacked_fused(
             rows,
             patches,
             k_total,
             &self.wt_packed,
-            out.data_mut(),
+            out,
             self.cout,
             false,
             pool,
             &BiasRelu { bias, relu },
         );
-        Ok(out)
+        Ok(())
     }
 }
 
@@ -332,6 +398,40 @@ mod tests {
         assert!(conv
             .run_fused_with(&input, None, Some(&bias[..5]), false, &mut ws)
             .is_err());
+    }
+
+    /// The write-into path into an offset window of a dirty buffer must be
+    /// bit-identical to the allocating wrapper, padded and strided alike.
+    #[test]
+    fn write_into_matches_allocating_bitwise() {
+        for (k, s, p) in [((3, 3), (1, 1), (1, 1)), ((3, 3), (2, 2), (0, 0)), ((1, 7), (1, 1), (0, 3))] {
+            let weights = Tensor::randn(&[6, k.0, k.1, 4], 21);
+            let conv = Im2RowConvolution::new(&weights, s, p).unwrap();
+            let input = Tensor::randn(&[2, 11, 13, 4], 22);
+            let bias: Vec<f32> = (0..6).map(|i| i as f32 * 0.2 - 0.5).collect();
+            let mut ws_a = Workspace::new();
+            let mut ws_b = Workspace::new();
+            let want = conv
+                .run_fused_with(&input, None, Some(&bias), true, &mut ws_a)
+                .unwrap();
+            let off = 5usize;
+            let mut backing = vec![f32::NAN; want.len() + off];
+            conv.run_fused_into(
+                &input.view(),
+                None,
+                Some(&bias),
+                true,
+                &mut ws_b,
+                &mut backing[off..],
+            )
+            .unwrap();
+            assert_eq!(&backing[off..], want.data(), "k={k:?} s={s:?} p={p:?}");
+            assert!(backing[..off].iter().all(|x| x.is_nan()));
+            // Wrong-size output slices are rejected.
+            assert!(conv
+                .run_fused_into(&input.view(), None, None, false, &mut ws_b, &mut backing[..3])
+                .is_err());
+        }
     }
 
     #[test]

@@ -15,9 +15,11 @@
 //!   fusion hooks both conv schemes build on: packed-A written directly by
 //!   producers (transform-as-pack) and per-micro-tile [`gemm::Epilogue`]s
 //!   (bias/ReLU, inverse-transform gather) fired while C is cache-hot.
-//! * [`workspace`] — the reusable per-thread scratch arena: every executor
-//!   owns one [`workspace::Workspace`] sized to its largest layer, so
-//!   steady-state inference allocates nothing inside the Winograd stages.
+//! * [`workspace`] — the reusable per-thread arena type backing both of the
+//!   engine's memory pools: conv scratch (packed-A / patch matrix /
+//!   padded-input staging, sized to the largest layer) and the planned
+//!   activation arena (sized to [`nn::ActivationPlan::peak_elems`]), so a
+//!   warm steady-state inference performs zero heap allocation end to end.
 //! * [`winograd`] — the paper's contribution: Cook-Toom transform generation,
 //!   hard-coded fast transforms for the five variants, and the **region-
 //!   blocked, fused** region-wise multi-channel pipeline — transform-as-pack
@@ -26,9 +28,10 @@
 //! * [`im2row`] — the classical im2row/im2col + GEMM comparator.
 //! * [`conv`] — the public convolution API, direct-convolution oracle and the
 //!   per-layer algorithm selector.
-//! * [`nn`] / [`zoo`] — a small graph executor and definitions of the five
-//!   CNNs the paper evaluates (VGG-16/19, GoogleNet, Inception-v3,
-//!   SqueezeNet).
+//! * [`nn`] / [`zoo`] — a small graph executor (with a prepare-time
+//!   activation memory planner and a planned write-into walk) and
+//!   definitions of the five CNNs the paper evaluates (VGG-16/19,
+//!   GoogleNet, Inception-v3, SqueezeNet).
 //! * [`coordinator`] — the L3 serving runtime: request queue, batcher,
 //!   worker pool and metrics.
 //! * [`runtime`] — PJRT loader that executes the JAX/Pallas-lowered HLO

@@ -1,23 +1,29 @@
-//! A small inference graph (DAG) with shape inference and a prepared
-//! executor.
+//! A small inference graph (DAG) with shape inference and a **planned**
+//! prepared executor.
 //!
 //! Models are built once (weights deterministic from a seed), then
 //! **prepared** against an execution policy: every conv layer is bound to a
 //! concrete algorithm (im2row baseline vs region-wise Winograd where
 //! suitable) with its weights pre-transformed — mirroring how the paper's
-//! two benchmark configurations are built (§3.2). Execution records
-//! per-layer wall-clock so the bench harness can split "fast layers" from
-//! the rest (Table 1 / Figure 3).
+//! two benchmark configurations are built (§3.2) — and every intermediate
+//! activation is assigned an offset in a single activation arena by the
+//! prepare-time planner ([`super::plan::ActivationPlan`]). Execution walks
+//! the plan with borrowed arena views and the conv stack's write-into
+//! entry points, so a warm steady-state inference performs **zero heap
+//! allocation**; per-layer wall-clock is still recorded so the bench
+//! harness can split "fast layers" from the rest (Table 1 / Figure 3).
 
 use super::ops;
+use super::plan::ActivationPlan;
 use crate::conv::select::is_winograd_suitable;
 use crate::conv::{Conv2d, ConvAlgorithm};
 use crate::im2row::Im2RowConvolution;
 use crate::parallel::ThreadPool;
-use crate::tensor::Tensor;
+use crate::tensor::{Tensor, TensorView};
 use crate::winograd::WinogradConvolution;
 use crate::workspace::Workspace;
 use crate::{bail_shape, bail_unsupported, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -263,6 +269,21 @@ pub struct LayerTiming {
     pub fast_layer: bool,
 }
 
+/// Static per-node facts resolved at prepare time (so per-inference timing
+/// records need no re-derivation).
+#[derive(Clone, Copy, Default)]
+struct LayerMeta {
+    winograd: bool,
+    fast_layer: bool,
+}
+
+/// The two arenas one executor thread owns: conv scratch (packed-A blocks,
+/// patch matrices, padded-input staging) and planned activations.
+struct ExecArenas {
+    scratch: Workspace,
+    acts: Workspace,
+}
+
 /// A graph prepared for a fixed input shape and scheme.
 pub struct PreparedModel {
     /// Model name.
@@ -272,11 +293,18 @@ pub struct PreparedModel {
     nodes: Vec<Node>,
     prepared: Vec<PreparedOp>,
     shapes: Vec<Vec<usize>>,
-    /// Arena elements the largest conv layer borrows per inference.
+    meta: Vec<LayerMeta>,
+    /// Prepare-time activation layout: per-node arena offsets, peak bytes.
+    plan: ActivationPlan,
+    /// Scratch arena elements the largest conv layer borrows per inference.
     ws_elems: usize,
-    /// The built-in arena [`run`](Self::run) uses, pre-sized to `ws_elems`
-    /// at prepare time so steady-state inference never grows it.
-    ws: Mutex<Workspace>,
+    /// The built-in arenas [`run`](Self::run) uses, pre-sized at prepare
+    /// time so steady-state inference never grows them.
+    arenas: Mutex<ExecArenas>,
+    /// Times [`run`](Self::run) lost the arena race and executed over
+    /// throwaway arenas (allocating) instead — see
+    /// [`fallback_count`](Self::fallback_count).
+    fallbacks: AtomicUsize,
 }
 
 impl PreparedModel {
@@ -293,9 +321,12 @@ impl PreparedModel {
         scheme: Scheme,
     ) -> Result<PreparedModel> {
         let shapes = graph.infer_shapes(input_shape)?;
+        let plan = ActivationPlan::for_graph(&graph.nodes, &shapes);
         let mut prepared = Vec::with_capacity(graph.nodes.len());
+        let mut meta = Vec::with_capacity(graph.nodes.len());
         let mut ws_elems = 0usize;
         for node in graph.nodes.iter() {
+            let mut m = LayerMeta::default();
             let p = match &node.op {
                 Op::Input => PreparedOp::Passthrough,
                 Op::Conv { desc, weights, bias, relu } => {
@@ -331,9 +362,12 @@ impl PreparedModel {
                     };
                     let need = match &conv {
                         PreparedConv::Winograd(wc) => {
+                            m.winograd = true;
+                            m.fast_layer = true;
                             wc.workspace_elems_for(in_shape[0], in_shape[1], in_shape[2])?
                         }
                         PreparedConv::Im2Row(ic) => {
+                            m.fast_layer = is_winograd_suitable(desc.kernel, desc.stride);
                             ic.workspace_elems_for(in_shape[0], in_shape[1], in_shape[2])?
                         }
                     };
@@ -347,6 +381,7 @@ impl PreparedModel {
                 other => PreparedOp::Other(other.clone()),
             };
             prepared.push(p);
+            meta.push(m);
         }
         Ok(PreparedModel {
             name: name.to_string(),
@@ -354,22 +389,48 @@ impl PreparedModel {
             nodes: graph.nodes.clone(),
             prepared,
             shapes,
+            meta,
             ws_elems,
-            ws: Mutex::new(Workspace::with_capacity(ws_elems)),
+            arenas: Mutex::new(ExecArenas {
+                scratch: Workspace::with_capacity(ws_elems),
+                acts: Workspace::with_capacity(plan.peak_elems()),
+            }),
+            plan,
+            fallbacks: AtomicUsize::new(0),
         })
     }
 
-    /// Arena elements the largest layer needs — what a per-worker
-    /// [`Workspace`] should be pre-sized to (see [`crate::coordinator`]).
+    /// Scratch arena elements the largest layer needs — what a per-worker
+    /// scratch [`Workspace`] should be pre-sized to (see
+    /// [`crate::coordinator`]). The matching activation arena is pre-sized
+    /// from [`activation_plan`](Self::activation_plan)`().peak_elems()`.
     pub fn workspace_elems(&self) -> usize {
         self.ws_elems
     }
 
-    /// Built-in arena statistics: `(bytes, grow_count)`. `grow_count` must
-    /// stay 0 across inferences — the arena is pre-sized at prepare time.
+    /// The prepare-time activation memory plan: per-node arena offsets,
+    /// planned peak bytes and the naive sum-of-all-intermediates it beats.
+    pub fn activation_plan(&self) -> &ActivationPlan {
+        &self.plan
+    }
+
+    /// How many [`run`](Self::run) calls lost the built-in-arena race and
+    /// fell back to throwaway (allocating) arenas. Must stay 0 on any
+    /// single-consumer path — the engine's per-worker-arena loop never
+    /// takes the fallback, which its serving metrics pin.
+    pub fn fallback_count(&self) -> usize {
+        self.fallbacks.load(Ordering::Relaxed)
+    }
+
+    /// Built-in arena statistics: `(bytes, grow_count)` summed over the
+    /// scratch and activation arenas. `grow_count` must stay 0 across
+    /// inferences — both arenas are pre-sized at prepare time.
     pub fn workspace_stats(&self) -> (usize, usize) {
-        let ws = self.ws.lock().unwrap();
-        (ws.bytes(), ws.grow_count())
+        let a = self.arenas.lock().unwrap();
+        (
+            a.scratch.bytes() + a.acts.bytes(),
+            a.scratch.grow_count() + a.acts.grow_count(),
+        )
     }
 
     /// Expected input shape.
@@ -383,30 +444,84 @@ impl PreparedModel {
     }
 
     /// Execute one inference, returning the final tensor and per-layer
-    /// timings. Layer scratch comes from the model's built-in pre-sized
-    /// arena when it is free; a *concurrent* `run` on the same model falls
-    /// back to a throwaway arena rather than serialising behind the mutex
-    /// (callers that want a dedicated steady-state arena per thread — like
-    /// the engine's dispatcher — use
-    /// [`run_with_workspace`](Self::run_with_workspace)).
+    /// timings. All scratch and activations come from the model's built-in
+    /// pre-sized arenas when they are free; a *concurrent* `run` on the
+    /// same model falls back to throwaway arenas rather than serialising
+    /// behind the mutex — counted by [`fallback_count`](Self::fallback_count),
+    /// since the fallback allocates. Callers that want a dedicated
+    /// steady-state arena pair per thread — like the engine's dispatcher —
+    /// use [`run_with_workspace`](Self::run_with_workspace) or
+    /// [`run_planned_into`](Self::run_planned_into).
     pub fn run(
         &self,
         input: &Tensor,
         pool: Option<&ThreadPool>,
     ) -> Result<(Tensor, Vec<LayerTiming>)> {
-        match self.ws.try_lock() {
-            Ok(mut ws) => self.run_with_workspace(input, pool, &mut ws),
-            Err(_) => self.run_with_workspace(input, pool, &mut Workspace::new()),
+        match self.arenas.try_lock() {
+            Ok(mut guard) => {
+                let ExecArenas { scratch, acts } = &mut *guard;
+                self.run_with_workspace(input, pool, scratch, acts)
+            }
+            Err(_) => {
+                self.fallbacks.fetch_add(1, Ordering::Relaxed);
+                self.run_with_workspace(input, pool, &mut Workspace::new(), &mut Workspace::new())
+            }
         }
     }
 
-    /// [`run`](Self::run) with a caller-owned workspace arena.
+    /// [`run`](Self::run) with a caller-owned arena pair: `ws` feeds conv
+    /// scratch (packed-A / patch matrix / padded-input staging), `acts`
+    /// holds the planned activations. Allocates only the returned output
+    /// tensor and the timing records; the walk itself is allocation-free.
     pub fn run_with_workspace(
         &self,
         input: &Tensor,
         pool: Option<&ThreadPool>,
         ws: &mut Workspace,
+        acts: &mut Workspace,
     ) -> Result<(Tensor, Vec<LayerTiming>)> {
+        let mut timings = Vec::with_capacity(self.nodes.len());
+        if self.nodes.len() == 1 {
+            // Degenerate input-only graph: nothing to plan or execute.
+            self.check_input(input)?;
+            return Ok((input.clone(), timings));
+        }
+        let mut out = Tensor::zeros(self.output_shape());
+        self.execute(input, pool, ws, acts, out.data_mut(), Some(&mut timings))?;
+        Ok((out, timings))
+    }
+
+    /// Fully planned inference into a caller-provided output slice: with
+    /// warm arenas this performs **zero heap allocation** — no intermediate
+    /// tensors (activation plan), no conv scratch (workspace arena), no
+    /// timing records, no output allocation. The engine's per-worker loop
+    /// runs on this.
+    pub fn run_planned_into(
+        &self,
+        input: &Tensor,
+        pool: Option<&ThreadPool>,
+        ws: &mut Workspace,
+        acts: &mut Workspace,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let expect: usize = self.output_shape().iter().product();
+        if out.len() != expect {
+            bail_shape!(
+                "{}: output slice has {} elems, model writes {}",
+                self.name,
+                out.len(),
+                expect
+            );
+        }
+        if self.nodes.len() == 1 {
+            self.check_input(input)?;
+            out.copy_from_slice(input.data());
+            return Ok(());
+        }
+        self.execute(input, pool, ws, acts, out, None)
+    }
+
+    fn check_input(&self, input: &Tensor) -> Result<()> {
         if input.shape() != self.input_shape() {
             bail_shape!(
                 "{}: input {:?}, prepared for {:?}",
@@ -415,92 +530,141 @@ impl PreparedModel {
                 self.input_shape()
             );
         }
-        let n = self.nodes.len();
-        // Reference counts so intermediate tensors free eagerly.
-        let mut refcount = vec![0usize; n];
-        for node in &self.nodes {
-            for &i in &node.inputs {
-                refcount[i] += 1;
-            }
-        }
-        refcount[n - 1] += 1; // keep the output alive
+        Ok(())
+    }
 
-        let mut values: Vec<Option<Tensor>> = (0..n).map(|_| None).collect();
-        let mut timings = Vec::with_capacity(n);
+    /// Walk the activation plan: every node reads borrowed arena views of
+    /// its inputs (the graph input is borrowed from the caller, never
+    /// copied) and writes its output through the conv stack's `*_into`
+    /// entry points directly into its planned arena window. The final
+    /// node's window is copied into `out` while the arena borrow is still
+    /// live — [`Workspace::take`] makes no content-preservation promise
+    /// across calls, so the readback must not re-borrow.
+    fn execute(
+        &self,
+        input: &Tensor,
+        pool: Option<&ThreadPool>,
+        ws: &mut Workspace,
+        acts: &mut Workspace,
+        out: &mut [f32],
+        mut per_layer: Option<&mut Vec<LayerTiming>>,
+    ) -> Result<()> {
+        self.check_input(input)?;
+        let arena = acts.take(self.plan.peak_elems());
+        let base = arena.as_mut_ptr();
+
         for (idx, node) in self.nodes.iter().enumerate() {
-            let t0 = Instant::now();
-            let mut winograd = false;
-            let mut fast_layer = false;
-            let out = match &self.prepared[idx] {
-                PreparedOp::Passthrough => input.clone(),
+            // Clock reads only when the caller asked for timings — the
+            // planned serving path pays no per-node clock_gettime.
+            let t0 = per_layer.is_some().then(Instant::now);
+            // Borrowed view of a producer's planned arena window (or of the
+            // caller's input tensor for the graph input).
+            //
+            // SAFETY: the plan asserts at prepare time that every pair of
+            // simultaneously-live slots is address-disjoint and in-bounds,
+            // so the shared input views and the node's mutable output
+            // window below never alias.
+            let view = |i: usize| {
+                if matches!(self.nodes[i].op, Op::Input) {
+                    input.view()
+                } else {
+                    let s = self.plan.slot(i);
+                    let data: &[f32] = unsafe {
+                        std::slice::from_raw_parts(base.add(s.offset) as *const f32, s.elems)
+                    };
+                    TensorView::new(&self.shapes[i], data)
+                        .expect("plan slot sized from the same shape inference")
+                }
+            };
+            let slot = self.plan.slot(idx);
+            // SAFETY: see `view` — the output window is disjoint from every
+            // live input window, and nodes execute strictly serially.
+            let out: &mut [f32] =
+                unsafe { std::slice::from_raw_parts_mut(base.add(slot.offset), slot.elems) };
+
+            match &self.prepared[idx] {
+                // The graph input is borrowed in place — a zero-element
+                // slot, no `Tensor::clone` and no staging copy.
+                PreparedOp::Passthrough => {}
                 PreparedOp::Conv { conv, bias, relu } => {
-                    let x = values[node.inputs[0]].as_ref().unwrap();
+                    let x = view(node.inputs[0]);
                     match conv {
                         PreparedConv::Winograd(wc) => {
-                            winograd = true;
-                            fast_layer = true;
                             // Bias + ReLU fused into the gather epilogue;
-                            // packed-A blocks drawn from the shared arena.
-                            wc.run_fused_with(x, pool, Some(bias), *relu, ws)?
+                            // staging and packed-A drawn from the arena.
+                            wc.run_fused_into(&x, pool, Some(bias), *relu, ws, out)?
                         }
                         PreparedConv::Im2Row(ic) => {
-                            if let Op::Conv { desc, .. } = &node.op {
-                                fast_layer = is_winograd_suitable(desc.kernel, desc.stride);
-                            }
                             // Bias + ReLU fused into the GEMM epilogue —
                             // conv outputs are written exactly once on
                             // both scheme paths.
-                            ic.run_fused_with(x, pool, Some(bias), *relu, ws)?
+                            ic.run_fused_into(&x, pool, Some(bias), *relu, ws, out)?
                         }
                     }
                 }
                 PreparedOp::Other(op) => {
-                    let x = values[node.inputs[0]].as_ref().unwrap();
                     match op {
                         Op::MaxPool { kernel, stride, pad, ceil } => {
-                            ops::max_pool2d(x, *kernel, *stride, *pad, *ceil)?
+                            ops::max_pool2d_into(&view(node.inputs[0]), *kernel, *stride, *pad, *ceil, out)?
                         }
                         Op::AvgPool { kernel, stride, pad, ceil } => {
-                            ops::avg_pool2d(x, *kernel, *stride, *pad, *ceil)?
+                            ops::avg_pool2d_into(&view(node.inputs[0]), *kernel, *stride, *pad, *ceil, out)?
                         }
-                        Op::GlobalAvgPool => ops::global_avg_pool(x)?,
+                        Op::GlobalAvgPool => ops::global_avg_pool_into(&view(node.inputs[0]), out)?,
                         Op::Concat => {
-                            let parts: Vec<&Tensor> = node
-                                .inputs
-                                .iter()
-                                .map(|&i| values[i].as_ref().unwrap())
-                                .collect();
-                            ops::concat_channels(&parts)?
+                            let c_total = self.shapes[idx][3];
+                            let mut c_off = 0usize;
+                            for &i in &node.inputs {
+                                ops::concat_channels_into_part(&view(i), c_off, c_total, out)?;
+                                c_off += self.shapes[i][3];
+                            }
                         }
                         Op::Fc { weights, bias, relu } => {
-                            let flat = x.reshape(&[x.shape()[0], x.len() / x.shape()[0]])?;
-                            ops::fully_connected(&flat, weights, bias, *relu)?
+                            let x = view(node.inputs[0]);
+                            // The flat arena window *is* the `[N, K]` view.
+                            ops::fully_connected_into(
+                                x.data(),
+                                x.shape()[0],
+                                weights,
+                                bias,
+                                *relu,
+                                out,
+                            )?
                         }
-                        Op::Softmax => ops::softmax(x)?,
+                        Op::Softmax => {
+                            let x = view(node.inputs[0]);
+                            if x.rank() != 2 {
+                                bail_shape!("softmax expects [N, M], got {:?}", x.shape());
+                            }
+                            ops::softmax_into(x.data(), x.shape()[1], out)?
+                        }
                         Op::Lrn { size, alpha, beta, k } => {
-                            ops::lrn_across_channels(x, *size, *alpha, *beta, *k)?
+                            ops::lrn_across_channels_into(
+                                &view(node.inputs[0]),
+                                *size,
+                                *alpha,
+                                *beta,
+                                *k,
+                                out,
+                            )?
                         }
                         Op::Input | Op::Conv { .. } => unreachable!(),
                     }
                 }
             };
-            timings.push(LayerTiming {
-                name: node.name.clone(),
-                kind: node.op.kind(),
-                ns: t0.elapsed().as_nanos() as u64,
-                winograd,
-                fast_layer,
-            });
-            values[idx] = Some(out);
-            // Release inputs whose consumers are all done.
-            for &i in &node.inputs {
-                refcount[i] -= 1;
-                if refcount[i] == 0 {
-                    values[i] = None;
-                }
+            if let (Some(timings), Some(t0)) = (per_layer.as_deref_mut(), t0) {
+                timings.push(LayerTiming {
+                    name: node.name.clone(),
+                    kind: node.op.kind(),
+                    ns: t0.elapsed().as_nanos() as u64,
+                    winograd: self.meta[idx].winograd,
+                    fast_layer: self.meta[idx].fast_layer,
+                });
             }
         }
-        Ok((values[n - 1].take().unwrap(), timings))
+        let last = self.plan.slot(self.nodes.len() - 1);
+        out.copy_from_slice(&arena[last.range()]);
+        Ok(())
     }
 }
 
@@ -621,8 +785,10 @@ mod tests {
         assert!(b.allclose(&a, 1e-5));
     }
 
-    /// The arena-reuse guarantee: prepare() pre-sizes the built-in arena to
-    /// the largest layer, so repeated inferences never grow it.
+    /// The arena-reuse guarantee: prepare() pre-sizes both built-in arenas
+    /// (conv scratch + planned activations), so repeated inferences never
+    /// grow them, and the uncontended `run` path never takes the
+    /// allocating fallback.
     #[test]
     fn workspace_not_regrown_across_inferences() {
         let g = tiny_graph(11);
@@ -630,30 +796,133 @@ mod tests {
             PreparedModel::prepare("tiny", &g, &[1, 8, 8, 3], Scheme::WinogradWhereSuitable)
                 .unwrap();
         assert!(m.workspace_elems() > 0, "model has conv layers needing scratch");
+        assert!(m.activation_plan().peak_elems() > 0, "model has intermediates to plan");
         let (bytes0, grows0) = m.workspace_stats();
-        assert_eq!(bytes0, m.workspace_elems() * 4);
+        assert_eq!(
+            bytes0,
+            (m.workspace_elems() + m.activation_plan().peak_elems()) * 4
+        );
         for seed in 0..3 {
             let input = Tensor::randn(&[1, 8, 8, 3], seed);
             let _ = m.run(&input, None).unwrap();
         }
         let (bytes1, grows1) = m.workspace_stats();
         assert_eq!(grows0, 0);
-        assert_eq!(grows1, 0, "steady-state inference must not grow the arena");
+        assert_eq!(grows1, 0, "steady-state inference must not grow the arenas");
         assert_eq!(bytes0, bytes1);
+        assert_eq!(m.fallback_count(), 0, "uncontended runs never fall back");
     }
 
-    /// An explicit per-worker arena (the coordinator's pattern) sized from
-    /// `workspace_elems()` also never grows.
+    /// An explicit per-worker arena pair (the coordinator's pattern) sized
+    /// from `workspace_elems()` / `activation_plan().peak_elems()` also
+    /// never grows.
     #[test]
     fn explicit_worker_arena_never_grows() {
         let g = tiny_graph(13);
         let m = PreparedModel::prepare("tiny", &g, &[1, 8, 8, 3], Scheme::Im2RowOnly).unwrap();
         let mut ws = Workspace::with_capacity(m.workspace_elems());
+        let mut acts = Workspace::with_capacity(m.activation_plan().peak_elems());
         for seed in 0..2 {
             let input = Tensor::randn(&[1, 8, 8, 3], seed + 20);
-            let _ = m.run_with_workspace(&input, None, &mut ws).unwrap();
+            let _ = m.run_with_workspace(&input, None, &mut ws, &mut acts).unwrap();
         }
         assert_eq!(ws.grow_count(), 0);
+        assert_eq!(acts.grow_count(), 0);
         assert!(ws.high_water_elems() <= m.workspace_elems());
+        assert_eq!(acts.high_water_elems(), m.activation_plan().peak_elems());
+    }
+
+    /// Reference executor: the pre-planner walk over a `Vec<Option<Tensor>>`
+    /// of owned tensors, built from the allocating entry points. The
+    /// planned executor must match it **bit-for-bit** — the plan changes
+    /// where intermediates live, never their values.
+    fn run_reference(m: &PreparedModel, input: &Tensor) -> Tensor {
+        let n = m.nodes.len();
+        let mut ws = Workspace::new();
+        let mut values: Vec<Option<Tensor>> = (0..n).map(|_| None).collect();
+        for (idx, node) in m.nodes.iter().enumerate() {
+            let out = match &m.prepared[idx] {
+                PreparedOp::Passthrough => input.clone(),
+                PreparedOp::Conv { conv, bias, relu } => {
+                    let x = values[node.inputs[0]].as_ref().unwrap_or(input);
+                    match conv {
+                        PreparedConv::Winograd(wc) => {
+                            wc.run_fused_with(x, None, Some(bias), *relu, &mut ws).unwrap()
+                        }
+                        PreparedConv::Im2Row(ic) => {
+                            ic.run_fused_with(x, None, Some(bias), *relu, &mut ws).unwrap()
+                        }
+                    }
+                }
+                PreparedOp::Other(op) => {
+                    let x = values[node.inputs[0]].as_ref().unwrap();
+                    match op {
+                        Op::MaxPool { kernel, stride, pad, ceil } => {
+                            ops::max_pool2d(x, *kernel, *stride, *pad, *ceil).unwrap()
+                        }
+                        Op::AvgPool { kernel, stride, pad, ceil } => {
+                            ops::avg_pool2d(x, *kernel, *stride, *pad, *ceil).unwrap()
+                        }
+                        Op::GlobalAvgPool => ops::global_avg_pool(x).unwrap(),
+                        Op::Concat => {
+                            let parts: Vec<&Tensor> =
+                                node.inputs.iter().map(|&i| values[i].as_ref().unwrap()).collect();
+                            ops::concat_channels(&parts).unwrap()
+                        }
+                        Op::Fc { weights, bias, relu } => {
+                            let flat =
+                                x.reshape(&[x.shape()[0], x.len() / x.shape()[0]]).unwrap();
+                            ops::fully_connected(&flat, weights, bias, *relu).unwrap()
+                        }
+                        Op::Softmax => ops::softmax(x).unwrap(),
+                        Op::Lrn { size, alpha, beta, k } => {
+                            ops::lrn_across_channels(x, *size, *alpha, *beta, *k).unwrap()
+                        }
+                        Op::Input | Op::Conv { .. } => unreachable!(),
+                    }
+                }
+            };
+            values[idx] = Some(out);
+        }
+        values[n - 1].take().unwrap()
+    }
+
+    /// The planned executor is bit-identical to the reference allocating
+    /// walk, for both schemes, through branches/concat/pool/fc/softmax —
+    /// and `run_planned_into` lands the same bits in a dirty caller slice.
+    #[test]
+    fn planned_executor_matches_reference_bitwise() {
+        for scheme in [Scheme::Im2RowOnly, Scheme::WinogradWhereSuitable] {
+            let g = tiny_graph(17);
+            let m = PreparedModel::prepare("tiny", &g, &[1, 8, 8, 3], scheme).unwrap();
+            let input = Tensor::randn(&[1, 8, 8, 3], 23);
+            let want = run_reference(&m, &input);
+            let (got, timings) = m.run(&input, None).unwrap();
+            assert_eq!(got.shape(), want.shape());
+            assert_eq!(got.data(), want.data(), "{scheme}: planned != reference");
+            assert_eq!(timings.len(), g.nodes.len());
+            // Write-into path over deliberately dirty arenas.
+            let mut ws = Workspace::new();
+            let mut acts = Workspace::new();
+            acts.take(m.activation_plan().peak_elems()).fill(f32::NAN);
+            let mut out = vec![f32::NAN; want.len()];
+            m.run_planned_into(&input, None, &mut ws, &mut acts, &mut out).unwrap();
+            assert_eq!(out, want.data(), "{scheme}: run_planned_into != reference");
+            assert!(m
+                .run_planned_into(&input, None, &mut ws, &mut acts, &mut out[1..])
+                .is_err());
+        }
+    }
+
+    /// Planner integration: disjoint-lifetime layers of the prepared model
+    /// share arena bytes, so planned peak sits strictly below the naive
+    /// sum-of-all-intermediates.
+    #[test]
+    fn prepared_plan_shares_arena_bytes() {
+        let g = tiny_graph(19);
+        let m = PreparedModel::prepare("tiny", &g, &[1, 8, 8, 3], Scheme::Im2RowOnly).unwrap();
+        let plan = m.activation_plan();
+        assert!(plan.peak_elems() < plan.naive_elems());
+        assert_eq!(plan.peak_bytes(), plan.peak_elems() * 4);
     }
 }

@@ -1,8 +1,11 @@
-//! Neural-network graph layer: ops, DAG, shape inference and the prepared
-//! executor used by the whole-network benchmarks (Table 1, Figure 3) and
-//! the serving coordinator.
+//! Neural-network graph layer: ops, DAG, shape inference, the prepare-time
+//! activation memory planner and the planned executor used by the
+//! whole-network benchmarks (Table 1, Figure 3) and the serving
+//! coordinator.
 
 pub mod ops;
 pub mod graph;
+pub mod plan;
 
 pub use graph::{Graph, LayerTiming, Node, NodeId, Op, PreparedModel, Scheme};
+pub use plan::{ActivationPlan, ActivationSlot};

@@ -2,10 +2,45 @@
 //! LRN) over NHWC tensors. These are the supporting cast for whole-network
 //! benchmarks — correctness-critical, SIMD where it is free (channel-inner
 //! loops autovectorize), but not the paper's hot path.
+//!
+//! Every op ships in two forms: a `*_into` core that reads a borrowed
+//! [`TensorView`] and writes a caller-provided slice (fully overwritten, so
+//! dirty arena memory is fine — this is what the planned executor in
+//! [`crate::nn::PreparedModel`] calls against activation-arena windows),
+//! and the original allocating wrapper kept for tests and one-shot use.
 
 use crate::gemm::sgemm_simple;
-use crate::tensor::Tensor;
+use crate::tensor::{Tensor, TensorView};
 use crate::{bail_shape, Result};
+
+/// Validate an NHWC pooling op's geometry and derive the output spatial
+/// extents — the single copy of the guards and the output formula both
+/// entry points share.
+fn checked_pool_out_hw(
+    shape: &[usize],
+    k: (usize, usize),
+    s: (usize, usize),
+    p: (usize, usize),
+    ceil_mode: bool,
+) -> Result<(usize, usize)> {
+    if shape.len() != 4 {
+        bail_shape!("pool2d expects NHWC rank-4, got {shape:?}");
+    }
+    let (h, w) = (shape[1], shape[2]);
+    if s.0 == 0 || s.1 == 0 || k.0 == 0 || k.1 == 0 {
+        bail_shape!("pool kernel/stride must be positive");
+    }
+    if h + 2 * p.0 < k.0 || w + 2 * p.1 < k.1 {
+        bail_shape!("input {h}x{w} too small for pool {k:?} pad {p:?}");
+    }
+    let span_h = h + 2 * p.0 - k.0;
+    let span_w = w + 2 * p.1 - k.1;
+    if ceil_mode {
+        Ok((span_h.div_ceil(s.0) + 1, span_w.div_ceil(s.1) + 1))
+    } else {
+        Ok((span_h / s.0 + 1, span_w / s.1 + 1))
+    }
+}
 
 /// Max pooling with window `k`, stride `s`, symmetric padding `p`
 /// (padding contributes −∞, i.e. is ignored).
@@ -16,7 +51,7 @@ pub fn max_pool2d(
     p: (usize, usize),
     ceil_mode: bool,
 ) -> Result<Tensor> {
-    pool2d(input, k, s, p, ceil_mode, PoolKind::Max)
+    pool2d_alloc(input, k, s, p, ceil_mode, PoolKind::Max)
 }
 
 /// Average pooling (padding excluded from the divisor, as in Caffe/ACL).
@@ -27,7 +62,31 @@ pub fn avg_pool2d(
     p: (usize, usize),
     ceil_mode: bool,
 ) -> Result<Tensor> {
-    pool2d(input, k, s, p, ceil_mode, PoolKind::Avg)
+    pool2d_alloc(input, k, s, p, ceil_mode, PoolKind::Avg)
+}
+
+/// [`max_pool2d`] writing into a caller-provided `N·OH·OW·C` slice.
+pub fn max_pool2d_into(
+    input: &TensorView,
+    k: (usize, usize),
+    s: (usize, usize),
+    p: (usize, usize),
+    ceil_mode: bool,
+    out: &mut [f32],
+) -> Result<()> {
+    pool2d_into(input, k, s, p, ceil_mode, PoolKind::Max, out)
+}
+
+/// [`avg_pool2d`] writing into a caller-provided `N·OH·OW·C` slice.
+pub fn avg_pool2d_into(
+    input: &TensorView,
+    k: (usize, usize),
+    s: (usize, usize),
+    p: (usize, usize),
+    ceil_mode: bool,
+    out: &mut [f32],
+) -> Result<()> {
+    pool2d_into(input, k, s, p, ceil_mode, PoolKind::Avg, out)
 }
 
 #[derive(Clone, Copy)]
@@ -36,7 +95,7 @@ enum PoolKind {
     Avg,
 }
 
-fn pool2d(
+fn pool2d_alloc(
     input: &Tensor,
     k: (usize, usize),
     s: (usize, usize),
@@ -44,29 +103,33 @@ fn pool2d(
     ceil_mode: bool,
     kind: PoolKind,
 ) -> Result<Tensor> {
-    if input.rank() != 4 {
-        bail_shape!("pool2d expects NHWC rank-4, got {:?}", input.shape());
-    }
+    let (oh, ow) = checked_pool_out_hw(input.shape(), k, s, p, ceil_mode)?;
+    let (n, c) = (input.shape()[0], input.shape()[3]);
+    let mut out = Tensor::zeros(&[n, oh, ow, c]);
+    pool2d_into(&input.view(), k, s, p, ceil_mode, kind, out.data_mut())?;
+    Ok(out)
+}
+
+fn pool2d_into(
+    input: &TensorView,
+    k: (usize, usize),
+    s: (usize, usize),
+    p: (usize, usize),
+    ceil_mode: bool,
+    kind: PoolKind,
+    out: &mut [f32],
+) -> Result<()> {
+    let (oh, ow) = checked_pool_out_hw(input.shape(), k, s, p, ceil_mode)?;
     let (n, h, w, c) = (
         input.shape()[0],
         input.shape()[1],
         input.shape()[2],
         input.shape()[3],
     );
-    if s.0 == 0 || s.1 == 0 || k.0 == 0 || k.1 == 0 {
-        bail_shape!("pool kernel/stride must be positive");
+    if out.len() != n * oh * ow * c {
+        bail_shape!("pool output slice has {} elems, op writes {}", out.len(), n * oh * ow * c);
     }
-    if h + 2 * p.0 < k.0 || w + 2 * p.1 < k.1 {
-        bail_shape!("input {h}x{w} too small for pool {k:?} pad {p:?}");
-    }
-    let span_h = h + 2 * p.0 - k.0;
-    let span_w = w + 2 * p.1 - k.1;
-    let (oh, ow) = if ceil_mode {
-        (span_h.div_ceil(s.0) + 1, span_w.div_ceil(s.1) + 1)
-    } else {
-        (span_h / s.0 + 1, span_w / s.1 + 1)
-    };
-    let mut out = Tensor::zeros(&[n, oh, ow, c]);
+    let src = input.data();
     for b in 0..n {
         for oy in 0..oh {
             for ox in 0..ow {
@@ -77,24 +140,21 @@ fn pool2d(
                 let y_hi = ((y0 + k.0 as isize) as usize).min(h);
                 let x_hi = ((x0 + k.1 as isize) as usize).min(w);
                 let count = ((y_hi - y_lo) * (x_hi - x_lo)).max(1) as f32;
-                let dst_base = out.idx4(b, oy, ox, 0);
-                // Initialise.
-                match kind {
-                    PoolKind::Max => {
-                        for ch in 0..c {
-                            out.data_mut()[dst_base + ch] = f32::NEG_INFINITY;
-                        }
-                    }
-                    PoolKind::Avg => {}
-                }
+                let dst_base = ((b * oh + oy) * ow + ox) * c;
+                // Initialise — the destination may be dirty arena memory.
+                let init = match kind {
+                    PoolKind::Max => f32::NEG_INFINITY,
+                    PoolKind::Avg => 0.0,
+                };
+                out[dst_base..dst_base + c].fill(init);
                 for iy in y_lo..y_hi {
                     for ix in x_lo..x_hi {
-                        let src = input.idx4(b, iy, ix, 0);
+                        let s0 = input.idx4(b, iy, ix, 0);
                         match kind {
                             PoolKind::Max => {
                                 for ch in 0..c {
-                                    let v = input.data()[src + ch];
-                                    let d = &mut out.data_mut()[dst_base + ch];
+                                    let v = src[s0 + ch];
+                                    let d = &mut out[dst_base + ch];
                                     if v > *d {
                                         *d = v;
                                     }
@@ -102,7 +162,7 @@ fn pool2d(
                             }
                             PoolKind::Avg => {
                                 for ch in 0..c {
-                                    out.data_mut()[dst_base + ch] += input.data()[src + ch];
+                                    out[dst_base + ch] += src[s0 + ch];
                                 }
                             }
                         }
@@ -110,17 +170,28 @@ fn pool2d(
                 }
                 if let PoolKind::Avg = kind {
                     for ch in 0..c {
-                        out.data_mut()[dst_base + ch] /= count;
+                        out[dst_base + ch] /= count;
                     }
                 }
             }
         }
     }
-    Ok(out)
+    Ok(())
 }
 
 /// Global average pooling: `[N, H, W, C] → [N, 1, 1, C]`.
 pub fn global_avg_pool(input: &Tensor) -> Result<Tensor> {
+    if input.rank() != 4 {
+        bail_shape!("global_avg_pool expects rank-4, got {:?}", input.shape());
+    }
+    let (n, c) = (input.shape()[0], input.shape()[3]);
+    let mut out = Tensor::zeros(&[n, 1, 1, c]);
+    global_avg_pool_into(&input.view(), out.data_mut())?;
+    Ok(out)
+}
+
+/// [`global_avg_pool`] writing into a caller-provided `N·C` slice.
+pub fn global_avg_pool_into(input: &TensorView, out: &mut [f32]) -> Result<()> {
     if input.rank() != 4 {
         bail_shape!("global_avg_pool expects rank-4, got {:?}", input.shape());
     }
@@ -130,20 +201,22 @@ pub fn global_avg_pool(input: &Tensor) -> Result<Tensor> {
         input.shape()[2],
         input.shape()[3],
     );
-    let mut out = Tensor::zeros(&[n, 1, 1, c]);
+    if out.len() != n * c {
+        bail_shape!("gap output slice has {} elems, op writes {}", out.len(), n * c);
+    }
     let scale = 1.0 / (h * w) as f32;
+    out.fill(0.0);
     for b in 0..n {
         for y in 0..h {
             for x in 0..w {
                 let px = input.pixel(b, y, x);
-                let dst = out.idx4(b, 0, 0, 0);
                 for ch in 0..c {
-                    out.data_mut()[dst + ch] += px[ch] * scale;
+                    out[b * c + ch] += px[ch] * scale;
                 }
             }
         }
     }
-    Ok(out)
+    Ok(())
 }
 
 /// In-place ReLU.
@@ -177,6 +250,44 @@ pub fn bias_relu_inplace(t: &mut Tensor, bias: &[f32], relu: bool) -> Result<()>
     Ok(())
 }
 
+/// Copy one NHWC part into its channel stripe `[c_off, c_off+part_c)` of a
+/// concat output with `c_total` channels. The planned executor calls this
+/// once per concat input against the output's arena window, so no
+/// per-inference list of parts is ever built; [`concat_channels`] wraps it.
+pub fn concat_channels_into_part(
+    part: &TensorView,
+    c_off: usize,
+    c_total: usize,
+    out: &mut [f32],
+) -> Result<()> {
+    if part.rank() != 4 {
+        bail_shape!("concat expects rank-4 parts, got {:?}", part.shape());
+    }
+    let (n, h, w, pc) = (
+        part.shape()[0],
+        part.shape()[1],
+        part.shape()[2],
+        part.shape()[3],
+    );
+    if c_off + pc > c_total || out.len() != n * h * w * c_total {
+        bail_shape!(
+            "concat stripe [{c_off}, {}) of {c_total} channels vs out len {}",
+            c_off + pc,
+            out.len()
+        );
+    }
+    for b in 0..n {
+        for y in 0..h {
+            for x in 0..w {
+                let src = part.pixel(b, y, x);
+                let dst = ((b * h + y) * w + x) * c_total + c_off;
+                out[dst..dst + pc].copy_from_slice(src);
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Concatenate NHWC tensors along the channel axis.
 pub fn concat_channels(parts: &[&Tensor]) -> Result<Tensor> {
     if parts.is_empty() {
@@ -191,17 +302,10 @@ pub fn concat_channels(parts: &[&Tensor]) -> Result<Tensor> {
         c_total += p.shape()[3];
     }
     let mut out = Tensor::zeros(&[n, h, w, c_total]);
-    for b in 0..n {
-        for y in 0..h {
-            for x in 0..w {
-                let mut off = out.idx4(b, y, x, 0);
-                for p in parts {
-                    let src = p.pixel(b, y, x);
-                    out.data_mut()[off..off + src.len()].copy_from_slice(src);
-                    off += src.len();
-                }
-            }
-        }
+    let mut c_off = 0;
+    for p in parts {
+        concat_channels_into_part(&p.view(), c_off, c_total, out.data_mut())?;
+        c_off += p.shape()[3];
     }
     Ok(out)
 }
@@ -213,8 +317,29 @@ pub fn fully_connected(
     bias: &[f32],
     relu: bool,
 ) -> Result<Tensor> {
+    if weights.rank() != 2 {
+        bail_shape!("fc weights must be [K, M], got {:?}", weights.shape());
+    }
     let n = input.shape()[0];
-    let k: usize = input.shape()[1..].iter().product();
+    let mut out = Tensor::zeros(&[n, weights.shape()[1]]);
+    fully_connected_into(input.data(), n, weights, bias, relu, out.data_mut())?;
+    Ok(out)
+}
+
+/// [`fully_connected`] over an already-flattened `[N, K]` input slice,
+/// writing into a caller-provided `N·M` slice (fully overwritten).
+pub fn fully_connected_into(
+    input: &[f32],
+    n: usize,
+    weights: &Tensor,
+    bias: &[f32],
+    relu: bool,
+    out: &mut [f32],
+) -> Result<()> {
+    if n == 0 || input.len() % n != 0 {
+        bail_shape!("fc input of {} elems does not split into {n} rows", input.len());
+    }
+    let k = input.len() / n;
     if weights.rank() != 2 || weights.shape()[0] != k || weights.shape()[1] != bias.len() {
         bail_shape!(
             "fc weights {:?} incompatible with input K={k}, bias {}",
@@ -223,9 +348,11 @@ pub fn fully_connected(
         );
     }
     let m = weights.shape()[1];
-    let mut out = Tensor::zeros(&[n, m]);
-    sgemm_simple(n, m, k, input.data(), weights.data(), out.data_mut());
-    for row in out.data_mut().chunks_mut(m) {
+    if out.len() != n * m {
+        bail_shape!("fc output slice has {} elems, op writes {}", out.len(), n * m);
+    }
+    sgemm_simple(n, m, k, input, weights.data(), out);
+    for row in out.chunks_mut(m) {
         for (v, b) in row.iter_mut().zip(bias) {
             *v += *b;
             if relu && *v < 0.0 {
@@ -233,7 +360,7 @@ pub fn fully_connected(
             }
         }
     }
-    Ok(out)
+    Ok(())
 }
 
 /// Row-wise softmax over the last axis of a rank-2 tensor.
@@ -241,20 +368,32 @@ pub fn softmax(input: &Tensor) -> Result<Tensor> {
     if input.rank() != 2 {
         bail_shape!("softmax expects [N, M], got {:?}", input.shape());
     }
-    let m = input.shape()[1];
-    let mut out = input.clone();
-    for row in out.data_mut().chunks_mut(m) {
-        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut out = Tensor::zeros(input.shape());
+    softmax_into(input.data(), input.shape()[1], out.data_mut())?;
+    Ok(out)
+}
+
+/// Row-wise softmax over `cols`-wide rows of a flat input slice, writing
+/// into a caller-provided slice of the same length (fully overwritten).
+pub fn softmax_into(input: &[f32], cols: usize, out: &mut [f32]) -> Result<()> {
+    if cols == 0 || input.len() % cols != 0 {
+        bail_shape!("softmax input of {} elems does not split into {cols}-wide rows", input.len());
+    }
+    if out.len() != input.len() {
+        bail_shape!("softmax output slice has {} elems, input {}", out.len(), input.len());
+    }
+    for (src, row) in input.chunks(cols).zip(out.chunks_mut(cols)) {
+        let max = src.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let mut sum = 0.0;
-        for v in row.iter_mut() {
-            *v = (*v - max).exp();
+        for (v, &s) in row.iter_mut().zip(src) {
+            *v = (s - max).exp();
             sum += *v;
         }
         for v in row.iter_mut() {
             *v /= sum;
         }
     }
-    Ok(out)
+    Ok(())
 }
 
 /// Local response normalisation across channels (GoogleNet/AlexNet style):
@@ -266,14 +405,31 @@ pub fn lrn_across_channels(
     beta: f32,
     k: f32,
 ) -> Result<Tensor> {
+    let mut out = Tensor::zeros(input.shape());
+    lrn_across_channels_into(&input.view(), size, alpha, beta, k, out.data_mut())?;
+    Ok(out)
+}
+
+/// [`lrn_across_channels`] writing into a caller-provided slice of the
+/// input's length (fully overwritten).
+pub fn lrn_across_channels_into(
+    input: &TensorView,
+    size: usize,
+    alpha: f32,
+    beta: f32,
+    k: f32,
+    out: &mut [f32],
+) -> Result<()> {
     if input.rank() != 4 {
         bail_shape!("lrn expects rank-4, got {:?}", input.shape());
     }
+    if out.len() != input.len() {
+        bail_shape!("lrn output slice has {} elems, input {}", out.len(), input.len());
+    }
     let c = input.shape()[3];
     let half = size / 2;
-    let mut out = input.clone();
     let src = input.data();
-    for (pix_idx, px) in out.data_mut().chunks_mut(c).enumerate() {
+    for (pix_idx, px) in out.chunks_mut(c).enumerate() {
         let base = pix_idx * c;
         for ch in 0..c {
             let lo = ch.saturating_sub(half);
@@ -286,7 +442,7 @@ pub fn lrn_across_channels(
             px[ch] = src[base + ch] / (k + alpha / size as f32 * ss).powf(beta);
         }
     }
-    Ok(out)
+    Ok(())
 }
 
 #[cfg(test)]
@@ -376,5 +532,57 @@ mod tests {
         let t = Tensor::randn(&[1, 2, 2, 4], 1);
         let l = lrn_across_channels(&t, 5, 0.0, 0.75, 1.0).unwrap();
         assert!(l.allclose(&t, 1e-6));
+    }
+
+    /// Every `_into` variant fully overwrites a dirty destination and is
+    /// bit-identical to its allocating wrapper.
+    #[test]
+    fn into_variants_match_allocating_on_dirty_buffers() {
+        let t = Tensor::randn(&[2, 5, 6, 3], 9);
+        let dirty = |len: usize| vec![f32::NAN; len];
+
+        let want = max_pool2d(&t, (3, 3), (2, 2), (1, 1), true).unwrap();
+        let mut out = dirty(want.len());
+        max_pool2d_into(&t.view(), (3, 3), (2, 2), (1, 1), true, &mut out).unwrap();
+        assert_eq!(out, want.data());
+
+        let want = avg_pool2d(&t, (2, 2), (2, 2), (0, 0), false).unwrap();
+        let mut out = dirty(want.len());
+        avg_pool2d_into(&t.view(), (2, 2), (2, 2), (0, 0), false, &mut out).unwrap();
+        assert_eq!(out, want.data());
+
+        let want = global_avg_pool(&t).unwrap();
+        let mut out = dirty(want.len());
+        global_avg_pool_into(&t.view(), &mut out).unwrap();
+        assert_eq!(out, want.data());
+
+        let u = Tensor::randn(&[2, 5, 6, 2], 10);
+        let want = concat_channels(&[&t, &u]).unwrap();
+        let mut out = dirty(want.len());
+        concat_channels_into_part(&t.view(), 0, 5, &mut out).unwrap();
+        concat_channels_into_part(&u.view(), 3, 5, &mut out).unwrap();
+        assert_eq!(out, want.data());
+
+        let x = Tensor::randn(&[3, 7], 11);
+        let w = Tensor::randn(&[7, 4], 12);
+        let bias = [0.5, -0.25, 0.0, 1.0];
+        let want = fully_connected(&x, &w, &bias, true).unwrap();
+        let mut out = dirty(want.len());
+        fully_connected_into(x.data(), 3, &w, &bias, true, &mut out).unwrap();
+        assert_eq!(out, want.data());
+
+        let want = softmax(&x).unwrap();
+        let mut out = dirty(want.len());
+        softmax_into(x.data(), 7, &mut out).unwrap();
+        assert_eq!(out, want.data());
+
+        let want = lrn_across_channels(&t, 5, 1e-4, 0.75, 2.0).unwrap();
+        let mut out = dirty(want.len());
+        lrn_across_channels_into(&t.view(), 5, 1e-4, 0.75, 2.0, &mut out).unwrap();
+        assert_eq!(out, want.data());
+
+        // Size mismatches are rejected, not written out of bounds.
+        assert!(global_avg_pool_into(&t.view(), &mut dirty(1)).is_err());
+        assert!(softmax_into(x.data(), 7, &mut dirty(2)).is_err());
     }
 }

@@ -1,0 +1,316 @@
+//! Prepare-time activation memory planner.
+//!
+//! The conv stack already draws all *scratch* (packed-A blocks, patch
+//! matrices, padded-input staging) from a pre-sized [`crate::workspace`]
+//! arena — but without a plan, every inference would still heap-allocate
+//! each layer's **output** tensor. On the cache-constrained mobile CPUs the
+//! paper targets, working-set footprint decides who wins (Zlateski et al.),
+//! and peak memory is a first-class axis of its own (Galvez et al.), so
+//! intermediate activations are planned here once at
+//! [`PreparedModel::prepare`](crate::nn::PreparedModel::prepare) time:
+//!
+//! 1. **Lifetimes** — each node's output is live from the step that
+//!    produces it to the last step that consumes it (the same refcounts the
+//!    executor used to free tensors eagerly, turned into intervals).
+//! 2. **Greedy interval packing** — nodes are placed largest-first at the
+//!    lowest arena offset that does not collide with any already-placed
+//!    slot whose lifetime overlaps. Layers with disjoint lifetimes share
+//!    bytes, so the arena's [`peak_elems`](ActivationPlan::peak_elems) is
+//!    typically far below the naive sum-of-all-intermediates
+//!    ([`naive_elems`](ActivationPlan::naive_elems)).
+//!
+//! The graph input is *borrowed* by the executor (slot of zero elements),
+//! never copied into the arena. Execution then walks the plan with
+//! borrowed arena views instead of a `Vec<Option<Tensor>>` of owned
+//! tensors: steady-state inference performs **zero heap allocation**, end
+//! to end.
+
+use super::graph::{Node, Op};
+
+/// One node's placement in the activation arena.
+#[derive(Debug, Clone)]
+pub struct ActivationSlot {
+    /// Arena offset in `f32` elements.
+    pub offset: usize,
+    /// Output size in `f32` elements (0 for the borrowed graph input).
+    pub elems: usize,
+    /// Node index producing this value.
+    pub first_use: usize,
+    /// Last node index reading this value (`== first_use` when unused).
+    pub last_use: usize,
+}
+
+impl ActivationSlot {
+    /// Arena element range `[offset, offset + elems)`.
+    pub fn range(&self) -> std::ops::Range<usize> {
+        self.offset..self.offset + self.elems
+    }
+
+    /// Do two slots overlap in time (both values live at once)?
+    fn lifetime_overlaps(&self, other: &ActivationSlot) -> bool {
+        self.first_use <= other.last_use && other.first_use <= self.last_use
+    }
+
+    /// Do two slots overlap in arena address space?
+    fn range_overlaps(&self, other: &ActivationSlot) -> bool {
+        self.elems > 0
+            && other.elems > 0
+            && self.offset < other.offset + other.elems
+            && other.offset < self.offset + self.elems
+    }
+}
+
+/// A packed layout of every intermediate activation of one prepared graph.
+#[derive(Debug, Clone)]
+pub struct ActivationPlan {
+    slots: Vec<ActivationSlot>,
+    peak_elems: usize,
+    naive_elems: usize,
+}
+
+impl ActivationPlan {
+    /// Plan the activation arena for a graph in topological order, given
+    /// every node's inferred output shape.
+    ///
+    /// Panics (at prepare time, never at run time) if the greedy packing
+    /// ever produced address overlap between two simultaneously-live slots
+    /// — the invariant the executor's disjoint arena views rely on.
+    pub fn for_graph(nodes: &[Node], shapes: &[Vec<usize>]) -> ActivationPlan {
+        assert_eq!(nodes.len(), shapes.len());
+        let n = nodes.len();
+        // Lifetime end: the last consumer of each value. The final node is
+        // read by the caller after the walk, which `last_use = n-1` covers.
+        let mut last_use: Vec<usize> = (0..n).collect();
+        for (j, node) in nodes.iter().enumerate() {
+            for &i in &node.inputs {
+                last_use[i] = last_use[i].max(j);
+            }
+        }
+        let mut slots: Vec<ActivationSlot> = (0..n)
+            .map(|i| ActivationSlot {
+                offset: 0,
+                // The graph input is borrowed from the caller, not staged.
+                elems: if matches!(nodes[i].op, Op::Input) {
+                    0
+                } else {
+                    shapes[i].iter().product()
+                },
+                first_use: i,
+                last_use: last_use[i],
+            })
+            .collect();
+
+        // Greedy placement, largest first (deterministic tie-break by
+        // index): first-fit at the lowest offset clear of every
+        // already-placed, lifetime-overlapping slot.
+        let mut order: Vec<usize> = (0..n).filter(|&i| slots[i].elems > 0).collect();
+        order.sort_by(|&a, &b| slots[b].elems.cmp(&slots[a].elems).then(a.cmp(&b)));
+        let mut placed: Vec<usize> = Vec::with_capacity(order.len());
+        let mut busy: Vec<(usize, usize)> = Vec::with_capacity(order.len());
+        for &i in &order {
+            busy.clear();
+            busy.extend(
+                placed
+                    .iter()
+                    .filter(|&&j| slots[i].lifetime_overlaps(&slots[j]))
+                    .map(|&j| (slots[j].offset, slots[j].offset + slots[j].elems)),
+            );
+            busy.sort_unstable();
+            let mut offset = 0usize;
+            for &(start, end) in &busy {
+                if offset + slots[i].elems <= start {
+                    break;
+                }
+                offset = offset.max(end);
+            }
+            slots[i].offset = offset;
+            placed.push(i);
+        }
+
+        let peak_elems = slots.iter().map(|s| s.offset + s.elems).max().unwrap_or(0);
+        let naive_elems = slots.iter().map(|s| s.elems).sum();
+        let plan = ActivationPlan {
+            slots,
+            peak_elems,
+            naive_elems,
+        };
+        plan.assert_sound();
+        plan
+    }
+
+    /// Check the invariant the executor's raw-pointer arena views rely on:
+    /// no two simultaneously-live slots share arena bytes, and every slot
+    /// sits inside the arena. Cheap (runs once, at prepare time).
+    fn assert_sound(&self) {
+        for (i, a) in self.slots.iter().enumerate() {
+            assert!(a.offset + a.elems <= self.peak_elems);
+            for b in &self.slots[i + 1..] {
+                assert!(
+                    !(a.lifetime_overlaps(b) && a.range_overlaps(b)),
+                    "planner bug: slots {:?} and {:?} alias while both live",
+                    a,
+                    b
+                );
+            }
+        }
+    }
+
+    /// Number of planned nodes.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// True for an empty graph.
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Placement of node `i`'s output.
+    pub fn slot(&self, i: usize) -> &ActivationSlot {
+        &self.slots[i]
+    }
+
+    /// All slots, indexed by node.
+    pub fn slots(&self) -> &[ActivationSlot] {
+        &self.slots
+    }
+
+    /// Arena elements one inference needs for all intermediates.
+    pub fn peak_elems(&self) -> usize {
+        self.peak_elems
+    }
+
+    /// [`peak_elems`](Self::peak_elems) in bytes — what a per-worker
+    /// activation arena is pre-sized to.
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_elems * std::mem::size_of::<f32>()
+    }
+
+    /// Sum of all intermediate sizes in elements — what per-layer
+    /// allocation (one live tensor per node, no sharing) would cost in the
+    /// worst case. The planned-vs-naive headroom the bench reports print.
+    pub fn naive_elems(&self) -> usize {
+        self.naive_elems
+    }
+
+    /// [`naive_elems`](Self::naive_elems) in bytes.
+    pub fn naive_bytes(&self) -> usize {
+        self.naive_elems * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::Conv2d;
+    use crate::nn::Graph;
+
+    /// A sequential chain of `len` conv layers over `side`×`side` maps —
+    /// lifetimes [i, i+1], so the planner should two-colour the arena.
+    fn chain(len: usize, side: usize, c: usize) -> (Graph, Vec<Vec<usize>>) {
+        let mut g = Graph::new();
+        let mut prev = g.input();
+        for i in 0..len {
+            let desc = Conv2d::new(c, c, (3, 3)).with_padding((1, 1));
+            let w = desc.random_weights(i as u64);
+            prev = g.add(
+                &format!("conv{i}"),
+                Op::Conv { desc, weights: w, bias: vec![0.0; c], relu: true },
+                &[prev],
+            );
+        }
+        let shapes = g.infer_shapes(&[1, side, side, c]).unwrap();
+        (g, shapes)
+    }
+
+    /// Two disjoint-lifetime layers must actually share an arena interval.
+    #[test]
+    fn disjoint_lifetimes_share_bytes() {
+        let (g, shapes) = chain(4, 8, 4);
+        let plan = ActivationPlan::for_graph(&g.nodes, &shapes);
+        let per_layer = 8 * 8 * 4;
+        // All four conv outputs are the same size; with [i, i+1] lifetimes
+        // two offsets suffice — conv1 and conv3 (nodes 1 and 3) are dead by
+        // the time conv3 and the tail run, so slots recur.
+        assert_eq!(plan.peak_elems(), 2 * per_layer);
+        assert_eq!(plan.naive_elems(), 4 * per_layer);
+        assert_eq!(plan.slot(1).offset, plan.slot(3).offset, "disjoint slots share an interval");
+        assert_eq!(plan.slot(2).offset, plan.slot(4).offset);
+        // The borrowed input occupies no arena bytes.
+        assert_eq!(plan.slot(0).elems, 0);
+    }
+
+    /// On a VGG-16-shaped sequential chain (deep stack of convs + pools),
+    /// planned peak must be strictly below the naive sum-of-all-tensors.
+    #[test]
+    fn vgg16_shaped_chain_peak_below_naive() {
+        // VGG-16 topology at 1/8 channel width and 56×56 input: 13 convs in
+        // 5 blocks with pooling between — the shape of the memory problem,
+        // without the multi-hundred-MB weight tensors.
+        let widths = [8usize, 8, 16, 16, 32, 32, 32, 64, 64, 64, 64, 64, 64];
+        let pool_after = [1usize, 3, 6, 9, 12];
+        let mut g = Graph::new();
+        let mut prev = g.input();
+        let mut cin = 3usize;
+        for (i, &cout) in widths.iter().enumerate() {
+            let desc = Conv2d::new(cin, cout, (3, 3)).with_padding((1, 1));
+            let w = desc.random_weights(i as u64);
+            prev = g.add(
+                &format!("conv{i}"),
+                Op::Conv { desc, weights: w, bias: vec![0.0; cout], relu: true },
+                &[prev],
+            );
+            if pool_after.contains(&i) {
+                prev = g.add(
+                    &format!("pool{i}"),
+                    Op::MaxPool { kernel: (2, 2), stride: (2, 2), pad: (0, 0), ceil: false },
+                    &[prev],
+                );
+            }
+            cin = cout;
+        }
+        let shapes = g.infer_shapes(&[1, 56, 56, 3]).unwrap();
+        let plan = ActivationPlan::for_graph(&g.nodes, &shapes);
+        assert!(
+            plan.peak_elems() < plan.naive_elems(),
+            "planned peak {} not below naive {}",
+            plan.peak_elems(),
+            plan.naive_elems()
+        );
+        // A sequential chain needs at most the two largest neighbours.
+        let mut sizes: Vec<usize> = shapes[1..].iter().map(|s| s.iter().product()).collect();
+        sizes.sort_unstable_by(|a, b| b.cmp(a));
+        assert!(plan.peak_elems() <= sizes[0] + sizes[1]);
+    }
+
+    /// Branching keeps every simultaneously-live value disjoint: a value
+    /// consumed by a late node must not be overwritten by intermediate
+    /// layers in between (the concat pattern of GoogleNet/SqueezeNet).
+    #[test]
+    fn branches_keep_live_values_disjoint() {
+        let mut g = Graph::new();
+        let input = g.input();
+        let mk = |cin: usize, cout: usize, seed: u64| {
+            let desc = Conv2d::new(cin, cout, (3, 3)).with_padding((1, 1));
+            let w = desc.random_weights(seed);
+            Op::Conv { desc, weights: w, bias: vec![0.0; cout], relu: false }
+        };
+        let trunk = g.add("trunk", mk(4, 8, 1), &[input]);
+        let a = g.add("a", mk(8, 8, 2), &[trunk]);
+        let b = g.add("b", mk(8, 8, 3), &[trunk]);
+        let cat = g.add("cat", Op::Concat, &[a, b]);
+        let _ = cat;
+        let shapes = g.infer_shapes(&[1, 6, 6, 4]).unwrap();
+        let plan = ActivationPlan::for_graph(&g.nodes, &shapes);
+        // trunk is live until b runs; a is live until cat runs: the pairs
+        // (trunk, a), (trunk, b), (a, b) must all be address-disjoint.
+        for (x, y) in [(trunk, a), (trunk, b), (a, b)] {
+            let (sx, sy) = (plan.slot(x), plan.slot(y));
+            assert!(
+                sx.range().end <= sy.range().start || sy.range().end <= sx.range().start,
+                "slots {x} and {y} overlap"
+            );
+        }
+        assert!(plan.peak_elems() >= 3 * 6 * 6 * 8);
+    }
+}

@@ -163,21 +163,25 @@ impl Tensor {
     }
 
     /// Zero-pad a rank-4 NHWC tensor spatially (same N and C).
+    ///
+    /// Allocates the padded copy. Hot paths stage into workspace-owned
+    /// memory instead via [`TensorView::pad_spatial_into`].
     pub fn pad_spatial(&self, pad_top: usize, pad_bottom: usize, pad_left: usize, pad_right: usize) -> Tensor {
         assert_eq!(self.rank(), 4, "pad_spatial expects NHWC rank-4");
         let (n, h, w, c) = (self.shape[0], self.shape[1], self.shape[2], self.shape[3]);
         let (oh, ow) = (h + pad_top + pad_bottom, w + pad_left + pad_right);
         let mut out = Tensor::zeros(&[n, oh, ow, c]);
-        for b in 0..n {
-            for y in 0..h {
-                for x in 0..w {
-                    let src = self.idx4(b, y, x, 0);
-                    let dst = out.idx4(b, y + pad_top, x + pad_left, 0);
-                    out.data[dst..dst + c].copy_from_slice(&self.data[src..src + c]);
-                }
-            }
-        }
+        self.view().pad_spatial_into(pad_top, pad_bottom, pad_left, pad_right, &mut out.data);
         out
+    }
+
+    /// Borrow this tensor as a [`TensorView`] (shape + data, no ownership).
+    #[inline]
+    pub fn view(&self) -> TensorView<'_> {
+        TensorView {
+            shape: &self.shape,
+            data: &self.data,
+        }
     }
 
     /// Max absolute entry.
@@ -189,6 +193,127 @@ impl Tensor {
     /// other, scaled by the dynamic range of `other`.
     pub fn allclose(&self, other: &Tensor, tol: f32) -> bool {
         self.shape == other.shape && crate::util::rel_error(&self.data, &other.data) <= tol
+    }
+}
+
+/// A borrowed tensor: an externally owned shape over an externally owned
+/// `f32` slice.
+///
+/// This is what the planned executor hands around — intermediate
+/// activations live as offset windows of one arena
+/// ([`crate::nn::ActivationPlan`]), and the write-into convolution entry
+/// points ([`crate::winograd::WinogradConvolution::run_fused_into`],
+/// [`crate::im2row::Im2RowConvolution::run_fused_into`],
+/// [`crate::conv::direct::direct_conv2d_into`]) read their input through
+/// this view so no owning [`Tensor`] is materialised per layer.
+#[derive(Debug, Clone, Copy)]
+pub struct TensorView<'a> {
+    shape: &'a [usize],
+    data: &'a [f32],
+}
+
+impl<'a> TensorView<'a> {
+    /// View `data` under `shape`. Errors if the element count mismatches.
+    pub fn new(shape: &'a [usize], data: &'a [f32]) -> Result<TensorView<'a>> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail_shape!("view: shape {:?} needs {} elems, got {}", shape, n, data.len());
+        }
+        Ok(TensorView { shape, data })
+    }
+
+    /// Tensor shape.
+    #[inline]
+    pub fn shape(&self) -> &[usize] {
+        self.shape
+    }
+
+    /// Rank (number of dimensions).
+    #[inline]
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Total element count.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when the view has no elements.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// The viewed buffer.
+    #[inline]
+    pub fn data(&self) -> &'a [f32] {
+        self.data
+    }
+
+    /// Flat index of `(n, h, w, c)` for an NHWC rank-4 view.
+    #[inline(always)]
+    pub fn idx4(&self, n: usize, h: usize, w: usize, c: usize) -> usize {
+        debug_assert_eq!(self.shape.len(), 4);
+        ((n * self.shape[1] + h) * self.shape[2] + w) * self.shape[3] + c
+    }
+
+    /// Value at `(n, h, w, c)` (NHWC).
+    #[inline(always)]
+    pub fn at4(&self, n: usize, h: usize, w: usize, c: usize) -> f32 {
+        self.data[self.idx4(n, h, w, c)]
+    }
+
+    /// The contiguous channel slice at pixel `(n, h, w)` (NHWC).
+    #[inline(always)]
+    pub fn pixel(&self, n: usize, h: usize, w: usize) -> &'a [f32] {
+        let c = self.shape[3];
+        let base = self.idx4(n, h, w, 0);
+        &self.data[base..base + c]
+    }
+
+    /// Copy into an owning [`Tensor`].
+    pub fn to_tensor(&self) -> Tensor {
+        Tensor {
+            shape: self.shape.to_vec(),
+            data: self.data.to_vec(),
+        }
+    }
+
+    /// Zero-pad a rank-4 NHWC view spatially into a caller-provided buffer
+    /// of exactly `n·(h+pt+pb)·(w+pl+pr)·c` elements — the staging step the
+    /// conv pipelines run against workspace memory instead of a fresh
+    /// allocation. `dst` contents are fully overwritten (the border is
+    /// zeroed explicitly, so dirty arena memory is fine).
+    pub fn pad_spatial_into(
+        &self,
+        pad_top: usize,
+        pad_bottom: usize,
+        pad_left: usize,
+        pad_right: usize,
+        dst: &mut [f32],
+    ) {
+        assert_eq!(self.rank(), 4, "pad_spatial_into expects NHWC rank-4");
+        let (n, h, w, c) = (self.shape[0], self.shape[1], self.shape[2], self.shape[3]);
+        let (oh, ow) = (h + pad_top + pad_bottom, w + pad_left + pad_right);
+        assert_eq!(dst.len(), n * oh * ow * c, "pad_spatial_into: dst size mismatch");
+        let row = ow * c;
+        for b in 0..n {
+            let img = b * oh * row;
+            // Top and bottom border rows.
+            dst[img..img + pad_top * row].fill(0.0);
+            dst[img + (pad_top + h) * row..img + oh * row].fill(0.0);
+            for y in 0..h {
+                let d = img + (y + pad_top) * row;
+                // Left/right borders, then the payload row in one memcpy.
+                dst[d..d + pad_left * c].fill(0.0);
+                dst[d + (pad_left + w) * c..d + row].fill(0.0);
+                let src = self.idx4(b, y, 0, 0);
+                dst[d + pad_left * c..d + (pad_left + w) * c]
+                    .copy_from_slice(&self.data[src..src + w * c]);
+            }
+        }
     }
 }
 
@@ -257,6 +382,31 @@ mod tests {
         assert_eq!(p.at4(0, 1, 1, 0), 0.0);
         let total: f32 = p.data().iter().sum();
         assert_eq!(total, 10.0);
+    }
+
+    #[test]
+    fn view_mirrors_tensor_accessors() {
+        let t = Tensor::randn(&[2, 3, 4, 5], 7);
+        let v = t.view();
+        assert_eq!(v.shape(), t.shape());
+        assert_eq!(v.len(), t.len());
+        assert_eq!(v.at4(1, 2, 3, 4), t.at4(1, 2, 3, 4));
+        assert_eq!(v.pixel(1, 0, 2), t.pixel(1, 0, 2));
+        assert_eq!(v.to_tensor(), t);
+        // External shape over an external slice, with a length check.
+        let shape = [1usize, 2, 2, 1];
+        assert!(TensorView::new(&shape, &[0.0; 4]).is_ok());
+        assert!(TensorView::new(&shape, &[0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn pad_spatial_into_matches_pad_spatial_and_clears_dirt() {
+        let t = Tensor::randn(&[2, 3, 4, 3], 11);
+        let want = t.pad_spatial(1, 2, 3, 0);
+        // Dirty destination: every element must be overwritten.
+        let mut dst = vec![f32::NAN; want.len()];
+        t.view().pad_spatial_into(1, 2, 3, 0, &mut dst);
+        assert_eq!(dst, want.data());
     }
 
     #[test]

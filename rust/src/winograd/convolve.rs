@@ -36,8 +36,13 @@
 //! ([`DEFAULT_L2_BUDGET`], overridable per convolution with
 //! [`WinogradConvolution::with_block_budget`] or globally with the
 //! `WINOCONV_L2_BUDGET` env var, read once per process). The block scratch
-//! comes from a caller-provided [`Workspace`] arena, so steady-state
-//! inference allocates nothing inside the fused stages.
+//! **and** the padded-input staging buffer come from a caller-provided
+//! [`Workspace`] arena, and the write-into entry point
+//! ([`WinogradConvolution::run_fused_into`]) lands the conv output in a
+//! caller-provided slice — with a warm arena a whole inference through this
+//! path performs zero heap allocation. The allocating
+//! [`WinogradConvolution::run_fused_with`] survives as a thin wrapper
+//! (and test oracle) over it.
 //!
 //! The pre-fusion three-stage pipeline (scatter → staged GEMMs → gather)
 //! is kept as [`WinogradConvolution::run_staged_with`]: it is the ablation
@@ -50,7 +55,7 @@ use crate::gemm::pack::{packed_b_panel_bytes, PackedAWriter};
 use crate::gemm::{BatchedGemm, Blocking, Epilogue, PackedB, MR, NR};
 use crate::parallel::ThreadPool;
 use crate::simd::F32x4;
-use crate::tensor::Tensor;
+use crate::tensor::{Tensor, TensorView};
 use crate::util::ceil_div;
 use crate::workspace::Workspace;
 use crate::{bail_shape, bail_unsupported, Result};
@@ -103,15 +108,16 @@ pub struct WinogradConvolution {
 
 /// Resolved per-run geometry shared by the fused and staged pipelines.
 struct RunGeometry {
-    c: usize,
     oh: usize,
     ow: usize,
     tiles_h: usize,
     tiles_w: usize,
     regions: usize,
-    /// Input padded so every tile is in-bounds (right/bottom rounded up to
-    /// the tile grid).
-    padded: Tensor,
+    /// Extents the input must be padded to so every tile is in-bounds
+    /// (symmetric user padding plus right/bottom round-up to the tile
+    /// grid). When these equal the input extents no staging copy is made.
+    need_h: usize,
+    need_w: usize,
 }
 
 impl WinogradConvolution {
@@ -240,27 +246,47 @@ impl WinogradConvolution {
     /// Regions per block for an `[n, h, w, C]` input on the fused pipeline
     /// (see `block_regions`).
     pub fn regions_per_block(&self, n: usize, h: usize, w: usize) -> Result<usize> {
-        let (oh, ow) = self.output_hw(h, w)?;
-        let (mh, mw) = self.plan.variant.out_tile();
-        let (tiles_h, tiles_w) = (ceil_div(oh, mh), ceil_div(ow, mw));
-        Ok(self.block_regions(n * tiles_h * tiles_w, tiles_w, false))
+        let g = self.geometry(n, h, w)?;
+        Ok(self.block_regions(g.regions, g.tiles_w, false))
     }
 
     /// Per-block workspace bytes (the packed-A block) for an `[n, h, w, C]`
     /// input — the number that must sit under the configured L2 budget
-    /// together with one packed-B panel and the hot cube.
+    /// together with one packed-B panel and the hot cube. Padded-input
+    /// staging is deliberately excluded: it is layer-wide input data, not
+    /// part of the blocked GEMM working set the budget bounds.
     pub fn block_workspace_bytes(&self, n: usize, h: usize, w: usize) -> Result<usize> {
-        Ok(self.workspace_elems_for(n, h, w)? * std::mem::size_of::<f32>())
+        Ok(self.packed_a_elems_for(n, h, w)? * std::mem::size_of::<f32>())
+    }
+
+    /// Packed-A block elements: `x² · ceil(Rb/MR)·MR · C`.
+    fn packed_a_elems_for(&self, n: usize, h: usize, w: usize) -> Result<usize> {
+        let rb = self.regions_per_block(n, h, w)?;
+        let tiles = self.plan.variant.gemm_count();
+        Ok(tiles * rb.div_ceil(MR) * MR * self.cin)
+    }
+
+    /// Elements of workspace-owned padded-input staging one inference over
+    /// an `[n, h, w, C]` input borrows — `n·need_h·need_w·C` when the layer
+    /// pads (user padding or tile-grid round-up), 0 when the input already
+    /// sits on the tile grid and no copy is staged at all.
+    pub fn staging_elems_for(&self, n: usize, h: usize, w: usize) -> Result<usize> {
+        let g = self.geometry(n, h, w)?;
+        if g.need_h == h && g.need_w == w {
+            Ok(0)
+        } else {
+            Ok(n * g.need_h * g.need_w * self.cin)
+        }
     }
 
     /// Workspace elements ([`f32`]s) one **fused** inference over an
     /// `[n, h, w, C]` input borrows from the arena — used to pre-size
-    /// per-thread arenas. C blocks no longer exist, so this is exactly the
-    /// packed-A block: `x² · ceil(Rb/MR)·MR · C`.
+    /// per-thread arenas. Two disjoint borrows: the padded-input staging
+    /// buffer ([`staging_elems_for`](Self::staging_elems_for)) and the
+    /// packed-A block (`x² · ceil(Rb/MR)·MR · C`). C blocks no longer
+    /// exist on the fused path.
     pub fn workspace_elems_for(&self, n: usize, h: usize, w: usize) -> Result<usize> {
-        let rb = self.regions_per_block(n, h, w)?;
-        let tiles = self.plan.variant.gemm_count();
-        Ok(tiles * rb.div_ceil(MR) * MR * self.cin)
+        Ok(self.staging_elems_for(n, h, w)? + self.packed_a_elems_for(n, h, w)?)
     }
 
     /// Workspace elements one **staged** inference borrows (A block + C
@@ -274,43 +300,64 @@ impl WinogradConvolution {
         Ok(tiles * rb * (self.cin + self.cout))
     }
 
-    /// Validate shapes and resolve the per-run geometry (incl. stage-0
-    /// padding) shared by the fused and staged pipelines.
-    fn resolve_geometry(&self, input: &Tensor, bias: Option<&[f32]>) -> Result<RunGeometry> {
+    /// Resolve the per-run geometry (incl. the stage-0 padded extents)
+    /// shared by the fused and staged pipelines.
+    fn geometry(&self, n: usize, h: usize, w: usize) -> Result<RunGeometry> {
+        let (oh, ow) = self.output_hw(h, w)?;
+        let (mh, mw) = self.plan.variant.out_tile();
+        let (th, tw) = self.plan.variant.in_tile();
+        let (tiles_h, tiles_w) = (ceil_div(oh, mh), ceil_div(ow, mw));
+        let need_h = tiles_h * mh + th - mh; // = tiles_h*mh + kh - 1
+        let need_w = tiles_w * mw + tw - mw;
+        Ok(RunGeometry {
+            oh,
+            ow,
+            tiles_h,
+            tiles_w,
+            regions: n * tiles_h * tiles_w,
+            need_h,
+            need_w,
+        })
+    }
+
+    /// Validate an input view's rank/channels and an optional bias length.
+    fn check_input(&self, input: &TensorView, bias: Option<&[f32]>) -> Result<()> {
         if input.rank() != 4 {
             bail_shape!("input must be [N, H, W, C], got {:?}", input.shape());
         }
-        let (n, h, w, c) = (
-            input.shape()[0],
-            input.shape()[1],
-            input.shape()[2],
-            input.shape()[3],
-        );
-        if c != self.cin {
-            bail_shape!("input has {c} channels, weights expect {}", self.cin);
+        if input.shape()[3] != self.cin {
+            bail_shape!(
+                "input has {} channels, weights expect {}",
+                input.shape()[3],
+                self.cin
+            );
         }
         if let Some(b) = bias {
             if b.len() != self.cout {
                 bail_shape!("bias length {} vs {} output channels", b.len(), self.cout);
             }
         }
-        let (oh, ow) = self.output_hw(h, w)?;
-        let (mh, mw) = self.plan.variant.out_tile();
-        let (th, tw) = self.plan.variant.in_tile();
-        let (tiles_h, tiles_w) = (ceil_div(oh, mh), ceil_div(ow, mw));
+        Ok(())
+    }
+
+    /// Stage the padded input into `staging` (workspace-owned memory) when
+    /// the geometry requires it, else pass the input view straight through.
+    /// `pshape` must outlive the returned view and hold
+    /// `[n, need_h, need_w, c]`.
+    fn staged_input<'a>(
+        &self,
+        input: &TensorView<'a>,
+        g: &RunGeometry,
+        pshape: &'a [usize; 4],
+        staging: &'a mut [f32],
+    ) -> Result<TensorView<'a>> {
+        let (h, w) = (input.shape()[1], input.shape()[2]);
+        if g.need_h == h && g.need_w == w {
+            return Ok(*input);
+        }
         let (ph, pw) = self.pad;
-        let need_h = tiles_h * mh + th - mh; // = tiles_h*mh + kh - 1
-        let need_w = tiles_w * mw + tw - mw;
-        let padded = input.pad_spatial(ph, need_h - h - ph, pw, need_w - w - pw);
-        Ok(RunGeometry {
-            c,
-            oh,
-            ow,
-            tiles_h,
-            tiles_w,
-            regions: n * tiles_h * tiles_w,
-            padded,
-        })
+        input.pad_spatial_into(ph, g.need_h - h - ph, pw, g.need_w - w - pw, staging);
+        TensorView::new(pshape, staging)
     }
 
     /// Run the fused two-stage pipeline. `pool` parallelises regions and
@@ -336,11 +383,10 @@ impl WinogradConvolution {
         self.run_fused_with(input, pool, bias, relu, &mut ws)
     }
 
-    /// The fused region-blocked pipeline over a caller-owned arena: blocks
-    /// of `Rb` regions flow through transform-as-pack → batched GEMM with
-    /// gather-as-epilogue, and the only heap traffic is the arena's
-    /// one-time growth (none at all once `ws` is at size — the
-    /// zero-steady-state-allocation property the arena-reuse tests pin).
+    /// The fused region-blocked pipeline over a caller-owned arena,
+    /// allocating the output tensor. Thin wrapper over
+    /// [`run_fused_into`](Self::run_fused_into) — kept as the allocating
+    /// oracle the write-into path is property-tested against.
     pub fn run_fused_with(
         &self,
         input: &Tensor,
@@ -349,19 +395,57 @@ impl WinogradConvolution {
         relu: bool,
         ws: &mut Workspace,
     ) -> Result<Tensor> {
-        let g = self.resolve_geometry(input, bias)?;
+        let view = input.view();
+        self.check_input(&view, bias)?;
+        let (n, h, w) = (input.shape()[0], input.shape()[1], input.shape()[2]);
+        let (oh, ow) = self.output_hw(h, w)?;
+        let mut output = Tensor::zeros(&[n, oh, ow, self.cout]);
+        self.run_fused_into(&view, pool, bias, relu, ws, output.data_mut())?;
+        Ok(output)
+    }
+
+    /// The fused region-blocked write-into pipeline: blocks of `Rb` regions
+    /// flow through transform-as-pack → batched GEMM with
+    /// gather-as-epilogue, the padded input is staged into workspace-owned
+    /// memory (no copy at all when the input already sits on the tile
+    /// grid), and the conv output lands in the caller-provided `out` slice
+    /// (`n·oh·ow·M` elements, fully overwritten — dirty arena memory is
+    /// fine). With a warm arena this path performs **zero heap
+    /// allocation** — the property the planned executor
+    /// ([`crate::nn::PreparedModel`]) builds on.
+    pub fn run_fused_into(
+        &self,
+        input: &TensorView,
+        pool: Option<&ThreadPool>,
+        bias: Option<&[f32]>,
+        relu: bool,
+        ws: &mut Workspace,
+        out: &mut [f32],
+    ) -> Result<()> {
+        self.check_input(input, bias)?;
+        let (n, h, w) = (input.shape()[0], input.shape()[1], input.shape()[2]);
+        let g = self.geometry(n, h, w)?;
         let (mh, mw) = self.plan.variant.out_tile();
         let (th, tw) = self.plan.variant.in_tile();
         let tiles = th * tw;
-        let (c, m_total) = (g.c, self.cout);
-        let n = input.shape()[0];
+        let (c, m_total) = (self.cin, self.cout);
+        if out.len() != n * g.oh * g.ow * m_total {
+            bail_shape!(
+                "output slice has {} elems, layer writes {}",
+                out.len(),
+                n * g.oh * g.ow * m_total
+            );
+        }
+        let out_addr = out.as_mut_ptr() as usize;
 
-        let mut output = Tensor::zeros(&[n, g.oh, g.ow, m_total]);
-        let out_addr = output.data_mut().as_mut_ptr() as usize;
-
-        // One packed-A block for the whole layer, reused across blocks.
+        // One staging buffer + packed-A block for the whole layer, reused
+        // across blocks (two disjoint arena borrows, zero heap traffic).
         let rb = self.block_regions(g.regions, g.tiles_w, false);
-        let a_blk = ws.take(tiles * rb.div_ceil(MR) * MR * c);
+        let staging_elems = self.staging_elems_for(n, h, w)?;
+        let (staging, a_blk) =
+            ws.split2(staging_elems, tiles * rb.div_ceil(MR) * MR * c);
+        let pshape = [n, g.need_h, g.need_w, c];
+        let padded = self.staged_input(input, &g, &pshape, staging)?;
         // `bm` takes at most two values (rb, then the last remainder), so
         // the dead rows of a short last panel are zeroed at most twice per
         // run — not per block.
@@ -384,7 +468,7 @@ impl WinogradConvolution {
             {
                 let a_addr = a_blk.as_mut_ptr() as usize;
                 let a_len = tiles * tile_stride;
-                let padded_in = &g.padded;
+                let padded_in = &padded;
                 let transform_region = |li: usize| {
                     let region = r0 + li;
                     let b = region / (g.tiles_h * g.tiles_w);
@@ -456,7 +540,7 @@ impl WinogradConvolution {
             bgd.run_packed_fused(pool, &a_blk[..tiles * tile_stride], &self.u_packed, &gather);
         }
 
-        Ok(output)
+        Ok(())
     }
 
     /// The pre-fusion three-stage pipeline (scatter → staged `x²` GEMMs →
@@ -481,13 +565,18 @@ impl WinogradConvolution {
         relu: bool,
         ws: &mut Workspace,
     ) -> Result<Tensor> {
-        let g = self.resolve_geometry(input, bias)?;
+        self.check_input(&input.view(), bias)?;
+        let (n, h, w) = (input.shape()[0], input.shape()[1], input.shape()[2]);
+        let g = self.geometry(n, h, w)?;
         let v = self.plan.variant;
         let (mh, mw) = v.out_tile();
         let (th, tw) = v.in_tile();
         let tiles = th * tw;
-        let (c, m_total) = (g.c, self.cout);
-        let n = input.shape()[0];
+        let (c, m_total) = (self.cin, self.cout);
+        // The pre-fusion baseline keeps its allocating padded copy — the
+        // cost the write-into path's workspace staging removes.
+        let (ph, pw) = self.pad;
+        let padded = input.pad_spatial(ph, g.need_h - h - ph, pw, g.need_w - w - pw);
 
         let mut output = Tensor::zeros(&[n, g.oh, g.ow, m_total]);
 
@@ -501,7 +590,7 @@ impl WinogradConvolution {
             // Stage 1: input transform + scatter into A `[tile][bm][C]`.
             {
                 let a_addr = a_blk.as_mut_ptr() as usize;
-                let padded_in = &g.padded;
+                let padded_in = &padded;
                 let transform_region = |li: usize| {
                     let region = r0 + li;
                     let b = region / (g.tiles_h * g.tiles_w);
@@ -942,6 +1031,68 @@ mod tests {
                     "{v} bias={} relu={relu}: fused != direct oracle",
                     bias_opt.is_some()
                 );
+            }
+        }
+    }
+
+    /// The write-into refactor (satellite property test): for **every**
+    /// shipped variant × {none, bias, bias+ReLU} × ragged shapes,
+    /// `run_fused_into` writing into an offset window of a dirty buffer
+    /// (NaN-poisoned, so any unwritten element is caught) must be
+    /// **bit-identical** to the PR-2-style allocating entry point — the
+    /// staging-based padding and slice output change where bytes live, not
+    /// what they are.
+    #[test]
+    fn write_into_matches_allocating_bitwise() {
+        for v in WinogradVariant::ALL {
+            let (kh, kw) = v.kernel();
+            let (h, w) = (kh + 9, kw + 11);
+            let (c, m) = (5usize, 7usize);
+            let input = Tensor::randn(&[2, h, w, c], 61);
+            let weights = Tensor::randn(&[m, kh, kw, c], 62);
+            let bias: Vec<f32> = (0..m).map(|i| (i as f32) * 0.25 - 0.5).collect();
+            // Pad so staging is exercised even where the grid would align.
+            let conv = WinogradConvolution::new(v, &weights, (kh / 2, kw / 2)).unwrap();
+            for (bias_opt, relu) in [
+                (None, false),
+                (Some(bias.as_slice()), false),
+                (Some(bias.as_slice()), true),
+            ] {
+                let mut ws_a = Workspace::new();
+                let mut ws_b = Workspace::new();
+                let want = conv
+                    .run_fused_with(&input, None, bias_opt, relu, &mut ws_a)
+                    .unwrap();
+                let off = 7usize; // misaligned window into a larger buffer
+                let mut backing = vec![f32::NAN; want.len() + 2 * off];
+                conv.run_fused_into(
+                    &input.view(),
+                    None,
+                    bias_opt,
+                    relu,
+                    &mut ws_b,
+                    &mut backing[off..off + want.len()],
+                )
+                .unwrap();
+                assert_eq!(
+                    &backing[off..off + want.len()],
+                    want.data(),
+                    "{v} bias={} relu={relu}: write-into differs from allocating path",
+                    bias_opt.is_some()
+                );
+                assert!(backing[..off].iter().all(|x| x.is_nan()));
+                assert!(backing[off + want.len()..].iter().all(|x| x.is_nan()));
+                // A wrong-size output slice is rejected, not written.
+                assert!(conv
+                    .run_fused_into(
+                        &input.view(),
+                        None,
+                        bias_opt,
+                        relu,
+                        &mut ws_b,
+                        &mut backing[..want.len() - 1],
+                    )
+                    .is_err());
             }
         }
     }

@@ -1,16 +1,25 @@
-//! A reusable `f32` workspace arena for the convolution hot path.
+//! A reusable `f32` arena: the backing store for both of the engine's
+//! per-thread memory pools.
 //!
-//! The fused region-wise Winograd pipeline needs one scratch buffer per
-//! layer (the packed-A block — Winograd-domain C is never materialised;
-//! the staged ablation pipeline still borrows an A/C pair) and the im2row
-//! baseline needs one (the patch matrix). Allocating them per call is
-//! exactly the working-set churn the paper's memory-budget discussion
-//! warns about, so every executor thread instead owns one [`Workspace`]
-//! sized to the largest layer it will run: [`crate::nn::PreparedModel`]
-//! pre-sizes one at prepare time, and the [`crate::coordinator`]
-//! dispatcher owns one per worker loop. Steady-state inference then
-//! performs **zero heap allocations** inside the fused stages
-//! (transform-as-pack → batched GEMMs + gather-as-epilogue).
+//! Every executor thread owns an arena **pair**, both pre-sized at prepare
+//! time and both plain [`Workspace`]s:
+//!
+//! * **Conv scratch** — the fused Winograd pipeline borrows its
+//!   padded-input staging buffer and packed-A block per layer
+//!   (Winograd-domain C is never materialised; the staged ablation
+//!   pipeline still borrows an A/C pair), the im2row baseline its staging
+//!   buffer and patch matrix. Sized to the largest layer
+//!   ([`crate::nn::PreparedModel::workspace_elems`]).
+//! * **Planned activations** — the prepare-time planner
+//!   ([`crate::nn::ActivationPlan`]) assigns every intermediate tensor an
+//!   offset interval in a second arena sized to the plan's peak; the
+//!   executor reads and writes borrowed windows of it instead of
+//!   allocating per-layer output tensors.
+//!
+//! Allocating any of this per call is exactly the working-set churn the
+//! paper's memory-budget discussion warns about; with both arenas warm, a
+//! whole steady-state inference — transforms, GEMMs, epilogues, pooling,
+//! FC, softmax — performs **zero heap allocations**, end to end.
 //!
 //! The arena is deliberately dumb: one flat buffer, borrowed as one or two
 //! disjoint slices per layer, fully overwritten by each user (no zeroing on

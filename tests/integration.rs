@@ -86,9 +86,44 @@ fn squeezenet_schemes_agree() {
     // Softmax output is a distribution either way.
     let s: f32 = y2.data().iter().sum();
     assert!((s - 1.0).abs() < 1e-3);
-    // The pre-sized arenas must not have grown during inference.
+    // The pre-sized arenas must not have grown during inference, and the
+    // single-consumer runs must never have taken the allocating fallback.
     assert_eq!(base.workspace_stats().1, 0, "im2row arena regrew");
     assert_eq!(ours.workspace_stats().1, 0, "winograd arena regrew");
+    assert_eq!(base.fallback_count() + ours.fallback_count(), 0);
+}
+
+/// The fully planned write-into path on a real model: explicit pre-sized
+/// arena pair, caller-provided output slice, bit-identical to `run`, zero
+/// arena growth and zero fallbacks — the end-to-end
+/// "steady-state inference performs no heap allocation" guarantee.
+#[test]
+fn squeezenet_planned_path_is_allocation_free() {
+    let model = ModelKind::SqueezeNet;
+    let graph = model.build(5).unwrap();
+    let shape = model.input_shape(1);
+    let input = Tensor::randn(&shape, 41);
+    let pool = ThreadPool::new(2);
+    let prepared =
+        PreparedModel::prepare("sq", &graph, &shape, Scheme::WinogradWhereSuitable).unwrap();
+    let plan = prepared.activation_plan();
+    assert!(
+        plan.peak_elems() < plan.naive_elems(),
+        "planner must beat per-layer allocation on SqueezeNet"
+    );
+    let (want, _) = prepared.run(&input, Some(&pool)).unwrap();
+    let mut ws = Workspace::with_capacity(prepared.workspace_elems());
+    let mut acts = Workspace::with_capacity(plan.peak_elems());
+    let mut out = vec![f32::NAN; want.len()];
+    for _ in 0..2 {
+        prepared
+            .run_planned_into(&input, Some(&pool), &mut ws, &mut acts, &mut out)
+            .unwrap();
+        assert_eq!(out, want.data(), "planned-into output differs from run()");
+    }
+    assert_eq!(ws.grow_count(), 0, "scratch arena grew after pre-sizing");
+    assert_eq!(acts.grow_count(), 0, "activation arena grew after pre-sizing");
+    assert_eq!(prepared.fallback_count(), 0, "no contention, no fallback");
 }
 
 /// GoogleNet end-to-end through branches/concats/LRN under the Winograd
@@ -142,6 +177,9 @@ fn engine_serves_squeezenet_concurrently() {
     let m = engine.metrics();
     assert_eq!(m.completed, 6);
     assert!(m.throughput_fps > 0.0);
+    // The engine's per-worker-arena path: no run() fallbacks, no growth.
+    assert_eq!(m.arena_fallbacks, 0);
+    assert_eq!(m.arena_grows, 0);
 }
 
 /// Every algorithm the public API exposes computes the same 3×3 layer.
