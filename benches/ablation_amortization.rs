@@ -25,6 +25,7 @@
 
 use winoconv::bench::workloads::unique_fast_layers;
 use winoconv::bench::{measure, BenchConfig, Table};
+use winoconv::conv::Activation;
 use winoconv::im2row::Im2RowConvolution;
 use winoconv::parallel::ThreadPool;
 use winoconv::tensor::Tensor;
@@ -51,18 +52,18 @@ fn e6_layer(
     let mut ws_s = Workspace::with_capacity(staged_elems);
     let mut ws_f = Workspace::with_capacity(fused_elems);
     if check_equal {
-        let a = wino.run_staged_with(input, Some(pool), Some(bias), true, &mut ws_s)?;
-        let b = wino.run_fused_with(input, Some(pool), Some(bias), true, &mut ws_f)?;
+        let a = wino.run_staged_with(input, Some(pool), Some(bias), Activation::Relu, &mut ws_s)?;
+        let b = wino.run_fused_with(input, Some(pool), Some(bias), Activation::Relu, &mut ws_f)?;
         assert!(a.allclose(&b, 1e-4), "E6: fused != staged");
     }
     let staged = measure(cfg, || {
         let _ = wino
-            .run_staged_with(input, Some(pool), Some(bias), true, &mut ws_s)
+            .run_staged_with(input, Some(pool), Some(bias), Activation::Relu, &mut ws_s)
             .unwrap();
     });
     let fused = measure(cfg, || {
         let _ = wino
-            .run_fused_with(input, Some(pool), Some(bias), true, &mut ws_f)
+            .run_fused_with(input, Some(pool), Some(bias), Activation::Relu, &mut ws_f)
             .unwrap();
     });
     Ok((staged.median / 1e6, fused.median / 1e6, staged_elems, fused_elems))

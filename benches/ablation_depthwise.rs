@@ -1,0 +1,238 @@
+//! **Depthwise ablation**: the direct register-tiled depthwise engine
+//! (`conv::depthwise`) vs the degenerate **im2row-as-grouped** baseline —
+//! what running a depthwise layer through the paper's im2row machinery
+//! actually costs (per channel: a strided plane extract, a 9-wide patch
+//! matrix, and a `[R×9]·[9×1]` GEMM — exactly the memory-bound shape the
+//! depthwise literature warns about).
+//!
+//! Workload: the unique 3×3 depthwise layers of MobileNetV1 (optionally
+//! another model via `--model`), batch 1, both strides.
+//!
+//! `--smoke` runs two small layers with correctness asserts (engine ==
+//! baseline numerically, arena grow-count 0) and **fails unless the direct
+//! engine beats the im2row-as-grouped baseline** — the CI gate wired into
+//! `ci.sh` that keeps the depthwise path measurably worth having.
+
+use winoconv::bench::workloads::{unique_depthwise_layers, LayerSpec};
+use winoconv::bench::{measure, ms, BenchConfig, Table};
+use winoconv::conv::depthwise::DepthwiseConvolution;
+use winoconv::im2row::Im2RowConvolution;
+use winoconv::parallel::ThreadPool;
+use winoconv::tensor::Tensor;
+use winoconv::util::cli::Args;
+use winoconv::workspace::Workspace;
+use winoconv::zoo::ModelKind;
+
+/// The im2row-as-grouped baseline: one single-channel `Im2RowConvolution`
+/// per channel (weights pre-packed once, as the dense baseline gets), with
+/// plane extract/scatter staged through reusable buffers. This is the
+/// fairest expression of "just use the existing machinery" — it pays the
+/// copies and degenerate GEMMs the direct engine exists to avoid.
+struct GroupedIm2Row {
+    convs: Vec<Im2RowConvolution>,
+}
+
+impl GroupedIm2Row {
+    fn new(weights: &Tensor, stride: (usize, usize), pad: (usize, usize)) -> winoconv::Result<Self> {
+        let c = weights.shape()[0];
+        let mut convs = Vec::with_capacity(c);
+        for ch in 0..c {
+            let mut w1 = Tensor::zeros(&[1, 3, 3, 1]);
+            for a in 0..3 {
+                for b in 0..3 {
+                    *w1.at4_mut(0, a, b, 0) = weights.at4(ch, a, b, 0);
+                }
+            }
+            convs.push(Im2RowConvolution::new(&w1, stride, pad)?);
+        }
+        Ok(GroupedIm2Row { convs })
+    }
+
+    /// One inference: per channel, extract the plane, convolve, scatter.
+    /// `plane_in`/`plane_out` are caller-owned reusable staging buffers
+    /// (`[N, H, W, 1]` / `N·OH·OW` elements) so the measured loop pays the
+    /// copies and degenerate GEMMs, not allocator traffic.
+    fn run(
+        &self,
+        input: &Tensor,
+        pool: Option<&ThreadPool>,
+        ws: &mut Workspace,
+        plane_in: &mut Tensor,
+        plane_out: &mut [f32],
+        out: &mut [f32],
+    ) -> winoconv::Result<()> {
+        let c = input.shape()[3];
+        let src = input.data();
+        for (ch, conv) in self.convs.iter().enumerate() {
+            for (p, v) in plane_in.data_mut().iter_mut().enumerate() {
+                *v = src[p * c + ch];
+            }
+            conv.run_fused_into(
+                &plane_in.view(),
+                pool,
+                None,
+                winoconv::conv::Activation::None,
+                ws,
+                plane_out,
+            )?;
+            for (p, &v) in plane_out.iter().enumerate() {
+                out[p * c + ch] = v;
+            }
+        }
+        Ok(())
+    }
+}
+
+fn bench_layer(
+    spec: &LayerSpec,
+    cfg: &BenchConfig,
+    pool: &ThreadPool,
+    check: bool,
+) -> winoconv::Result<(f64, f64)> {
+    let input = spec.input(41);
+    let weights = spec.weights(42);
+    let (n, h, w) = (spec.input_shape[0], spec.input_shape[1], spec.input_shape[2]);
+    let dw = DepthwiseConvolution::new(&weights, spec.stride, spec.pad)?;
+    let baseline = GroupedIm2Row::new(&weights, spec.stride, spec.pad)?;
+    let (oh, ow) = dw.output_hw(h, w)?;
+    let mut out_dw = vec![0.0f32; n * oh * ow * spec.cin];
+    let mut out_base = vec![f32::NAN; out_dw.len()];
+    let mut ws_dw = Workspace::with_capacity(dw.workspace_elems_for(n, h, w)?);
+    let mut ws_base = Workspace::new();
+    // Baseline staging allocated once, outside the measured loop.
+    let mut plane_in = Tensor::zeros(&[n, h, w, 1]);
+    let mut plane_out = vec![0.0f32; n * oh * ow];
+
+    if check {
+        dw.run_fused_into(
+            &input.view(),
+            Some(pool),
+            None,
+            winoconv::conv::Activation::None,
+            &mut ws_dw,
+            &mut out_dw,
+        )?;
+        baseline.run(&input, Some(pool), &mut ws_base, &mut plane_in, &mut plane_out, &mut out_base)?;
+        let err = winoconv::util::rel_error(&out_dw, &out_base);
+        assert!(err < 1e-4, "{}: depthwise != im2row-as-grouped, rel err {err}", spec.name);
+        assert_eq!(
+            ws_dw.grow_count(),
+            0,
+            "{}: pre-sized depthwise arena grew",
+            spec.name
+        );
+    }
+
+    let direct = measure(cfg, || {
+        dw.run_fused_into(
+            &input.view(),
+            Some(pool),
+            None,
+            winoconv::conv::Activation::None,
+            &mut ws_dw,
+            &mut out_dw,
+        )
+        .unwrap();
+    });
+    let grouped = measure(cfg, || {
+        baseline
+            .run(&input, Some(pool), &mut ws_base, &mut plane_in, &mut plane_out, &mut out_base)
+            .unwrap();
+    });
+    Ok((grouped.median, direct.median))
+}
+
+/// `--smoke`: the CI gate. Two MobileNetV1-shaped layers (one per stride),
+/// shrunk spatially so the whole gate runs in seconds, with correctness
+/// asserts and a hard direct-beats-baseline assert.
+fn smoke(pool: &ThreadPool) -> winoconv::Result<()> {
+    let cfg = BenchConfig::quick();
+    for (c, hw, stride) in [(64usize, 28usize, (1, 1)), (128, 28, (2, 2))] {
+        let spec = LayerSpec {
+            model: ModelKind::MobileNetV1,
+            name: format!("dw{c}s{}", stride.0),
+            input_shape: vec![1, hw, hw, c],
+            cin: c,
+            cout: c,
+            kernel: (3, 3),
+            stride,
+            pad: (1, 1),
+            groups: c,
+        };
+        let (base, ours) = bench_layer(&spec, &cfg, pool, true)?;
+        println!(
+            "smoke {}: im2row-as-grouped {} ms -> depthwise {} ms ({:.1}x)",
+            spec.name,
+            ms(base),
+            ms(ours),
+            base / ours
+        );
+        assert!(
+            ours < base,
+            "smoke {}: direct depthwise ({} ms) must beat im2row-as-grouped ({} ms)",
+            spec.name,
+            ms(ours),
+            ms(base)
+        );
+    }
+    println!("smoke ok: direct depthwise beats im2row-as-grouped on both strides");
+    Ok(())
+}
+
+fn main() -> winoconv::Result<()> {
+    let args = Args::from_env(&["quick", "bench", "smoke"])?;
+    let threads: usize = args.get_parse_or(
+        "threads",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    )?;
+    let pool = ThreadPool::new(threads);
+    if args.flag("smoke") {
+        return smoke(&pool);
+    }
+    let cfg = if args.flag("quick") { BenchConfig::quick() } else { BenchConfig::from_env() };
+
+    let model = match args.get("model") {
+        Some(name) => ModelKind::parse(name)
+            .ok_or_else(|| winoconv::Error::Config(format!("unknown model {name:?}")))?,
+        None => ModelKind::MobileNetV1,
+    };
+
+    let layers = unique_depthwise_layers(model, 1)?;
+    if layers.is_empty() {
+        println!("{model} has no depthwise layers; try --model mobilenet-v1");
+        return Ok(());
+    }
+    let mut table = Table::new(
+        &format!("{model}: direct depthwise vs im2row-as-grouped ({threads} thread(s))"),
+        &["layer", "shape", "stride", "grouped ms", "depthwise ms", "speedup", "count"],
+    );
+    for (spec, count) in layers {
+        let (base, ours) = bench_layer(&spec, &cfg, &pool, true)?;
+        eprintln!(
+            "  {:<12} {:>3}x{:<3} C={:<5} s{} {:>8} -> {:>8} ms  {:.1}x",
+            spec.name,
+            spec.input_shape[1],
+            spec.input_shape[2],
+            spec.cin,
+            spec.stride.0,
+            ms(base),
+            ms(ours),
+            base / ours
+        );
+        table.row(&[
+            spec.name.clone(),
+            format!("{}x{}x{}", spec.input_shape[1], spec.input_shape[2], spec.cin),
+            format!("{}", spec.stride.0),
+            ms(base),
+            ms(ours),
+            format!("{:.1}x", base / ours),
+            format!("{count}"),
+        ]);
+    }
+    table.print();
+    println!(
+        "expectation: the direct engine wins on every row (the baseline pays\n\
+         per-channel plane copies + 9-wide patch matrices + degenerate GEMMs)."
+    );
+    Ok(())
+}

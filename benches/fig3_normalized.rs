@@ -28,7 +28,15 @@ fn main() -> winoconv::Result<()> {
     let models: Vec<ModelKind> = match args.get("model") {
         Some(name) => vec![ModelKind::parse(name)
             .ok_or_else(|| winoconv::Error::Config(format!("unknown model {name:?}")))?],
-        None => ModelKind::ALL.to_vec(),
+        // Figure 3 reproduces the paper's five networks; the MobileNets
+        // (no Winograd-suitable layers) are opt-in via --model.
+        None => vec![
+            ModelKind::Vgg16,
+            ModelKind::Vgg19,
+            ModelKind::GoogleNet,
+            ModelKind::InceptionV3,
+            ModelKind::SqueezeNet,
+        ],
     };
 
     let mut table = Table::new(

@@ -16,11 +16,13 @@ use winoconv::workspace::Workspace;
 use winoconv::zoo::ModelKind;
 
 /// `--smoke`: the CI peak-memory gate. Prints the planner's peak activation
-/// bytes (vs the naive sum-of-all-intermediates) for every zoo model, then
-/// runs SqueezeNet end-to-end over pre-sized arenas asserting grow-count
-/// and fallback-count both stay 0 — peak-memory drift or a
+/// bytes (vs the naive sum-of-all-intermediates) for every zoo model —
+/// MobileNetV1/V2 included — then runs SqueezeNet and both MobileNets
+/// end-to-end over pre-sized arenas asserting grow-count and
+/// fallback-count both stay 0 — peak-memory drift or a
 /// steady-state-allocation regression fails CI the same way bench bit-rot
-/// does.
+/// does. For the MobileNets this also pins the depthwise engine's planned
+/// write-into path (every dw layer dispatches to it).
 fn smoke(pool: &ThreadPool) -> winoconv::Result<()> {
     let mut table = Table::new(
         "activation memory plan per zoo model (batch 1)",
@@ -46,26 +48,39 @@ fn smoke(pool: &ThreadPool) -> winoconv::Result<()> {
     }
     table.print();
 
-    let model = ModelKind::SqueezeNet;
-    let graph = model.build(1)?;
-    let shape = model.input_shape(1);
-    let prepared =
-        PreparedModel::prepare(model.name(), &graph, &shape, Scheme::WinogradWhereSuitable)?;
-    let mut ws = Workspace::with_capacity(prepared.workspace_elems());
-    let mut acts = Workspace::with_capacity(prepared.activation_plan().peak_elems());
-    for seed in 0..2 {
-        let input = Tensor::randn(&shape, seed);
-        let _ = prepared.run_with_workspace(&input, Some(pool), &mut ws, &mut acts)?;
+    for model in [ModelKind::SqueezeNet, ModelKind::MobileNetV1, ModelKind::MobileNetV2] {
+        let graph = model.build(1)?;
+        let shape = model.input_shape(1);
+        let prepared =
+            PreparedModel::prepare(model.name(), &graph, &shape, Scheme::WinogradWhereSuitable)?;
+        let mut ws = Workspace::with_capacity(prepared.workspace_elems());
+        let mut acts = Workspace::with_capacity(prepared.activation_plan().peak_elems());
+        let mut out = vec![f32::NAN; prepared.output_shape().iter().product()];
+        for seed in 0..2 {
+            let input = Tensor::randn(&shape, seed);
+            prepared.run_planned_into(&input, Some(pool), &mut ws, &mut acts, &mut out)?;
+        }
+        assert_eq!(ws.grow_count(), 0, "smoke {model}: scratch arena grew after pre-sizing");
+        assert_eq!(acts.grow_count(), 0, "smoke {model}: activation arena grew after pre-sizing");
+        assert_eq!(prepared.fallback_count(), 0, "smoke {model}: run() fallback taken");
+        let counts = prepared.dispatch_counts();
+        let census = prepared.dispatch_census();
+        assert_eq!(counts.total(), 2 * census.total(), "smoke {model}: dispatch accounting");
+        if matches!(model, ModelKind::MobileNetV1 | ModelKind::MobileNetV2) {
+            assert!(
+                census.depthwise > 0 && counts.depthwise == 2 * census.depthwise,
+                "smoke {model}: depthwise layers must dispatch to the direct engine"
+            );
+        }
+        println!(
+            "smoke ok: {} planned activation peak {} KiB (naive {} KiB), grow-count 0, \
+             fallback-count 0, dispatch {}",
+            model.display(),
+            prepared.activation_plan().peak_bytes() / 1024,
+            prepared.activation_plan().naive_bytes() / 1024,
+            counts,
+        );
     }
-    assert_eq!(ws.grow_count(), 0, "smoke: scratch arena grew after pre-sizing");
-    assert_eq!(acts.grow_count(), 0, "smoke: activation arena grew after pre-sizing");
-    assert_eq!(prepared.fallback_count(), 0, "smoke: run() fallback taken");
-    println!(
-        "smoke ok: {} planned activation peak {} KiB (naive {} KiB), grow-count 0, fallback-count 0",
-        model.display(),
-        prepared.activation_plan().peak_bytes() / 1024,
-        prepared.activation_plan().naive_bytes() / 1024,
-    );
     Ok(())
 }
 
@@ -100,6 +115,8 @@ fn main() -> winoconv::Result<()> {
             ModelKind::GoogleNet,
             ModelKind::InceptionV3,
             ModelKind::SqueezeNet,
+            ModelKind::MobileNetV1,
+            ModelKind::MobileNetV2,
         ],
     };
 
@@ -175,12 +192,17 @@ fn main() -> winoconv::Result<()> {
         "Table 1 (derived): speedup",
         &["Model", "full ms saved", "full %", "fast ms saved", "fast %", "paper full %"],
     );
+    // MobileNets are not in the paper's Table 1 — and have no
+    // Winograd-suitable layers, so their scheme delta is expected ≈ 0 (the
+    // depthwise engine binds on both schemes; see ablation_depthwise).
     let paper = [
         (ModelKind::Vgg16, "60.7%"),
         (ModelKind::GoogleNet, "41.6%"),
         (ModelKind::InceptionV3, "40.9%"),
         (ModelKind::SqueezeNet, "29.6%"),
         (ModelKind::Vgg19, "-"),
+        (ModelKind::MobileNetV1, "-"),
+        (ModelKind::MobileNetV2, "-"),
     ];
     for r in &rows {
         let paper_pct = paper
@@ -188,12 +210,18 @@ fn main() -> winoconv::Result<()> {
             .find(|(m, _)| *m == r.model)
             .map(|(_, p)| *p)
             .unwrap_or("-");
+        // MobileNets have no fast layers: guard the 0/0 fast-speedup cell.
+        let fast_pct = if r.base_fast > 0.0 {
+            format!("{:.1}%", (1.0 - r.ours_fast / r.base_fast) * 100.0)
+        } else {
+            "-".to_string()
+        };
         table.row(&[
             r.model.display().to_string(),
             ms(r.base_full - r.ours_full),
             format!("{:.1}%", (1.0 - r.ours_full / r.base_full) * 100.0),
             ms(r.base_fast - r.ours_fast),
-            format!("{:.1}%", (1.0 - r.ours_fast / r.base_fast) * 100.0),
+            fast_pct,
             paper_pct.to_string(),
         ]);
     }

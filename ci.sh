@@ -23,10 +23,17 @@ run cargo build --release --benches
 run cargo bench --bench ablation_amortization -- --smoke
 
 # Peak-memory gate: the activation planner must keep beating the naive
-# sum-of-all-intermediates on every zoo model, and a SqueezeNet run over
-# pre-sized arenas must stay at grow-count 0 / fallback-count 0 — a
-# steady-state-allocation or peak-memory regression fails CI too.
+# sum-of-all-intermediates on every zoo model (MobileNets included), and
+# SqueezeNet + MobileNetV1/V2 runs over pre-sized arenas must stay at
+# grow-count 0 / fallback-count 0 — a steady-state-allocation or
+# peak-memory regression fails CI too.
 run cargo bench --bench table1_whole_network -- --smoke
+
+# Depthwise gate: the direct register-tiled depthwise engine must keep
+# beating the im2row-as-grouped degenerate baseline on MobileNetV1-shaped
+# 3x3 depthwise layers (both strides), and must keep matching it
+# numerically over a grow-count-0 arena.
+run cargo bench --bench ablation_depthwise -- --smoke
 
 if [[ "${1:-}" != "--no-lint" ]]; then
     if cargo fmt --version >/dev/null 2>&1; then

@@ -1,12 +1,16 @@
-//! Walk the model zoo: build each of the paper's five CNNs, run one
-//! inference under both schemes, and print the per-model layer census plus
-//! the slowest layers — a quick structural sanity check of the whole stack.
+//! Walk the model zoo: build each of the seven CNNs (the paper's five plus
+//! MobileNetV1/V2), run one inference under both schemes, and print the
+//! per-model layer census plus the slowest layers — a quick structural
+//! sanity check of the whole stack.
 //!
 //! ```sh
-//! cargo run --release --example model_zoo -- [--model squeezenet] [--threads 4]
+//! cargo run --release --example model_zoo -- [--model mobilenet-v1] [--threads 4]
 //! ```
-//! Without `--model`, only the two small models run (VGG/Inception take
+//! Without `--model`, only the small models run (VGG/Inception take
 //! minutes in a debug-ish environment; use the benches for full tables).
+//! Note the MobileNets show ≈ 0 scheme delta by design: they have no
+//! Winograd-suitable layers, and their depthwise convs bind the direct
+//! depthwise engine under *both* schemes (see `ablation_depthwise`).
 
 use winoconv::bench::{ms, Table};
 use winoconv::nn::{PreparedModel, Scheme};
@@ -23,7 +27,7 @@ fn main() -> winoconv::Result<()> {
     let models: Vec<ModelKind> = match args.get("model") {
         Some(name) => vec![ModelKind::parse(name)
             .ok_or_else(|| winoconv::Error::Config(format!("unknown model {name:?}")))?],
-        None => vec![ModelKind::SqueezeNet, ModelKind::GoogleNet],
+        None => vec![ModelKind::SqueezeNet, ModelKind::GoogleNet, ModelKind::MobileNetV1, ModelKind::MobileNetV2],
     };
 
     for model in models {

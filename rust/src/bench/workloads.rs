@@ -27,6 +27,8 @@ pub struct LayerSpec {
     pub stride: (usize, usize),
     /// Padding.
     pub pad: (usize, usize),
+    /// Channel groups (1 = dense; `groups == cin == cout` = depthwise).
+    pub groups: usize,
 }
 
 impl LayerSpec {
@@ -35,9 +37,15 @@ impl LayerSpec {
         format!("{}x{}", self.kernel.0, self.kernel.1)
     }
 
-    /// Is the layer Winograd-suitable (a "fast layer")?
+    /// Is the layer Winograd-suitable (a "fast layer")? Grouped layers
+    /// never are — C_group is too shallow to amortise the transforms.
     pub fn fast(&self) -> bool {
-        is_winograd_suitable(self.kernel, self.stride)
+        is_winograd_suitable(self.kernel, self.stride, self.groups)
+    }
+
+    /// Is the layer depthwise (`groups == cin == cout`)?
+    pub fn depthwise(&self) -> bool {
+        self.groups > 1 && self.groups == self.cin && self.groups == self.cout
     }
 
     /// Deterministic input tensor for benching.
@@ -45,9 +53,11 @@ impl LayerSpec {
         Tensor::randn(&self.input_shape, seed)
     }
 
-    /// Deterministic weights `[M, KH, KW, C]`.
+    /// Deterministic weights `[M, KH, KW, C/groups]`.
     pub fn weights(&self, seed: u64) -> Tensor {
-        crate::conv::Conv2d::new(self.cin, self.cout, self.kernel).random_weights(seed)
+        crate::conv::Conv2d::new(self.cin, self.cout, self.kernel)
+            .with_groups(self.groups)
+            .random_weights(seed)
     }
 
     /// FLOPs of this layer (direct-conv count).
@@ -60,7 +70,7 @@ impl LayerSpec {
             ow,
             self.kernel.0,
             self.kernel.1,
-            self.cin,
+            self.cin / self.groups,
             self.cout,
         )
     }
@@ -83,10 +93,27 @@ pub fn conv_layers(model: ModelKind, seed: u64) -> Result<Vec<LayerSpec>> {
                 kernel: desc.kernel,
                 stride: desc.stride,
                 pad: desc.padding,
+                groups: desc.groups,
             });
         }
     }
     Ok(out)
+}
+
+/// The depthwise conv layers of a model, deduplicated by shape signature
+/// with occurrence counts — the workload of the `ablation_depthwise`
+/// bench.
+pub fn unique_depthwise_layers(model: ModelKind, seed: u64) -> Result<Vec<(LayerSpec, usize)>> {
+    let mut seen: Vec<(LayerSpec, usize)> = Vec::new();
+    for spec in conv_layers(model, seed)?.into_iter().filter(LayerSpec::depthwise) {
+        match seen.iter_mut().find(|(s, _)| {
+            s.input_shape == spec.input_shape && s.cin == spec.cin && s.stride == spec.stride
+        }) {
+            Some((_, count)) => *count += 1,
+            None => seen.push((spec, 1)),
+        }
+    }
+    Ok(seen)
 }
 
 /// The fast (Winograd-suitable) conv layers of a model, deduplicated by
@@ -139,6 +166,23 @@ mod tests {
         let total: usize = unique.iter().map(|(_, c)| c).sum();
         assert_eq!(total, 13);
         assert!(unique.len() < 13, "VGG has repeated block shapes");
+    }
+
+    #[test]
+    fn mobilenet_depthwise_layers_extracted() {
+        let layers = conv_layers(ModelKind::MobileNetV1, 1).unwrap();
+        assert_eq!(layers.len(), 27);
+        // No MobileNetV1 layer is Winograd-suitable; 13 are depthwise.
+        assert!(layers.iter().all(|l| !l.fast()));
+        assert_eq!(layers.iter().filter(|l| l.depthwise()).count(), 13);
+        let unique = unique_depthwise_layers(ModelKind::MobileNetV1, 1).unwrap();
+        let total: usize = unique.iter().map(|(_, c)| c).sum();
+        assert_eq!(total, 13);
+        assert!(unique.len() < 13, "V1 repeats 512-channel s1 blocks");
+        for (spec, _) in &unique {
+            assert_eq!(spec.kernel, (3, 3));
+            assert_eq!(spec.weights(1).shape(), &[spec.cin, 3, 3, 1]);
+        }
     }
 
     #[test]

@@ -1,0 +1,555 @@
+//! Direct depthwise convolution — the register-tiled SIMD engine for the
+//! MobileNet workload class.
+//!
+//! ## Why not Winograd (or im2row)?
+//!
+//! The paper's region-wise Winograd argument (§4) amortises the input/output
+//! transform cost over the `C·M` products of the channel-mixing GEMM. A
+//! depthwise layer has **no channel mixing**: each channel convolves alone
+//! (`C_group = 1`), so there is no GEMM to amortise against and the
+//! transforms dominate outright. im2row fares no better — with `K = KH·KW·1`
+//! the patch matrix is a 9-wide memory-bound copy feeding `C` degenerate
+//! `[R×9]·[9×1]` GEMMs. Zhang et al. (*High Performance Depthwise and
+//! Pointwise Convolutions on Mobile Devices*, 2020) and Hao et al.
+//! (*Towards Effective Depthwise Convolutions on ARMv8*, 2022) both reach
+//! the same conclusion the selector ([`crate::conv::select`]) encodes: the
+//! right algorithm for this regime is a **direct** loop nest, vectorised
+//! over channels, with enough register tiling that every input pixel is
+//! loaded once per kernel row.
+//!
+//! ## The register-tiling scheme
+//!
+//! NHWC keeps channels innermost, so — exactly like the paper's Winograd
+//! transforms — one 128-bit [`F32x4`] register holds **four channels of one
+//! pixel**, and the per-channel depthwise products become lane-parallel
+//! FMAs with no horizontal reduction:
+//!
+//! * **Channel groups** — the channel axis is walked in groups of 4 lanes
+//!   (ragged tails via partial load/store). Per group, the nine 3×3 taps
+//!   are preloaded into nine registers (`wv[9]`) that stay resident for the
+//!   whole output row.
+//! * **Output-row column tiles** — each output row is processed
+//!   [`COL_TILE`] output pixels at a time: 4 accumulators live in registers
+//!   across all nine taps, so the kernel runs 36 FMAs per tile against
+//!   ≤ 18 input loads (at stride 1 adjacent taps/columns re-touch the same
+//!   pixels, which stay L1-resident) with zero intermediate stores.
+//! * **Fused epilogue** — accumulators are *seeded* with the bias vector
+//!   and clamped (ReLU / ReLU6) in registers before the single store, so —
+//!   like both GEMM-backed schemes — depthwise outputs are written exactly
+//!   once, already biased and activated.
+//!
+//! Padding is staged: `run_fused_into` zero-pads the input into
+//! workspace-owned memory ([`TensorView::pad_spatial_into`], no copy for
+//! valid/unpadded layers), so the hot loops carry no bounds checks and the
+//! zero-steady-state-allocation invariant of the planned executor holds —
+//! with a warm arena this path performs **no heap allocation**.
+//!
+//! Scope: 3×3 kernels at stride 1 and stride 2 (the only depthwise shapes
+//! the MobileNet family ships); anything else routes to the naive grouped
+//! oracle ([`crate::conv::direct::direct_conv2d_grouped`]), which is also
+//! this engine's property-test reference.
+
+use crate::gemm::Activation;
+use crate::parallel::ThreadPool;
+use crate::simd::F32x4;
+use crate::tensor::{Tensor, TensorView};
+use crate::workspace::Workspace;
+use crate::{bail_shape, bail_unsupported, Result};
+
+/// Output pixels per register tile: 4 accumulators + 9 weight vectors + a
+/// bias vector keeps the working set within even AArch32's 16 q-registers.
+pub const COL_TILE: usize = 4;
+
+/// A prepared direct depthwise convolution: 3×3 taps repacked tap-major so
+/// each tap's channel run is contiguous (one [`F32x4`] load per tap and
+/// 4-channel group), reusable across inputs — the same prepare-once
+/// treatment [`crate::winograd::WinogradConvolution`] and
+/// [`crate::im2row::Im2RowConvolution`] get.
+#[derive(Debug, Clone)]
+pub struct DepthwiseConvolution {
+    channels: usize,
+    stride: (usize, usize),
+    pad: (usize, usize),
+    /// Taps repacked to `[KH·KW][C]`: `w[(a·3 + b)·C + ch]` — for a fixed
+    /// tap `(a, b)` the channel group `ch..ch+4` is one vector load.
+    w: Vec<f32>,
+}
+
+impl DepthwiseConvolution {
+    /// Prepare from `[C, 3, 3, 1]` weights (the `[M, KH, KW, C/groups]`
+    /// convention at `groups == cin == cout`). Only 3×3 at stride (1,1) or
+    /// (2,2) is supported — the selector never routes other shapes here.
+    pub fn new(weights: &Tensor, stride: (usize, usize), pad: (usize, usize)) -> Result<Self> {
+        if weights.rank() != 4 || weights.shape()[3] != 1 {
+            bail_shape!(
+                "depthwise weights must be [C, KH, KW, 1], got {:?}",
+                weights.shape()
+            );
+        }
+        let (c, kh, kw) = (weights.shape()[0], weights.shape()[1], weights.shape()[2]);
+        if (kh, kw) != (3, 3) {
+            bail_unsupported!("depthwise engine is 3x3-only, got {kh}x{kw}");
+        }
+        if stride != (1, 1) && stride != (2, 2) {
+            bail_unsupported!("depthwise engine supports stride 1 or 2, got {stride:?}");
+        }
+        let mut w = vec![0.0f32; 9 * c];
+        for ch in 0..c {
+            for a in 0..3 {
+                for b in 0..3 {
+                    w[(a * 3 + b) * c + ch] = weights.at4(ch, a, b, 0);
+                }
+            }
+        }
+        Ok(DepthwiseConvolution {
+            channels: c,
+            stride,
+            pad,
+            w,
+        })
+    }
+
+    /// Channel count (== groups == cin == cout).
+    pub fn channels(&self) -> usize {
+        self.channels
+    }
+
+    /// Output spatial size for an `h×w` input.
+    pub fn output_hw(&self, h: usize, w: usize) -> Result<(usize, usize)> {
+        let (ph, pw) = self.pad;
+        if h + 2 * ph < 3 || w + 2 * pw < 3 {
+            bail_shape!("input {h}x{w} (pad {ph},{pw}) smaller than filter 3x3");
+        }
+        Ok(((h + 2 * ph - 3) / self.stride.0 + 1, (w + 2 * pw - 3) / self.stride.1 + 1))
+    }
+
+    /// Elements of workspace-owned padded-input staging one inference over
+    /// an `[n, h, w, C]` input borrows — 0 for valid (unpadded) layers,
+    /// where the engine reads the caller's input directly.
+    pub fn staging_elems_for(&self, n: usize, h: usize, w: usize) -> usize {
+        let (ph, pw) = self.pad;
+        if ph == 0 && pw == 0 {
+            0
+        } else {
+            n * (h + 2 * ph) * (w + 2 * pw) * self.channels
+        }
+    }
+
+    /// Workspace elements one inference borrows from the arena — staging is
+    /// the engine's only scratch (no patch matrix, no packed blocks).
+    pub fn workspace_elems_for(&self, n: usize, h: usize, w: usize) -> Result<usize> {
+        let _ = self.output_hw(h, w)?; // geometry must be valid
+        Ok(self.staging_elems_for(n, h, w))
+    }
+
+    /// Run with a throwaway arena (tests / one-shot use).
+    pub fn run(&self, input: &Tensor, pool: Option<&ThreadPool>) -> Result<Tensor> {
+        let mut ws = Workspace::new();
+        self.run_with_workspace(input, pool, &mut ws)
+    }
+
+    /// [`run`](Self::run) drawing the padded-input staging from a
+    /// caller-owned arena.
+    pub fn run_with_workspace(
+        &self,
+        input: &Tensor,
+        pool: Option<&ThreadPool>,
+        ws: &mut Workspace,
+    ) -> Result<Tensor> {
+        self.run_fused_with(input, pool, None, Activation::None, ws)
+    }
+
+    /// Allocating wrapper over [`run_fused_into`](Self::run_fused_into) —
+    /// kept as the oracle the write-into path is property-tested against.
+    pub fn run_fused_with(
+        &self,
+        input: &Tensor,
+        pool: Option<&ThreadPool>,
+        bias: Option<&[f32]>,
+        act: Activation,
+        ws: &mut Workspace,
+    ) -> Result<Tensor> {
+        if input.rank() != 4 {
+            bail_shape!("input must be [N, H, W, C], got {:?}", input.shape());
+        }
+        let (n, h, w) = (input.shape()[0], input.shape()[1], input.shape()[2]);
+        let (oh, ow) = self.output_hw(h, w)?;
+        let mut out = Tensor::zeros(&[n, oh, ow, self.channels]);
+        self.run_fused_into(&input.view(), pool, bias, act, ws, out.data_mut())?;
+        Ok(out)
+    }
+
+    /// The write-into pipeline: the padded input is staged into
+    /// workspace-owned memory (no copy for valid layers), and the
+    /// register-tiled kernel lands biased/activated outputs directly in
+    /// the caller-provided `out` slice (`N·OH·OW·C` elements, fully
+    /// overwritten — dirty arena memory is fine). With a warm arena this
+    /// path performs **zero heap allocation** — the property the planned
+    /// executor ([`crate::nn::PreparedModel`]) builds on.
+    pub fn run_fused_into(
+        &self,
+        input: &TensorView,
+        pool: Option<&ThreadPool>,
+        bias: Option<&[f32]>,
+        act: Activation,
+        ws: &mut Workspace,
+        out: &mut [f32],
+    ) -> Result<()> {
+        if input.rank() != 4 {
+            bail_shape!("input must be [N, H, W, C], got {:?}", input.shape());
+        }
+        let (n, h, w, c) = (
+            input.shape()[0],
+            input.shape()[1],
+            input.shape()[2],
+            input.shape()[3],
+        );
+        if c != self.channels {
+            bail_shape!("input has {c} channels, depthwise weights expect {}", self.channels);
+        }
+        if let Some(b) = bias {
+            if b.len() != c {
+                bail_shape!("bias length {} vs {c} channels", b.len());
+            }
+        }
+        let (oh, ow) = self.output_hw(h, w)?;
+        if out.len() != n * oh * ow * c {
+            bail_shape!(
+                "output slice has {} elems, layer writes {}",
+                out.len(),
+                n * oh * ow * c
+            );
+        }
+        let out_addr = out.as_mut_ptr() as usize;
+        let (ph, pw) = self.pad;
+        if ph == 0 && pw == 0 {
+            self.conv_rows(input, n, oh, ow, bias, act, pool, out_addr);
+        } else {
+            let staging = ws.take(self.staging_elems_for(n, h, w));
+            input.pad_spatial_into(ph, ph, pw, pw, staging);
+            let pshape = [n, h + 2 * ph, w + 2 * pw, c];
+            let padded = TensorView::new(&pshape, staging)?;
+            self.conv_rows(&padded, n, oh, ow, bias, act, pool, out_addr);
+        }
+        Ok(())
+    }
+
+    /// The hot loop over an **already padded** source view. Parallelises
+    /// over output rows (`N·OH` independent jobs, disjoint output rows).
+    #[allow(clippy::too_many_arguments)]
+    fn conv_rows(
+        &self,
+        src: &TensorView,
+        n: usize,
+        oh: usize,
+        ow: usize,
+        bias: Option<&[f32]>,
+        act: Activation,
+        pool: Option<&ThreadPool>,
+        out_addr: usize,
+    ) {
+        let c = self.channels;
+        let (sh, sw) = self.stride;
+        let (hp, wp) = (src.shape()[1], src.shape()[2]);
+        let data = src.data();
+        let taps = &self.w;
+        let row_job = |r: usize| {
+            let b = r / oh;
+            let oy = r % oh;
+            let iy0 = oy * sh;
+            // SAFETY: each job writes only its own `(b, oy)` output row;
+            // jobs are disjoint and `out` outlives the dispatch.
+            let out_row: &mut [f32] = unsafe {
+                std::slice::from_raw_parts_mut(
+                    (out_addr as *mut f32).add((b * oh + oy) * ow * c),
+                    ow * c,
+                )
+            };
+            for cg in (0..c).step_by(4) {
+                let lanes = (c - cg).min(4);
+                let full = lanes == 4;
+                // Preload the nine taps of this channel group — resident
+                // in registers for the whole output row.
+                let mut wv = [F32x4::zero(); 9];
+                for (t, wvt) in wv.iter_mut().enumerate() {
+                    let s = &taps[t * c + cg..];
+                    *wvt = if full { F32x4::load(s) } else { F32x4::load_partial(&s[..lanes]) };
+                }
+                // Accumulators are *seeded* with the bias (zero when none):
+                // the epilogue costs no extra pass over the output.
+                let bv = match bias {
+                    Some(bb) => F32x4::load_partial(&bb[cg..cg + lanes]),
+                    None => F32x4::zero(),
+                };
+                // Flat index of padded pixel (b, iy0+a, ix, cg).
+                let at = |a: usize, ix: usize| ((b * hp + iy0 + a) * wp + ix) * c + cg;
+                let load = |idx: usize| {
+                    let s = &data[idx..];
+                    if full {
+                        F32x4::load(s)
+                    } else {
+                        F32x4::load_partial(&s[..lanes])
+                    }
+                };
+                let mut ox = 0usize;
+                // Register tile: COL_TILE output pixels × 9 taps, all
+                // accumulators live across the tap loop.
+                while ox + COL_TILE <= ow {
+                    let mut acc = [bv; COL_TILE];
+                    for a in 0..3 {
+                        for bx in 0..3 {
+                            for (t, accx) in acc.iter_mut().enumerate() {
+                                let pv = load(at(a, (ox + t) * sw + bx));
+                                *accx = accx.fma(pv, wv[a * 3 + bx]);
+                            }
+                        }
+                    }
+                    for (t, accx) in acc.iter().enumerate() {
+                        let v = act.apply_vec(*accx);
+                        let dst = &mut out_row[(ox + t) * c + cg..];
+                        if full {
+                            v.store(dst);
+                        } else {
+                            v.store_partial(dst, lanes);
+                        }
+                    }
+                    ox += COL_TILE;
+                }
+                // Ragged tail columns, one accumulator at a time.
+                while ox < ow {
+                    let mut accx = bv;
+                    for a in 0..3 {
+                        for bx in 0..3 {
+                            let pv = load(at(a, ox * sw + bx));
+                            accx = accx.fma(pv, wv[a * 3 + bx]);
+                        }
+                    }
+                    let v = act.apply_vec(accx);
+                    let dst = &mut out_row[ox * c + cg..];
+                    if full {
+                        v.store(dst);
+                    } else {
+                        v.store_partial(dst, lanes);
+                    }
+                    ox += 1;
+                }
+            }
+        };
+        match pool {
+            Some(pool) => pool.parallel_for(n * oh, row_job),
+            None => (0..n * oh).for_each(row_job),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::direct::direct_conv2d_grouped;
+    use crate::testkit::{check, Gen};
+
+    /// Scalar per-channel reference computing *exactly* the kernel's math:
+    /// accumulator seeded with the bias, taps in `(a, b)` order via fused
+    /// `mul_add`, activation last — so the SIMD engine must match it
+    /// **bit for bit** (each F32x4 lane is an independent scalar chain).
+    fn reference_depthwise(
+        input: &Tensor,
+        weights: &Tensor,
+        stride: (usize, usize),
+        pad: (usize, usize),
+        bias: Option<&[f32]>,
+        act: Activation,
+    ) -> Tensor {
+        let (n, h, w, c) = (
+            input.shape()[0],
+            input.shape()[1],
+            input.shape()[2],
+            input.shape()[3],
+        );
+        let (sh, sw) = stride;
+        let (ph, pw) = pad;
+        let (oh, ow) = ((h + 2 * ph - 3) / sh + 1, (w + 2 * pw - 3) / sw + 1);
+        let mut out = Tensor::zeros(&[n, oh, ow, c]);
+        for b in 0..n {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for ch in 0..c {
+                        let mut acc = bias.map_or(0.0, |bb| bb[ch]);
+                        for a in 0..3 {
+                            for bx in 0..3 {
+                                let iy = (oy * sh + a) as isize - ph as isize;
+                                let ix = (ox * sw + bx) as isize - pw as isize;
+                                // The engine convolves a zero-padded copy,
+                                // so out-of-bounds taps contribute an
+                                // explicit 0·w fma (not a skip).
+                                let x = if iy >= 0 && iy < h as isize && ix >= 0 && ix < w as isize
+                                {
+                                    input.at4(b, iy as usize, ix as usize, ch)
+                                } else {
+                                    0.0
+                                };
+                                acc = x.mul_add(weights.at4(ch, a, bx, 0), acc);
+                            }
+                        }
+                        *out.at4_mut(b, oy, ox, ch) = act.apply(acc);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The satellite property test: `run_fused_into` is bit-identical to
+    /// the naive per-channel reference across strides {1,2} × paddings ×
+    /// ragged channel counts (C % 4 ≠ 0) × {none, bias, bias+ReLU,
+    /// bias+ReLU6}, writing into NaN-poisoned buffers.
+    #[test]
+    fn property_depthwise_matches_reference_bitwise() {
+        check("depthwise == scalar fma reference", 48, |g: &mut Gen| {
+            let c = g.usize_in(1, 11); // exercises C % 4 ∈ {0,1,2,3}
+            let stride = if g.usize_in(0, 1) == 0 { (1, 1) } else { (2, 2) };
+            let pad = match g.usize_in(0, 2) {
+                0 => (0, 0),
+                1 => (1, 1),
+                _ => (1, 0),
+            };
+            let h = g.usize_in(3, 14);
+            let w = g.usize_in(3, 14);
+            let n = g.usize_in(1, 2);
+            if h + 2 * pad.0 < 3 || w + 2 * pad.1 < 3 {
+                return true;
+            }
+            let input = Tensor::from_vec(&[n, h, w, c], g.normal_vec(n * h * w * c)).unwrap();
+            let weights = Tensor::from_vec(&[c, 3, 3, 1], g.normal_vec(9 * c)).unwrap();
+            let bias: Vec<f32> = g.normal_vec(c);
+            let (bias_opt, act) = match g.usize_in(0, 3) {
+                0 => (None, Activation::None),
+                1 => (Some(bias.as_slice()), Activation::None),
+                2 => (Some(bias.as_slice()), Activation::Relu),
+                _ => (Some(bias.as_slice()), Activation::Relu6),
+            };
+            let want = reference_depthwise(&input, &weights, stride, pad, bias_opt, act);
+            let conv = DepthwiseConvolution::new(&weights, stride, pad).unwrap();
+            let mut ws = Workspace::new();
+            let mut got = vec![f32::NAN; want.len()];
+            conv.run_fused_into(&input.view(), None, bias_opt, act, &mut ws, &mut got)
+                .unwrap();
+            got == want.data()
+        });
+    }
+
+    /// Cross-oracle: the engine (bias-less) agrees with the grouped direct
+    /// oracle at `groups == C` within float tolerance (different
+    /// accumulation order, hence allclose rather than bit equality).
+    #[test]
+    fn matches_grouped_direct_oracle() {
+        for (stride, pad) in [((1, 1), (1, 1)), ((2, 2), (1, 1)), ((1, 1), (0, 0)), ((2, 2), (0, 0))]
+        {
+            let c = 6;
+            let input = Tensor::randn(&[2, 9, 11, c], 7);
+            let weights = Tensor::randn(&[c, 3, 3, 1], 8);
+            let conv = DepthwiseConvolution::new(&weights, stride, pad).unwrap();
+            let got = conv.run(&input, None).unwrap();
+            let want = direct_conv2d_grouped(&input, &weights, stride, pad, c).unwrap();
+            assert_eq!(got.shape(), want.shape());
+            assert!(
+                got.allclose(&want, 1e-5),
+                "stride {stride:?} pad {pad:?} diverges from grouped direct"
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let pool = ThreadPool::new(4);
+        let input = Tensor::randn(&[1, 20, 17, 13], 3);
+        let weights = Tensor::randn(&[13, 3, 3, 1], 4);
+        let bias: Vec<f32> = (0..13).map(|i| i as f32 * 0.1 - 0.6).collect();
+        let conv = DepthwiseConvolution::new(&weights, (1, 1), (1, 1)).unwrap();
+        let mut ws = Workspace::new();
+        let a = conv
+            .run_fused_with(&input, None, Some(&bias), Activation::Relu6, &mut ws)
+            .unwrap();
+        let b = conv
+            .run_fused_with(&input, Some(&pool), Some(&bias), Activation::Relu6, &mut ws)
+            .unwrap();
+        assert_eq!(a.data(), b.data(), "pooled run must be bit-identical");
+        // ReLU6 must actually clamp somewhere for this input to test it.
+        assert!(a.data().iter().any(|&v| v == 0.0));
+        assert!(a.data().iter().all(|&v| v <= 6.0));
+    }
+
+    /// Arena pin (PR 3 style): pre-sized from `workspace_elems_for`, the
+    /// arena never grows across repeated inferences, and the sizing formula
+    /// matches the actual borrow. Valid layers borrow nothing at all.
+    #[test]
+    fn arena_grow_count_stays_zero() {
+        let weights = Tensor::randn(&[8, 3, 3, 1], 9);
+        let conv = DepthwiseConvolution::new(&weights, (2, 2), (1, 1)).unwrap();
+        let need = conv.workspace_elems_for(1, 12, 10).unwrap();
+        assert_eq!(need, 14 * 12 * 8);
+        let mut ws = Workspace::with_capacity(need);
+        for seed in 0..3 {
+            let input = Tensor::randn(&[1, 12, 10, 8], seed + 50);
+            let _ = conv.run_with_workspace(&input, None, &mut ws).unwrap();
+        }
+        assert_eq!(ws.grow_count(), 0, "pre-sized arena must not grow");
+        assert_eq!(ws.high_water_elems(), need, "sizing formula matches borrow");
+
+        let valid = DepthwiseConvolution::new(&weights, (1, 1), (0, 0)).unwrap();
+        let mut ws = Workspace::new();
+        let input = Tensor::randn(&[1, 12, 10, 8], 60);
+        let _ = valid.run_with_workspace(&input, None, &mut ws).unwrap();
+        assert_eq!(ws.grow_count(), 0, "valid layers read the input in place");
+        assert_eq!(valid.workspace_elems_for(1, 12, 10).unwrap(), 0);
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let w33 = Tensor::zeros(&[4, 3, 3, 1]);
+        // Non-3×3 / non-depthwise weight shapes.
+        assert!(DepthwiseConvolution::new(&Tensor::zeros(&[4, 5, 5, 1]), (1, 1), (2, 2)).is_err());
+        assert!(DepthwiseConvolution::new(&Tensor::zeros(&[4, 3, 3, 2]), (1, 1), (1, 1)).is_err());
+        // Unsupported strides.
+        assert!(DepthwiseConvolution::new(&w33, (1, 2), (0, 0)).is_err());
+        assert!(DepthwiseConvolution::new(&w33, (3, 3), (0, 0)).is_err());
+        let conv = DepthwiseConvolution::new(&w33, (1, 1), (0, 0)).unwrap();
+        let mut ws = Workspace::new();
+        // Channel mismatch.
+        let bad_c = Tensor::zeros(&[1, 8, 8, 5]);
+        assert!(conv.run(&bad_c, None).is_err());
+        // Too-small input.
+        assert!(conv.run(&Tensor::zeros(&[1, 2, 2, 4]), None).is_err());
+        // Wrong bias length and wrong output slice size.
+        let input = Tensor::zeros(&[1, 8, 8, 4]);
+        let mut out = vec![0.0; 6 * 6 * 4];
+        assert!(conv
+            .run_fused_into(&input.view(), None, Some(&[0.0; 3]), Activation::None, &mut ws, &mut out)
+            .is_err());
+        assert!(conv
+            .run_fused_into(&input.view(), None, None, Activation::None, &mut ws, &mut out[1..])
+            .is_err());
+    }
+
+    /// Hand-computed 3×3: all-ones input and taps, single channel.
+    #[test]
+    fn hand_computed_values() {
+        let input = Tensor::full(&[1, 3, 3, 1], 1.0);
+        let weights = Tensor::full(&[1, 3, 3, 1], 1.0);
+        let conv = DepthwiseConvolution::new(&weights, (1, 1), (0, 0)).unwrap();
+        let out = conv.run(&input, None).unwrap();
+        assert_eq!(out.shape(), &[1, 1, 1, 1]);
+        assert_eq!(out.data()[0], 9.0);
+        // Same-padded: corners see 4 taps, edges 6, centre 9.
+        let conv = DepthwiseConvolution::new(&weights, (1, 1), (1, 1)).unwrap();
+        let out = conv.run(&input, None).unwrap();
+        assert_eq!(out.shape(), &[1, 3, 3, 1]);
+        assert_eq!(out.at4(0, 0, 0, 0), 4.0);
+        assert_eq!(out.at4(0, 0, 1, 0), 6.0);
+        assert_eq!(out.at4(0, 1, 1, 0), 9.0);
+        // Stride 2 over 7×7 valid → 3×3 outputs.
+        let input = Tensor::randn(&[1, 7, 7, 1], 1);
+        let conv = DepthwiseConvolution::new(&weights, (2, 2), (0, 0)).unwrap();
+        assert_eq!(conv.run(&input, None).unwrap().shape(), &[1, 3, 3, 1]);
+    }
+}

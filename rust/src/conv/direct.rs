@@ -2,18 +2,25 @@
 //! validated against. Seven nested loops, no tricks; the innermost loop runs
 //! over NHWC channels so it is at least cache-coherent, but this path is for
 //! tests, tiny problems and the bench baselines, not production.
+//!
+//! The grouped entry points ([`direct_conv2d_grouped`],
+//! [`direct_conv2d_grouped_into`]) generalise the same loops to grouped
+//! convolution (`[M, KH, KW, C/groups]` weights): they are the oracle the
+//! direct depthwise engine ([`crate::conv::depthwise`]) is property-tested
+//! against, and the fallback the selector routes exotic grouped shapes to.
 
 use crate::tensor::{Tensor, TensorView};
 use crate::{bail_shape, Result};
 
-/// Validate input/weight shapes, stride and padding, and derive the output
-/// spatial extents — the single copy of the direct-conv geometry both entry
-/// points share.
+/// Validate input/weight shapes, stride, padding and grouping, and derive
+/// the output spatial extents — the single copy of the direct-conv geometry
+/// every entry point shares. Grouped weights are `[M, KH, KW, C/groups]`.
 fn checked_out_hw(
     input_shape: &[usize],
     weights: &Tensor,
     stride: (usize, usize),
     pad: (usize, usize),
+    groups: usize,
 ) -> Result<(usize, usize)> {
     if input_shape.len() != 4 || weights.rank() != 4 {
         bail_shape!(
@@ -23,9 +30,17 @@ fn checked_out_hw(
         );
     }
     let (h, w, c) = (input_shape[1], input_shape[2], input_shape[3]);
-    let (kh, kw, wc) = (weights.shape()[1], weights.shape()[2], weights.shape()[3]);
-    if wc != c {
-        bail_shape!("channel mismatch: input {c}, weights {wc}");
+    let (m, kh, kw, wc) = (
+        weights.shape()[0],
+        weights.shape()[1],
+        weights.shape()[2],
+        weights.shape()[3],
+    );
+    if groups == 0 || c % groups != 0 || m % groups != 0 {
+        bail_shape!("groups {groups} does not divide C={c} / M={m}");
+    }
+    if wc != c / groups {
+        bail_shape!("channel mismatch: input C/groups {}, weights {wc}", c / groups);
     }
     let (sh, sw) = stride;
     let (ph, pw) = pad;
@@ -47,9 +62,23 @@ pub fn direct_conv2d(
     stride: (usize, usize),
     pad: (usize, usize),
 ) -> Result<Tensor> {
-    let (oh, ow) = checked_out_hw(input.shape(), weights, stride, pad)?;
+    direct_conv2d_grouped(input, weights, stride, pad, 1)
+}
+
+/// Grouped direct convolution: input channels are split into `groups`
+/// equal slices, weights are `[M, KH, KW, C/groups]`, and output channel
+/// `m` convolves input slice `m / (M/groups)`. `groups == 1` is the dense
+/// case, `groups == C == M` the depthwise case.
+pub fn direct_conv2d_grouped(
+    input: &Tensor,
+    weights: &Tensor,
+    stride: (usize, usize),
+    pad: (usize, usize),
+    groups: usize,
+) -> Result<Tensor> {
+    let (oh, ow) = checked_out_hw(input.shape(), weights, stride, pad, groups)?;
     let mut out = Tensor::zeros(&[input.shape()[0], oh, ow, weights.shape()[0]]);
-    direct_conv2d_into(&input.view(), weights, stride, pad, out.data_mut())?;
+    direct_conv2d_grouped_into(&input.view(), weights, stride, pad, groups, out.data_mut())?;
     Ok(out)
 }
 
@@ -63,7 +92,20 @@ pub fn direct_conv2d_into(
     pad: (usize, usize),
     out: &mut [f32],
 ) -> Result<()> {
-    let (oh, ow) = checked_out_hw(input.shape(), weights, stride, pad)?;
+    direct_conv2d_grouped_into(input, weights, stride, pad, 1, out)
+}
+
+/// [`direct_conv2d_grouped`] writing into a caller-provided `N·OH·OW·M`
+/// slice (fully overwritten — dirty arena memory is fine).
+pub fn direct_conv2d_grouped_into(
+    input: &TensorView,
+    weights: &Tensor,
+    stride: (usize, usize),
+    pad: (usize, usize),
+    groups: usize,
+    out: &mut [f32],
+) -> Result<()> {
+    let (oh, ow) = checked_out_hw(input.shape(), weights, stride, pad, groups)?;
     let (n, h, w, c) = (
         input.shape()[0],
         input.shape()[1],
@@ -76,11 +118,14 @@ pub fn direct_conv2d_into(
     if out.len() != n * oh * ow * m {
         bail_shape!("output slice has {} elems, conv writes {}", out.len(), n * oh * ow * m);
     }
+    let cg = c / groups; // input channels per group
+    let mg = m / groups; // output channels per group
 
     for b in 0..n {
         for oy in 0..oh {
             for ox in 0..ow {
                 for mi in 0..m {
+                    let c0 = (mi / mg) * cg; // first input channel of mi's group
                     let mut acc = 0.0f32;
                     for a in 0..kh {
                         let iy = (oy * sh + a) as isize - ph as isize;
@@ -93,8 +138,8 @@ pub fn direct_conv2d_into(
                                 continue;
                             }
                             let px = input.pixel(b, iy as usize, ix as usize);
-                            for ch in 0..c {
-                                acc += px[ch] * weights.at4(mi, a, bx, ch);
+                            for ch in 0..cg {
+                                acc += px[c0 + ch] * weights.at4(mi, a, bx, ch);
                             }
                         }
                     }
@@ -186,6 +231,39 @@ mod tests {
     #[test]
     fn flops_formula() {
         assert_eq!(conv_flops(1, 2, 2, 3, 3, 4, 5), 2 * 2 * 2 * 9 * 4 * 5);
+    }
+
+    /// Grouped == dense when groups = 1; depthwise (groups = C = M) equals
+    /// per-channel 2-D correlation computed by hand on a tiny case.
+    #[test]
+    fn grouped_matches_dense_and_hand_depthwise() {
+        // groups = 1 reduces to the dense oracle.
+        let input = Tensor::randn(&[1, 5, 6, 4], 31);
+        let w = Tensor::randn(&[6, 3, 3, 4], 32);
+        let dense = direct_conv2d(&input, &w, (1, 1), (1, 1)).unwrap();
+        let grouped = direct_conv2d_grouped(&input, &w, (1, 1), (1, 1), 1).unwrap();
+        assert_eq!(dense, grouped);
+
+        // Depthwise: 2 channels, 1×1 taps scale each channel independently.
+        let mut input = Tensor::zeros(&[1, 1, 1, 2]);
+        input.data_mut().copy_from_slice(&[3.0, 5.0]);
+        let mut w = Tensor::zeros(&[2, 1, 1, 1]);
+        w.data_mut().copy_from_slice(&[2.0, 10.0]);
+        let out = direct_conv2d_grouped(&input, &w, (1, 1), (0, 0), 2).unwrap();
+        assert_eq!(out.data(), &[6.0, 50.0]);
+
+        // Grouped with 2 groups of 2 channels: group sums stay separate.
+        let input = Tensor::from_vec(&[1, 1, 1, 4], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let w = Tensor::from_vec(&[2, 1, 1, 2], vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let out = direct_conv2d_grouped(&input, &w, (1, 1), (0, 0), 2).unwrap();
+        assert_eq!(out.data(), &[3.0, 7.0]);
+
+        // Bad group configs are rejected.
+        let input = Tensor::zeros(&[1, 4, 4, 4]);
+        let w = Tensor::zeros(&[4, 3, 3, 2]);
+        assert!(direct_conv2d_grouped(&input, &w, (1, 1), (1, 1), 3).is_err());
+        assert!(direct_conv2d_grouped(&input, &w, (1, 1), (1, 1), 4).is_err()); // wc != c/g
+        assert!(direct_conv2d_grouped(&input, &w, (1, 1), (1, 1), 0).is_err());
     }
 
     /// The write-into oracle matches the allocating wrapper bit-for-bit on

@@ -1,30 +1,41 @@
 //! Public convolution API: one descriptor, pluggable algorithms, plus the
 //! per-layer selection heuristic (§3.2 of the paper: "layers suitable for
-//! Winograd-based acceleration use our scheme, the rest use im2row").
+//! Winograd-based acceleration use our scheme, the rest use im2row" —
+//! extended with the direct depthwise engine for grouped layers, where the
+//! paper's C·M amortization argument does not apply).
 
+pub mod depthwise;
 pub mod direct;
 pub mod select;
 
-pub use select::select_algorithm;
+pub use select::{select_algorithm, select_algorithm_spatial};
+
+/// Fused pointwise activation (none / ReLU / ReLU6) — defined next to the
+/// GEMM epilogues that apply it, re-exported here for descriptor use.
+pub use crate::gemm::Activation;
 
 use crate::im2row::Im2RowConvolution;
 use crate::parallel::ThreadPool;
 use crate::tensor::Tensor;
 use crate::winograd::{WinogradConvolution, WinogradVariant};
 use crate::workspace::Workspace;
-use crate::{bail_unsupported, Result};
-use select::select_variant_spatial;
+use crate::{bail_shape, bail_unsupported, Result};
+use depthwise::DepthwiseConvolution;
 
 /// Which implementation executes a convolution layer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ConvAlgorithm {
-    /// Naive oracle (tests / tiny shapes).
+    /// Naive oracle (tests / tiny shapes / exotic grouped fallback).
     Direct,
+    /// Direct register-tiled SIMD depthwise engine
+    /// ([`depthwise::DepthwiseConvolution`]) — 3×3 layers with
+    /// `groups == cin == cout` at stride 1 or 2.
+    DirectDepthwise,
     /// Classical im2row + single GEMM (the paper's baseline).
     Im2Row,
     /// Region-wise multi-channel Winograd with an explicit variant.
     Winograd(WinogradVariant),
-    /// Pick automatically per layer shape ([`select_algorithm`]).
+    /// Pick automatically per layer shape ([`select_algorithm_spatial`]).
     Auto,
 }
 
@@ -32,6 +43,7 @@ impl std::fmt::Display for ConvAlgorithm {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             ConvAlgorithm::Direct => write!(f, "direct"),
+            ConvAlgorithm::DirectDepthwise => write!(f, "depthwise"),
             ConvAlgorithm::Im2Row => write!(f, "im2row"),
             ConvAlgorithm::Winograd(v) => write!(f, "winograd-{v}"),
             ConvAlgorithm::Auto => write!(f, "auto"),
@@ -50,21 +62,21 @@ impl ConvAlgorithm {
 /// exactly once, already biased/activated).
 ///
 /// Consulted by the `Conv2d::run*` family only. Graph nodes
-/// ([`crate::nn::Op::Conv`]) carry bias/relu directly on the op, and
+/// ([`crate::nn::Op::Conv`]) carry bias/activation directly on the op, and
 /// `PreparedModel::prepare` rejects a non-noop descriptor epilogue to keep
 /// a single source of truth.
 #[derive(Debug, Clone, Default)]
 pub struct ConvEpilogue {
     /// Per-output-channel bias (length `cout`), added in the epilogue.
     pub bias: Option<Vec<f32>>,
-    /// Clamp at zero after the bias.
-    pub relu: bool,
+    /// Activation applied after the bias (ReLU, or MobileNet's ReLU6).
+    pub act: Activation,
 }
 
 impl ConvEpilogue {
     /// Does this descriptor do anything at all?
     pub fn is_noop(&self) -> bool {
-        self.bias.is_none() && !self.relu
+        self.bias.is_none() && self.act.is_none()
     }
 }
 
@@ -91,15 +103,19 @@ pub struct Conv2d {
     pub stride: (usize, usize),
     /// Symmetric zero padding `(ph, pw)`.
     pub padding: (usize, usize),
+    /// Channel groups (1 = dense; `groups == cin == cout` = depthwise).
+    /// Weights carry `cin / groups` channels: `[M, KH, KW, C/groups]`.
+    pub groups: usize,
     /// Algorithm choice (default [`ConvAlgorithm::Auto`]).
     pub algorithm: ConvAlgorithm,
-    /// Fused bias/ReLU descriptor (default: none) — executed inside the
-    /// GEMM epilogue on every algorithm path.
+    /// Fused bias/activation descriptor (default: none) — executed inside
+    /// the GEMM epilogue on every algorithm path.
     pub epilogue: ConvEpilogue,
 }
 
 impl Conv2d {
-    /// New stride-1, unpadded, auto-algorithm layer with no fused epilogue.
+    /// New stride-1, unpadded, dense, auto-algorithm layer with no fused
+    /// epilogue.
     pub fn new(cin: usize, cout: usize, kernel: (usize, usize)) -> Conv2d {
         Conv2d {
             cin,
@@ -107,6 +123,7 @@ impl Conv2d {
             kernel,
             stride: (1, 1),
             padding: (0, 0),
+            groups: 1,
             algorithm: ConvAlgorithm::Auto,
             epilogue: ConvEpilogue::default(),
         }
@@ -121,6 +138,13 @@ impl Conv2d {
     /// Builder: set the padding.
     pub fn with_padding(mut self, padding: (usize, usize)) -> Conv2d {
         self.padding = padding;
+        self
+    }
+
+    /// Builder: set the channel grouping (`groups == cin == cout` makes the
+    /// layer depthwise; weights then carry `cin / groups` channels each).
+    pub fn with_groups(mut self, groups: usize) -> Conv2d {
+        self.groups = groups;
         self
     }
 
@@ -139,14 +163,22 @@ impl Conv2d {
 
     /// Builder: fuse a ReLU (after any bias) into the conv's epilogue.
     pub fn with_relu(mut self, relu: bool) -> Conv2d {
-        self.epilogue.relu = relu;
+        self.epilogue.act = Activation::from_relu(relu);
         self
     }
 
-    /// Deterministic He-style random weights `[M, KH, KW, C]`.
+    /// Builder: fuse an arbitrary activation (ReLU / ReLU6) into the
+    /// conv's epilogue.
+    pub fn with_activation(mut self, act: Activation) -> Conv2d {
+        self.epilogue.act = act;
+        self
+    }
+
+    /// Deterministic He-style random weights `[M, KH, KW, C/groups]`.
     pub fn random_weights(&self, seed: u64) -> Tensor {
-        let fan_in = (self.kernel.0 * self.kernel.1 * self.cin) as f32;
-        let mut w = Tensor::randn(&[self.cout, self.kernel.0, self.kernel.1, self.cin], seed);
+        let cg = self.cin / self.groups.max(1);
+        let fan_in = (self.kernel.0 * self.kernel.1 * cg) as f32;
+        let mut w = Tensor::randn(&[self.cout, self.kernel.0, self.kernel.1, cg], seed);
         let scale = (2.0 / fan_in).sqrt();
         for v in w.data_mut() {
             *v *= scale;
@@ -155,34 +187,47 @@ impl Conv2d {
     }
 
     /// Resolve [`ConvAlgorithm::Auto`] for this layer shape, without input
-    /// shape information (channel/kernel/stride heuristics only). Prefer
+    /// shape information (channel/kernel/stride/group heuristics only, via
+    /// the unified chooser). Prefer
     /// [`resolved_algorithm_for`](Self::resolved_algorithm_for) when the
     /// input shape is known — small feature maps then get the 2×2-tile
     /// variant instead of wasting partial 4×4 tiles.
     pub fn resolved_algorithm(&self) -> ConvAlgorithm {
         match self.algorithm {
-            ConvAlgorithm::Auto => select_algorithm(self.kernel, self.stride, self.cin, self.cout),
+            ConvAlgorithm::Auto => select_algorithm_spatial(
+                self.kernel,
+                self.stride,
+                self.groups,
+                self.cin,
+                self.cout,
+                None,
+            ),
             a => a,
         }
     }
 
     /// Resolve [`ConvAlgorithm::Auto`] with the input shape in hand: the
-    /// channel/stride heuristics of [`select_algorithm`] pick the family,
-    /// then [`select_variant_spatial`] refines the Winograd variant by the
-    /// output extent (the paper's partial-tile argument). This is what
-    /// [`run_with`](Self::run_with) and the prepared-model binder use.
+    /// single spatial-aware chooser ([`select_algorithm_spatial`]) sees the
+    /// output extent, so small maps refine the Winograd variant by the
+    /// paper's partial-tile argument. This is what [`run_with`](Self::run_with)
+    /// and the prepared-model binder use — run path and zoo path can no
+    /// longer disagree on the variant.
     pub fn resolved_algorithm_for(&self, input_shape: &[usize]) -> ConvAlgorithm {
-        let base = self.resolved_algorithm();
-        match base {
-            ConvAlgorithm::Winograd(_) if self.algorithm == ConvAlgorithm::Auto => {
-                match self.output_shape(input_shape) {
-                    Ok(out) => match select_variant_spatial(self.kernel, out[1], out[2]) {
-                        Some(v) => ConvAlgorithm::Winograd(v),
-                        None => base,
-                    },
+        match self.algorithm {
+            ConvAlgorithm::Auto => {
+                let out_hw = match self.output_shape(input_shape) {
+                    Ok(out) => Some((out[1], out[2])),
                     // Bad shapes fail properly at run time.
-                    Err(_) => base,
-                }
+                    Err(_) => None,
+                };
+                select_algorithm_spatial(
+                    self.kernel,
+                    self.stride,
+                    self.groups,
+                    self.cin,
+                    self.cout,
+                    out_hw,
+                )
             }
             a => a,
         }
@@ -207,10 +252,11 @@ impl Conv2d {
     /// [`run_with`](Self::run_with) drawing all layer scratch from a
     /// caller-owned arena (see [`crate::workspace`]).
     ///
-    /// The layer's [`ConvEpilogue`] (bias/ReLU) executes fused on every
-    /// path: inside the GEMM epilogue for im2row, inside the gather
-    /// epilogue for Winograd, and as a post pass only on the `Direct`
-    /// oracle (which has no GEMM to fuse into).
+    /// The layer's [`ConvEpilogue`] (bias/activation) executes fused on
+    /// every fast path: inside the GEMM epilogue for im2row, inside the
+    /// gather epilogue for Winograd, in-register for the depthwise engine,
+    /// and as a post pass only on the `Direct` oracle (which has no fused
+    /// pipeline).
     pub fn run_with_workspace(
         &self,
         input: &Tensor,
@@ -218,27 +264,64 @@ impl Conv2d {
         pool: Option<&ThreadPool>,
         ws: &mut Workspace,
     ) -> Result<Tensor> {
+        if self.groups == 0 || self.cin % self.groups != 0 || self.cout % self.groups != 0 {
+            bail_shape!(
+                "groups {} does not divide cin {} / cout {}",
+                self.groups,
+                self.cin,
+                self.cout
+            );
+        }
         let bias = self.epilogue.bias.as_deref();
         if let Some(b) = bias {
             if b.len() != self.cout {
                 crate::bail_shape!("bias length {} vs {} output channels", b.len(), self.cout);
             }
         }
-        let relu = self.epilogue.relu;
+        let act = self.epilogue.act;
         match self.resolved_algorithm_for(input.shape()) {
             ConvAlgorithm::Direct => {
-                let mut y = direct::direct_conv2d(input, weights, self.stride, self.padding)?;
-                apply_bias_relu(&mut y, bias, relu)?;
+                let mut y = direct::direct_conv2d_grouped(
+                    input,
+                    weights,
+                    self.stride,
+                    self.padding,
+                    self.groups,
+                )?;
+                apply_bias_act(&mut y, bias, act)?;
                 Ok(y)
             }
-            ConvAlgorithm::Im2Row => Im2RowConvolution::new(weights, self.stride, self.padding)?
-                .run_fused_with(input, pool, bias, relu, ws),
+            ConvAlgorithm::DirectDepthwise => {
+                if self.groups != self.cin || self.groups != self.cout {
+                    bail_unsupported!(
+                        "depthwise engine requires groups == cin == cout, layer has {}/{}/{}",
+                        self.groups,
+                        self.cin,
+                        self.cout
+                    );
+                }
+                DepthwiseConvolution::new(weights, self.stride, self.padding)?
+                    .run_fused_with(input, pool, bias, act, ws)
+            }
+            ConvAlgorithm::Im2Row => {
+                if self.groups != 1 {
+                    bail_unsupported!("im2row path is dense-only, layer has {} groups", self.groups);
+                }
+                Im2RowConvolution::new(weights, self.stride, self.padding)?
+                    .run_fused_with(input, pool, bias, act, ws)
+            }
             ConvAlgorithm::Winograd(v) => {
+                if self.groups != 1 {
+                    bail_unsupported!(
+                        "Winograd path is dense-only, layer has {} groups",
+                        self.groups
+                    );
+                }
                 if self.stride != (1, 1) {
                     bail_unsupported!("Winograd requires stride 1, layer has {:?}", self.stride);
                 }
                 WinogradConvolution::new(v, weights, self.padding)?
-                    .run_fused_with(input, pool, bias, relu, ws)
+                    .run_fused_with(input, pool, bias, act, ws)
             }
             ConvAlgorithm::Auto => unreachable!("resolved above"),
         }
@@ -261,26 +344,31 @@ impl Conv2d {
         ])
     }
 
-    /// FLOPs for one inference through this layer on `input` shape.
+    /// FLOPs for one inference through this layer on `input` shape — each
+    /// output channel convolves `cin / groups` input channels.
     pub fn flops(&self, input: &[usize]) -> Result<usize> {
         let out = self.output_shape(input)?;
         Ok(direct::conv_flops(
-            out[0], out[1], out[2], self.kernel.0, self.kernel.1, self.cin, self.cout,
+            out[0],
+            out[1],
+            out[2],
+            self.kernel.0,
+            self.kernel.1,
+            self.cin / self.groups.max(1),
+            self.cout,
         ))
     }
 }
 
-/// Post-pass bias/ReLU for the `Direct` oracle path. The GEMM-backed paths
-/// never call this — their epilogues fuse it. Delegates to the shared
-/// [`crate::nn::ops`] helpers so the oracle semantics have one source of
-/// truth.
-fn apply_bias_relu(t: &mut Tensor, bias: Option<&[f32]>, relu: bool) -> Result<()> {
+/// Post-pass bias/activation for the `Direct` oracle path. The fused paths
+/// never call this — their epilogues apply it in-flight. Delegates to the
+/// shared [`crate::nn::ops`] helpers so the oracle semantics have one
+/// source of truth.
+fn apply_bias_act(t: &mut Tensor, bias: Option<&[f32]>, act: Activation) -> Result<()> {
     match bias {
-        Some(b) => crate::nn::ops::bias_relu_inplace(t, b, relu),
+        Some(b) => crate::nn::ops::bias_act_inplace(t, b, act),
         None => {
-            if relu {
-                crate::nn::ops::relu_inplace(t);
-            }
+            crate::nn::ops::act_inplace(t, act);
             Ok(())
         }
     }
@@ -311,36 +399,86 @@ mod tests {
         }
     }
 
-    /// The fused bias/ReLU descriptor must produce identical results on
-    /// every algorithm path (direct applies it as a post pass; im2row and
-    /// Winograd fuse it into their GEMM epilogues).
+    /// The fused bias/activation descriptor must produce identical results
+    /// on every algorithm path (direct applies it as a post pass; im2row
+    /// and Winograd fuse it into their GEMM epilogues) — for both ReLU and
+    /// ReLU6.
     #[test]
     fn epilogue_descriptor_agrees_across_algorithms() {
-        let bias: Vec<f32> = (0..8).map(|i| i as f32 * 0.4 - 1.2).collect();
-        let conv = Conv2d::new(4, 8, (3, 3))
-            .with_padding((1, 1))
-            .with_bias(bias)
-            .with_relu(true);
-        let x = Tensor::randn(&[1, 10, 10, 4], 21);
-        let w = conv.random_weights(22);
-        let direct = conv
-            .clone()
-            .with_algorithm(ConvAlgorithm::Direct)
-            .run(&x, &w)
-            .unwrap();
-        // ReLU clamps must actually fire somewhere for this to test fusion.
-        assert!(direct.data().iter().any(|&v| v == 0.0));
-        for alg in [
-            ConvAlgorithm::Im2Row,
-            ConvAlgorithm::Winograd(WinogradVariant::F2x2_3x3),
-            ConvAlgorithm::Winograd(WinogradVariant::F4x4_3x3),
-            ConvAlgorithm::Auto,
-        ] {
-            let got = conv.clone().with_algorithm(alg).run(&x, &w).unwrap();
-            assert!(got.allclose(&direct, 5e-4), "algorithm {alg} disagrees");
+        for act in [Activation::Relu, Activation::Relu6] {
+            let bias: Vec<f32> = (0..8).map(|i| i as f32 * 1.2 - 1.2).collect();
+            let conv = Conv2d::new(4, 8, (3, 3))
+                .with_padding((1, 1))
+                .with_bias(bias)
+                .with_activation(act);
+            let x = Tensor::randn(&[1, 10, 10, 4], 21);
+            let w = conv.random_weights(22);
+            let direct = conv
+                .clone()
+                .with_algorithm(ConvAlgorithm::Direct)
+                .run(&x, &w)
+                .unwrap();
+            // Both clamps must actually fire somewhere for this to test
+            // fusion (the large bias spread guarantees > 6 pre-activation
+            // values for the ReLU6 case).
+            assert!(direct.data().iter().any(|&v| v == 0.0));
+            if act == Activation::Relu6 {
+                assert!(direct.data().iter().any(|&v| v == 6.0));
+                assert!(direct.data().iter().all(|&v| v <= 6.0));
+            }
+            for alg in [
+                ConvAlgorithm::Im2Row,
+                ConvAlgorithm::Winograd(WinogradVariant::F2x2_3x3),
+                ConvAlgorithm::Winograd(WinogradVariant::F4x4_3x3),
+                ConvAlgorithm::Auto,
+            ] {
+                let got = conv.clone().with_algorithm(alg).run(&x, &w).unwrap();
+                assert!(got.allclose(&direct, 5e-4), "algorithm {alg} ({act}) disagrees");
+            }
+            // A wrong-length bias is rejected on every path.
+            let bad = conv.clone().with_bias(vec![0.0; 3]);
+            assert!(bad.run(&x, &w).is_err());
         }
-        // A wrong-length bias is rejected on every path.
-        let bad = conv.clone().with_bias(vec![0.0; 3]);
+    }
+
+    /// A depthwise descriptor auto-routes to the depthwise engine and
+    /// agrees with the grouped direct oracle, epilogue included.
+    #[test]
+    fn depthwise_descriptor_routes_and_agrees() {
+        let c = 10;
+        let bias: Vec<f32> = (0..c).map(|i| i as f32 * 0.3 - 1.0).collect();
+        for stride in [(1, 1), (2, 2)] {
+            let conv = Conv2d::new(c, c, (3, 3))
+                .with_groups(c)
+                .with_stride(stride)
+                .with_padding((1, 1))
+                .with_bias(bias.clone())
+                .with_activation(Activation::Relu6);
+            assert_eq!(
+                conv.resolved_algorithm_for(&[1, 12, 12, c]),
+                ConvAlgorithm::DirectDepthwise
+            );
+            let x = Tensor::randn(&[1, 12, 12, c], 5);
+            let w = conv.random_weights(6);
+            assert_eq!(w.shape(), &[c, 3, 3, 1]);
+            let got = conv.run(&x, &w).unwrap();
+            let want = conv
+                .clone()
+                .with_algorithm(ConvAlgorithm::Direct)
+                .run(&x, &w)
+                .unwrap();
+            assert!(got.allclose(&want, 5e-4), "depthwise stride {stride:?} disagrees");
+        }
+        // A grouped-but-not-depthwise layer falls back to the grouped
+        // direct oracle and still runs.
+        let conv = Conv2d::new(8, 16, (3, 3)).with_groups(4).with_padding((1, 1));
+        assert_eq!(conv.resolved_algorithm(), ConvAlgorithm::Direct);
+        let x = Tensor::randn(&[1, 6, 6, 8], 7);
+        let w = conv.random_weights(8);
+        assert_eq!(w.shape(), &[16, 3, 3, 2]);
+        assert_eq!(conv.run(&x, &w).unwrap().shape(), &[1, 6, 6, 16]);
+        // Invalid grouping is rejected.
+        let bad = Conv2d::new(8, 16, (3, 3)).with_groups(3);
         assert!(bad.run(&x, &w).is_err());
     }
 
@@ -356,13 +494,16 @@ mod tests {
 
     #[test]
     fn auto_resolves_per_shape() {
-        // 3×3 s1 → Winograd; 3×3 s2 → im2row; 1×1 → im2row.
+        // 3×3 s1 → Winograd; 3×3 s2 → im2row; 1×1 → im2row; depthwise →
+        // the depthwise engine.
         let a = Conv2d::new(16, 16, (3, 3)).resolved_algorithm();
         assert!(matches!(a, ConvAlgorithm::Winograd(_)));
         let a = Conv2d::new(16, 16, (3, 3)).with_stride((2, 2)).resolved_algorithm();
         assert_eq!(a, ConvAlgorithm::Im2Row);
         let a = Conv2d::new(16, 16, (1, 1)).resolved_algorithm();
         assert_eq!(a, ConvAlgorithm::Im2Row);
+        let a = Conv2d::new(16, 16, (3, 3)).with_groups(16).resolved_algorithm();
+        assert_eq!(a, ConvAlgorithm::DirectDepthwise);
     }
 
     #[test]
@@ -419,6 +560,9 @@ mod tests {
         );
         let unpadded = Conv2d::new(3, 8, (3, 3));
         assert!(unpadded.output_shape(&[1, 1, 1, 3]).is_err());
+        // Depthwise FLOPs: one input channel per output channel.
+        let dw = Conv2d::new(8, 8, (3, 3)).with_groups(8).with_padding((1, 1));
+        assert_eq!(dw.flops(&[1, 8, 8, 8]).unwrap(), 2 * 8 * 8 * 9 * 8);
     }
 
     #[test]

@@ -1,12 +1,34 @@
 //! Per-layer algorithm selection — the policy behind the paper's
-//! "Winograd-suitable layers" split (§3.2).
+//! "Winograd-suitable layers" split (§3.2), extended with the direct
+//! depthwise engine for the MobileNet workload class.
 //!
-//! Suitability rules distilled from the paper:
+//! **One chooser.** Every caller — `Conv2d::run*`, the prepared-model
+//! binder, the zoo benches — resolves through [`select_algorithm_spatial`],
+//! which sees the kernel, stride, grouping, channel counts **and** (when
+//! known) the output spatial extent. The historical split where
+//! [`select_algorithm`] ignored spatial extent while the zoo path refined
+//! variants through [`select_variant_spatial`] meant the run path could
+//! pick `F(4×4, 3×3)` on a map where the zoo path would pick
+//! `F(2×2, 3×3)`; both now route through the same spatial-aware logic
+//! ([`select_algorithm`] is the `out_hw = None` shorthand kept for
+//! shape-only callers, and documents that it returns the *family default*
+//! variant which the spatial pass may refine).
+//!
+//! Suitability rules distilled from the paper (and its depthwise follow-ups
+//! — Zhang et al. 2020, Hao et al. 2022):
+//! * **Grouped layers first**: Winograd's C·M amortization argument (§4)
+//!   collapses for grouped convolution (each group convolves only
+//!   `C/groups` input channels; for depthwise, exactly one), and im2row
+//!   degenerates into a memory-bound copy. A depthwise 3×3 layer
+//!   (`groups == cin == cout`) at stride 1 or 2 routes to the direct
+//!   register-tiled SIMD engine ([`crate::conv::depthwise`]); any other
+//!   grouped shape falls back to the naive grouped direct path (correct,
+//!   never fast — no evaluated network ships one).
 //! * Winograd/Cook-Toom requires **stride 1** (the tiling assumes dense
 //!   output coverage).
 //! * `3×3` layers get `F(4×4, 3×3)` — the biggest measured win (2.2–3.1×
-//!   average in Table 2) — unless the spatial extent is too small for 4×4
-//!   output tiles, where `F(2×2, 3×3)` wastes less on partial tiles.
+//!   average in Table 2) — unless the output extent is too small for 4×4
+//!   tiles, where `F(2×2, 3×3)` wastes less on partial tiles.
 //! * `5×5` layers get `F(2×2, 5×5)` (GoogleNet/Inception rows of Table 2).
 //! * `1×7`/`7×1` layers get the 1-D Cook-Toom **`F(4, 7)`** variants. The
 //!   paper ships `F(2, 7)` for its Inception-v3 rows (~2.0–2.1×), but the
@@ -28,28 +50,67 @@ use crate::winograd::WinogradVariant;
 /// `ablation_amortization` bench).
 pub const MIN_CHANNEL_PRODUCT: usize = 64;
 
-/// Choose the algorithm for a layer shape.
-pub fn select_algorithm(
+/// The single spatial-aware chooser every resolution path funnels through.
+///
+/// `out_hw` is the layer's output spatial extent when the caller knows the
+/// input shape (`Conv2d::resolved_algorithm_for`, the prepared-model
+/// binder); `None` falls back to the channel/kernel/stride heuristics with
+/// the family-default Winograd variant.
+pub fn select_algorithm_spatial(
     kernel: (usize, usize),
     stride: (usize, usize),
+    groups: usize,
     cin: usize,
     cout: usize,
+    out_hw: Option<(usize, usize)>,
 ) -> ConvAlgorithm {
+    if groups > 1 {
+        // Depthwise 3×3 at stride 1/2 → the direct register-tiled engine;
+        // exotic grouped shapes → the naive grouped oracle.
+        if groups == cin
+            && groups == cout
+            && kernel == (3, 3)
+            && (stride == (1, 1) || stride == (2, 2))
+        {
+            return ConvAlgorithm::DirectDepthwise;
+        }
+        return ConvAlgorithm::Direct;
+    }
     if stride != (1, 1) {
         return ConvAlgorithm::Im2Row;
     }
     if cin * cout < MIN_CHANNEL_PRODUCT {
         return ConvAlgorithm::Im2Row;
     }
-    match WinogradVariant::for_kernel(kernel.0, kernel.1) {
+    let variant = match out_hw {
+        Some((oh, ow)) => select_variant_spatial(kernel, oh, ow),
+        None => WinogradVariant::for_kernel(kernel.0, kernel.1),
+    };
+    match variant {
         Some(v) => ConvAlgorithm::Winograd(v),
         None => ConvAlgorithm::Im2Row,
     }
 }
 
+/// Shape-only shorthand for [`select_algorithm_spatial`] with
+/// `out_hw = None`: picks the algorithm family and the *default* variant.
+/// Callers that know the input shape should pass the output extent (or use
+/// [`Conv2d::resolved_algorithm_for`](super::Conv2d::resolved_algorithm_for))
+/// so small maps refine to the 2×2 tile.
+pub fn select_algorithm(
+    kernel: (usize, usize),
+    stride: (usize, usize),
+    groups: usize,
+    cin: usize,
+    cout: usize,
+) -> ConvAlgorithm {
+    select_algorithm_spatial(kernel, stride, groups, cin, cout, None)
+}
+
 /// Variant choice refined by spatial extent: small outputs prefer the 2×2
-/// tile (fewer wasted partial-tile lanes). Used by the model zoo where
-/// layer spatial sizes are known statically.
+/// tile (fewer wasted partial-tile lanes). The refinement step of
+/// [`select_algorithm_spatial`]; also used directly by the per-layer
+/// benches where the variant (not the family) is the question.
 pub fn select_variant_spatial(
     kernel: (usize, usize),
     out_h: usize,
@@ -68,9 +129,15 @@ pub fn select_variant_spatial(
 }
 
 /// True if the paper's scheme applies to the layer at all — the
-/// "fast layer" predicate used to split Table 1 / Figure 3.
-pub fn is_winograd_suitable(kernel: (usize, usize), stride: (usize, usize)) -> bool {
-    stride == (1, 1) && WinogradVariant::for_kernel(kernel.0, kernel.1).is_some()
+/// "fast layer" predicate used to split Table 1 / Figure 3. Grouped layers
+/// are never Winograd-suitable: with `C_group = C/groups` (1 for
+/// depthwise) the transform cost cannot amortise (§4).
+pub fn is_winograd_suitable(
+    kernel: (usize, usize),
+    stride: (usize, usize),
+    groups: usize,
+) -> bool {
+    groups == 1 && stride == (1, 1) && WinogradVariant::for_kernel(kernel.0, kernel.1).is_some()
 }
 
 #[cfg(test)]
@@ -80,39 +147,63 @@ mod tests {
     #[test]
     fn stride_forces_im2row() {
         assert_eq!(
-            select_algorithm((3, 3), (2, 2), 64, 64),
+            select_algorithm((3, 3), (2, 2), 1, 64, 64),
             ConvAlgorithm::Im2Row
         );
     }
 
     #[test]
     fn shallow_channels_force_im2row() {
-        assert_eq!(select_algorithm((3, 3), (1, 1), 3, 8), ConvAlgorithm::Im2Row);
+        assert_eq!(select_algorithm((3, 3), (1, 1), 1, 3, 8), ConvAlgorithm::Im2Row);
         assert!(matches!(
-            select_algorithm((3, 3), (1, 1), 64, 64),
+            select_algorithm((3, 3), (1, 1), 1, 64, 64),
             ConvAlgorithm::Winograd(_)
         ));
     }
 
     #[test]
+    fn depthwise_routes_to_direct_engine() {
+        // groups == cin == cout, 3×3, stride 1 or 2 → the depthwise engine.
+        assert_eq!(
+            select_algorithm((3, 3), (1, 1), 64, 64, 64),
+            ConvAlgorithm::DirectDepthwise
+        );
+        assert_eq!(
+            select_algorithm((3, 3), (2, 2), 64, 64, 64),
+            ConvAlgorithm::DirectDepthwise
+        );
+        // Channel count never disqualifies depthwise (no C·M argument).
+        assert_eq!(
+            select_algorithm((3, 3), (1, 1), 4, 4, 4),
+            ConvAlgorithm::DirectDepthwise
+        );
+        // Non-3×3 or channel-multiplier/grouped shapes → naive grouped.
+        assert_eq!(select_algorithm((5, 5), (1, 1), 8, 8, 8), ConvAlgorithm::Direct);
+        assert_eq!(select_algorithm((3, 3), (1, 1), 8, 8, 16), ConvAlgorithm::Direct);
+        assert_eq!(select_algorithm((3, 3), (1, 1), 4, 16, 16), ConvAlgorithm::Direct);
+        // Odd strides fall back too.
+        assert_eq!(select_algorithm((3, 3), (1, 2), 8, 8, 8), ConvAlgorithm::Direct);
+    }
+
+    #[test]
     fn kernel_shapes_route_to_expected_variants() {
         assert_eq!(
-            select_algorithm((5, 5), (1, 1), 32, 64),
+            select_algorithm((5, 5), (1, 1), 1, 32, 64),
             ConvAlgorithm::Winograd(WinogradVariant::F2x2_5x5)
         );
         // Policy (module doc + WinogradVariant::F4_1x7 doc): 1-D 7-tap
         // layers route to F(4, 7), not the paper's F(2, 7) — see
         // EXPERIMENTS.md §Perf step 5.
         assert_eq!(
-            select_algorithm((1, 7), (1, 1), 32, 64),
+            select_algorithm((1, 7), (1, 1), 1, 32, 64),
             ConvAlgorithm::Winograd(WinogradVariant::F4_1x7)
         );
         assert_eq!(
-            select_algorithm((7, 1), (1, 1), 32, 64),
+            select_algorithm((7, 1), (1, 1), 1, 32, 64),
             ConvAlgorithm::Winograd(WinogradVariant::F4_7x1)
         );
-        assert_eq!(select_algorithm((1, 1), (1, 1), 64, 64), ConvAlgorithm::Im2Row);
-        assert_eq!(select_algorithm((7, 7), (1, 1), 64, 64), ConvAlgorithm::Im2Row);
+        assert_eq!(select_algorithm((1, 1), (1, 1), 1, 64, 64), ConvAlgorithm::Im2Row);
+        assert_eq!(select_algorithm((7, 7), (1, 1), 1, 64, 64), ConvAlgorithm::Im2Row);
     }
 
     #[test]
@@ -131,12 +222,43 @@ mod tests {
         );
     }
 
+    /// The unified chooser applies the same spatial refinement the zoo path
+    /// historically applied — no more policy split with the run path.
+    #[test]
+    fn spatial_chooser_refines_where_shape_only_defaults() {
+        assert_eq!(
+            select_algorithm_spatial((3, 3), (1, 1), 1, 16, 16, Some((56, 56))),
+            ConvAlgorithm::Winograd(WinogradVariant::F4x4_3x3)
+        );
+        assert_eq!(
+            select_algorithm_spatial((3, 3), (1, 1), 1, 16, 16, Some((4, 4))),
+            ConvAlgorithm::Winograd(WinogradVariant::F2x2_3x3)
+        );
+        // Shape-only defaults to the 4×4 family variant.
+        assert_eq!(
+            select_algorithm((3, 3), (1, 1), 1, 16, 16),
+            ConvAlgorithm::Winograd(WinogradVariant::F4x4_3x3)
+        );
+        // Spatial info never overrides the grouped or strided rules.
+        assert_eq!(
+            select_algorithm_spatial((3, 3), (2, 2), 1, 64, 64, Some((56, 56))),
+            ConvAlgorithm::Im2Row
+        );
+        assert_eq!(
+            select_algorithm_spatial((3, 3), (1, 1), 64, 64, 64, Some((4, 4))),
+            ConvAlgorithm::DirectDepthwise
+        );
+    }
+
     #[test]
     fn suitability_predicate() {
-        assert!(is_winograd_suitable((3, 3), (1, 1)));
-        assert!(is_winograd_suitable((1, 7), (1, 1)));
-        assert!(!is_winograd_suitable((3, 3), (2, 2)));
-        assert!(!is_winograd_suitable((1, 1), (1, 1)));
-        assert!(!is_winograd_suitable((7, 7), (2, 2)));
+        assert!(is_winograd_suitable((3, 3), (1, 1), 1));
+        assert!(is_winograd_suitable((1, 7), (1, 1), 1));
+        assert!(!is_winograd_suitable((3, 3), (2, 2), 1));
+        assert!(!is_winograd_suitable((1, 1), (1, 1), 1));
+        assert!(!is_winograd_suitable((7, 7), (2, 2), 1));
+        // Depthwise/grouped 3×3 s1 is *not* a fast layer: C_group = 1.
+        assert!(!is_winograd_suitable((3, 3), (1, 1), 64));
+        assert!(!is_winograd_suitable((3, 3), (1, 1), 4));
     }
 }

@@ -139,6 +139,9 @@ impl InferenceEngine {
                                     model.fallback_count() as u64,
                                     (ws.grow_count() + acts.grow_count()) as u64,
                                 );
+                                // ... and which algorithm paths the batch's
+                                // conv layers actually dispatched to.
+                                metrics.record_dispatch_counts(model.dispatch_counts());
                             }
                         }
                     }
@@ -230,7 +233,7 @@ impl Drop for InferenceEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::conv::Conv2d;
+    use crate::conv::{Activation, Conv2d};
     use crate::nn::{Graph, Op, Scheme};
 
     /// A tiny but real model for engine tests.
@@ -241,7 +244,7 @@ mod tests {
         let w = desc.random_weights(1);
         let c = g.add(
             "conv",
-            Op::Conv { desc, weights: w, bias: vec![0.0; 16], relu: true },
+            Op::Conv { desc, weights: w, bias: vec![0.0; 16], act: Activation::Relu },
             &[input],
         );
         let gap = g.add("gap", Op::GlobalAvgPool, &[c]);
@@ -309,6 +312,10 @@ mod tests {
         assert_eq!(m.completed, 8);
         assert_eq!(m.arena_fallbacks, 0, "engine must never hit the run() fallback");
         assert_eq!(m.arena_grows, 0, "pre-sized worker arenas must never grow");
+        // Dispatch gauge: the tiny model's one conv is Winograd-bound, so
+        // 8 requests ⇒ 8 winograd dispatches and nothing else.
+        assert_eq!(m.dispatch.winograd, 8);
+        assert_eq!(m.dispatch.total(), 8);
         engine.shutdown();
     }
 

@@ -2,6 +2,7 @@
 //! snapshots (the numbers the paper's deployment claim — frames/sec on the
 //! big cluster — is made of).
 
+use crate::nn::DispatchCounts;
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -19,6 +20,7 @@ struct Inner {
     e2e_ns: Vec<u64>,
     arena_fallbacks: u64,
     arena_grows: u64,
+    dispatch: DispatchCounts,
 }
 
 /// Point-in-time view of the metrics.
@@ -46,6 +48,10 @@ pub struct MetricsSnapshot {
     /// arenas. Non-zero after warm-up means a steady-state-allocation
     /// regression.
     pub arena_grows: u64,
+    /// Per-algorithm conv dispatch totals (winograd / im2row / depthwise /
+    /// direct) — which execution paths the served traffic actually
+    /// exercised.
+    pub dispatch: DispatchCounts,
 }
 
 impl Default for ServerMetrics {
@@ -66,6 +72,7 @@ impl ServerMetrics {
                 e2e_ns: Vec::new(),
                 arena_fallbacks: 0,
                 arena_grows: 0,
+                dispatch: DispatchCounts::default(),
             }),
             started: Instant::now(),
         }
@@ -92,6 +99,13 @@ impl ServerMetrics {
         let mut m = self.inner.lock().unwrap();
         m.arena_fallbacks = fallbacks;
         m.arena_grows = grows;
+    }
+
+    /// Update the per-algorithm dispatch gauge (the model's running
+    /// [`DispatchCounts`] totals, reported once per batch like the arena
+    /// gauges).
+    pub fn record_dispatch_counts(&self, counts: DispatchCounts) {
+        self.inner.lock().unwrap().dispatch = counts;
     }
 
     /// Take a snapshot.
@@ -122,6 +136,7 @@ impl ServerMetrics {
             mean_queue_ms,
             arena_fallbacks: m.arena_fallbacks,
             arena_grows: m.arena_grows,
+            dispatch: m.dispatch,
         }
     }
 }
@@ -133,7 +148,7 @@ impl MetricsSnapshot {
             "requests: {} completed, {} rejected | throughput: {:.1} fps | \
              e2e ms p50/p90/p99: {:.2}/{:.2}/{:.2} | \
              compute ms p50/p90/p99: {:.2}/{:.2}/{:.2} | mean queue {:.2} ms | \
-             arena fallbacks/grows: {}/{}",
+             arena fallbacks/grows: {}/{} | dispatch: {}",
             self.completed,
             self.rejected,
             self.throughput_fps,
@@ -146,6 +161,7 @@ impl MetricsSnapshot {
             self.mean_queue_ms,
             self.arena_fallbacks,
             self.arena_grows,
+            self.dispatch,
         )
     }
 }
@@ -176,6 +192,7 @@ mod tests {
         assert_eq!(s.completed, 0);
         assert_eq!(s.e2e_ms, (0.0, 0.0, 0.0));
         assert_eq!((s.arena_fallbacks, s.arena_grows), (0, 0));
+        assert_eq!(s.dispatch.total(), 0);
         assert!(s.report().contains("0 completed"));
     }
 
@@ -188,5 +205,23 @@ mod tests {
         assert_eq!(s.arena_fallbacks, 2);
         assert_eq!(s.arena_grows, 3);
         assert!(s.report().contains("arena fallbacks/grows: 2/3"));
+    }
+
+    #[test]
+    fn dispatch_gauge_tracks_latest() {
+        let m = ServerMetrics::new();
+        m.record_dispatch_counts(DispatchCounts {
+            winograd: 4,
+            im2row: 7,
+            depthwise: 13,
+            direct: 0,
+        });
+        let s = m.snapshot();
+        assert_eq!(s.dispatch.winograd, 4);
+        assert_eq!(s.dispatch.depthwise, 13);
+        assert_eq!(s.dispatch.total(), 24);
+        assert!(s
+            .report()
+            .contains("dispatch: winograd 4 / im2row 7 / depthwise 13 / direct 0"));
     }
 }

@@ -10,10 +10,11 @@
 //! happens next:
 //!
 //! * [`Store`] — nothing: the plain GEMM.
-//! * [`BiasRelu`] — per-column bias add + optional ReLU. Both convolution
-//!   schemes put output channels in C's columns, so this one epilogue fuses
-//!   the conv bias/activation for im2row (C rows = output pixels) *and* any
-//!   plain prepacked GEMM.
+//! * [`BiasAct`] — per-column bias add + optional fused [`Activation`]
+//!   (ReLU or MobileNet's ReLU6). Both convolution schemes put output
+//!   channels in C's columns, so this one epilogue fuses the conv
+//!   bias/activation for im2row (C rows = output pixels) *and* any plain
+//!   prepacked GEMM.
 //! * the Winograd inverse-transform gather — implemented in
 //!   `winograd::convolve` against the batched driver
 //!   ([`super::BatchedGemm::run_packed_fused`]), which hands the epilogue a
@@ -24,6 +25,74 @@
 //! kernels win on mobile CPUs because data crosses the cache hierarchy
 //! once — outputs are written exactly once, already biased/activated/
 //! inverse-transformed.
+
+use crate::simd::F32x4;
+
+/// Fused pointwise activation applied by the conv epilogues (and the
+/// direct-path post passes) after the optional bias add.
+///
+/// Lives here — the lowest layer that applies it on the hot path — and is
+/// re-exported as `conv::Activation` for descriptor-level use. `Relu6` is
+/// the clamp MobileNet-family networks train with (`min(max(x, 0), 6)`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Activation {
+    /// Identity.
+    #[default]
+    None,
+    /// `max(x, 0)`.
+    Relu,
+    /// `min(max(x, 0), 6)` — MobileNet's clipped ReLU.
+    Relu6,
+}
+
+impl Activation {
+    /// Backwards-compatible constructor from the old `relu: bool` flags.
+    pub fn from_relu(relu: bool) -> Activation {
+        if relu {
+            Activation::Relu
+        } else {
+            Activation::None
+        }
+    }
+
+    /// Apply to one scalar.
+    #[inline(always)]
+    pub fn apply(self, v: f32) -> f32 {
+        match self {
+            Activation::None => v,
+            Activation::Relu => v.max(0.0),
+            Activation::Relu6 => v.clamp(0.0, 6.0),
+        }
+    }
+
+    /// Apply to one 4-lane vector — the in-register form the Winograd
+    /// gather and depthwise epilogues clamp with (same semantics as
+    /// [`apply`](Self::apply), lane for lane, on finite values).
+    #[inline(always)]
+    pub fn apply_vec(self, v: F32x4) -> F32x4 {
+        match self {
+            Activation::None => v,
+            Activation::Relu => v.max(F32x4::zero()),
+            Activation::Relu6 => v.max(F32x4::zero()).min(F32x4::splat(6.0)),
+        }
+    }
+
+    /// Is this the identity?
+    #[inline(always)]
+    pub fn is_none(self) -> bool {
+        matches!(self, Activation::None)
+    }
+}
+
+impl std::fmt::Display for Activation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Activation::None => write!(f, "none"),
+            Activation::Relu => write!(f, "relu"),
+            Activation::Relu6 => write!(f, "relu6"),
+        }
+    }
+}
 
 /// Post-processing for finished micro-tiles of C.
 ///
@@ -60,17 +129,18 @@ impl Epilogue for Store {
     }
 }
 
-/// Per-column bias add and optional ReLU — the conv epilogue (C columns are
-/// output channels in both convolution schemes).
+/// Per-column bias add and optional fused activation (ReLU / ReLU6) — the
+/// conv epilogue (C columns are output channels in both convolution
+/// schemes).
 #[derive(Debug, Clone, Copy)]
-pub struct BiasRelu<'a> {
+pub struct BiasAct<'a> {
     /// Bias indexed by absolute C column; `None` ⇒ no add.
     pub bias: Option<&'a [f32]>,
-    /// Clamp at zero after the bias.
-    pub relu: bool,
+    /// Activation applied after the bias.
+    pub act: Activation,
 }
 
-impl Epilogue for BiasRelu<'_> {
+impl Epilogue for BiasAct<'_> {
     #[inline]
     fn micro_tile(
         &self,
@@ -86,12 +156,11 @@ impl Epilogue for BiasRelu<'_> {
             if let Some(bias) = self.bias {
                 let b = &bias[col0..col0 + cols];
                 for (v, &bv) in row.iter_mut().zip(b) {
-                    let t = *v + bv;
-                    *v = if self.relu { t.max(0.0) } else { t };
+                    *v = self.act.apply(*v + bv);
                 }
-            } else if self.relu {
+            } else if !self.act.is_none() {
                 for v in row.iter_mut() {
-                    *v = v.max(0.0);
+                    *v = self.act.apply(*v);
                 }
             }
         }
@@ -114,7 +183,7 @@ mod tests {
         // 2×2 valid region of a tile at col0 = 1, inside a 3-wide buffer.
         let mut c = vec![1.0, -2.0, 99.0, -3.0, 4.0, 99.0];
         let bias = [100.0, 10.0, 20.0];
-        let epi = BiasRelu { bias: Some(&bias), relu: true };
+        let epi = BiasAct { bias: Some(&bias), act: Activation::Relu };
         epi.micro_tile(&mut c, 3, 0, 1, 2, 2);
         // col0=1 ⇒ bias[1], bias[2] apply; ReLU clamps; ldc padding untouched.
         assert_eq!(c, vec![11.0, 18.0, 99.0, 7.0, 24.0, 99.0]);
@@ -123,14 +192,27 @@ mod tests {
     #[test]
     fn relu_without_bias() {
         let mut c = vec![-1.0, 2.0];
-        BiasRelu { bias: None, relu: true }.micro_tile(&mut c, 2, 0, 0, 1, 2);
+        BiasAct { bias: None, act: Activation::Relu }.micro_tile(&mut c, 2, 0, 0, 1, 2);
         assert_eq!(c, vec![0.0, 2.0]);
     }
 
     #[test]
-    fn no_bias_no_relu_is_identity() {
+    fn no_bias_no_act_is_identity() {
         let mut c = vec![-1.0, 2.0];
-        BiasRelu { bias: None, relu: false }.micro_tile(&mut c, 2, 0, 0, 1, 2);
+        BiasAct { bias: None, act: Activation::None }.micro_tile(&mut c, 2, 0, 0, 1, 2);
         assert_eq!(c, vec![-1.0, 2.0]);
+    }
+
+    #[test]
+    fn relu6_clamps_both_sides() {
+        let mut c = vec![-1.0, 2.0, 9.0];
+        let bias = [0.5, 0.5, 0.5];
+        BiasAct { bias: Some(&bias), act: Activation::Relu6 }.micro_tile(&mut c, 3, 0, 0, 1, 3);
+        assert_eq!(c, vec![0.0, 2.5, 6.0]);
+        assert_eq!(Activation::Relu6.apply(-3.0), 0.0);
+        assert_eq!(Activation::Relu6.apply(3.0), 3.0);
+        assert_eq!(Activation::Relu6.apply(7.0), 6.0);
+        assert_eq!(Activation::from_relu(true), Activation::Relu);
+        assert_eq!(Activation::from_relu(false), Activation::None);
     }
 }

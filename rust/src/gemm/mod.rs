@@ -30,7 +30,7 @@ pub mod batched;
 pub mod epilogue;
 
 pub use batched::BatchedGemm;
-pub use epilogue::{BiasRelu, Epilogue, Store};
+pub use epilogue::{Activation, BiasAct, Epilogue, Store};
 pub use microkernel::{MR, NR};
 
 #[cfg(test)]
@@ -662,7 +662,7 @@ mod tests {
             for use_pool in [false, true] {
                 let p = if use_pool { Some(&pool) } else { None };
                 let mut fused = vec![0.0; m * n];
-                let epi = BiasRelu { bias: Some(&bias), relu: true };
+                let epi = BiasAct { bias: Some(&bias), act: Activation::Relu };
                 sgemm_prepacked_fused(m, &a, k, &packed, &mut fused, n, false, p, &epi);
                 let mut plain = vec![0.0; m * n];
                 sgemm_ref(m, n, k, &a, &b, &mut plain);
@@ -689,7 +689,7 @@ mod tests {
         let bias: Vec<f32> = (0..n).map(|j| j as f32 + 1.0).collect();
         let packed = PackedB::pack(&[], n, 0, n);
         let mut c = vec![5.0; m * n];
-        let epi = BiasRelu { bias: Some(&bias), relu: false };
+        let epi = BiasAct { bias: Some(&bias), act: Activation::None };
         sgemm_prepacked_fused(m, &[], 0, &packed, &mut c, n, false, None, &epi);
         for r in 0..m {
             for j in 0..n {

@@ -7,8 +7,8 @@
 //! contributes a contiguous `C`-run, so row construction is `KH·KW` memcpys.
 //! The GEMM runs on the same engine as the Winograd scheme's batched GEMMs —
 //! benchmark deltas therefore isolate the algorithmic difference, exactly as
-//! in the paper's evaluation. Per-channel bias and ReLU ride as a
-//! [`BiasRelu`] GEMM epilogue ([`Im2RowConvolution::run_fused_into`]):
+//! in the paper's evaluation. Per-channel bias and activation (ReLU / ReLU6) ride as a
+//! [`BiasAct`] GEMM epilogue ([`Im2RowConvolution::run_fused_into`]):
 //! each micro-tile of the output is biased/activated while cache-hot, so
 //! conv outputs are written exactly once — the same single-pass guarantee
 //! the fused Winograd pipeline makes. The write-into entry point draws the
@@ -18,7 +18,7 @@
 //! [`Im2RowConvolution::run_fused_with`] is a thin wrapper kept as the
 //! test oracle.
 
-use crate::gemm::{sgemm_prepacked_fused, BiasRelu, PackedB};
+use crate::gemm::{sgemm_prepacked_fused, Activation, BiasAct, PackedB};
 use crate::parallel::ThreadPool;
 use crate::tensor::{Tensor, TensorView};
 use crate::workspace::Workspace;
@@ -196,11 +196,11 @@ impl Im2RowConvolution {
         pool: Option<&ThreadPool>,
         ws: &mut Workspace,
     ) -> Result<Tensor> {
-        self.run_fused_with(input, pool, None, false, ws)
+        self.run_fused_with(input, pool, None, Activation::None, ws)
     }
 
     /// [`run_with_workspace`](Self::run_with_workspace) with per-output-
-    /// channel bias and optional ReLU fused into the GEMM's [`BiasRelu`]
+    /// channel bias and optional activation fused into the GEMM's [`BiasAct`]
     /// epilogue. Thin allocating wrapper over
     /// [`run_fused_into`](Self::run_fused_into) — kept as the oracle the
     /// write-into path is property-tested against.
@@ -209,7 +209,7 @@ impl Im2RowConvolution {
         input: &Tensor,
         pool: Option<&ThreadPool>,
         bias: Option<&[f32]>,
-        relu: bool,
+        act: Activation,
         ws: &mut Workspace,
     ) -> Result<Tensor> {
         if input.rank() != 4 {
@@ -218,14 +218,14 @@ impl Im2RowConvolution {
         let (n, h, w) = (input.shape()[0], input.shape()[1], input.shape()[2]);
         let (oh, ow) = self.output_hw(h, w)?;
         let mut out = Tensor::zeros(&[n, oh, ow, self.cout]);
-        self.run_fused_into(&input.view(), pool, bias, relu, ws, out.data_mut())?;
+        self.run_fused_into(&input.view(), pool, bias, act, ws, out.data_mut())?;
         Ok(out)
     }
 
     /// The write-into pipeline: the padded input is staged into
     /// workspace-owned memory (no copy for unpadded layers), the patch
     /// matrix is drawn from the same arena, and the single fused GEMM
-    /// (bias/ReLU in its [`BiasRelu`] epilogue, every micro-tile
+    /// (bias/activation in its [`BiasAct`] epilogue, every micro-tile
     /// biased/activated while cache-hot) lands the conv output directly in
     /// the caller-provided `out` slice (`N·OH·OW·M` elements, fully
     /// overwritten — dirty arena memory is fine). With a warm arena this
@@ -235,7 +235,7 @@ impl Im2RowConvolution {
         input: &TensorView,
         pool: Option<&ThreadPool>,
         bias: Option<&[f32]>,
-        relu: bool,
+        act: Activation,
         ws: &mut Workspace,
         out: &mut [f32],
     ) -> Result<()> {
@@ -286,7 +286,7 @@ impl Im2RowConvolution {
             self.cout,
             false,
             pool,
-            &BiasRelu { bias, relu },
+            &BiasAct { bias, act },
         );
         Ok(())
     }
@@ -387,7 +387,7 @@ mod tests {
         let bias: Vec<f32> = (0..6).map(|i| i as f32 * 0.3 - 0.7).collect();
         let mut ws = Workspace::new();
         let fused = conv
-            .run_fused_with(&input, None, Some(&bias), true, &mut ws)
+            .run_fused_with(&input, None, Some(&bias), Activation::Relu, &mut ws)
             .unwrap();
         let mut want = conv.run(&input, None).unwrap();
         let chans = want.shape()[3];
@@ -396,7 +396,7 @@ mod tests {
         }
         assert!(fused.allclose(&want, 1e-5));
         assert!(conv
-            .run_fused_with(&input, None, Some(&bias[..5]), false, &mut ws)
+            .run_fused_with(&input, None, Some(&bias[..5]), Activation::None, &mut ws)
             .is_err());
     }
 
@@ -412,7 +412,7 @@ mod tests {
             let mut ws_a = Workspace::new();
             let mut ws_b = Workspace::new();
             let want = conv
-                .run_fused_with(&input, None, Some(&bias), true, &mut ws_a)
+                .run_fused_with(&input, None, Some(&bias), Activation::Relu, &mut ws_a)
                 .unwrap();
             let off = 5usize;
             let mut backing = vec![f32::NAN; want.len() + off];
@@ -420,7 +420,7 @@ mod tests {
                 &input.view(),
                 None,
                 Some(&bias),
-                true,
+                Activation::Relu,
                 &mut ws_b,
                 &mut backing[off..],
             )
@@ -429,7 +429,7 @@ mod tests {
             assert!(backing[..off].iter().all(|x| x.is_nan()));
             // Wrong-size output slices are rejected.
             assert!(conv
-                .run_fused_into(&input.view(), None, None, false, &mut ws_b, &mut backing[..3])
+                .run_fused_into(&input.view(), None, None, Activation::None, &mut ws_b, &mut backing[..3])
                 .is_err());
         }
     }

@@ -26,12 +26,17 @@
 //!   → x² GEMMs + gather-as-epilogue (blocks of regions sized to an L2
 //!   budget, default 512 KiB; Winograd-domain C never materialised).
 //! * [`im2row`] — the classical im2row/im2col + GEMM comparator.
-//! * [`conv`] — the public convolution API, direct-convolution oracle and the
-//!   per-layer algorithm selector.
+//! * [`conv`] — the public convolution API, direct-convolution oracle
+//!   (dense and grouped), the **direct depthwise engine**
+//!   ([`conv::depthwise`]: register-tiled 3×3 stride-1/2 SIMD kernels for
+//!   the `groups == cin == cout` regime where Winograd's amortization
+//!   argument collapses) and the unified spatial-aware per-layer algorithm
+//!   selector.
 //! * [`nn`] / [`zoo`] — a small graph executor (with a prepare-time
-//!   activation memory planner and a planned write-into walk) and
-//!   definitions of the five CNNs the paper evaluates (VGG-16/19,
-//!   GoogleNet, Inception-v3, SqueezeNet).
+//!   activation memory planner, a planned write-into walk and per-algorithm
+//!   dispatch counters) and definitions of the evaluated CNNs: the paper's
+//!   five (VGG-16/19, GoogleNet, Inception-v3, SqueezeNet) plus
+//!   MobileNetV1/V2 (depthwise-separable, ReLU6, inverted residuals).
 //! * [`coordinator`] — the L3 serving runtime: request queue, batcher,
 //!   worker pool and metrics.
 //! * [`runtime`] — PJRT loader that executes the JAX/Pallas-lowered HLO

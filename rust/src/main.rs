@@ -58,7 +58,7 @@ fn print_help() {
          USAGE: winoconv <subcommand> [options]\n\
          \n\
          SUBCOMMANDS\n\
-         \x20 layers   --model <vgg16|vgg19|googlenet|inception-v3|squeezenet> [--threads N] [--quick]\n\
+         \x20 layers   --model <vgg16|vgg19|googlenet|inception-v3|squeezenet|mobilenet-v1|mobilenet-v2> [--threads N] [--quick]\n\
          \x20 network  --model <name> [--threads N] [--reps N] [--quick]\n\
          \x20 serve    --model <name> [--threads N] [--seconds S]\n\
          \x20 verify   [--artifacts DIR]\n\
@@ -86,11 +86,21 @@ fn cmd_layers(args: &Args) -> Result<()> {
     let pool = ThreadPool::new(threads);
     let cfg = bench_config(args);
 
+    let layers = unique_fast_layers(model, 1)?;
+    if layers.is_empty() {
+        println!(
+            "{model} has no Winograd-suitable (fast) layers — its convs are grouped, \
+             strided or 1x1. For depthwise layers see: cargo bench --bench \
+             ablation_depthwise -- --model {}",
+            model.name()
+        );
+        return Ok(());
+    }
     let mut table = Table::new(
         &format!("{model}: per-layer im2row vs region-wise Winograd ({threads} threads)"),
         &["layer", "type", "shape", "im2row ms", "ours ms", "speedup", "variant"],
     );
-    for (spec, count) in unique_fast_layers(model, 1)? {
+    for (spec, count) in layers {
         let input = spec.input(11);
         let weights = spec.weights(12);
         let im2row = Im2RowConvolution::new(&weights, spec.stride, spec.pad)?;

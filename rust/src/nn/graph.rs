@@ -15,15 +15,16 @@
 
 use super::ops;
 use super::plan::ActivationPlan;
+use crate::conv::depthwise::DepthwiseConvolution;
 use crate::conv::select::is_winograd_suitable;
-use crate::conv::{Conv2d, ConvAlgorithm};
+use crate::conv::{Activation, Conv2d, ConvAlgorithm};
 use crate::im2row::Im2RowConvolution;
 use crate::parallel::ThreadPool;
 use crate::tensor::{Tensor, TensorView};
 use crate::winograd::WinogradConvolution;
 use crate::workspace::Workspace;
 use crate::{bail_shape, bail_unsupported, Result};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -35,16 +36,16 @@ pub type NodeId = usize;
 pub enum Op {
     /// Graph input placeholder.
     Input,
-    /// Convolution (+ bias + optional fused ReLU).
+    /// Convolution (+ bias + optional fused activation).
     Conv {
         /// Layer descriptor (its algorithm field is ignored; the policy decides).
         desc: Conv2d,
-        /// `[M, KH, KW, C]` weights.
+        /// `[M, KH, KW, C/groups]` weights.
         weights: Tensor,
         /// Per-output-channel bias.
         bias: Vec<f32>,
-        /// Fuse a ReLU after bias.
-        relu: bool,
+        /// Fused activation after the bias (ReLU, or MobileNet's ReLU6).
+        act: Activation,
     },
     /// Max pooling.
     MaxPool {
@@ -94,6 +95,12 @@ pub enum Op {
         /// K offset.
         k: f32,
     },
+    /// Standalone ReLU6 clamp (conv layers fuse it via [`Activation`]
+    /// instead; this node exists for graphs that clamp non-conv values).
+    Relu6,
+    /// Elementwise residual add of exactly two same-shape inputs — the
+    /// MobileNetV2 inverted-residual skip connection.
+    Add,
 }
 
 impl Op {
@@ -109,6 +116,8 @@ impl Op {
             Op::Fc { .. } => "fc",
             Op::Softmax => "softmax",
             Op::Lrn { .. } => "lrn",
+            Op::Relu6 => "relu6",
+            Op::Add => "add",
         }
     }
 }
@@ -209,7 +218,18 @@ impl Graph {
                     }
                     vec![s[0], weights.shape()[1]]
                 }
-                Op::Softmax | Op::Lrn { .. } => shapes[node.inputs[0]].clone(),
+                Op::Softmax | Op::Lrn { .. } | Op::Relu6 => shapes[node.inputs[0]].clone(),
+                Op::Add => {
+                    if node.inputs.len() != 2 {
+                        bail_shape!("{}: add expects exactly 2 inputs", node.name);
+                    }
+                    let a = &shapes[node.inputs[0]];
+                    let b = &shapes[node.inputs[1]];
+                    if a != b {
+                        bail_shape!("{}: add shape mismatch {:?} vs {:?}", node.name, a, b);
+                    }
+                    a.clone()
+                }
             };
             shapes.push(shape);
         }
@@ -240,6 +260,18 @@ impl std::fmt::Display for Scheme {
 enum PreparedConv {
     Winograd(WinogradConvolution),
     Im2Row(Im2RowConvolution),
+    /// Direct register-tiled depthwise engine (bound on *both* schemes —
+    /// the scheme split is a Winograd-vs-im2row question, and neither
+    /// GEMM-backed path can express grouped layers).
+    Depthwise(DepthwiseConvolution),
+    /// Exotic grouped fallback: the naive grouped oracle with a post-pass
+    /// epilogue. Correct, never fast; no evaluated network binds it.
+    DirectGrouped {
+        weights: Tensor,
+        stride: (usize, usize),
+        pad: (usize, usize),
+        groups: usize,
+    },
 }
 
 /// One executable step.
@@ -248,7 +280,7 @@ enum PreparedOp {
     Conv {
         conv: PreparedConv,
         bias: Vec<f32>,
-        relu: bool,
+        act: Activation,
     },
     Other(Op),
 }
@@ -275,6 +307,41 @@ pub struct LayerTiming {
 struct LayerMeta {
     winograd: bool,
     fast_layer: bool,
+}
+
+/// Per-algorithm convolution dispatch counts — how many conv-layer
+/// executions each execution path has served. The prepare-time binding is
+/// static, so each completed inference adds the model's per-walk census to
+/// the running totals; the serving engine exports the totals through
+/// [`crate::coordinator::metrics`] snapshots so reports show which paths
+/// traffic actually exercises.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DispatchCounts {
+    /// Region-wise Winograd conv executions.
+    pub winograd: u64,
+    /// im2row + GEMM conv executions.
+    pub im2row: u64,
+    /// Direct depthwise engine executions.
+    pub depthwise: u64,
+    /// Naive direct (grouped fallback) executions.
+    pub direct: u64,
+}
+
+impl DispatchCounts {
+    /// Sum over all algorithm paths.
+    pub fn total(&self) -> u64 {
+        self.winograd + self.im2row + self.depthwise + self.direct
+    }
+}
+
+impl std::fmt::Display for DispatchCounts {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "winograd {} / im2row {} / depthwise {} / direct {}",
+            self.winograd, self.im2row, self.depthwise, self.direct
+        )
+    }
 }
 
 /// The two arenas one executor thread owns: conv scratch (packed-A blocks,
@@ -305,6 +372,12 @@ pub struct PreparedModel {
     /// throwaway arenas (allocating) instead — see
     /// [`fallback_count`](Self::fallback_count).
     fallbacks: AtomicUsize,
+    /// Conv layers one inference walk dispatches to each algorithm path
+    /// (static after prepare).
+    census: DispatchCounts,
+    /// Running per-algorithm totals: `census` × completed walks — see
+    /// [`dispatch_counts`](Self::dispatch_counts).
+    dispatches: [AtomicU64; 4],
 }
 
 impl PreparedModel {
@@ -325,19 +398,28 @@ impl PreparedModel {
         let mut prepared = Vec::with_capacity(graph.nodes.len());
         let mut meta = Vec::with_capacity(graph.nodes.len());
         let mut ws_elems = 0usize;
+        let mut census = DispatchCounts::default();
         for node in graph.nodes.iter() {
             let mut m = LayerMeta::default();
             let p = match &node.op {
                 Op::Input => PreparedOp::Passthrough,
-                Op::Conv { desc, weights, bias, relu } => {
-                    // Graph nodes carry bias/relu on Op::Conv itself; a
-                    // ConvEpilogue on the descriptor would be silently
+                Op::Conv { desc, weights, bias, act } => {
+                    // Graph nodes carry bias/activation on Op::Conv itself;
+                    // a ConvEpilogue on the descriptor would be silently
                     // ignored here, so reject the ambiguity outright.
                     if !desc.epilogue.is_noop() {
                         bail_unsupported!(
-                            "{}: set bias/relu on Op::Conv, not on the Conv2d descriptor \
+                            "{}: set bias/act on Op::Conv, not on the Conv2d descriptor \
                              (desc.epilogue is only consulted by Conv2d::run*)",
                             node.name
+                        );
+                    }
+                    if bias.len() != desc.cout {
+                        bail_shape!(
+                            "{}: bias length {} vs {} output channels",
+                            node.name,
+                            bias.len(),
+                            desc.cout
                         );
                     }
                     let in_shape = &shapes[node.inputs[0]];
@@ -345,8 +427,22 @@ impl PreparedModel {
                         algorithm: ConvAlgorithm::Auto,
                         ..desc.clone()
                     };
+                    // One spatial-aware chooser resolves the algorithm;
+                    // the scheme then only decides the Winograd-vs-im2row
+                    // question for dense suitable layers. Grouped layers
+                    // bind their direct engines on *both* schemes (neither
+                    // GEMM-backed path can express them).
                     let resolved = auto.resolved_algorithm_for(in_shape);
                     let conv = match (scheme, resolved) {
+                        (_, ConvAlgorithm::DirectDepthwise) => PreparedConv::Depthwise(
+                            DepthwiseConvolution::new(weights, desc.stride, desc.padding)?,
+                        ),
+                        (_, ConvAlgorithm::Direct) => PreparedConv::DirectGrouped {
+                            weights: weights.clone(),
+                            stride: desc.stride,
+                            pad: desc.padding,
+                            groups: desc.groups,
+                        },
                         (Scheme::WinogradWhereSuitable, ConvAlgorithm::Winograd(v)) => {
                             PreparedConv::Winograd(WinogradConvolution::new(
                                 v,
@@ -364,18 +460,29 @@ impl PreparedModel {
                         PreparedConv::Winograd(wc) => {
                             m.winograd = true;
                             m.fast_layer = true;
+                            census.winograd += 1;
                             wc.workspace_elems_for(in_shape[0], in_shape[1], in_shape[2])?
                         }
                         PreparedConv::Im2Row(ic) => {
-                            m.fast_layer = is_winograd_suitable(desc.kernel, desc.stride);
+                            m.fast_layer =
+                                is_winograd_suitable(desc.kernel, desc.stride, desc.groups);
+                            census.im2row += 1;
                             ic.workspace_elems_for(in_shape[0], in_shape[1], in_shape[2])?
+                        }
+                        PreparedConv::Depthwise(dc) => {
+                            census.depthwise += 1;
+                            dc.workspace_elems_for(in_shape[0], in_shape[1], in_shape[2])?
+                        }
+                        PreparedConv::DirectGrouped { .. } => {
+                            census.direct += 1;
+                            0
                         }
                     };
                     ws_elems = ws_elems.max(need);
                     PreparedOp::Conv {
                         conv,
                         bias: bias.clone(),
-                        relu: *relu,
+                        act: *act,
                     }
                 }
                 other => PreparedOp::Other(other.clone()),
@@ -397,6 +504,13 @@ impl PreparedModel {
             }),
             plan,
             fallbacks: AtomicUsize::new(0),
+            census,
+            dispatches: [
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+            ],
         })
     }
 
@@ -420,6 +534,24 @@ impl PreparedModel {
     /// takes the fallback, which its serving metrics pin.
     pub fn fallback_count(&self) -> usize {
         self.fallbacks.load(Ordering::Relaxed)
+    }
+
+    /// Running per-algorithm conv dispatch totals across every completed
+    /// inference (any entry point). The engine surfaces these through its
+    /// serving-metrics snapshots.
+    pub fn dispatch_counts(&self) -> DispatchCounts {
+        DispatchCounts {
+            winograd: self.dispatches[0].load(Ordering::Relaxed),
+            im2row: self.dispatches[1].load(Ordering::Relaxed),
+            depthwise: self.dispatches[2].load(Ordering::Relaxed),
+            direct: self.dispatches[3].load(Ordering::Relaxed),
+        }
+    }
+
+    /// Conv layers one inference dispatches to each algorithm path — the
+    /// static per-walk census behind [`dispatch_counts`](Self::dispatch_counts).
+    pub fn dispatch_census(&self) -> DispatchCounts {
+        self.census
     }
 
     /// Built-in arena statistics: `(bytes, grow_count)` summed over the
@@ -586,19 +718,40 @@ impl PreparedModel {
                 // The graph input is borrowed in place — a zero-element
                 // slot, no `Tensor::clone` and no staging copy.
                 PreparedOp::Passthrough => {}
-                PreparedOp::Conv { conv, bias, relu } => {
+                PreparedOp::Conv { conv, bias, act } => {
                     let x = view(node.inputs[0]);
                     match conv {
                         PreparedConv::Winograd(wc) => {
-                            // Bias + ReLU fused into the gather epilogue;
-                            // staging and packed-A drawn from the arena.
-                            wc.run_fused_into(&x, pool, Some(bias), *relu, ws, out)?
+                            // Bias + activation fused into the gather
+                            // epilogue; staging and packed-A drawn from
+                            // the arena.
+                            wc.run_fused_into(&x, pool, Some(bias), *act, ws, out)?
                         }
                         PreparedConv::Im2Row(ic) => {
-                            // Bias + ReLU fused into the GEMM epilogue —
-                            // conv outputs are written exactly once on
-                            // both scheme paths.
-                            ic.run_fused_into(&x, pool, Some(bias), *relu, ws, out)?
+                            // Bias + activation fused into the GEMM
+                            // epilogue — conv outputs are written exactly
+                            // once on both scheme paths.
+                            ic.run_fused_into(&x, pool, Some(bias), *act, ws, out)?
+                        }
+                        PreparedConv::Depthwise(dc) => {
+                            // Bias seeds the register accumulators; the
+                            // activation clamps in-register before the
+                            // single store. Staging from the same arena.
+                            dc.run_fused_into(&x, pool, Some(bias), *act, ws, out)?
+                        }
+                        PreparedConv::DirectGrouped { weights, stride, pad, groups } => {
+                            // Naive grouped fallback: direct conv into the
+                            // arena window, then a post-pass epilogue (the
+                            // one path with nothing to fuse into).
+                            crate::conv::direct::direct_conv2d_grouped_into(
+                                &x, weights, *stride, *pad, *groups, out,
+                            )?;
+                            let m_out = weights.shape()[0];
+                            for px in out.chunks_mut(m_out) {
+                                for (v, b) in px.iter_mut().zip(bias.iter()) {
+                                    *v = act.apply(*v + *b);
+                                }
+                            }
                         }
                     }
                 }
@@ -648,6 +801,12 @@ impl PreparedModel {
                                 out,
                             )?
                         }
+                        Op::Relu6 => ops::relu6_into(view(node.inputs[0]).data(), out)?,
+                        Op::Add => {
+                            let a = view(node.inputs[0]);
+                            let b = view(node.inputs[1]);
+                            ops::add_into(a.data(), b.data(), out)?
+                        }
                         Op::Input | Op::Conv { .. } => unreachable!(),
                     }
                 }
@@ -664,6 +823,18 @@ impl PreparedModel {
         }
         let last = self.plan.slot(self.nodes.len() - 1);
         out.copy_from_slice(&arena[last.range()]);
+        // One relaxed add per non-zero path per walk — the census is
+        // static, so totals stay exact without per-layer atomics.
+        for (slot, n) in [
+            (0usize, self.census.winograd),
+            (1, self.census.im2row),
+            (2, self.census.depthwise),
+            (3, self.census.direct),
+        ] {
+            if n > 0 {
+                self.dispatches[slot].fetch_add(n, Ordering::Relaxed);
+            }
+        }
         Ok(())
     }
 }
@@ -680,14 +851,14 @@ mod tests {
         let w1 = c1.random_weights(seed);
         let n1 = g.add(
             "conv1",
-            Op::Conv { desc: c1, weights: w1, bias: vec![0.1; 8], relu: true },
+            Op::Conv { desc: c1, weights: w1, bias: vec![0.1; 8], act: Activation::Relu },
             &[input],
         );
         let c2 = Conv2d::new(8, 16, (3, 3)).with_padding((1, 1));
         let w2 = c2.random_weights(seed + 1);
         let br_a = g.add(
             "conv2",
-            Op::Conv { desc: c2, weights: w2, bias: vec![0.0; 16], relu: true },
+            Op::Conv { desc: c2, weights: w2, bias: vec![0.0; 16], act: Activation::Relu },
             &[n1],
         );
         let br_b = g.add(
@@ -748,8 +919,8 @@ mod tests {
         assert!(conv2.fast_layer && !conv2.winograd);
     }
 
-    /// Bias/ReLU live on Op::Conv for graph nodes; a ConvEpilogue set on
-    /// the descriptor would be silently ignored, so prepare() rejects it.
+    /// Bias/activation live on Op::Conv for graph nodes; a ConvEpilogue set
+    /// on the descriptor would be silently ignored, so prepare() rejects it.
     #[test]
     fn rejects_descriptor_epilogue_on_graph_conv() {
         let mut g = Graph::new();
@@ -758,7 +929,7 @@ mod tests {
         let w1 = c1.random_weights(1);
         g.add(
             "conv1",
-            Op::Conv { desc: c1, weights: w1, bias: vec![0.0; 8], relu: true },
+            Op::Conv { desc: c1, weights: w1, bias: vec![0.0; 8], act: Activation::Relu },
             &[input],
         );
         assert!(PreparedModel::prepare("bad", &g, &[1, 8, 8, 3], Scheme::Im2RowOnly).is_err());
@@ -843,14 +1014,25 @@ mod tests {
         for (idx, node) in m.nodes.iter().enumerate() {
             let out = match &m.prepared[idx] {
                 PreparedOp::Passthrough => input.clone(),
-                PreparedOp::Conv { conv, bias, relu } => {
+                PreparedOp::Conv { conv, bias, act } => {
                     let x = values[node.inputs[0]].as_ref().unwrap_or(input);
                     match conv {
                         PreparedConv::Winograd(wc) => {
-                            wc.run_fused_with(x, None, Some(bias), *relu, &mut ws).unwrap()
+                            wc.run_fused_with(x, None, Some(bias), *act, &mut ws).unwrap()
                         }
                         PreparedConv::Im2Row(ic) => {
-                            ic.run_fused_with(x, None, Some(bias), *relu, &mut ws).unwrap()
+                            ic.run_fused_with(x, None, Some(bias), *act, &mut ws).unwrap()
+                        }
+                        PreparedConv::Depthwise(dc) => {
+                            dc.run_fused_with(x, None, Some(bias), *act, &mut ws).unwrap()
+                        }
+                        PreparedConv::DirectGrouped { weights, stride, pad, groups } => {
+                            let mut y = crate::conv::direct::direct_conv2d_grouped(
+                                x, weights, *stride, *pad, *groups,
+                            )
+                            .unwrap();
+                            ops::bias_act_inplace(&mut y, bias, *act).unwrap();
+                            y
                         }
                     }
                 }
@@ -877,6 +1059,11 @@ mod tests {
                         Op::Softmax => ops::softmax(x).unwrap(),
                         Op::Lrn { size, alpha, beta, k } => {
                             ops::lrn_across_channels(x, *size, *alpha, *beta, *k).unwrap()
+                        }
+                        Op::Relu6 => ops::relu6(x),
+                        Op::Add => {
+                            let b = values[node.inputs[1]].as_ref().unwrap();
+                            ops::add_elementwise(x, b).unwrap()
                         }
                         Op::Input | Op::Conv { .. } => unreachable!(),
                     }
@@ -924,5 +1111,103 @@ mod tests {
         let plan = m.activation_plan();
         assert!(plan.peak_elems() < plan.naive_elems());
         assert_eq!(plan.peak_bytes(), plan.peak_elems() * 4);
+    }
+
+    /// A MobileNet-flavoured residual block: pw-expand (ReLU6) → depthwise
+    /// 3×3 (ReLU6) → pw-linear → residual Add → standalone Relu6. The
+    /// depthwise layer binds the direct engine on *both* schemes, the
+    /// planned executor matches the allocating reference bit for bit, and
+    /// the dispatch census/counters report what actually ran.
+    fn residual_block_graph(seed: u64) -> Graph {
+        let mut g = Graph::new();
+        let input = g.input();
+        let c = 8usize;
+        let expand = Conv2d::new(c, 2 * c, (1, 1));
+        let we = expand.random_weights(seed);
+        let n_e = g.add(
+            "pw_expand",
+            Op::Conv { desc: expand, weights: we, bias: vec![0.05; 2 * c], act: Activation::Relu6 },
+            &[input],
+        );
+        let dw = Conv2d::new(2 * c, 2 * c, (3, 3)).with_groups(2 * c).with_padding((1, 1));
+        let wd = dw.random_weights(seed + 1);
+        let n_d = g.add(
+            "dw3x3",
+            Op::Conv { desc: dw, weights: wd, bias: vec![0.1; 2 * c], act: Activation::Relu6 },
+            &[n_e],
+        );
+        let project = Conv2d::new(2 * c, c, (1, 1));
+        let wp = project.random_weights(seed + 2);
+        let n_p = g.add(
+            "pw_linear",
+            Op::Conv { desc: project, weights: wp, bias: vec![0.0; c], act: Activation::None },
+            &[n_d],
+        );
+        let n_add = g.add("residual", Op::Add, &[input, n_p]);
+        g.add("clamp", Op::Relu6, &[n_add]);
+        g
+    }
+
+    #[test]
+    fn depthwise_residual_block_planned_matches_reference() {
+        for scheme in [Scheme::Im2RowOnly, Scheme::WinogradWhereSuitable] {
+            let g = residual_block_graph(29);
+            let m = PreparedModel::prepare("mbblock", &g, &[1, 10, 10, 8], scheme).unwrap();
+            // Census: 2 pointwise convs on im2row, 1 depthwise — on both
+            // schemes (no Winograd-suitable layer in the block).
+            let census = m.dispatch_census();
+            assert_eq!(census.im2row, 2, "{scheme}");
+            assert_eq!(census.depthwise, 1, "{scheme}");
+            assert_eq!(census.winograd + census.direct, 0, "{scheme}");
+            assert_eq!(m.dispatch_counts().total(), 0, "no walks yet");
+
+            let input = Tensor::randn(&[1, 10, 10, 8], 77);
+            let want = run_reference(&m, &input);
+            // Relu6 tail: outputs clamped to [0, 6], clamps actually fire.
+            assert!(want.data().iter().all(|&v| (0.0..=6.0).contains(&v)));
+            assert!(want.data().iter().any(|&v| v == 0.0));
+            let (got, timings) = m.run(&input, None).unwrap();
+            assert_eq!(got.data(), want.data(), "{scheme}: planned != reference");
+            assert_eq!(timings.len(), g.nodes.len());
+            // Depthwise/grouped conv is never a "fast layer".
+            let dwt = timings.iter().find(|t| t.name == "dw3x3").unwrap();
+            assert!(!dwt.fast_layer && !dwt.winograd);
+
+            // Write-into path over dirty arenas, twice; grow pins.
+            let mut ws = Workspace::with_capacity(m.workspace_elems());
+            let mut acts = Workspace::with_capacity(m.activation_plan().peak_elems());
+            acts.take(m.activation_plan().peak_elems()).fill(f32::NAN);
+            let mut out = vec![f32::NAN; want.len()];
+            for _ in 0..2 {
+                m.run_planned_into(&input, None, &mut ws, &mut acts, &mut out).unwrap();
+                assert_eq!(out, want.data(), "{scheme}: run_planned_into != reference");
+            }
+            assert_eq!(ws.grow_count(), 0);
+            assert_eq!(acts.grow_count(), 0);
+            // Dispatch totals: census × 3 completed walks.
+            let counts = m.dispatch_counts();
+            assert_eq!(counts.im2row, 6, "{scheme}");
+            assert_eq!(counts.depthwise, 3, "{scheme}");
+            assert_eq!(counts.total(), 9, "{scheme}");
+        }
+    }
+
+    /// Shape inference guards the new ops: Add requires exactly two
+    /// same-shape inputs.
+    #[test]
+    fn add_shape_inference_guards() {
+        let mut g = Graph::new();
+        let input = g.input();
+        let pool = g.add(
+            "pool",
+            Op::MaxPool { kernel: (2, 2), stride: (2, 2), pad: (0, 0), ceil: false },
+            &[input],
+        );
+        g.add("bad_add", Op::Add, &[input, pool]);
+        assert!(g.infer_shapes(&[1, 8, 8, 3]).is_err());
+        let mut g = Graph::new();
+        let input = g.input();
+        g.add("unary_add", Op::Add, &[input]);
+        assert!(g.infer_shapes(&[1, 8, 8, 3]).is_err());
     }
 }

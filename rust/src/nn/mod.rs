@@ -7,5 +7,5 @@ pub mod ops;
 pub mod graph;
 pub mod plan;
 
-pub use graph::{Graph, LayerTiming, Node, NodeId, Op, PreparedModel, Scheme};
+pub use graph::{DispatchCounts, Graph, LayerTiming, Node, NodeId, Op, PreparedModel, Scheme};
 pub use plan::{ActivationPlan, ActivationSlot};

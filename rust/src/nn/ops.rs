@@ -9,7 +9,7 @@
 //! [`crate::nn::PreparedModel`] calls against activation-arena windows),
 //! and the original allocating wrapper kept for tests and one-shot use.
 
-use crate::gemm::sgemm_simple;
+use crate::gemm::{sgemm_simple, Activation};
 use crate::tensor::{Tensor, TensorView};
 use crate::{bail_shape, Result};
 
@@ -221,30 +221,88 @@ pub fn global_avg_pool_into(input: &TensorView, out: &mut [f32]) -> Result<()> {
 
 /// In-place ReLU.
 pub fn relu_inplace(t: &mut Tensor) {
+    act_inplace(t, Activation::Relu)
+}
+
+/// In-place activation (no-op for [`Activation::None`]).
+pub fn act_inplace(t: &mut Tensor, act: Activation) {
+    if act.is_none() {
+        return;
+    }
     for v in t.data_mut() {
-        if *v < 0.0 {
-            *v = 0.0;
-        }
+        *v = act.apply(*v);
     }
 }
 
+/// ReLU6 (`min(max(x, 0), 6)` — the MobileNet clamp) over a flat input
+/// slice, writing into a caller-provided slice of the same length (fully
+/// overwritten). The standalone-op form; conv layers fuse it through their
+/// epilogues instead.
+pub fn relu6_into(input: &[f32], out: &mut [f32]) -> Result<()> {
+    if out.len() != input.len() {
+        bail_shape!("relu6 output slice has {} elems, input {}", out.len(), input.len());
+    }
+    for (o, &x) in out.iter_mut().zip(input) {
+        *o = Activation::Relu6.apply(x);
+    }
+    Ok(())
+}
+
+/// Allocating wrapper over [`relu6_into`].
+pub fn relu6(input: &Tensor) -> Tensor {
+    let mut out = Tensor::zeros(input.shape());
+    relu6_into(input.data(), out.data_mut()).expect("same-size output");
+    out
+}
+
+/// Elementwise residual add (`out = a + b`) over two same-length flat
+/// slices, writing into a caller-provided slice (fully overwritten) — the
+/// MobileNetV2 inverted-residual skip connection. The channel-inner loop
+/// autovectorizes.
+pub fn add_into(a: &[f32], b: &[f32], out: &mut [f32]) -> Result<()> {
+    if a.len() != b.len() {
+        bail_shape!("add operands differ: {} vs {} elems", a.len(), b.len());
+    }
+    if out.len() != a.len() {
+        bail_shape!("add output slice has {} elems, op writes {}", out.len(), a.len());
+    }
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = x + y;
+    }
+    Ok(())
+}
+
+/// Allocating wrapper over [`add_into`]; shapes must match exactly.
+pub fn add_elementwise(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    if a.shape() != b.shape() {
+        bail_shape!("add shape mismatch: {:?} vs {:?}", a.shape(), b.shape());
+    }
+    let mut out = Tensor::zeros(a.shape());
+    add_into(a.data(), b.data(), out.data_mut())?;
+    Ok(out)
+}
+
 /// Add a per-channel bias (length C) in place, optionally fused with ReLU.
-///
-/// No longer on the GEMM-backed conv execution paths: both conv schemes
-/// fuse bias/ReLU into their GEMM epilogues ([`crate::gemm::Epilogue`]),
-/// so conv outputs are written exactly once. Kept as the oracle the
-/// `Direct` conv path (and tests) apply as a post pass.
+/// Back-compat shorthand for [`bias_act_inplace`].
 pub fn bias_relu_inplace(t: &mut Tensor, bias: &[f32], relu: bool) -> Result<()> {
+    bias_act_inplace(t, bias, Activation::from_relu(relu))
+}
+
+/// Add a per-channel bias (length C) in place, fused with an activation.
+///
+/// No longer on the fused conv execution paths: every conv engine fuses
+/// bias/activation into its epilogue ([`crate::gemm::Epilogue`], the
+/// depthwise register epilogue), so conv outputs are written exactly once.
+/// Kept as the oracle the `Direct` conv path (and tests) apply as a post
+/// pass.
+pub fn bias_act_inplace(t: &mut Tensor, bias: &[f32], act: Activation) -> Result<()> {
     if t.rank() != 4 || t.shape()[3] != bias.len() {
         bail_shape!("bias length {} vs channels {:?}", bias.len(), t.shape());
     }
     let c = bias.len();
     for px in t.data_mut().chunks_mut(c) {
         for (v, b) in px.iter_mut().zip(bias) {
-            *v += *b;
-            if relu && *v < 0.0 {
-                *v = 0.0;
-            }
+            *v = act.apply(*v + *b);
         }
     }
     Ok(())
@@ -495,6 +553,31 @@ mod tests {
     }
 
     #[test]
+    fn relu6_clamps_both_sides() {
+        let t = Tensor::from_vec(&[1, 1, 1, 4], vec![-2.0, 0.5, 6.0, 9.0]).unwrap();
+        let r = relu6(&t);
+        assert_eq!(r.data(), &[0.0, 0.5, 6.0, 6.0]);
+        let mut t = Tensor::from_vec(&[1, 1, 1, 2], vec![5.0, -4.0]).unwrap();
+        bias_act_inplace(&mut t, &[2.0, 2.0], Activation::Relu6).unwrap();
+        assert_eq!(t.data(), &[6.0, 0.0]);
+        act_inplace(&mut t, Activation::None); // no-op
+        assert_eq!(t.data(), &[6.0, 0.0]);
+    }
+
+    #[test]
+    fn add_elementwise_sums_and_checks_shapes() {
+        let a = Tensor::from_vec(&[1, 2, 1, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Tensor::from_vec(&[1, 2, 1, 2], vec![10.0, 20.0, 30.0, 40.0]).unwrap();
+        let c = add_elementwise(&a, &b).unwrap();
+        assert_eq!(c.shape(), a.shape());
+        assert_eq!(c.data(), &[11.0, 22.0, 33.0, 44.0]);
+        let bad = Tensor::zeros(&[1, 2, 2, 1]);
+        assert!(add_elementwise(&a, &bad).is_err());
+        assert!(add_into(a.data(), &b.data()[..3], &mut [0.0; 4]).is_err());
+        assert!(add_into(a.data(), b.data(), &mut [0.0; 3]).is_err());
+    }
+
+    #[test]
     fn concat_interleaves_channels() {
         let a = Tensor::full(&[1, 1, 2, 1], 1.0);
         let b = Tensor::full(&[1, 1, 2, 2], 2.0);
@@ -579,6 +662,17 @@ mod tests {
         let want = lrn_across_channels(&t, 5, 1e-4, 0.75, 2.0).unwrap();
         let mut out = dirty(want.len());
         lrn_across_channels_into(&t.view(), 5, 1e-4, 0.75, 2.0, &mut out).unwrap();
+        assert_eq!(out, want.data());
+
+        let want = relu6(&t);
+        let mut out = dirty(want.len());
+        relu6_into(t.data(), &mut out).unwrap();
+        assert_eq!(out, want.data());
+
+        let u2 = Tensor::randn(&[2, 5, 6, 3], 13);
+        let want = add_elementwise(&t, &u2).unwrap();
+        let mut out = dirty(want.len());
+        add_into(t.data(), u2.data(), &mut out).unwrap();
         assert_eq!(out, want.data());
 
         // Size mismatches are rejected, not written out of bounds.

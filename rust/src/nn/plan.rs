@@ -202,7 +202,7 @@ impl ActivationPlan {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::conv::Conv2d;
+    use crate::conv::{Activation, Conv2d};
     use crate::nn::Graph;
 
     /// A sequential chain of `len` conv layers over `side`×`side` maps —
@@ -215,7 +215,7 @@ mod tests {
             let w = desc.random_weights(i as u64);
             prev = g.add(
                 &format!("conv{i}"),
-                Op::Conv { desc, weights: w, bias: vec![0.0; c], relu: true },
+                Op::Conv { desc, weights: w, bias: vec![0.0; c], act: Activation::Relu },
                 &[prev],
             );
         }
@@ -257,7 +257,7 @@ mod tests {
             let w = desc.random_weights(i as u64);
             prev = g.add(
                 &format!("conv{i}"),
-                Op::Conv { desc, weights: w, bias: vec![0.0; cout], relu: true },
+                Op::Conv { desc, weights: w, bias: vec![0.0; cout], act: Activation::Relu },
                 &[prev],
             );
             if pool_after.contains(&i) {
@@ -293,7 +293,7 @@ mod tests {
         let mk = |cin: usize, cout: usize, seed: u64| {
             let desc = Conv2d::new(cin, cout, (3, 3)).with_padding((1, 1));
             let w = desc.random_weights(seed);
-            Op::Conv { desc, weights: w, bias: vec![0.0; cout], relu: false }
+            Op::Conv { desc, weights: w, bias: vec![0.0; cout], act: Activation::None }
         };
         let trunk = g.add("trunk", mk(4, 8, 1), &[input]);
         let a = g.add("a", mk(8, 8, 2), &[trunk]);

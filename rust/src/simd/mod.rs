@@ -130,4 +130,16 @@ mod tests {
         let m = a.max(F32x4::zero());
         assert_eq!(m.to_array(), [1.0, 0.0, 3.5, 0.5]);
     }
+
+    #[test]
+    fn min_matches_scalar() {
+        let a = F32x4::from_array([1.0, -2.0, 7.5, 6.0]);
+        let m = a.min(F32x4::splat(6.0));
+        for i in 0..4 {
+            assert_eq!(m.lane(i), a.lane(i).min(6.0));
+        }
+        // The ReLU6 idiom: clamp to [0, 6].
+        let r6 = a.max(F32x4::zero()).min(F32x4::splat(6.0));
+        assert_eq!(r6.to_array(), [1.0, 0.0, 6.0, 6.0]);
+    }
 }

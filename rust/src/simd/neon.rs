@@ -14,7 +14,8 @@
 
 use core::arch::aarch64::{
     float32x4_t, vaddq_f32, vaddvq_f32, vdupq_n_f32, vfmaq_f32, vfmaq_n_f32, vld1q_f32,
-    vmaxq_f32, vmulq_f32, vmulq_n_f32, vnegq_f32, vreinterpretq_f32_f64, vreinterpretq_f64_f32,
+    vmaxq_f32, vminq_f32, vmulq_f32, vmulq_n_f32, vnegq_f32, vreinterpretq_f32_f64,
+    vreinterpretq_f64_f32,
     vst1q_f32, vsubq_f32, vtrn1q_f32, vtrn1q_f64, vtrn2q_f32, vtrn2q_f64,
 };
 use std::ops::{Add, AddAssign, Mul, Neg, Sub};
@@ -113,6 +114,12 @@ impl F32x4 {
     #[inline(always)]
     pub fn max(self, o: F32x4) -> F32x4 {
         F32x4(unsafe { vmaxq_f32(self.0, o.0) })
+    }
+
+    /// Lane-wise min (`vminq_f32`) — the upper clamp of ReLU6.
+    #[inline(always)]
+    pub fn min(self, o: F32x4) -> F32x4 {
+        F32x4(unsafe { vminq_f32(self.0, o.0) })
     }
 
     /// Horizontal sum of the four lanes (`vaddvq_f32`).

@@ -108,6 +108,17 @@ impl F32x4 {
         ])
     }
 
+    /// Lane-wise min (NEON `vminq_f32`) — the upper clamp of ReLU6.
+    #[inline(always)]
+    pub fn min(self, o: F32x4) -> F32x4 {
+        F32x4([
+            self.0[0].min(o.0[0]),
+            self.0[1].min(o.0[1]),
+            self.0[2].min(o.0[2]),
+            self.0[3].min(o.0[3]),
+        ])
+    }
+
     /// Horizontal sum of the four lanes (NEON `vaddvq_f32`).
     #[inline(always)]
     pub fn horizontal_sum(self) -> f32 {

@@ -52,7 +52,7 @@
 use super::transform::{transform_and_pack, transform_tile_lanes, transform_tile_scalar};
 use super::{fast, WinogradPlan, WinogradVariant};
 use crate::gemm::pack::{packed_b_panel_bytes, PackedAWriter};
-use crate::gemm::{BatchedGemm, Blocking, Epilogue, PackedB, MR, NR};
+use crate::gemm::{Activation, BatchedGemm, Blocking, Epilogue, PackedB, MR, NR};
 use crate::parallel::ThreadPool;
 use crate::simd::F32x4;
 use crate::tensor::{Tensor, TensorView};
@@ -366,7 +366,7 @@ impl WinogradConvolution {
     /// Allocates a throwaway [`Workspace`]; hot loops should hold one and
     /// call [`run_fused_with`](Self::run_fused_with) instead.
     pub fn run(&self, input: &Tensor, pool: Option<&ThreadPool>) -> Result<Tensor> {
-        self.run_fused(input, pool, None, false)
+        self.run_fused(input, pool, None, Activation::None)
     }
 
     /// [`run`](Self::run) with per-output-channel bias and optional ReLU
@@ -377,10 +377,10 @@ impl WinogradConvolution {
         input: &Tensor,
         pool: Option<&ThreadPool>,
         bias: Option<&[f32]>,
-        relu: bool,
+        act: Activation,
     ) -> Result<Tensor> {
         let mut ws = Workspace::new();
-        self.run_fused_with(input, pool, bias, relu, &mut ws)
+        self.run_fused_with(input, pool, bias, act, &mut ws)
     }
 
     /// The fused region-blocked pipeline over a caller-owned arena,
@@ -392,7 +392,7 @@ impl WinogradConvolution {
         input: &Tensor,
         pool: Option<&ThreadPool>,
         bias: Option<&[f32]>,
-        relu: bool,
+        act: Activation,
         ws: &mut Workspace,
     ) -> Result<Tensor> {
         let view = input.view();
@@ -400,7 +400,7 @@ impl WinogradConvolution {
         let (n, h, w) = (input.shape()[0], input.shape()[1], input.shape()[2]);
         let (oh, ow) = self.output_hw(h, w)?;
         let mut output = Tensor::zeros(&[n, oh, ow, self.cout]);
-        self.run_fused_into(&view, pool, bias, relu, ws, output.data_mut())?;
+        self.run_fused_into(&view, pool, bias, act, ws, output.data_mut())?;
         Ok(output)
     }
 
@@ -418,7 +418,7 @@ impl WinogradConvolution {
         input: &TensorView,
         pool: Option<&ThreadPool>,
         bias: Option<&[f32]>,
-        relu: bool,
+        act: Activation,
         ws: &mut Workspace,
         out: &mut [f32],
     ) -> Result<()> {
@@ -535,7 +535,7 @@ impl WinogradConvolution {
                 ow: g.ow,
                 m_total,
                 bias,
-                relu,
+                act,
             };
             bgd.run_packed_fused(pool, &a_blk[..tiles * tile_stride], &self.u_packed, &gather);
         }
@@ -547,7 +547,7 @@ impl WinogradConvolution {
     /// gather) with a throwaway arena — the E6 ablation baseline.
     pub fn run_staged(&self, input: &Tensor, pool: Option<&ThreadPool>) -> Result<Tensor> {
         let mut ws = Workspace::new();
-        self.run_staged_with(input, pool, None, false, &mut ws)
+        self.run_staged_with(input, pool, None, Activation::None, &mut ws)
     }
 
     /// The pre-fusion three-stage pipeline over a caller-owned arena: the
@@ -562,7 +562,7 @@ impl WinogradConvolution {
         input: &Tensor,
         pool: Option<&ThreadPool>,
         bias: Option<&[f32]>,
-        relu: bool,
+        act: Activation,
         ws: &mut Workspace,
     ) -> Result<Tensor> {
         self.check_input(&input.view(), bias)?;
@@ -685,18 +685,15 @@ impl WinogradConvolution {
                             };
                         }
                         inverse_transform_dispatch(&self.plan, &t_in, &mut y_out, &mut tmp);
-                        // Fused epilogue: bias + ReLU while the tile is hot.
-                        if bias.is_some() || relu {
+                        // Fused epilogue: bias + activation while the tile
+                        // is hot.
+                        if bias.is_some() || !act.is_none() {
                             let bv = match bias {
                                 Some(b) => F32x4::load_partial(&b[mg..mg + lanes]),
                                 None => F32x4::zero(),
                             };
                             for yv in y_out[..mh * mw].iter_mut() {
-                                let mut t = *yv + bv;
-                                if relu {
-                                    t = t.max(F32x4::zero());
-                                }
-                                *yv = t;
+                                *yv = act.apply_vec(*yv + bv);
                             }
                         }
                         // Write the valid part of the mh×mw output tile.
@@ -774,7 +771,7 @@ struct GatherEpilogue<'a> {
     ow: usize,
     m_total: usize,
     bias: Option<&'a [f32]>,
-    relu: bool,
+    act: Activation,
 }
 
 impl Epilogue for GatherEpilogue<'_> {
@@ -815,18 +812,14 @@ impl Epilogue for GatherEpilogue<'_> {
                     };
                 }
                 inverse_transform_dispatch(plan, &t_in, &mut y_out, &mut tmp);
-                // Fused bias + ReLU while the tile is in registers.
-                if self.bias.is_some() || self.relu {
+                // Fused bias + activation while the tile is in registers.
+                if self.bias.is_some() || !self.act.is_none() {
                     let bv = match self.bias {
                         Some(bb) => F32x4::load_partial(&bb[m_abs..m_abs + lanes]),
                         None => F32x4::zero(),
                     };
                     for yv in y_out[..mh * mw].iter_mut() {
-                        let mut t = *yv + bv;
-                        if self.relu {
-                            t = t.max(F32x4::zero());
-                        }
-                        *yv = t;
+                        *yv = self.act.apply_vec(*yv + bv);
                     }
                 }
                 // Write the valid part of the mh×mw output tile.
@@ -969,8 +962,9 @@ mod tests {
     /// multiple of `MR` and the channel counts are not multiples of 4, the
     /// fused pipeline (transform-as-pack + gather-as-epilogue) must match
     /// the staged three-pass pipeline for every epilogue mode
-    /// {none, bias, bias+ReLU}, serial and pooled — and both must match
-    /// direct convolution with the same bias/ReLU applied as a post pass.
+    /// {none, bias, bias+ReLU, bias+ReLU6}, serial and pooled — and both
+    /// must match direct convolution with the same bias/activation applied
+    /// as a post pass.
     #[test]
     fn fused_matches_staged_all_variants_and_epilogues() {
         let pool = ThreadPool::new(3);
@@ -986,49 +980,46 @@ mod tests {
             let bias: Vec<f32> = (0..m).map(|i| (i as f32) * 0.5 - 1.5).collect();
             let conv = WinogradConvolution::new(v, &weights, (0, 0)).unwrap();
             let direct = direct_conv2d(&input, &weights, (1, 1), (0, 0)).unwrap();
-            for (bias_opt, relu) in [
-                (None, false),
-                (Some(bias.as_slice()), false),
-                (Some(bias.as_slice()), true),
+            for (bias_opt, act) in [
+                (None, Activation::None),
+                (Some(bias.as_slice()), Activation::None),
+                (Some(bias.as_slice()), Activation::Relu),
+                (Some(bias.as_slice()), Activation::Relu6),
             ] {
                 let mut ws_f = Workspace::new();
                 let mut ws_s = Workspace::new();
                 let fused = conv
-                    .run_fused_with(&input, None, bias_opt, relu, &mut ws_f)
+                    .run_fused_with(&input, None, bias_opt, act, &mut ws_f)
                     .unwrap();
                 let staged = conv
-                    .run_staged_with(&input, None, bias_opt, relu, &mut ws_s)
+                    .run_staged_with(&input, None, bias_opt, act, &mut ws_s)
                     .unwrap();
                 assert_eq!(fused.shape(), staged.shape(), "{v}");
                 assert!(
                     fused.allclose(&staged, 1e-5),
-                    "{v} bias={} relu={relu}: fused != staged, rel err {}",
+                    "{v} bias={} act={act}: fused != staged, rel err {}",
                     bias_opt.is_some(),
                     crate::util::rel_error(fused.data(), staged.data())
                 );
                 let fused_pool = conv
-                    .run_fused_with(&input, Some(&pool), bias_opt, relu, &mut ws_f)
+                    .run_fused_with(&input, Some(&pool), bias_opt, act, &mut ws_f)
                     .unwrap();
                 assert!(
                     fused_pool.allclose(&staged, 1e-5),
-                    "{v} bias={} relu={relu}: pooled fused != staged",
+                    "{v} bias={} act={act}: pooled fused != staged",
                     bias_opt.is_some()
                 );
                 // Oracle: direct conv + the same epilogue as a post pass.
                 let mut want = direct.clone();
-                if bias_opt.is_some() || relu {
+                if bias_opt.is_some() || !act.is_none() {
                     let chans = want.shape()[3];
                     for (i, vv) in want.data_mut().iter_mut().enumerate() {
-                        let mut t = *vv + bias_opt.map_or(0.0, |b| b[i % chans]);
-                        if relu {
-                            t = t.max(0.0);
-                        }
-                        *vv = t;
+                        *vv = act.apply(*vv + bias_opt.map_or(0.0, |b| b[i % chans]));
                     }
                 }
                 assert!(
                     fused.allclose(&want, 2e-3),
-                    "{v} bias={} relu={relu}: fused != direct oracle",
+                    "{v} bias={} act={act}: fused != direct oracle",
                     bias_opt.is_some()
                 );
             }
@@ -1036,7 +1027,8 @@ mod tests {
     }
 
     /// The write-into refactor (satellite property test): for **every**
-    /// shipped variant × {none, bias, bias+ReLU} × ragged shapes,
+    /// shipped variant × {none, bias, bias+ReLU, bias+ReLU6} × ragged
+    /// shapes,
     /// `run_fused_into` writing into an offset window of a dirty buffer
     /// (NaN-poisoned, so any unwritten element is caught) must be
     /// **bit-identical** to the PR-2-style allocating entry point — the
@@ -1053,15 +1045,16 @@ mod tests {
             let bias: Vec<f32> = (0..m).map(|i| (i as f32) * 0.25 - 0.5).collect();
             // Pad so staging is exercised even where the grid would align.
             let conv = WinogradConvolution::new(v, &weights, (kh / 2, kw / 2)).unwrap();
-            for (bias_opt, relu) in [
-                (None, false),
-                (Some(bias.as_slice()), false),
-                (Some(bias.as_slice()), true),
+            for (bias_opt, act) in [
+                (None, Activation::None),
+                (Some(bias.as_slice()), Activation::None),
+                (Some(bias.as_slice()), Activation::Relu),
+                (Some(bias.as_slice()), Activation::Relu6),
             ] {
                 let mut ws_a = Workspace::new();
                 let mut ws_b = Workspace::new();
                 let want = conv
-                    .run_fused_with(&input, None, bias_opt, relu, &mut ws_a)
+                    .run_fused_with(&input, None, bias_opt, act, &mut ws_a)
                     .unwrap();
                 let off = 7usize; // misaligned window into a larger buffer
                 let mut backing = vec![f32::NAN; want.len() + 2 * off];
@@ -1069,7 +1062,7 @@ mod tests {
                     &input.view(),
                     None,
                     bias_opt,
-                    relu,
+                    act,
                     &mut ws_b,
                     &mut backing[off..off + want.len()],
                 )
@@ -1077,7 +1070,7 @@ mod tests {
                 assert_eq!(
                     &backing[off..off + want.len()],
                     want.data(),
-                    "{v} bias={} relu={relu}: write-into differs from allocating path",
+                    "{v} bias={} act={act}: write-into differs from allocating path",
                     bias_opt.is_some()
                 );
                 assert!(backing[..off].iter().all(|x| x.is_nan()));
@@ -1088,7 +1081,7 @@ mod tests {
                         &input.view(),
                         None,
                         bias_opt,
-                        relu,
+                        act,
                         &mut ws_b,
                         &mut backing[..want.len() - 1],
                     )
@@ -1158,7 +1151,7 @@ mod tests {
         let mut ws = Workspace::new();
         for seed in 0..3 {
             let input = Tensor::randn(&[1, 12, 12, 8], seed + 10);
-            let _ = conv.run_fused_with(&input, None, None, false, &mut ws).unwrap();
+            let _ = conv.run_fused_with(&input, None, None, Activation::None, &mut ws).unwrap();
         }
         assert_eq!(ws.grow_count(), 1, "one growth on first use, then reuse");
 
@@ -1166,7 +1159,7 @@ mod tests {
         let mut presized = Workspace::with_capacity(elems);
         let input = Tensor::randn(&[1, 12, 12, 8], 99);
         let _ = conv
-            .run_fused_with(&input, None, None, false, &mut presized)
+            .run_fused_with(&input, None, None, Activation::None, &mut presized)
             .unwrap();
         assert_eq!(presized.grow_count(), 0, "pre-sized arena must not grow");
         assert_eq!(presized.high_water_elems(), elems, "sizing formula is exact");
@@ -1181,7 +1174,7 @@ mod tests {
         let mut ws = Workspace::new();
         for seed in 0..2 {
             let input = Tensor::randn(&[1, 12, 12, 8], seed + 50);
-            let _ = conv.run_staged_with(&input, None, None, false, &mut ws).unwrap();
+            let _ = conv.run_staged_with(&input, None, None, Activation::None, &mut ws).unwrap();
         }
         assert_eq!(ws.grow_count(), 1, "staged arena grows once, then reuses");
         assert_eq!(
@@ -1233,9 +1226,9 @@ mod tests {
         let conv = WinogradConvolution::new(WinogradVariant::F2x2_3x3, &weights, (1, 1)).unwrap();
         let input = Tensor::randn(&[1, 8, 8, 4], 1);
         let bias = vec![0.0; 7]; // != 8 output channels
-        assert!(conv.run_fused(&input, None, Some(&bias), false).is_err());
+        assert!(conv.run_fused(&input, None, Some(&bias), Activation::None).is_err());
         assert!(conv
-            .run_staged_with(&input, None, Some(&bias), false, &mut Workspace::new())
+            .run_staged_with(&input, None, Some(&bias), Activation::None, &mut Workspace::new())
             .is_err());
     }
 

@@ -1,0 +1,219 @@
+//! MobileNetV1 (Howard et al. 2017) and MobileNetV2 (Sandler et al. 2018)
+//! — the depthwise-separable workload class the direct depthwise engine
+//! ([`crate::conv::depthwise`]) exists for.
+//!
+//! Both networks interleave 3×3 **depthwise** convolutions (one filter per
+//! channel — `groups == cin == cout`, bound to the register-tiled direct
+//! engine by the selector) with 1×1 **pointwise** convolutions (pure
+//! channel mixing — GEMM-dominated, so they stay on the fused im2row/GEMM
+//! path). All hidden activations are the ReLU6 clamp the TF reference
+//! models train with, fused through the conv epilogues; MobileNetV2's
+//! projection layers are linear (no activation) and its stride-1
+//! equal-width bottlenecks carry an elementwise residual
+//! ([`crate::nn::Op::Add`]).
+//!
+//! Note on the benchmark schemes: neither network has a single
+//! Winograd-suitable layer (the only dense 3×3 conv is the stride-2 stem),
+//! so `Scheme::Im2RowOnly` and `Scheme::WinogradWhereSuitable` bind
+//! identically — the interesting comparison for this class is the
+//! depthwise engine vs the im2row-as-grouped degenerate baseline
+//! (`benches/ablation_depthwise.rs`), not Table 1's scheme split.
+
+use super::Builder;
+use crate::conv::Activation;
+use crate::nn::{Graph, NodeId};
+use crate::Result;
+
+/// One depthwise-separable block: dw 3×3 (stride `s`, ReLU6) → pw 1×1
+/// (ReLU6). Returns the pointwise output.
+fn separable(
+    b: &mut Builder,
+    name: &str,
+    from: NodeId,
+    cin: usize,
+    cout: usize,
+    stride: usize,
+) -> NodeId {
+    let dw = b.dwconv(&format!("{name}/dw"), from, cin, stride, Activation::Relu6);
+    b.conv_act(
+        &format!("{name}/pw"),
+        dw,
+        cin,
+        cout,
+        (1, 1),
+        (1, 1),
+        (0, 0),
+        Activation::Relu6,
+    )
+}
+
+/// Build MobileNetV1 at width 1.0 (224×224×3 → 1000 classes): a 3×3/2 stem
+/// then 13 depthwise-separable blocks, GAP, FC.
+pub fn build_v1(seed: u64) -> Result<Graph> {
+    let (mut b, input) = Builder::new(seed);
+    let c1 = b.conv_act("conv1", input, 3, 32, (3, 3), (2, 2), (1, 1), Activation::Relu6);
+    // (cin, cout, stride) per separable block, Table 1 of the paper.
+    let blocks: [(usize, usize, usize); 13] = [
+        (32, 64, 1),
+        (64, 128, 2),
+        (128, 128, 1),
+        (128, 256, 2),
+        (256, 256, 1),
+        (256, 512, 2),
+        (512, 512, 1),
+        (512, 512, 1),
+        (512, 512, 1),
+        (512, 512, 1),
+        (512, 512, 1),
+        (512, 1024, 2),
+        (1024, 1024, 1),
+    ];
+    let mut prev = c1;
+    for (i, &(cin, cout, s)) in blocks.iter().enumerate() {
+        prev = separable(&mut b, &format!("sep{}", i + 2), prev, cin, cout, s);
+    }
+    let gap = b.gap("gap", prev);
+    let fc = b.fc("fc", gap, 1024, 1000, false);
+    b.softmax("prob", fc);
+    Ok(b.g)
+}
+
+/// One MobileNetV2 inverted-residual bottleneck: pw-expand (×`t`, ReLU6,
+/// skipped when `t == 1`) → dw 3×3 (stride `s`, ReLU6) → pw-linear
+/// projection; plus a residual add when the block keeps shape.
+fn bottleneck(
+    b: &mut Builder,
+    name: &str,
+    from: NodeId,
+    cin: usize,
+    cout: usize,
+    stride: usize,
+    t: usize,
+) -> NodeId {
+    let hidden = cin * t;
+    let x = if t == 1 {
+        from
+    } else {
+        b.conv_act(
+            &format!("{name}/expand"),
+            from,
+            cin,
+            hidden,
+            (1, 1),
+            (1, 1),
+            (0, 0),
+            Activation::Relu6,
+        )
+    };
+    let dw = b.dwconv(&format!("{name}/dw"), x, hidden, stride, Activation::Relu6);
+    let proj = b.conv_act(
+        &format!("{name}/project"),
+        dw,
+        hidden,
+        cout,
+        (1, 1),
+        (1, 1),
+        (0, 0),
+        Activation::None,
+    );
+    if stride == 1 && cin == cout {
+        b.add(&format!("{name}/add"), from, proj)
+    } else {
+        proj
+    }
+}
+
+/// Build MobileNetV2 at width 1.0 (224×224×3 → 1000 classes): stem, 17
+/// inverted-residual bottlenecks per the paper's Table 2
+/// `(t, c, n, s)` rows, the 1×1×1280 head, GAP, FC.
+pub fn build_v2(seed: u64) -> Result<Graph> {
+    let (mut b, input) = Builder::new(seed);
+    let mut prev = b.conv_act("conv1", input, 3, 32, (3, 3), (2, 2), (1, 1), Activation::Relu6);
+    // (expansion t, output channels c, repeats n, first-block stride s).
+    let rows: [(usize, usize, usize, usize); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut cin = 32;
+    let mut idx = 0;
+    for &(t, c, n, s) in rows.iter() {
+        for rep in 0..n {
+            let stride = if rep == 0 { s } else { 1 };
+            idx += 1;
+            prev = bottleneck(&mut b, &format!("block{idx}"), prev, cin, c, stride, t);
+            cin = c;
+        }
+    }
+    let head = b.conv_act("conv_head", prev, 320, 1280, (1, 1), (1, 1), (0, 0), Activation::Relu6);
+    let gap = b.gap("gap", head);
+    let fc = b.fc("fc", gap, 1280, 1000, false);
+    b.softmax("prob", fc);
+    Ok(b.g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::select::is_winograd_suitable;
+    use crate::nn::Op;
+
+    #[test]
+    fn v1_structure() {
+        let g = build_v1(1).unwrap();
+        // Stem + 13 × (dw + pw) = 27 convs.
+        assert_eq!(g.conv_count(), 27);
+        let shapes = g.infer_shapes(&[1, 224, 224, 3]).unwrap();
+        assert_eq!(shapes.last().unwrap(), &vec![1, 1000]);
+        // The canonical spatial schedule: 224 → 112 → 56 → 28 → 14 → 7.
+        let idx = g.nodes.iter().position(|n| n.name == "sep14/pw").unwrap();
+        assert_eq!(shapes[idx], vec![1, 7, 7, 1024]);
+        // 13 depthwise + zero Winograd-suitable layers.
+        let mut dw = 0;
+        for n in &g.nodes {
+            if let Op::Conv { desc, .. } = &n.op {
+                if desc.groups > 1 {
+                    assert_eq!(desc.groups, desc.cin);
+                    assert_eq!(desc.groups, desc.cout);
+                    dw += 1;
+                }
+                assert!(!is_winograd_suitable(desc.kernel, desc.stride, desc.groups));
+            }
+        }
+        assert_eq!(dw, 13);
+    }
+
+    #[test]
+    fn v2_structure() {
+        let g = build_v2(1).unwrap();
+        let shapes = g.infer_shapes(&[1, 224, 224, 3]).unwrap();
+        assert_eq!(shapes.last().unwrap(), &vec![1, 1000]);
+        // 17 bottlenecks ⇒ 17 depthwise convs; 10 of them residual.
+        let dw = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(&n.op, Op::Conv { desc, .. } if desc.groups > 1))
+            .count();
+        assert_eq!(dw, 17);
+        let adds = g.nodes.iter().filter(|n| matches!(n.op, Op::Add)).count();
+        assert_eq!(adds, 10);
+        // Head sees 7×7×320 → 1280.
+        let idx = g.nodes.iter().position(|n| n.name == "conv_head").unwrap();
+        assert_eq!(shapes[idx], vec![1, 7, 7, 1280]);
+        // Every hidden conv activation is ReLU6 or linear (projections).
+        for n in &g.nodes {
+            if let Op::Conv { act, .. } = &n.op {
+                assert!(
+                    *act == crate::conv::Activation::Relu6
+                        || *act == crate::conv::Activation::None,
+                    "{}: unexpected activation {act}",
+                    n.name
+                );
+            }
+        }
+    }
+}

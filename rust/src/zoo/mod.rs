@@ -1,8 +1,10 @@
-//! The five CNNs the paper evaluates (§3): VGG-16, VGG-19, GoogleNet
-//! (Inception-v1), Inception-v3 and SqueezeNet (v1.0), built as [`Graph`]s
-//! with deterministic synthetic weights (runtime of dense fp32 conv is
-//! data-independent, so synthetic weights preserve every timing property —
-//! see DESIGN.md §Substitutions).
+//! The evaluated CNNs as [`Graph`]s with deterministic synthetic weights
+//! (runtime of dense fp32 conv is data-independent, so synthetic weights
+//! preserve every timing property — see DESIGN.md §Substitutions): the five
+//! networks of the paper's §3 (VGG-16, VGG-19, GoogleNet/Inception-v1,
+//! Inception-v3, SqueezeNet v1.0) plus the depthwise-separable MobileNetV1
+//! and MobileNetV2 — the workload class the direct depthwise engine
+//! ([`crate::conv::depthwise`]) exists for.
 //!
 //! Architectures follow the original papers' layer tables; layer names match
 //! the conventions used in each paper so Table 2 rows are recognisable.
@@ -11,8 +13,9 @@ pub mod vgg;
 pub mod squeezenet;
 pub mod googlenet;
 pub mod inception_v3;
+pub mod mobilenet;
 
-use crate::conv::Conv2d;
+use crate::conv::{Activation, Conv2d};
 use crate::nn::{Graph, NodeId, Op};
 use crate::tensor::Tensor;
 use crate::Result;
@@ -30,16 +33,22 @@ pub enum ModelKind {
     InceptionV3,
     /// SqueezeNet v1.0 (224×224 input).
     SqueezeNet,
+    /// MobileNetV1 (224×224 input, depthwise-separable).
+    MobileNetV1,
+    /// MobileNetV2 (224×224 input, inverted residuals + ReLU6).
+    MobileNetV2,
 }
 
 impl ModelKind {
-    /// All five models, in the paper's table order.
-    pub const ALL: [ModelKind; 5] = [
+    /// Every model: the paper's five in table order, then the MobileNets.
+    pub const ALL: [ModelKind; 7] = [
         ModelKind::Vgg16,
         ModelKind::Vgg19,
         ModelKind::GoogleNet,
         ModelKind::InceptionV3,
         ModelKind::SqueezeNet,
+        ModelKind::MobileNetV1,
+        ModelKind::MobileNetV2,
     ];
 
     /// Canonical lowercase name (CLI `--model` values).
@@ -50,10 +59,12 @@ impl ModelKind {
             ModelKind::GoogleNet => "googlenet",
             ModelKind::InceptionV3 => "inception-v3",
             ModelKind::SqueezeNet => "squeezenet",
+            ModelKind::MobileNetV1 => "mobilenet-v1",
+            ModelKind::MobileNetV2 => "mobilenet-v2",
         }
     }
 
-    /// Display name as the paper's tables print it.
+    /// Display name as the papers' tables print it.
     pub fn display(&self) -> &'static str {
         match self {
             ModelKind::Vgg16 => "VGG-16",
@@ -61,6 +72,8 @@ impl ModelKind {
             ModelKind::GoogleNet => "GoogleNet",
             ModelKind::InceptionV3 => "Inception-v3",
             ModelKind::SqueezeNet => "SqueezeNet",
+            ModelKind::MobileNetV1 => "MobileNetV1",
+            ModelKind::MobileNetV2 => "MobileNetV2",
         }
     }
 
@@ -72,6 +85,10 @@ impl ModelKind {
             "googlenet" | "inception-v1" => Some(ModelKind::GoogleNet),
             "inception-v3" | "inceptionv3" | "inception3" => Some(ModelKind::InceptionV3),
             "squeezenet" => Some(ModelKind::SqueezeNet),
+            "mobilenet-v1" | "mobilenetv1" | "mobilenet1" | "mobilenet" => {
+                Some(ModelKind::MobileNetV1)
+            }
+            "mobilenet-v2" | "mobilenetv2" | "mobilenet2" => Some(ModelKind::MobileNetV2),
             _ => None,
         }
     }
@@ -92,6 +109,8 @@ impl ModelKind {
             ModelKind::GoogleNet => googlenet::build(seed),
             ModelKind::InceptionV3 => inception_v3::build(seed),
             ModelKind::SqueezeNet => squeezenet::build(seed),
+            ModelKind::MobileNetV1 => mobilenet::build_v1(seed),
+            ModelKind::MobileNetV2 => mobilenet::build_v2(seed),
         }
     }
 }
@@ -132,6 +151,23 @@ impl Builder {
         stride: (usize, usize),
         pad: (usize, usize),
     ) -> NodeId {
+        self.conv_act(name, from, cin, cout, kernel, stride, pad, Activation::Relu)
+    }
+
+    /// Conv + bias + explicit activation (the MobileNets fuse ReLU6, and
+    /// MobileNetV2's projection layers are linear).
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv_act(
+        &mut self,
+        name: &str,
+        from: NodeId,
+        cin: usize,
+        cout: usize,
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        pad: (usize, usize),
+        act: Activation,
+    ) -> NodeId {
         let desc = Conv2d::new(cin, cout, kernel)
             .with_stride(stride)
             .with_padding(pad);
@@ -140,9 +176,38 @@ impl Builder {
         let bias = Tensor::rand_uniform(&[cout], -0.05, 0.05, bias_seed).into_vec();
         self.g.add(
             name,
-            Op::Conv { desc, weights, bias, relu: true },
+            Op::Conv { desc, weights, bias, act },
             &[from],
         )
+    }
+
+    /// Depthwise 3×3 conv (`groups == cin == cout`) + bias + activation —
+    /// same-padded, stride 1 or 2, `[C, 3, 3, 1]` weights.
+    pub fn dwconv(
+        &mut self,
+        name: &str,
+        from: NodeId,
+        c: usize,
+        stride: usize,
+        act: Activation,
+    ) -> NodeId {
+        let desc = Conv2d::new(c, c, (3, 3))
+            .with_groups(c)
+            .with_stride((stride, stride))
+            .with_padding((1, 1));
+        let weights = desc.random_weights(self.next_seed());
+        let bias_seed = self.next_seed();
+        let bias = Tensor::rand_uniform(&[c], -0.05, 0.05, bias_seed).into_vec();
+        self.g.add(
+            name,
+            Op::Conv { desc, weights, bias, act },
+            &[from],
+        )
+    }
+
+    /// Elementwise residual add (MobileNetV2 inverted-residual skip).
+    pub fn add(&mut self, name: &str, a: NodeId, b: NodeId) -> NodeId {
+        self.g.add(name, Op::Add, &[a, b])
     }
 
     pub fn maxpool(

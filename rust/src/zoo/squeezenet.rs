@@ -78,7 +78,7 @@ mod tests {
         for n in &g.nodes {
             if let Op::Conv { desc, .. } = &n.op {
                 let suitable =
-                    crate::conv::select::is_winograd_suitable(desc.kernel, desc.stride);
+                    crate::conv::select::is_winograd_suitable(desc.kernel, desc.stride, desc.groups);
                 assert_eq!(
                     suitable,
                     n.name.contains("expand3x3"),

@@ -126,6 +126,65 @@ fn squeezenet_planned_path_is_allocation_free() {
     assert_eq!(prepared.fallback_count(), 0, "no contention, no fallback");
 }
 
+/// MobileNetV1 and MobileNetV2 end-to-end through the planned write-into
+/// path (the acceptance gate): every 3×3 depthwise layer dispatches to the
+/// direct depthwise engine, `run_planned_into` matches `run()` bit for
+/// bit on a NaN-poisoned output slice, and grow-count = fallback-count = 0
+/// over pre-sized arenas.
+#[test]
+fn mobilenets_planned_path_is_allocation_free() {
+    let pool = ThreadPool::new(2);
+    for model in [ModelKind::MobileNetV1, ModelKind::MobileNetV2] {
+        let graph = model.build(3).unwrap();
+        let shape = model.input_shape(1);
+        let input = Tensor::randn(&shape, 19);
+        let prepared =
+            PreparedModel::prepare(model.name(), &graph, &shape, Scheme::WinogradWhereSuitable)
+                .unwrap();
+        // Binding census: all depthwise layers on the direct engine, the
+        // pointwise/stem layers on im2row, nothing on Winograd (no
+        // suitable layer exists in either MobileNet).
+        let census = prepared.dispatch_census();
+        let expect_dw = if model == ModelKind::MobileNetV1 { 13 } else { 17 };
+        assert_eq!(census.depthwise, expect_dw, "{model}");
+        assert_eq!(census.winograd, 0, "{model}");
+        assert_eq!(census.direct, 0, "{model}");
+        assert!(census.im2row > 0, "{model}");
+
+        let plan = prepared.activation_plan();
+        assert!(plan.peak_elems() < plan.naive_elems(), "{model}: planner found no sharing");
+        let (want, timings) = prepared.run(&input, Some(&pool)).unwrap();
+        assert_eq!(want.shape(), &[1, 1000]);
+        let s: f32 = want.data().iter().sum();
+        assert!((s - 1.0).abs() < 1e-3, "{model}: softmax distribution");
+        assert!(timings.iter().all(|t| !t.winograd), "{model}");
+
+        let mut ws = Workspace::with_capacity(prepared.workspace_elems());
+        let mut acts = Workspace::with_capacity(plan.peak_elems());
+        let mut out = vec![f32::NAN; want.len()];
+        for _ in 0..2 {
+            prepared
+                .run_planned_into(&input, Some(&pool), &mut ws, &mut acts, &mut out)
+                .unwrap();
+            assert_eq!(out, want.data(), "{model}: planned-into differs from run()");
+        }
+        assert_eq!(ws.grow_count(), 0, "{model}: scratch arena grew");
+        assert_eq!(acts.grow_count(), 0, "{model}: activation arena grew");
+        assert_eq!(prepared.fallback_count(), 0, "{model}: fallback taken");
+        // 3 completed walks × the static census.
+        let counts = prepared.dispatch_counts();
+        assert_eq!(counts.depthwise, 3 * expect_dw, "{model}");
+        assert_eq!(counts.total(), 3 * census.total(), "{model}");
+
+        // Both schemes bind MobileNets identically (no Winograd-suitable
+        // layer), so their outputs are bit-identical.
+        let base =
+            PreparedModel::prepare(model.name(), &graph, &shape, Scheme::Im2RowOnly).unwrap();
+        let (y_base, _) = base.run(&input, Some(&pool)).unwrap();
+        assert_eq!(y_base.data(), want.data(), "{model}: schemes must bind identically");
+    }
+}
+
 /// GoogleNet end-to-end through branches/concats/LRN under the Winograd
 /// scheme, checked against the im2row scheme.
 #[test]
