@@ -13,6 +13,12 @@ run() {
     "$@"
 }
 
+# Static-invariant gate, first and fatal: documented unsafe, allocation-free
+# hot paths, SIMD backend + entry-point parity, registered targets. Fails
+# with file:line findings and prints the files-scanned / unsafe-sites /
+# waivers summary on every run so the counts show up in every CI log.
+run cargo run --release --bin statcheck
+
 run cargo build --release
 run cargo test -q
 

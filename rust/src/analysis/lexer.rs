@@ -1,0 +1,343 @@
+//! A small hand-rolled Rust lexer for the `statcheck` passes.
+//!
+//! The offline build forbids `syn`, so the static-analysis passes work on a
+//! flat token stream instead of a syntax tree. The lexer understands exactly
+//! the constructs that would otherwise produce false positives on a text
+//! search: line and (nested) block comments, string/raw-string/byte-string
+//! and char literals, lifetimes vs chars (`'a` vs `'a'`), identifiers,
+//! numbers, and single-character punctuation. Multi-character operators
+//! (`::`, `->`, `..`) are emitted as runs of single `Punct` tokens; the
+//! passes match on those runs.
+//!
+//! Every token carries the 1-based line it starts on, so findings can point
+//! at `file:line`.
+
+/// What a token is. Comments are kept in the stream — the unsafe-audit pass
+/// reads them — and filtered out by [`super::parse::Parsed`] for the passes
+/// that only want code.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `unsafe`, `Vec`, …).
+    Ident,
+    /// A single punctuation character.
+    Punct,
+    /// String literal, including raw and byte strings.
+    Str,
+    /// Char literal, e.g. `'x'` or `'\n'`.
+    Char,
+    /// Lifetime, e.g. `'a` or `'static`.
+    Lifetime,
+    /// Numeric literal (loosely lexed; good enough for pattern matching).
+    Num,
+    /// `// …` comment (doc comments included).
+    LineComment,
+    /// `/* … */` comment, possibly nested and multi-line.
+    BlockComment,
+}
+
+/// One lexed token: kind, exact text, and the 1-based line it starts on.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+}
+
+fn collect(cs: &[char]) -> String {
+    cs.iter().collect()
+}
+
+fn count_newlines(cs: &[char]) -> usize {
+    cs.iter().filter(|&&c| c == '\n').count()
+}
+
+/// Lex `src` into a token stream. Never fails: malformed input (unterminated
+/// strings or comments) is absorbed into the current token to end-of-file.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            i += 1;
+            continue;
+        }
+        // Line comment.
+        if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+            let start = i;
+            while i < n && cs[i] != '\n' {
+                i += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::LineComment,
+                text: collect(&cs[start..i]),
+                line,
+            });
+            continue;
+        }
+        // Block comment (nested).
+        if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if cs[i] == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if cs[i] == '*' && i + 1 < n && cs[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if cs[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            toks.push(Tok {
+                kind: TokKind::BlockComment,
+                text: collect(&cs[start..i]),
+                line: start_line,
+            });
+            continue;
+        }
+        // Raw strings (`r"…"`, `r#"…"#`) and byte strings (`b"…"`, `br"…"`),
+        // tried before identifier lexing; plain `r`/`b` idents fall through.
+        if c == 'r' || c == 'b' {
+            let mut j = i;
+            if cs[j] == 'b' {
+                j += 1;
+            }
+            if j < n && cs[j] == 'r' {
+                let mut k = j + 1;
+                let mut hashes = 0usize;
+                while k < n && cs[k] == '#' {
+                    hashes += 1;
+                    k += 1;
+                }
+                if k < n && cs[k] == '"' {
+                    // Scan for `"` followed by `hashes` hash marks.
+                    k += 1;
+                    loop {
+                        if k >= n {
+                            break;
+                        }
+                        if cs[k] == '"' {
+                            let mut h = 0usize;
+                            while k + 1 + h < n && h < hashes && cs[k + 1 + h] == '#' {
+                                h += 1;
+                            }
+                            if h == hashes {
+                                k += 1 + hashes;
+                                break;
+                            }
+                        }
+                        k += 1;
+                    }
+                    let start_line = line;
+                    line += count_newlines(&cs[i..k]);
+                    toks.push(Tok {
+                        kind: TokKind::Str,
+                        text: collect(&cs[i..k]),
+                        line: start_line,
+                    });
+                    i = k;
+                    continue;
+                }
+            } else if c == 'b' && j < n && cs[j] == '"' {
+                let mut k = j + 1;
+                while k < n && cs[k] != '"' {
+                    if cs[k] == '\\' {
+                        k += 1;
+                    }
+                    k += 1;
+                }
+                if k < n {
+                    k += 1;
+                }
+                let start_line = line;
+                line += count_newlines(&cs[i..k]);
+                toks.push(Tok {
+                    kind: TokKind::Str,
+                    text: collect(&cs[i..k]),
+                    line: start_line,
+                });
+                i = k;
+                continue;
+            }
+            // Not a string prefix: fall through to identifier lexing.
+        }
+        // String literal.
+        if c == '"' {
+            let mut j = i + 1;
+            while j < n && cs[j] != '"' {
+                if cs[j] == '\\' {
+                    j += 1;
+                }
+                j += 1;
+            }
+            if j < n {
+                j += 1;
+            }
+            let start_line = line;
+            line += count_newlines(&cs[i..j]);
+            toks.push(Tok {
+                kind: TokKind::Str,
+                text: collect(&cs[i..j]),
+                line: start_line,
+            });
+            i = j;
+            continue;
+        }
+        // Lifetime or char literal.
+        if c == '\'' {
+            if i + 1 < n && (cs[i + 1].is_alphabetic() || cs[i + 1] == '_') {
+                let mut j = i + 1;
+                while j < n && (cs[j].is_alphanumeric() || cs[j] == '_') {
+                    j += 1;
+                }
+                if !(j < n && cs[j] == '\'') {
+                    toks.push(Tok {
+                        kind: TokKind::Lifetime,
+                        text: collect(&cs[i..j]),
+                        line,
+                    });
+                    i = j;
+                    continue;
+                }
+            }
+            let mut j = i + 1;
+            if j < n && cs[j] == '\\' {
+                j += 2;
+                while j < n && cs[j] != '\'' {
+                    j += 1;
+                }
+            } else if j < n {
+                j += 1;
+            }
+            if j < n {
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Char,
+                text: collect(&cs[i..j]),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // Identifier / keyword.
+        if c.is_alphabetic() || c == '_' {
+            let mut j = i;
+            while j < n && (cs[j].is_alphanumeric() || cs[j] == '_') {
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Ident,
+                text: collect(&cs[i..j]),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // Number (loose: `1_000`, `0.5f32`, `1e9`; a `.` followed by an
+        // alphabetic char ends the token so `4.min(x)` lexes as a call).
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n {
+                let d = cs[j];
+                if d.is_alphanumeric() || d == '_' {
+                    j += 1;
+                    continue;
+                }
+                if d == '.' {
+                    if j + 1 < n && (cs[j + 1].is_alphabetic() || cs[j + 1] == '_') {
+                        break;
+                    }
+                    j += 1;
+                    continue;
+                }
+                break;
+            }
+            toks.push(Tok {
+                kind: TokKind::Num,
+                text: collect(&cs[i..j]),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        toks.push(Tok {
+            kind: TokKind::Punct,
+            text: c.to_string(),
+            line,
+        });
+        i += 1;
+    }
+    toks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn comments_strings_and_chars_are_single_tokens() {
+        let toks = kinds("let s = \"a // not a comment\"; // real\n/* block */ 'x' 'a");
+        assert!(toks.contains(&(TokKind::Str, "\"a // not a comment\"".to_string())));
+        assert!(toks.contains(&(TokKind::LineComment, "// real".to_string())));
+        assert!(toks.contains(&(TokKind::BlockComment, "/* block */".to_string())));
+        assert!(toks.contains(&(TokKind::Char, "'x'".to_string())));
+        assert!(toks.contains(&(TokKind::Lifetime, "'a".to_string())));
+    }
+
+    #[test]
+    fn nested_block_comments_and_escapes() {
+        let toks = kinds("/* outer /* inner */ still */ x \"esc \\\" quote\" '\\n'");
+        assert_eq!(toks[0].0, TokKind::BlockComment);
+        assert_eq!(toks[1], (TokKind::Ident, "x".to_string()));
+        assert_eq!(toks[2].0, TokKind::Str);
+        assert_eq!(toks[3], (TokKind::Char, "'\\n'".to_string()));
+    }
+
+    #[test]
+    fn raw_strings_swallow_their_contents() {
+        let toks = kinds("r#\"unsafe { vec![] }\"# after");
+        assert_eq!(toks[0].0, TokKind::Str);
+        assert_eq!(toks[1], (TokKind::Ident, "after".to_string()));
+        // `r`-named identifiers are not mistaken for raw strings.
+        let toks = kinds("rows b r");
+        assert!(toks.iter().all(|t| t.0 == TokKind::Ident));
+    }
+
+    #[test]
+    fn line_numbers_track_multiline_tokens() {
+        let toks = lex("a\n/* two\nlines */\nb");
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[1].line, 2); // comment starts on line 2
+        assert_eq!(toks[2].line, 4); // `b` lands after the comment's newline
+    }
+
+    #[test]
+    fn numbers_do_not_eat_method_calls() {
+        let toks = kinds("4.min(x) 0.5 1_000");
+        assert_eq!(toks[0], (TokKind::Num, "4".to_string()));
+        assert_eq!(toks[1], (TokKind::Punct, ".".to_string()));
+        assert_eq!(toks[2], (TokKind::Ident, "min".to_string()));
+        assert!(toks.contains(&(TokKind::Num, "0.5".to_string())));
+        assert!(toks.contains(&(TokKind::Num, "1_000".to_string())));
+    }
+}

@@ -1,0 +1,228 @@
+//! # `analysis` — the in-repo static-analysis passes behind `statcheck`
+//!
+//! The paper's latency wins live in exactly the code Rust cannot check for
+//! us: hand-written NEON intrinsics, a transmute-based fork-join pool, and
+//! arena-backed write-into kernels whose zero-steady-state-allocation claim
+//! was previously enforced only dynamically (grow-count pins in `ci.sh`).
+//! This module turns those structural invariants into a static CI gate.
+//!
+//! Five passes run over the whole tree (`rust/src`, `benches`, `examples`,
+//! `tests`) and fail with `file:line` diagnostics:
+//!
+//! 1. [`unsafe_audit`] — every `unsafe` site carries a `// SAFETY:` comment.
+//! 2. [`no_alloc`] — no allocation tokens in the registered hot paths.
+//! 3. `simd-parity` ([`parity`]) — the portable and NEON backends export
+//!    identical `pub fn` signature sets.
+//! 4. `entry-parity` ([`parity`]) — every `*_into` op keeps its allocating
+//!    twin and vice versa.
+//! 5. [`targets`] — every bench/example is in `Cargo.toml`; every `--smoke`
+//!    bench is exercised by `ci.sh`; `ci.sh` runs `statcheck`.
+//!
+//! The offline build forbids `syn`, so everything sits on the hand-rolled
+//! [`lexer`] + [`parse`] layer: a flat token stream that understands
+//! strings, comments, attributes and brace nesting — exactly enough syntax
+//! to avoid false positives, no more.
+//!
+//! A finding is silenced by an inline waiver comment on the same line or
+//! the line above: `// statcheck: allow(<pass>): why`. Waivers are counted
+//! and printed by the binary so they cannot accumulate silently.
+
+pub mod lexer;
+pub mod no_alloc;
+pub mod parity;
+pub mod parse;
+pub mod targets;
+pub mod unsafe_audit;
+
+use parse::{Parsed, SourceFile};
+use std::fmt;
+use std::fs;
+use std::path::Path;
+
+/// One diagnostic from one pass.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Which pass produced it (e.g. `unsafe-audit`).
+    pub pass: &'static str,
+    /// Repo-relative file path.
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    /// Human-readable description of the violation.
+    pub message: String,
+}
+
+impl Finding {
+    /// Build a finding.
+    pub fn new(pass: &'static str, file: &str, line: usize, message: impl Into<String>) -> Finding {
+        Finding {
+            pass,
+            file: file.to_string(),
+            line,
+            message: message.into(),
+        }
+    }
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.pass, self.message)
+    }
+}
+
+/// Result of running all passes: real findings (CI-fatal), waived findings
+/// (counted and printed), and the summary counters.
+#[derive(Debug)]
+pub struct Report {
+    /// Unwaived findings, sorted by file then line. Nonempty fails CI.
+    pub findings: Vec<Finding>,
+    /// Findings silenced by an inline `statcheck: allow(...)` comment.
+    pub waivers: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+    /// Number of non-test `unsafe` tokens across the tree.
+    pub unsafe_sites: usize,
+}
+
+/// Match `s` against a pattern containing at most one `*` wildcard.
+pub fn glob_match(pat: &str, s: &str) -> bool {
+    match pat.split_once('*') {
+        None => pat == s,
+        Some((pre, suf)) => {
+            s.len() >= pre.len() + suf.len() && s.starts_with(pre) && s.ends_with(suf)
+        }
+    }
+}
+
+/// Whether `f` carries an inline waiver: `statcheck: allow(<pass>)` on the
+/// finding's line or the line above.
+fn waived(files: &[Parsed], f: &Finding) -> bool {
+    let p = match files.iter().find(|p| p.file.path == f.file) {
+        Some(p) => p,
+        None => return false,
+    };
+    let tag = format!("statcheck: allow({})", f.pass);
+    p.file.line_text(f.line).contains(&tag)
+        || (f.line > 1 && p.file.line_text(f.line - 1).contains(&tag))
+}
+
+/// Run every pass over already-loaded sources plus the manifest and CI
+/// script contents. Pure: the unit of testing for the whole gate.
+pub fn run_passes(files: &[Parsed], cargo_toml: &str, ci_sh: &str) -> Report {
+    let mut all: Vec<Finding> = Vec::new();
+    for p in files {
+        all.extend(unsafe_audit::run(p));
+        all.extend(no_alloc::run(p));
+    }
+    all.extend(parity::run_simd(files));
+    all.extend(parity::run_entry(files));
+    all.extend(targets::run(files, cargo_toml, ci_sh));
+
+    let mut findings = Vec::new();
+    let mut waivers = Vec::new();
+    for f in all {
+        if waived(files, &f) {
+            waivers.push(f);
+        } else {
+            findings.push(f);
+        }
+    }
+    findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    waivers.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Report {
+        findings,
+        waivers,
+        files_scanned: files.len(),
+        unsafe_sites: files.iter().map(unsafe_audit::unsafe_sites).sum(),
+    }
+}
+
+/// Load every `.rs` file under the scanned roots, paths repo-relative with
+/// forward slashes, sorted for deterministic output.
+pub fn load_tree(root: &Path) -> std::io::Result<Vec<Parsed>> {
+    let mut paths: Vec<String> = Vec::new();
+    for dir in ["rust/src", "benches", "examples", "tests"] {
+        collect_rs(root, &root.join(dir), &mut paths)?;
+    }
+    paths.sort();
+    let mut out = Vec::new();
+    for rel in paths {
+        let text = fs::read_to_string(root.join(&rel))?;
+        out.push(Parsed::new(SourceFile::new(&rel, &text)));
+    }
+    Ok(out)
+}
+
+fn collect_rs(root: &Path, dir: &Path, out: &mut Vec<String>) -> std::io::Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(root, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path.strip_prefix(root).unwrap_or(&path);
+            let rel: Vec<String> = rel
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                .collect();
+            out.push(rel.join("/"));
+        }
+    }
+    Ok(())
+}
+
+/// Load the tree rooted at `root` and run every pass: what the `statcheck`
+/// binary and the tree-wide integration test call.
+pub fn run_all(root: &Path) -> std::io::Result<Report> {
+    let files = load_tree(root)?;
+    let cargo_toml = fs::read_to_string(root.join("Cargo.toml")).unwrap_or_default();
+    let ci_sh = fs::read_to_string(root.join("ci.sh")).unwrap_or_default();
+    Ok(run_passes(&files, &cargo_toml, &ci_sh))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn glob_matches_exact_prefix_and_suffix() {
+        assert!(glob_match("conv_rows", "conv_rows"));
+        assert!(glob_match("*_fused_into", "run_fused_into"));
+        assert!(glob_match("rust/src/*", "rust/src/simd/neon.rs"));
+        assert!(glob_match("*", "anything"));
+        assert!(!glob_match("*_fused_into", "run_fused"));
+        assert!(!glob_match("conv_rows", "conv_rows2"));
+    }
+
+    #[test]
+    fn findings_render_as_file_line_pass_message() {
+        let f = Finding::new("no-alloc", "rust/src/x.rs", 7, "boom");
+        assert_eq!(f.to_string(), "rust/src/x.rs:7: [no-alloc] boom");
+    }
+
+    #[test]
+    fn waivers_are_separated_from_findings() {
+        let src = "fn f(p: *const f32) -> f32 {\n    // statcheck: allow(unsafe-audit): fixture.\n    unsafe { *p }\n}\nfn g(p: *const f32) -> f32 {\n    unsafe { *p }\n}\n";
+        let files = [Parsed::new(SourceFile::new("rust/src/fixture.rs", src))];
+        let r = run_passes(&files, "", "statcheck");
+        assert_eq!(r.waivers.len(), 1);
+        assert_eq!(r.waivers[0].line, 3);
+        assert_eq!(r.findings.len(), 1);
+        assert_eq!(r.findings[0].line, 6);
+        assert_eq!(r.unsafe_sites, 2);
+    }
+
+    #[test]
+    fn report_counts_files_and_sites() {
+        let files = [
+            Parsed::new(SourceFile::new("rust/src/a.rs", "fn a() {}\n")),
+            Parsed::new(SourceFile::new("rust/src/b.rs", "fn b() {}\n")),
+        ];
+        let r = run_passes(&files, "", "statcheck");
+        assert_eq!(r.files_scanned, 2);
+        assert_eq!(r.unsafe_sites, 0);
+        assert!(r.findings.is_empty() && r.waivers.is_empty());
+    }
+}

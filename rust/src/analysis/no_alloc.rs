@@ -1,0 +1,212 @@
+//! Pass 2 — **hot-path no-alloc**: allocation tokens are forbidden inside
+//! the registered hot modules and functions (outside `#[cfg(test)]`).
+//!
+//! This is the static dual of the dynamic grow-count-0 / fallback-count-0
+//! pins in `ci.sh`: the arena pins prove a *particular benchmark run* did
+//! not allocate; this pass proves the hot code *cannot* allocate, whatever
+//! shapes it is fed. New hot paths opt in by adding themselves to
+//! [`HOT_FILES`] or [`HOT_FNS`]; a deliberate allocation (e.g. the arena's
+//! own counted grow path) carries an inline `statcheck: allow(no-alloc)`
+//! waiver, which the binary counts and prints.
+
+use super::lexer::TokKind;
+use super::parse::Parsed;
+use super::{glob_match, Finding};
+
+/// Pass name, as used in diagnostics and `statcheck: allow(...)` waivers.
+pub const PASS: &str = "no-alloc";
+
+/// Files that are hot end to end: every non-test line is scanned.
+const HOT_FILES: &[&str] = &[
+    "rust/src/simd/portable.rs",
+    "rust/src/simd/neon.rs",
+    "rust/src/gemm/microkernel.rs",
+    "rust/src/gemm/pack.rs",
+    "rust/src/gemm/epilogue.rs",
+];
+
+/// `(file glob, fn glob)` pairs naming hot functions in otherwise-cold
+/// files. Globs support a single `*`.
+const HOT_FNS: &[(&str, &str)] = &[
+    ("*", "*_fused_into"),
+    ("*", "run_planned_into"),
+    ("rust/src/conv/depthwise/mod.rs", "conv_rows"),
+    ("rust/src/workspace.rs", "take"),
+    ("rust/src/workspace.rs", "split2"),
+    ("rust/src/workspace.rs", "ensure"),
+];
+
+/// `Type::method` allocating constructors.
+const PATHS: &[(&str, &str)] = &[
+    ("Vec", "new"),
+    ("Vec", "with_capacity"),
+    ("Box", "new"),
+    ("String", "new"),
+    ("String", "from"),
+    ("Tensor", "zeros"),
+];
+
+/// Allocating (or arena-growing) method calls.
+const METHODS: &[&str] = &[
+    "to_vec",
+    "collect",
+    "clone",
+    "to_string",
+    "to_owned",
+    "resize",
+    "push",
+    "reserve",
+    "extend",
+];
+
+/// Allocating macros.
+const MACROS: &[&str] = &["vec", "format"];
+
+/// Findings for allocation tokens inside the file's hot spans.
+pub fn run(p: &Parsed) -> Vec<Finding> {
+    let spans = hot_spans(p);
+    if spans.is_empty() {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for k in 0..p.code.len() {
+        let line = p.ctok(k).line;
+        if p.in_tests(line) {
+            continue;
+        }
+        let ctx = match spans.iter().find(|s| line >= s.0 && line <= s.1) {
+            Some(s) => s.2,
+            None => continue,
+        };
+        if let Some(pat) = alloc_at(p, k) {
+            out.push(Finding::new(
+                PASS,
+                &p.file.path,
+                line,
+                format!("allocation `{pat}` in hot path `{ctx}`"),
+            ));
+        }
+    }
+    out
+}
+
+/// The hot `(start line, end line, context name)` spans of this file.
+fn hot_spans(p: &Parsed) -> Vec<(usize, usize, &str)> {
+    let mut spans: Vec<(usize, usize, &str)> = Vec::new();
+    if HOT_FILES.contains(&p.file.path.as_str()) {
+        spans.push((1, usize::MAX, p.file.path.as_str()));
+        return spans;
+    }
+    for f in &p.fns {
+        if p.in_tests(f.line) {
+            continue;
+        }
+        let hot = HOT_FNS
+            .iter()
+            .any(|(fg, ng)| glob_match(fg, &p.file.path) && glob_match(ng, &f.name));
+        if hot {
+            spans.push((f.line, f.end_line, f.name.as_str()));
+        }
+    }
+    spans
+}
+
+/// Text of the code token at `j`, or `""` past the end.
+fn txt(p: &Parsed, j: usize) -> &str {
+    if j < p.code.len() {
+        &p.ctok(j).text
+    } else {
+        ""
+    }
+}
+
+/// If an allocation pattern starts at code-index `k`, its display name.
+fn alloc_at(p: &Parsed, k: usize) -> Option<String> {
+    let t = p.ctok(k);
+    if t.kind == TokKind::Ident {
+        if MACROS.contains(&t.text.as_str()) && txt(p, k + 1) == "!" {
+            return Some(format!("{}!", t.text));
+        }
+        for (ty, m) in PATHS {
+            if t.text == *ty
+                && txt(p, k + 1) == ":"
+                && txt(p, k + 2) == ":"
+                && txt(p, k + 3) == *m
+            {
+                return Some(format!("{ty}::{m}"));
+            }
+        }
+    }
+    if t.kind == TokKind::Punct && t.text == "." {
+        // `x..extend` puts an ident right after the range's second dot;
+        // a method match needs this `.` to be alone on both sides.
+        if k > 0 && p.ctok(k - 1).text == "." {
+            return None;
+        }
+        let name = txt(p, k + 1);
+        if METHODS.contains(&name) && txt(p, k + 2) != "." {
+            return Some(format!(".{name}"));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::parse::SourceFile;
+
+    fn findings(path: &str, src: &str) -> Vec<Finding> {
+        run(&Parsed::new(SourceFile::new(path, src)))
+    }
+
+    #[test]
+    fn cold_files_are_not_scanned() {
+        let src = "pub fn f() -> Vec<f32> {\n    vec![0.0; 4]\n}\n";
+        assert!(findings("rust/src/zoo/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn alloc_in_a_hot_file_is_flagged() {
+        let src = "pub fn splat(x: f32) -> Vec<f32> {\n    let v = Vec::new();\n    v\n}\n";
+        let f = findings("rust/src/simd/portable.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 2);
+        assert!(f[0].message.contains("Vec::new"));
+    }
+
+    #[test]
+    fn alloc_in_a_registered_hot_fn_is_flagged() {
+        let src = "fn cold() -> String {\n    format!(\"ok\")\n}\npub fn run_fused_into(out: &mut [f32]) {\n    let label = format!(\"x\");\n    let _ = label;\n}\n";
+        let f = findings("rust/src/some/file.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 5);
+        assert!(f[0].message.contains("format!"));
+        assert!(f[0].message.contains("run_fused_into"));
+    }
+
+    #[test]
+    fn method_and_macro_tokens_are_caught() {
+        let src = "pub fn pack(a: &[f32]) {\n    let v = a.to_vec();\n    let w = vec![0.0f32; 8];\n    let c = v.clone();\n    let _ = (w, c);\n}\n";
+        let f = findings("rust/src/gemm/pack.rs", src);
+        let pats: Vec<&str> = f.iter().map(|x| x.message.as_str()).collect();
+        assert_eq!(f.len(), 3);
+        assert!(pats[0].contains(".to_vec"));
+        assert!(pats[1].contains("vec!"));
+        assert!(pats[2].contains(".clone"));
+    }
+
+    #[test]
+    fn test_modules_inside_hot_files_are_exempt() {
+        let src = "pub fn id(x: f32) -> f32 {\n    x\n}\n#[cfg(test)]\nmod tests {\n    fn h() -> Vec<f32> {\n        vec![1.0]\n    }\n}\n";
+        assert!(findings("rust/src/simd/portable.rs", src).is_empty());
+    }
+
+    #[test]
+    fn range_syntax_is_not_an_alloc_method() {
+        // `x..extend` puts the ident `extend` right after a dot; the
+        // adjacent-dot guards keep ranges from matching as method calls.
+        let src = "pub fn f(x: usize, extend: usize) -> usize {\n    (x..extend).len()\n}\n";
+        assert!(findings("rust/src/gemm/pack.rs", src).is_empty());
+    }
+}

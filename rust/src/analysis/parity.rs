@@ -1,0 +1,199 @@
+//! Passes 3 and 4 — the parity invariants.
+//!
+//! **simd-parity**: `simd/portable.rs` and `simd/neon.rs` must export
+//! identical sets of `pub fn` signatures (compared token-for-token with
+//! `const` stripped, since the portable backend can be `const fn` where the
+//! intrinsic one cannot). A backend gaining an op without its twin fails CI.
+//!
+//! **entry-parity**: every public `*_into` op must keep an allocating twin
+//! (`X`, `X_with`, or a registered alias) in the same file, and — the other
+//! direction — the registered write-into entry points must keep existing,
+//! so an op cannot quietly lose its arena-backed variant.
+
+use super::parse::Parsed;
+use super::Finding;
+use std::collections::HashSet;
+
+/// SIMD backend-parity pass name.
+pub const SIMD_PASS: &str = "simd-parity";
+
+/// Entry-point parity pass name.
+pub const ENTRY_PASS: &str = "entry-parity";
+
+const PORTABLE: &str = "rust/src/simd/portable.rs";
+const NEON: &str = "rust/src/simd/neon.rs";
+
+/// `(file, into fn, allocating twin)` pairs for ops whose twin does not
+/// follow the `X`/`X_with` naming rule.
+const ALIASES: &[(&str, &str, &str)] = &[
+    ("rust/src/nn/ops.rs", "add_into", "add_elementwise"),
+    ("rust/src/nn/graph.rs", "run_planned_into", "run_with_workspace"),
+];
+
+/// The write-into entry points the engine guarantees: if the file exists,
+/// the fn must too. This is the "vice versa" direction — deleting an
+/// `*_into` variant (falling back to allocate-per-call) fails CI.
+const REQUIRED_INTO: &[(&str, &str)] = &[
+    ("rust/src/winograd/convolve.rs", "run_fused_into"),
+    ("rust/src/im2row/mod.rs", "run_fused_into"),
+    ("rust/src/conv/depthwise/mod.rs", "run_fused_into"),
+    ("rust/src/conv/direct.rs", "direct_conv2d_into"),
+    ("rust/src/conv/direct.rs", "direct_conv2d_grouped_into"),
+    ("rust/src/nn/graph.rs", "run_planned_into"),
+    ("rust/src/nn/ops.rs", "max_pool2d_into"),
+    ("rust/src/nn/ops.rs", "avg_pool2d_into"),
+    ("rust/src/nn/ops.rs", "global_avg_pool_into"),
+    ("rust/src/nn/ops.rs", "relu6_into"),
+    ("rust/src/nn/ops.rs", "add_into"),
+    ("rust/src/nn/ops.rs", "fully_connected_into"),
+    ("rust/src/nn/ops.rs", "softmax_into"),
+    ("rust/src/nn/ops.rs", "lrn_across_channels_into"),
+];
+
+/// Findings for `pub fn` signature drift between the two SIMD backends.
+pub fn run_simd(files: &[Parsed]) -> Vec<Finding> {
+    let a = files.iter().find(|p| p.file.path == PORTABLE);
+    let b = files.iter().find(|p| p.file.path == NEON);
+    let (a, b) = match (a, b) {
+        (Some(a), Some(b)) => (a, b),
+        _ => return Vec::new(),
+    };
+    let mut out = Vec::new();
+    missing_twins(a, b, &mut out);
+    missing_twins(b, a, &mut out);
+    out
+}
+
+fn missing_twins(from: &Parsed, to: &Parsed, out: &mut Vec<Finding>) {
+    let there: HashSet<&str> = to
+        .fns
+        .iter()
+        .filter(|f| f.is_pub && !to.in_tests(f.line))
+        .map(|f| f.sig.as_str())
+        .collect();
+    for f in &from.fns {
+        if !f.is_pub || from.in_tests(f.line) || there.contains(f.sig.as_str()) {
+            continue;
+        }
+        out.push(Finding::new(
+            SIMD_PASS,
+            &from.file.path,
+            f.line,
+            format!("pub fn `{}` has no identical twin in `{}`", f.name, to.file.path),
+        ));
+    }
+}
+
+/// Findings for `*_into` ops missing allocating twins and for deleted
+/// registered entry points.
+pub fn run_entry(files: &[Parsed]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for p in files {
+        if !p.file.path.starts_with("rust/src/") {
+            continue;
+        }
+        let names: HashSet<&str> = p
+            .fns
+            .iter()
+            .filter(|f| !p.in_tests(f.line))
+            .map(|f| f.name.as_str())
+            .collect();
+        for f in &p.fns {
+            if !f.is_pub || p.in_tests(f.line) {
+                continue;
+            }
+            let base = match f.name.strip_suffix("_into") {
+                Some(b) if !b.is_empty() => b,
+                _ => continue,
+            };
+            let with = format!("{base}_with");
+            let alias_ok = ALIASES.iter().any(|(file, into, twin)| {
+                *file == p.file.path && *into == f.name && names.contains(twin)
+            });
+            if !names.contains(base) && !names.contains(with.as_str()) && !alias_ok {
+                out.push(Finding::new(
+                    ENTRY_PASS,
+                    &p.file.path,
+                    f.line,
+                    format!(
+                        "`{}` has no allocating twin (`{base}` / `{with}`) in this file",
+                        f.name
+                    ),
+                ));
+            }
+        }
+        for (file, into) in REQUIRED_INTO {
+            if *file == p.file.path && !names.contains(into) {
+                out.push(Finding::new(
+                    ENTRY_PASS,
+                    &p.file.path,
+                    1,
+                    format!("registered write-into entry point `{into}` no longer exists"),
+                ));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::parse::SourceFile;
+
+    fn parsed(path: &str, src: &str) -> Parsed {
+        Parsed::new(SourceFile::new(path, src))
+    }
+
+    #[test]
+    fn identical_backends_pass() {
+        let src = "pub fn add(a: f32, b: f32) -> f32 {\n    a + b\n}\n";
+        let files = [parsed(PORTABLE, src), parsed(NEON, src)];
+        assert!(run_simd(&files).is_empty());
+    }
+
+    #[test]
+    fn one_sided_simd_fn_is_flagged_on_the_side_that_has_it() {
+        let a = "pub fn add(a: f32, b: f32) -> f32 {\n    a + b\n}\npub fn min(a: f32, b: f32) -> f32 {\n    a.min(b)\n}\n";
+        let b = "pub fn add(a: f32, b: f32) -> f32 {\n    a + b\n}\n";
+        let files = [parsed(PORTABLE, a), parsed(NEON, b)];
+        let f = run_simd(&files);
+        assert_eq!(f.len(), 1);
+        assert_eq!((f[0].file.as_str(), f[0].line), (PORTABLE, 4));
+        assert!(f[0].message.contains("min"));
+    }
+
+    #[test]
+    fn const_fn_matches_its_non_const_twin() {
+        let a = "pub const fn zero() -> f32 {\n    0.0\n}\n";
+        let b = "pub fn zero() -> f32 {\n    0.0\n}\n";
+        let files = [parsed(PORTABLE, a), parsed(NEON, b)];
+        assert!(run_simd(&files).is_empty());
+    }
+
+    #[test]
+    fn orphaned_into_is_flagged() {
+        let src = "pub fn relu_into(out: &mut [f32]) {\n    out[0] = 0.0;\n}\n";
+        let files = [parsed("rust/src/nn/extra.rs", src)];
+        let f = run_entry(&files);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("relu_into"));
+    }
+
+    #[test]
+    fn base_with_and_alias_twins_all_satisfy_parity() {
+        let src = "pub fn relu(x: &[f32]) -> f32 {\n    x[0]\n}\npub fn relu_into(out: &mut [f32]) {\n    out[0] = 0.0;\n}\npub fn run_fused_with(w: usize) -> usize {\n    w\n}\npub fn run_fused_into(out: &mut [f32], w: usize) {\n    out[0] = w as f32;\n}\n";
+        let files = [parsed("rust/src/nn/extra.rs", src)];
+        assert!(run_entry(&files).is_empty());
+    }
+
+    #[test]
+    fn deleting_a_registered_entry_point_is_flagged() {
+        let src = "pub fn run_fused_with(w: usize) -> usize {\n    w\n}\n";
+        let files = [parsed("rust/src/im2row/mod.rs", src)];
+        let f = run_entry(&files);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 1);
+        assert!(f[0].message.contains("run_fused_into"));
+    }
+}

@@ -1,0 +1,335 @@
+//! Structural view of one source file for the `statcheck` passes: the token
+//! stream, the code-only token index, `#[cfg(test)]` line spans, and `fn`
+//! item spans recovered by brace matching — the pieces of syntax the passes
+//! need without a real parser.
+
+use super::lexer::{lex, Tok, TokKind};
+use std::collections::HashSet;
+
+/// One source file: repo-relative path (forward slashes) plus contents.
+#[derive(Debug, Clone)]
+pub struct SourceFile {
+    /// Repo-relative path, e.g. `rust/src/simd/neon.rs`.
+    pub path: String,
+    /// Full file text.
+    pub text: String,
+}
+
+impl SourceFile {
+    /// Build from a path and contents (used by tests to feed fixtures).
+    pub fn new(path: &str, text: &str) -> SourceFile {
+        SourceFile {
+            path: path.to_string(),
+            text: text.to_string(),
+        }
+    }
+
+    /// Text of the 1-based line `ln` (empty for out-of-range lines).
+    pub fn line_text(&self, ln: usize) -> &str {
+        if ln == 0 {
+            return "";
+        }
+        self.text.lines().nth(ln - 1).unwrap_or("")
+    }
+}
+
+/// Span of one `fn` item.
+#[derive(Debug, Clone)]
+pub struct FnSpan {
+    /// The function's name.
+    pub name: String,
+    /// 1-based line of the `fn` keyword.
+    pub line: usize,
+    /// 1-based line of the body's closing brace.
+    pub end_line: usize,
+    /// Whether a `pub` qualifier precedes it (`pub(crate)` counts).
+    pub is_pub: bool,
+    /// Normalized signature: the code tokens from `fn` to the body's `{`,
+    /// joined with single spaces (visibility and `const` excluded) — the
+    /// string the SIMD backend-parity pass compares.
+    pub sig: String,
+}
+
+/// A lexed-and-scanned source file.
+#[derive(Debug)]
+pub struct Parsed {
+    /// The underlying file.
+    pub file: SourceFile,
+    /// Full token stream, comments included.
+    pub toks: Vec<Tok>,
+    /// Indices into `toks` of the non-comment tokens.
+    pub code: Vec<usize>,
+    /// Lines covered by items annotated `#[cfg(test)]`.
+    pub test_lines: HashSet<usize>,
+    /// Every `fn` item found (test modules included; callers filter via
+    /// [`Parsed::in_tests`]).
+    pub fns: Vec<FnSpan>,
+}
+
+fn ct<'a>(toks: &'a [Tok], code: &[usize], k: usize) -> &'a Tok {
+    &toks[code[k]]
+}
+
+impl Parsed {
+    /// Lex and scan one file.
+    pub fn new(file: SourceFile) -> Parsed {
+        let toks = lex(&file.text);
+        let code: Vec<usize> = (0..toks.len())
+            .filter(|&i| {
+                !matches!(toks[i].kind, TokKind::LineComment | TokKind::BlockComment)
+            })
+            .collect();
+        let test_lines = cfg_test_lines(&toks, &code);
+        let fns = fn_spans(&toks, &code);
+        Parsed {
+            file,
+            toks,
+            code,
+            test_lines,
+            fns,
+        }
+    }
+
+    /// Whether the 1-based line falls inside a `#[cfg(test)]` item.
+    pub fn in_tests(&self, line: usize) -> bool {
+        self.test_lines.contains(&line)
+    }
+
+    /// The code token at code-index `k`.
+    pub fn ctok(&self, k: usize) -> &Tok {
+        ct(&self.toks, &self.code, k)
+    }
+}
+
+/// Lines covered by `#[cfg(test)]`-annotated items, found by matching the
+/// attribute's token run and then brace-matching the item that follows.
+fn cfg_test_lines(toks: &[Tok], code: &[usize]) -> HashSet<usize> {
+    let mut out = HashSet::new();
+    let m = code.len();
+    let mut i = 0usize;
+    while i < m {
+        if ct(toks, code, i).text == "#" && i + 1 < m && ct(toks, code, i + 1).text == "[" {
+            // Collect the attribute's tokens up to the matching `]`.
+            let mut depth = 0i32;
+            let mut j = i + 1;
+            let mut attr = String::new();
+            while j < m {
+                let t = &ct(toks, code, j).text;
+                if t == "[" {
+                    depth += 1;
+                } else if t == "]" {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    attr.push_str(t);
+                }
+                j += 1;
+            }
+            if attr == "cfg(test)" {
+                // Skip any further attributes, then brace-match the item.
+                let mut k = j + 1;
+                while k + 1 < m
+                    && ct(toks, code, k).text == "#"
+                    && ct(toks, code, k + 1).text == "["
+                {
+                    let mut d2 = 0i32;
+                    k += 1;
+                    while k < m {
+                        let t = &ct(toks, code, k).text;
+                        if t == "[" {
+                            d2 += 1;
+                        } else if t == "]" {
+                            d2 -= 1;
+                            if d2 == 0 {
+                                break;
+                            }
+                        }
+                        k += 1;
+                    }
+                    k += 1;
+                }
+                while k < m {
+                    let t = &ct(toks, code, k).text;
+                    if t == "{" || t == ";" {
+                        break;
+                    }
+                    k += 1;
+                }
+                if k < m && ct(toks, code, k).text == "{" {
+                    let mut d2 = 0i32;
+                    while k < m {
+                        let t = &ct(toks, code, k).text;
+                        if t == "{" {
+                            d2 += 1;
+                        } else if t == "}" {
+                            d2 -= 1;
+                            if d2 == 0 {
+                                break;
+                            }
+                        }
+                        k += 1;
+                    }
+                    let end_line = ct(toks, code, k.min(m - 1)).line;
+                    for ln in ct(toks, code, i).line..=end_line {
+                        out.insert(ln);
+                    }
+                    i = k;
+                }
+            } else if j > i {
+                i = j;
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// All `fn` items, via brace matching. Semicolon-terminated declarations
+/// (trait methods without bodies) are skipped.
+fn fn_spans(toks: &[Tok], code: &[usize]) -> Vec<FnSpan> {
+    let m = code.len();
+    let mut out = Vec::new();
+    for i in 0..m {
+        let t = ct(toks, code, i);
+        if t.kind != TokKind::Ident || t.text != "fn" {
+            continue;
+        }
+        if i + 1 >= m || ct(toks, code, i + 1).kind != TokKind::Ident {
+            continue;
+        }
+        let name = ct(toks, code, i + 1).text.clone();
+        // Visibility: walk back over the item's qualifiers/attributes to
+        // the previous item boundary.
+        let mut is_pub = false;
+        let mut b = i;
+        let mut steps = 0usize;
+        while b > 0 && steps < 16 {
+            b -= 1;
+            steps += 1;
+            let t = &ct(toks, code, b).text;
+            if t == ";" || t == "{" || t == "}" {
+                break;
+            }
+            if t == "pub" {
+                is_pub = true;
+                break;
+            }
+        }
+        // Find the body's opening brace; a `;` outside parens/brackets
+        // means this is a bodyless declaration.
+        let mut j = i;
+        let mut paren = 0i32;
+        let mut bracket = 0i32;
+        let mut body = None;
+        let mut sig = String::new();
+        while j < m {
+            let t = &ct(toks, code, j).text;
+            if t == "(" {
+                paren += 1;
+            } else if t == ")" {
+                paren -= 1;
+            } else if t == "[" {
+                bracket += 1;
+            } else if t == "]" {
+                bracket -= 1;
+            } else if paren == 0 && bracket == 0 && t == ";" {
+                break;
+            } else if paren == 0 && bracket == 0 && t == "{" {
+                body = Some(j);
+                break;
+            }
+            if t != "const" {
+                if !sig.is_empty() {
+                    sig.push(' ');
+                }
+                sig.push_str(t);
+            }
+            j += 1;
+        }
+        let body = match body {
+            Some(b) => b,
+            None => continue,
+        };
+        let mut depth = 0i32;
+        let mut k = body;
+        while k < m {
+            let t = &ct(toks, code, k).text;
+            if t == "{" {
+                depth += 1;
+            } else if t == "}" {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            k += 1;
+        }
+        let end_line = ct(toks, code, k.min(m - 1)).line;
+        out.push(FnSpan {
+            name,
+            line: t.line,
+            end_line,
+            is_pub,
+            sig,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parsed(src: &str) -> Parsed {
+        Parsed::new(SourceFile::new("fixture.rs", src))
+    }
+
+    #[test]
+    fn fn_spans_cover_bodies_and_visibility() {
+        let p = parsed(
+            "pub fn a(x: usize) -> usize {\n    x\n}\nfn b() {\n    a(1);\n}\n\
+             pub(crate) fn c() {}\n",
+        );
+        let names: Vec<_> = p.fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, ["a", "b", "c"]);
+        assert!(p.fns[0].is_pub && !p.fns[1].is_pub && p.fns[2].is_pub);
+        assert_eq!((p.fns[0].line, p.fns[0].end_line), (1, 3));
+        assert_eq!((p.fns[1].line, p.fns[1].end_line), (4, 6));
+    }
+
+    #[test]
+    fn array_return_types_do_not_end_the_signature() {
+        let p = parsed("pub fn t(rows: [f32; 4]) -> [f32; 4] {\n    rows\n}\n");
+        assert_eq!(p.fns.len(), 1);
+        assert_eq!(p.fns[0].sig, "fn t ( rows : [ f32 ; 4 ] ) - > [ f32 ; 4 ]");
+    }
+
+    #[test]
+    fn const_is_stripped_from_signatures() {
+        let a = parsed("pub const fn zero() -> f32 {\n    0.0\n}\n");
+        let b = parsed("pub fn zero() -> f32 {\n    1.0\n}\n");
+        assert_eq!(a.fns[0].sig, b.fns[0].sig);
+    }
+
+    #[test]
+    fn cfg_test_items_are_marked() {
+        let p = parsed(
+            "fn real() {}\n#[cfg(test)]\nmod tests {\n    fn helper() {}\n}\nfn after() {}\n",
+        );
+        assert!(!p.in_tests(1));
+        assert!(p.in_tests(2) && p.in_tests(3) && p.in_tests(4) && p.in_tests(5));
+        assert!(!p.in_tests(6));
+        // The helper fn is found but sits on a test line.
+        let helper = p.fns.iter().find(|f| f.name == "helper").unwrap();
+        assert!(p.in_tests(helper.line));
+    }
+
+    #[test]
+    fn bodyless_declarations_are_skipped() {
+        let p = parsed("trait T {\n    fn decl(&self);\n    fn with_default(&self) {}\n}\n");
+        let names: Vec<_> = p.fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, ["with_default"]);
+    }
+}

@@ -1,0 +1,174 @@
+//! Pass 5 — **target-registration**: the build graph must stay in sync with
+//! the tree. Every `benches/*.rs` / `examples/*.rs` file must be declared in
+//! `Cargo.toml` (PR 1's missing-manifest incident can never land again),
+//! every bench that implements a `--smoke` mode must actually be invoked in
+//! `ci.sh` with `--smoke`, and `ci.sh` must keep running `statcheck` itself.
+
+use super::parse::Parsed;
+use super::Finding;
+
+/// Pass name, as used in diagnostics and `statcheck: allow(...)` waivers.
+pub const PASS: &str = "targets";
+
+/// A target declared in `Cargo.toml`.
+#[derive(Debug, Clone)]
+struct Target {
+    kind: String,
+    name: String,
+    path: String,
+}
+
+/// Minimal line-oriented scan of the manifest: enough TOML to recover
+/// `[[bench]]`/`[[example]]`/`[[test]]`/`[[bin]]` sections with their
+/// `name`/`path` keys.
+fn targets(cargo_toml: &str) -> Vec<Target> {
+    let mut out: Vec<Target> = Vec::new();
+    let mut current: Option<Target> = None;
+    for raw in cargo_toml.lines() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.starts_with('[') {
+            if let Some(t) = current.take() {
+                out.push(t);
+            }
+            if let Some(kind) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+                current = Some(Target {
+                    kind: kind.to_string(),
+                    name: String::new(),
+                    path: String::new(),
+                });
+            }
+            continue;
+        }
+        if let (Some(t), Some((k, v))) = (current.as_mut(), line.split_once('=')) {
+            let v = v.trim().trim_matches('"').to_string();
+            match k.trim() {
+                "name" => t.name = v,
+                "path" => t.path = v,
+                _ => {}
+            }
+        }
+    }
+    if let Some(t) = current.take() {
+        out.push(t);
+    }
+    out
+}
+
+/// Findings for unregistered target files, un-exercised `--smoke` benches,
+/// and a `ci.sh` that no longer runs `statcheck`.
+pub fn run(files: &[Parsed], cargo_toml: &str, ci_sh: &str) -> Vec<Finding> {
+    let decls = targets(cargo_toml);
+    let mut out = Vec::new();
+    for p in files {
+        let kind = if p.file.path.starts_with("benches/") {
+            "bench"
+        } else if p.file.path.starts_with("examples/") {
+            "example"
+        } else {
+            continue;
+        };
+        let decl = decls
+            .iter()
+            .find(|t| t.kind == kind && t.path == p.file.path);
+        let decl = match decl {
+            Some(d) => d,
+            None => {
+                out.push(Finding::new(
+                    PASS,
+                    &p.file.path,
+                    1,
+                    format!("{kind} file is not declared in Cargo.toml (missing [[{kind}]] entry)"),
+                ));
+                continue;
+            }
+        };
+        if kind == "bench" && has_smoke_mode(p) && !ci_runs_smoke(ci_sh, &decl.name) {
+            out.push(Finding::new(
+                PASS,
+                &p.file.path,
+                1,
+                format!(
+                    "bench `{}` implements --smoke but ci.sh never runs `--bench {} -- --smoke`",
+                    decl.name, decl.name
+                ),
+            ));
+        }
+    }
+    if !ci_sh.contains("statcheck") {
+        out.push(Finding::new(
+            PASS,
+            "ci.sh",
+            1,
+            "ci.sh no longer runs the statcheck gate",
+        ));
+    }
+    out
+}
+
+/// A bench advertises a smoke mode by mentioning `"smoke"` in a string
+/// literal (flag registration or `args.flag("smoke")`).
+fn has_smoke_mode(p: &Parsed) -> bool {
+    use super::lexer::TokKind;
+    p.toks
+        .iter()
+        .any(|t| t.kind == TokKind::Str && t.text.contains("smoke"))
+}
+
+fn ci_runs_smoke(ci_sh: &str, bench: &str) -> bool {
+    let flag = format!("--bench {bench}");
+    ci_sh
+        .lines()
+        .any(|l| l.contains(&flag) && l.contains("--smoke"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::parse::SourceFile;
+
+    const MANIFEST: &str = "[package]\nname = \"x\"\n\n[[bench]]\nname = \"fast\"\npath = \"benches/fast.rs\"\nharness = false\n\n[[example]]\nname = \"demo\"\npath = \"examples/demo.rs\"\n";
+    const CI: &str = "cargo run --release --bin statcheck\ncargo bench --bench fast -- --smoke\n";
+
+    fn parsed(path: &str, src: &str) -> Parsed {
+        Parsed::new(SourceFile::new(path, src))
+    }
+
+    #[test]
+    fn registered_targets_pass() {
+        let files = [
+            parsed("benches/fast.rs", "fn main() {\n    let _ = \"smoke\";\n}\n"),
+            parsed("examples/demo.rs", "fn main() {}\n"),
+        ];
+        assert!(run(&files, MANIFEST, CI).is_empty());
+    }
+
+    #[test]
+    fn unregistered_bench_is_flagged() {
+        let files = [parsed("benches/rogue.rs", "fn main() {}\n")];
+        let f = run(&files, MANIFEST, CI);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].file, "benches/rogue.rs");
+        assert!(f[0].message.contains("[[bench]]"));
+    }
+
+    #[test]
+    fn smoke_bench_missing_from_ci_is_flagged() {
+        let files = [parsed("benches/fast.rs", "fn main() {\n    let _ = \"smoke\";\n}\n")];
+        let f = run(&files, MANIFEST, "cargo run --release --bin statcheck\n");
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("--smoke"));
+    }
+
+    #[test]
+    fn benches_without_smoke_modes_are_not_required_in_ci() {
+        let files = [parsed("benches/fast.rs", "fn main() {}\n")];
+        assert!(run(&files, MANIFEST, CI).is_empty());
+    }
+
+    #[test]
+    fn ci_without_statcheck_is_flagged() {
+        let f = run(&[], MANIFEST, "cargo test\n");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].file, "ci.sh");
+    }
+}

@@ -1,0 +1,124 @@
+//! Pass 1 — **unsafe-audit**: every `unsafe` site (block, fn, `unsafe impl`)
+//! must be immediately preceded by a `// SAFETY:` comment stating the
+//! precondition it relies on.
+//!
+//! "Immediately preceded" means: walking the raw token stream backwards from
+//! the `unsafe` keyword, a comment containing `SAFETY:` appears before the
+//! previous statement boundary (`;`, `{`, or `}`). That window covers both
+//! the plain form (comment directly above the keyword) and mid-statement
+//! blocks like `let x: &[f32] = unsafe { … };` where the comment sits above
+//! the whole `let`. The boundary rule also means two consecutive
+//! `unsafe impl` items each need their own comment — one argument cannot
+//! silently cover its neighbour.
+
+use super::lexer::TokKind;
+use super::parse::Parsed;
+use super::Finding;
+
+/// Pass name, as used in diagnostics and `statcheck: allow(...)` waivers.
+pub const PASS: &str = "unsafe-audit";
+
+/// Number of non-test `unsafe` tokens in the file (the count `statcheck`
+/// prints in its summary line).
+pub fn unsafe_sites(p: &Parsed) -> usize {
+    (0..p.code.len()).filter(|&k| is_site(p, k)).count()
+}
+
+/// Findings for `unsafe` sites that lack a `// SAFETY:` comment.
+pub fn run(p: &Parsed) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for k in 0..p.code.len() {
+        if !is_site(p, k) || documented(p, k) {
+            continue;
+        }
+        out.push(Finding::new(
+            PASS,
+            &p.file.path,
+            p.ctok(k).line,
+            "`unsafe` without a preceding `// SAFETY:` comment stating its precondition",
+        ));
+    }
+    out
+}
+
+fn is_site(p: &Parsed, k: usize) -> bool {
+    let t = p.ctok(k);
+    t.kind == TokKind::Ident && t.text == "unsafe" && !p.in_tests(t.line)
+}
+
+/// Walk the raw stream backwards from the `unsafe` token to the previous
+/// statement boundary; any comment mentioning `SAFETY:` in that window
+/// documents the site.
+fn documented(p: &Parsed, k: usize) -> bool {
+    let mut i = p.code[k];
+    while i > 0 {
+        i -= 1;
+        let t = &p.toks[i];
+        match t.kind {
+            TokKind::LineComment | TokKind::BlockComment => {
+                if t.text.contains("SAFETY:") {
+                    return true;
+                }
+            }
+            TokKind::Punct => {
+                if t.text == ";" || t.text == "{" || t.text == "}" {
+                    return false;
+                }
+            }
+            _ => {}
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::parse::SourceFile;
+
+    fn findings(src: &str) -> Vec<Finding> {
+        run(&Parsed::new(SourceFile::new("fixture.rs", src)))
+    }
+
+    #[test]
+    fn documented_block_passes() {
+        let src = "fn f(p: *const f32) -> f32 {\n    // SAFETY: caller guarantees p is valid.\n    unsafe { *p }\n}\n";
+        assert!(findings(src).is_empty());
+    }
+
+    #[test]
+    fn undocumented_block_is_flagged_with_its_line() {
+        let src = "fn f(p: *const f32) -> f32 {\n    unsafe { *p }\n}\n";
+        let f = findings(src);
+        assert_eq!(f.len(), 1);
+        assert_eq!((f[0].file.as_str(), f[0].line), ("fixture.rs", 2));
+        assert_eq!(f[0].pass, PASS);
+    }
+
+    #[test]
+    fn comment_above_a_let_statement_covers_its_unsafe_block() {
+        let src = "fn f(p: *const f32) -> f32 {\n    // SAFETY: p valid per the fn contract.\n    let v: f32 = unsafe { *p };\n    v\n}\n";
+        assert!(findings(src).is_empty());
+    }
+
+    #[test]
+    fn consecutive_unsafe_impls_each_need_a_comment() {
+        let src = "struct X;\n// SAFETY: X owns no thread-affine state.\nunsafe impl Send for X {}\nunsafe impl Sync for X {}\n";
+        let f = findings(src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 4);
+    }
+
+    #[test]
+    fn test_code_is_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f(p: *const f32) -> f32 {\n        unsafe { *p }\n    }\n}\n";
+        assert!(findings(src).is_empty());
+    }
+
+    #[test]
+    fn the_word_unsafe_in_strings_and_comments_is_not_a_site() {
+        let src = "// unsafe is discussed here\nfn f() -> &'static str {\n    \"unsafe\"\n}\n";
+        assert!(findings(src).is_empty());
+        assert_eq!(unsafe_sites(&Parsed::new(SourceFile::new("fixture.rs", src))), 0);
+    }
+}

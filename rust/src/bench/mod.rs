@@ -89,6 +89,7 @@ pub struct Measurement {
 
 /// Simple fixed-width ASCII table printer used by every bench target so the
 /// regenerated tables read like the paper's.
+#[derive(Debug)]
 pub struct Table {
     title: String,
     headers: Vec<String>,

@@ -1,0 +1,56 @@
+//! `statcheck` — run the repo's static-invariant passes and fail on findings.
+//!
+//! ```text
+//! cargo run --release --bin statcheck [-- --root DIR --quiet]
+//! ```
+//!
+//! Prints waived findings (unless `--quiet`), then real findings as
+//! `file:line: [pass] message`, then a one-line summary. Exit codes:
+//! 0 clean, 1 findings, 2 usage or I/O error.
+
+use std::path::Path;
+use std::process::ExitCode;
+use winoconv::analysis;
+use winoconv::util::cli::Args;
+
+fn main() -> ExitCode {
+    let args = match Args::from_env(&["quiet", "help"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("statcheck: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    if args.flag("help") {
+        println!("USAGE: statcheck [--root DIR] [--quiet]");
+        return ExitCode::SUCCESS;
+    }
+    let root = args.get_or("root", ".");
+    let report = match analysis::run_all(Path::new(&root)) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("statcheck: cannot scan {root:?}: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    if !args.flag("quiet") {
+        for w in &report.waivers {
+            println!("waived: {w}");
+        }
+    }
+    for f in &report.findings {
+        println!("{f}");
+    }
+    println!(
+        "statcheck: {} files scanned, {} unsafe sites, {} waivers, {} findings",
+        report.files_scanned,
+        report.unsafe_sites,
+        report.waivers.len(),
+        report.findings.len()
+    );
+    if report.findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

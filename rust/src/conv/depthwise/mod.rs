@@ -253,6 +253,13 @@ impl DepthwiseConvolution {
         let (hp, wp) = (src.shape()[1], src.shape()[2]);
         let data = src.data();
         let taps = &self.w;
+        // What the row jobs' tap loads assume of the padded source: nine
+        // taps per channel, and every 3x3 window of every output pixel
+        // in-bounds of `data`.
+        debug_assert_eq!(taps.len(), 9 * c);
+        debug_assert!(data.len() >= n * hp * wp * c);
+        debug_assert!(oh == 0 || (oh - 1) * sh + 3 <= hp);
+        debug_assert!(ow == 0 || (ow - 1) * sw + 3 <= wp);
         let row_job = |r: usize| {
             let b = r / oh;
             let oy = r % oh;

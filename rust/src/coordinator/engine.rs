@@ -70,6 +70,12 @@ pub struct InferenceEngine {
     dispatcher: Option<thread::JoinHandle<()>>,
 }
 
+impl std::fmt::Debug for InferenceEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("InferenceEngine").field("queue", &self.queue).finish_non_exhaustive()
+    }
+}
+
 impl InferenceEngine {
     /// Spawn the dispatcher and its compute pool.
     pub fn start(model: PreparedModel, cfg: EngineConfig) -> InferenceEngine {

@@ -12,6 +12,12 @@ pub struct ServerMetrics {
     started: Instant,
 }
 
+impl std::fmt::Debug for ServerMetrics {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ServerMetrics").field("started", &self.started).finish_non_exhaustive()
+    }
+}
+
 struct Inner {
     completed: u64,
     rejected: u64,

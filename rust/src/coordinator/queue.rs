@@ -49,6 +49,12 @@ pub struct RequestQueue {
     inner: Arc<Inner>,
 }
 
+impl std::fmt::Debug for RequestQueue {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RequestQueue").field("len", &self.len()).finish_non_exhaustive()
+    }
+}
+
 impl RequestQueue {
     /// New queue holding at most `capacity` pending requests.
     pub fn new(capacity: usize) -> RequestQueue {

@@ -32,6 +32,8 @@ pub const NR: usize = 16;
 pub fn kernel_mr_nr(kc: usize, a: &[f32], b: &[f32], c: &mut [f32], ldc: usize, accumulate: bool) {
     debug_assert!(a.len() >= kc * MR);
     debug_assert!(b.len() >= kc * NR);
+    debug_assert!(ldc >= NR);
+    debug_assert!(c.len() >= (MR - 1) * ldc + NR);
 
     let mut acc = [[F32x4::zero(); NR / 4]; MR];
 

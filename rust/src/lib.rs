@@ -61,7 +61,15 @@
 //! let y = conv.run(&x, &w).unwrap();
 //! assert_eq!(y.shape(), &[1, 54, 54, 64]);
 //! ```
+//!
+//! The structural invariants behind all of this — documented `unsafe`,
+//! allocation-free hot paths, SIMD backend and `*_into` entry-point parity,
+//! registered build targets — are enforced statically by [`analysis`] via
+//! the `statcheck` binary (first fatal step of `ci.sh`).
 
+#![deny(unsafe_op_in_unsafe_fn)]
+
+pub mod analysis;
 pub mod util;
 pub mod simd;
 pub mod tensor;

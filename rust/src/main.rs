@@ -33,11 +33,14 @@ fn main() {
             std::process::exit(2);
         }
     };
-    if args.flag("help") || args.subcommand().is_none() {
-        print_help();
-        return;
-    }
-    let result = match args.subcommand().unwrap() {
+    let sub = match args.subcommand() {
+        Some(s) if !args.flag("help") => s,
+        _ => {
+            print_help();
+            return;
+        }
+    };
+    let result = match sub {
         "layers" => cmd_layers(&args),
         "network" => cmd_network(&args),
         "serve" => cmd_serve(&args),

@@ -380,6 +380,16 @@ pub struct PreparedModel {
     dispatches: [AtomicU64; 4],
 }
 
+impl std::fmt::Debug for PreparedModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PreparedModel")
+            .field("name", &self.name)
+            .field("scheme", &self.scheme)
+            .field("nodes", &self.nodes.len())
+            .finish_non_exhaustive()
+    }
+}
+
 impl PreparedModel {
     /// Bind every conv layer of `graph` per `scheme` for `input_shape`.
     ///
@@ -701,6 +711,9 @@ impl PreparedModel {
                     input.view()
                 } else {
                     let s = self.plan.slot(i);
+                    // SAFETY: see the contract above the closure — slot `s`
+                    // is in-bounds of the arena and disjoint from the output
+                    // window by the plan's prepare-time assertions.
                     let data: &[f32] = unsafe {
                         std::slice::from_raw_parts(base.add(s.offset) as *const f32, s.elems)
                     };

@@ -27,6 +27,12 @@ pub struct ThreadPool {
     n_threads: usize,
 }
 
+impl std::fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ThreadPool").field("n_threads", &self.n_threads).finish_non_exhaustive()
+    }
+}
+
 impl ThreadPool {
     /// Spawn a pool with `n` worker threads (minimum 1).
     pub fn new(n: usize) -> ThreadPool {
@@ -188,6 +194,8 @@ struct ForkJoin {
 // the dispatching `parallel_for_chunked` frame keeps it alive; all other
 // fields are thread-safe primitives.
 unsafe impl Send for ForkJoin {}
+// SAFETY: same argument as `Send` above — helpers only ever call the `Sync`
+// closure through `body` and touch the atomic/Mutex/Condvar fields.
 unsafe impl Sync for ForkJoin {}
 
 impl ForkJoin {

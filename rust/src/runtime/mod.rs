@@ -49,9 +49,21 @@ mod imp {
         pub path: PathBuf,
     }
 
+    impl std::fmt::Debug for HloExecutable {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("HloExecutable").field("path", &self.path).finish_non_exhaustive()
+        }
+    }
+
     /// Wrapper that owns the PJRT client and hands out executables.
     pub struct PjrtRuntime {
         client: xla::PjRtClient,
+    }
+
+    impl std::fmt::Debug for PjrtRuntime {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("PjrtRuntime").finish_non_exhaustive()
+        }
     }
 
     impl PjrtRuntime {
@@ -138,12 +150,14 @@ mod imp {
     }
 
     /// Stub for the compiled-executable handle.
+    #[derive(Debug)]
     pub struct HloExecutable {
         /// Path the module would have been loaded from.
         pub path: PathBuf,
     }
 
     /// Stub for the PJRT client wrapper.
+    #[derive(Debug)]
     pub struct PjrtRuntime;
 
     impl PjrtRuntime {

@@ -35,12 +35,16 @@ impl F32x4 {
     /// All lanes set to `v` (`vdupq_n_f32`).
     #[inline(always)]
     pub fn splat(v: f32) -> Self {
+        // SAFETY: NEON is baseline on aarch64 (this file only compiles
+        // there); the intrinsic is register-only.
         F32x4(unsafe { vdupq_n_f32(v) })
     }
 
     /// Build from four lane values.
     #[inline(always)]
     pub fn from_array(a: [f32; 4]) -> Self {
+        // SAFETY: `a` is a live `[f32; 4]`, so its pointer is valid for
+        // reading exactly the 16 bytes `vld1q_f32` loads.
         F32x4(unsafe { vld1q_f32(a.as_ptr()) })
     }
 
@@ -48,6 +52,7 @@ impl F32x4 {
     #[inline(always)]
     pub fn to_array(self) -> [f32; 4] {
         let mut out = [0.0f32; 4];
+        // SAFETY: `out` is a live `[f32; 4]`, valid for the 16-byte write.
         unsafe { vst1q_f32(out.as_mut_ptr(), self.0) };
         out
     }
@@ -64,6 +69,8 @@ impl F32x4 {
     #[inline(always)]
     pub fn load(src: &[f32]) -> Self {
         debug_assert!(src.len() >= 4);
+        // SAFETY: callers pass `src.len() >= 4` (debug-asserted above), so
+        // the pointer is valid for the 16-byte read.
         F32x4(unsafe { vld1q_f32(src.as_ptr()) })
     }
 
@@ -81,6 +88,8 @@ impl F32x4 {
     #[inline(always)]
     pub fn store(self, dst: &mut [f32]) {
         debug_assert!(dst.len() >= 4);
+        // SAFETY: callers pass `dst.len() >= 4` (debug-asserted above), so
+        // the pointer is valid for the 16-byte write.
         unsafe { vst1q_f32(dst.as_mut_ptr(), self.0) };
     }
 
@@ -95,36 +104,42 @@ impl F32x4 {
     /// Fused multiply–add: `self + a * b` (`vfmaq_f32`).
     #[inline(always)]
     pub fn fma(self, a: F32x4, b: F32x4) -> F32x4 {
+        // SAFETY: NEON is baseline on aarch64; register-only intrinsic.
         F32x4(unsafe { vfmaq_f32(self.0, a.0, b.0) })
     }
 
     /// `self + a * scalar` (`vfmaq_n_f32`).
     #[inline(always)]
     pub fn fma_scalar(self, a: F32x4, s: f32) -> F32x4 {
+        // SAFETY: NEON is baseline on aarch64; register-only intrinsic.
         F32x4(unsafe { vfmaq_n_f32(self.0, a.0, s) })
     }
 
     /// Multiply by a scalar (`vmulq_n_f32`).
     #[inline(always)]
     pub fn mul_scalar(self, s: f32) -> F32x4 {
+        // SAFETY: NEON is baseline on aarch64; register-only intrinsic.
         F32x4(unsafe { vmulq_n_f32(self.0, s) })
     }
 
     /// Lane-wise max (`vmaxq_f32`) — used by ReLU and max-pool.
     #[inline(always)]
     pub fn max(self, o: F32x4) -> F32x4 {
+        // SAFETY: NEON is baseline on aarch64; register-only intrinsic.
         F32x4(unsafe { vmaxq_f32(self.0, o.0) })
     }
 
     /// Lane-wise min (`vminq_f32`) — the upper clamp of ReLU6.
     #[inline(always)]
     pub fn min(self, o: F32x4) -> F32x4 {
+        // SAFETY: NEON is baseline on aarch64; register-only intrinsic.
         F32x4(unsafe { vminq_f32(self.0, o.0) })
     }
 
     /// Horizontal sum of the four lanes (`vaddvq_f32`).
     #[inline(always)]
     pub fn horizontal_sum(self) -> f32 {
+        // SAFETY: NEON is baseline on aarch64; register-only intrinsic.
         unsafe { vaddvq_f32(self.0) }
     }
 
@@ -135,6 +150,9 @@ impl F32x4 {
     #[inline(always)]
     pub fn transpose4(rows: [F32x4; 4]) -> [F32x4; 4] {
         let [a, b, c, d] = rows;
+        // SAFETY: NEON is baseline on aarch64; the trn/reinterpret chain is
+        // register-only, and f32x4 <-> f64x2 reinterpretation is a bitcast
+        // between two 128-bit vector types.
         unsafe {
             // [a0 b0 a2 b2], [a1 b1 a3 b3], [c0 d0 c2 d2], [c1 d1 c3 d3]
             let ab_lo = vtrn1q_f32(a.0, b.0);
@@ -185,6 +203,7 @@ impl Add for F32x4 {
     type Output = F32x4;
     #[inline(always)]
     fn add(self, o: F32x4) -> F32x4 {
+        // SAFETY: NEON is baseline on aarch64; register-only intrinsic.
         F32x4(unsafe { vaddq_f32(self.0, o.0) })
     }
 }
@@ -193,6 +212,7 @@ impl Sub for F32x4 {
     type Output = F32x4;
     #[inline(always)]
     fn sub(self, o: F32x4) -> F32x4 {
+        // SAFETY: NEON is baseline on aarch64; register-only intrinsic.
         F32x4(unsafe { vsubq_f32(self.0, o.0) })
     }
 }
@@ -201,6 +221,7 @@ impl Mul for F32x4 {
     type Output = F32x4;
     #[inline(always)]
     fn mul(self, o: F32x4) -> F32x4 {
+        // SAFETY: NEON is baseline on aarch64; register-only intrinsic.
         F32x4(unsafe { vmulq_f32(self.0, o.0) })
     }
 }
@@ -216,6 +237,7 @@ impl Neg for F32x4 {
     type Output = F32x4;
     #[inline(always)]
     fn neg(self) -> F32x4 {
+        // SAFETY: NEON is baseline on aarch64; register-only intrinsic.
         F32x4(unsafe { vnegq_f32(self.0) })
     }
 }

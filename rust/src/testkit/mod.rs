@@ -28,6 +28,15 @@ pub struct Gen {
     cursor: usize,
 }
 
+impl std::fmt::Debug for Gen {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Gen")
+            .field("trace", &self.trace)
+            .field("cursor", &self.cursor)
+            .finish_non_exhaustive()
+    }
+}
+
 impl Gen {
     fn new(seed: u64) -> Gen {
         Gen {

@@ -23,7 +23,7 @@ impl Args {
     /// as a value.
     pub fn parse<I: IntoIterator<Item = String>>(raw: I, known_flags: &[&str]) -> Result<Args> {
         let mut out = Args::default();
-        let mut iter = raw.into_iter().peekable();
+        let mut iter = raw.into_iter();
         while let Some(tok) = iter.next() {
             if let Some(body) = tok.strip_prefix("--") {
                 if body.is_empty() {
@@ -35,16 +35,23 @@ impl Args {
                     out.opts.insert(k.to_string(), v.to_string());
                 } else if known_flags.contains(&body) {
                     out.flags.push(body.to_string());
-                } else if let Some(v) = iter.peek() {
-                    if v.starts_with("--") {
-                        return Err(Error::Config(format!(
-                            "option --{body} expects a value, got {v}"
-                        )));
-                    }
-                    let v = iter.next().unwrap();
-                    out.opts.insert(body.to_string(), v);
                 } else {
-                    return Err(Error::Config(format!("option --{body} expects a value")));
+                    // A value-taking option consumes the next token; no
+                    // token (or another option) is a diagnosed error, never
+                    // a panic — bench/CI wrappers turn it into exit code 2.
+                    match iter.next() {
+                        Some(v) if !v.starts_with("--") => {
+                            out.opts.insert(body.to_string(), v);
+                        }
+                        Some(v) => {
+                            return Err(Error::Config(format!(
+                                "option --{body} expects a value, got {v}"
+                            )));
+                        }
+                        None => {
+                            return Err(Error::Config(format!("option --{body} expects a value")));
+                        }
+                    }
                 }
             } else {
                 out.positional.push(tok);
@@ -139,6 +146,18 @@ mod tests {
             &[],
         );
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn errors_name_the_offending_option() {
+        let e = Args::parse(["--threads".to_string()].into_iter(), &[]).unwrap_err();
+        assert!(e.to_string().contains("--threads"));
+        let e = Args::parse(
+            ["--threads".to_string(), "--quick".to_string()].into_iter(),
+            &[],
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("--threads") && e.to_string().contains("--quick"));
     }
 
     #[test]

@@ -1,0 +1,24 @@
+//! Tree-wide gate: the `statcheck` passes must report **zero findings** on
+//! the repository at HEAD. A new undocumented `unsafe`, a hot-path
+//! allocation, SIMD/entry-point drift, or an unregistered target fails this
+//! test (and `ci.sh`, which also runs the binary as its first step).
+
+use winoconv::analysis;
+
+#[test]
+fn statcheck_reports_zero_findings_on_the_tree() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = analysis::run_all(root).expect("scan the repo tree");
+    let rendered: Vec<String> = report.findings.iter().map(|f| f.to_string()).collect();
+    assert!(
+        report.findings.is_empty(),
+        "statcheck findings:\n{}",
+        rendered.join("\n")
+    );
+    // Sanity-pin the counters so an accidentally empty scan cannot pass:
+    // the tree has >60 source files and >30 unsafe sites today, and the
+    // workspace arena's grow path carries the one expected waiver.
+    assert!(report.files_scanned >= 60, "only {} files scanned", report.files_scanned);
+    assert!(report.unsafe_sites >= 30, "only {} unsafe sites", report.unsafe_sites);
+    assert!(!report.waivers.is_empty(), "expected at least one counted waiver");
+}
