@@ -17,12 +17,14 @@ use winoconv::zoo::ModelKind;
 
 /// `--smoke`: the CI peak-memory gate. Prints the planner's peak activation
 /// bytes (vs the naive sum-of-all-intermediates) for every zoo model —
-/// MobileNetV1/V2 included — then runs SqueezeNet and both MobileNets
-/// end-to-end over pre-sized arenas asserting grow-count and
-/// fallback-count both stay 0 — peak-memory drift or a
+/// MobileNets and ResNets included — then runs SqueezeNet, both MobileNets
+/// and both ResNets end-to-end over pre-sized arenas asserting grow-count
+/// and fallback-count both stay 0 — peak-memory drift or a
 /// steady-state-allocation regression fails CI the same way bench bit-rot
 /// does. For the MobileNets this also pins the depthwise engine's planned
-/// write-into path (every dw layer dispatches to it).
+/// write-into path (every dw layer dispatches to it); for MobileNetV2 and
+/// the ResNets it pins the pointwise engine's dispatch census and the
+/// residual-fusion savings in the activation plan.
 fn smoke(pool: &ThreadPool) -> winoconv::Result<()> {
     let mut table = Table::new(
         "activation memory plan per zoo model (batch 1)",
@@ -48,7 +50,13 @@ fn smoke(pool: &ThreadPool) -> winoconv::Result<()> {
     }
     table.print();
 
-    for model in [ModelKind::SqueezeNet, ModelKind::MobileNetV1, ModelKind::MobileNetV2] {
+    for model in [
+        ModelKind::SqueezeNet,
+        ModelKind::MobileNetV1,
+        ModelKind::MobileNetV2,
+        ModelKind::ResNet18,
+        ModelKind::ResNet50,
+    ] {
         let graph = model.build(1)?;
         let shape = model.input_shape(1);
         let prepared =
@@ -71,6 +79,44 @@ fn smoke(pool: &ThreadPool) -> winoconv::Result<()> {
                 census.depthwise > 0 && counts.depthwise == 2 * census.depthwise,
                 "smoke {model}: depthwise layers must dispatch to the direct engine"
             );
+        }
+        if matches!(model, ModelKind::MobileNetV2 | ModelKind::ResNet18 | ModelKind::ResNet50) {
+            assert!(
+                census.pointwise > 0 && counts.pointwise == 2 * census.pointwise,
+                "smoke {model}: dense 1x1 layers must dispatch to the pointwise engine"
+            );
+        }
+        // Residual fusion must pay off in the activation plan: fused
+        // conv/add intermediates get zero-size slots, so the naive
+        // sum-of-all-intermediates strictly drops vs the unfused baseline
+        // binding, and the planned peak can only shrink. (MobileNetV2's
+        // global peak sits in the non-residual 112x112 expand region, so
+        // only ResNet-50 — whose peak was the unfused bottleneck add at
+        // 56x56x256 — must show a strict peak drop.)
+        if matches!(model, ModelKind::MobileNetV2 | ModelKind::ResNet50) {
+            let baseline =
+                PreparedModel::prepare(model.name(), &graph, &shape, Scheme::Im2RowOnly)?;
+            let (bp, op) = (baseline.activation_plan(), prepared.activation_plan());
+            assert!(
+                op.naive_bytes() < bp.naive_bytes(),
+                "smoke {model}: residual fusion must remove planner intermediates \
+                 (fused naive {} >= unfused naive {})",
+                op.naive_bytes(),
+                bp.naive_bytes()
+            );
+            assert!(
+                op.peak_bytes() <= bp.peak_bytes(),
+                "smoke {model}: fusion must never grow the planned peak"
+            );
+            if model == ModelKind::ResNet50 {
+                assert!(
+                    op.peak_bytes() < bp.peak_bytes(),
+                    "smoke {model}: bottleneck fusion must shrink the planned peak \
+                     (fused {} KiB vs unfused {} KiB)",
+                    op.peak_bytes() / 1024,
+                    bp.peak_bytes() / 1024
+                );
+            }
         }
         println!(
             "smoke ok: {} planned activation peak {} KiB (naive {} KiB), grow-count 0, \
@@ -117,6 +163,8 @@ fn main() -> winoconv::Result<()> {
             ModelKind::SqueezeNet,
             ModelKind::MobileNetV1,
             ModelKind::MobileNetV2,
+            ModelKind::ResNet18,
+            ModelKind::ResNet50,
         ],
     };
 
@@ -203,6 +251,8 @@ fn main() -> winoconv::Result<()> {
         (ModelKind::Vgg19, "-"),
         (ModelKind::MobileNetV1, "-"),
         (ModelKind::MobileNetV2, "-"),
+        (ModelKind::ResNet18, "-"),
+        (ModelKind::ResNet50, "-"),
     ];
     for r in &rows {
         let paper_pct = paper

@@ -41,6 +41,13 @@ run cargo bench --bench table1_whole_network -- --smoke
 # numerically over a grow-count-0 arena.
 run cargo bench --bench ablation_depthwise -- --smoke
 
+# Pointwise gate: the zero-copy direct 1x1 engine must keep beating im2row
+# at stride 1 (where the patch matrix is a full input copy) and keep
+# matching it bit-for-bit at both strides; the fused residual epilogue
+# must stay no slower than the separate conv + add + relu walk, also
+# bit-identically, over grow-count-0 arenas.
+run cargo bench --bench ablation_pointwise -- --smoke
+
 if [[ "${1:-}" != "--no-lint" ]]; then
     if cargo fmt --version >/dev/null 2>&1; then
         run cargo fmt --check

@@ -1,16 +1,18 @@
-//! Walk the model zoo: build each of the seven CNNs (the paper's five plus
-//! MobileNetV1/V2), run one inference under both schemes, and print the
-//! per-model layer census plus the slowest layers — a quick structural
-//! sanity check of the whole stack.
+//! Walk the model zoo: build each of the nine CNNs (the paper's five plus
+//! MobileNetV1/V2 and ResNet-18/50), run one inference under both schemes,
+//! and print the per-model layer census plus the slowest layers — a quick
+//! structural sanity check of the whole stack.
 //!
 //! ```sh
-//! cargo run --release --example model_zoo -- [--model mobilenet-v1] [--threads 4]
+//! cargo run --release --example model_zoo -- [--model resnet-50] [--threads 4]
 //! ```
 //! Without `--model`, only the small models run (VGG/Inception take
 //! minutes in a debug-ish environment; use the benches for full tables).
 //! Note the MobileNets show ≈ 0 scheme delta by design: they have no
 //! Winograd-suitable layers, and their depthwise convs bind the direct
-//! depthwise engine under *both* schemes (see `ablation_depthwise`).
+//! depthwise engine under *both* schemes (see `ablation_depthwise`); the
+//! 1×1-heavy MobileNetV2/ResNet bottlenecks split on the zero-copy
+//! pointwise engine instead (see `ablation_pointwise`).
 
 use winoconv::bench::{ms, Table};
 use winoconv::nn::{PreparedModel, Scheme};
@@ -27,7 +29,13 @@ fn main() -> winoconv::Result<()> {
     let models: Vec<ModelKind> = match args.get("model") {
         Some(name) => vec![ModelKind::parse(name)
             .ok_or_else(|| winoconv::Error::Config(format!("unknown model {name:?}")))?],
-        None => vec![ModelKind::SqueezeNet, ModelKind::GoogleNet, ModelKind::MobileNetV1, ModelKind::MobileNetV2],
+        None => vec![
+            ModelKind::SqueezeNet,
+            ModelKind::GoogleNet,
+            ModelKind::MobileNetV1,
+            ModelKind::MobileNetV2,
+            ModelKind::ResNet18,
+        ],
     };
 
     for model in models {

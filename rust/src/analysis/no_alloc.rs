@@ -31,6 +31,7 @@ const HOT_FNS: &[(&str, &str)] = &[
     ("*", "*_fused_into"),
     ("*", "run_planned_into"),
     ("rust/src/conv/depthwise/mod.rs", "conv_rows"),
+    ("rust/src/conv/pointwise/mod.rs", "gemm_rows"),
     ("rust/src/workspace.rs", "take"),
     ("rust/src/workspace.rs", "split2"),
     ("rust/src/workspace.rs", "ensure"),

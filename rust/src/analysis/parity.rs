@@ -37,6 +37,8 @@ const REQUIRED_INTO: &[(&str, &str)] = &[
     ("rust/src/winograd/convolve.rs", "run_fused_into"),
     ("rust/src/im2row/mod.rs", "run_fused_into"),
     ("rust/src/conv/depthwise/mod.rs", "run_fused_into"),
+    ("rust/src/conv/pointwise/mod.rs", "run_fused_into"),
+    ("rust/src/conv/pointwise/mod.rs", "run_residual_fused_into"),
     ("rust/src/conv/direct.rs", "direct_conv2d_into"),
     ("rust/src/conv/direct.rs", "direct_conv2d_grouped_into"),
     ("rust/src/nn/graph.rs", "run_planned_into"),

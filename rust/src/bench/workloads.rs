@@ -48,6 +48,15 @@ impl LayerSpec {
         self.groups > 1 && self.groups == self.cin && self.groups == self.cout
     }
 
+    /// Is the layer a dense unpadded 1×1 the zero-copy pointwise engine
+    /// accepts (stride 1 or 2)?
+    pub fn pointwise(&self) -> bool {
+        self.groups == 1
+            && self.kernel == (1, 1)
+            && self.pad == (0, 0)
+            && (self.stride == (1, 1) || self.stride == (2, 2))
+    }
+
     /// Deterministic input tensor for benching.
     pub fn input(&self, seed: u64) -> Tensor {
         Tensor::randn(&self.input_shape, seed)
@@ -108,6 +117,25 @@ pub fn unique_depthwise_layers(model: ModelKind, seed: u64) -> Result<Vec<(Layer
     for spec in conv_layers(model, seed)?.into_iter().filter(LayerSpec::depthwise) {
         match seen.iter_mut().find(|(s, _)| {
             s.input_shape == spec.input_shape && s.cin == spec.cin && s.stride == spec.stride
+        }) {
+            Some((_, count)) => *count += 1,
+            None => seen.push((spec, 1)),
+        }
+    }
+    Ok(seen)
+}
+
+/// The dense 1×1 pointwise conv layers of a model, deduplicated by shape
+/// signature with occurrence counts — the workload of the
+/// `ablation_pointwise` bench.
+pub fn unique_pointwise_layers(model: ModelKind, seed: u64) -> Result<Vec<(LayerSpec, usize)>> {
+    let mut seen: Vec<(LayerSpec, usize)> = Vec::new();
+    for spec in conv_layers(model, seed)?.into_iter().filter(LayerSpec::pointwise) {
+        match seen.iter_mut().find(|(s, _)| {
+            s.input_shape == spec.input_shape
+                && s.cin == spec.cin
+                && s.cout == spec.cout
+                && s.stride == spec.stride
         }) {
             Some((_, count)) => *count += 1,
             None => seen.push((spec, 1)),
@@ -182,6 +210,21 @@ mod tests {
         for (spec, _) in &unique {
             assert_eq!(spec.kernel, (3, 3));
             assert_eq!(spec.weights(1).shape(), &[spec.cin, 3, 3, 1]);
+        }
+    }
+
+    #[test]
+    fn resnet50_pointwise_layers_extracted() {
+        let layers = conv_layers(ModelKind::ResNet50, 1).unwrap();
+        assert_eq!(layers.len(), 53);
+        assert_eq!(layers.iter().filter(|l| l.pointwise()).count(), 36);
+        let unique = unique_pointwise_layers(ModelKind::ResNet50, 1).unwrap();
+        let total: usize = unique.iter().map(|(_, c)| c).sum();
+        assert_eq!(total, 36);
+        assert!(unique.len() < 36, "bottleneck stages repeat 1x1 shapes");
+        for (spec, _) in &unique {
+            assert_eq!(spec.kernel, (1, 1));
+            assert_eq!(spec.groups, 1);
         }
     }
 

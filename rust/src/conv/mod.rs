@@ -6,6 +6,7 @@
 
 pub mod depthwise;
 pub mod direct;
+pub mod pointwise;
 pub mod select;
 
 pub use select::{select_algorithm, select_algorithm_spatial};
@@ -21,6 +22,7 @@ use crate::winograd::{WinogradConvolution, WinogradVariant};
 use crate::workspace::Workspace;
 use crate::{bail_shape, bail_unsupported, Result};
 use depthwise::DepthwiseConvolution;
+use pointwise::PointwiseConvolution;
 
 /// Which implementation executes a convolution layer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -31,6 +33,10 @@ pub enum ConvAlgorithm {
     /// ([`depthwise::DepthwiseConvolution`]) — 3×3 layers with
     /// `groups == cin == cout` at stride 1 or 2.
     DirectDepthwise,
+    /// Zero-copy direct pointwise engine
+    /// ([`pointwise::PointwiseConvolution`]) — dense unpadded 1×1 layers
+    /// at stride 1 (input read in place) or 2 (strided row gather).
+    DirectPointwise,
     /// Classical im2row + single GEMM (the paper's baseline).
     Im2Row,
     /// Region-wise multi-channel Winograd with an explicit variant.
@@ -44,6 +50,7 @@ impl std::fmt::Display for ConvAlgorithm {
         match self {
             ConvAlgorithm::Direct => write!(f, "direct"),
             ConvAlgorithm::DirectDepthwise => write!(f, "depthwise"),
+            ConvAlgorithm::DirectPointwise => write!(f, "pointwise"),
             ConvAlgorithm::Im2Row => write!(f, "im2row"),
             ConvAlgorithm::Winograd(v) => write!(f, "winograd-{v}"),
             ConvAlgorithm::Auto => write!(f, "auto"),
@@ -197,6 +204,7 @@ impl Conv2d {
             ConvAlgorithm::Auto => select_algorithm_spatial(
                 self.kernel,
                 self.stride,
+                self.padding,
                 self.groups,
                 self.cin,
                 self.cout,
@@ -223,6 +231,7 @@ impl Conv2d {
                 select_algorithm_spatial(
                     self.kernel,
                     self.stride,
+                    self.padding,
                     self.groups,
                     self.cin,
                     self.cout,
@@ -301,6 +310,16 @@ impl Conv2d {
                     );
                 }
                 DepthwiseConvolution::new(weights, self.stride, self.padding)?
+                    .run_fused_with(input, pool, bias, act, ws)
+            }
+            ConvAlgorithm::DirectPointwise => {
+                if self.groups != 1 {
+                    bail_unsupported!(
+                        "pointwise path is dense-only, layer has {} groups",
+                        self.groups
+                    );
+                }
+                PointwiseConvolution::new(weights, self.stride, self.padding)?
                     .run_fused_with(input, pool, bias, act, ws)
             }
             ConvAlgorithm::Im2Row => {
@@ -494,16 +513,55 @@ mod tests {
 
     #[test]
     fn auto_resolves_per_shape() {
-        // 3×3 s1 → Winograd; 3×3 s2 → im2row; 1×1 → im2row; depthwise →
-        // the depthwise engine.
+        // 3×3 s1 → Winograd; 3×3 s2 → im2row; 1×1 → the pointwise engine
+        // (stride 1 and 2); padded 1×1 → im2row; depthwise → the depthwise
+        // engine.
         let a = Conv2d::new(16, 16, (3, 3)).resolved_algorithm();
         assert!(matches!(a, ConvAlgorithm::Winograd(_)));
         let a = Conv2d::new(16, 16, (3, 3)).with_stride((2, 2)).resolved_algorithm();
         assert_eq!(a, ConvAlgorithm::Im2Row);
         let a = Conv2d::new(16, 16, (1, 1)).resolved_algorithm();
+        assert_eq!(a, ConvAlgorithm::DirectPointwise);
+        let a = Conv2d::new(16, 16, (1, 1)).with_stride((2, 2)).resolved_algorithm();
+        assert_eq!(a, ConvAlgorithm::DirectPointwise);
+        let a = Conv2d::new(16, 16, (1, 1)).with_padding((1, 1)).resolved_algorithm();
         assert_eq!(a, ConvAlgorithm::Im2Row);
         let a = Conv2d::new(16, 16, (3, 3)).with_groups(16).resolved_algorithm();
         assert_eq!(a, ConvAlgorithm::DirectDepthwise);
+    }
+
+    /// A 1×1 descriptor auto-routes to the pointwise engine and agrees with
+    /// the direct oracle, epilogue included, at both supported strides.
+    #[test]
+    fn pointwise_descriptor_routes_and_agrees() {
+        let bias: Vec<f32> = (0..24).map(|i| i as f32 * 0.3 - 2.0).collect();
+        for stride in [(1, 1), (2, 2)] {
+            let conv = Conv2d::new(16, 24, (1, 1))
+                .with_stride(stride)
+                .with_bias(bias.clone())
+                .with_activation(Activation::Relu6);
+            assert_eq!(
+                conv.resolved_algorithm_for(&[1, 12, 12, 16]),
+                ConvAlgorithm::DirectPointwise
+            );
+            let x = Tensor::randn(&[1, 12, 12, 16], 5);
+            let w = conv.random_weights(6);
+            assert_eq!(w.shape(), &[24, 1, 1, 16]);
+            let got = conv.run(&x, &w).unwrap();
+            let want = conv
+                .clone()
+                .with_algorithm(ConvAlgorithm::Direct)
+                .run(&x, &w)
+                .unwrap();
+            assert!(got.allclose(&want, 5e-4), "pointwise stride {stride:?} disagrees");
+            // And bit-identical to the forced im2row baseline it replaces.
+            let base = conv
+                .clone()
+                .with_algorithm(ConvAlgorithm::Im2Row)
+                .run(&x, &w)
+                .unwrap();
+            assert_eq!(got.data(), base.data(), "pointwise must match im2row bitwise");
+        }
     }
 
     #[test]

@@ -1,0 +1,536 @@
+//! Direct pointwise (1×1) convolution — the zero-copy GEMM engine for the
+//! bottleneck-heavy workload class (MobileNetV2 expansions/projections,
+//! ResNet-50 reduce/expand pairs, ResNet downsample shortcuts).
+//!
+//! ## Why not im2row (or Winograd)?
+//!
+//! The paper's region-wise Winograd argument (§4) only applies to spatial
+//! kernels — a 1×1 layer has no transform to amortise, so it always fell to
+//! im2row. But im2row's patch matrix for a 1×1 stride-1 layer is a
+//! **verbatim copy of the input**: under NHWC every output pixel's
+//! receptive field is exactly its own `C`-run, so `[N·OH·OW, KH·KW·C]`
+//! degenerates to `[N·H·W, C]` — the flattened activation tensor itself.
+//! The copy is pure overhead. This engine drops it: the NHWC input *is* the
+//! GEMM A operand (`lda = C`), fed straight to
+//! [`sgemm_prepacked_fused`] against the layer's prepare-time-packed
+//! weights. Zhang et al. 2020 (*High Performance Depthwise and Pointwise
+//! Convolutions on Mobile Devices*) reach the same conclusion: direct
+//! pointwise with fused elementwise ops is the decisive lever here.
+//!
+//! * **Stride 1** — zero staging: the GEMM reads the caller's input in
+//!   place. `workspace_elems_for` is 0 and a warm run allocates nothing.
+//! * **Stride 2** (ResNet downsample projections) — the output only samples
+//!   every other pixel, so the engine gathers the sampled `C`-runs into a
+//!   workspace-owned `[N·OH·OW, C]` staging buffer (one contiguous memcpy
+//!   per output pixel — `KH·KW = 1` of im2row's copies, over ¼ the rows)
+//!   and runs the same GEMM over it.
+//!
+//! Bias/activation ride the [`BiasAct`] epilogue exactly as on the im2row
+//! path; the residual-fused entry points swap in [`BiasActAdd`], which also
+//! reads the skip-connection operand while each micro-tile is cache-hot —
+//! a `Conv(1×1) → Add → Act` residual chain becomes one GEMM with no
+//! separate whole-tensor add pass (see [`crate::nn::PreparedModel`]'s
+//! prepare-time fusion).
+
+use crate::gemm::{sgemm_prepacked_fused, Activation, BiasAct, BiasActAdd, Epilogue, PackedB};
+use crate::parallel::ThreadPool;
+use crate::tensor::{Tensor, TensorView};
+use crate::workspace::Workspace;
+use crate::{bail_shape, bail_unsupported, Result};
+
+/// A prepared direct pointwise convolution: `[M, 1, 1, C]` weights
+/// transposed to `[C, M]` and pre-packed into GEMM panel layout once at
+/// prepare time — the same treatment [`crate::im2row::Im2RowConvolution`]
+/// gets, and (for 1×1) the **identical** packed matrix, so this engine's
+/// outputs are bit-identical to the im2row path it replaces.
+#[derive(Debug, Clone)]
+pub struct PointwiseConvolution {
+    cin: usize,
+    cout: usize,
+    stride: (usize, usize),
+    /// Weights as `[C, M]` row-major, packed: `wt[ch·M + m] = w[m, 0, 0, ch]`.
+    wt_packed: PackedB,
+}
+
+impl PointwiseConvolution {
+    /// Prepare from `[M, 1, 1, C]` weights. Only unpadded layers at stride
+    /// (1,1) or (2,2) are supported — every 1×1 conv the evaluated networks
+    /// ship; the selector never routes other shapes here.
+    pub fn new(weights: &Tensor, stride: (usize, usize), pad: (usize, usize)) -> Result<Self> {
+        if weights.rank() != 4 || weights.shape()[1] != 1 || weights.shape()[2] != 1 {
+            bail_shape!("pointwise weights must be [M, 1, 1, C], got {:?}", weights.shape());
+        }
+        if pad != (0, 0) {
+            bail_unsupported!("pointwise engine is unpadded-only, got pad {pad:?}");
+        }
+        if stride != (1, 1) && stride != (2, 2) {
+            bail_unsupported!("pointwise engine supports stride 1 or 2, got {stride:?}");
+        }
+        let (m, c) = (weights.shape()[0], weights.shape()[3]);
+        // W[ch][m] — the k = ch patch-row order a 1×1 im2row layer would
+        // use, so the packed panels match the baseline exactly.
+        let mut wt = vec![0.0f32; c * m];
+        for mi in 0..m {
+            for ch in 0..c {
+                wt[ch * m + mi] = weights.at4(mi, 0, 0, ch);
+            }
+        }
+        Ok(PointwiseConvolution {
+            cin: c,
+            cout: m,
+            stride,
+            wt_packed: PackedB::pack(&wt, m, c, m),
+        })
+    }
+
+    /// Input channels.
+    pub fn cin(&self) -> usize {
+        self.cin
+    }
+
+    /// Output channels.
+    pub fn cout(&self) -> usize {
+        self.cout
+    }
+
+    /// Output spatial size for an `h×w` input.
+    pub fn output_hw(&self, h: usize, w: usize) -> Result<(usize, usize)> {
+        if h == 0 || w == 0 {
+            bail_shape!("input {h}x{w} smaller than filter 1x1");
+        }
+        Ok(((h - 1) / self.stride.0 + 1, (w - 1) / self.stride.1 + 1))
+    }
+
+    /// Elements of workspace-owned row-gather staging one inference over an
+    /// `[n, h, w, C]` input borrows — **0 at stride 1**, where the GEMM
+    /// reads the caller's NHWC input in place (the zero-copy property).
+    pub fn staging_elems_for(&self, n: usize, h: usize, w: usize) -> usize {
+        if self.stride == (1, 1) {
+            0
+        } else {
+            let (oh, ow) = ((h - 1) / self.stride.0 + 1, (w - 1) / self.stride.1 + 1);
+            n * oh * ow * self.cin
+        }
+    }
+
+    /// Workspace elements one inference borrows from the arena — the
+    /// strided row-gather staging is the engine's only scratch (GEMM pack
+    /// panels come from per-thread scratch, as on every GEMM path).
+    pub fn workspace_elems_for(&self, n: usize, h: usize, w: usize) -> Result<usize> {
+        let _ = self.output_hw(h, w)?; // geometry must be valid
+        Ok(self.staging_elems_for(n, h, w))
+    }
+
+    /// Run with a throwaway arena (tests / one-shot use).
+    pub fn run(&self, input: &Tensor, pool: Option<&ThreadPool>) -> Result<Tensor> {
+        let mut ws = Workspace::new();
+        self.run_with_workspace(input, pool, &mut ws)
+    }
+
+    /// [`run`](Self::run) drawing any strided-gather staging from a
+    /// caller-owned arena.
+    pub fn run_with_workspace(
+        &self,
+        input: &Tensor,
+        pool: Option<&ThreadPool>,
+        ws: &mut Workspace,
+    ) -> Result<Tensor> {
+        self.run_fused_with(input, pool, None, Activation::None, ws)
+    }
+
+    /// Allocating wrapper over [`run_fused_into`](Self::run_fused_into) —
+    /// kept as the oracle the write-into path is property-tested against.
+    pub fn run_fused_with(
+        &self,
+        input: &Tensor,
+        pool: Option<&ThreadPool>,
+        bias: Option<&[f32]>,
+        act: Activation,
+        ws: &mut Workspace,
+    ) -> Result<Tensor> {
+        let mut out = self.alloc_output(input)?;
+        self.run_fused_into(&input.view(), pool, bias, act, ws, out.data_mut())?;
+        Ok(out)
+    }
+
+    /// The write-into pipeline: one fused GEMM straight over the caller's
+    /// NHWC input (stride 1) or over the workspace-staged row gather
+    /// (stride 2), bias/activation applied per cache-hot micro-tile by the
+    /// [`BiasAct`] epilogue, output landed directly in the caller-provided
+    /// `out` slice (`N·OH·OW·M` elements, fully overwritten — dirty arena
+    /// memory is fine). With a warm arena this path performs **zero heap
+    /// allocation** — at stride 1 it borrows nothing from the arena either.
+    pub fn run_fused_into(
+        &self,
+        input: &TensorView,
+        pool: Option<&ThreadPool>,
+        bias: Option<&[f32]>,
+        act: Activation,
+        ws: &mut Workspace,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let (n, h, w) = self.check_fused_args(input, bias, out.len())?;
+        self.gemm_rows(input, n, h, w, pool, ws, out, &BiasAct { bias, act })
+    }
+
+    /// Allocating wrapper over
+    /// [`run_residual_fused_into`](Self::run_residual_fused_into) — the
+    /// oracle its property tests compare against.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_residual_fused_with(
+        &self,
+        input: &Tensor,
+        pool: Option<&ThreadPool>,
+        bias: Option<&[f32]>,
+        act: Activation,
+        res: &[f32],
+        ws: &mut Workspace,
+    ) -> Result<Tensor> {
+        let mut out = self.alloc_output(input)?;
+        self.run_residual_fused_into(&input.view(), pool, bias, act, res, ws, out.data_mut())?;
+        Ok(out)
+    }
+
+    /// [`run_fused_into`](Self::run_fused_into) with a fused residual
+    /// accumulate: `out = act(conv(input) + bias + res)`, the residual read
+    /// per element by the [`BiasActAdd`] epilogue while each micro-tile is
+    /// cache-hot. `res` must have exactly the output's `N·OH·OW·M`
+    /// elements (the same-shape skip connection of a residual block). The
+    /// scalar chain associates exactly like the unfused conv → add → act
+    /// walk, so fusion is **bit-identical** to the separate-pass reference.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_residual_fused_into(
+        &self,
+        input: &TensorView,
+        pool: Option<&ThreadPool>,
+        bias: Option<&[f32]>,
+        act: Activation,
+        res: &[f32],
+        ws: &mut Workspace,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let (n, h, w) = self.check_fused_args(input, bias, out.len())?;
+        if res.len() != out.len() {
+            bail_shape!("residual has {} elems, output has {}", res.len(), out.len());
+        }
+        self.gemm_rows(
+            input,
+            n,
+            h,
+            w,
+            pool,
+            ws,
+            out,
+            &BiasActAdd { bias, act, res, ldr: self.cout },
+        )
+    }
+
+    /// Allocate the output tensor for the allocating (oracle) wrappers.
+    fn alloc_output(&self, input: &Tensor) -> Result<Tensor> {
+        if input.rank() != 4 {
+            bail_shape!("input must be [N, H, W, C], got {:?}", input.shape());
+        }
+        let (n, h, w) = (input.shape()[0], input.shape()[1], input.shape()[2]);
+        let (oh, ow) = self.output_hw(h, w)?;
+        Ok(Tensor::zeros(&[n, oh, ow, self.cout]))
+    }
+
+    /// Shared argument validation for the write-into entry points.
+    fn check_fused_args(
+        &self,
+        input: &TensorView,
+        bias: Option<&[f32]>,
+        out_len: usize,
+    ) -> Result<(usize, usize, usize)> {
+        if input.rank() != 4 {
+            bail_shape!("input must be [N, H, W, C], got {:?}", input.shape());
+        }
+        let (n, h, w, c) = (
+            input.shape()[0],
+            input.shape()[1],
+            input.shape()[2],
+            input.shape()[3],
+        );
+        if c != self.cin {
+            bail_shape!("input has {c} channels, pointwise weights expect {}", self.cin);
+        }
+        if let Some(b) = bias {
+            if b.len() != self.cout {
+                bail_shape!("bias length {} vs {} output channels", b.len(), self.cout);
+            }
+        }
+        let (oh, ow) = self.output_hw(h, w)?;
+        if out_len != n * oh * ow * self.cout {
+            bail_shape!(
+                "output slice has {out_len} elems, layer writes {}",
+                n * oh * ow * self.cout
+            );
+        }
+        Ok((n, h, w))
+    }
+
+    /// The hot core: resolve the GEMM A operand — the input itself at
+    /// stride 1, the workspace-staged row gather otherwise — and run the
+    /// single fused GEMM `[N·OH·OW × C] · [C × M]` with the caller's
+    /// epilogue. Allocation-free (statcheck-registered).
+    #[allow(clippy::too_many_arguments)]
+    fn gemm_rows<E: Epilogue>(
+        &self,
+        input: &TensorView,
+        n: usize,
+        h: usize,
+        w: usize,
+        pool: Option<&ThreadPool>,
+        ws: &mut Workspace,
+        out: &mut [f32],
+        epi: &E,
+    ) -> Result<()> {
+        let c = self.cin;
+        if self.stride == (1, 1) {
+            // Zero-copy: the flattened NHWC input is the A matrix, lda = C.
+            sgemm_prepacked_fused(
+                n * h * w,
+                input.data(),
+                c,
+                &self.wt_packed,
+                out,
+                self.cout,
+                false,
+                pool,
+                epi,
+            );
+            return Ok(());
+        }
+        let (sh, sw) = self.stride;
+        let (oh, ow) = ((h - 1) / sh + 1, (w - 1) / sw + 1);
+        let staging = ws.take(n * oh * ow * c);
+        let data = input.data();
+        let s_addr = staging.as_mut_ptr() as usize;
+        let gather_row = |r: usize| {
+            let b = r / oh;
+            let oy = r % oh;
+            // SAFETY: each job writes only its own `(b, oy)` staging row;
+            // jobs are disjoint and `staging` outlives the dispatch.
+            let dst: &mut [f32] = unsafe {
+                std::slice::from_raw_parts_mut((s_addr as *mut f32).add((b * oh + oy) * ow * c), ow * c)
+            };
+            let src_row = ((b * h + oy * sh) * w) * c;
+            for ox in 0..ow {
+                let s0 = src_row + ox * sw * c;
+                dst[ox * c..(ox + 1) * c].copy_from_slice(&data[s0..s0 + c]);
+            }
+        };
+        match pool {
+            Some(pool) => pool.parallel_for(n * oh, gather_row),
+            None => (0..n * oh).for_each(gather_row),
+        }
+        sgemm_prepacked_fused(
+            n * oh * ow,
+            staging,
+            c,
+            &self.wt_packed,
+            out,
+            self.cout,
+            false,
+            pool,
+            epi,
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::direct::direct_conv2d;
+    use crate::im2row::Im2RowConvolution;
+    use crate::testkit::{check, Gen};
+
+    /// The tentpole property: for 1×1 layers the engine is **bit-identical**
+    /// to the im2row baseline it replaces — the patch matrix im2row copies
+    /// is exactly the operand this engine reads in place (stride 1) or
+    /// gathers (stride 2), and the packed weights match — across strides ×
+    /// ragged C/M × {none, bias, ReLU, ReLU6}, written into NaN-poisoned
+    /// offset windows.
+    #[test]
+    fn property_pointwise_matches_im2row_bitwise() {
+        check("pointwise == im2row bit-for-bit", 48, |g: &mut Gen| {
+            let c = g.usize_in(1, 19); // ragged vs the 4-lane SIMD width
+            let m = g.usize_in(1, 21); // ragged vs NR = 16
+            let stride = if g.usize_in(0, 1) == 0 { (1, 1) } else { (2, 2) };
+            let h = g.usize_in(1, 9);
+            let w = g.usize_in(1, 9);
+            let n = g.usize_in(1, 2);
+            let input = Tensor::from_vec(&[n, h, w, c], g.normal_vec(n * h * w * c)).unwrap();
+            let weights = Tensor::from_vec(&[m, 1, 1, c], g.normal_vec(m * c)).unwrap();
+            let bias: Vec<f32> = g.normal_vec(m);
+            let (bias_opt, act) = match g.usize_in(0, 3) {
+                0 => (None, Activation::None),
+                1 => (Some(bias.as_slice()), Activation::None),
+                2 => (Some(bias.as_slice()), Activation::Relu),
+                _ => (Some(bias.as_slice()), Activation::Relu6),
+            };
+            let mut ws = Workspace::new();
+            let want = Im2RowConvolution::new(&weights, stride, (0, 0))
+                .unwrap()
+                .run_fused_with(&input, None, bias_opt, act, &mut ws)
+                .unwrap();
+            let conv = PointwiseConvolution::new(&weights, stride, (0, 0)).unwrap();
+            let off = 3usize;
+            let mut backing = vec![f32::NAN; want.len() + off];
+            conv.run_fused_into(&input.view(), None, bias_opt, act, &mut ws, &mut backing[off..])
+                .unwrap();
+            backing[off..] == *want.data() && backing[..off].iter().all(|x| x.is_nan())
+        });
+    }
+
+    /// The fused-residual property: `run_residual_fused_into` is
+    /// bit-identical to the separate-pass reference (conv with bias, then
+    /// an elementwise add, then the activation) — the association order the
+    /// [`BiasActAdd`] epilogue guarantees — into NaN-poisoned buffers, and
+    /// to its allocating twin.
+    #[test]
+    fn property_residual_fused_matches_separate_add_bitwise() {
+        check("fused residual == conv,add,act", 40, |g: &mut Gen| {
+            let c = g.usize_in(1, 14);
+            let m = g.usize_in(1, 18);
+            let stride = if g.usize_in(0, 1) == 0 { (1, 1) } else { (2, 2) };
+            let h = g.usize_in(1, 8);
+            let w = g.usize_in(1, 8);
+            let input = Tensor::from_vec(&[1, h, w, c], g.normal_vec(h * w * c)).unwrap();
+            let weights = Tensor::from_vec(&[m, 1, 1, c], g.normal_vec(m * c)).unwrap();
+            let bias: Vec<f32> = g.normal_vec(m);
+            let bias_opt = if g.usize_in(0, 1) == 0 { None } else { Some(bias.as_slice()) };
+            let act = *g.choose(&[Activation::None, Activation::Relu, Activation::Relu6]);
+            let conv = PointwiseConvolution::new(&weights, stride, (0, 0)).unwrap();
+            let mut ws = Workspace::new();
+            // Separate-pass reference over the engine's own (act-less) conv.
+            let pre = conv.run_fused_with(&input, None, bias_opt, Activation::None, &mut ws).unwrap();
+            let res: Vec<f32> = g.normal_vec(pre.len());
+            let want: Vec<f32> =
+                pre.data().iter().zip(&res).map(|(&v, &r)| act.apply(v + r)).collect();
+            let mut got = vec![f32::NAN; want.len()];
+            conv.run_residual_fused_into(&input.view(), None, bias_opt, act, &res, &mut ws, &mut got)
+                .unwrap();
+            let twin = conv
+                .run_residual_fused_with(&input, None, bias_opt, act, &res, &mut ws)
+                .unwrap();
+            got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()) && got == *twin.data()
+        });
+    }
+
+    /// Cross-oracle: agrees with the naive direct conv within float
+    /// tolerance (different accumulation order).
+    #[test]
+    fn matches_direct_oracle() {
+        for stride in [(1, 1), (2, 2)] {
+            let input = Tensor::randn(&[2, 9, 11, 13], 7);
+            let weights = Tensor::randn(&[17, 1, 1, 13], 8);
+            let conv = PointwiseConvolution::new(&weights, stride, (0, 0)).unwrap();
+            let got = conv.run(&input, None).unwrap();
+            let want = direct_conv2d(&input, &weights, stride, (0, 0)).unwrap();
+            assert_eq!(got.shape(), want.shape());
+            assert!(got.allclose(&want, 1e-4), "stride {stride:?} diverges from direct");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let pool = ThreadPool::new(4);
+        let input = Tensor::randn(&[1, 14, 15, 24], 3);
+        let weights = Tensor::randn(&[32, 1, 1, 24], 4);
+        let bias: Vec<f32> = (0..32).map(|i| i as f32 * 0.1 - 1.6).collect();
+        for stride in [(1, 1), (2, 2)] {
+            let conv = PointwiseConvolution::new(&weights, stride, (0, 0)).unwrap();
+            let mut ws = Workspace::new();
+            let a = conv
+                .run_fused_with(&input, None, Some(&bias), Activation::Relu6, &mut ws)
+                .unwrap();
+            let b = conv
+                .run_fused_with(&input, Some(&pool), Some(&bias), Activation::Relu6, &mut ws)
+                .unwrap();
+            assert_eq!(a.data(), b.data(), "pooled run must be bit-identical");
+            assert!(a.data().iter().any(|&v| v == 0.0));
+            assert!(a.data().iter().all(|&v| v <= 6.0));
+        }
+    }
+
+    /// Arena pins: stride-1 layers borrow **nothing** (the zero-copy
+    /// property), stride-2 layers borrow exactly the gather staging and a
+    /// pre-sized arena never grows across repeated inferences.
+    #[test]
+    fn arena_grow_count_stays_zero() {
+        let weights = Tensor::randn(&[12, 1, 1, 8], 9);
+        let s1 = PointwiseConvolution::new(&weights, (1, 1), (0, 0)).unwrap();
+        assert_eq!(s1.workspace_elems_for(1, 10, 10).unwrap(), 0);
+        let mut ws = Workspace::new();
+        for seed in 0..3 {
+            let input = Tensor::randn(&[1, 10, 10, 8], seed + 40);
+            let _ = s1.run_with_workspace(&input, None, &mut ws).unwrap();
+        }
+        assert_eq!(ws.grow_count(), 0, "stride-1 pointwise reads the input in place");
+        assert_eq!(ws.high_water_elems(), 0);
+
+        let s2 = PointwiseConvolution::new(&weights, (2, 2), (0, 0)).unwrap();
+        let need = s2.workspace_elems_for(1, 11, 10).unwrap();
+        assert_eq!(need, 6 * 5 * 8);
+        let mut ws = Workspace::with_capacity(need);
+        for seed in 0..3 {
+            let input = Tensor::randn(&[1, 11, 10, 8], seed + 50);
+            let _ = s2.run_with_workspace(&input, None, &mut ws).unwrap();
+        }
+        assert_eq!(ws.grow_count(), 0, "pre-sized arena must not grow");
+        assert_eq!(ws.high_water_elems(), need, "sizing formula matches borrow");
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let w11 = Tensor::zeros(&[6, 1, 1, 4]);
+        // Non-1×1 weights, padding, unsupported strides.
+        assert!(PointwiseConvolution::new(&Tensor::zeros(&[6, 3, 3, 4]), (1, 1), (0, 0)).is_err());
+        assert!(PointwiseConvolution::new(&w11, (1, 1), (1, 1)).is_err());
+        assert!(PointwiseConvolution::new(&w11, (1, 2), (0, 0)).is_err());
+        assert!(PointwiseConvolution::new(&w11, (3, 3), (0, 0)).is_err());
+        let conv = PointwiseConvolution::new(&w11, (1, 1), (0, 0)).unwrap();
+        let mut ws = Workspace::new();
+        // Channel mismatch.
+        assert!(conv.run(&Tensor::zeros(&[1, 8, 8, 5]), None).is_err());
+        // Wrong bias length, wrong output slice, wrong residual length.
+        let input = Tensor::zeros(&[1, 8, 8, 4]);
+        let mut out = vec![0.0; 8 * 8 * 6];
+        assert!(conv
+            .run_fused_into(&input.view(), None, Some(&[0.0; 3]), Activation::None, &mut ws, &mut out)
+            .is_err());
+        assert!(conv
+            .run_fused_into(&input.view(), None, None, Activation::None, &mut ws, &mut out[1..])
+            .is_err());
+        assert!(conv
+            .run_residual_fused_into(
+                &input.view(),
+                None,
+                None,
+                Activation::None,
+                &[0.0; 7],
+                &mut ws,
+                &mut out,
+            )
+            .is_err());
+    }
+
+    /// Hand-computed values: all-ones weights sum the input channels.
+    #[test]
+    fn hand_computed_values() {
+        let input = Tensor::from_vec(&[1, 2, 2, 2], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0])
+            .unwrap();
+        let weights = Tensor::full(&[1, 1, 1, 2], 1.0);
+        let conv = PointwiseConvolution::new(&weights, (1, 1), (0, 0)).unwrap();
+        let out = conv.run(&input, None).unwrap();
+        assert_eq!(out.shape(), &[1, 2, 2, 1]);
+        assert_eq!(out.data(), &[3.0, 7.0, 11.0, 15.0]);
+        // Stride 2 keeps only pixel (0,0) of each 2×2 block.
+        let conv = PointwiseConvolution::new(&weights, (2, 2), (0, 0)).unwrap();
+        let out = conv.run(&input, None).unwrap();
+        assert_eq!(out.shape(), &[1, 1, 1, 1]);
+        assert_eq!(out.data(), &[3.0]);
+    }
+}

@@ -36,9 +36,18 @@
 //!   §Perf step 5), so [`WinogradVariant::for_kernel`] routes there;
 //!   `F(2, 7)` stays available for the `ablation_variants` bench.
 //! * `1×3`/`3×1` get 1-D `F(4, 3)`.
-//! * Everything else — `1×1`, strided, `7×7` stem layers, exotic shapes —
-//!   falls back to im2row (they are either GEMM-dominated already or not
-//!   expressible in the shipped variants).
+//! * **Dense 1×1 layers route to the direct pointwise engine**
+//!   ([`crate::conv::pointwise`]): their im2row patch matrix is a verbatim
+//!   copy of the NHWC input, so the engine feeds the input to the GEMM in
+//!   place instead (zero staging copy). The rule covers stride 1 *and* the
+//!   stride-2 exception (ResNet downsample projections), where the engine
+//!   gathers the sampled pixel rows first — still `KH·KW = 1` of im2row's
+//!   copies over ¼ the rows. No channel-product gate applies: with no
+//!   transform to amortise, skipping the copy wins at every depth. Padded
+//!   1×1 layers (no evaluated network ships one) stay on im2row.
+//! * Everything else — strided spatial kernels, `7×7` stem layers, exotic
+//!   shapes — falls back to im2row (they are either GEMM-dominated already
+//!   or not expressible in the shipped variants).
 //! * Very shallow channel counts (C·M small) cannot amortise the transform
 //!   cost (§4 of the paper) and also fall back to im2row.
 
@@ -52,13 +61,16 @@ pub const MIN_CHANNEL_PRODUCT: usize = 64;
 
 /// The single spatial-aware chooser every resolution path funnels through.
 ///
-/// `out_hw` is the layer's output spatial extent when the caller knows the
-/// input shape (`Conv2d::resolved_algorithm_for`, the prepared-model
-/// binder); `None` falls back to the channel/kernel/stride heuristics with
-/// the family-default Winograd variant.
+/// `padding` gates the pointwise rule (the zero-copy engine is
+/// unpadded-only; a padded 1×1 keeps the im2row fallback). `out_hw` is the
+/// layer's output spatial extent when the caller knows the input shape
+/// (`Conv2d::resolved_algorithm_for`, the prepared-model binder); `None`
+/// falls back to the channel/kernel/stride heuristics with the
+/// family-default Winograd variant.
 pub fn select_algorithm_spatial(
     kernel: (usize, usize),
     stride: (usize, usize),
+    padding: (usize, usize),
     groups: usize,
     cin: usize,
     cout: usize,
@@ -75,6 +87,12 @@ pub fn select_algorithm_spatial(
             return ConvAlgorithm::DirectDepthwise;
         }
         return ConvAlgorithm::Direct;
+    }
+    // Dense 1×1 → the zero-copy pointwise engine, at stride 1 or the
+    // ResNet-downsample stride-2 exception (strided row gather). The
+    // engine is unpadded-only; a padded 1×1 falls through to im2row.
+    if kernel == (1, 1) && padding == (0, 0) && (stride == (1, 1) || stride == (2, 2)) {
+        return ConvAlgorithm::DirectPointwise;
     }
     if stride != (1, 1) {
         return ConvAlgorithm::Im2Row;
@@ -93,10 +111,11 @@ pub fn select_algorithm_spatial(
 }
 
 /// Shape-only shorthand for [`select_algorithm_spatial`] with
-/// `out_hw = None`: picks the algorithm family and the *default* variant.
-/// Callers that know the input shape should pass the output extent (or use
+/// `padding = (0, 0)` and `out_hw = None`: picks the algorithm family and
+/// the *default* variant for an unpadded layer. Callers that know the
+/// input shape (or pad) should pass the output extent and padding (or use
 /// [`Conv2d::resolved_algorithm_for`](super::Conv2d::resolved_algorithm_for))
-/// so small maps refine to the 2×2 tile.
+/// so small maps refine to the 2×2 tile and padded 1×1s keep im2row.
 pub fn select_algorithm(
     kernel: (usize, usize),
     stride: (usize, usize),
@@ -104,7 +123,7 @@ pub fn select_algorithm(
     cin: usize,
     cout: usize,
 ) -> ConvAlgorithm {
-    select_algorithm_spatial(kernel, stride, groups, cin, cout, None)
+    select_algorithm_spatial(kernel, stride, (0, 0), groups, cin, cout, None)
 }
 
 /// Variant choice refined by spatial extent: small outputs prefer the 2×2
@@ -202,8 +221,40 @@ mod tests {
             select_algorithm((7, 1), (1, 1), 1, 32, 64),
             ConvAlgorithm::Winograd(WinogradVariant::F4_7x1)
         );
-        assert_eq!(select_algorithm((1, 1), (1, 1), 1, 64, 64), ConvAlgorithm::Im2Row);
+        assert_eq!(
+            select_algorithm((1, 1), (1, 1), 1, 64, 64),
+            ConvAlgorithm::DirectPointwise
+        );
         assert_eq!(select_algorithm((7, 7), (1, 1), 1, 64, 64), ConvAlgorithm::Im2Row);
+    }
+
+    /// The pointwise rule: dense unpadded 1×1 at stride 1 or 2 routes to
+    /// the zero-copy engine regardless of channel depth; padded, oddly
+    /// strided or grouped 1×1s keep their old fallbacks.
+    #[test]
+    fn pointwise_routing_rules() {
+        assert_eq!(
+            select_algorithm((1, 1), (1, 1), 1, 64, 128),
+            ConvAlgorithm::DirectPointwise
+        );
+        // Stride-2 exception: ResNet downsample projections.
+        assert_eq!(
+            select_algorithm((1, 1), (2, 2), 1, 256, 512),
+            ConvAlgorithm::DirectPointwise
+        );
+        // No C·M gate — skipping the copy wins at every depth.
+        assert_eq!(
+            select_algorithm((1, 1), (1, 1), 1, 3, 8),
+            ConvAlgorithm::DirectPointwise
+        );
+        // Padded 1×1 (no evaluated network ships one) stays on im2row.
+        assert_eq!(
+            select_algorithm_spatial((1, 1), (1, 1), (1, 1), 1, 64, 64, None),
+            ConvAlgorithm::Im2Row
+        );
+        // Unsupported strides stay on im2row; grouped 1×1 stays direct.
+        assert_eq!(select_algorithm((1, 1), (3, 3), 1, 64, 64), ConvAlgorithm::Im2Row);
+        assert_eq!(select_algorithm((1, 1), (1, 1), 4, 64, 64), ConvAlgorithm::Direct);
     }
 
     #[test]
@@ -227,11 +278,11 @@ mod tests {
     #[test]
     fn spatial_chooser_refines_where_shape_only_defaults() {
         assert_eq!(
-            select_algorithm_spatial((3, 3), (1, 1), 1, 16, 16, Some((56, 56))),
+            select_algorithm_spatial((3, 3), (1, 1), (1, 1), 1, 16, 16, Some((56, 56))),
             ConvAlgorithm::Winograd(WinogradVariant::F4x4_3x3)
         );
         assert_eq!(
-            select_algorithm_spatial((3, 3), (1, 1), 1, 16, 16, Some((4, 4))),
+            select_algorithm_spatial((3, 3), (1, 1), (1, 1), 1, 16, 16, Some((4, 4))),
             ConvAlgorithm::Winograd(WinogradVariant::F2x2_3x3)
         );
         // Shape-only defaults to the 4×4 family variant.
@@ -241,11 +292,11 @@ mod tests {
         );
         // Spatial info never overrides the grouped or strided rules.
         assert_eq!(
-            select_algorithm_spatial((3, 3), (2, 2), 1, 64, 64, Some((56, 56))),
+            select_algorithm_spatial((3, 3), (2, 2), (1, 1), 1, 64, 64, Some((56, 56))),
             ConvAlgorithm::Im2Row
         );
         assert_eq!(
-            select_algorithm_spatial((3, 3), (1, 1), 64, 64, 64, Some((4, 4))),
+            select_algorithm_spatial((3, 3), (1, 1), (1, 1), 64, 64, 64, Some((4, 4))),
             ConvAlgorithm::DirectDepthwise
         );
     }

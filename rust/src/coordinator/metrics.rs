@@ -55,8 +55,8 @@ pub struct MetricsSnapshot {
     /// regression.
     pub arena_grows: u64,
     /// Per-algorithm conv dispatch totals (winograd / im2row / depthwise /
-    /// direct) — which execution paths the served traffic actually
-    /// exercised.
+    /// pointwise / direct) — which execution paths the served traffic
+    /// actually exercised.
     pub dispatch: DispatchCounts,
 }
 
@@ -220,14 +220,16 @@ mod tests {
             winograd: 4,
             im2row: 7,
             depthwise: 13,
+            pointwise: 11,
             direct: 0,
         });
         let s = m.snapshot();
         assert_eq!(s.dispatch.winograd, 4);
         assert_eq!(s.dispatch.depthwise, 13);
-        assert_eq!(s.dispatch.total(), 24);
-        assert!(s
-            .report()
-            .contains("dispatch: winograd 4 / im2row 7 / depthwise 13 / direct 0"));
+        assert_eq!(s.dispatch.pointwise, 11);
+        assert_eq!(s.dispatch.total(), 35);
+        assert!(s.report().contains(
+            "dispatch: winograd 4 / im2row 7 / depthwise 13 / pointwise 11 / direct 0"
+        ));
     }
 }

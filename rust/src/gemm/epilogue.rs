@@ -167,6 +167,59 @@ impl Epilogue for BiasAct<'_> {
     }
 }
 
+/// Fused residual accumulate: `C = act(A·B + bias + R)`, with the residual
+/// operand `R` read per element **while the micro-tile is cache-hot** — the
+/// `Conv(1×1) → Add → Act` chain of a residual block collapses into one
+/// GEMM instead of a conv followed by a whole-tensor add pass.
+///
+/// `R` is a full `M×N` matrix in the same row/column coordinates as C
+/// (output pixels × output channels for the pointwise engine), addressed
+/// with the absolute tile origin: element `(row0 + r, col0 + j)` is
+/// `res[(row0 + r) * ldr + col0 + j]`.
+///
+/// The scalar chain is `act((acc + bias) + r)` — the exact association
+/// order of the unfused `BiasAct` conv → `add_into` → activation walk, so
+/// fused and unfused residual blocks stay **bit-identical**.
+#[derive(Debug, Clone, Copy)]
+pub struct BiasActAdd<'a> {
+    /// Bias indexed by absolute C column; `None` ⇒ no add.
+    pub bias: Option<&'a [f32]>,
+    /// Activation applied after bias and residual.
+    pub act: Activation,
+    /// Residual matrix, same logical shape as C.
+    pub res: &'a [f32],
+    /// Leading dimension (row stride) of `res`.
+    pub ldr: usize,
+}
+
+impl Epilogue for BiasActAdd<'_> {
+    #[inline]
+    fn micro_tile(
+        &self,
+        c: &mut [f32],
+        ldc: usize,
+        row0: usize,
+        col0: usize,
+        rows: usize,
+        cols: usize,
+    ) {
+        for r in 0..rows {
+            let row = &mut c[r * ldc..r * ldc + cols];
+            let res = &self.res[(row0 + r) * self.ldr + col0..(row0 + r) * self.ldr + col0 + cols];
+            if let Some(bias) = self.bias {
+                let b = &bias[col0..col0 + cols];
+                for ((v, &bv), &rv) in row.iter_mut().zip(b).zip(res) {
+                    *v = self.act.apply((*v + bv) + rv);
+                }
+            } else {
+                for (v, &rv) in row.iter_mut().zip(res) {
+                    *v = self.act.apply(*v + rv);
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -201,6 +254,44 @@ mod tests {
         let mut c = vec![-1.0, 2.0];
         BiasAct { bias: None, act: Activation::None }.micro_tile(&mut c, 2, 0, 0, 1, 2);
         assert_eq!(c, vec![-1.0, 2.0]);
+    }
+
+    #[test]
+    fn residual_epilogue_adds_r_with_absolute_origin() {
+        // 2×2 valid region of a tile at (row0=1, col0=1) inside a 3-wide C
+        // buffer; R is the full 3×3 matrix (ldr = 3).
+        let mut c = vec![1.0, -2.0, 99.0, -3.0, 4.0, 99.0];
+        let res: Vec<f32> = (0..9).map(|i| i as f32 * 10.0).collect();
+        let bias = [100.0, 10.0, 20.0];
+        let epi = BiasActAdd { bias: Some(&bias), act: Activation::None, res: &res, ldr: 3 };
+        epi.micro_tile(&mut c, 3, 1, 1, 2, 2);
+        // (1,1): 1 + 10 + 40; (1,2): -2 + 20 + 50; (2,1): -3 + 10 + 70;
+        // (2,2): 4 + 20 + 80. ldc padding untouched.
+        assert_eq!(c, vec![51.0, 68.0, 99.0, 77.0, 104.0, 99.0]);
+    }
+
+    #[test]
+    fn residual_epilogue_matches_unfused_chain_bitwise() {
+        // act((acc + bias) + r) must associate exactly like the unfused
+        // BiasAct → add → act walk, including under ReLU6 and no-bias.
+        let accs = [0.1f32, -7.3, 5.9, 2.0e-8];
+        let biases = [0.7f32, -0.2, 3.3, 1.0e-8];
+        let resids = [1.3f32, 6.8, -2.1, 3.0e-8];
+        for act in [Activation::None, Activation::Relu, Activation::Relu6] {
+            let mut fused = accs;
+            let epi = BiasActAdd { bias: Some(&biases), act, res: &resids, ldr: 4 };
+            epi.micro_tile(&mut fused, 4, 0, 0, 1, 4);
+            let mut nobias = accs;
+            BiasActAdd { bias: None, act, res: &resids, ldr: 4 }.micro_tile(&mut nobias, 4, 0, 0, 1, 4);
+            for j in 0..4 {
+                let mut v = accs[j];
+                BiasAct { bias: Some(&biases), act: Activation::None }
+                    .micro_tile(std::slice::from_mut(&mut v), 1, 0, j, 1, 1);
+                let unfused = act.apply(v + resids[j]);
+                assert_eq!(fused[j].to_bits(), unfused.to_bits(), "act {act} col {j}");
+                assert_eq!(nobias[j].to_bits(), act.apply(accs[j] + resids[j]).to_bits());
+            }
+        }
     }
 
     #[test]

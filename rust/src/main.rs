@@ -61,7 +61,7 @@ fn print_help() {
          USAGE: winoconv <subcommand> [options]\n\
          \n\
          SUBCOMMANDS\n\
-         \x20 layers   --model <vgg16|vgg19|googlenet|inception-v3|squeezenet|mobilenet-v1|mobilenet-v2> [--threads N] [--quick]\n\
+         \x20 layers   --model <vgg16|vgg19|googlenet|inception-v3|squeezenet|mobilenet-v1|mobilenet-v2|resnet-18|resnet-50> [--threads N] [--quick]\n\
          \x20 network  --model <name> [--threads N] [--reps N] [--quick]\n\
          \x20 serve    --model <name> [--threads N] [--seconds S]\n\
          \x20 verify   [--artifacts DIR]\n\

@@ -255,6 +255,28 @@ pub fn relu6(input: &Tensor) -> Tensor {
     out
 }
 
+/// Standalone ReLU over a flat input slice, writing into a caller-provided
+/// slice of the same length (fully overwritten) — the post-add activation
+/// of a ResNet residual block. Conv layers fuse ReLU through their
+/// epilogues instead, and fused `Conv(1×1) → Add → Relu` chains apply it
+/// inside the pointwise GEMM's residual epilogue.
+pub fn relu_into(input: &[f32], out: &mut [f32]) -> Result<()> {
+    if out.len() != input.len() {
+        bail_shape!("relu output slice has {} elems, input {}", out.len(), input.len());
+    }
+    for (o, &x) in out.iter_mut().zip(input) {
+        *o = Activation::Relu.apply(x);
+    }
+    Ok(())
+}
+
+/// Allocating wrapper over [`relu_into`].
+pub fn relu(input: &Tensor) -> Tensor {
+    let mut out = Tensor::zeros(input.shape());
+    relu_into(input.data(), out.data_mut()).expect("same-size output");
+    out
+}
+
 /// Elementwise residual add (`out = a + b`) over two same-length flat
 /// slices, writing into a caller-provided slice (fully overwritten) — the
 /// MobileNetV2 inverted-residual skip connection. The channel-inner loop

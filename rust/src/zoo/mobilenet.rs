@@ -5,19 +5,21 @@
 //! Both networks interleave 3×3 **depthwise** convolutions (one filter per
 //! channel — `groups == cin == cout`, bound to the register-tiled direct
 //! engine by the selector) with 1×1 **pointwise** convolutions (pure
-//! channel mixing — GEMM-dominated, so they stay on the fused im2row/GEMM
-//! path). All hidden activations are the ReLU6 clamp the TF reference
-//! models train with, fused through the conv epilogues; MobileNetV2's
-//! projection layers are linear (no activation) and its stride-1
-//! equal-width bottlenecks carry an elementwise residual
-//! ([`crate::nn::Op::Add`]).
+//! channel mixing — on the ours scheme these bind to the zero-copy direct
+//! pointwise engine ([`crate::conv::pointwise`]); the baseline scheme keeps
+//! the bit-identical im2row/GEMM path). All hidden activations are the
+//! ReLU6 clamp the TF reference models train with, fused through the conv
+//! epilogues; MobileNetV2's projection layers are linear (no activation)
+//! and its stride-1 equal-width bottlenecks carry an elementwise residual
+//! ([`crate::nn::Op::Add`]) with the conv operand first, so the prepared
+//! model collapses `project → add` into one fused-residual pointwise GEMM.
 //!
 //! Note on the benchmark schemes: neither network has a single
 //! Winograd-suitable layer (the only dense 3×3 conv is the stride-2 stem),
-//! so `Scheme::Im2RowOnly` and `Scheme::WinogradWhereSuitable` bind
-//! identically — the interesting comparison for this class is the
-//! depthwise engine vs the im2row-as-grouped degenerate baseline
-//! (`benches/ablation_depthwise.rs`), not Table 1's scheme split.
+//! so the scheme split is pointwise-engine-vs-im2row for the 1×1s — bit-
+//! identical outputs either way; the timing comparisons for this class are
+//! `benches/ablation_depthwise.rs` and `benches/ablation_pointwise.rs`,
+//! not Table 1's Winograd split.
 
 use super::Builder;
 use crate::conv::Activation;
@@ -117,7 +119,10 @@ fn bottleneck(
         Activation::None,
     );
     if stride == 1 && cin == cout {
-        b.add(&format!("{name}/add"), from, proj)
+        // Conv operand first (the zoo residual convention): the prepared
+        // model fuses this linear projection + add into one pointwise GEMM
+        // with a residual epilogue on the ours scheme.
+        b.add(&format!("{name}/add"), proj, from)
     } else {
         proj
     }

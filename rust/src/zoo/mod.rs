@@ -4,7 +4,9 @@
 //! networks of the paper's §3 (VGG-16, VGG-19, GoogleNet/Inception-v1,
 //! Inception-v3, SqueezeNet v1.0) plus the depthwise-separable MobileNetV1
 //! and MobileNetV2 — the workload class the direct depthwise engine
-//! ([`crate::conv::depthwise`]) exists for.
+//! ([`crate::conv::depthwise`]) exists for — and the residual ResNet-18 /
+//! ResNet-50, whose 1×1-heavy bottlenecks exercise the zero-copy pointwise
+//! engine ([`crate::conv::pointwise`]) and its fused residual epilogue.
 //!
 //! Architectures follow the original papers' layer tables; layer names match
 //! the conventions used in each paper so Table 2 rows are recognisable.
@@ -14,6 +16,7 @@ pub mod squeezenet;
 pub mod googlenet;
 pub mod inception_v3;
 pub mod mobilenet;
+pub mod resnet;
 
 use crate::conv::{Activation, Conv2d};
 use crate::nn::{Graph, NodeId, Op};
@@ -37,11 +40,16 @@ pub enum ModelKind {
     MobileNetV1,
     /// MobileNetV2 (224×224 input, inverted residuals + ReLU6).
     MobileNetV2,
+    /// ResNet-18 (224×224 input, basic residual blocks).
+    ResNet18,
+    /// ResNet-50 (224×224 input, 1×1-heavy bottleneck blocks).
+    ResNet50,
 }
 
 impl ModelKind {
-    /// Every model: the paper's five in table order, then the MobileNets.
-    pub const ALL: [ModelKind; 7] = [
+    /// Every model: the paper's five in table order, then the MobileNets
+    /// and the ResNets.
+    pub const ALL: [ModelKind; 9] = [
         ModelKind::Vgg16,
         ModelKind::Vgg19,
         ModelKind::GoogleNet,
@@ -49,6 +57,8 @@ impl ModelKind {
         ModelKind::SqueezeNet,
         ModelKind::MobileNetV1,
         ModelKind::MobileNetV2,
+        ModelKind::ResNet18,
+        ModelKind::ResNet50,
     ];
 
     /// Canonical lowercase name (CLI `--model` values).
@@ -61,6 +71,8 @@ impl ModelKind {
             ModelKind::SqueezeNet => "squeezenet",
             ModelKind::MobileNetV1 => "mobilenet-v1",
             ModelKind::MobileNetV2 => "mobilenet-v2",
+            ModelKind::ResNet18 => "resnet-18",
+            ModelKind::ResNet50 => "resnet-50",
         }
     }
 
@@ -74,6 +86,8 @@ impl ModelKind {
             ModelKind::SqueezeNet => "SqueezeNet",
             ModelKind::MobileNetV1 => "MobileNetV1",
             ModelKind::MobileNetV2 => "MobileNetV2",
+            ModelKind::ResNet18 => "ResNet-18",
+            ModelKind::ResNet50 => "ResNet-50",
         }
     }
 
@@ -89,6 +103,9 @@ impl ModelKind {
                 Some(ModelKind::MobileNetV1)
             }
             "mobilenet-v2" | "mobilenetv2" | "mobilenet2" => Some(ModelKind::MobileNetV2),
+            "resnet-18" | "resnet18" => Some(ModelKind::ResNet18),
+            "resnet-50" | "resnet50" => Some(ModelKind::ResNet50),
+            // Bare "resnet" stays unparsed: there is no canonical depth.
             _ => None,
         }
     }
@@ -111,6 +128,8 @@ impl ModelKind {
             ModelKind::SqueezeNet => squeezenet::build(seed),
             ModelKind::MobileNetV1 => mobilenet::build_v1(seed),
             ModelKind::MobileNetV2 => mobilenet::build_v2(seed),
+            ModelKind::ResNet18 => resnet::build_18(seed),
+            ModelKind::ResNet50 => resnet::build_50(seed),
         }
     }
 }
@@ -205,9 +224,18 @@ impl Builder {
         )
     }
 
-    /// Elementwise residual add (MobileNetV2 inverted-residual skip).
+    /// Elementwise residual add. Keep the conv operand FIRST and the skip
+    /// connection second: the prepared-model fusion matcher is
+    /// order-agnostic, but conv-first is the convention every zoo residual
+    /// uses (`Conv(1×1) → Add → Act` reads in graph order).
     pub fn add(&mut self, name: &str, a: NodeId, b: NodeId) -> NodeId {
         self.g.add(name, Op::Add, &[a, b])
+    }
+
+    /// Standalone post-add ReLU (the ResNet block tail; fuses into the
+    /// pointwise residual GEMM when the preceding Add qualifies).
+    pub fn relu(&mut self, name: &str, from: NodeId) -> NodeId {
+        self.g.add(name, Op::Relu, &[from])
     }
 
     pub fn maxpool(

@@ -1,0 +1,281 @@
+//! ResNet-18 and ResNet-50 (He et al. 2015, v1.5 stride placement) — the
+//! residual workload class the zero-copy pointwise engine
+//! ([`crate::conv::pointwise`]) and its fused residual epilogue exist for.
+//!
+//! ResNet-18 stacks **basic** blocks (3×3 + 3×3, identity or 1×1/s2
+//! projection shortcut); its dense stride-1 3×3 bodies are the classic
+//! Winograd territory, while the three downsample projections exercise the
+//! pointwise engine's strided gather path. ResNet-50 stacks **bottleneck**
+//! blocks (1×1 reduce → 3×3 → 1×1 expand) — over two thirds of its convs
+//! are dense 1×1s, and every block ends in the exact
+//! `Conv(1×1, linear) → Add → Relu` chain the prepared model collapses
+//! into one fused-residual pointwise GEMM.
+//!
+//! Residual adds follow the zoo convention: conv operand first, skip
+//! connection second. Block tails are standalone [`crate::nn::Op::Relu`]
+//! nodes so the fusion matcher sees the post-add activation explicitly.
+
+use super::Builder;
+use crate::conv::Activation;
+use crate::nn::{Graph, NodeId};
+use crate::Result;
+
+/// The shared 224×224 stem: 7×7/2 pad-3 conv to 64 channels (ReLU), then
+/// 3×3/2 pad-1 max-pool — 224 → 112 → 56.
+fn stem(b: &mut Builder, input: NodeId) -> NodeId {
+    let c1 = b.conv_act("conv1", input, 3, 64, (7, 7), (2, 2), (3, 3), Activation::Relu);
+    b.maxpool("pool1", c1, 3, 2, 1, false)
+}
+
+/// The shortcut operand: identity when the block keeps shape, else a
+/// linear 1×1 projection matching channels (and stride, on downsample
+/// blocks).
+fn shortcut(
+    b: &mut Builder,
+    name: &str,
+    from: NodeId,
+    cin: usize,
+    cout: usize,
+    stride: usize,
+) -> NodeId {
+    if stride == 1 && cin == cout {
+        from
+    } else {
+        b.conv_act(
+            &format!("{name}/proj"),
+            from,
+            cin,
+            cout,
+            (1, 1),
+            (stride, stride),
+            (0, 0),
+            Activation::None,
+        )
+    }
+}
+
+/// ResNet-18/34 basic block: 3×3 (stride `s`, ReLU) → 3×3 (linear) →
+/// add shortcut → ReLU.
+fn basic_block(
+    b: &mut Builder,
+    name: &str,
+    from: NodeId,
+    cin: usize,
+    cout: usize,
+    stride: usize,
+) -> NodeId {
+    let c1 = b.conv_act(
+        &format!("{name}/conv1"),
+        from,
+        cin,
+        cout,
+        (3, 3),
+        (stride, stride),
+        (1, 1),
+        Activation::Relu,
+    );
+    let c2 = b.conv_act(
+        &format!("{name}/conv2"),
+        c1,
+        cout,
+        cout,
+        (3, 3),
+        (1, 1),
+        (1, 1),
+        Activation::None,
+    );
+    let sc = shortcut(b, name, from, cin, cout, stride);
+    let add = b.add(&format!("{name}/add"), c2, sc);
+    b.relu(&format!("{name}/relu"), add)
+}
+
+/// ResNet-50 bottleneck: 1×1 reduce (ReLU) → 3×3 (stride `s`, ReLU) →
+/// 1×1 expand (linear) → add shortcut → ReLU. The expand → add → relu
+/// tail is the fused pointwise-residual chain.
+fn bottleneck(
+    b: &mut Builder,
+    name: &str,
+    from: NodeId,
+    cin: usize,
+    width: usize,
+    cout: usize,
+    stride: usize,
+) -> NodeId {
+    let reduce = b.conv_act(
+        &format!("{name}/reduce"),
+        from,
+        cin,
+        width,
+        (1, 1),
+        (1, 1),
+        (0, 0),
+        Activation::Relu,
+    );
+    let mid = b.conv_act(
+        &format!("{name}/conv3x3"),
+        reduce,
+        width,
+        width,
+        (3, 3),
+        (stride, stride),
+        (1, 1),
+        Activation::Relu,
+    );
+    let expand = b.conv_act(
+        &format!("{name}/expand"),
+        mid,
+        width,
+        cout,
+        (1, 1),
+        (1, 1),
+        (0, 0),
+        Activation::None,
+    );
+    let sc = shortcut(b, name, from, cin, cout, stride);
+    let add = b.add(&format!("{name}/add"), expand, sc);
+    b.relu(&format!("{name}/relu"), add)
+}
+
+/// Build ResNet-18 (224×224×3 → 1000 classes): stem, four stages of two
+/// basic blocks at widths 64/128/256/512 (stages 2–4 downsample), GAP, FC.
+pub fn build_18(seed: u64) -> Result<Graph> {
+    let (mut b, input) = Builder::new(seed);
+    let mut prev = stem(&mut b, input);
+    let mut cin = 64;
+    // (stage width, first-block stride) — 56 → 56 → 28 → 14 → 7.
+    let stages: [(usize, usize); 4] = [(64, 1), (128, 2), (256, 2), (512, 2)];
+    for (si, &(w, s)) in stages.iter().enumerate() {
+        for rep in 0..2 {
+            let stride = if rep == 0 { s } else { 1 };
+            prev = basic_block(
+                &mut b,
+                &format!("stage{}/block{}", si + 1, rep + 1),
+                prev,
+                cin,
+                w,
+                stride,
+            );
+            cin = w;
+        }
+    }
+    let gap = b.gap("gap", prev);
+    let fc = b.fc("fc", gap, 512, 1000, false);
+    b.softmax("prob", fc);
+    Ok(b.g)
+}
+
+/// Build ResNet-50 (224×224×3 → 1000 classes): stem, bottleneck stages
+/// [3, 4, 6, 3] at widths 64/128/256/512 with 4× expansion, GAP, FC.
+pub fn build_50(seed: u64) -> Result<Graph> {
+    let (mut b, input) = Builder::new(seed);
+    let mut prev = stem(&mut b, input);
+    let mut cin = 64;
+    // (bottleneck width, output channels, repeats, first-block stride).
+    let stages: [(usize, usize, usize, usize); 4] = [
+        (64, 256, 3, 1),
+        (128, 512, 4, 2),
+        (256, 1024, 6, 2),
+        (512, 2048, 3, 2),
+    ];
+    for (si, &(w, cout, n, s)) in stages.iter().enumerate() {
+        for rep in 0..n {
+            let stride = if rep == 0 { s } else { 1 };
+            prev = bottleneck(
+                &mut b,
+                &format!("stage{}/block{}", si + 1, rep + 1),
+                prev,
+                cin,
+                w,
+                cout,
+                stride,
+            );
+            cin = cout;
+        }
+    }
+    let gap = b.gap("gap", prev);
+    let fc = b.fc("fc", gap, 2048, 1000, false);
+    b.softmax("prob", fc);
+    Ok(b.g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{Op, PreparedModel, Scheme};
+
+    #[test]
+    fn r18_structure() {
+        let g = build_18(1).unwrap();
+        // Stem + 8 × (two 3×3) + 3 downsample projections = 20 convs.
+        assert_eq!(g.conv_count(), 20);
+        let shapes = g.infer_shapes(&[1, 224, 224, 3]).unwrap();
+        assert_eq!(shapes.last().unwrap(), &vec![1, 1000]);
+        let adds = g.nodes.iter().filter(|n| matches!(n.op, Op::Add)).count();
+        let relus = g.nodes.iter().filter(|n| matches!(n.op, Op::Relu)).count();
+        assert_eq!(adds, 8);
+        assert_eq!(relus, 8);
+        // Spatial schedule 56 → 28 → 14 → 7 at widths 64/128/256/512.
+        let idx = |name: &str| g.nodes.iter().position(|n| n.name == name).unwrap();
+        assert_eq!(shapes[idx("pool1")], vec![1, 56, 56, 64]);
+        assert_eq!(shapes[idx("stage2/block1/relu")], vec![1, 28, 28, 128]);
+        assert_eq!(shapes[idx("stage4/block2/relu")], vec![1, 7, 7, 512]);
+        // Exactly the three downsample projections are 1×1.
+        let pw = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(&n.op, Op::Conv { desc, .. } if desc.kernel == (1, 1)))
+            .count();
+        assert_eq!(pw, 3);
+    }
+
+    #[test]
+    fn r50_structure() {
+        let g = build_50(1).unwrap();
+        // Stem + 16 × (reduce, 3×3, expand) + 4 projections = 53 convs.
+        assert_eq!(g.conv_count(), 53);
+        let shapes = g.infer_shapes(&[1, 224, 224, 3]).unwrap();
+        assert_eq!(shapes.last().unwrap(), &vec![1, 1000]);
+        let adds = g.nodes.iter().filter(|n| matches!(n.op, Op::Add)).count();
+        assert_eq!(adds, 16);
+        // Two thirds of the convs are dense 1×1 pointwise layers.
+        let pw = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(&n.op, Op::Conv { desc, .. } if desc.kernel == (1, 1)))
+            .count();
+        assert_eq!(pw, 36);
+        let idx = |name: &str| g.nodes.iter().position(|n| n.name == name).unwrap();
+        assert_eq!(shapes[idx("stage1/block1/relu")], vec![1, 56, 56, 256]);
+        assert_eq!(shapes[idx("stage4/block3/relu")], vec![1, 7, 7, 2048]);
+    }
+
+    /// Every dense 1×1 binds to the pointwise engine on the ours scheme,
+    /// and every bottleneck tail fuses: the census counts all 36 ResNet-50
+    /// pointwise layers (16 of them as fused-residual tails) and the three
+    /// ResNet-18 strided projections.
+    #[test]
+    fn prepared_census_routes_pointwise() {
+        let g18 = build_18(7).unwrap();
+        let m18 =
+            PreparedModel::prepare("r18", &g18, &[1, 224, 224, 3], Scheme::WinogradWhereSuitable)
+                .unwrap();
+        assert_eq!(m18.dispatch_census().pointwise, 3);
+        // The eight stride-1 block bodies are Winograd-suitable.
+        assert!(m18.dispatch_census().winograd > 0);
+
+        let g50 = build_50(7).unwrap();
+        let m50 =
+            PreparedModel::prepare("r50", &g50, &[1, 224, 224, 3], Scheme::WinogradWhereSuitable)
+                .unwrap();
+        assert_eq!(m50.dispatch_census().pointwise, 36);
+        // Baseline scheme: the same 1×1s stay on im2row, bit-identically.
+        let b50 = PreparedModel::prepare("r50", &g50, &[1, 224, 224, 3], Scheme::Im2RowOnly)
+            .unwrap();
+        assert_eq!(b50.dispatch_census().pointwise, 0);
+        assert_eq!(
+            b50.dispatch_census().total(),
+            m50.dispatch_census().total(),
+            "fusion must not drop conv layers from the census"
+        );
+    }
+}
