@@ -10,6 +10,7 @@
 use winoconv::bench::{ms, Table};
 use winoconv::nn::{ActivationPlan, PreparedModel, Scheme};
 use winoconv::parallel::ThreadPool;
+use winoconv::quant::Dtype;
 use winoconv::tensor::Tensor;
 use winoconv::util::cli::Args;
 use winoconv::workspace::Workspace;
@@ -24,7 +25,10 @@ use winoconv::zoo::ModelKind;
 /// does. For the MobileNets this also pins the depthwise engine's planned
 /// write-into path (every dw layer dispatches to it); for MobileNetV2 and
 /// the ResNets it pins the pointwise engine's dispatch census and the
-/// residual-fusion savings in the activation plan.
+/// residual-fusion savings in the activation plan. A final int8 pass runs
+/// the quantizable models (MobileNetV1/V2, ResNet-18) end-to-end at
+/// `Dtype::Int8`, pinning the int8 dispatch census and the accuracy drift
+/// vs the f32 oracle.
 fn smoke(pool: &ThreadPool) -> winoconv::Result<()> {
     let mut table = Table::new(
         "activation memory plan per zoo model (batch 1)",
@@ -124,6 +128,90 @@ fn smoke(pool: &ThreadPool) -> winoconv::Result<()> {
             model.display(),
             prepared.activation_plan().peak_bytes() / 1024,
             prepared.activation_plan().naive_bytes() / 1024,
+            counts,
+        );
+    }
+
+    // Quantized gate: the quantizable zoo models (MobileNetV1/V2 +
+    // ResNet-18) prepared at int8 run end-to-end over pre-sized arenas at
+    // grow-count 0 / fallback-count 0, every conv dispatches through an
+    // int8 lane (Winograd and the f32 engines see zero traffic), the
+    // dispatch accounting stays exact, and the whole-network output tracks
+    // the f32 oracle within the calibrated drift budget.
+    for model in [ModelKind::MobileNetV1, ModelKind::MobileNetV2, ModelKind::ResNet18] {
+        assert!(model.quantizable(), "smoke {model}: quantized gate covers this model");
+        let graph = model.build(1)?;
+        let shape = model.input_shape(1);
+        let input = Tensor::randn(&shape, 7);
+        let oracle_m = PreparedModel::prepare(model.name(), &graph, &shape, Scheme::Im2RowOnly)?;
+        let (oracle, _) = oracle_m.run(&input, Some(pool))?;
+        let prepared = PreparedModel::prepare_with_dtype(
+            model.name(),
+            &graph,
+            &shape,
+            Scheme::WinogradWhereSuitable,
+            Dtype::Int8,
+        )?;
+        let mut ws = Workspace::with_capacity(prepared.workspace_elems());
+        let mut acts = Workspace::with_capacity(prepared.activation_plan().peak_elems());
+        let mut out = vec![f32::NAN; prepared.output_shape().iter().product()];
+        for _ in 0..2 {
+            prepared.run_planned_into(&input, Some(pool), &mut ws, &mut acts, &mut out)?;
+        }
+        assert_eq!(ws.grow_count(), 0, "smoke {model} int8: scratch arena grew after pre-sizing");
+        assert_eq!(acts.grow_count(), 0, "smoke {model} int8: activation arena grew");
+        assert_eq!(prepared.fallback_count(), 0, "smoke {model} int8: run() fallback taken");
+        let census = prepared.dispatch_census();
+        let counts = prepared.dispatch_counts();
+        assert_eq!(counts.total(), 2 * census.total(), "smoke {model} int8: dispatch accounting");
+        assert_eq!(
+            census.winograd + census.im2row + census.depthwise + census.pointwise + census.direct,
+            0,
+            "smoke {model} int8: f32 lanes must see zero traffic"
+        );
+        match model {
+            // MobileNetV1: the stem 3x3/s2 is the only dense spatial conv;
+            // every separable block is one depthwise + one pointwise.
+            ModelKind::MobileNetV1 => {
+                assert_eq!(census.depthwise_i8, 13, "smoke {model} int8: dw census");
+                assert_eq!(census.pointwise_i8, 13, "smoke {model} int8: pw census");
+                assert_eq!(census.im2row_i8, 1, "smoke {model} int8: stem census");
+            }
+            // MobileNetV2: 17 inverted-residual depthwise layers; the
+            // expand/project 1x1s all land on the int8 pointwise engine.
+            ModelKind::MobileNetV2 => {
+                assert_eq!(census.depthwise_i8, 17, "smoke {model} int8: dw census");
+                assert!(census.pointwise_i8 > 0, "smoke {model} int8: pw census");
+            }
+            // ResNet-18: 3x3 basic blocks on int8 im2row, 1x1 downsample
+            // projections on the int8 pointwise engine.
+            _ => {
+                assert!(
+                    census.im2row_i8 > 0 && census.pointwise_i8 > 0,
+                    "smoke {model} int8: both dense int8 lanes must bind"
+                );
+            }
+        }
+        // Accuracy drift vs the f32 oracle: a layer-wise error-propagation
+        // simulation of the scheme (per-tensor u8 activations x per-channel
+        // i8 weights, f32 activations between layers) puts the worst-case
+        // relative drift of these three networks at 0.116; 0.25 leaves 2x
+        // headroom while still catching a broken requantize path outright.
+        assert!(out.iter().all(|v| v.is_finite()), "smoke {model} int8: non-finite output");
+        let peak = oracle.data().iter().fold(0f32, |a, &v| a.max(v.abs())).max(1e-12);
+        let drift = out
+            .iter()
+            .zip(oracle.data())
+            .fold(0f32, |a, (&x, &y)| a.max((x - y).abs()));
+        assert!(
+            drift <= 0.25 * peak,
+            "smoke {model} int8: drift {drift} exceeds 0.25 x f32 peak {peak}"
+        );
+        println!(
+            "smoke ok: {} int8 end-to-end, grow-count 0, fallback-count 0, \
+             drift {:.4} of f32 peak, dispatch {}",
+            model.display(),
+            drift / peak,
             counts,
         );
     }

@@ -48,6 +48,12 @@ run cargo bench --bench ablation_depthwise -- --smoke
 # bit-identically, over grow-count-0 arenas.
 run cargo bench --bench ablation_pointwise -- --smoke
 
+# Quantization gate: the int8 im2row GEMM (u8xi8->i32 micro-kernel +
+# dequantizing epilogue) must keep strictly beating the f32 im2row GEMM on
+# identical dense 3x3 shapes, with int8 outputs tracking the f32 oracle
+# within the subsystem's rel-error budget over grow-count-0 arenas.
+run cargo bench --bench ablation_quant -- --smoke
+
 if [[ "${1:-}" != "--no-lint" ]]; then
     if cargo fmt --version >/dev/null 2>&1; then
         run cargo fmt --check

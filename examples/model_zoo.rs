@@ -4,7 +4,7 @@
 //! structural sanity check of the whole stack.
 //!
 //! ```sh
-//! cargo run --release --example model_zoo -- [--model resnet-50] [--threads 4]
+//! cargo run --release --example model_zoo -- [--model resnet-50] [--threads 4] [--dtype int8]
 //! ```
 //! Without `--model`, only the small models run (VGG/Inception take
 //! minutes in a debug-ish environment; use the benches for full tables).
@@ -17,6 +17,7 @@
 use winoconv::bench::{ms, Table};
 use winoconv::nn::{PreparedModel, Scheme};
 use winoconv::parallel::ThreadPool;
+use winoconv::quant::Dtype;
 use winoconv::tensor::Tensor;
 use winoconv::util::cli::Args;
 use winoconv::zoo::ModelKind;
@@ -24,6 +25,7 @@ use winoconv::zoo::ModelKind;
 fn main() -> winoconv::Result<()> {
     let args = Args::from_env(&[])?;
     let threads: usize = args.get_parse_or("threads", 4)?;
+    let dtype: Dtype = args.get_parse_or("dtype", Dtype::F32)?;
     let pool = ThreadPool::new(threads);
 
     let models: Vec<ModelKind> = match args.get("model") {
@@ -56,7 +58,11 @@ fn main() -> winoconv::Result<()> {
             .into_iter()
             .enumerate()
         {
-            let prepared = PreparedModel::prepare(model.name(), &graph, &shape, scheme)?;
+            let prepared =
+                PreparedModel::prepare_with_dtype(model.name(), &graph, &shape, scheme, dtype)?;
+            if si == 0 {
+                println!("dtype {dtype}: dispatch census {}", prepared.dispatch_census());
+            }
             if si == 0 {
                 let plan = prepared.activation_plan();
                 println!(

@@ -29,6 +29,7 @@ const HOT_FILES: &[&str] = &[
 /// files. Globs support a single `*`.
 const HOT_FNS: &[(&str, &str)] = &[
     ("*", "*_fused_into"),
+    ("*", "*_i8_into"),
     ("*", "run_planned_into"),
     ("rust/src/conv/depthwise/mod.rs", "conv_rows"),
     ("rust/src/conv/pointwise/mod.rs", "gemm_rows"),

@@ -9,7 +9,7 @@ pub mod direct;
 pub mod pointwise;
 pub mod select;
 
-pub use select::{select_algorithm, select_algorithm_spatial};
+pub use select::{select_algorithm, select_algorithm_spatial, select_algorithm_spatial_dtype};
 
 /// Fused pointwise activation (none / ReLU / ReLU6) — defined next to the
 /// GEMM epilogues that apply it, re-exported here for descriptor use.
@@ -17,6 +17,9 @@ pub use crate::gemm::Activation;
 
 use crate::im2row::Im2RowConvolution;
 use crate::parallel::ThreadPool;
+use crate::quant::{
+    Dtype, QuantDepthwiseConvolution, QuantIm2RowConvolution, QuantPointwiseConvolution,
+};
 use crate::tensor::Tensor;
 use crate::winograd::{WinogradConvolution, WinogradVariant};
 use crate::workspace::Workspace;
@@ -39,6 +42,18 @@ pub enum ConvAlgorithm {
     DirectPointwise,
     /// Classical im2row + single GEMM (the paper's baseline).
     Im2Row,
+    /// Quantized im2row + int8 GEMM
+    /// ([`crate::quant::QuantIm2RowConvolution`]) — dense spatial layers
+    /// under [`Dtype::Int8`]. The int8 routing never picks Winograd.
+    Im2RowI8,
+    /// Quantized direct depthwise engine
+    /// ([`crate::quant::QuantDepthwiseConvolution`]) — depthwise 3×3
+    /// layers under [`Dtype::Int8`].
+    DirectDepthwiseI8,
+    /// Quantized direct pointwise engine
+    /// ([`crate::quant::QuantPointwiseConvolution`]) — dense unpadded 1×1
+    /// layers under [`Dtype::Int8`].
+    DirectPointwiseI8,
     /// Region-wise multi-channel Winograd with an explicit variant.
     Winograd(WinogradVariant),
     /// Pick automatically per layer shape ([`select_algorithm_spatial`]).
@@ -52,6 +67,9 @@ impl std::fmt::Display for ConvAlgorithm {
             ConvAlgorithm::DirectDepthwise => write!(f, "depthwise"),
             ConvAlgorithm::DirectPointwise => write!(f, "pointwise"),
             ConvAlgorithm::Im2Row => write!(f, "im2row"),
+            ConvAlgorithm::Im2RowI8 => write!(f, "im2row-i8"),
+            ConvAlgorithm::DirectDepthwiseI8 => write!(f, "depthwise-i8"),
+            ConvAlgorithm::DirectPointwiseI8 => write!(f, "pointwise-i8"),
             ConvAlgorithm::Winograd(v) => write!(f, "winograd-{v}"),
             ConvAlgorithm::Auto => write!(f, "auto"),
         }
@@ -115,6 +133,10 @@ pub struct Conv2d {
     pub groups: usize,
     /// Algorithm choice (default [`ConvAlgorithm::Auto`]).
     pub algorithm: ConvAlgorithm,
+    /// Element type the layer computes in (default [`Dtype::F32`]).
+    /// [`Dtype::Int8`] makes `Auto` resolve through the int8 routing
+    /// ([`select_algorithm_spatial_dtype`]) — never Winograd.
+    pub dtype: Dtype,
     /// Fused bias/activation descriptor (default: none) — executed inside
     /// the GEMM epilogue on every algorithm path.
     pub epilogue: ConvEpilogue,
@@ -132,6 +154,7 @@ impl Conv2d {
             padding: (0, 0),
             groups: 1,
             algorithm: ConvAlgorithm::Auto,
+            dtype: Dtype::F32,
             epilogue: ConvEpilogue::default(),
         }
     }
@@ -158,6 +181,13 @@ impl Conv2d {
     /// Builder: force an algorithm.
     pub fn with_algorithm(mut self, algorithm: ConvAlgorithm) -> Conv2d {
         self.algorithm = algorithm;
+        self
+    }
+
+    /// Builder: set the compute dtype ([`Dtype::Int8`] = dynamic-range
+    /// quantized inference; see [`crate::quant`]).
+    pub fn with_dtype(mut self, dtype: Dtype) -> Conv2d {
+        self.dtype = dtype;
         self
     }
 
@@ -201,7 +231,8 @@ impl Conv2d {
     /// variant instead of wasting partial 4×4 tiles.
     pub fn resolved_algorithm(&self) -> ConvAlgorithm {
         match self.algorithm {
-            ConvAlgorithm::Auto => select_algorithm_spatial(
+            ConvAlgorithm::Auto => select_algorithm_spatial_dtype(
+                self.dtype,
                 self.kernel,
                 self.stride,
                 self.padding,
@@ -228,7 +259,8 @@ impl Conv2d {
                     // Bad shapes fail properly at run time.
                     Err(_) => None,
                 };
-                select_algorithm_spatial(
+                select_algorithm_spatial_dtype(
+                    self.dtype,
                     self.kernel,
                     self.stride,
                     self.padding,
@@ -328,6 +360,38 @@ impl Conv2d {
                 }
                 Im2RowConvolution::new(weights, self.stride, self.padding)?
                     .run_fused_with(input, pool, bias, act, ws)
+            }
+            ConvAlgorithm::Im2RowI8 => {
+                if self.groups != 1 {
+                    bail_unsupported!(
+                        "im2row-i8 path is dense-only, layer has {} groups",
+                        self.groups
+                    );
+                }
+                QuantIm2RowConvolution::new(weights, self.stride, self.padding)?
+                    .run_fused_i8_with(input, pool, bias, act, ws)
+            }
+            ConvAlgorithm::DirectDepthwiseI8 => {
+                if self.groups != self.cin || self.groups != self.cout {
+                    bail_unsupported!(
+                        "depthwise-i8 engine requires groups == cin == cout, layer has {}/{}/{}",
+                        self.groups,
+                        self.cin,
+                        self.cout
+                    );
+                }
+                QuantDepthwiseConvolution::new(weights, self.stride, self.padding)?
+                    .run_fused_i8_with(input, pool, bias, act, ws)
+            }
+            ConvAlgorithm::DirectPointwiseI8 => {
+                if self.groups != 1 {
+                    bail_unsupported!(
+                        "pointwise-i8 path is dense-only, layer has {} groups",
+                        self.groups
+                    );
+                }
+                QuantPointwiseConvolution::new(weights, self.stride, self.padding)?
+                    .run_fused_i8_with(input, pool, bias, act, ws)
             }
             ConvAlgorithm::Winograd(v) => {
                 if self.groups != 1 {
@@ -606,6 +670,53 @@ mod tests {
             .unwrap();
         let auto = conv.run(&x, &w).unwrap();
         assert!(auto.allclose(&direct, 5e-4));
+    }
+
+    /// An Int8 descriptor auto-resolves onto the quantized engines (never
+    /// Winograd) and tracks the f32 oracle within quantization tolerance on
+    /// every routed shape.
+    #[test]
+    fn int8_descriptor_routes_and_tracks_f32() {
+        use crate::util::rel_error;
+        // Dense 3×3 s1 (f32 would take Winograd) → im2row-i8.
+        let conv = Conv2d::new(8, 16, (3, 3))
+            .with_padding((1, 1))
+            .with_dtype(Dtype::Int8);
+        assert_eq!(
+            conv.resolved_algorithm_for(&[1, 12, 12, 8]),
+            ConvAlgorithm::Im2RowI8
+        );
+        let x = Tensor::randn(&[1, 12, 12, 8], 201);
+        let w = conv.random_weights(202);
+        let got = conv.run(&x, &w).unwrap();
+        let want = conv.clone().with_dtype(Dtype::F32).run(&x, &w).unwrap();
+        assert_eq!(got.shape(), want.shape());
+        assert!(rel_error(got.data(), want.data()) < 0.05);
+
+        // Depthwise → depthwise-i8.
+        let dw = Conv2d::new(8, 8, (3, 3))
+            .with_groups(8)
+            .with_padding((1, 1))
+            .with_dtype(Dtype::Int8);
+        assert_eq!(dw.resolved_algorithm(), ConvAlgorithm::DirectDepthwiseI8);
+        let w = dw.random_weights(203);
+        let got = dw.run(&x, &w).unwrap();
+        let want = dw.clone().with_dtype(Dtype::F32).run(&x, &w).unwrap();
+        assert!(rel_error(got.data(), want.data()) < 0.05);
+
+        // Dense 1×1 → pointwise-i8.
+        let pw = Conv2d::new(8, 12, (1, 1)).with_dtype(Dtype::Int8);
+        assert_eq!(pw.resolved_algorithm(), ConvAlgorithm::DirectPointwiseI8);
+        let w = pw.random_weights(204);
+        let got = pw.run(&x, &w).unwrap();
+        let want = pw.clone().with_dtype(Dtype::F32).run(&x, &w).unwrap();
+        assert!(rel_error(got.data(), want.data()) < 0.05);
+
+        // Forced quantized algorithms reject incompatible groupings.
+        let bad = Conv2d::new(8, 16, (3, 3))
+            .with_groups(4)
+            .with_algorithm(ConvAlgorithm::Im2RowI8);
+        assert!(bad.run(&x, &Tensor::zeros(&[16, 3, 3, 2])).is_err());
     }
 
     #[test]

@@ -50,8 +50,20 @@
 //!   or not expressible in the shipped variants).
 //! * Very shallow channel counts (C·M small) cannot amortise the transform
 //!   cost (§4 of the paper) and also fall back to im2row.
+//!
+//! **Quantized layers** resolve through the thin
+//! [`select_algorithm_spatial_dtype`] wrapper. Int8 routing mirrors the f32
+//! shape rules but swaps each engine for its [`crate::quant`] twin —
+//! depthwise 3×3 → [`ConvAlgorithm::DirectDepthwiseI8`], dense unpadded
+//! 1×1 (stride 1/2) → [`ConvAlgorithm::DirectPointwiseI8`], every other
+//! dense shape → [`ConvAlgorithm::Im2RowI8`] — and **never picks
+//! Winograd**: the Cook-Toom transforms subtract near-equal terms, and int8
+//! lacks the mantissa headroom to absorb that cancellation (the standard
+//! reason deployed int8 runtimes keep Winograd off). Exotic grouped shapes
+//! keep the f32 `Direct` oracle — correctness over an unshipped fast path.
 
 use super::ConvAlgorithm;
+use crate::quant::Dtype;
 use crate::winograd::WinogradVariant;
 
 /// Minimum `C·M` product below which transform overhead dominates and
@@ -108,6 +120,45 @@ pub fn select_algorithm_spatial(
         Some(v) => ConvAlgorithm::Winograd(v),
         None => ConvAlgorithm::Im2Row,
     }
+}
+
+/// Dtype-aware front of the chooser. `Dtype::F32` delegates to
+/// [`select_algorithm_spatial`] unchanged; `Dtype::Int8` applies the same
+/// shape split but lands on the quantized engines and **never** on
+/// Winograd (see the module doc). Grouped-but-not-depthwise shapes keep
+/// the f32 `Direct` oracle even at Int8 — no evaluated network ships one,
+/// and a correct slow path beats a missing fast one.
+#[allow(clippy::too_many_arguments)]
+pub fn select_algorithm_spatial_dtype(
+    dtype: Dtype,
+    kernel: (usize, usize),
+    stride: (usize, usize),
+    padding: (usize, usize),
+    groups: usize,
+    cin: usize,
+    cout: usize,
+    out_hw: Option<(usize, usize)>,
+) -> ConvAlgorithm {
+    if dtype == Dtype::F32 {
+        return select_algorithm_spatial(kernel, stride, padding, groups, cin, cout, out_hw);
+    }
+    if groups > 1 {
+        if groups == cin
+            && groups == cout
+            && kernel == (3, 3)
+            && (stride == (1, 1) || stride == (2, 2))
+        {
+            return ConvAlgorithm::DirectDepthwiseI8;
+        }
+        return ConvAlgorithm::Direct;
+    }
+    if kernel == (1, 1) && padding == (0, 0) && (stride == (1, 1) || stride == (2, 2)) {
+        return ConvAlgorithm::DirectPointwiseI8;
+    }
+    // Every remaining dense shape — spatial kernels at any stride, padded
+    // 1×1s, shallow channels — takes the int8 im2row GEMM. No Winograd
+    // branch exists at Int8 by design.
+    ConvAlgorithm::Im2RowI8
 }
 
 /// Shape-only shorthand for [`select_algorithm_spatial`] with
@@ -298,6 +349,82 @@ mod tests {
         assert_eq!(
             select_algorithm_spatial((3, 3), (1, 1), (1, 1), 64, 64, 64, Some((4, 4))),
             ConvAlgorithm::DirectDepthwise
+        );
+    }
+
+    /// Int8 routing: same shape split as f32 but onto the quantized
+    /// engines, with Winograd categorically excluded.
+    #[test]
+    fn int8_routing_never_picks_winograd() {
+        let d = Dtype::Int8;
+        // Depthwise 3×3 s1/s2 → the quantized depthwise engine.
+        assert_eq!(
+            select_algorithm_spatial_dtype(d, (3, 3), (1, 1), (1, 1), 64, 64, 64, None),
+            ConvAlgorithm::DirectDepthwiseI8
+        );
+        assert_eq!(
+            select_algorithm_spatial_dtype(d, (3, 3), (2, 2), (1, 1), 64, 64, 64, None),
+            ConvAlgorithm::DirectDepthwiseI8
+        );
+        // Dense unpadded 1×1 s1/s2 → the quantized pointwise engine.
+        assert_eq!(
+            select_algorithm_spatial_dtype(d, (1, 1), (1, 1), (0, 0), 1, 64, 128, None),
+            ConvAlgorithm::DirectPointwiseI8
+        );
+        assert_eq!(
+            select_algorithm_spatial_dtype(d, (1, 1), (2, 2), (0, 0), 1, 256, 512, None),
+            ConvAlgorithm::DirectPointwiseI8
+        );
+        // Where f32 would pick Winograd (3×3 s1, deep channels, big map),
+        // int8 takes the im2row GEMM instead.
+        assert!(matches!(
+            select_algorithm_spatial(
+                (3, 3),
+                (1, 1),
+                (1, 1),
+                1,
+                64,
+                64,
+                Some((56, 56))
+            ),
+            ConvAlgorithm::Winograd(_)
+        ));
+        assert_eq!(
+            select_algorithm_spatial_dtype(d, (3, 3), (1, 1), (1, 1), 1, 64, 64, Some((56, 56))),
+            ConvAlgorithm::Im2RowI8
+        );
+        // Strided spatial, 7×7 stems, padded 1×1, shallow channels — all
+        // int8 im2row.
+        assert_eq!(
+            select_algorithm_spatial_dtype(d, (3, 3), (2, 2), (1, 1), 1, 64, 64, None),
+            ConvAlgorithm::Im2RowI8
+        );
+        assert_eq!(
+            select_algorithm_spatial_dtype(d, (7, 7), (2, 2), (3, 3), 1, 3, 64, None),
+            ConvAlgorithm::Im2RowI8
+        );
+        assert_eq!(
+            select_algorithm_spatial_dtype(d, (1, 1), (1, 1), (1, 1), 1, 64, 64, None),
+            ConvAlgorithm::Im2RowI8
+        );
+        // Exotic grouped shapes keep the f32 oracle.
+        assert_eq!(
+            select_algorithm_spatial_dtype(d, (3, 3), (1, 1), (1, 1), 4, 16, 16, None),
+            ConvAlgorithm::Direct
+        );
+        // F32 delegates to the base chooser verbatim.
+        assert_eq!(
+            select_algorithm_spatial_dtype(
+                Dtype::F32,
+                (1, 1),
+                (1, 1),
+                (0, 0),
+                1,
+                64,
+                64,
+                None
+            ),
+            ConvAlgorithm::DirectPointwise
         );
     }
 

@@ -55,8 +55,9 @@ pub struct MetricsSnapshot {
     /// regression.
     pub arena_grows: u64,
     /// Per-algorithm conv dispatch totals (winograd / im2row / depthwise /
-    /// pointwise / direct) — which execution paths the served traffic
-    /// actually exercised.
+    /// pointwise / direct, plus the int8 lanes im2row_i8 / depthwise_i8 /
+    /// pointwise_i8 when the served model was prepared quantized) — which
+    /// execution paths the served traffic actually exercised.
     pub dispatch: DispatchCounts,
 }
 
@@ -222,14 +223,21 @@ mod tests {
             depthwise: 13,
             pointwise: 11,
             direct: 0,
+            im2row_i8: 2,
+            depthwise_i8: 5,
+            pointwise_i8: 3,
         });
         let s = m.snapshot();
         assert_eq!(s.dispatch.winograd, 4);
         assert_eq!(s.dispatch.depthwise, 13);
         assert_eq!(s.dispatch.pointwise, 11);
-        assert_eq!(s.dispatch.total(), 35);
+        assert_eq!(s.dispatch.im2row_i8, 2);
+        assert_eq!(s.dispatch.depthwise_i8, 5);
+        assert_eq!(s.dispatch.pointwise_i8, 3);
+        assert_eq!(s.dispatch.total(), 45);
         assert!(s.report().contains(
-            "dispatch: winograd 4 / im2row 7 / depthwise 13 / pointwise 11 / direct 0"
+            "dispatch: winograd 4 / im2row 7 / depthwise 13 / pointwise 11 / direct 0 \
+             / im2row_i8 2 / depthwise_i8 5 / pointwise_i8 3"
         ));
     }
 }

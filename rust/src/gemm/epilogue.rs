@@ -220,6 +220,150 @@ impl Epilogue for BiasActAdd<'_> {
     }
 }
 
+/// Post-processing for finished **i32** micro-tiles — the int8 GEMM's
+/// epilogue family.
+///
+/// The int8 driver ([`crate::quant::gemm`]) accumulates each `MR×NR` tile
+/// in registers/stack (`[[i32; 16]; 4]`) over the **full** k extent and
+/// never materialises an i32 C matrix; the epilogue consumes the finished
+/// tile and writes the final output (f32 dequantized, or requantized i8)
+/// exactly once, while the accumulators are still hot. `Sync` because the
+/// driver fires it from pool workers over disjoint row blocks.
+pub trait EpilogueI32: Sync {
+    /// Consume the valid `rows×cols` region of a finished accumulator tile
+    /// whose origin in the full C matrix is `(row0, col0)`.
+    fn micro_tile_i32(
+        &self,
+        acc: &[[i32; 16]; 4],
+        row0: usize,
+        col0: usize,
+        rows: usize,
+        cols: usize,
+    );
+}
+
+/// Dequantize-to-f32 epilogue: the dynamic-range int8 conv's output stage.
+///
+/// The raw accumulator holds `Σ qa·qw` with `qa = zp + round(x / s_in)`
+/// (u8 affine activations) and `qw = round(w / s_w[c])` (per-channel
+/// symmetric i8 weights). Subtracting the prepare-time folded correction
+/// `a_zp · wsum[c]` (`wsum[c] = Σ_k qw`) leaves `Σ (qa−zp)·qw`, which a
+/// single multiply by `s_in · s_w[c]` maps back to f32 — then the usual
+/// bias add and activation clamp, fused like the f32 [`BiasAct`].
+#[derive(Debug, Clone, Copy)]
+pub struct QDequantBiasAct<'a> {
+    /// Output matrix base address (`*mut f32` erased to `usize` so the
+    /// epilogue is `Sync`); row-major with leading dimension `ldc`.
+    pub out_addr: usize,
+    /// Leading dimension (row stride, elements) of the output matrix.
+    pub ldc: usize,
+    /// Input (activation) scale `s_in`.
+    pub a_scale: f32,
+    /// Input zero point (u8 affine).
+    pub a_zp: i32,
+    /// Per-output-channel weight scales `s_w[c]`, indexed by C column.
+    pub w_scales: &'a [f32],
+    /// Per-output-channel weight sums `Σ_k qw`, indexed by C column.
+    pub wsum: &'a [i32],
+    /// Bias indexed by absolute C column; `None` ⇒ no add.
+    pub bias: Option<&'a [f32]>,
+    /// Activation applied after the bias.
+    pub act: Activation,
+}
+
+impl EpilogueI32 for QDequantBiasAct<'_> {
+    #[inline]
+    fn micro_tile_i32(
+        &self,
+        acc: &[[i32; 16]; 4],
+        row0: usize,
+        col0: usize,
+        rows: usize,
+        cols: usize,
+    ) {
+        let out = self.out_addr as *mut f32;
+        for (r, acc_row) in acc.iter().enumerate().take(rows) {
+            // SAFETY: the driver assigns each worker disjoint 4-row blocks
+            // of C and each (row0, col0, rows, cols) tile lies inside the
+            // caller-sized m×ldc output buffer, so this mutable row slice
+            // aliases nothing live.
+            let dst = unsafe {
+                std::slice::from_raw_parts_mut(out.add((row0 + r) * self.ldc + col0), cols)
+            };
+            for (j, d) in dst.iter_mut().enumerate() {
+                let c = col0 + j;
+                let centered = acc_row[j] - self.a_zp * self.wsum[c];
+                let mut v = centered as f32 * (self.a_scale * self.w_scales[c]);
+                if let Some(b) = self.bias {
+                    v += b[c];
+                }
+                *d = self.act.apply(v);
+            }
+        }
+    }
+}
+
+/// Requantize-to-i8 epilogue: bias add in i32, per-channel scale to the
+/// output quantization grid, round-to-nearest-even, zero-point shift and
+/// saturation to `[qmin, qmax]` — with the activation clamp **folded into
+/// the saturation bounds** (ReLU ⇒ `qmin = zero_point`, ReLU6 ⇒ `qmax =
+/// zero_point + round(6/s_out)`), so activation costs nothing here.
+///
+/// `q = clamp(rhe((acc + bias[c]) · scale[c]) + zero_point, qmin, qmax)`.
+///
+/// Rounding uses [`crate::util::fast_round_half_even`]; outside its 2²²
+/// validity range the clamp saturates to the same bound the exact
+/// reference would, which the `quant` property tests pin.
+#[derive(Debug, Clone, Copy)]
+pub struct Requantize<'a> {
+    /// Output matrix base address (`*mut i8` erased to `usize`); row-major
+    /// with leading dimension `ldc`.
+    pub out_addr: usize,
+    /// Leading dimension (row stride, elements) of the output matrix.
+    pub ldc: usize,
+    /// Bias in i32 (already on the accumulator grid), indexed by absolute
+    /// C column; `None` ⇒ no add.
+    pub bias: Option<&'a [i32]>,
+    /// Per-output-channel requantize scale (acc grid → output grid).
+    pub scale: &'a [f32],
+    /// Output zero point.
+    pub zero_point: i32,
+    /// Lower saturation bound (activation clamp folded in).
+    pub qmin: i32,
+    /// Upper saturation bound (activation clamp folded in).
+    pub qmax: i32,
+}
+
+impl EpilogueI32 for Requantize<'_> {
+    #[inline]
+    fn micro_tile_i32(
+        &self,
+        acc: &[[i32; 16]; 4],
+        row0: usize,
+        col0: usize,
+        rows: usize,
+        cols: usize,
+    ) {
+        let out = self.out_addr as *mut i8;
+        for (r, acc_row) in acc.iter().enumerate().take(rows) {
+            // SAFETY: same disjointness argument as `QDequantBiasAct` — one
+            // worker per 4-row block, tile inside the m×ldc i8 output.
+            let dst = unsafe {
+                std::slice::from_raw_parts_mut(out.add((row0 + r) * self.ldc + col0), cols)
+            };
+            for (j, d) in dst.iter_mut().enumerate() {
+                let c = col0 + j;
+                let mut a = acc_row[j];
+                if let Some(b) = self.bias {
+                    a = a.wrapping_add(b[c]);
+                }
+                let q = crate::util::fast_round_half_even(a as f32 * self.scale[c]) as i32;
+                *d = q.saturating_add(self.zero_point).clamp(self.qmin, self.qmax) as i8;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -292,6 +436,97 @@ mod tests {
                 assert_eq!(nobias[j].to_bits(), act.apply(accs[j] + resids[j]).to_bits());
             }
         }
+    }
+
+    /// Scalar model of `Requantize` used by the tile tests below (the
+    /// exhaustive property suite lives in `crate::quant`).
+    fn requant_ref(acc: i32, bias: i32, scale: f32, zp: i32, qmin: i32, qmax: i32) -> i8 {
+        let v = crate::util::round_half_even(acc.wrapping_add(bias) as f32 * scale);
+        ((v as i32).saturating_add(zp)).clamp(qmin, qmax) as i8
+    }
+
+    #[test]
+    fn qdequant_epilogue_dequantizes_with_zero_point_correction() {
+        // 2 rows × 3 cols of a 2×4 f32 output (ldc = 4); col0 = 1.
+        let mut out = [99.0f32; 8];
+        let mut acc = [[0i32; 16]; 4];
+        acc[0][..3].copy_from_slice(&[100, -50, 8]);
+        acc[1][..3].copy_from_slice(&[0, 7, -3]);
+        let w_scales = [0.0, 0.5, 0.25, 2.0];
+        let wsum = [0, 10, -4, 6];
+        let bias = [0.0, 1.0, -1.0, 0.5];
+        let epi = QDequantBiasAct {
+            out_addr: out.as_mut_ptr() as usize,
+            ldc: 4,
+            a_scale: 0.1,
+            a_zp: 3,
+            w_scales: &w_scales,
+            wsum: &wsum,
+            bias: Some(&bias),
+            act: Activation::None,
+        };
+        epi.micro_tile_i32(&acc, 0, 1, 2, 3);
+        for r in 0..2 {
+            for j in 0..3 {
+                let c = 1 + j;
+                let want = (acc[r][j] - 3 * wsum[c]) as f32 * (0.1 * w_scales[c]) + bias[c];
+                assert_eq!(out[r * 4 + c], want, "({r},{c})");
+            }
+        }
+        // ldc padding and untouched columns stay poisoned.
+        assert_eq!(out[0], 99.0);
+        assert_eq!(out[4], 99.0);
+    }
+
+    #[test]
+    fn requantize_tile_matches_scalar_reference() {
+        let mut out = [i8::MIN; 8];
+        let mut acc = [[0i32; 16]; 4];
+        acc[0][..4].copy_from_slice(&[1000, -1000, 3, -3]);
+        acc[1][..4].copy_from_slice(&[i32::MAX - 5, i32::MIN + 5, 250, -251]);
+        let bias = [7, -7, 0, 100_000];
+        let scale = [0.05f32, 0.05, 0.5, 0.001];
+        let (zp, qmin, qmax) = (-1, -128, 127);
+        let epi = Requantize {
+            out_addr: out.as_mut_ptr() as usize,
+            ldc: 4,
+            bias: Some(&bias),
+            scale: &scale,
+            zero_point: zp,
+            qmin,
+            qmax,
+        };
+        epi.micro_tile_i32(&acc, 0, 0, 2, 4);
+        for r in 0..2 {
+            for c in 0..4 {
+                let want = requant_ref(acc[r][c], bias[c], scale[c], zp, qmin, qmax);
+                assert_eq!(out[r * 4 + c], want, "({r},{c})");
+            }
+        }
+        // Both saturation bounds actually fired.
+        assert!(out[..8].contains(&(qmax as i8)));
+        assert!(out[..8].contains(&(qmin as i8)));
+    }
+
+    #[test]
+    fn requantize_folded_activation_bounds() {
+        // ReLU folded as qmin = zp: negative accumulators land exactly on
+        // the zero point (which dequantizes to 0.0).
+        let mut out = [0i8; 4];
+        let mut acc = [[0i32; 16]; 4];
+        acc[0][..4].copy_from_slice(&[-500, -1, 0, 500]);
+        let scale = [0.1f32; 4];
+        let epi = Requantize {
+            out_addr: out.as_mut_ptr() as usize,
+            ldc: 4,
+            bias: None,
+            scale: &scale,
+            zero_point: 10,
+            qmin: 10,
+            qmax: 127,
+        };
+        epi.micro_tile_i32(&acc, 0, 0, 1, 4);
+        assert_eq!(out, [10, 10, 10, 60]);
     }
 
     #[test]

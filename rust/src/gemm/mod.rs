@@ -30,7 +30,9 @@ pub mod batched;
 pub mod epilogue;
 
 pub use batched::BatchedGemm;
-pub use epilogue::{Activation, BiasAct, BiasActAdd, Epilogue, Store};
+pub use epilogue::{
+    Activation, BiasAct, BiasActAdd, Epilogue, EpilogueI32, QDequantBiasAct, Requantize, Store,
+};
 pub use microkernel::{MR, NR};
 
 #[cfg(test)]

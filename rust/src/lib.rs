@@ -26,6 +26,11 @@
 //!   → x² GEMMs + gather-as-epilogue (blocks of regions sized to an L2
 //!   budget, default 512 KiB; Winograd-domain C never materialised).
 //! * [`im2row`] — the classical im2row/im2col + GEMM comparator.
+//! * [`quant`] — the int8 inference subsystem: dynamic-range activation /
+//!   per-channel weight quantization, a u8×i8→i32 GEMM micro-kernel behind
+//!   the same [`simd`] parity contract, dequantize/requantize epilogues and
+//!   int8 twins of the im2row, depthwise and pointwise engines (Winograd
+//!   stays f32-only — its transforms need subtractive headroom int8 lacks).
 //! * [`conv`] — the public convolution API, direct-convolution oracle
 //!   (dense and grouped), the **direct depthwise engine**
 //!   ([`conv::depthwise`]: register-tiled 3×3 stride-1/2 SIMD kernels for
@@ -78,6 +83,7 @@ pub mod gemm;
 pub mod workspace;
 pub mod winograd;
 pub mod im2row;
+pub mod quant;
 pub mod conv;
 pub mod nn;
 pub mod zoo;

@@ -19,6 +19,7 @@ use winoconv::coordinator::{EngineConfig, InferenceEngine};
 use winoconv::im2row::Im2RowConvolution;
 use winoconv::nn::{PreparedModel, Scheme};
 use winoconv::parallel::ThreadPool;
+use winoconv::quant::Dtype;
 use winoconv::tensor::Tensor;
 use winoconv::util::cli::Args;
 use winoconv::winograd::{WinogradConvolution, WinogradVariant};
@@ -62,7 +63,7 @@ fn print_help() {
          \n\
          SUBCOMMANDS\n\
          \x20 layers   --model <vgg16|vgg19|googlenet|inception-v3|squeezenet|mobilenet-v1|mobilenet-v2|resnet-18|resnet-50> [--threads N] [--quick]\n\
-         \x20 network  --model <name> [--threads N] [--reps N] [--quick]\n\
+         \x20 network  --model <name> [--threads N] [--reps N] [--dtype f32|int8] [--quick]\n\
          \x20 serve    --model <name> [--threads N] [--seconds S]\n\
          \x20 verify   [--artifacts DIR]\n\
          \x20 variants"
@@ -146,16 +147,20 @@ fn cmd_network(args: &Args) -> Result<()> {
     let model = parse_model(args)?;
     let threads: usize = args.get_parse_or("threads", 4)?;
     let reps: usize = args.get_parse_or("reps", if args.flag("quick") { 2 } else { 5 })?;
+    let dtype: Dtype = args.get_parse_or("dtype", Dtype::F32)?;
     let pool = ThreadPool::new(threads);
     let graph = model.build(1)?;
     let input = Tensor::randn(&model.input_shape(1), 99);
 
     let mut table = Table::new(
-        &format!("{model}: whole-network runtime, batch 1, {threads} threads (mean of {reps})"),
+        &format!(
+            "{model}: whole-network runtime, batch 1, {threads} threads, {dtype} (mean of {reps})"
+        ),
         &["scheme", "full net ms", "fast layers ms", "other ms"],
     );
     for scheme in [Scheme::Im2RowOnly, Scheme::WinogradWhereSuitable] {
-        let prepared = PreparedModel::prepare(model.name(), &graph, input.shape(), scheme)?;
+        let prepared =
+            PreparedModel::prepare_with_dtype(model.name(), &graph, input.shape(), scheme, dtype)?;
         let _ = prepared.run(&input, Some(&pool))?; // warm-up
         let mut total = 0.0f64;
         let mut fast = 0.0f64;

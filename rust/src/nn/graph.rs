@@ -21,6 +21,9 @@ use crate::conv::select::is_winograd_suitable;
 use crate::conv::{Activation, Conv2d, ConvAlgorithm};
 use crate::im2row::Im2RowConvolution;
 use crate::parallel::ThreadPool;
+use crate::quant::{
+    Dtype, QuantDepthwiseConvolution, QuantIm2RowConvolution, QuantPointwiseConvolution,
+};
 use crate::tensor::{Tensor, TensorView};
 use crate::winograd::WinogradConvolution;
 use crate::workspace::Workspace;
@@ -286,6 +289,15 @@ enum PreparedConv {
         pad: (usize, usize),
         groups: usize,
     },
+    /// Int8 im2row + u8×i8→i32 GEMM with the dequantizing epilogue — the
+    /// quantized binding for dense spatial layers (bound on *both* schemes:
+    /// Winograd stays f32-only, so the dtype question overrides the scheme
+    /// split for these layers).
+    Im2RowI8(QuantIm2RowConvolution),
+    /// Int8 direct 3×3 depthwise engine.
+    DepthwiseI8(QuantDepthwiseConvolution),
+    /// Int8 direct pointwise (1×1) engine.
+    PointwiseI8(QuantPointwiseConvolution),
 }
 
 /// One executable step.
@@ -356,12 +368,25 @@ pub struct DispatchCounts {
     pub pointwise: u64,
     /// Naive direct (grouped fallback) executions.
     pub direct: u64,
+    /// Int8 im2row + quantized-GEMM executions.
+    pub im2row_i8: u64,
+    /// Int8 direct depthwise engine executions.
+    pub depthwise_i8: u64,
+    /// Int8 direct pointwise engine executions.
+    pub pointwise_i8: u64,
 }
 
 impl DispatchCounts {
     /// Sum over all algorithm paths.
     pub fn total(&self) -> u64 {
-        self.winograd + self.im2row + self.depthwise + self.pointwise + self.direct
+        self.winograd
+            + self.im2row
+            + self.depthwise
+            + self.pointwise
+            + self.direct
+            + self.im2row_i8
+            + self.depthwise_i8
+            + self.pointwise_i8
     }
 }
 
@@ -369,8 +394,15 @@ impl std::fmt::Display for DispatchCounts {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "winograd {} / im2row {} / depthwise {} / pointwise {} / direct {}",
-            self.winograd, self.im2row, self.depthwise, self.pointwise, self.direct
+            "winograd {} / im2row {} / depthwise {} / pointwise {} / direct {} / im2row_i8 {} / depthwise_i8 {} / pointwise_i8 {}",
+            self.winograd,
+            self.im2row,
+            self.depthwise,
+            self.pointwise,
+            self.direct,
+            self.im2row_i8,
+            self.depthwise_i8,
+            self.pointwise_i8
         )
     }
 }
@@ -388,6 +420,8 @@ pub struct PreparedModel {
     pub name: String,
     /// Scheme the convs were bound with.
     pub scheme: Scheme,
+    /// Numeric dtype the convs were bound with (f32, or int8 quantized).
+    pub dtype: Dtype,
     nodes: Vec<Node>,
     prepared: Vec<PreparedOp>,
     shapes: Vec<Vec<usize>>,
@@ -408,7 +442,7 @@ pub struct PreparedModel {
     census: DispatchCounts,
     /// Running per-algorithm totals: `census` × completed walks — see
     /// [`dispatch_counts`](Self::dispatch_counts).
-    dispatches: [AtomicU64; 5],
+    dispatches: [AtomicU64; 8],
 }
 
 impl std::fmt::Debug for PreparedModel {
@@ -434,6 +468,24 @@ impl PreparedModel {
         input_shape: &[usize],
         scheme: Scheme,
     ) -> Result<PreparedModel> {
+        PreparedModel::prepare_with_dtype(name, graph, input_shape, scheme, Dtype::F32)
+    }
+
+    /// [`prepare`](Self::prepare) with an explicit numeric dtype. With
+    /// [`Dtype::Int8`] every conv layer binds a quantized engine — weights
+    /// are quantized per-output-channel at prepare time (scales folded
+    /// offline), activations are quantized dynamically per layer at run
+    /// time — and Winograd never binds (its subtractive transforms need
+    /// headroom int8 lacks). The residual-fusion rewrite is f32-only: the
+    /// quantized pointwise epilogue dequantizes, so the fused add would
+    /// mix domains.
+    pub fn prepare_with_dtype(
+        name: &str,
+        graph: &Graph,
+        input_shape: &[usize],
+        scheme: Scheme,
+        dtype: Dtype,
+    ) -> Result<PreparedModel> {
         let shapes = graph.infer_shapes(input_shape)?;
         let n = graph.nodes.len();
 
@@ -443,7 +495,7 @@ impl PreparedModel {
         // with a fused-residual epilogue. The planner sees a rewritten
         // topology in which the conv output and the add intermediate no
         // longer exist, so fused chains shrink the activation arena too.
-        let fusions = if scheme == Scheme::WinogradWhereSuitable {
+        let fusions = if scheme == Scheme::WinogradWhereSuitable && dtype == Dtype::F32 {
             find_pointwise_residual_fusions(&graph.nodes, &shapes)
         } else {
             Vec::new()
@@ -540,6 +592,7 @@ impl PreparedModel {
                     let in_shape = &shapes[node.inputs[0]];
                     let auto = Conv2d {
                         algorithm: ConvAlgorithm::Auto,
+                        dtype,
                         ..desc.clone()
                     };
                     // One spatial-aware chooser resolves the algorithm;
@@ -572,6 +625,18 @@ impl PreparedModel {
                                 desc.padding,
                             )?)
                         }
+                        // Int8 bindings ignore the scheme split: the dtype
+                        // question (Winograd needs f32 headroom) already
+                        // decided it, so both schemes bind identically.
+                        (_, ConvAlgorithm::Im2RowI8) => PreparedConv::Im2RowI8(
+                            QuantIm2RowConvolution::new(weights, desc.stride, desc.padding)?,
+                        ),
+                        (_, ConvAlgorithm::DirectDepthwiseI8) => PreparedConv::DepthwiseI8(
+                            QuantDepthwiseConvolution::new(weights, desc.stride, desc.padding)?,
+                        ),
+                        (_, ConvAlgorithm::DirectPointwiseI8) => PreparedConv::PointwiseI8(
+                            QuantPointwiseConvolution::new(weights, desc.stride, desc.padding)?,
+                        ),
                         _ => PreparedConv::Im2Row(Im2RowConvolution::new(
                             weights,
                             desc.stride,
@@ -606,6 +671,18 @@ impl PreparedModel {
                             census.direct += 1;
                             0
                         }
+                        PreparedConv::Im2RowI8(qc) => {
+                            census.im2row_i8 += 1;
+                            qc.workspace_elems_for(in_shape[0], in_shape[1], in_shape[2])?
+                        }
+                        PreparedConv::DepthwiseI8(qc) => {
+                            census.depthwise_i8 += 1;
+                            qc.workspace_elems_for(in_shape[0], in_shape[1], in_shape[2])?
+                        }
+                        PreparedConv::PointwiseI8(qc) => {
+                            census.pointwise_i8 += 1;
+                            qc.workspace_elems_for(in_shape[0], in_shape[1], in_shape[2])?
+                        }
                     };
                     ws_elems = ws_elems.max(need);
                     PreparedOp::Conv {
@@ -622,6 +699,7 @@ impl PreparedModel {
         Ok(PreparedModel {
             name: name.to_string(),
             scheme,
+            dtype,
             nodes: graph.nodes.clone(),
             prepared,
             shapes,
@@ -635,6 +713,9 @@ impl PreparedModel {
             fallbacks: AtomicUsize::new(0),
             census,
             dispatches: [
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
                 AtomicU64::new(0),
                 AtomicU64::new(0),
                 AtomicU64::new(0),
@@ -676,6 +757,9 @@ impl PreparedModel {
             depthwise: self.dispatches[2].load(Ordering::Relaxed),
             pointwise: self.dispatches[3].load(Ordering::Relaxed),
             direct: self.dispatches[4].load(Ordering::Relaxed),
+            im2row_i8: self.dispatches[5].load(Ordering::Relaxed),
+            depthwise_i8: self.dispatches[6].load(Ordering::Relaxed),
+            pointwise_i8: self.dispatches[7].load(Ordering::Relaxed),
         }
     }
 
@@ -893,6 +977,18 @@ impl PreparedModel {
                                 }
                             }
                         }
+                        // Quantized engines: dynamic activation quantize +
+                        // i32 accumulate + dequantizing epilogue, all from
+                        // the same scratch arena (byte-ceiled borrows).
+                        PreparedConv::Im2RowI8(qc) => {
+                            qc.run_fused_i8_into(&x, pool, Some(bias), *act, ws, out)?
+                        }
+                        PreparedConv::DepthwiseI8(qc) => {
+                            qc.run_fused_i8_into(&x, pool, Some(bias), *act, ws, out)?
+                        }
+                        PreparedConv::PointwiseI8(qc) => {
+                            qc.run_fused_i8_into(&x, pool, Some(bias), *act, ws, out)?
+                        }
                     }
                 }
                 PreparedOp::PointwiseResidual { conv, bias, act, x, res } => {
@@ -989,6 +1085,9 @@ impl PreparedModel {
             (2, self.census.depthwise),
             (3, self.census.pointwise),
             (4, self.census.direct),
+            (5, self.census.im2row_i8),
+            (6, self.census.depthwise_i8),
+            (7, self.census.pointwise_i8),
         ] {
             if n > 0 {
                 self.dispatches[slot].fetch_add(n, Ordering::Relaxed);
@@ -1304,6 +1403,15 @@ mod tests {
                             ops::bias_act_inplace(&mut y, bias, *act).unwrap();
                             y
                         }
+                        PreparedConv::Im2RowI8(qc) => {
+                            qc.run_fused_i8_with(x, None, Some(bias), *act, &mut ws).unwrap()
+                        }
+                        PreparedConv::DepthwiseI8(qc) => {
+                            qc.run_fused_i8_with(x, None, Some(bias), *act, &mut ws).unwrap()
+                        }
+                        PreparedConv::PointwiseI8(qc) => {
+                            qc.run_fused_i8_with(x, None, Some(bias), *act, &mut ws).unwrap()
+                        }
                     }
                 }
                 // The fused chain's *unfused* reference: conv (bias only),
@@ -1567,6 +1675,116 @@ mod tests {
             outs.push(got.data().to_vec());
         }
         assert_eq!(outs[0], outs[1], "fused ours == unfused baseline, bitwise");
+    }
+
+    /// Int8 preparation of the MobileNet-flavoured residual block: every
+    /// conv binds a quantized engine — identically on *both* schemes, since
+    /// the dtype question (Winograd needs f32 headroom) overrides the
+    /// scheme split — the planned executor matches the allocating reference
+    /// bit for bit, the int8 census lanes report the bindings, the arenas
+    /// never regrow (the byte-ceiled quantized sizing is exact), and the
+    /// quantized output tracks the f32 oracle within the subsystem's drift
+    /// budget.
+    #[test]
+    fn quantized_residual_block_binds_int8_engines() {
+        let g = residual_block_graph(43);
+        let input = Tensor::randn(&[1, 10, 10, 8], 91);
+        let f32_m =
+            PreparedModel::prepare("mbblock", &g, &[1, 10, 10, 8], Scheme::Im2RowOnly).unwrap();
+        let (oracle, _) = f32_m.run(&input, None).unwrap();
+        let mut outs: Vec<Vec<f32>> = Vec::new();
+        for scheme in [Scheme::Im2RowOnly, Scheme::WinogradWhereSuitable] {
+            let m = PreparedModel::prepare_with_dtype(
+                "mbblock",
+                &g,
+                &[1, 10, 10, 8],
+                scheme,
+                Dtype::Int8,
+            )
+            .unwrap();
+            assert_eq!(m.dtype, Dtype::Int8);
+            // Census: both 1×1 convs bind the int8 pointwise engine, the
+            // 3×3 the int8 depthwise engine; no residual fusion at int8
+            // (the fused add would mix quantized and f32 domains), and no
+            // f32 lane sees any traffic.
+            let census = m.dispatch_census();
+            assert_eq!(census.pointwise_i8, 2, "{scheme}");
+            assert_eq!(census.depthwise_i8, 1, "{scheme}");
+            assert_eq!(census.total(), 3, "{scheme}: f32 lanes must stay empty");
+
+            let want = run_reference(&m, &input);
+            let (got, timings) = m.run(&input, None).unwrap();
+            assert_eq!(got.data(), want.data(), "{scheme}: planned != reference");
+            assert_eq!(timings.len(), g.nodes.len());
+
+            // Write-into path over dirty arenas, twice; grow pins.
+            let mut ws = Workspace::with_capacity(m.workspace_elems());
+            let mut acts = Workspace::with_capacity(m.activation_plan().peak_elems());
+            acts.take(m.activation_plan().peak_elems()).fill(f32::NAN);
+            let mut out = vec![f32::NAN; want.len()];
+            for _ in 0..2 {
+                m.run_planned_into(&input, None, &mut ws, &mut acts, &mut out).unwrap();
+                assert_eq!(out, want.data(), "{scheme}: run_planned_into != reference");
+            }
+            assert_eq!(ws.grow_count(), 0, "{scheme}");
+            assert_eq!(acts.grow_count(), 0, "{scheme}");
+            // Running totals: census × 3 completed walks, all int8 lanes.
+            let counts = m.dispatch_counts();
+            assert_eq!(counts.pointwise_i8, 6, "{scheme}");
+            assert_eq!(counts.depthwise_i8, 3, "{scheme}");
+            assert_eq!(counts.total(), 9, "{scheme}");
+
+            // Drift vs the f32 oracle: finite everywhere and inside the
+            // budget the whole-network gate pins (rel 0.25 of peak |y|).
+            assert!(got.data().iter().all(|v| v.is_finite()), "{scheme}");
+            let max_abs = oracle.data().iter().fold(0f32, |a, &v| a.max(v.abs()));
+            let drift = got
+                .data()
+                .iter()
+                .zip(oracle.data())
+                .fold(0f32, |a, (&x, &y)| a.max((x - y).abs()));
+            assert!(
+                drift <= 0.25 * max_abs,
+                "{scheme}: int8 drift {drift} vs f32 peak {max_abs}"
+            );
+            outs.push(got.data().to_vec());
+        }
+        assert_eq!(outs[0], outs[1], "int8 binds identically on both schemes");
+    }
+
+    /// Dense 3×3 layers at int8 route to the quantized im2row GEMM — never
+    /// Winograd, even on the "ours" scheme where their f32 twins would be
+    /// Winograd-bound.
+    #[test]
+    fn quantized_dense_graph_routes_im2row_i8() {
+        let g = tiny_graph(23);
+        let m = PreparedModel::prepare_with_dtype(
+            "tiny",
+            &g,
+            &[1, 8, 8, 3],
+            Scheme::WinogradWhereSuitable,
+            Dtype::Int8,
+        )
+        .unwrap();
+        let census = m.dispatch_census();
+        assert_eq!(census.im2row_i8, 2, "both 3×3 convs quantize");
+        assert_eq!(census.winograd, 0, "winograd never binds at int8");
+        assert_eq!(census.total(), 2);
+        let input = Tensor::randn(&[1, 8, 8, 3], 5);
+        let want = run_reference(&m, &input);
+        let (got, timings) = m.run(&input, None).unwrap();
+        assert_eq!(got.data(), want.data(), "planned != reference");
+        assert_eq!(timings.len(), g.nodes.len());
+        // Softmax tail: a valid distribution, near the f32 oracle's.
+        let f32_m = PreparedModel::prepare("tiny", &g, &[1, 8, 8, 3], Scheme::Im2RowOnly).unwrap();
+        let (oracle, _) = f32_m.run(&input, None).unwrap();
+        assert!(got.data().iter().all(|v| v.is_finite() && *v >= 0.0));
+        let drift = got
+            .data()
+            .iter()
+            .zip(oracle.data())
+            .fold(0f32, |a, (&x, &y)| a.max((x - y).abs()));
+        assert!(drift <= 0.25, "softmax drift {drift} vs f32 oracle");
     }
 
     /// Shape inference guards the new ops: Add requires exactly two

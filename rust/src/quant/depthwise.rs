@@ -1,0 +1,353 @@
+//! Quantized direct depthwise convolution — the int8 twin of
+//! [`crate::conv::depthwise::DepthwiseConvolution`].
+//!
+//! Same algorithmic stance as the f32 engine (no Winograd, no im2row — a
+//! direct 3×3 loop nest; see that module's header for the argument), but
+//! the arithmetic profile flips: a depthwise layer is **memory-bound**
+//! (9 MACs per loaded pixel), so int8's 4× smaller activations are the
+//! whole win. The engine quantizes the input once into a zp-prefilled
+//! padded u8 staging buffer (padding bytes dequantize to exactly 0.0, so
+//! the hot loop has no bounds checks), accumulates the nine taps in i32
+//! per output pixel and channel, and dequantizes inline —
+//! `(acc − zp·Σw) · s_in·s_ch + bias`, activation, one f32 store — the
+//! same zero-point-folded epilogue math as [`crate::gemm::QDequantBiasAct`]
+//! without a GEMM in the middle.
+//!
+//! Taps are quantized per channel (symmetric i8, as everywhere in
+//! [`crate::quant`]) and repacked tap-major `qw[(a·3 + b)·C + ch]`,
+//! mirroring the f32 layout so the access pattern carries over.
+
+use crate::gemm::Activation;
+use crate::parallel::ThreadPool;
+use crate::quant::{as_u8_mut, choose_act_quant, quantize_u8_into, quantize_weight_channel};
+use crate::tensor::{Tensor, TensorView};
+use crate::workspace::{elems_for_bytes, Workspace};
+use crate::{bail_shape, bail_unsupported, Result};
+
+/// A prepared quantized depthwise convolution: per-channel i8 taps plus
+/// the per-channel scales and zero-point folding sums.
+#[derive(Debug, Clone)]
+pub struct QuantDepthwiseConvolution {
+    channels: usize,
+    stride: (usize, usize),
+    pad: (usize, usize),
+    /// Quantized taps, tap-major: `qw[(a·3 + b)·C + ch]`.
+    qw: Vec<i8>,
+    /// Per-channel symmetric weight scale.
+    scales: Vec<f32>,
+    /// Per-channel `Σ qw` (zero-point folding term).
+    wsum: Vec<i32>,
+}
+
+impl QuantDepthwiseConvolution {
+    /// Prepare from `[C, 3, 3, 1]` weights; 3×3 at stride (1,1) or (2,2)
+    /// only — the same envelope the selector enforces for the f32 engine.
+    pub fn new(weights: &Tensor, stride: (usize, usize), pad: (usize, usize)) -> Result<Self> {
+        if weights.rank() != 4 || weights.shape()[3] != 1 {
+            bail_shape!(
+                "depthwise weights must be [C, KH, KW, 1], got {:?}",
+                weights.shape()
+            );
+        }
+        let (c, kh, kw) = (weights.shape()[0], weights.shape()[1], weights.shape()[2]);
+        if (kh, kw) != (3, 3) {
+            bail_unsupported!("depthwise engine is 3x3-only, got {kh}x{kw}");
+        }
+        if stride != (1, 1) && stride != (2, 2) {
+            bail_unsupported!("depthwise engine supports stride 1 or 2, got {stride:?}");
+        }
+        let mut qw = vec![0i8; 9 * c];
+        let mut scales = vec![0.0f32; c];
+        let mut wsum = vec![0i32; c];
+        let mut taps = [0.0f32; 9];
+        let mut qtaps = [0i8; 9];
+        for ch in 0..c {
+            for a in 0..3 {
+                for b in 0..3 {
+                    taps[a * 3 + b] = weights.at4(ch, a, b, 0);
+                }
+            }
+            let (s, ws) = quantize_weight_channel(&taps, &mut qtaps);
+            scales[ch] = s;
+            wsum[ch] = ws;
+            for (t, &qt) in qtaps.iter().enumerate() {
+                qw[t * c + ch] = qt;
+            }
+        }
+        Ok(QuantDepthwiseConvolution {
+            channels: c,
+            stride,
+            pad,
+            qw,
+            scales,
+            wsum,
+        })
+    }
+
+    /// Channel count (== groups == cin == cout).
+    pub fn channels(&self) -> usize {
+        self.channels
+    }
+
+    /// Output spatial size for an `h×w` input.
+    pub fn output_hw(&self, h: usize, w: usize) -> Result<(usize, usize)> {
+        let (ph, pw) = self.pad;
+        if h + 2 * ph < 3 || w + 2 * pw < 3 {
+            bail_shape!("input {h}x{w} (pad {ph},{pw}) smaller than filter 3x3");
+        }
+        Ok(((h + 2 * ph - 3) / self.stride.0 + 1, (w + 2 * pw - 3) / self.stride.1 + 1))
+    }
+
+    /// Workspace elements (**f32**s) one inference over an `[n, h, w, C]`
+    /// input borrows: the padded quantized staging (`N·HP·WP·C` bytes,
+    /// byte-ceiled into f32 units). Unlike the f32 engine this is nonzero
+    /// even for valid layers — quantization always writes a u8 copy.
+    pub fn workspace_elems_for(&self, n: usize, h: usize, w: usize) -> Result<usize> {
+        let _ = self.output_hw(h, w)?; // geometry must be valid
+        let (ph, pw) = self.pad;
+        Ok(elems_for_bytes(n * (h + 2 * ph) * (w + 2 * pw) * self.channels))
+    }
+
+    /// Allocating twin of [`run_fused_i8_into`](Self::run_fused_i8_into)
+    /// (tests / one-shot use).
+    pub fn run_fused_i8_with(
+        &self,
+        input: &Tensor,
+        pool: Option<&ThreadPool>,
+        bias: Option<&[f32]>,
+        act: Activation,
+        ws: &mut Workspace,
+    ) -> Result<Tensor> {
+        if input.rank() != 4 {
+            bail_shape!("input must be [N, H, W, C], got {:?}", input.shape());
+        }
+        let (n, h, w) = (input.shape()[0], input.shape()[1], input.shape()[2]);
+        let (oh, ow) = self.output_hw(h, w)?;
+        let mut out = Tensor::zeros(&[n, oh, ow, self.channels]);
+        self.run_fused_i8_into(&input.view(), pool, bias, act, ws, out.data_mut())?;
+        Ok(out)
+    }
+
+    /// Quantize into padded staging → direct i32 3×3 accumulate →
+    /// dequantize/bias/activation inline, writing f32 into `out`. Zero
+    /// heap allocations.
+    pub fn run_fused_i8_into(
+        &self,
+        input: &TensorView,
+        pool: Option<&ThreadPool>,
+        bias: Option<&[f32]>,
+        act: Activation,
+        ws: &mut Workspace,
+        out: &mut [f32],
+    ) -> Result<()> {
+        if input.rank() != 4 {
+            bail_shape!("input must be [N, H, W, C], got {:?}", input.shape());
+        }
+        let (n, h, w, c) = (
+            input.shape()[0],
+            input.shape()[1],
+            input.shape()[2],
+            input.shape()[3],
+        );
+        if c != self.channels {
+            bail_shape!("input has {c} channels, depthwise weights expect {}", self.channels);
+        }
+        if let Some(b) = bias {
+            if b.len() != c {
+                bail_shape!("bias length {} vs {c} channels", b.len());
+            }
+        }
+        let (oh, ow) = self.output_hw(h, w)?;
+        if out.len() != n * oh * ow * c {
+            bail_shape!(
+                "output slice has {} elems, layer writes {}",
+                out.len(),
+                n * oh * ow * c
+            );
+        }
+        let (ph, pw) = self.pad;
+        let (hp, wp) = (h + 2 * ph, w + 2 * pw);
+        let staging_bytes = n * hp * wp * c;
+
+        let q = choose_act_quant(input.data());
+        let staging = &mut as_u8_mut(ws.take(elems_for_bytes(staging_bytes)))[..staging_bytes];
+        if ph != 0 || pw != 0 {
+            // zp bytes dequantize to exactly 0.0: zero padding for free.
+            staging.fill(q.zp as u8);
+        }
+        let src = input.data();
+        for ni in 0..n {
+            for y in 0..h {
+                let srow = &src[((ni * h + y) * w) * c..][..w * c];
+                let drow = &mut staging[(((ni * hp + y + ph) * wp) + pw) * c..][..w * c];
+                quantize_u8_into(srow, q, drow);
+            }
+        }
+
+        let (sh, sw) = self.stride;
+        let a_scale = q.scale;
+        let a_zp = q.zp;
+        let out_addr = out.as_mut_ptr() as usize;
+        let qw = &self.qw;
+        let scales = &self.scales;
+        let wsum = &self.wsum;
+        let row_job = |r: usize| {
+            let b = r / oh;
+            let oy = r % oh;
+            let iy0 = oy * sh;
+            // SAFETY: each job writes only its own `(b, oy)` output row;
+            // jobs are disjoint and `out` outlives the dispatch.
+            let out_row: &mut [f32] = unsafe {
+                std::slice::from_raw_parts_mut(
+                    (out_addr as *mut f32).add((b * oh + oy) * ow * c),
+                    ow * c,
+                )
+            };
+            for ox in 0..ow {
+                let ix0 = ox * sw;
+                for ch in 0..c {
+                    let mut acc = 0i32;
+                    for a in 0..3 {
+                        let base = ((b * hp + iy0 + a) * wp + ix0) * c + ch;
+                        for bx in 0..3 {
+                            acc += staging[base + bx * c] as i32 * qw[(a * 3 + bx) * c + ch] as i32;
+                        }
+                    }
+                    let centered = acc - a_zp * wsum[ch];
+                    let mut v = centered as f32 * (a_scale * scales[ch]);
+                    if let Some(bb) = bias {
+                        v += bb[ch];
+                    }
+                    out_row[ox * c + ch] = act.apply(v);
+                }
+            }
+        };
+        match pool {
+            Some(pool) => pool.parallel_for(n * oh, row_job),
+            None => (0..n * oh).for_each(row_job),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::depthwise::DepthwiseConvolution;
+    use crate::util::rel_error;
+
+    #[test]
+    fn quantized_tracks_f32_oracle() {
+        // Ragged C (C % 4 != 0) included deliberately.
+        for (stride, pad, c) in [
+            ((1, 1), (1, 1), 7),
+            ((2, 2), (1, 1), 8),
+            ((1, 1), (0, 0), 5),
+            ((2, 2), (0, 0), 4),
+        ] {
+            let input = Tensor::randn(&[2, 11, 9, c], 91);
+            let weights = Tensor::randn(&[c, 3, 3, 1], 92);
+            let bias: Vec<f32> = (0..c).map(|i| i as f32 * 0.3 - 0.8).collect();
+            let qconv = QuantDepthwiseConvolution::new(&weights, stride, pad).unwrap();
+            let fconv = DepthwiseConvolution::new(&weights, stride, pad).unwrap();
+            let mut ws = Workspace::new();
+            for act in [Activation::None, Activation::Relu, Activation::Relu6] {
+                let got = qconv
+                    .run_fused_i8_with(&input, None, Some(&bias), act, &mut ws)
+                    .unwrap();
+                let want = fconv
+                    .run_fused_with(&input, None, Some(&bias), act, &mut ws)
+                    .unwrap();
+                assert_eq!(got.shape(), want.shape());
+                let e = rel_error(got.data(), want.data());
+                assert!(
+                    e < 0.05,
+                    "stride {stride:?} pad {pad:?} c {c} act {act}: rel err {e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn into_matches_with_and_arena_never_grows() {
+        let input = Tensor::randn(&[1, 9, 8, 6], 101);
+        let weights = Tensor::randn(&[6, 3, 3, 1], 102);
+        let conv = QuantDepthwiseConvolution::new(&weights, (1, 1), (1, 1)).unwrap();
+        let mut ws = Workspace::new();
+        let want = conv
+            .run_fused_i8_with(&input, None, None, Activation::Relu, &mut ws)
+            .unwrap();
+        let elems = conv.workspace_elems_for(1, 9, 8).unwrap();
+        let mut ws2 = Workspace::with_capacity(elems);
+        for v in ws2.take(elems).iter_mut() {
+            *v = f32::from_bits(0x5a5a5a5a);
+        }
+        let mut out = vec![f32::from_bits(0x3a3a3a3a); want.data().len()];
+        conv.run_fused_i8_into(
+            &input.view(),
+            None,
+            None,
+            Activation::Relu,
+            &mut ws2,
+            &mut out,
+        )
+        .unwrap();
+        assert_eq!(ws2.grow_count(), 0, "workspace_elems_for must cover the walk");
+        let same = out
+            .iter()
+            .zip(want.data())
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "into/with must agree bitwise");
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise() {
+        let pool = ThreadPool::new(4);
+        let input = Tensor::randn(&[1, 16, 13, 10], 111);
+        let weights = Tensor::randn(&[10, 3, 3, 1], 112);
+        for stride in [(1, 1), (2, 2)] {
+            let conv = QuantDepthwiseConvolution::new(&weights, stride, (1, 1)).unwrap();
+            let mut ws = Workspace::new();
+            let a = conv
+                .run_fused_i8_with(&input, None, None, Activation::None, &mut ws)
+                .unwrap();
+            let b = conv
+                .run_fused_i8_with(&input, Some(&pool), None, Activation::None, &mut ws)
+                .unwrap();
+            assert_eq!(a.data(), b.data(), "stride {stride:?}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let w33 = Tensor::zeros(&[4, 3, 3, 1]);
+        assert!(QuantDepthwiseConvolution::new(&Tensor::zeros(&[4, 5, 5, 1]), (1, 1), (2, 2))
+            .is_err());
+        assert!(QuantDepthwiseConvolution::new(&Tensor::zeros(&[4, 3, 3, 2]), (1, 1), (1, 1))
+            .is_err());
+        assert!(QuantDepthwiseConvolution::new(&w33, (1, 2), (0, 0)).is_err());
+        let conv = QuantDepthwiseConvolution::new(&w33, (1, 1), (0, 0)).unwrap();
+        let mut ws = Workspace::new();
+        assert!(conv
+            .run_fused_i8_with(&Tensor::zeros(&[1, 8, 8, 5]), None, None, Activation::None, &mut ws)
+            .is_err());
+        assert!(conv
+            .run_fused_i8_with(&Tensor::zeros(&[1, 2, 2, 4]), None, None, Activation::None, &mut ws)
+            .is_err());
+        let input = Tensor::zeros(&[1, 8, 8, 4]);
+        let mut out = vec![0.0; 6 * 6 * 4];
+        assert!(conv
+            .run_fused_i8_into(
+                &input.view(),
+                None,
+                Some(&[0.0; 3]),
+                Activation::None,
+                &mut ws,
+                &mut out,
+            )
+            .is_err());
+        assert!(conv
+            .run_fused_i8_into(&input.view(), None, None, Activation::None, &mut ws, &mut out[1..])
+            .is_err());
+    }
+}

@@ -1,0 +1,252 @@
+//! The int8 GEMM path: prepare-time weight quantize-and-pack plus a
+//! prepacked, fused driver around the [`crate::simd::qmacc_4x16`]
+//! micro-kernel.
+//!
+//! Structurally simpler than the f32 five-loop engine — and that is the
+//! point: at one byte per A element and one per B element the whole
+//! working set of a mobile conv layer fits the L1/L2 budget without KC
+//! blocking, so the driver accumulates each `4×16` tile over the **full**
+//! k extent in registers/stack and fires the epilogue exactly once per
+//! tile. The f32 engine by contrast packs A per KC block and re-reads C
+//! once per block; skipping both passes is a structural advantage of the
+//! int8 path on top of the 2× denser multiplies.
+
+use crate::gemm::EpilogueI32;
+use crate::parallel::ThreadPool;
+use crate::quant::quantize_weight_channel;
+use crate::simd::qmacc_4x16;
+use crate::{bail_shape, Result};
+
+/// Micro-kernel rows (A block height).
+pub const MR_I8: usize = 4;
+
+/// Micro-kernel columns (B panel width).
+pub const NR_I8: usize = 16;
+
+/// B quantized and packed into `NR_I8`-wide column panels:
+/// `data[(jp * k + p) * NR_I8 + j]` is element `(p, jp * NR_I8 + j)`.
+/// Ragged tail columns are zero-padded (zero weights contribute nothing).
+#[derive(Debug, Clone)]
+pub struct PackedBI8 {
+    k: usize,
+    n: usize,
+    data: Vec<i8>,
+}
+
+impl PackedBI8 {
+    /// Inner (reduction) dimension.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Logical column count (before panel padding).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline(always)]
+    fn panel(&self, jp: usize) -> &[i8] {
+        &self.data[jp * self.k * NR_I8..(jp + 1) * self.k * NR_I8]
+    }
+}
+
+/// A prepare-time quantized B operand: packed i8 panels plus the
+/// per-column (per-output-channel) scales and folded correction sums the
+/// dequantize epilogue needs.
+#[derive(Debug, Clone)]
+pub struct QuantizedGemmB {
+    /// The packed panels.
+    pub packed: PackedBI8,
+    /// Per-column symmetric scale `s_w[j]`.
+    pub scales: Vec<f32>,
+    /// Per-column `Σ_p qw[p][j]` (the zero-point folding term).
+    pub wsum: Vec<i32>,
+}
+
+/// Quantize a row-major `k×n` f32 matrix per **column** (output channel)
+/// to symmetric i8 and pack it into [`PackedBI8`] panels.
+pub fn quantize_pack_b(src: &[f32], k: usize, n: usize) -> Result<QuantizedGemmB> {
+    if src.len() != k * n {
+        bail_shape!("quantize_pack_b: {}x{} needs {} elems, got {}", k, n, k * n, src.len());
+    }
+    let panels = n.div_ceil(NR_I8);
+    let mut data = vec![0i8; panels * k * NR_I8];
+    let mut scales = vec![0.0f32; n];
+    let mut wsum = vec![0i32; n];
+    let mut col = vec![0.0f32; k];
+    let mut qcol = vec![0i8; k];
+    for j in 0..n {
+        for p in 0..k {
+            col[p] = src[p * n + j];
+        }
+        let (s, ws) = quantize_weight_channel(&col, &mut qcol);
+        scales[j] = s;
+        wsum[j] = ws;
+        let (jp, jj) = (j / NR_I8, j % NR_I8);
+        for p in 0..k {
+            data[(jp * k + p) * NR_I8 + jj] = qcol[p];
+        }
+    }
+    Ok(QuantizedGemmB {
+        packed: PackedBI8 { k, n, data },
+        scales,
+        wsum,
+    })
+}
+
+/// `epilogue(A·B)` with u8 A (`m×k`, row-major, `lda == k`), prepacked i8
+/// B, i32 accumulation — parallelised over `MR_I8`-row blocks of A.
+///
+/// Each worker owns disjoint C rows, accumulates one `MR_I8×NR_I8` tile on
+/// its stack over the full k extent, and hands the finished tile to the
+/// [`EpilogueI32`] (which writes the actual output — no i32 C matrix is
+/// ever materialised). Edge lanes of short row blocks accumulate zeros and
+/// are simply not reported to the epilogue.
+pub fn qgemm_prepacked_fused<E: EpilogueI32>(
+    m: usize,
+    a: &[u8],
+    b: &PackedBI8,
+    pool: Option<&ThreadPool>,
+    epi: &E,
+) -> Result<()> {
+    let (k, n) = (b.k, b.n);
+    if a.len() != m * k {
+        bail_shape!("qgemm: A is {}x{} ({} elems), got {}", m, k, m * k, a.len());
+    }
+    let panels = n.div_ceil(NR_I8);
+    let row_job = |blk: usize| {
+        let r0 = blk * MR_I8;
+        let rows = MR_I8.min(m - r0);
+        for jp in 0..panels {
+            let col0 = jp * NR_I8;
+            let cols = NR_I8.min(n - col0);
+            let panel = b.panel(jp);
+            let mut acc = [[0i32; NR_I8]; MR_I8];
+            for p in 0..k {
+                let mut a4 = [0u8; MR_I8];
+                for (lane, av) in a4.iter_mut().enumerate().take(rows) {
+                    *av = a[(r0 + lane) * k + p];
+                }
+                let bv: &[i8; NR_I8] = panel[p * NR_I8..(p + 1) * NR_I8].try_into().unwrap();
+                qmacc_4x16(&mut acc, &a4, bv);
+            }
+            epi.micro_tile_i32(&acc, r0, col0, rows, cols);
+        }
+    };
+    let blocks = m.div_ceil(MR_I8);
+    match pool {
+        Some(pool) => pool.parallel_for(blocks, row_job),
+        None => (0..blocks).for_each(row_job),
+    }
+    Ok(())
+}
+
+/// Scalar i32 reference GEMM (`C[i][j] = Σ_p a[i][p] · b[p][j]`, b
+/// row-major unpacked) — the oracle the driver tests pin against.
+pub fn qgemm_ref(m: usize, k: usize, n: usize, a: &[u8], b: &[i8]) -> Vec<i32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut c = vec![0i32; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p] as i32;
+            for j in 0..n {
+                c[i * n + j] += av * b[p * n + j] as i32;
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShiftRng;
+
+    /// Epilogue that just stores the raw i32 tile into an m×n matrix.
+    struct StoreI32 {
+        out_addr: usize,
+        ldc: usize,
+    }
+
+    impl EpilogueI32 for StoreI32 {
+        fn micro_tile_i32(
+            &self,
+            acc: &[[i32; 16]; 4],
+            row0: usize,
+            col0: usize,
+            rows: usize,
+            cols: usize,
+        ) {
+            let out = self.out_addr as *mut i32;
+            for (r, acc_row) in acc.iter().enumerate().take(rows) {
+                // SAFETY: test drives disjoint tiles of an m×ldc buffer.
+                let dst = unsafe {
+                    std::slice::from_raw_parts_mut(out.add((row0 + r) * self.ldc + col0), cols)
+                };
+                dst.copy_from_slice(&acc_row[..cols]);
+            }
+        }
+    }
+
+    fn random_case(m: usize, k: usize, n: usize, seed: u64, pool: Option<&ThreadPool>) {
+        let mut rng = XorShiftRng::new(seed);
+        let a: Vec<u8> = (0..m * k).map(|_| (rng.next_u64() % 256) as u8).collect();
+        let mut bq: Vec<i8> = (0..k * n)
+            .map(|_| ((rng.next_u64() % 255) as i32 - 127) as i8)
+            .collect();
+        // Pin row 0 to ±127 so every column's max_abs maps to exactly 1.0
+        // in f32 — then feeding `bq / 127` through the symmetric quantizer
+        // reproduces `bq` bit-for-bit and the driver can be pinned against
+        // the pure-integer reference.
+        for j in 0..n {
+            bq[j] = if j % 2 == 0 { 127 } else { -127 };
+        }
+        let bf: Vec<f32> = bq.iter().map(|&v| v as f32 / 127.0).collect();
+        let packed = quantize_pack_b(&bf, k, n).unwrap();
+        for j in 0..n {
+            assert!((packed.scales[j] * 127.0 - 1.0).abs() < 1e-5, "scale[{j}]");
+        }
+        let mut c = vec![0i32; m * n];
+        let epi = StoreI32 { out_addr: c.as_mut_ptr() as usize, ldc: n };
+        qgemm_prepacked_fused(m, &a, &packed.packed, pool, &epi).unwrap();
+        let want = qgemm_ref(m, k, n, &a, &bq);
+        assert_eq!(c, want, "m={m} k={k} n={n}");
+        // wsum really is the packed column sum.
+        for j in 0..n {
+            let s: i32 = (0..k).map(|p| bq[p * n + j] as i32).sum();
+            assert_eq!(packed.wsum[j], s, "wsum[{j}]");
+        }
+    }
+
+    #[test]
+    fn qgemm_matches_scalar_reference() {
+        // Exact multiples of the tile, ragged rows, ragged cols, tiny.
+        random_case(8, 32, 32, 1, None);
+        random_case(7, 5, 13, 2, None);
+        random_case(1, 1, 1, 3, None);
+        random_case(4, 64, 17, 4, None);
+        random_case(9, 3, 16, 5, None);
+    }
+
+    #[test]
+    fn qgemm_parallel_matches_serial() {
+        let pool = ThreadPool::new(4);
+        random_case(33, 27, 29, 6, Some(&pool));
+    }
+
+    #[test]
+    fn quantize_pack_rejects_bad_shape() {
+        assert!(quantize_pack_b(&[0.0; 5], 2, 3).is_err());
+        let b = quantize_pack_b(&[0.0; 6], 2, 3).unwrap();
+        assert_eq!((b.packed.k(), b.packed.n()), (2, 3));
+        assert_eq!(b.packed.data.len(), 2 * NR_I8);
+    }
+
+    #[test]
+    fn qgemm_rejects_bad_a() {
+        let b = quantize_pack_b(&[0.5; 6], 2, 3).unwrap();
+        let epi = StoreI32 { out_addr: 0, ldc: 3 };
+        assert!(qgemm_prepacked_fused(2, &[0u8; 3], &b.packed, None, &epi).is_err());
+    }
+}

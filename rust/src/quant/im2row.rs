@@ -1,0 +1,351 @@
+//! Quantized im2row: the int8 twin of [`crate::im2row::Im2RowConvolution`]
+//! — dense spatial layers under [`super::Dtype::Int8`].
+//!
+//! Prepare quantizes the `[M, KH, KW, C]` weights per output channel and
+//! packs them as the GEMM's B operand ([`super::gemm::quantize_pack_b`]).
+//! Per call the f32 input is quantized **once** into a zero-point-filled
+//! padded u8 staging buffer (padding bytes are `zp`, which dequantizes to
+//! exactly 0.0), the u8 patch matrix is gathered exactly like the f32
+//! engine's, and one fused int8 GEMM with the
+//! [`crate::gemm::QDequantBiasAct`] epilogue writes the f32 output — bias
+//! and activation included — in a single pass.
+//!
+//! Both scratch buffers are bytes drawn from the shared f32 arena
+//! ([`super::as_u8_mut`] over a [`crate::workspace::elems_for_bytes`]-sized
+//! borrow), so the zero-alloc steady state survives the dtype change.
+
+use crate::gemm::{Activation, QDequantBiasAct};
+use crate::parallel::ThreadPool;
+use crate::quant::gemm::{qgemm_prepacked_fused, quantize_pack_b, QuantizedGemmB};
+use crate::quant::{as_u8_mut, choose_act_quant, quantize_u8_into};
+use crate::tensor::{Tensor, TensorView};
+use crate::workspace::{elems_for_bytes, Workspace};
+use crate::{bail_shape, Result};
+
+/// Prepared quantized im2row convolution (weights quantized and packed).
+#[derive(Debug, Clone)]
+pub struct QuantIm2RowConvolution {
+    m: usize,
+    k: usize,
+    cin: usize,
+    kernel: (usize, usize),
+    stride: (usize, usize),
+    pad: (usize, usize),
+    b: QuantizedGemmB,
+}
+
+impl QuantIm2RowConvolution {
+    /// Quantize `[M, KH, KW, C]` weights per output channel and pack them.
+    pub fn new(weights: &Tensor, stride: (usize, usize), pad: (usize, usize)) -> Result<Self> {
+        let ws = weights.shape();
+        if ws.len() != 4 {
+            bail_shape!("weights must be [M, KH, KW, C], got {:?}", ws);
+        }
+        if stride.0 == 0 || stride.1 == 0 {
+            bail_shape!("stride must be nonzero, got {:?}", stride);
+        }
+        let (m, kh, kw, c) = (ws[0], ws[1], ws[2], ws[3]);
+        let k = kh * kw * c;
+        // Same k×m transpose the f32 engine builds: row (a·kw + b)·c + ch,
+        // column = output channel — so B columns are output channels and
+        // the per-column symmetric quantizer is per-output-channel.
+        let mut wt = vec![0.0f32; k * m];
+        let wd = weights.data();
+        for mi in 0..m {
+            for a in 0..kh {
+                for bx in 0..kw {
+                    for ch in 0..c {
+                        let kk = (a * kw + bx) * c + ch;
+                        wt[kk * m + mi] = wd[((mi * kh + a) * kw + bx) * c + ch];
+                    }
+                }
+            }
+        }
+        let b = quantize_pack_b(&wt, k, m)?;
+        Ok(QuantIm2RowConvolution {
+            m,
+            k,
+            cin: c,
+            kernel: (kh, kw),
+            stride,
+            pad,
+            b,
+        })
+    }
+
+    /// Output spatial extent for an `h×w` input.
+    pub fn output_hw(&self, h: usize, w: usize) -> Result<(usize, usize)> {
+        let (kh, kw) = self.kernel;
+        let (ph, pw) = self.pad;
+        let (sh, sw) = self.stride;
+        if h + 2 * ph < kh || w + 2 * pw < kw {
+            bail_shape!("input {h}x{w} (pad {ph},{pw}) smaller than filter {kh}x{kw}");
+        }
+        Ok(((h + 2 * ph - kh) / sh + 1, (w + 2 * pw - kw) / sw + 1))
+    }
+
+    /// Workspace elements (**f32**s) one inference over an `[n, h, w, C]`
+    /// input borrows — the u8 staging plus the u8 patch matrix, byte-ceiled
+    /// into f32 units (the mixed-dtype sizing rule `workspace_elems()`
+    /// aggregates).
+    pub fn workspace_elems_for(&self, n: usize, h: usize, w: usize) -> Result<usize> {
+        let (oh, ow) = self.output_hw(h, w)?;
+        let (ph, pw) = self.pad;
+        let staging_bytes = n * (h + 2 * ph) * (w + 2 * pw) * self.cin;
+        let patch_bytes = n * oh * ow * self.k;
+        Ok(elems_for_bytes(staging_bytes) + elems_for_bytes(patch_bytes))
+    }
+
+    /// Allocating twin of [`run_fused_i8_into`](Self::run_fused_i8_into)
+    /// (tests / one-shot use).
+    pub fn run_fused_i8_with(
+        &self,
+        input: &Tensor,
+        pool: Option<&ThreadPool>,
+        bias: Option<&[f32]>,
+        act: Activation,
+        ws: &mut Workspace,
+    ) -> Result<Tensor> {
+        if input.rank() != 4 {
+            bail_shape!("input must be [N, H, W, C], got {:?}", input.shape());
+        }
+        let (n, h, w) = (input.shape()[0], input.shape()[1], input.shape()[2]);
+        let (oh, ow) = self.output_hw(h, w)?;
+        let mut out = Tensor::zeros(&[n, oh, ow, self.m]);
+        self.run_fused_i8_into(&input.view(), pool, bias, act, ws, out.data_mut())?;
+        Ok(out)
+    }
+
+    /// Quantize → patch-gather → fused int8 GEMM, writing the f32 output
+    /// (bias/activation applied in the dequantize epilogue) into `out`.
+    /// All scratch comes from `ws`; zero heap allocations.
+    pub fn run_fused_i8_into(
+        &self,
+        input: &TensorView,
+        pool: Option<&ThreadPool>,
+        bias: Option<&[f32]>,
+        act: Activation,
+        ws: &mut Workspace,
+        out: &mut [f32],
+    ) -> Result<()> {
+        if input.rank() != 4 {
+            bail_shape!("input must be [N, H, W, C], got {:?}", input.shape());
+        }
+        let (n, h, w, c) = (
+            input.shape()[0],
+            input.shape()[1],
+            input.shape()[2],
+            input.shape()[3],
+        );
+        if c != self.cin {
+            bail_shape!("input has {c} channels, weights expect {}", self.cin);
+        }
+        if let Some(b) = bias {
+            if b.len() != self.m {
+                bail_shape!("bias length {} vs {} output channels", b.len(), self.m);
+            }
+        }
+        let (oh, ow) = self.output_hw(h, w)?;
+        let rows = n * oh * ow;
+        if out.len() != rows * self.m {
+            bail_shape!("output needs {} elems, got {}", rows * self.m, out.len());
+        }
+        let (ph, pw) = self.pad;
+        let (sph, spw) = (h + 2 * ph, w + 2 * pw);
+        let staging_bytes = n * sph * spw * c;
+        let patch_bytes = rows * self.k;
+
+        let q = choose_act_quant(input.data());
+        let (sf, pf) = ws.split2(elems_for_bytes(staging_bytes), elems_for_bytes(patch_bytes));
+        let staging = &mut as_u8_mut(sf)[..staging_bytes];
+        let patches = &mut as_u8_mut(pf)[..patch_bytes];
+
+        // Quantize into the padded staging; the border is zp bytes, which
+        // dequantize to exactly 0.0 (zero padding for free).
+        if ph != 0 || pw != 0 {
+            staging.fill(q.zp as u8);
+        }
+        let src = input.data();
+        for ni in 0..n {
+            for y in 0..h {
+                let srow = &src[((ni * h + y) * w) * c..][..w * c];
+                let drow = &mut staging[(((ni * sph + y + ph) * spw) + pw) * c..][..w * c];
+                quantize_u8_into(srow, q, drow);
+            }
+        }
+
+        self.fill_patches(staging, n, sph, spw, oh, ow, pool, patches);
+
+        let epi = QDequantBiasAct {
+            out_addr: out.as_mut_ptr() as usize,
+            ldc: self.m,
+            a_scale: q.scale,
+            a_zp: q.zp,
+            w_scales: &self.b.scales,
+            wsum: &self.b.wsum,
+            bias,
+            act,
+        };
+        qgemm_prepacked_fused(rows, patches, &self.b.packed, pool, &epi)
+    }
+
+    /// Gather the u8 patch matrix `[N·OH·OW, KH·KW·C]` from the padded
+    /// staging, parallel over output rows (same shape as the f32 engine's
+    /// `fill_patches`, one `KW·C` contiguous copy per kernel row).
+    fn fill_patches(
+        &self,
+        staging: &[u8],
+        n: usize,
+        sph: usize,
+        spw: usize,
+        oh: usize,
+        ow: usize,
+        pool: Option<&ThreadPool>,
+        patches: &mut [u8],
+    ) {
+        let (kh, kw) = self.kernel;
+        let (sh, sw) = self.stride;
+        let (c, k) = (self.cin, self.k);
+        let base = patches.as_mut_ptr() as usize;
+        let row_job = |job: usize| {
+            let ni = job / oh;
+            let oy = job % oh;
+            let y0 = oy * sh;
+            for ox in 0..ow {
+                let x0 = ox * sw;
+                let ridx = (ni * oh + oy) * ow + ox;
+                // SAFETY: each job owns the `ow` disjoint patch rows of one
+                // output row; every write stays inside the `rows·k` patch
+                // buffer whose base pointer outlives the parallel section.
+                let dst =
+                    unsafe { std::slice::from_raw_parts_mut((base as *mut u8).add(ridx * k), k) };
+                for a in 0..kh {
+                    let srow = &staging[((ni * sph + y0 + a) * spw + x0) * c..][..kw * c];
+                    dst[a * kw * c..(a + 1) * kw * c].copy_from_slice(srow);
+                }
+            }
+        };
+        match pool {
+            Some(pool) => pool.parallel_for(n * oh, row_job),
+            None => (0..n * oh).for_each(row_job),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::im2row::Im2RowConvolution;
+    use crate::util::rel_error;
+
+    fn oracle(
+        input: &Tensor,
+        weights: &Tensor,
+        stride: (usize, usize),
+        pad: (usize, usize),
+        bias: Option<&[f32]>,
+        act: Activation,
+    ) -> Tensor {
+        let mut ws = Workspace::new();
+        Im2RowConvolution::new(weights, stride, pad)
+            .unwrap()
+            .run_fused_with(input, None, bias, act, &mut ws)
+            .unwrap()
+    }
+
+    #[test]
+    fn quantized_tracks_f32_oracle() {
+        for (stride, pad) in [((1, 1), (1, 1)), ((2, 2), (1, 1)), ((1, 1), (0, 0))] {
+            let input = Tensor::randn(&[2, 10, 9, 7], 31);
+            let weights = Tensor::randn(&[11, 3, 3, 7], 32);
+            let bias: Vec<f32> = (0..11).map(|i| i as f32 * 0.2 - 1.0).collect();
+            let conv = QuantIm2RowConvolution::new(&weights, stride, pad).unwrap();
+            let mut ws = Workspace::new();
+            for act in [Activation::None, Activation::Relu, Activation::Relu6] {
+                let got = conv
+                    .run_fused_i8_with(&input, None, Some(&bias), act, &mut ws)
+                    .unwrap();
+                let want = oracle(&input, &weights, stride, pad, Some(&bias), act);
+                assert_eq!(got.shape(), want.shape());
+                let e = rel_error(got.data(), want.data());
+                assert!(
+                    e < 0.05,
+                    "stride {stride:?} pad {pad:?} act {act}: rel err {e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn into_matches_with_bitwise_from_poisoned_arena() {
+        let input = Tensor::randn(&[1, 8, 8, 5], 41);
+        let weights = Tensor::randn(&[6, 3, 3, 5], 42);
+        let conv = QuantIm2RowConvolution::new(&weights, (1, 1), (1, 1)).unwrap();
+        let mut ws = Workspace::new();
+        let want = conv
+            .run_fused_i8_with(&input, None, None, Activation::Relu, &mut ws)
+            .unwrap();
+        // Poison the arena (NaN-free) and the output; the into-path must
+        // fully overwrite both of its scratch buffers and the output.
+        let elems = conv.workspace_elems_for(1, 8, 8).unwrap();
+        let mut ws2 = Workspace::with_capacity(elems);
+        for v in ws2.take(elems).iter_mut() {
+            *v = f32::from_bits(0x5a5a5a5a);
+        }
+        let mut out = vec![f32::from_bits(0x3a3a3a3a); want.data().len()];
+        conv.run_fused_i8_into(
+            &input.view(),
+            None,
+            None,
+            Activation::Relu,
+            &mut ws2,
+            &mut out,
+        )
+        .unwrap();
+        assert_eq!(ws2.grow_count(), 0, "workspace_elems_for must cover the walk");
+        let same = out
+            .iter()
+            .zip(want.data())
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "into/with must agree bitwise");
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise() {
+        let pool = ThreadPool::new(4);
+        let input = Tensor::randn(&[1, 12, 11, 6], 51);
+        let weights = Tensor::randn(&[9, 3, 3, 6], 52);
+        let conv = QuantIm2RowConvolution::new(&weights, (1, 1), (1, 1)).unwrap();
+        let mut ws = Workspace::new();
+        let a = conv
+            .run_fused_i8_with(&input, None, None, Activation::None, &mut ws)
+            .unwrap();
+        let b = conv
+            .run_fused_i8_with(&input, Some(&pool), None, Activation::None, &mut ws)
+            .unwrap();
+        assert_eq!(a.data(), b.data());
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let weights = Tensor::randn(&[4, 3, 3, 5], 1);
+        assert!(QuantIm2RowConvolution::new(&weights, (0, 1), (1, 1)).is_err());
+        let conv = QuantIm2RowConvolution::new(&weights, (1, 1), (0, 0)).unwrap();
+        // Wrong channel count.
+        let bad = Tensor::randn(&[1, 8, 8, 4], 2);
+        let mut ws = Workspace::new();
+        assert!(conv
+            .run_fused_i8_with(&bad, None, None, Activation::None, &mut ws)
+            .is_err());
+        // Wrong bias length.
+        let x = Tensor::randn(&[1, 8, 8, 5], 3);
+        assert!(conv
+            .run_fused_i8_with(&x, None, Some(&[0.0; 3]), Activation::None, &mut ws)
+            .is_err());
+        // Input smaller than the filter.
+        let tiny = Tensor::randn(&[1, 2, 2, 5], 4);
+        assert!(conv
+            .run_fused_i8_with(&tiny, None, None, Activation::None, &mut ws)
+            .is_err());
+    }
+}

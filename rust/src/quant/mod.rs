@@ -1,0 +1,426 @@
+//! Quantized (dynamic-range int8) inference: the dtype layer, quantization
+//! parameter selection, and the int8 convolution engines.
+//!
+//! The scheme is classic dynamic-range quantization, the variant mobile
+//! runtimes deploy when no calibration dataset is available:
+//!
+//! * **Activations** — per-tensor **u8 affine**, chosen per call from the
+//!   live tensor: the range is extended to include 0 (`lo = min(0, min x)`,
+//!   `hi = max(0, max x)`) so the zero point is exact —
+//!   `quantize(0.0) == zp` bit-for-bit, which is what makes zero padding
+//!   free (padding bytes are just `zp`).
+//! * **Weights** — per-output-channel **symmetric i8**
+//!   (`scale_c = max_abs / 127`, clamp to `[-127, 127]`), quantized once at
+//!   prepare time together with the folded per-channel correction term
+//!   `wsum[c] = Σ_k qw` (see [`crate::gemm::QDequantBiasAct`]).
+//! * **Accumulation** — i32, via the [`crate::simd::qmacc_4x16`]
+//!   micro-kernel (u8×i8 products widened through i16).
+//! * **Outputs** — dequantized back to f32 in the GEMM epilogue (bias add
+//!   and activation clamp fused), so activations flow between layers in
+//!   f32 and the activation plan is dtype-agnostic. The i32→i8
+//!   [`crate::gemm::Requantize`] epilogue covers fully-quantized chains.
+//!
+//! All rounding is **round-to-nearest-even**: exact reference
+//! [`crate::util::round_half_even`], hot paths use the branch-free
+//! [`crate::util::fast_round_half_even`] magic-number form.
+//!
+//! Engines ([`QuantIm2RowConvolution`], [`QuantDepthwiseConvolution`],
+//! [`QuantPointwiseConvolution`]) mirror their f32 twins' API — a
+//! zero-alloc `run_fused_i8_into` drawing u8 scratch from the shared f32
+//! arena (byte-reinterpreted, sized by [`crate::workspace::elems_for_bytes`])
+//! plus an allocating `run_fused_i8_with`. Winograd stays f32-only: its
+//! transformed-domain dynamic range makes int8 numerics a known minefield.
+
+pub mod depthwise;
+pub mod gemm;
+pub mod im2row;
+pub mod pointwise;
+
+pub use depthwise::QuantDepthwiseConvolution;
+pub use im2row::QuantIm2RowConvolution;
+pub use pointwise::QuantPointwiseConvolution;
+
+use crate::util::fast_round_half_even;
+use crate::{Error, Result};
+
+/// Element type a layer (or a whole prepared model) computes in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Dtype {
+    /// Single-precision float — the paper's pipeline.
+    #[default]
+    F32,
+    /// Dynamic-range quantized int8 (u8 activations × i8 weights, i32
+    /// accumulation, f32 layer outputs).
+    Int8,
+}
+
+impl Dtype {
+    /// Parse a CLI-style name; `None` for unknown spellings.
+    pub fn parse(s: &str) -> Option<Dtype> {
+        match s {
+            "f32" | "fp32" | "float32" => Some(Dtype::F32),
+            "int8" | "i8" => Some(Dtype::Int8),
+            _ => None,
+        }
+    }
+
+    /// Is this a quantized dtype?
+    pub fn is_quantized(self) -> bool {
+        matches!(self, Dtype::Int8)
+    }
+}
+
+impl std::fmt::Display for Dtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Dtype::F32 => write!(f, "f32"),
+            Dtype::Int8 => write!(f, "int8"),
+        }
+    }
+}
+
+impl std::str::FromStr for Dtype {
+    type Err = Error;
+
+    /// Named `Err` (never a panic) per the CLI convention, so
+    /// `Args::get_parse_or("dtype", Dtype::F32)` diagnoses bad values.
+    fn from_str(s: &str) -> Result<Dtype> {
+        Dtype::parse(s)
+            .ok_or_else(|| Error::Config(format!("unknown dtype {s:?} (expected f32 or int8)")))
+    }
+}
+
+/// Per-tensor affine u8 quantization parameters for one activation tensor.
+#[derive(Debug, Clone, Copy)]
+pub struct ActQuant {
+    /// Step size `s` (always > 0 and finite).
+    pub scale: f32,
+    /// `1 / s`, precomputed for the hot quantize loop.
+    pub inv_scale: f32,
+    /// Zero point in `[0, 255]`: `quantize(0.0) == zp` exactly.
+    pub zp: i32,
+}
+
+/// Choose dynamic-range u8 parameters covering `x` (and always covering
+/// 0.0, so the zero point is exact). A constant-zero (or empty) tensor gets
+/// the degenerate `scale = 1, zp = 0`.
+pub fn choose_act_quant(x: &[f32]) -> ActQuant {
+    let mut lo = 0.0f32;
+    let mut hi = 0.0f32;
+    for &v in x {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let range = hi - lo;
+    let scale = if range > 0.0 { range / 255.0 } else { 1.0 };
+    let zp = (fast_round_half_even(-lo / scale) as i32).clamp(0, 255);
+    ActQuant {
+        scale,
+        inv_scale: 1.0 / scale,
+        zp,
+    }
+}
+
+/// Quantize `src` to u8 under `q`: `clamp(zp + rhe(x / s), 0, 255)`.
+///
+/// `dst.len()` must equal `src.len()` (the engines guarantee it). Values
+/// inside the chosen range never clamp; the clamp guards rounding at the
+/// extremes.
+#[inline]
+pub fn quantize_u8_into(src: &[f32], q: ActQuant, dst: &mut [u8]) {
+    debug_assert_eq!(src.len(), dst.len());
+    let zp = q.zp as f32;
+    for (d, &x) in dst.iter_mut().zip(src.iter()) {
+        // Folding zp before the round keeps the loop at one fma + one
+        // round per element (SSE2/NEON-vectorizable). At an exact .5 tie
+        // an odd zp flips which even neighbour wins vs `zp + rhe(x/s)` —
+        // both are the nearest grid point, which is all the quantizer
+        // promises.
+        *d = (fast_round_half_even(x * q.inv_scale + zp)).clamp(0.0, 255.0) as u8;
+    }
+}
+
+/// Dequantize one u8 value under `q` — the test-side inverse.
+#[inline]
+pub fn dequantize_u8(v: u8, q: ActQuant) -> f32 {
+    (v as i32 - q.zp) as f32 * q.scale
+}
+
+/// Quantize one weight channel to symmetric i8: `scale = max_abs / 127`
+/// (1.0 for an all-zero channel), values clamped to `[-127, 127]`, ties to
+/// even. Returns `(scale, Σ qw)` — the per-channel scale and the folded
+/// zero-point correction sum.
+pub fn quantize_weight_channel(src: &[f32], dst: &mut [i8]) -> (f32, i32) {
+    debug_assert_eq!(src.len(), dst.len());
+    let max_abs = src.iter().map(|x| x.abs()).fold(0.0f32, f32::max);
+    let scale = if max_abs > 0.0 { max_abs / 127.0 } else { 1.0 };
+    let inv = 1.0 / scale;
+    let mut wsum = 0i32;
+    for (d, &x) in dst.iter_mut().zip(src.iter()) {
+        let qv = (fast_round_half_even(x * inv) as i32).clamp(-127, 127);
+        *d = qv as i8;
+        wsum += qv;
+    }
+    (scale, wsum)
+}
+
+/// Reinterpret an f32 arena slice as raw bytes — how the quant engines draw
+/// u8 staging/patch scratch from the shared [`crate::workspace::Workspace`]
+/// without a second arena type (size it with
+/// [`crate::workspace::elems_for_bytes`]).
+#[inline]
+pub fn as_u8_mut(buf: &mut [f32]) -> &mut [u8] {
+    let bytes = std::mem::size_of_val(buf);
+    // SAFETY: u8 has alignment 1 and every bit pattern is a valid u8; the
+    // byte slice covers exactly the same allocation, and the exclusive
+    // `&mut buf` borrow it reborrows guarantees no aliasing for its
+    // lifetime.
+    unsafe { std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut u8, bytes) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::{EpilogueI32, Requantize};
+    use crate::util::{round_half_even, XorShiftRng};
+
+    /// Scalar model of the `Requantize` epilogue, element by element,
+    /// built on the exact rounding reference.
+    fn requantize_ref(
+        acc: i32,
+        bias: i32,
+        scale: f32,
+        zp: i32,
+        qmin: i32,
+        qmax: i32,
+    ) -> i8 {
+        let v = round_half_even(acc.wrapping_add(bias) as f32 * scale);
+        let q = if v >= i32::MAX as f32 {
+            i32::MAX
+        } else if v <= i32::MIN as f32 {
+            i32::MIN
+        } else {
+            v as i32
+        };
+        q.saturating_add(zp).clamp(qmin, qmax) as i8
+    }
+
+    /// Drive the `Requantize` epilogue over an m×n accumulator matrix the
+    /// way the qgemm driver does (4×16 tiles, ragged edges included) and
+    /// compare every element against the scalar reference.
+    fn check_requantize_matrix(
+        m: usize,
+        n: usize,
+        acc: &[i32],
+        bias: Option<&[i32]>,
+        scale: &[f32],
+        zp: i32,
+        qmin: i32,
+        qmax: i32,
+    ) {
+        // NaN-free poisoned output: a sentinel the epilogue must overwrite.
+        let mut out = vec![77i8; m * n];
+        let epi = Requantize {
+            out_addr: out.as_mut_ptr() as usize,
+            ldc: n,
+            bias,
+            scale,
+            zero_point: zp,
+            qmin,
+            qmax,
+        };
+        for r0 in (0..m).step_by(4) {
+            let rows = 4.min(m - r0);
+            for c0 in (0..n).step_by(16) {
+                let cols = 16.min(n - c0);
+                let mut tile = [[0i32; 16]; 4];
+                for r in 0..rows {
+                    for j in 0..cols {
+                        tile[r][j] = acc[(r0 + r) * n + c0 + j];
+                    }
+                }
+                epi.micro_tile_i32(&tile, r0, c0, rows, cols);
+            }
+        }
+        for r in 0..m {
+            for c in 0..n {
+                let b = bias.map_or(0, |b| b[c]);
+                let want = requantize_ref(acc[r * n + c], b, scale[c], zp, qmin, qmax);
+                assert_eq!(out[r * n + c], want, "({r},{c}) acc {}", acc[r * n + c]);
+            }
+        }
+    }
+
+    #[test]
+    fn requantize_property_random_ragged_channels() {
+        // C % 4 != 0 and % 16 != 0: n = 13 exercises ragged tile columns.
+        let (m, n) = (9, 13);
+        let mut rng = XorShiftRng::new(42);
+        let mut acc = vec![0i32; m * n];
+        for v in acc.iter_mut() {
+            // Mix of small and large magnitudes, both signs.
+            let r = rng.next_u64();
+            let small = (r % 20001) as i32 - 10000;
+            *v = if r % 7 == 0 { small.wrapping_mul(70001) } else { small };
+        }
+        let mut scale = vec![0.0f32; n];
+        let mut bias = vec![0i32; n];
+        for c in 0..n {
+            scale[c] = 0.001 + (c as f32) * 0.013;
+            bias[c] = (c as i32 - 6) * 37;
+        }
+        for (zp, qmin, qmax) in [(0, -128, 127), (-1, -128, 127), (10, 10, 127)] {
+            check_requantize_matrix(m, n, &acc, Some(&bias), &scale, zp, qmin, qmax);
+            check_requantize_matrix(m, n, &acc, None, &scale, zp, qmin, qmax);
+        }
+    }
+
+    #[test]
+    fn requantize_saturates_at_both_bounds() {
+        // Accumulators far beyond the i8 grid, both signs, must pin to
+        // exactly qmin/qmax — including through the fast-rounding path's
+        // out-of-validity range (|v| ≥ 2²²).
+        let n = 5;
+        let acc: Vec<i32> = vec![i32::MAX, i32::MIN, 100_000_000, -100_000_000, 0];
+        let scale = vec![1.0f32; n];
+        check_requantize_matrix(1, n, &acc, None, &scale, 3, -128, 127);
+        let mut out = vec![0i8; n];
+        Requantize {
+            out_addr: out.as_mut_ptr() as usize,
+            ldc: n,
+            bias: None,
+            scale: &scale,
+            zero_point: 3,
+            qmin: -128,
+            qmax: 127,
+        }
+        .micro_tile_i32(
+            &{
+                let mut t = [[0i32; 16]; 4];
+                t[0][..n].copy_from_slice(&acc);
+                t
+            },
+            0,
+            0,
+            1,
+            n,
+        );
+        assert_eq!(out, vec![127, -128, 127, -128, 3]);
+    }
+
+    #[test]
+    fn requantize_ties_round_to_even() {
+        // scale = 0.5 turns odd accumulators into exact .5 ties.
+        let acc: Vec<i32> = vec![1, 3, 5, -1, -3, -5, 2, -2];
+        let n = acc.len();
+        let scale = vec![0.5f32; n];
+        check_requantize_matrix(1, n, &acc, None, &scale, 0, -128, 127);
+        let mut out = vec![99i8; n];
+        Requantize {
+            out_addr: out.as_mut_ptr() as usize,
+            ldc: n,
+            bias: None,
+            scale: &scale,
+            zero_point: 0,
+            qmin: -128,
+            qmax: 127,
+        }
+        .micro_tile_i32(
+            &{
+                let mut t = [[0i32; 16]; 4];
+                t[0][..n].copy_from_slice(&acc);
+                t
+            },
+            0,
+            0,
+            1,
+            n,
+        );
+        // 0.5→0, 1.5→2, 2.5→2; negatives mirror; integers untouched.
+        assert_eq!(out, vec![0, 2, 2, 0, -2, -2, 1, -1]);
+    }
+
+    #[test]
+    fn activation_zero_point_is_exact() {
+        let mut rng = XorShiftRng::new(7);
+        for case in 0..20 {
+            let mut x = vec![0.0f32; 97];
+            rng.fill_normal(&mut x);
+            // Alternate all-positive / all-negative / mixed tensors so the
+            // zero point lands at 0, 255 and in between.
+            if case % 3 == 1 {
+                for v in x.iter_mut() {
+                    *v = v.abs();
+                }
+            } else if case % 3 == 2 {
+                for v in x.iter_mut() {
+                    *v = -v.abs();
+                }
+            }
+            let q = choose_act_quant(&x);
+            assert!(q.scale > 0.0 && q.scale.is_finite());
+            assert!((0..=255).contains(&q.zp));
+            let mut z = [0u8; 1];
+            quantize_u8_into(&[0.0], q, &mut z);
+            assert_eq!(z[0] as i32, q.zp, "quantize(0) must hit the zero point");
+            assert_eq!(dequantize_u8(z[0], q), 0.0);
+            // Round-trip error of every value is within half a step.
+            let mut qx = vec![0u8; x.len()];
+            quantize_u8_into(&x, q, &mut qx);
+            for (&v, &qv) in x.iter().zip(&qx) {
+                let back = dequantize_u8(qv, q);
+                assert!(
+                    (back - v).abs() <= 0.5 * q.scale + 1e-6,
+                    "x {v} -> {qv} -> {back} (scale {})",
+                    q.scale
+                );
+            }
+        }
+        // Degenerate all-zero tensor.
+        let q = choose_act_quant(&[0.0; 8]);
+        assert_eq!((q.scale, q.zp), (1.0, 0));
+    }
+
+    #[test]
+    fn weight_channel_quantization_symmetric() {
+        let src = [0.5f32, -1.0, 0.25, 0.999, -0.5];
+        let mut dst = [0i8; 5];
+        let (scale, wsum) = quantize_weight_channel(&src, &mut dst);
+        assert_eq!(scale, 1.0 / 127.0);
+        // 0.999 / (1/127) = 126.873 → 127; -1.0 → -127.
+        assert_eq!(dst, [64, -127, 32, 127, -64]);
+        assert_eq!(wsum, 64 - 127 + 32 + 127 - 64);
+        // All-zero channel: unit scale, zero sum.
+        let mut z = [0i8; 3];
+        let (scale, wsum) = quantize_weight_channel(&[0.0; 3], &mut z);
+        assert_eq!((scale, wsum), (1.0, 0));
+    }
+
+    #[test]
+    fn dtype_parse_display_fromstr() {
+        assert_eq!(Dtype::parse("f32"), Some(Dtype::F32));
+        assert_eq!(Dtype::parse("int8"), Some(Dtype::Int8));
+        assert_eq!(Dtype::parse("i8"), Some(Dtype::Int8));
+        assert_eq!(Dtype::parse("int4"), None);
+        assert_eq!(Dtype::F32.to_string(), "f32");
+        assert_eq!(Dtype::Int8.to_string(), "int8");
+        assert!(Dtype::Int8.is_quantized() && !Dtype::F32.is_quantized());
+        assert_eq!("int8".parse::<Dtype>().unwrap(), Dtype::Int8);
+        let err = "bf16".parse::<Dtype>().unwrap_err();
+        assert!(matches!(err, Error::Config(_)));
+        assert!(err.to_string().contains("bf16"));
+    }
+
+    #[test]
+    fn as_u8_mut_reinterprets_in_place() {
+        let mut buf = [0.0f32; 4];
+        {
+            let bytes = as_u8_mut(&mut buf);
+            assert_eq!(bytes.len(), 16);
+            bytes.fill(0x3f);
+        }
+        // 0x3f3f3f3f as f32 is a normal positive value — the write went
+        // through to the same storage.
+        assert!(buf.iter().all(|&v| v == f32::from_bits(0x3f3f3f3f)));
+    }
+}

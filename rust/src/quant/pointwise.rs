@@ -1,0 +1,295 @@
+//! Quantized direct pointwise (1×1) convolution — the int8 twin of
+//! [`crate::conv::pointwise::PointwiseConvolution`].
+//!
+//! The f32 engine's zero-copy trick (the NHWC input *is* the GEMM A
+//! operand) survives quantization almost intact: the input still needs one
+//! quantize pass, but that pass writes a **u8** buffer a quarter the size
+//! of the f32 input, and there is no patch gather — at stride 1 the
+//! quantized buffer is fed to the int8 GEMM verbatim. Stride 2 (ResNet
+//! downsample projections) fuses the strided row gather *into* the
+//! quantize pass: each output pixel's `C`-run is quantized straight out of
+//! the strided source position, so the gather costs nothing extra.
+
+use crate::gemm::{Activation, QDequantBiasAct};
+use crate::parallel::ThreadPool;
+use crate::quant::gemm::{qgemm_prepacked_fused, quantize_pack_b, QuantizedGemmB};
+use crate::quant::{as_u8_mut, choose_act_quant, quantize_u8_into};
+use crate::tensor::{Tensor, TensorView};
+use crate::workspace::{elems_for_bytes, Workspace};
+use crate::{bail_shape, bail_unsupported, Result};
+
+/// Prepared quantized pointwise convolution: `[M, 1, 1, C]` weights
+/// quantized per output channel and packed as the int8 GEMM's B operand.
+#[derive(Debug, Clone)]
+pub struct QuantPointwiseConvolution {
+    cin: usize,
+    cout: usize,
+    stride: (usize, usize),
+    b: QuantizedGemmB,
+}
+
+impl QuantPointwiseConvolution {
+    /// Prepare from `[M, 1, 1, C]` weights; unpadded, stride (1,1) or
+    /// (2,2) only — mirroring the f32 engine's envelope so the dtype-aware
+    /// selector can route identically.
+    pub fn new(weights: &Tensor, stride: (usize, usize), pad: (usize, usize)) -> Result<Self> {
+        if weights.rank() != 4 || weights.shape()[1] != 1 || weights.shape()[2] != 1 {
+            bail_shape!("pointwise weights must be [M, 1, 1, C], got {:?}", weights.shape());
+        }
+        if pad != (0, 0) {
+            bail_unsupported!("pointwise engine is unpadded-only, got pad {pad:?}");
+        }
+        if stride != (1, 1) && stride != (2, 2) {
+            bail_unsupported!("pointwise engine supports stride 1 or 2, got {stride:?}");
+        }
+        let (m, c) = (weights.shape()[0], weights.shape()[3]);
+        // Same k = ch row order as the f32 engine's packed matrix; columns
+        // are output channels, so per-column quantization is per-channel.
+        let mut wt = vec![0.0f32; c * m];
+        for mi in 0..m {
+            for ch in 0..c {
+                wt[ch * m + mi] = weights.at4(mi, 0, 0, ch);
+            }
+        }
+        Ok(QuantPointwiseConvolution {
+            cin: c,
+            cout: m,
+            stride,
+            b: quantize_pack_b(&wt, c, m)?,
+        })
+    }
+
+    /// Output spatial size for an `h×w` input.
+    pub fn output_hw(&self, h: usize, w: usize) -> Result<(usize, usize)> {
+        if h == 0 || w == 0 {
+            bail_shape!("input {h}x{w} smaller than filter 1x1");
+        }
+        Ok(((h - 1) / self.stride.0 + 1, (w - 1) / self.stride.1 + 1))
+    }
+
+    /// Workspace elements (**f32**s) one inference over an `[n, h, w, C]`
+    /// input borrows: the quantized u8 A matrix (`N·OH·OW·C` bytes,
+    /// byte-ceiled into f32 units) — the engine's only scratch.
+    pub fn workspace_elems_for(&self, n: usize, h: usize, w: usize) -> Result<usize> {
+        let (oh, ow) = self.output_hw(h, w)?;
+        Ok(elems_for_bytes(n * oh * ow * self.cin))
+    }
+
+    /// Allocating twin of [`run_fused_i8_into`](Self::run_fused_i8_into)
+    /// (tests / one-shot use).
+    pub fn run_fused_i8_with(
+        &self,
+        input: &Tensor,
+        pool: Option<&ThreadPool>,
+        bias: Option<&[f32]>,
+        act: Activation,
+        ws: &mut Workspace,
+    ) -> Result<Tensor> {
+        if input.rank() != 4 {
+            bail_shape!("input must be [N, H, W, C], got {:?}", input.shape());
+        }
+        let (n, h, w) = (input.shape()[0], input.shape()[1], input.shape()[2]);
+        let (oh, ow) = self.output_hw(h, w)?;
+        let mut out = Tensor::zeros(&[n, oh, ow, self.cout]);
+        self.run_fused_i8_into(&input.view(), pool, bias, act, ws, out.data_mut())?;
+        Ok(out)
+    }
+
+    /// Quantize (stride-fused) → int8 GEMM with the dequantize epilogue,
+    /// writing the f32 output into `out`. Zero heap allocations.
+    pub fn run_fused_i8_into(
+        &self,
+        input: &TensorView,
+        pool: Option<&ThreadPool>,
+        bias: Option<&[f32]>,
+        act: Activation,
+        ws: &mut Workspace,
+        out: &mut [f32],
+    ) -> Result<()> {
+        if input.rank() != 4 {
+            bail_shape!("input must be [N, H, W, C], got {:?}", input.shape());
+        }
+        let (n, h, w, c) = (
+            input.shape()[0],
+            input.shape()[1],
+            input.shape()[2],
+            input.shape()[3],
+        );
+        if c != self.cin {
+            bail_shape!("input has {c} channels, pointwise weights expect {}", self.cin);
+        }
+        if let Some(b) = bias {
+            if b.len() != self.cout {
+                bail_shape!("bias length {} vs {} output channels", b.len(), self.cout);
+            }
+        }
+        let (oh, ow) = self.output_hw(h, w)?;
+        let rows = n * oh * ow;
+        if out.len() != rows * self.cout {
+            bail_shape!(
+                "output slice has {} elems, layer writes {}",
+                out.len(),
+                rows * self.cout
+            );
+        }
+
+        let q = choose_act_quant(input.data());
+        let a_bytes = rows * c;
+        let qa = &mut as_u8_mut(ws.take(elems_for_bytes(a_bytes)))[..a_bytes];
+        let data = input.data();
+        if self.stride == (1, 1) {
+            quantize_u8_into(data, q, qa);
+        } else {
+            // Fused strided gather + quantize: each job quantizes the `ow`
+            // sampled C-runs of one output row straight out of the source.
+            let (sh, sw) = self.stride;
+            let base = qa.as_mut_ptr() as usize;
+            let gather_row = |r: usize| {
+                let bn = r / oh;
+                let oy = r % oh;
+                // SAFETY: each job owns one disjoint `ow·c`-byte staging
+                // row inside the `rows·c` buffer, which outlives the
+                // parallel section.
+                let dst = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        (base as *mut u8).add((bn * oh + oy) * ow * c),
+                        ow * c,
+                    )
+                };
+                let src_row = ((bn * h + oy * sh) * w) * c;
+                for ox in 0..ow {
+                    let s0 = src_row + ox * sw * c;
+                    quantize_u8_into(&data[s0..s0 + c], q, &mut dst[ox * c..(ox + 1) * c]);
+                }
+            };
+            match pool {
+                Some(pool) => pool.parallel_for(n * oh, gather_row),
+                None => (0..n * oh).for_each(gather_row),
+            }
+        }
+
+        let epi = QDequantBiasAct {
+            out_addr: out.as_mut_ptr() as usize,
+            ldc: self.cout,
+            a_scale: q.scale,
+            a_zp: q.zp,
+            w_scales: &self.b.scales,
+            wsum: &self.b.wsum,
+            bias,
+            act,
+        };
+        qgemm_prepacked_fused(rows, qa, &self.b.packed, pool, &epi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::pointwise::PointwiseConvolution;
+    use crate::util::rel_error;
+
+    #[test]
+    fn quantized_tracks_f32_oracle() {
+        for stride in [(1, 1), (2, 2)] {
+            let input = Tensor::randn(&[2, 9, 11, 13], 61);
+            let weights = Tensor::randn(&[17, 1, 1, 13], 62);
+            let bias: Vec<f32> = (0..17).map(|i| i as f32 * 0.15 - 1.2).collect();
+            let qconv = QuantPointwiseConvolution::new(&weights, stride, (0, 0)).unwrap();
+            let fconv = PointwiseConvolution::new(&weights, stride, (0, 0)).unwrap();
+            let mut ws = Workspace::new();
+            for act in [Activation::None, Activation::Relu] {
+                let got = qconv
+                    .run_fused_i8_with(&input, None, Some(&bias), act, &mut ws)
+                    .unwrap();
+                let want = fconv
+                    .run_fused_with(&input, None, Some(&bias), act, &mut ws)
+                    .unwrap();
+                assert_eq!(got.shape(), want.shape());
+                let e = rel_error(got.data(), want.data());
+                assert!(e < 0.05, "stride {stride:?} act {act}: rel err {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn into_matches_with_and_arena_never_grows() {
+        for stride in [(1, 1), (2, 2)] {
+            let input = Tensor::randn(&[1, 10, 7, 6], 71);
+            let weights = Tensor::randn(&[9, 1, 1, 6], 72);
+            let conv = QuantPointwiseConvolution::new(&weights, stride, (0, 0)).unwrap();
+            let mut ws = Workspace::new();
+            let want = conv
+                .run_fused_i8_with(&input, None, None, Activation::Relu6, &mut ws)
+                .unwrap();
+            let elems = conv.workspace_elems_for(1, 10, 7).unwrap();
+            let mut ws2 = Workspace::with_capacity(elems);
+            for v in ws2.take(elems).iter_mut() {
+                *v = f32::from_bits(0x5a5a5a5a);
+            }
+            let mut out = vec![f32::from_bits(0x3a3a3a3a); want.data().len()];
+            conv.run_fused_i8_into(
+                &input.view(),
+                None,
+                None,
+                Activation::Relu6,
+                &mut ws2,
+                &mut out,
+            )
+            .unwrap();
+            assert_eq!(ws2.grow_count(), 0, "stride {stride:?}: arena grew");
+            let same = out
+                .iter()
+                .zip(want.data())
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "stride {stride:?}: into/with must agree bitwise");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise() {
+        let pool = ThreadPool::new(4);
+        let input = Tensor::randn(&[1, 13, 14, 24], 81);
+        let weights = Tensor::randn(&[32, 1, 1, 24], 82);
+        for stride in [(1, 1), (2, 2)] {
+            let conv = QuantPointwiseConvolution::new(&weights, stride, (0, 0)).unwrap();
+            let mut ws = Workspace::new();
+            let a = conv
+                .run_fused_i8_with(&input, None, None, Activation::Relu, &mut ws)
+                .unwrap();
+            let b = conv
+                .run_fused_i8_with(&input, Some(&pool), None, Activation::Relu, &mut ws)
+                .unwrap();
+            assert_eq!(a.data(), b.data(), "stride {stride:?}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let w11 = Tensor::zeros(&[6, 1, 1, 4]);
+        assert!(QuantPointwiseConvolution::new(&Tensor::zeros(&[6, 3, 3, 4]), (1, 1), (0, 0))
+            .is_err());
+        assert!(QuantPointwiseConvolution::new(&w11, (1, 1), (1, 1)).is_err());
+        assert!(QuantPointwiseConvolution::new(&w11, (1, 2), (0, 0)).is_err());
+        let conv = QuantPointwiseConvolution::new(&w11, (1, 1), (0, 0)).unwrap();
+        let mut ws = Workspace::new();
+        // Channel mismatch, bad bias, bad out slice.
+        assert!(conv
+            .run_fused_i8_with(&Tensor::zeros(&[1, 8, 8, 5]), None, None, Activation::None, &mut ws)
+            .is_err());
+        let input = Tensor::zeros(&[1, 8, 8, 4]);
+        let mut out = vec![0.0; 8 * 8 * 6];
+        assert!(conv
+            .run_fused_i8_into(
+                &input.view(),
+                None,
+                Some(&[0.0; 3]),
+                Activation::None,
+                &mut ws,
+                &mut out,
+            )
+            .is_err());
+        assert!(conv
+            .run_fused_i8_into(&input.view(), None, None, Activation::None, &mut ws, &mut out[1..])
+            .is_err());
+    }
+}

@@ -23,12 +23,12 @@
 #[cfg(target_arch = "aarch64")]
 mod neon;
 #[cfg(target_arch = "aarch64")]
-pub use neon::F32x4;
+pub use neon::{qmacc_4x16, F32x4};
 
 #[cfg(not(target_arch = "aarch64"))]
 mod portable;
 #[cfg(not(target_arch = "aarch64"))]
-pub use portable::F32x4;
+pub use portable::{qmacc_4x16, F32x4};
 
 #[cfg(test)]
 mod tests {
@@ -129,6 +129,38 @@ mod tests {
         assert_eq!(a.horizontal_sum(), 3.0);
         let m = a.max(F32x4::zero());
         assert_eq!(m.to_array(), [1.0, 0.0, 3.5, 0.5]);
+    }
+
+    #[test]
+    fn qmacc_matches_scalar_i32() {
+        // Whichever backend is active must accumulate u8×i8 into i32
+        // exactly like the scalar triple loop — extremes included.
+        let a: [u8; 4] = [0, 1, 128, 255];
+        let mut b = [0i8; 16];
+        for (j, v) in b.iter_mut().enumerate() {
+            *v = ((j as i32 * 17) - 127).clamp(-127, 127) as i8;
+        }
+        b[15] = -127;
+        b[14] = 127;
+        let mut acc = [[0i32; 16]; 4];
+        acc[0][0] = 5;
+        acc[3][15] = -9;
+        let mut want = acc;
+        for r in 0..4 {
+            for j in 0..16 {
+                want[r][j] += a[r] as i32 * b[j] as i32;
+            }
+        }
+        qmacc_4x16(&mut acc, &a, &b);
+        assert_eq!(acc, want);
+        // A second step keeps accumulating (no overwrite semantics).
+        qmacc_4x16(&mut acc, &a, &b);
+        for r in 0..4 {
+            for j in 0..16 {
+                want[r][j] += a[r] as i32 * b[j] as i32;
+            }
+        }
+        assert_eq!(acc, want);
     }
 
     #[test]

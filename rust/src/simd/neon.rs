@@ -13,10 +13,11 @@
 //! scalar semantics.
 
 use core::arch::aarch64::{
-    float32x4_t, vaddq_f32, vaddvq_f32, vdupq_n_f32, vfmaq_f32, vfmaq_n_f32, vld1q_f32,
-    vmaxq_f32, vminq_f32, vmulq_f32, vmulq_n_f32, vnegq_f32, vreinterpretq_f32_f64,
-    vreinterpretq_f64_f32,
-    vst1q_f32, vsubq_f32, vtrn1q_f32, vtrn1q_f64, vtrn2q_f32, vtrn2q_f64,
+    float32x4_t, vaddq_f32, vaddvq_f32, vdup_n_s16, vdupq_n_f32, vfmaq_f32, vfmaq_n_f32,
+    vget_high_s16, vget_high_s8, vget_low_s16, vget_low_s8, vld1q_f32, vld1q_s32, vld1q_s8,
+    vmaxq_f32, vminq_f32, vmlal_s16, vmovl_s8, vmulq_f32, vmulq_n_f32, vnegq_f32,
+    vreinterpretq_f32_f64, vreinterpretq_f64_f32,
+    vst1q_f32, vst1q_s32, vsubq_f32, vtrn1q_f32, vtrn1q_f64, vtrn2q_f32, vtrn2q_f64,
 };
 use std::ops::{Add, AddAssign, Mul, Neg, Sub};
 
@@ -177,6 +178,44 @@ impl F32x4 {
                 vreinterpretq_f64_f32(cd_hi),
             ));
             [F32x4(r0), F32x4(r1), F32x4(r2), F32x4(r3)]
+        }
+    }
+}
+
+/// One k-step of the int8 micro-kernel: `acc[r][j] += a[r] * b[j]` with
+/// u8 activations, i8 weights and i32 accumulators, via the widening
+/// `smlal`-class NEON sequence: `vmovl_s8` widens the 16 weight bytes to
+/// two `int16x8_t`, each activation lane is `vdup_n_s16`-broadcast, and
+/// four `vmlal_s16` per row multiply-accumulate i16×i16 into the i32
+/// accumulator registers — twice the MACs per op of the f32 FMA path.
+///
+/// Activations fit i16 losslessly (u8 ≤ 255) and products stay ≤ 32385, so
+/// the widening multiply is exact.
+#[inline(always)]
+pub fn qmacc_4x16(acc: &mut [[i32; 16]; 4], a: &[u8; 4], b: &[i8; 16]) {
+    // SAFETY: NEON is baseline on aarch64; every pointer load/store below
+    // reads or writes exactly the fixed-size arrays passed in (`b` is 16
+    // bytes, each `acc` row is 16 i32s accessed as four aligned-by-type
+    // quadwords at offsets 0/4/8/12).
+    unsafe {
+        let bq = vld1q_s8(b.as_ptr());
+        let b_lo = vmovl_s8(vget_low_s8(bq)); // weight lanes 0..8 as i16
+        let b_hi = vmovl_s8(vget_high_s8(bq)); // weight lanes 8..16 as i16
+        for (row, &av) in acc.iter_mut().zip(a.iter()) {
+            let a16 = vdup_n_s16(av as i16);
+            let p = row.as_mut_ptr();
+            let mut c0 = vld1q_s32(p);
+            let mut c1 = vld1q_s32(p.add(4));
+            let mut c2 = vld1q_s32(p.add(8));
+            let mut c3 = vld1q_s32(p.add(12));
+            c0 = vmlal_s16(c0, vget_low_s16(b_lo), a16);
+            c1 = vmlal_s16(c1, vget_high_s16(b_lo), a16);
+            c2 = vmlal_s16(c2, vget_low_s16(b_hi), a16);
+            c3 = vmlal_s16(c3, vget_high_s16(b_hi), a16);
+            vst1q_s32(p, c0);
+            vst1q_s32(p.add(4), c1);
+            vst1q_s32(p.add(8), c2);
+            vst1q_s32(p.add(12), c3);
         }
     }
 }

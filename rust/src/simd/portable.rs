@@ -139,6 +139,25 @@ impl F32x4 {
     }
 }
 
+/// One k-step of the int8 micro-kernel: `acc[r][j] += a[r] * b[j]` with
+/// u8 activations, i8 weights and i32 accumulators — the portable twin of
+/// the NEON `smlal`-class widening multiply-accumulate.
+///
+/// The products are formed in `i16` (`255 * 127 = 32385` fits with room to
+/// spare), which LLVM autovectorizes to `pmullw`/`pmaddwd`-class SSE2
+/// instructions — baseline x86-64 has no fast `i32` vector multiply
+/// (`pmulld` is SSE4.1), so widening through `i16` is what keeps this
+/// kernel competitive with the f32 FMA path on old cores too.
+#[inline(always)]
+pub fn qmacc_4x16(acc: &mut [[i32; 16]; 4], a: &[u8; 4], b: &[i8; 16]) {
+    for (row, &av) in acc.iter_mut().zip(a.iter()) {
+        let av = av as i16;
+        for (dst, &bv) in row.iter_mut().zip(b.iter()) {
+            *dst += (av * bv as i16) as i32;
+        }
+    }
+}
+
 impl Add for F32x4 {
     type Output = F32x4;
     #[inline(always)]

@@ -137,6 +137,20 @@ mod tests {
         assert!(a.get_parse_or("reps", 1usize).is_err());
     }
 
+    /// `get_parse_or` works for any FromStr — including crate enums like
+    /// the quantization [`Dtype`](crate::quant::Dtype) behind `--dtype`.
+    #[test]
+    fn typed_getter_parses_enums() {
+        use crate::quant::Dtype;
+        let a = parse(&["--dtype", "int8"], &[]);
+        assert_eq!(a.get_parse_or("dtype", Dtype::F32).unwrap(), Dtype::Int8);
+        let a = parse(&[], &[]);
+        assert_eq!(a.get_parse_or("dtype", Dtype::F32).unwrap(), Dtype::F32);
+        let a = parse(&["--dtype=int4"], &[]);
+        let e = a.get_parse_or("dtype", Dtype::F32).unwrap_err();
+        assert!(e.to_string().contains("--dtype"), "error names the option: {e}");
+    }
+
     #[test]
     fn missing_value_is_error() {
         let r = Args::parse(["--threads".to_string()].into_iter(), &[]);

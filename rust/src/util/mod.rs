@@ -42,6 +42,47 @@ pub fn rel_error(actual: &[f32], reference: &[f32]) -> f32 {
     max_abs_diff(actual, reference) / scale
 }
 
+/// Round to the nearest integer, ties to even (IEEE 754 `roundTiesToEven`).
+///
+/// The exact branchy scalar **reference** for the quantized pipeline: the
+/// hot requantize paths use [`fast_round_half_even`] and the property tests
+/// pin them against this function.
+#[inline]
+pub fn round_half_even(x: f32) -> f32 {
+    if !x.is_finite() || x.abs() >= 8_388_608.0 {
+        // Every finite f32 at or beyond 2²³ is already an integer; NaN and
+        // the infinities pass through like `f32::round`.
+        return x;
+    }
+    let f = x.floor();
+    let d = x - f;
+    if d < 0.5 {
+        f
+    } else if d > 0.5 {
+        f + 1.0
+    } else if (f as i64) % 2 == 0 {
+        f
+    } else {
+        f + 1.0
+    }
+}
+
+/// Branch-free round-half-to-even via the classic magic-number trick:
+/// adding `1.5 × 2²³` forces the FPU (default rounding mode is
+/// round-to-nearest-even) to discard the fraction bits; subtracting it
+/// back leaves the rounded value.
+///
+/// Exact for `|x| < 2²²` — far beyond any value a saturating int8
+/// requantize can produce inside its clamp range. Outside that range the
+/// result drifts by at most a few ULPs of magnitude, which the clamp in
+/// every caller absorbs (the property tests in `quant` rely on exactly
+/// this). Unlike `f32::round` this compiles to two adds, not a libm call.
+#[inline(always)]
+pub fn fast_round_half_even(x: f32) -> f32 {
+    const MAGIC: f32 = 12_582_912.0; // 1.5 * 2^23
+    (x + MAGIC) - MAGIC
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -68,5 +109,40 @@ mod tests {
         let a = [100.0, 200.0];
         let b = [100.0, 201.0];
         assert!((rel_error(&a, &b) - 1.0 / 201.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn round_half_even_reference() {
+        // Ties go to the even neighbour, both signs.
+        assert_eq!(round_half_even(0.5), 0.0);
+        assert_eq!(round_half_even(1.5), 2.0);
+        assert_eq!(round_half_even(2.5), 2.0);
+        assert_eq!(round_half_even(-0.5), 0.0);
+        assert_eq!(round_half_even(-1.5), -2.0);
+        assert_eq!(round_half_even(-2.5), -2.0);
+        // Non-ties round to nearest as usual.
+        assert_eq!(round_half_even(1.49), 1.0);
+        assert_eq!(round_half_even(1.51), 2.0);
+        assert_eq!(round_half_even(-1.49), -1.0);
+        assert_eq!(round_half_even(-1.51), -2.0);
+        // Large magnitudes are already integral.
+        assert_eq!(round_half_even(1.0e9), 1.0e9);
+        assert!(round_half_even(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn fast_round_matches_reference_in_validity_range() {
+        // Dense sweep near zero plus tie points and larger magnitudes.
+        for i in -4000i32..=4000 {
+            let x = i as f32 * 0.125; // hits every .5 tie exactly
+            assert_eq!(
+                fast_round_half_even(x),
+                round_half_even(x),
+                "x = {x}"
+            );
+        }
+        for &x in &[1234.5f32, -1234.5, 65535.5, -65535.5, 1.0e6 + 0.5] {
+            assert_eq!(fast_round_half_even(x), round_half_even(x), "x = {x}");
+        }
     }
 }

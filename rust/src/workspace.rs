@@ -38,6 +38,17 @@
 //! assert_eq!(ws.grow_count(), 1); // reuse does not grow
 //! ```
 
+/// `f32` elements needed to hold `bytes` bytes of non-f32 scratch —
+/// the mixed-dtype sizing rule of the arena. The quantized engines
+/// ([`crate::quant`]) borrow f32 slices and reinterpret them as byte
+/// buffers (u8 staging, i8 panels), so their byte budgets must be ceiled
+/// into 4-byte units **before** they are summed into `workspace_elems()`;
+/// flooring would undersize the arena and break the grow-count = 0
+/// invariant on quantized walks.
+pub fn elems_for_bytes(bytes: usize) -> usize {
+    bytes.div_ceil(std::mem::size_of::<f32>())
+}
+
 /// A growable flat `f32` arena handed out as per-layer scratch slices.
 #[derive(Debug, Default)]
 pub struct Workspace {
@@ -161,6 +172,16 @@ mod tests {
         let (a, b) = ws.split2(5, 7);
         assert!(a.iter().all(|&v| v == 1.0));
         assert!(b.iter().all(|&v| v == 2.0));
+    }
+
+    #[test]
+    fn elems_for_bytes_rounds_up() {
+        assert_eq!(elems_for_bytes(0), 0);
+        assert_eq!(elems_for_bytes(1), 1);
+        assert_eq!(elems_for_bytes(4), 1);
+        assert_eq!(elems_for_bytes(5), 2);
+        assert_eq!(elems_for_bytes(8), 2);
+        assert_eq!(elems_for_bytes(1023), 256);
     }
 
     #[test]

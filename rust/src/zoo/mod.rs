@@ -118,6 +118,18 @@ impl ModelKind {
         }
     }
 
+    /// The models the quantized (int8) evaluation covers: the mobile-CPU
+    /// targets whose layer mix (depthwise / pointwise / small dense 3×3)
+    /// maps 1:1 onto the int8 engine set. The legacy large nets stay
+    /// f32-only in the tables — their 5×5/7×7/1×7 layers are exactly the
+    /// Winograd-suitable shapes whose int8 twin would be plain im2row.
+    pub fn quantizable(&self) -> bool {
+        matches!(
+            self,
+            ModelKind::MobileNetV1 | ModelKind::MobileNetV2 | ModelKind::ResNet18
+        )
+    }
+
     /// Build the graph with deterministic weights derived from `seed`.
     pub fn build(&self, seed: u64) -> Result<Graph> {
         match self {

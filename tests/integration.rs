@@ -9,6 +9,7 @@ use winoconv::coordinator::{EngineConfig, InferenceEngine};
 use winoconv::im2row::im2row_conv2d;
 use winoconv::nn::{PreparedModel, Scheme};
 use winoconv::parallel::ThreadPool;
+use winoconv::quant::Dtype;
 use winoconv::tensor::Tensor;
 use winoconv::testkit::{check, Gen};
 use winoconv::winograd::{winograd_conv2d, WinogradConvolution, WinogradVariant};
@@ -183,6 +184,85 @@ fn mobilenets_planned_path_is_allocation_free() {
         let (y_base, _) = base.run(&input, Some(&pool)).unwrap();
         assert_eq!(y_base.data(), want.data(), "{model}: schemes must bind identically");
     }
+}
+
+/// Quantized MobileNetV1 end-to-end: every conv binds an int8 engine with
+/// an exact dispatch census (13 depthwise + 13 pointwise + the dense
+/// stem), the planned write-into path is allocation-free and bit-identical
+/// to `run()`, both schemes bind int8 identically, and the output stays a
+/// valid softmax distribution within the drift budget of the f32 oracle.
+#[test]
+fn quantized_mobilenet_planned_path_is_allocation_free() {
+    let pool = ThreadPool::new(2);
+    let model = ModelKind::MobileNetV1;
+    assert!(model.quantizable());
+    let graph = model.build(3).unwrap();
+    let shape = model.input_shape(1);
+    let input = Tensor::randn(&shape, 19);
+    let prepared = PreparedModel::prepare_with_dtype(
+        model.name(),
+        &graph,
+        &shape,
+        Scheme::WinogradWhereSuitable,
+        Dtype::Int8,
+    )
+    .unwrap();
+    let census = prepared.dispatch_census();
+    assert_eq!(census.depthwise_i8, 13);
+    assert_eq!(census.pointwise_i8, 13);
+    assert_eq!(census.im2row_i8, 1, "the stem 3x3/s2 is the only dense spatial conv");
+    assert_eq!(census.total(), 27, "every conv dispatches through an int8 lane");
+
+    let (want, timings) = prepared.run(&input, Some(&pool)).unwrap();
+    assert_eq!(want.shape(), &[1, 1000]);
+    let s: f32 = want.data().iter().sum();
+    assert!((s - 1.0).abs() < 1e-3, "softmax distribution");
+    assert!(timings.iter().all(|t| !t.winograd));
+
+    let plan = prepared.activation_plan();
+    assert!(plan.peak_elems() < plan.naive_elems(), "planner found no sharing");
+    let mut ws = Workspace::with_capacity(prepared.workspace_elems());
+    let mut acts = Workspace::with_capacity(plan.peak_elems());
+    let mut out = vec![f32::NAN; want.len()];
+    for _ in 0..2 {
+        prepared
+            .run_planned_into(&input, Some(&pool), &mut ws, &mut acts, &mut out)
+            .unwrap();
+        assert_eq!(out, want.data(), "planned-into differs from run()");
+    }
+    assert_eq!(ws.grow_count(), 0, "scratch arena grew");
+    assert_eq!(acts.grow_count(), 0, "activation arena grew");
+    assert_eq!(prepared.fallback_count(), 0, "fallback taken");
+    // 3 completed walks × the static census, all in the int8 lanes.
+    let counts = prepared.dispatch_counts();
+    assert_eq!(counts.depthwise_i8, 3 * 13);
+    assert_eq!(counts.pointwise_i8, 3 * 13);
+    assert_eq!(counts.im2row_i8, 3);
+    assert_eq!(counts.total(), 3 * census.total());
+
+    // Int8 binds identically on both schemes → bit-identical outputs.
+    let base = PreparedModel::prepare_with_dtype(
+        model.name(),
+        &graph,
+        &shape,
+        Scheme::Im2RowOnly,
+        Dtype::Int8,
+    )
+    .unwrap();
+    let (y_base, _) = base.run(&input, Some(&pool)).unwrap();
+    assert_eq!(y_base.data(), want.data(), "schemes must bind int8 identically");
+
+    // Whole-network drift vs the f32 oracle stays inside the calibrated
+    // budget (see the table1 smoke gate for the derivation of 0.25).
+    let f32_m = PreparedModel::prepare(model.name(), &graph, &shape, Scheme::Im2RowOnly).unwrap();
+    let (oracle, _) = f32_m.run(&input, Some(&pool)).unwrap();
+    let peak = oracle.data().iter().fold(0f32, |a, &v| a.max(v.abs())).max(1e-12);
+    let drift = want
+        .data()
+        .iter()
+        .zip(oracle.data())
+        .fold(0f32, |a, (&x, &y)| a.max((x - y).abs()));
+    assert!(drift <= 0.25 * peak, "int8 drift {drift} vs f32 peak {peak}");
 }
 
 /// GoogleNet end-to-end through branches/concats/LRN under the Winograd
