@@ -1,0 +1,355 @@
+//! **Batch ablation**: one batched GEMM sweep over `[N, H, W, C]` vs `N`
+//! back-to-back batch-1 walks of the same engine on the same frames.
+//!
+//! The claim under test is the tentpole amortization model: with the
+//! frames gathered contiguously, every layer's packed weight panel (the
+//! GEMM B side) streams through cache **once for all N frames** instead of
+//! once per frame, while the packed-A side (patch rows, Winograd regions,
+//! NHWC rows) simply carries N× the rows. The math per output row is
+//! unchanged, so the two paths must agree **bit for bit** — the batched
+//! sweep is pure bandwidth/overhead savings, never a numerics trade.
+//!
+//! Workload: the unique Winograd-suitable ("fast") layers plus the unique
+//! 1×1 and depthwise layers of a model (default VGG-16, another via
+//! `--model`), at `--batch N` (default 4).
+//!
+//! `--smoke` runs shrunk VGG-16-shaped fast layers and a shrunk
+//! MobileNetV2-shaped bottleneck (expand 1×1 → depthwise 3×3 → project
+//! 1×1) at N ∈ {2, 4, 8} with correctness asserts (batched == N × batch-1
+//! **bit-for-bit**, pre-sized arenas never grow) and **fails unless** the
+//! batched sweep strictly beats the N sequential walks on every
+//! weight-panel-bound layer (the winograd/pointwise GEMMs; the depthwise
+//! layer has no shared B panel to amortise, so it is reported, not gated)
+//! — the CI gate wired into `ci.sh`.
+
+use winoconv::bench::workloads::{
+    unique_depthwise_layers, unique_fast_layers, unique_pointwise_layers, LayerSpec,
+};
+use winoconv::bench::{measure, ms, BenchConfig, Table};
+use winoconv::conv::depthwise::DepthwiseConvolution;
+use winoconv::conv::pointwise::PointwiseConvolution;
+use winoconv::conv::Activation;
+use winoconv::im2row::Im2RowConvolution;
+use winoconv::parallel::ThreadPool;
+use winoconv::tensor::{Tensor, TensorView};
+use winoconv::util::cli::Args;
+use winoconv::winograd::{WinogradConvolution, WinogradVariant};
+use winoconv::workspace::Workspace;
+use winoconv::zoo::ModelKind;
+
+/// The engine a layer spec binds for this ablation — mirrors the prepared
+/// model's selector: depthwise → direct depthwise, dense 1×1 → zero-copy
+/// pointwise, fast 3×3 → Winograd F(4×4, 3×3), everything else → im2row.
+enum Engine {
+    Wino(WinogradConvolution),
+    Pw(PointwiseConvolution),
+    Dw(DepthwiseConvolution),
+    Im2Row(Im2RowConvolution),
+}
+
+impl Engine {
+    fn bind(spec: &LayerSpec) -> winoconv::Result<Engine> {
+        let weights = spec.weights(42);
+        Ok(if spec.depthwise() {
+            Engine::Dw(DepthwiseConvolution::new(&weights, spec.stride, spec.pad)?)
+        } else if spec.pointwise() {
+            Engine::Pw(PointwiseConvolution::new(&weights, spec.stride, spec.pad)?)
+        } else if spec.fast() && spec.kernel == (3, 3) {
+            Engine::Wino(WinogradConvolution::new(
+                WinogradVariant::F4x4_3x3,
+                &weights,
+                spec.pad,
+            )?)
+        } else {
+            Engine::Im2Row(Im2RowConvolution::new(&weights, spec.stride, spec.pad)?)
+        })
+    }
+
+    fn label(&self) -> &'static str {
+        match self {
+            Engine::Wino(_) => "winograd",
+            Engine::Pw(_) => "pointwise",
+            Engine::Dw(_) => "depthwise",
+            Engine::Im2Row(_) => "im2row",
+        }
+    }
+
+    fn output_hw(&self, h: usize, w: usize) -> winoconv::Result<(usize, usize)> {
+        match self {
+            Engine::Wino(c) => c.output_hw(h, w),
+            Engine::Pw(c) => c.output_hw(h, w),
+            Engine::Dw(c) => c.output_hw(h, w),
+            Engine::Im2Row(c) => c.output_hw(h, w),
+        }
+    }
+
+    fn workspace_elems_for(&self, n: usize, h: usize, w: usize) -> winoconv::Result<usize> {
+        match self {
+            Engine::Wino(c) => c.workspace_elems_for(n, h, w),
+            Engine::Pw(c) => c.workspace_elems_for(n, h, w),
+            Engine::Dw(c) => c.workspace_elems_for(n, h, w),
+            Engine::Im2Row(c) => c.workspace_elems_for(n, h, w),
+        }
+    }
+
+    fn run_into(
+        &self,
+        input: &TensorView,
+        pool: &ThreadPool,
+        bias: &[f32],
+        act: Activation,
+        ws: &mut Workspace,
+        out: &mut [f32],
+    ) -> winoconv::Result<()> {
+        match self {
+            Engine::Wino(c) => c.run_fused_into(input, Some(pool), Some(bias), act, ws, out),
+            Engine::Pw(c) => c.run_fused_into(input, Some(pool), Some(bias), act, ws, out),
+            Engine::Dw(c) => c.run_fused_into(input, Some(pool), Some(bias), act, ws, out),
+            Engine::Im2Row(c) => c.run_fused_into(input, Some(pool), Some(bias), act, ws, out),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_batched_into(
+        &self,
+        batch: &TensorView,
+        nb: usize,
+        pool: &ThreadPool,
+        bias: &[f32],
+        act: Activation,
+        ws: &mut Workspace,
+        out: &mut [f32],
+    ) -> winoconv::Result<()> {
+        match self {
+            Engine::Wino(c) => {
+                c.run_fused_batched_into(batch, nb, Some(pool), Some(bias), act, ws, out)
+            }
+            Engine::Pw(c) => {
+                c.run_fused_batched_into(batch, nb, Some(pool), Some(bias), act, ws, out)
+            }
+            Engine::Dw(c) => {
+                c.run_fused_batched_into(batch, nb, Some(pool), Some(bias), act, ws, out)
+            }
+            Engine::Im2Row(c) => {
+                c.run_fused_batched_into(batch, nb, Some(pool), Some(bias), act, ws, out)
+            }
+        }
+    }
+}
+
+/// One batched sweep vs `nb` back-to-back batch-1 walks on one layer.
+/// Returns `(sequential, batched)` median seconds; with `check` set,
+/// asserts the two paths agree bit-for-bit and neither pre-sized arena
+/// grows.
+fn bench_batched_layer(
+    spec: &LayerSpec,
+    nb: usize,
+    cfg: &BenchConfig,
+    pool: &ThreadPool,
+    check: bool,
+) -> winoconv::Result<(f64, f64, &'static str)> {
+    let (h, w, c) = (spec.input_shape[1], spec.input_shape[2], spec.cin);
+    let engine = Engine::bind(spec)?;
+    let (oh, ow) = engine.output_hw(h, w)?;
+    let act = Activation::Relu;
+    let bias: Vec<f32> = Tensor::randn(&[spec.cout], 43).into_vec();
+    let batch = Tensor::randn(&[nb, h, w, c], 44);
+    let frame_in = h * w * c;
+    let frame_out = oh * ow * spec.cout;
+    let frame_shape = [1usize, h, w, c];
+    let mut out_seq = vec![f32::NAN; nb * frame_out];
+    let mut out_bat = vec![f32::NAN; nb * frame_out];
+    let mut ws_seq = Workspace::with_capacity(engine.workspace_elems_for(1, h, w)?);
+    let mut ws_bat = Workspace::with_capacity(engine.workspace_elems_for(nb, h, w)?);
+
+    // The N back-to-back batch-1 walks the engine used to serve: each
+    // frame re-streams every packed weight panel through cache.
+    let sequential = |ws: &mut Workspace, out: &mut [f32]| -> winoconv::Result<()> {
+        for f in 0..nb {
+            let fv = TensorView::new(
+                &frame_shape,
+                &batch.data()[f * frame_in..(f + 1) * frame_in],
+            )?;
+            engine.run_into(&fv, pool, &bias, act, ws, &mut out[f * frame_out..(f + 1) * frame_out])?;
+        }
+        Ok(())
+    };
+
+    if check {
+        sequential(&mut ws_seq, &mut out_seq)?;
+        engine.run_batched_into(&batch.view(), nb, pool, &bias, act, &mut ws_bat, &mut out_bat)?;
+        assert_eq!(
+            out_bat, out_seq,
+            "{} N={nb}: batched sweep and sequential walks must agree bit-for-bit",
+            spec.name
+        );
+        assert_eq!(ws_seq.grow_count(), 0, "{}: pre-sized batch-1 arena grew", spec.name);
+        assert_eq!(ws_bat.grow_count(), 0, "{}: pre-sized batched arena grew", spec.name);
+    }
+
+    let bat = measure(cfg, || {
+        engine
+            .run_batched_into(&batch.view(), nb, pool, &bias, act, &mut ws_bat, &mut out_bat)
+            .unwrap();
+    });
+    let seq = measure(cfg, || {
+        sequential(&mut ws_seq, &mut out_seq).unwrap();
+    });
+    Ok((seq.median, bat.median, engine.label()))
+}
+
+fn vgg_shaped(name: &str, hw: usize, cin: usize, cout: usize) -> LayerSpec {
+    LayerSpec {
+        model: ModelKind::Vgg16,
+        name: name.to_string(),
+        input_shape: vec![1, hw, hw, cin],
+        cin,
+        cout,
+        kernel: (3, 3),
+        stride: (1, 1),
+        pad: (1, 1),
+        groups: 1,
+    }
+}
+
+fn mb2_pw(name: &str, hw: usize, cin: usize, cout: usize) -> LayerSpec {
+    LayerSpec {
+        model: ModelKind::MobileNetV2,
+        name: name.to_string(),
+        input_shape: vec![1, hw, hw, cin],
+        cin,
+        cout,
+        kernel: (1, 1),
+        stride: (1, 1),
+        pad: (0, 0),
+        groups: 1,
+    }
+}
+
+fn mb2_dw(name: &str, hw: usize, c: usize) -> LayerSpec {
+    LayerSpec {
+        model: ModelKind::MobileNetV2,
+        name: name.to_string(),
+        input_shape: vec![1, hw, hw, c],
+        cin: c,
+        cout: c,
+        kernel: (3, 3),
+        stride: (1, 1),
+        pad: (1, 1),
+        groups: c,
+    }
+}
+
+/// `--smoke`: the CI gate. Shrunk VGG-16-shaped fast layers and a shrunk
+/// MobileNetV2-shaped bottleneck at N ∈ {2, 4, 8}: bitwise-identity and
+/// arena asserts always, strictly-faster asserts on every
+/// weight-panel-bound layer.
+fn smoke(pool: &ThreadPool) -> winoconv::Result<()> {
+    let cfg = BenchConfig::quick();
+    let layers = [
+        vgg_shaped("vgg_conv3_2", 28, 128, 128),
+        vgg_shaped("vgg_conv4_2", 14, 256, 256),
+        mb2_pw("mb2_expand", 14, 32, 192),
+        mb2_dw("mb2_dw3x3", 14, 192),
+        mb2_pw("mb2_project", 14, 192, 32),
+    ];
+    for nb in [2usize, 4, 8] {
+        for spec in &layers {
+            let (seq, bat, engine) = bench_batched_layer(spec, nb, &cfg, pool, true)?;
+            let gated = engine != "depthwise";
+            println!(
+                "smoke {} [{engine}] N={nb}: {}x batch-1 {} ms -> batched {} ms ({:.2}x{})",
+                spec.name,
+                nb,
+                ms(seq),
+                ms(bat),
+                seq / bat,
+                if gated { "" } else { ", not gated" },
+            );
+            if gated {
+                assert!(
+                    bat < seq,
+                    "smoke {} N={nb}: batched sweep ({} ms) must strictly beat {} back-to-back \
+                     batch-1 walks ({} ms)",
+                    spec.name,
+                    ms(bat),
+                    nb,
+                    ms(seq)
+                );
+            }
+        }
+    }
+    println!(
+        "smoke ok: batched GEMM sweep strictly beats N back-to-back batch-1 walks \
+         (bitwise-identical) on VGG-16 fast layers and the MobileNetV2 bottleneck at N in {{2,4,8}}"
+    );
+    Ok(())
+}
+
+fn main() -> winoconv::Result<()> {
+    let args = Args::from_env(&["quick", "bench", "smoke"])?;
+    let threads: usize = args.get_parse_or(
+        "threads",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    )?;
+    let pool = ThreadPool::new(threads);
+    if args.flag("smoke") {
+        return smoke(&pool);
+    }
+    let cfg = if args.flag("quick") { BenchConfig::quick() } else { BenchConfig::from_env() };
+    let nb: usize = args.get_parse_or("batch", 4)?;
+    if nb < 2 {
+        return Err(winoconv::Error::Config("--batch must be at least 2".into()));
+    }
+
+    let model = match args.get("model") {
+        Some(name) => ModelKind::parse(name)
+            .ok_or_else(|| winoconv::Error::Config(format!("unknown model {name:?}")))?,
+        None => ModelKind::Vgg16,
+    };
+
+    let mut layers: Vec<(LayerSpec, usize)> = unique_fast_layers(model, 1)?;
+    layers.extend(unique_pointwise_layers(model, 1)?);
+    layers.extend(unique_depthwise_layers(model, 1)?);
+    if layers.is_empty() {
+        println!("{model} has no conv layers this ablation covers; try --model vgg16");
+        return Ok(());
+    }
+    let mut table = Table::new(
+        &format!("{model}: batched sweep vs {nb}x batch-1 walks ({threads} thread(s))"),
+        &["layer", "engine", "shape", "N", "seq ms", "batched ms", "speedup", "count"],
+    );
+    for (spec, count) in &layers {
+        let (seq, bat, engine) = bench_batched_layer(spec, nb, &cfg, &pool, true)?;
+        eprintln!(
+            "  {:<24} {:<9} {:>3}x{:<3} {:>4}->{:<4} N={nb} {:>8} -> {:>8} ms  {:.2}x",
+            spec.name,
+            engine,
+            spec.input_shape[1],
+            spec.input_shape[2],
+            spec.cin,
+            spec.cout,
+            ms(seq),
+            ms(bat),
+            seq / bat
+        );
+        table.row(&[
+            spec.name.clone(),
+            engine.to_string(),
+            format!("{}x{}x{}", spec.input_shape[1], spec.input_shape[2], spec.cin),
+            format!("{nb}"),
+            ms(seq),
+            ms(bat),
+            format!("{:.2}x", seq / bat),
+            format!("{count}"),
+        ]);
+    }
+    table.print();
+    println!(
+        "expectation: every weight-panel-bound engine (winograd / im2row /\n\
+         pointwise) wins — the batched sweep streams each packed B panel\n\
+         through cache once for all N frames — while depthwise only saves\n\
+         per-call overhead (no shared panel to amortise)."
+    );
+    Ok(())
+}

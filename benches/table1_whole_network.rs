@@ -11,7 +11,7 @@ use winoconv::bench::{ms, Table};
 use winoconv::nn::{ActivationPlan, PreparedModel, Scheme};
 use winoconv::parallel::ThreadPool;
 use winoconv::quant::Dtype;
-use winoconv::tensor::Tensor;
+use winoconv::tensor::{Tensor, TensorView};
 use winoconv::util::cli::Args;
 use winoconv::workspace::Workspace;
 use winoconv::zoo::ModelKind;
@@ -28,7 +28,11 @@ use winoconv::zoo::ModelKind;
 /// residual-fusion savings in the activation plan. A final int8 pass runs
 /// the quantizable models (MobileNetV1/V2, ResNet-18) end-to-end at
 /// `Dtype::Int8`, pinning the int8 dispatch census and the accuracy drift
-/// vs the f32 oracle.
+/// vs the f32 oracle. A batched pass then runs SqueezeNet and MobileNetV2
+/// through `prepare_batched(4)` / `run_planned_batched_into`, pinning the
+/// census x N dispatch accounting, grow-count 0 / fallback-count 0 on the
+/// N-scaled arenas, and bitwise equality of every batch row against the
+/// batch-1 planned walk on the same frame.
 fn smoke(pool: &ThreadPool) -> winoconv::Result<()> {
     let mut table = Table::new(
         "activation memory plan per zoo model (batch 1)",
@@ -213,6 +217,79 @@ fn smoke(pool: &ThreadPool) -> winoconv::Result<()> {
             model.display(),
             drift / peak,
             counts,
+        );
+    }
+
+    // Batched gate: a prepared model scaled to N frames must run the whole
+    // network in one planned walk per batch — every dispatch advances the
+    // counters by census x N, the N-scaled arenas never grow, the run()
+    // fallback is never taken, and each batch row is bit-identical to the
+    // batch-1 planned walk over the same frame (batching reorders nothing;
+    // it only widens the GEMM sweeps over a shared weight panel).
+    let nb = 4usize;
+    for model in [ModelKind::SqueezeNet, ModelKind::MobileNetV2] {
+        let graph = model.build(1)?;
+        let shape = model.input_shape(1);
+        let prepared =
+            PreparedModel::prepare(model.name(), &graph, &shape, Scheme::WinogradWhereSuitable)?;
+        let batch = prepared.prepare_batched(nb)?;
+        let frame_in: usize = shape.iter().product();
+        let frame_out: usize = prepared.output_shape().iter().product();
+        assert_eq!(
+            batch.peak_elems(),
+            prepared.activation_plan().peak_elems() * nb,
+            "smoke {model} batched: plan slots must scale linearly with N"
+        );
+
+        // Reference: each frame through the batch-1 planned path.
+        let mut ws1 = Workspace::with_capacity(prepared.workspace_elems());
+        let mut acts1 = Workspace::with_capacity(prepared.activation_plan().peak_elems());
+        let mut input = Tensor::zeros(batch.input_shape());
+        let mut want = vec![f32::NAN; nb * frame_out];
+        for f in 0..nb {
+            let frame = Tensor::randn(&shape, 100 + f as u64);
+            input.data_mut()[f * frame_in..(f + 1) * frame_in].copy_from_slice(frame.data());
+            prepared.run_planned_into(
+                &frame,
+                Some(pool),
+                &mut ws1,
+                &mut acts1,
+                &mut want[f * frame_out..(f + 1) * frame_out],
+            )?;
+        }
+
+        let before = prepared.dispatch_counts().total();
+        let mut ws = Workspace::with_capacity(batch.workspace_elems());
+        let mut acts = Workspace::with_capacity(batch.peak_elems());
+        let mut got = vec![f32::NAN; nb * frame_out];
+        for _ in 0..2 {
+            let view = TensorView::new(batch.input_shape(), input.data())?;
+            prepared.run_planned_batched_into(
+                &batch,
+                &view,
+                Some(pool),
+                &mut ws,
+                &mut acts,
+                &mut got,
+            )?;
+        }
+        assert_eq!(ws.grow_count(), 0, "smoke {model} batched: scratch arena grew");
+        assert_eq!(acts.grow_count(), 0, "smoke {model} batched: activation arena grew");
+        assert_eq!(prepared.fallback_count(), 0, "smoke {model} batched: run() fallback taken");
+        let census = prepared.dispatch_census();
+        assert_eq!(
+            prepared.dispatch_counts().total() - before,
+            2 * nb as u64 * census.total(),
+            "smoke {model} batched: dispatch accounting must advance by census x N"
+        );
+        assert!(
+            got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "smoke {model} batched: batch rows must be bit-identical to batch-1 walks"
+        );
+        println!(
+            "smoke ok: {} batched N={nb}, one planned walk per batch, census x N dispatch, \
+             grow-count 0, fallback-count 0, rows bitwise == batch-1",
+            model.display(),
         );
     }
     Ok(())

@@ -32,7 +32,9 @@ run cargo bench --bench ablation_amortization -- --smoke
 # sum-of-all-intermediates on every zoo model (MobileNets included), and
 # SqueezeNet + MobileNetV1/V2 runs over pre-sized arenas must stay at
 # grow-count 0 / fallback-count 0 — a steady-state-allocation or
-# peak-memory regression fails CI too.
+# peak-memory regression fails CI too. Also pins the int8 end-to-end pass
+# and the batched (N=4) planned pass: census x N dispatch accounting,
+# grow-count 0 on the N-scaled arenas, batch rows bitwise == batch-1.
 run cargo bench --bench table1_whole_network -- --smoke
 
 # Depthwise gate: the direct register-tiled depthwise engine must keep
@@ -53,6 +55,13 @@ run cargo bench --bench ablation_pointwise -- --smoke
 # identical dense 3x3 shapes, with int8 outputs tracking the f32 oracle
 # within the subsystem's rel-error budget over grow-count-0 arenas.
 run cargo bench --bench ablation_quant -- --smoke
+
+# Batching gate: one batched GEMM sweep over [N, H, W, C] must keep
+# strictly beating N back-to-back batch-1 walks, bit-identically, on
+# VGG-16-shaped fast layers and a MobileNetV2-shaped bottleneck at
+# N in {2, 4, 8}, over grow-count-0 arenas (the depthwise layer has no
+# shared weight panel to amortise and is reported, not gated).
+run cargo bench --bench ablation_batch -- --smoke
 
 if [[ "${1:-}" != "--no-lint" ]]; then
     if cargo fmt --version >/dev/null 2>&1; then

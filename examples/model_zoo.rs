@@ -4,7 +4,7 @@
 //! structural sanity check of the whole stack.
 //!
 //! ```sh
-//! cargo run --release --example model_zoo -- [--model resnet-50] [--threads 4] [--dtype int8]
+//! cargo run --release --example model_zoo -- [--model resnet-50] [--threads 4] [--dtype int8] [--batch 4]
 //! ```
 //! Without `--model`, only the small models run (VGG/Inception take
 //! minutes in a debug-ish environment; use the benches for full tables).
@@ -18,14 +18,19 @@ use winoconv::bench::{ms, Table};
 use winoconv::nn::{PreparedModel, Scheme};
 use winoconv::parallel::ThreadPool;
 use winoconv::quant::Dtype;
-use winoconv::tensor::Tensor;
+use winoconv::tensor::{Tensor, TensorView};
 use winoconv::util::cli::Args;
+use winoconv::workspace::Workspace;
 use winoconv::zoo::ModelKind;
 
 fn main() -> winoconv::Result<()> {
     let args = Args::from_env(&[])?;
     let threads: usize = args.get_parse_or("threads", 4)?;
     let dtype: Dtype = args.get_parse_or("dtype", Dtype::F32)?;
+    let batch: usize = args.get_parse_or("batch", 1)?;
+    if batch == 0 {
+        return Err(winoconv::Error::Config("--batch must be at least 1".into()));
+    }
     let pool = ThreadPool::new(threads);
 
     let models: Vec<ModelKind> = match args.get("model") {
@@ -109,6 +114,37 @@ fn main() -> winoconv::Result<()> {
             ms(totals.1),
             (1.0 - totals.1 / totals.0) * 100.0
         );
+
+        // `--batch N`: one batched planned walk sweeps all N frames through
+        // each layer's shared weight panel — compare the amortised per-frame
+        // time against the batch-1 walk above.
+        if batch > 1 {
+            let prepared = PreparedModel::prepare_with_dtype(
+                model.name(),
+                &graph,
+                &shape,
+                Scheme::WinogradWhereSuitable,
+                dtype,
+            )?;
+            let plan = prepared.prepare_batched(batch)?;
+            let batched_in = Tensor::randn(plan.input_shape(), 3);
+            let mut ws = Workspace::with_capacity(plan.workspace_elems());
+            let mut acts = Workspace::with_capacity(plan.peak_elems());
+            let mut out = vec![f32::NAN; plan.output_shape().iter().product()];
+            let view = TensorView::new(plan.input_shape(), batched_in.data())?;
+            prepared
+                .run_planned_batched_into(&plan, &view, Some(&pool), &mut ws, &mut acts, &mut out)?; // warm-up
+            let t0 = std::time::Instant::now();
+            prepared
+                .run_planned_batched_into(&plan, &view, Some(&pool), &mut ws, &mut acts, &mut out)?;
+            let per_batch = t0.elapsed().as_nanos() as f64;
+            println!(
+                "batched N={batch}: {} ms/batch, {} ms/frame (batch-1 walk: {} ms)",
+                ms(per_batch),
+                ms(per_batch / batch as f64),
+                ms(totals.1),
+            );
+        }
 
         // Output-shape audit for the curious.
         let final_shape = shapes.last().unwrap();

@@ -7,7 +7,9 @@
 //! 1. *closed-loop latency*: one in-flight request at a time (batch size 1,
 //!    the paper's setting) — reports per-frame latency and fps.
 //! 2. *open-loop throughput*: several client threads keep the queue full —
-//!    shows the batcher/backpressure machinery under load.
+//!    the latency-budgeted batcher forms real multi-frame batches (watch
+//!    the `batches: ... (mean ... frames, max ...)` stats and the p50/p99
+//!    queue-wait percentiles move in the phase-2 report).
 //!
 //! ```sh
 //! cargo run --release --example serve_squeezenet -- [--seconds 20] [--threads 4] [--clients 3]

@@ -30,6 +30,7 @@ const HOT_FILES: &[&str] = &[
 const HOT_FNS: &[(&str, &str)] = &[
     ("*", "*_fused_into"),
     ("*", "*_i8_into"),
+    ("*", "*_batched_into"),
     ("*", "run_planned_into"),
     ("rust/src/conv/depthwise/mod.rs", "conv_rows"),
     ("rust/src/conv/pointwise/mod.rs", "gemm_rows"),

@@ -35,16 +35,22 @@ const ALIASES: &[(&str, &str, &str)] = &[
 /// `*_into` variant (falling back to allocate-per-call) fails CI.
 const REQUIRED_INTO: &[(&str, &str)] = &[
     ("rust/src/winograd/convolve.rs", "run_fused_into"),
+    ("rust/src/winograd/convolve.rs", "run_fused_batched_into"),
     ("rust/src/im2row/mod.rs", "run_fused_into"),
+    ("rust/src/im2row/mod.rs", "run_fused_batched_into"),
     ("rust/src/conv/depthwise/mod.rs", "run_fused_into"),
+    ("rust/src/conv/depthwise/mod.rs", "run_fused_batched_into"),
     ("rust/src/conv/pointwise/mod.rs", "run_fused_into"),
+    ("rust/src/conv/pointwise/mod.rs", "run_fused_batched_into"),
     ("rust/src/conv/pointwise/mod.rs", "run_residual_fused_into"),
     ("rust/src/conv/direct.rs", "direct_conv2d_into"),
     ("rust/src/conv/direct.rs", "direct_conv2d_grouped_into"),
+    ("rust/src/conv/direct.rs", "direct_conv2d_grouped_batched_into"),
     ("rust/src/quant/im2row.rs", "run_fused_i8_into"),
     ("rust/src/quant/depthwise.rs", "run_fused_i8_into"),
     ("rust/src/quant/pointwise.rs", "run_fused_i8_into"),
     ("rust/src/nn/graph.rs", "run_planned_into"),
+    ("rust/src/nn/graph.rs", "run_planned_batched_into"),
     ("rust/src/nn/ops.rs", "max_pool2d_into"),
     ("rust/src/nn/ops.rs", "avg_pool2d_into"),
     ("rust/src/nn/ops.rs", "global_avg_pool_into"),

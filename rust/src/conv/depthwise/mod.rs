@@ -234,6 +234,50 @@ impl DepthwiseConvolution {
         Ok(())
     }
 
+    /// Allocating twin of
+    /// [`run_fused_batched_into`](Self::run_fused_batched_into) — the
+    /// oracle its batched-vs-sequential property tests compare against.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_fused_batched_with(
+        &self,
+        batch: &Tensor,
+        nb: usize,
+        pool: Option<&ThreadPool>,
+        bias: Option<&[f32]>,
+        act: Activation,
+        ws: &mut Workspace,
+    ) -> Result<Tensor> {
+        if batch.rank() != 4 {
+            bail_shape!("batch must be [NB, H, W, C], got {:?}", batch.shape());
+        }
+        let (h, w) = (batch.shape()[1], batch.shape()[2]);
+        let (oh, ow) = self.output_hw(h, w)?;
+        let mut out = Tensor::zeros(&[batch.shape()[0], oh, ow, self.channels]);
+        self.run_fused_batched_into(&batch.view(), nb, pool, bias, act, ws, out.data_mut())?;
+        Ok(out)
+    }
+
+    /// Batched write-into entry point: `nb` frames gathered contiguously as
+    /// one `[nb, H, W, C]` view run through one pass of the register-tiled
+    /// kernel, which parallelises over the `nb·OH` independent output rows
+    /// — a frame boundary is just another row boundary, so the result is
+    /// **bit-identical** to running the frames one at a time.
+    /// Allocation-free with a warm arena (statcheck-registered).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_fused_batched_into(
+        &self,
+        batch: &TensorView,
+        nb: usize,
+        pool: Option<&ThreadPool>,
+        bias: Option<&[f32]>,
+        act: Activation,
+        ws: &mut Workspace,
+        out: &mut [f32],
+    ) -> Result<()> {
+        super::check_batch_dim(batch, nb)?;
+        self.run_fused_into(batch, pool, bias, act, ws, out)
+    }
+
     /// The hot loop over an **already padded** source view. Parallelises
     /// over output rows (`N·OH` independent jobs, disjoint output rows).
     #[allow(clippy::too_many_arguments)]
@@ -442,6 +486,54 @@ mod tests {
             conv.run_fused_into(&input.view(), None, bias_opt, act, &mut ws, &mut got)
                 .unwrap();
             got == want.data()
+        });
+    }
+
+    /// The batched contract: one `[nb, H, W, C]` gathered walk through
+    /// `run_fused_batched_into` is **bit-identical** to `nb` sequential
+    /// batch-1 `run_fused_into` walks over the same frames — each output
+    /// row's 9-tap fma chain is per-(frame, row, channel) — across strides
+    /// × paddings × ragged channel counts × {none, bias, bias+ReLU6},
+    /// written into NaN-poisoned buffers, and to its allocating twin.
+    #[test]
+    fn property_batched_matches_sequential_bitwise() {
+        check("depthwise batched == nb × batch-1", 32, |g: &mut Gen| {
+            let nb = g.usize_in(2, 5);
+            let c = g.usize_in(1, 11);
+            let stride = if g.usize_in(0, 1) == 0 { (1, 1) } else { (2, 2) };
+            let pad = if g.usize_in(0, 1) == 0 { (0, 0) } else { (1, 1) };
+            let h = g.usize_in(3, 11);
+            let w = g.usize_in(3, 11);
+            let input =
+                Tensor::from_vec(&[nb, h, w, c], g.normal_vec(nb * h * w * c)).unwrap();
+            let weights = Tensor::from_vec(&[c, 3, 3, 1], g.normal_vec(9 * c)).unwrap();
+            let bias: Vec<f32> = g.normal_vec(c);
+            let (bias_opt, act) = match g.usize_in(0, 2) {
+                0 => (None, Activation::None),
+                1 => (Some(bias.as_slice()), Activation::None),
+                _ => (Some(bias.as_slice()), Activation::Relu6),
+            };
+            let conv = DepthwiseConvolution::new(&weights, stride, pad).unwrap();
+            let mut ws = Workspace::new();
+            let frame = h * w * c;
+            let mut want: Vec<f32> = Vec::new();
+            for f in 0..nb {
+                let ft = Tensor::from_vec(
+                    &[1, h, w, c],
+                    input.data()[f * frame..(f + 1) * frame].to_vec(),
+                )
+                .unwrap();
+                want.extend_from_slice(
+                    conv.run_fused_with(&ft, None, bias_opt, act, &mut ws).unwrap().data(),
+                );
+            }
+            let mut got = vec![f32::NAN; want.len()];
+            conv.run_fused_batched_into(&input.view(), nb, None, bias_opt, act, &mut ws, &mut got)
+                .unwrap();
+            let twin =
+                conv.run_fused_batched_with(&input, nb, None, bias_opt, act, &mut ws).unwrap();
+            got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits())
+                && got == *twin.data()
         });
     }
 

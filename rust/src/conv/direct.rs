@@ -151,6 +151,38 @@ pub fn direct_conv2d_grouped_into(
     Ok(())
 }
 
+/// Allocating twin of [`direct_conv2d_grouped_batched_into`] — the oracle
+/// its batched-vs-sequential tests compare against.
+pub fn direct_conv2d_grouped_batched(
+    batch: &Tensor,
+    weights: &Tensor,
+    stride: (usize, usize),
+    pad: (usize, usize),
+    groups: usize,
+    nb: usize,
+) -> Result<Tensor> {
+    super::check_batch_dim(&batch.view(), nb)?;
+    direct_conv2d_grouped(batch, weights, stride, pad, groups)
+}
+
+/// Batched write-into entry point for the grouped direct oracle: `nb`
+/// frames gathered contiguously as one `[nb, H, W, C]` view execute in one
+/// walk (the naive loops already iterate the leading dimension, so a frame
+/// boundary is just another `n` index — **bit-identical** to running the
+/// frames one at a time).
+pub fn direct_conv2d_grouped_batched_into(
+    batch: &TensorView,
+    weights: &Tensor,
+    stride: (usize, usize),
+    pad: (usize, usize),
+    groups: usize,
+    nb: usize,
+    out: &mut [f32],
+) -> Result<()> {
+    super::check_batch_dim(batch, nb)?;
+    direct_conv2d_grouped_into(batch, weights, stride, pad, groups, out)
+}
+
 /// FLOP count of a direct convolution (the roofline denominator used in the
 /// bench reports): 2·N·OH·OW·KH·KW·C·M.
 pub fn conv_flops(
@@ -168,6 +200,46 @@ pub fn conv_flops(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Batched grouped direct == the same frames run one at a time,
+    /// bit for bit, into a NaN-poisoned buffer — and the entry rejects a
+    /// frame-count mismatch.
+    #[test]
+    fn grouped_batched_matches_sequential_bitwise() {
+        let (nb, h, w, c, groups) = (3usize, 5usize, 6usize, 4usize, 2usize);
+        let input = Tensor::randn(&[nb, h, w, c], 21);
+        let weights = Tensor::randn(&[6, 3, 3, c / groups], 22);
+        let frame = h * w * c;
+        let mut want: Vec<f32> = Vec::new();
+        for f in 0..nb {
+            let ft = Tensor::from_vec(
+                &[1, h, w, c],
+                input.data()[f * frame..(f + 1) * frame].to_vec(),
+            )
+            .unwrap();
+            let o = direct_conv2d_grouped(&ft, &weights, (1, 1), (1, 1), groups).unwrap();
+            want.extend_from_slice(o.data());
+        }
+        let mut got = vec![f32::NAN; want.len()];
+        direct_conv2d_grouped_batched_into(
+            &input.view(),
+            &weights,
+            (1, 1),
+            (1, 1),
+            groups,
+            nb,
+            &mut got,
+        )
+        .unwrap();
+        assert!(got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()));
+        let twin =
+            direct_conv2d_grouped_batched(&input, &weights, (1, 1), (1, 1), groups, nb).unwrap();
+        assert_eq!(got, *twin.data());
+        assert!(
+            direct_conv2d_grouped_batched(&input, &weights, (1, 1), (1, 1), groups, 2).is_err(),
+            "nb = 2 must reject a 3-frame tensor"
+        );
+    }
 
     #[test]
     fn identity_kernel_passthrough() {

@@ -443,6 +443,46 @@ impl Conv2d {
     }
 }
 
+impl Conv2d {
+    /// Batched descriptor execution: `nb` frames gathered contiguously as
+    /// one `[nb, H, W, C]` input run as a **single** pass of the resolved
+    /// engine — one packed-B weight-panel traversal, `nb`× the packed-A
+    /// rows/regions — instead of `nb` back-to-back batch-1 walks. Validates
+    /// that the input's leading dimension carries exactly the declared
+    /// batch, then delegates to
+    /// [`run_with_workspace`](Self::run_with_workspace) (every engine
+    /// folds N into its GEMM/region row space natively). Bit-identical to
+    /// the sequential walks it amortizes.
+    pub fn run_batched_with_workspace(
+        &self,
+        batch: &Tensor,
+        weights: &Tensor,
+        nb: usize,
+        pool: Option<&ThreadPool>,
+        ws: &mut Workspace,
+    ) -> Result<Tensor> {
+        check_batch_dim(&batch.view(), nb)?;
+        self.run_with_workspace(batch, weights, pool, ws)
+    }
+}
+
+/// Shared guard for the conv stack's `*_batched_into` entry points: the
+/// view must be rank 4 and its leading dimension must carry exactly the
+/// declared batch. Kept allocation-free — it sits on every batched hot
+/// path.
+pub(crate) fn check_batch_dim(batch: &crate::tensor::TensorView, nb: usize) -> Result<()> {
+    if batch.rank() != 4 {
+        bail_shape!("batch must be [NB, H, W, C], got {:?}", batch.shape());
+    }
+    if nb == 0 || batch.shape()[0] != nb {
+        bail_shape!(
+            "batched entry declared nb = {nb}, view carries {} frames",
+            batch.shape()[0]
+        );
+    }
+    Ok(())
+}
+
 /// Post-pass bias/activation for the `Direct` oracle path. The fused paths
 /// never call this — their epilogues apply it in-flight. Delegates to the
 /// shared [`crate::nn::ops`] helpers so the oracle semantics have one

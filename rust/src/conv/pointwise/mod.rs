@@ -225,6 +225,47 @@ impl PointwiseConvolution {
         )
     }
 
+    /// Allocating twin of
+    /// [`run_fused_batched_into`](Self::run_fused_batched_into) — the
+    /// oracle its batched-vs-sequential property tests compare against.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_fused_batched_with(
+        &self,
+        batch: &Tensor,
+        nb: usize,
+        pool: Option<&ThreadPool>,
+        bias: Option<&[f32]>,
+        act: Activation,
+        ws: &mut Workspace,
+    ) -> Result<Tensor> {
+        let mut out = self.alloc_output(batch)?;
+        self.run_fused_batched_into(&batch.view(), nb, pool, bias, act, ws, out.data_mut())?;
+        Ok(out)
+    }
+
+    /// Batched write-into entry point: `nb` frames gathered contiguously as
+    /// one `[nb, H, W, C]` view execute as a **single** GEMM
+    /// `[nb·OH·OW × C] · [C × M]` — one traversal of the prepare-time
+    /// packed-B weight panels, `nb`× the A rows (still read zero-copy at
+    /// stride 1). Each output row's k-accumulation is independent of how
+    /// many rows share the sweep, so the result is **bit-identical** to
+    /// running the frames one at a time. Allocation-free with a warm arena
+    /// (statcheck-registered).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_fused_batched_into(
+        &self,
+        batch: &TensorView,
+        nb: usize,
+        pool: Option<&ThreadPool>,
+        bias: Option<&[f32]>,
+        act: Activation,
+        ws: &mut Workspace,
+        out: &mut [f32],
+    ) -> Result<()> {
+        super::check_batch_dim(batch, nb)?;
+        self.run_fused_into(batch, pool, bias, act, ws, out)
+    }
+
     /// Allocate the output tensor for the allocating (oracle) wrappers.
     fn alloc_output(&self, input: &Tensor) -> Result<Tensor> {
         if input.rank() != 4 {
@@ -416,6 +457,54 @@ mod tests {
                 .run_residual_fused_with(&input, None, bias_opt, act, &res, &mut ws)
                 .unwrap();
             got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()) && got == *twin.data()
+        });
+    }
+
+    /// The batched contract: one `[nb, H, W, C]` gathered walk through
+    /// `run_fused_batched_into` is **bit-identical** to `nb` sequential
+    /// batch-1 `run_fused_into` walks over the same frames — the zero-copy
+    /// A operand just grows by whole frame-rows — across strides × ragged
+    /// shapes × {none, bias, bias+ReLU6} epilogues, written into
+    /// NaN-poisoned buffers, and to its allocating twin.
+    #[test]
+    fn property_batched_matches_sequential_bitwise() {
+        check("pointwise batched == nb × batch-1", 32, |g: &mut Gen| {
+            let nb = g.usize_in(2, 5);
+            let c = g.usize_in(1, 14);
+            let m = g.usize_in(1, 18);
+            let stride = if g.usize_in(0, 1) == 0 { (1, 1) } else { (2, 2) };
+            let h = g.usize_in(1, 8);
+            let w = g.usize_in(1, 8);
+            let input =
+                Tensor::from_vec(&[nb, h, w, c], g.normal_vec(nb * h * w * c)).unwrap();
+            let weights = Tensor::from_vec(&[m, 1, 1, c], g.normal_vec(m * c)).unwrap();
+            let bias: Vec<f32> = g.normal_vec(m);
+            let (bias_opt, act) = match g.usize_in(0, 2) {
+                0 => (None, Activation::None),
+                1 => (Some(bias.as_slice()), Activation::None),
+                _ => (Some(bias.as_slice()), Activation::Relu6),
+            };
+            let conv = PointwiseConvolution::new(&weights, stride, (0, 0)).unwrap();
+            let mut ws = Workspace::new();
+            let frame = h * w * c;
+            let mut want: Vec<f32> = Vec::new();
+            for f in 0..nb {
+                let ft = Tensor::from_vec(
+                    &[1, h, w, c],
+                    input.data()[f * frame..(f + 1) * frame].to_vec(),
+                )
+                .unwrap();
+                want.extend_from_slice(
+                    conv.run_fused_with(&ft, None, bias_opt, act, &mut ws).unwrap().data(),
+                );
+            }
+            let mut got = vec![f32::NAN; want.len()];
+            conv.run_fused_batched_into(&input.view(), nb, None, bias_opt, act, &mut ws, &mut got)
+                .unwrap();
+            let twin =
+                conv.run_fused_batched_with(&input, nb, None, bias_opt, act, &mut ws).unwrap();
+            got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits())
+                && got == *twin.data()
         });
     }
 

@@ -24,6 +24,7 @@ struct Inner {
     queue_ns: Vec<u64>,
     compute_ns: Vec<u64>,
     e2e_ns: Vec<u64>,
+    batch_sizes: Vec<u64>,
     arena_fallbacks: u64,
     arena_grows: u64,
     dispatch: DispatchCounts,
@@ -44,8 +45,20 @@ pub struct MetricsSnapshot {
     pub e2e_ms: (f64, f64, f64),
     /// Compute-only latency percentiles in ms: (p50, p90, p99).
     pub compute_ms: (f64, f64, f64),
+    /// Queue-wait percentiles in ms: (p50, p90, p99). Under the latency-
+    /// budgeted batcher, p99 queue wait ≈ batch window + service time of
+    /// the batch ahead — the knob the window trades against throughput.
+    pub queue_ms: (f64, f64, f64),
     /// Mean queue wait in ms.
     pub mean_queue_ms: f64,
+    /// Dispatched batches (one batched execution each).
+    pub batches: u64,
+    /// Mean frames per dispatched batch (completed / batches); 0 when no
+    /// batch has run. The amortization the batched GEMM sweep buys scales
+    /// with this number.
+    pub mean_batch: f64,
+    /// Largest batch dispatched so far.
+    pub max_batch_seen: u64,
     /// Arena health: `PreparedModel::run` mutex-contention fallbacks
     /// observed (each one allocated throwaway arenas). The engine's
     /// per-worker-arena path must keep this at 0.
@@ -77,6 +90,7 @@ impl ServerMetrics {
                 queue_ns: Vec::new(),
                 compute_ns: Vec::new(),
                 e2e_ns: Vec::new(),
+                batch_sizes: Vec::new(),
                 arena_fallbacks: 0,
                 arena_grows: 0,
                 dispatch: DispatchCounts::default(),
@@ -97,6 +111,11 @@ impl ServerMetrics {
     /// Record a backpressure rejection.
     pub fn record_rejected(&self) {
         self.inner.lock().unwrap().rejected += 1;
+    }
+
+    /// Record one dispatched batch of `n` frames.
+    pub fn record_batch(&self, n: usize) {
+        self.inner.lock().unwrap().batch_sizes.push(n as u64);
     }
 
     /// Update the arena-health gauges (current fallback and grow counts —
@@ -133,6 +152,12 @@ impl ServerMetrics {
         } else {
             m.queue_ns.iter().sum::<u64>() as f64 / m.queue_ns.len() as f64 / 1e6
         };
+        let batches = m.batch_sizes.len() as u64;
+        let mean_batch = if m.batch_sizes.is_empty() {
+            0.0
+        } else {
+            m.batch_sizes.iter().sum::<u64>() as f64 / m.batch_sizes.len() as f64
+        };
         MetricsSnapshot {
             completed: m.completed,
             rejected: m.rejected,
@@ -140,7 +165,11 @@ impl ServerMetrics {
             throughput_fps: m.completed as f64 / uptime,
             e2e_ms: pct(&m.e2e_ns),
             compute_ms: pct(&m.compute_ns),
+            queue_ms: pct(&m.queue_ns),
             mean_queue_ms,
+            batches,
+            mean_batch,
+            max_batch_seen: m.batch_sizes.iter().copied().max().unwrap_or(0),
             arena_fallbacks: m.arena_fallbacks,
             arena_grows: m.arena_grows,
             dispatch: m.dispatch,
@@ -154,7 +183,9 @@ impl MetricsSnapshot {
         format!(
             "requests: {} completed, {} rejected | throughput: {:.1} fps | \
              e2e ms p50/p90/p99: {:.2}/{:.2}/{:.2} | \
-             compute ms p50/p90/p99: {:.2}/{:.2}/{:.2} | mean queue {:.2} ms | \
+             compute ms p50/p90/p99: {:.2}/{:.2}/{:.2} | \
+             queue ms p50/p90/p99: {:.2}/{:.2}/{:.2} (mean {:.2}) | \
+             batches: {} (mean {:.2} frames, max {}) | \
              arena fallbacks/grows: {}/{} | dispatch: {}",
             self.completed,
             self.rejected,
@@ -165,7 +196,13 @@ impl MetricsSnapshot {
             self.compute_ms.0,
             self.compute_ms.1,
             self.compute_ms.2,
+            self.queue_ms.0,
+            self.queue_ms.1,
+            self.queue_ms.2,
             self.mean_queue_ms,
+            self.batches,
+            self.mean_batch,
+            self.max_batch_seen,
             self.arena_fallbacks,
             self.arena_grows,
             self.dispatch,
@@ -191,6 +228,22 @@ mod tests {
         // p50 of 1..=100 µs-scale e2e values ≈ 0.1515 ms.
         assert!((s.e2e_ms.0 - 0.1515).abs() < 0.01, "{:?}", s.e2e_ms);
         assert!(s.e2e_ms.2 > s.e2e_ms.0);
+        // Queue-wait reservoir gets the same percentile treatment.
+        assert!(s.queue_ms.0 > 0.0, "{:?}", s.queue_ms);
+        assert!(s.queue_ms.2 > s.queue_ms.0);
+    }
+
+    #[test]
+    fn batch_size_stats_track_dispatches() {
+        let m = ServerMetrics::new();
+        for &n in &[1usize, 4, 8, 3] {
+            m.record_batch(n);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.batches, 4);
+        assert!((s.mean_batch - 4.0).abs() < 1e-9);
+        assert_eq!(s.max_batch_seen, 8);
+        assert!(s.report().contains("batches: 4 (mean 4.00 frames, max 8)"));
     }
 
     #[test]

@@ -4,16 +4,21 @@
 //! The paper's headline deployment claim is real-time single-stream
 //! inference ("47 frames/sec SqueezeNet on 4× Cortex-A73", §1); this module
 //! is the engine a downstream user would wrap around the kernels to get
-//! there: clients submit NHWC frames, the dispatcher coalesces them into
-//! batches (the prepared models are shape-specialised, so batching here
-//! means queueing batch-1 executions back-to-back — exactly the paper's
-//! batch-size-1 setting — while keeping the worker pipeline full), and a
-//! metrics registry tracks latency percentiles and throughput. Each worker
-//! loop owns a pre-sized [`crate::workspace::Workspace`] arena **pair** —
-//! conv scratch sized to the model's largest layer, activations sized to
-//! the prepare-time plan's peak (`PreparedModel::activation_plan()`) — and
-//! executes via the planned write-into path, so steady-state serving
-//! performs zero heap allocation inside inference. Arena health (run()
+//! there — and past it, to N > 1: clients submit NHWC frames, and the
+//! dispatcher gathers them into **real batches** under a configurable
+//! latency budget ([`EngineConfig::batch_window`] — a batch closes when it
+//! reaches `max_batch` frames or the window elapses, whichever first). Each
+//! batch executes as *one* batched planned walk
+//! (`PreparedModel::run_planned_batched_into`): the k frames ride as extra
+//! rows of every layer's GEMM, so each packed weight panel streams through
+//! cache once for all k frames instead of once per frame. A metrics
+//! registry tracks p50/p99 queue-wait, compute, and end-to-end latency
+//! percentiles plus batch-size stats and throughput. The dispatcher owns a
+//! pre-sized [`crate::workspace::Workspace`] arena **pair** sized for
+//! `max_batch` — conv scratch to the model's largest layer at full batch,
+//! activations to the plan's peak × `max_batch` — and executes via the
+//! batched write-into path, so steady-state serving performs zero heap
+//! allocation inside inference at every batch size. Arena health (run()
 //! fallbacks, grow events) is exported with every metrics snapshot.
 
 pub mod metrics;

@@ -11,7 +11,8 @@ use std::time::{Duration, Instant};
 pub struct Request {
     /// Client-assigned id, echoed in the [`Response`].
     pub id: u64,
-    /// NHWC input frame (batch 1).
+    /// One NHWC input frame (`[1, H, W, C]`); the dispatcher gathers up to
+    /// `max_batch` of these into a single batched execution.
     pub input: Tensor,
     /// Submission timestamp (for end-to-end latency).
     pub submitted: Instant,
@@ -101,25 +102,56 @@ impl RequestQueue {
 
     /// Pop up to `max` requests, waiting up to `wait` for the first one.
     /// Returns an empty vec on timeout; `None` when closed and drained.
+    /// Drains whatever is pending as soon as anything arrives — a zero
+    /// latency budget (see [`RequestQueue::pop_batch_budgeted`]).
     pub fn pop_batch(&self, max: usize, wait: Duration) -> Option<Vec<Request>> {
-        let deadline = Instant::now() + wait;
+        self.pop_batch_budgeted(max, wait, Duration::ZERO)
+    }
+
+    /// Pop up to `max` requests under a latency budget: wait up to `wait`
+    /// for the first request, then hold the batch open until it either
+    /// fills to `max` or `budget` elapses — whichever comes first. The
+    /// budget clock starts when the first request is seen, so an idle
+    /// queue costs `wait`, not `wait + budget`. Returns an empty vec when
+    /// no request arrived within `wait`; `None` when closed and drained.
+    pub fn pop_batch_budgeted(
+        &self,
+        max: usize,
+        wait: Duration,
+        budget: Duration,
+    ) -> Option<Vec<Request>> {
+        let wait_deadline = Instant::now() + wait;
         let mut st = self.inner.queue.lock().unwrap();
         while st.items.is_empty() {
             if st.closed {
                 return None;
             }
             let now = Instant::now();
-            if now >= deadline {
+            if now >= wait_deadline {
                 return Some(Vec::new());
             }
             let (guard, _timeout) = self
                 .inner
                 .not_empty
-                .wait_timeout(st, deadline - now)
+                .wait_timeout(st, wait_deadline - now)
                 .unwrap();
             st = guard;
         }
-        let take = st.items.len().min(max.max(1));
+        let max = max.max(1);
+        let close = Instant::now() + budget;
+        while st.items.len() < max && !st.closed {
+            let now = Instant::now();
+            if now >= close {
+                break;
+            }
+            let (guard, _timeout) = self
+                .inner
+                .not_empty
+                .wait_timeout(st, close - now)
+                .unwrap();
+            st = guard;
+        }
+        let take = st.items.len().min(max);
         let batch: Vec<Request> = st.items.drain(..take).collect();
         self.inner.not_full.notify_all();
         Some(batch)
@@ -174,6 +206,59 @@ mod tests {
         let q = RequestQueue::new(2);
         let batch = q.pop_batch(4, Duration::from_millis(5)).unwrap();
         assert!(batch.is_empty());
+    }
+
+    /// A budgeted pop with fewer than `max` requests pending closes the
+    /// batch at the deadline and returns the partial batch, rather than
+    /// stalling until it fills.
+    #[test]
+    fn budgeted_pop_closes_partial_batch_at_deadline() {
+        let q = RequestQueue::new(8);
+        for i in 0..3 {
+            assert!(q.push(req(i)));
+        }
+        let t0 = Instant::now();
+        let batch = q
+            .pop_batch_budgeted(8, Duration::from_millis(100), Duration::from_millis(20))
+            .unwrap();
+        let elapsed = t0.elapsed();
+        assert_eq!(batch.len(), 3, "deadline-closed batch carries what arrived");
+        assert!(elapsed >= Duration::from_millis(20), "held open for the budget");
+        assert!(elapsed < Duration::from_millis(100), "did not wait the full poll");
+    }
+
+    /// A batch that fills to `max` closes immediately, without burning the
+    /// rest of its latency budget.
+    #[test]
+    fn budgeted_pop_closes_full_batch_early() {
+        let q = RequestQueue::new(8);
+        for i in 0..4 {
+            assert!(q.push(req(i)));
+        }
+        let t0 = Instant::now();
+        let batch = q
+            .pop_batch_budgeted(4, Duration::from_millis(100), Duration::from_secs(5))
+            .unwrap();
+        assert_eq!(batch.len(), 4);
+        assert!(t0.elapsed() < Duration::from_secs(1), "full batch closes early");
+    }
+
+    /// Requests arriving while the batch is held open join it.
+    #[test]
+    fn budgeted_pop_gathers_late_arrivals() {
+        let q = RequestQueue::new(8);
+        q.push(req(0));
+        let q2 = q.clone();
+        let h = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(10));
+            q2.push(req(1));
+            q2.push(req(2));
+        });
+        let batch = q
+            .pop_batch_budgeted(3, Duration::from_millis(100), Duration::from_millis(200))
+            .unwrap();
+        h.join().unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
     }
 
     #[test]

@@ -292,6 +292,55 @@ impl Im2RowConvolution {
     }
 }
 
+impl Im2RowConvolution {
+    /// Allocating twin of
+    /// [`run_fused_batched_into`](Self::run_fused_batched_into) — the
+    /// oracle its batched-vs-sequential property tests compare against.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_fused_batched_with(
+        &self,
+        batch: &Tensor,
+        nb: usize,
+        pool: Option<&ThreadPool>,
+        bias: Option<&[f32]>,
+        act: Activation,
+        ws: &mut Workspace,
+    ) -> Result<Tensor> {
+        if batch.rank() != 4 {
+            bail_shape!("batch must be [NB, H, W, C], got {:?}", batch.shape());
+        }
+        let (h, w) = (batch.shape()[1], batch.shape()[2]);
+        let (oh, ow) = self.output_hw(h, w)?;
+        let mut out = Tensor::zeros(&[batch.shape()[0], oh, ow, self.cout]);
+        self.run_fused_batched_into(&batch.view(), nb, pool, bias, act, ws, out.data_mut())?;
+        Ok(out)
+    }
+
+    /// Batched write-into entry point: `nb` frames gathered contiguously as
+    /// one `[nb, H, W, C]` view execute in a single pass. The packed-B
+    /// weight panels (built once at prepare time, batch-invariant) are
+    /// traversed **once** per layer while the packed-A patch matrix carries
+    /// `nb`× the rows — the batched-GEMM amortization lever. Each output
+    /// row's k-accumulation is independent of how many rows share the
+    /// sweep, so the result is **bit-identical** to running the frames one
+    /// at a time. Allocation-free with a warm arena
+    /// (statcheck-registered).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_fused_batched_into(
+        &self,
+        batch: &TensorView,
+        nb: usize,
+        pool: Option<&ThreadPool>,
+        bias: Option<&[f32]>,
+        act: Activation,
+        ws: &mut Workspace,
+        out: &mut [f32],
+    ) -> Result<()> {
+        crate::conv::check_batch_dim(batch, nb)?;
+        self.run_fused_into(batch, pool, bias, act, ws, out)
+    }
+}
+
 /// One-shot convenience wrapper.
 pub fn im2row_conv2d(
     input: &Tensor,
@@ -343,6 +392,77 @@ mod tests {
     #[test]
     fn matches_direct_5x5() {
         check(1, 10, 10, 3, 6, (5, 5), (1, 1), (2, 2));
+    }
+
+    /// The batched contract: one `[nb, H, W, C]` gathered walk through
+    /// `run_fused_batched_into` is **bit-identical** to `nb` sequential
+    /// batch-1 `run_fused_into` walks over the same frames — each output
+    /// row's k-accumulation is independent of how many frames ride the
+    /// GEMM — across ragged shapes × {none, bias, bias+ReLU} epilogues,
+    /// written into NaN-poisoned buffers, and to its allocating twin.
+    #[test]
+    fn property_batched_matches_sequential_bitwise() {
+        use crate::conv::Activation;
+        use crate::testkit::{check as prop, Gen};
+        prop("im2row batched == nb × batch-1", 32, |g: &mut Gen| {
+            let nb = g.usize_in(2, 5);
+            let c = g.usize_in(1, 9);
+            let m = g.usize_in(1, 13);
+            let h = g.usize_in(3, 9);
+            let w = g.usize_in(3, 9);
+            let input =
+                Tensor::from_vec(&[nb, h, w, c], g.normal_vec(nb * h * w * c)).unwrap();
+            let weights = Tensor::from_vec(&[m, 3, 3, c], g.normal_vec(m * 9 * c)).unwrap();
+            let bias: Vec<f32> = g.normal_vec(m);
+            let (bias_opt, act) = match g.usize_in(0, 2) {
+                0 => (None, Activation::None),
+                1 => (Some(bias.as_slice()), Activation::None),
+                _ => (Some(bias.as_slice()), Activation::Relu),
+            };
+            let conv = Im2RowConvolution::new(&weights, (1, 1), (1, 1)).unwrap();
+            let mut ws = Workspace::new();
+            let frame = h * w * c;
+            let mut want: Vec<f32> = Vec::new();
+            for f in 0..nb {
+                let ft = Tensor::from_vec(
+                    &[1, h, w, c],
+                    input.data()[f * frame..(f + 1) * frame].to_vec(),
+                )
+                .unwrap();
+                want.extend_from_slice(
+                    conv.run_fused_with(&ft, None, bias_opt, act, &mut ws).unwrap().data(),
+                );
+            }
+            let mut got = vec![f32::NAN; want.len()];
+            conv.run_fused_batched_into(&input.view(), nb, None, bias_opt, act, &mut ws, &mut got)
+                .unwrap();
+            let twin =
+                conv.run_fused_batched_with(&input, nb, None, bias_opt, act, &mut ws).unwrap();
+            got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits())
+                && got == *twin.data()
+        });
+    }
+
+    /// A batched entry declared for `nb` frames rejects a view carrying a
+    /// different leading dimension instead of silently misreading rows.
+    #[test]
+    fn batched_rejects_frame_count_mismatch() {
+        use crate::conv::Activation;
+        let weights = Tensor::randn(&[4, 3, 3, 2], 5);
+        let conv = Im2RowConvolution::new(&weights, (1, 1), (1, 1)).unwrap();
+        let input = Tensor::randn(&[3, 6, 6, 2], 6);
+        let mut ws = Workspace::new();
+        let mut out = vec![0.0; 2 * 6 * 6 * 4];
+        let r = conv.run_fused_batched_into(
+            &input.view(),
+            2,
+            None,
+            None,
+            Activation::None,
+            &mut ws,
+            &mut out,
+        );
+        assert!(r.is_err(), "nb = 2 must reject a 3-frame view");
     }
 
     #[test]

@@ -20,9 +20,10 @@ use winoconv::im2row::Im2RowConvolution;
 use winoconv::nn::{PreparedModel, Scheme};
 use winoconv::parallel::ThreadPool;
 use winoconv::quant::Dtype;
-use winoconv::tensor::Tensor;
+use winoconv::tensor::{Tensor, TensorView};
 use winoconv::util::cli::Args;
 use winoconv::winograd::{WinogradConvolution, WinogradVariant};
+use winoconv::workspace::Workspace;
 use winoconv::zoo::ModelKind;
 use winoconv::{conv::select::select_variant_spatial, Error, Result};
 
@@ -63,7 +64,7 @@ fn print_help() {
          \n\
          SUBCOMMANDS\n\
          \x20 layers   --model <vgg16|vgg19|googlenet|inception-v3|squeezenet|mobilenet-v1|mobilenet-v2|resnet-18|resnet-50> [--threads N] [--quick]\n\
-         \x20 network  --model <name> [--threads N] [--reps N] [--dtype f32|int8] [--quick]\n\
+         \x20 network  --model <name> [--threads N] [--reps N] [--batch N] [--dtype f32|int8] [--quick]\n\
          \x20 serve    --model <name> [--threads N] [--seconds S]\n\
          \x20 verify   [--artifacts DIR]\n\
          \x20 variants"
@@ -142,14 +143,24 @@ fn cmd_layers(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Whole-network comparison (Table 1 row for one model).
+/// Whole-network comparison (Table 1 row for one model). With `--batch N`
+/// (N > 1) the comparison runs the batched planned path instead: one
+/// shared-weight-panel sweep over all N frames per walk, reported per batch
+/// and amortised per frame.
 fn cmd_network(args: &Args) -> Result<()> {
     let model = parse_model(args)?;
     let threads: usize = args.get_parse_or("threads", 4)?;
     let reps: usize = args.get_parse_or("reps", if args.flag("quick") { 2 } else { 5 })?;
     let dtype: Dtype = args.get_parse_or("dtype", Dtype::F32)?;
+    let batch: usize = args.get_parse_or("batch", 1)?;
+    if batch == 0 {
+        return Err(Error::Config("--batch must be at least 1".into()));
+    }
     let pool = ThreadPool::new(threads);
     let graph = model.build(1)?;
+    if batch > 1 {
+        return network_batched(model, &graph, dtype, batch, reps, &pool, threads);
+    }
     let input = Tensor::randn(&model.input_shape(1), 99);
 
     let mut table = Table::new(
@@ -177,6 +188,56 @@ fn cmd_network(args: &Args) -> Result<()> {
         total /= reps as f64;
         fast /= reps as f64;
         table.row(&[scheme.to_string(), ms(total), ms(fast), ms(total - fast)]);
+    }
+    table.print();
+    Ok(())
+}
+
+/// `network --batch N`: one batched planned walk sweeps all N frames
+/// through each layer's shared weight panel; the per-frame column shows the
+/// panel-streaming amortisation vs N independent batch-1 walks.
+fn network_batched(
+    model: ModelKind,
+    graph: &winoconv::nn::Graph,
+    dtype: Dtype,
+    batch: usize,
+    reps: usize,
+    pool: &ThreadPool,
+    threads: usize,
+) -> Result<()> {
+    let shape = model.input_shape(1);
+    let mut table = Table::new(
+        &format!(
+            "{model}: whole-network runtime, batch {batch}, {threads} threads, {dtype} \
+             (mean of {reps})"
+        ),
+        &["scheme", "batch ms", "per-frame ms"],
+    );
+    for scheme in [Scheme::Im2RowOnly, Scheme::WinogradWhereSuitable] {
+        let prepared =
+            PreparedModel::prepare_with_dtype(model.name(), graph, &shape, scheme, dtype)?;
+        let plan = prepared.prepare_batched(batch)?;
+        let input = Tensor::randn(plan.input_shape(), 99);
+        let mut ws = Workspace::with_capacity(plan.workspace_elems());
+        let mut acts = Workspace::with_capacity(plan.peak_elems());
+        let mut out = vec![f32::NAN; plan.output_shape().iter().product()];
+        let view = TensorView::new(plan.input_shape(), input.data())?;
+        prepared.run_planned_batched_into(&plan, &view, Some(pool), &mut ws, &mut acts, &mut out)?; // warm-up
+        let mut total = 0.0f64;
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            prepared.run_planned_batched_into(
+                &plan,
+                &view,
+                Some(pool),
+                &mut ws,
+                &mut acts,
+                &mut out,
+            )?;
+            total += t0.elapsed().as_nanos() as f64;
+        }
+        total /= reps as f64;
+        table.row(&[scheme.to_string(), ms(total), ms(total / batch as f64)]);
     }
     table.print();
     Ok(())

@@ -455,6 +455,54 @@ impl std::fmt::Debug for PreparedModel {
     }
 }
 
+/// A batch-size specialisation of a [`PreparedModel`], built by
+/// [`PreparedModel::prepare_batched`]: the per-node shapes with their
+/// leading (batch) dimension scaled by `nb`, plus the arena sizes a batched
+/// walk needs. The activation-plan **lifetimes are untouched** — only slot
+/// offsets/extents scale by `nb` at execution time, which preserves the
+/// plan's prepare-time disjointness and in-bounds proofs exactly (the
+/// scaling is a linear map on arena addresses). Building one allocates;
+/// executing against one does not.
+#[derive(Debug, Clone)]
+pub struct PreparedBatch {
+    /// Frames per walk.
+    nb: usize,
+    /// Per-node shapes with dim 0 scaled by `nb` (precomputed here so the
+    /// no-alloc batched executor can borrow them as view shapes).
+    shapes: Vec<Vec<usize>>,
+    /// Scratch arena elements the largest layer borrows at this batch.
+    ws_elems: usize,
+    /// Activation arena elements a batched walk takes: plan peak × `nb`.
+    peak_elems: usize,
+}
+
+impl PreparedBatch {
+    /// Frames per batched walk.
+    pub fn nb(&self) -> usize {
+        self.nb
+    }
+
+    /// Expected batched input shape (`[nb·N, H, W, C]`).
+    pub fn input_shape(&self) -> &[usize] {
+        &self.shapes[0]
+    }
+
+    /// Batched output shape of the final node.
+    pub fn output_shape(&self) -> &[usize] {
+        self.shapes.last().unwrap()
+    }
+
+    /// Scratch arena elements to pre-size a worker's [`Workspace`] with.
+    pub fn workspace_elems(&self) -> usize {
+        self.ws_elems
+    }
+
+    /// Activation arena elements a batched walk borrows.
+    pub fn peak_elems(&self) -> usize {
+        self.peak_elems
+    }
+}
+
 impl PreparedModel {
     /// Bind every conv layer of `graph` per `scheme` for `input_shape`.
     ///
@@ -868,6 +916,122 @@ impl PreparedModel {
         self.execute(input, pool, ws, acts, out, None)
     }
 
+    /// Specialise this model for `nb`-frame batched walks. The per-node
+    /// shapes scale only in their leading (batch) dimension — slot
+    /// **lifetimes do not change shape**, so the batch-1 activation plan
+    /// stays sound with every offset/extent multiplied by `nb` — and every
+    /// bound engine is re-asked for its scratch need at the batched shape
+    /// (workspace sizes are monotone but not always linear in N:
+    /// Winograd's region blocking snaps to its L2 budget). Allocates; call
+    /// once per batch size at setup time, then execute through
+    /// [`run_planned_batched_into`](Self::run_planned_batched_into).
+    pub fn prepare_batched(&self, nb: usize) -> Result<PreparedBatch> {
+        if nb == 0 {
+            bail_shape!("{}: batch must be at least 1", self.name);
+        }
+        let shapes: Vec<Vec<usize>> = self
+            .shapes
+            .iter()
+            .map(|s| {
+                let mut b = s.clone();
+                b[0] = s[0] * nb;
+                b
+            })
+            .collect();
+        let mut ws_elems = 0usize;
+        for (idx, p) in self.prepared.iter().enumerate() {
+            let need = match p {
+                PreparedOp::Conv { conv, .. } => {
+                    let s = &shapes[self.nodes[idx].inputs[0]];
+                    conv_workspace_elems(conv, s)?
+                }
+                PreparedOp::PointwiseResidual { conv, x, .. } => {
+                    let s = &shapes[*x];
+                    conv.workspace_elems_for(s[0], s[1], s[2])?
+                }
+                _ => 0,
+            };
+            ws_elems = ws_elems.max(need);
+        }
+        Ok(PreparedBatch {
+            nb,
+            shapes,
+            ws_elems,
+            peak_elems: self.plan.peak_elems() * nb,
+        })
+    }
+
+    /// Allocating twin of
+    /// [`run_planned_batched_into`](Self::run_planned_batched_into) —
+    /// sizes a throwaway arena pair from the batch spec and returns the
+    /// `[nb·N, …]` output tensor. Kept as the oracle the zero-alloc batched
+    /// path is property-tested against.
+    pub fn run_planned_batched_with(
+        &self,
+        batch: &PreparedBatch,
+        input: &Tensor,
+        pool: Option<&ThreadPool>,
+    ) -> Result<Tensor> {
+        let mut ws = Workspace::with_capacity(batch.ws_elems);
+        let mut acts = Workspace::with_capacity(batch.peak_elems);
+        let mut out = Tensor::zeros(batch.output_shape());
+        self.run_planned_batched_into(batch, &input.view(), pool, &mut ws, &mut acts, out.data_mut())?;
+        Ok(out)
+    }
+
+    /// Fully planned **batched** inference: `nb` frames gathered
+    /// contiguously as one `[nb·N, H, W, C]` view walk the plan in a single
+    /// pass — each layer traverses its packed-B weight panels once while
+    /// the packed-A side (patch rows / Winograd regions / NHWC rows)
+    /// carries `nb`× the work, and every activation lives in its batch-1
+    /// slot scaled by `nb`. Bit-identical to `nb` sequential
+    /// [`run_planned_into`](Self::run_planned_into) walks; with arenas
+    /// pre-sized from the [`PreparedBatch`] this performs **zero heap
+    /// allocation** (statcheck-registered). Dispatch totals advance by the
+    /// census × `nb` — one count per frame per conv layer, so per-frame
+    /// accounting matches the sequential path.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_planned_batched_into(
+        &self,
+        batch: &PreparedBatch,
+        input: &TensorView,
+        pool: Option<&ThreadPool>,
+        ws: &mut Workspace,
+        acts: &mut Workspace,
+        out: &mut [f32],
+    ) -> Result<()> {
+        if batch.shapes.len() != self.nodes.len() {
+            bail_shape!(
+                "{}: batch spec carries {} node shapes, model has {}",
+                self.name,
+                batch.shapes.len(),
+                self.nodes.len()
+            );
+        }
+        if input.shape() != batch.input_shape() {
+            bail_shape!(
+                "{}: batched input {:?}, batch prepared for {:?}",
+                self.name,
+                input.shape(),
+                batch.input_shape()
+            );
+        }
+        let expect: usize = batch.output_shape().iter().product();
+        if out.len() != expect {
+            bail_shape!(
+                "{}: output slice has {} elems, batched model writes {}",
+                self.name,
+                out.len(),
+                expect
+            );
+        }
+        if self.nodes.len() == 1 {
+            out.copy_from_slice(input.data());
+            return Ok(());
+        }
+        self.execute_scaled(batch.nb, &batch.shapes, input, pool, ws, acts, out, None)
+    }
+
     fn check_input(&self, input: &Tensor) -> Result<()> {
         if input.shape() != self.input_shape() {
             bail_shape!(
@@ -894,10 +1058,31 @@ impl PreparedModel {
         ws: &mut Workspace,
         acts: &mut Workspace,
         out: &mut [f32],
-        mut per_layer: Option<&mut Vec<LayerTiming>>,
+        per_layer: Option<&mut Vec<LayerTiming>>,
     ) -> Result<()> {
         self.check_input(input)?;
-        let arena = acts.take(self.plan.peak_elems());
+        self.execute_scaled(1, &self.shapes, &input.view(), pool, ws, acts, out, per_layer)
+    }
+
+    /// The plan walk behind both the batch-1 and the batched entry points:
+    /// every slot offset/extent is multiplied by `nb` (a linear map on
+    /// arena addresses, so the plan's disjointness and in-bounds proofs
+    /// carry over unchanged) and node views borrow the caller-provided
+    /// `nb`-scaled shapes. `nb == 1` with the model's own shapes is the
+    /// classic path.
+    #[allow(clippy::too_many_arguments)]
+    fn execute_scaled(
+        &self,
+        nb: usize,
+        shapes: &[Vec<usize>],
+        input: &TensorView,
+        pool: Option<&ThreadPool>,
+        ws: &mut Workspace,
+        acts: &mut Workspace,
+        out: &mut [f32],
+        mut per_layer: Option<&mut Vec<LayerTiming>>,
+    ) -> Result<()> {
+        let arena = acts.take(self.plan.peak_elems() * nb);
         let base = arena.as_mut_ptr();
 
         for (idx, node) in self.nodes.iter().enumerate() {
@@ -913,24 +1098,27 @@ impl PreparedModel {
             // window below never alias.
             let view = |i: usize| {
                 if matches!(self.nodes[i].op, Op::Input) {
-                    input.view()
+                    *input
                 } else {
                     let s = self.plan.slot(i);
                     // SAFETY: see the contract above the closure — slot `s`
                     // is in-bounds of the arena and disjoint from the output
-                    // window by the plan's prepare-time assertions.
+                    // window by the plan's prepare-time assertions, and the
+                    // nb-scaling multiplies every offset and extent by the
+                    // same factor, preserving both properties.
                     let data: &[f32] = unsafe {
-                        std::slice::from_raw_parts(base.add(s.offset) as *const f32, s.elems)
+                        std::slice::from_raw_parts(base.add(s.offset * nb) as *const f32, s.elems * nb)
                     };
-                    TensorView::new(&self.shapes[i], data)
+                    TensorView::new(&shapes[i], data)
                         .expect("plan slot sized from the same shape inference")
                 }
             };
             let slot = self.plan.slot(idx);
             // SAFETY: see `view` — the output window is disjoint from every
             // live input window, and nodes execute strictly serially.
-            let out: &mut [f32] =
-                unsafe { std::slice::from_raw_parts_mut(base.add(slot.offset), slot.elems) };
+            let out: &mut [f32] = unsafe {
+                std::slice::from_raw_parts_mut(base.add(slot.offset * nb), slot.elems * nb)
+            };
 
             match &self.prepared[idx] {
                 // The graph input is borrowed in place — a zero-element
@@ -1018,11 +1206,11 @@ impl PreparedModel {
                         }
                         Op::GlobalAvgPool => ops::global_avg_pool_into(&view(node.inputs[0]), out)?,
                         Op::Concat => {
-                            let c_total = self.shapes[idx][3];
+                            let c_total = shapes[idx][3];
                             let mut c_off = 0usize;
                             for &i in &node.inputs {
                                 ops::concat_channels_into_part(&view(i), c_off, c_total, out)?;
-                                c_off += self.shapes[i][3];
+                                c_off += shapes[i][3];
                             }
                         }
                         Op::Fc { weights, bias, relu } => {
@@ -1076,9 +1264,11 @@ impl PreparedModel {
             }
         }
         let last = self.plan.slot(self.nodes.len() - 1);
-        out.copy_from_slice(&arena[last.range()]);
+        out.copy_from_slice(&arena[last.offset * nb..last.offset * nb + last.elems * nb]);
         // One relaxed add per non-zero path per walk — the census is
-        // static, so totals stay exact without per-layer atomics.
+        // static, so totals stay exact without per-layer atomics. A batched
+        // walk advances each lane by census × nb: one count per frame per
+        // conv layer, matching the sequential path's per-frame accounting.
         for (slot, n) in [
             (0usize, self.census.winograd),
             (1, self.census.im2row),
@@ -1090,10 +1280,28 @@ impl PreparedModel {
             (7, self.census.pointwise_i8),
         ] {
             if n > 0 {
-                self.dispatches[slot].fetch_add(n, Ordering::Relaxed);
+                self.dispatches[slot].fetch_add(n * nb as u64, Ordering::Relaxed);
             }
         }
         Ok(())
+    }
+}
+
+/// Scratch elements one inference over `in_shape` borrows for a bound conv
+/// — the same per-engine sizing [`PreparedModel::prepare_with_dtype`] runs
+/// at batch 1, factored out so [`PreparedModel::prepare_batched`] can
+/// re-ask at `nb`-scaled shapes.
+fn conv_workspace_elems(conv: &PreparedConv, in_shape: &[usize]) -> Result<usize> {
+    let (n, h, w) = (in_shape[0], in_shape[1], in_shape[2]);
+    match conv {
+        PreparedConv::Winograd(wc) => wc.workspace_elems_for(n, h, w),
+        PreparedConv::Im2Row(ic) => ic.workspace_elems_for(n, h, w),
+        PreparedConv::Depthwise(dc) => dc.workspace_elems_for(n, h, w),
+        PreparedConv::Pointwise(pc) => pc.workspace_elems_for(n, h, w),
+        PreparedConv::DirectGrouped { .. } => Ok(0),
+        PreparedConv::Im2RowI8(qc) => qc.workspace_elems_for(n, h, w),
+        PreparedConv::DepthwiseI8(qc) => qc.workspace_elems_for(n, h, w),
+        PreparedConv::PointwiseI8(qc) => qc.workspace_elems_for(n, h, w),
     }
 }
 
@@ -1491,6 +1699,109 @@ mod tests {
                 .run_planned_into(&input, None, &mut ws, &mut acts, &mut out[1..])
                 .is_err());
         }
+    }
+
+    /// The batched planned walk is bit-identical to `nb` sequential batch-1
+    /// planned walks over the same frames, for both schemes, through
+    /// branches/concat/pool/fc/softmax — with the [`PreparedBatch`]-sized
+    /// arena pair never growing (grow = 0 at every tested N > 1), per-frame
+    /// dispatch accounting (census × nb per walk), and the allocating twin
+    /// landing the same bits.
+    #[test]
+    fn batched_planned_matches_sequential_bitwise() {
+        for scheme in [Scheme::Im2RowOnly, Scheme::WinogradWhereSuitable] {
+            let g = tiny_graph(17);
+            let m = PreparedModel::prepare("tiny", &g, &[1, 8, 8, 3], scheme).unwrap();
+            for nb in [2usize, 4] {
+                let batch = m.prepare_batched(nb).unwrap();
+                assert_eq!(batch.nb(), nb);
+                assert_eq!(batch.input_shape(), &[nb, 8, 8, 3]);
+                assert_eq!(
+                    batch.peak_elems(),
+                    m.activation_plan().peak_elems() * nb,
+                    "slot scaling rule: peak × nb"
+                );
+                let frame: usize = m.input_shape().iter().product();
+                let out_frame: usize = m.output_shape().iter().product();
+                let input = Tensor::randn(&[nb, 8, 8, 3], 31 + nb as u64);
+                // Reference: nb sequential batch-1 planned walks.
+                let mut ws = Workspace::new();
+                let mut acts = Workspace::new();
+                let mut want = vec![0.0f32; nb * out_frame];
+                for f in 0..nb {
+                    let ft = Tensor::from_vec(
+                        &[1, 8, 8, 3],
+                        input.data()[f * frame..(f + 1) * frame].to_vec(),
+                    )
+                    .unwrap();
+                    m.run_planned_into(
+                        &ft,
+                        None,
+                        &mut ws,
+                        &mut acts,
+                        &mut want[f * out_frame..(f + 1) * out_frame],
+                    )
+                    .unwrap();
+                }
+                // One batched walk, twice, over PreparedBatch-sized dirty
+                // arenas — sizes must be exact, so grow stays 0.
+                let mut wsb = Workspace::with_capacity(batch.workspace_elems());
+                let mut actsb = Workspace::with_capacity(batch.peak_elems());
+                actsb.take(batch.peak_elems()).fill(f32::NAN);
+                let mut got = vec![f32::NAN; nb * out_frame];
+                let before = m.dispatch_counts().total();
+                for _ in 0..2 {
+                    m.run_planned_batched_into(
+                        &batch,
+                        &input.view(),
+                        None,
+                        &mut wsb,
+                        &mut actsb,
+                        &mut got,
+                    )
+                    .unwrap();
+                }
+                assert_eq!(got, want, "{scheme} nb={nb}: batched != sequential");
+                assert_eq!(wsb.grow_count(), 0, "{scheme} nb={nb}: scratch arena grew");
+                assert_eq!(actsb.grow_count(), 0, "{scheme} nb={nb}: activation arena grew");
+                // Census × nb per batched walk — per-frame accounting.
+                assert_eq!(
+                    m.dispatch_counts().total() - before,
+                    2 * nb as u64 * m.dispatch_census().total(),
+                    "{scheme} nb={nb}: dispatch totals"
+                );
+                // Allocating twin lands the same bits.
+                let twin = m.run_planned_batched_with(&batch, &input, None).unwrap();
+                assert_eq!(twin.shape(), batch.output_shape());
+                assert_eq!(got, *twin.data());
+                // Guards: wrong frame count and short output slice reject.
+                let bad = Tensor::randn(&[nb + 1, 8, 8, 3], 1);
+                assert!(m
+                    .run_planned_batched_into(
+                        &batch,
+                        &bad.view(),
+                        None,
+                        &mut wsb,
+                        &mut actsb,
+                        &mut got
+                    )
+                    .is_err());
+                assert!(m
+                    .run_planned_batched_into(
+                        &batch,
+                        &input.view(),
+                        None,
+                        &mut wsb,
+                        &mut actsb,
+                        &mut got[1..]
+                    )
+                    .is_err());
+            }
+        }
+        // nb = 0 is rejected at prepare time.
+        let g = tiny_graph(17);
+        let m = PreparedModel::prepare("tiny", &g, &[1, 8, 8, 3], Scheme::Im2RowOnly).unwrap();
+        assert!(m.prepare_batched(0).is_err());
     }
 
     /// Planner integration: disjoint-lifetime layers of the prepared model

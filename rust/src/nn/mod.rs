@@ -7,5 +7,7 @@ pub mod ops;
 pub mod graph;
 pub mod plan;
 
-pub use graph::{DispatchCounts, Graph, LayerTiming, Node, NodeId, Op, PreparedModel, Scheme};
+pub use graph::{
+    DispatchCounts, Graph, LayerTiming, Node, NodeId, Op, PreparedBatch, PreparedModel, Scheme,
+};
 pub use plan::{ActivationPlan, ActivationSlot};

@@ -137,6 +137,20 @@ mod tests {
         assert!(a.get_parse_or("reps", 1usize).is_err());
     }
 
+    /// The batched-inference entry points take `--batch N`; a malformed
+    /// count must be a diagnosed `Config` error naming the option, never a
+    /// panic or a silent fallback to the default.
+    #[test]
+    fn typed_getter_rejects_malformed_batch() {
+        let a = parse(&["--batch", "four"], &[]);
+        let e = a.get_parse_or("batch", 1usize).unwrap_err();
+        assert!(e.to_string().contains("--batch"), "error names the option: {e}");
+        let a = parse(&["--batch=-2"], &[]);
+        assert!(a.get_parse_or("batch", 1usize).is_err(), "negative counts must not parse");
+        let a = parse(&["--batch", "8"], &[]);
+        assert_eq!(a.get_parse_or("batch", 1usize).unwrap(), 8);
+    }
+
     /// `get_parse_or` works for any FromStr — including crate enums like
     /// the quantization [`Dtype`](crate::quant::Dtype) behind `--dtype`.
     #[test]

@@ -543,6 +543,54 @@ impl WinogradConvolution {
         Ok(())
     }
 
+    /// Allocating twin of
+    /// [`run_fused_batched_into`](Self::run_fused_batched_into) — the
+    /// oracle its batched-vs-sequential property tests compare against.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_fused_batched_with(
+        &self,
+        batch: &Tensor,
+        nb: usize,
+        pool: Option<&ThreadPool>,
+        bias: Option<&[f32]>,
+        act: Activation,
+        ws: &mut Workspace,
+    ) -> Result<Tensor> {
+        if batch.rank() != 4 {
+            bail_shape!("batch must be [NB, H, W, C], got {:?}", batch.shape());
+        }
+        let (h, w) = (batch.shape()[1], batch.shape()[2]);
+        let (oh, ow) = self.output_hw(h, w)?;
+        let mut out = Tensor::zeros(&[batch.shape()[0], oh, ow, self.cout]);
+        self.run_fused_batched_into(&batch.view(), nb, pool, bias, act, ws, out.data_mut())?;
+        Ok(out)
+    }
+
+    /// Batched write-into entry point: `nb` frames gathered contiguously as
+    /// one `[nb, H, W, C]` view execute in a single fused pass. The
+    /// prepare-time Winograd-domain weight panels (`u_packed`) are
+    /// batch-invariant, so the region-blocked sweep sees one packed-B
+    /// traversal per layer while the region count — and with it the
+    /// packed-A side — scales `nb`×. Per-region transforms and each output
+    /// row's k-accumulation are independent of how many regions share the
+    /// sweep, so the result is **bit-identical** to running the frames one
+    /// at a time. Allocation-free with a warm arena
+    /// (statcheck-registered).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_fused_batched_into(
+        &self,
+        batch: &TensorView,
+        nb: usize,
+        pool: Option<&ThreadPool>,
+        bias: Option<&[f32]>,
+        act: Activation,
+        ws: &mut Workspace,
+        out: &mut [f32],
+    ) -> Result<()> {
+        crate::conv::check_batch_dim(batch, nb)?;
+        self.run_fused_into(batch, pool, bias, act, ws, out)
+    }
+
     /// The pre-fusion three-stage pipeline (scatter → staged `x²` GEMMs →
     /// gather) with a throwaway arena — the E6 ablation baseline.
     pub fn run_staged(&self, input: &Tensor, pool: Option<&ThreadPool>) -> Result<Tensor> {
@@ -904,6 +952,61 @@ mod tests {
     #[test]
     fn f6x6_3x3_matches_direct() {
         check_variant(WinogradVariant::F6x6_3x3, 1, 14, 14, 4, 4, (1, 1));
+    }
+
+    /// The batched contract: one `[nb, H, W, C]` gathered walk through
+    /// `run_fused_batched_into` is **bit-identical** to `nb` sequential
+    /// batch-1 `run_fused_into` walks over the same frames — per-region
+    /// input/output transforms and per-tile-row GEMM accumulation are
+    /// independent of how the region list is partitioned into L2 blocks,
+    /// and more frames only lengthen that list — across tile variants ×
+    /// ragged shapes × {none, bias, bias+ReLU} epilogues, written into
+    /// NaN-poisoned buffers, and to its allocating twin.
+    #[test]
+    fn property_batched_matches_sequential_bitwise() {
+        use crate::testkit::{check, Gen};
+        check("winograd batched == nb × batch-1", 24, |g: &mut Gen| {
+            let v = *g.choose(&[
+                WinogradVariant::F2x2_3x3,
+                WinogradVariant::F4x4_3x3,
+                WinogradVariant::F6x6_3x3,
+            ]);
+            let nb = g.usize_in(2, 4);
+            let c = g.usize_in(1, 8);
+            let m = g.usize_in(1, 10);
+            let h = g.usize_in(4, 12);
+            let w = g.usize_in(4, 12);
+            let input =
+                Tensor::from_vec(&[nb, h, w, c], g.normal_vec(nb * h * w * c)).unwrap();
+            let weights = Tensor::from_vec(&[m, 3, 3, c], g.normal_vec(m * 9 * c)).unwrap();
+            let bias: Vec<f32> = g.normal_vec(m);
+            let (bias_opt, act) = match g.usize_in(0, 2) {
+                0 => (None, Activation::None),
+                1 => (Some(bias.as_slice()), Activation::None),
+                _ => (Some(bias.as_slice()), Activation::Relu),
+            };
+            let conv = WinogradConvolution::new(v, &weights, (1, 1)).unwrap();
+            let mut ws = Workspace::new();
+            let frame = h * w * c;
+            let mut want: Vec<f32> = Vec::new();
+            for f in 0..nb {
+                let ft = Tensor::from_vec(
+                    &[1, h, w, c],
+                    input.data()[f * frame..(f + 1) * frame].to_vec(),
+                )
+                .unwrap();
+                want.extend_from_slice(
+                    conv.run_fused_with(&ft, None, bias_opt, act, &mut ws).unwrap().data(),
+                );
+            }
+            let mut got = vec![f32::NAN; want.len()];
+            conv.run_fused_batched_into(&input.view(), nb, None, bias_opt, act, &mut ws, &mut got)
+                .unwrap();
+            let twin =
+                conv.run_fused_batched_with(&input, nb, None, bias_opt, act, &mut ws).unwrap();
+            got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits())
+                && got == *twin.data()
+        });
     }
 
     #[test]
