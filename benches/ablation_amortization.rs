@@ -24,12 +24,13 @@
 //! bench bit-rot gate wired into `ci.sh`.
 
 use winoconv::bench::workloads::unique_fast_layers;
-use winoconv::bench::{measure, BenchConfig, Table};
+use winoconv::bench::{measure, ms, BenchConfig, Table};
 use winoconv::conv::Activation;
 use winoconv::im2row::Im2RowConvolution;
 use winoconv::parallel::ThreadPool;
 use winoconv::tensor::Tensor;
 use winoconv::util::cli::Args;
+use winoconv::util::stats::ns_to_ms;
 use winoconv::winograd::{WinogradConvolution, WinogradVariant};
 use winoconv::workspace::Workspace;
 use winoconv::zoo::ModelKind;
@@ -66,7 +67,7 @@ fn e6_layer(
             .run_fused_with(input, Some(pool), Some(bias), Activation::Relu, &mut ws_f)
             .unwrap();
     });
-    Ok((staged.median / 1e6, fused.median / 1e6, staged_elems, fused_elems))
+    Ok((ns_to_ms(staged.median), ns_to_ms(fused.median), staged_elems, fused_elems))
 }
 
 fn main() -> winoconv::Result<()> {
@@ -113,8 +114,8 @@ fn main() -> winoconv::Result<()> {
         });
         table.row(&[
             m.to_string(),
-            format!("{:.2}", base.median / 1e6),
-            format!("{:.2}", ours.median / 1e6),
+            ms(base.median),
+            ms(ours.median),
             format!("{:.2}x", base.median / ours.median),
         ]);
     }
@@ -137,8 +138,8 @@ fn main() -> winoconv::Result<()> {
         });
         table.row(&[
             c.to_string(),
-            format!("{:.2}", base.median / 1e6),
-            format!("{:.2}", ours.median / 1e6),
+            ms(base.median),
+            ms(ours.median),
             format!("{:.2}x", base.median / ours.median),
         ]);
     }
@@ -185,7 +186,7 @@ fn main() -> winoconv::Result<()> {
             label.to_string(),
             wino.regions_per_block(1, h, h)?.to_string(),
             format!("{}", block_ws / 1024),
-            format!("{:.2}", ours.median / 1e6),
+            ms(ours.median),
             format!("{:.2}x", base.median / ours.median),
         ]);
     }

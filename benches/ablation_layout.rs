@@ -9,7 +9,7 @@
 //! (b) NCHW input converted at the layer boundary — the realistic cost a
 //! framework pays for the wrong layout — plus the raw conversion overhead.
 
-use winoconv::bench::{measure, BenchConfig, Table};
+use winoconv::bench::{measure, ms, BenchConfig, Table};
 use winoconv::parallel::ThreadPool;
 use winoconv::tensor::{nchw_to_nhwc, nhwc_to_nchw, Tensor};
 use winoconv::util::cli::Args;
@@ -49,9 +49,9 @@ fn main() -> winoconv::Result<()> {
         });
         table.row(&[
             format!("{h}x{h}x{c} -> {m}"),
-            format!("{:.2}", nhwc.median / 1e6),
-            format!("{:.2}", nchw.median / 1e6),
-            format!("{:.2}", conv_only.median / 1e6),
+            ms(nhwc.median),
+            ms(nchw.median),
+            ms(conv_only.median),
             format!("{:.1}%", (nchw.median / nhwc.median - 1.0) * 100.0),
         ]);
     }

@@ -1,0 +1,213 @@
+//! **Tracing-overhead ablation**: whole-network planned walks with the
+//! span sink enabled vs disabled, interleaved sample-for-sample so thermal
+//! and scheduler drift hits both sides equally.
+//!
+//! The claim under test is that observability is free enough to leave on:
+//! the trace ring is pre-reserved (`trace::reserve`), recording a span is
+//! five relaxed atomic stores behind one `fetch_add`, and a traced walk
+//! stays **bit-for-bit identical** and **allocation-free** (grow = 0,
+//! fallback = 0) — so enabling per-layer + per-stage tracing on a full
+//! SqueezeNet walk must cost at most 3% (the CI gate in `ci.sh`).
+//!
+//! `--smoke` additionally pins the exact span census: this process runs
+//! nothing else, so `trace::len()` after W traced walks must equal
+//! `W × trace_spans_per_walk()` with zero drops, and the conv layer spans
+//! must match the model's dispatch census walk-for-walk.
+//!
+//! Full mode (`--model <name>`) prints the traced/untraced medians and the
+//! span census for one model without gating.
+
+use std::time::Instant;
+use winoconv::bench::ms;
+use winoconv::nn::{PreparedModel, Scheme};
+use winoconv::parallel::ThreadPool;
+use winoconv::tensor::Tensor;
+use winoconv::trace::{self, AlgoCode, SpanKind};
+use winoconv::util::cli::Args;
+use winoconv::util::stats::percentile_sorted;
+use winoconv::workspace::Workspace;
+use winoconv::zoo::ModelKind;
+
+/// Maximum traced/untraced median ratio the smoke gate accepts.
+const MAX_OVERHEAD: f64 = 1.03;
+/// Interleaved (untraced, traced) sample pairs per gate attempt.
+const GATE_REPS: usize = 30;
+/// Independent gate attempts before the smoke run fails: the ring cost is
+/// deterministic but a 3% bar on a millisecond-scale walk is within OS
+/// noise, so one noisy attempt gets retried rather than failing CI.
+const GATE_ATTEMPTS: usize = 3;
+
+struct Harness {
+    prepared: PreparedModel,
+    pool: ThreadPool,
+    input: Tensor,
+    ws: Workspace,
+    acts: Workspace,
+    out: Vec<f32>,
+}
+
+impl Harness {
+    fn new(model: ModelKind, threads: usize) -> winoconv::Result<Harness> {
+        let graph = model.build(1)?;
+        let shape = model.input_shape(1);
+        let prepared =
+            PreparedModel::prepare(model.name(), &graph, &shape, Scheme::WinogradWhereSuitable)?;
+        let out = vec![f32::NAN; prepared.output_shape().iter().product()];
+        Ok(Harness {
+            ws: Workspace::with_capacity(prepared.workspace_elems()),
+            acts: Workspace::with_capacity(prepared.activation_plan().peak_elems()),
+            input: Tensor::randn(&shape, 5),
+            pool: ThreadPool::new(threads),
+            prepared,
+            out,
+        })
+    }
+
+    fn walk(&mut self) -> winoconv::Result<()> {
+        self.prepared.run_planned_into(
+            &self.input,
+            Some(&self.pool),
+            &mut self.ws,
+            &mut self.acts,
+            &mut self.out,
+        )
+    }
+
+    /// One interleaved overhead measurement: `reps` (untraced, traced)
+    /// walk pairs, median nanoseconds each. Tracing state is restored to
+    /// disabled; the caller owns ring sizing.
+    fn overhead(&mut self, reps: usize) -> winoconv::Result<(f64, f64)> {
+        let mut plain = Vec::with_capacity(reps);
+        let mut traced = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            trace::set_enabled(false);
+            let t0 = Instant::now();
+            self.walk()?;
+            plain.push(t0.elapsed().as_nanos() as f64);
+            trace::set_enabled(true);
+            let t0 = Instant::now();
+            self.walk()?;
+            traced.push(t0.elapsed().as_nanos() as f64);
+        }
+        trace::set_enabled(false);
+        plain.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        traced.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Ok((percentile_sorted(&plain, 50.0), percentile_sorted(&traced, 50.0)))
+    }
+}
+
+/// `--smoke`: the CI gate — exact census, bitwise identity, zero
+/// allocation and the ≤3% overhead bar on SqueezeNet.
+fn smoke(threads: usize) -> winoconv::Result<()> {
+    let model = ModelKind::SqueezeNet;
+    let mut h = Harness::new(model, threads)?;
+    let per_walk = h.prepared.trace_spans_per_walk();
+    assert!(per_walk > 0, "traced model records no spans");
+
+    // 1) Bitwise identity: a traced walk lands the same bits as an
+    //    untraced one on the same arenas.
+    trace::reserve(per_walk + 8);
+    h.walk()?; // warm-up, untraced
+    let want = h.out.clone();
+    h.out.fill(f32::NAN);
+    trace::set_enabled(true);
+    h.walk()?;
+    trace::set_enabled(false);
+    assert_eq!(h.out, want, "traced walk must be bit-identical to untraced");
+
+    // 2) Exact span census over W traced walks: this bench is the only
+    //    thing running in this process, so the pinned counts are exact —
+    //    the in-crate integration tests can only assert lower bounds.
+    let walks = 4usize;
+    trace::reserve(walks * per_walk + 8);
+    trace::set_enabled(true);
+    for _ in 0..walks {
+        h.walk()?;
+    }
+    trace::set_enabled(false);
+    assert_eq!(trace::dropped(), 0, "sized-to-fit ring must not drop spans");
+    assert_eq!(
+        trace::len(),
+        walks * per_walk,
+        "span census must equal walks x trace_spans_per_walk()"
+    );
+    assert_eq!(h.ws.grow_count(), 0, "tracing must not grow the conv scratch arena");
+    assert_eq!(h.acts.grow_count(), 0, "tracing must not grow the activation arena");
+    assert_eq!(h.prepared.fallback_count(), 0, "tracing must not force arena fallbacks");
+    let spans = trace::take();
+    let census = h.prepared.dispatch_census();
+    let conv_layer_spans = spans
+        .iter()
+        .filter(|s| s.kind == SpanKind::Layer && s.algo != AlgoCode::None)
+        .count();
+    assert_eq!(
+        conv_layer_spans as u64,
+        census.total() * walks as u64,
+        "conv layer spans must match the dispatch census walk-for-walk"
+    );
+    println!(
+        "smoke census: {} spans / {walks} walks ({per_walk} per walk, {} conv layers), \
+         grow 0, fallback 0, bitwise identical",
+        spans.len(),
+        census.total(),
+    );
+
+    // 3) Overhead gate: enabled tracing costs <= 3% on the whole-network
+    //    walk, interleaved medians, best of GATE_ATTEMPTS.
+    trace::reserve(GATE_REPS * per_walk + 8);
+    let mut best = f64::INFINITY;
+    for attempt in 1..=GATE_ATTEMPTS {
+        trace::reset();
+        let (plain, traced) = h.overhead(GATE_REPS)?;
+        let ratio = traced / plain;
+        best = best.min(ratio);
+        println!(
+            "smoke overhead attempt {attempt}: untraced {} ms -> traced {} ms ({:.4}x)",
+            ms(plain),
+            ms(traced),
+            ratio
+        );
+        if best <= MAX_OVERHEAD {
+            break;
+        }
+    }
+    assert!(
+        best <= MAX_OVERHEAD,
+        "traced walk must cost at most {MAX_OVERHEAD}x the untraced walk, got {best:.4}x"
+    );
+    println!(
+        "smoke ok: tracing ON costs {:.2}% on a {model} walk (gate {:.0}%), census exact, \
+         outputs bitwise identical, zero allocation",
+        (best - 1.0) * 100.0,
+        (MAX_OVERHEAD - 1.0) * 100.0,
+    );
+    Ok(())
+}
+
+fn main() -> winoconv::Result<()> {
+    let args = Args::from_env(&["quick", "bench", "smoke"])?;
+    let threads: usize = args.get_parse_or("threads", 4)?;
+    if args.flag("smoke") {
+        return smoke(threads);
+    }
+    let model = match args.get("model") {
+        Some(name) => ModelKind::parse(name)
+            .ok_or_else(|| winoconv::Error::Config(format!("unknown model {name:?}")))?,
+        None => ModelKind::SqueezeNet,
+    };
+    let reps: usize = args.get_parse_or("reps", if args.flag("quick") { 10 } else { GATE_REPS })?;
+    let mut h = Harness::new(model, threads)?;
+    let per_walk = h.prepared.trace_spans_per_walk();
+    h.walk()?; // warm-up
+    trace::reserve(reps * per_walk + 8);
+    let (plain, traced) = h.overhead(reps)?;
+    println!(
+        "{model}: untraced {} ms -> traced {} ms ({:.4}x, {per_walk} spans/walk, \
+         median of {reps} interleaved pairs, {threads} threads)",
+        ms(plain),
+        ms(traced),
+        traced / plain,
+    );
+    let _ = trace::take();
+    Ok(())
+}

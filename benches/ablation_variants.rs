@@ -4,7 +4,7 @@
 //! layers, tile-size effects on small feature maps, the extension variants
 //! F(6×6,3×3)/F(4×4,5×5) the paper leaves as future work).
 
-use winoconv::bench::{measure, BenchConfig, Table};
+use winoconv::bench::{measure, ms, BenchConfig, Table};
 use winoconv::im2row::Im2RowConvolution;
 use winoconv::parallel::ThreadPool;
 use winoconv::tensor::Tensor;
@@ -62,7 +62,7 @@ fn main() -> winoconv::Result<()> {
         );
         table.row(&[
             "im2row".into(),
-            format!("{:.2}", base.median / 1e6),
+            ms(base.median),
             "1.00x".into(),
             "1.00x".into(),
         ]);
@@ -73,7 +73,7 @@ fn main() -> winoconv::Result<()> {
             });
             table.row(&[
                 v.name().into(),
-                format!("{:.2}", ours.median / 1e6),
+                ms(ours.median),
                 format!("{:.2}x", base.median / ours.median),
                 format!("{:.2}x", v.theoretical_speedup()),
             ]);

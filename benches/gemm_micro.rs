@@ -10,6 +10,7 @@ use winoconv::im2row::Im2RowConvolution;
 use winoconv::parallel::ThreadPool;
 use winoconv::tensor::Tensor;
 use winoconv::util::cli::Args;
+use winoconv::util::stats::ns_to_ms;
 use winoconv::winograd::{WinogradConvolution, WinogradVariant};
 
 fn main() -> winoconv::Result<()> {
@@ -42,7 +43,7 @@ fn main() -> winoconv::Result<()> {
         let gflops = (2.0 * m as f64 * n as f64 * k as f64) / s.median;
         table.row(&[
             format!("{m} x {n} x {k}"),
-            format!("{:.3}", s.median / 1e6),
+            format!("{:.3}", ns_to_ms(s.median)),
             format!("{gflops:.2}"),
         ]);
     }
@@ -59,7 +60,7 @@ fn main() -> winoconv::Result<()> {
     println!(
         "batched GEMM 36 x [196x128 . 128x128]: {:.3} ms, {:.2} GFLOP/s \
          (unblocked A+C working set {} KiB)",
-        s.median / 1e6,
+        ns_to_ms(s.median),
         bgd.flops() as f64 / s.median,
         bgd.workspace_elems() * 4 / 1024
     );
@@ -80,9 +81,9 @@ fn main() -> winoconv::Result<()> {
     println!(
         "\nlayer 28x28x128 -> 128 (3x3): wino {:.2} ms ({:.2} effective GFLOP/s), \
          im2row {:.2} ms ({:.2} GFLOP/s), speedup {:.2}x",
-        total.median / 1e6,
+        ns_to_ms(total.median),
         flops / total.median,
-        base.median / 1e6,
+        ns_to_ms(base.median),
         flops / base.median,
         base.median / total.median,
     );

@@ -8,20 +8,25 @@
 //! every fast layer wins, 3×3 wins most, 1-D variants least.
 //!
 //! `WINOCONV_BENCH_QUICK=1` or `--quick` shrinks sample counts;
-//! `--model <name>` restricts to one model.
+//! `--model <name>` restricts to one model; `--profile` appends a traced
+//! whole-network roofline table per model (FLOPs, GFLOP/s, intensity).
 
 use std::collections::BTreeMap;
 use winoconv::bench::workloads::unique_fast_layers;
 use winoconv::bench::{measure, BenchConfig, Table};
 use winoconv::conv::select::select_variant_spatial;
 use winoconv::im2row::Im2RowConvolution;
+use winoconv::nn::{PreparedModel, Scheme};
 use winoconv::parallel::ThreadPool;
+use winoconv::tensor::Tensor;
 use winoconv::util::cli::Args;
+use winoconv::util::stats::ns_to_ms;
 use winoconv::winograd::WinogradConvolution;
+use winoconv::workspace::Workspace;
 use winoconv::zoo::ModelKind;
 
 fn main() -> winoconv::Result<()> {
-    let args = Args::from_env(&["quick", "bench"])?;
+    let args = Args::from_env(&["quick", "bench", "profile"])?;
     let threads: usize = args.get_parse_or(
         "threads",
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
@@ -62,8 +67,8 @@ fn main() -> winoconv::Result<()> {
                 "  {:<28} {:<4} {:>7.2} ms -> {:>7.2} ms  {s:.2}x",
                 spec.name,
                 spec.layer_type(),
-                base.median / 1e6,
-                ours.median / 1e6
+                ns_to_ms(base.median),
+                ns_to_ms(ours.median)
             );
             agg.entry((model.display().to_string(), spec.layer_type()))
                 .or_default()
@@ -109,5 +114,45 @@ fn main() -> winoconv::Result<()> {
         "note: paper numbers are 4x Cortex-A73 + NEON; this testbed is {threads} x86 thread(s).\n\
          The reproduction target is the *shape*: all fast layers > 1x, 3x3 strongest, 1-D weakest."
     );
+
+    // `--profile`: whole-network traced walks per model, reduced to the
+    // roofline view — shows *why* the per-layer speedups above land where
+    // they do (high-intensity 3x3 layers vs bandwidth-bound 1x1/pool).
+    if args.flag("profile") {
+        for model in &models {
+            let graph = model.build(1)?;
+            let shape = model.input_shape(1);
+            let prepared = PreparedModel::prepare(
+                model.name(),
+                &graph,
+                &shape,
+                Scheme::WinogradWhereSuitable,
+            )?;
+            let input = Tensor::randn(&shape, 7);
+            let mut ws = Workspace::with_capacity(prepared.workspace_elems());
+            let mut acts =
+                Workspace::with_capacity(prepared.activation_plan().peak_elems());
+            let mut out = vec![f32::NAN; prepared.output_shape().iter().product()];
+            prepared.run_planned_into(&input, Some(&pool), &mut ws, &mut acts, &mut out)?; // warm-up
+            let walks = if args.flag("quick") { 2usize } else { 4 };
+            winoconv::trace::reserve(walks * prepared.trace_spans_per_walk() + 64);
+            winoconv::trace::set_enabled(true);
+            for _ in 0..walks {
+                prepared.run_planned_into(&input, Some(&pool), &mut ws, &mut acts, &mut out)?;
+            }
+            winoconv::trace::set_enabled(false);
+            let profiles = winoconv::trace::roofline::build_profiles(
+                &prepared.layer_infos(),
+                &winoconv::trace::take(),
+            );
+            print!(
+                "{}",
+                winoconv::trace::roofline::render(
+                    &format!("{model}: per-layer roofline ({walks} walks, {threads} threads)"),
+                    &profiles,
+                )
+            );
+        }
+    }
     Ok(())
 }

@@ -63,6 +63,14 @@ run cargo bench --bench ablation_quant -- --smoke
 # shared weight panel to amortise and is reported, not gated).
 run cargo bench --bench ablation_batch -- --smoke
 
+# Tracing gate: per-layer + per-stage span recording must stay cheap
+# enough to leave on — a traced whole-network SqueezeNet walk at most
+# 1.03x the untraced walk (interleaved medians), bit-for-bit identical
+# output, zero arena growth/fallback with the sink enabled, and an exact
+# span census (walks x trace_spans_per_walk, conv layer spans matching
+# the dispatch census, zero drops on a sized-to-fit ring).
+run cargo bench --bench ablation_trace -- --smoke
+
 if [[ "${1:-}" != "--no-lint" ]]; then
     if cargo fmt --version >/dev/null 2>&1; then
         run cargo fmt --check

@@ -4,7 +4,7 @@
 //! structural sanity check of the whole stack.
 //!
 //! ```sh
-//! cargo run --release --example model_zoo -- [--model resnet-50] [--threads 4] [--dtype int8] [--batch 4]
+//! cargo run --release --example model_zoo -- [--model resnet-50] [--threads 4] [--dtype int8] [--batch 4] [--profile]
 //! ```
 //! Without `--model`, only the small models run (VGG/Inception take
 //! minutes in a debug-ish environment; use the benches for full tables).
@@ -24,7 +24,7 @@ use winoconv::workspace::Workspace;
 use winoconv::zoo::ModelKind;
 
 fn main() -> winoconv::Result<()> {
-    let args = Args::from_env(&[])?;
+    let args = Args::from_env(&["profile"])?;
     let threads: usize = args.get_parse_or("threads", 4)?;
     let dtype: Dtype = args.get_parse_or("dtype", Dtype::F32)?;
     let batch: usize = args.get_parse_or("batch", 1)?;
@@ -143,6 +143,41 @@ fn main() -> winoconv::Result<()> {
                 ms(per_batch),
                 ms(per_batch / batch as f64),
                 ms(totals.1),
+            );
+        }
+
+        // `--profile`: traced planned walks reduced to the per-layer
+        // roofline table (same view as `winoconv profile`).
+        if args.flag("profile") {
+            let prepared = PreparedModel::prepare_with_dtype(
+                model.name(),
+                &graph,
+                &shape,
+                Scheme::WinogradWhereSuitable,
+                dtype,
+            )?;
+            let mut ws = Workspace::with_capacity(prepared.workspace_elems());
+            let mut acts =
+                Workspace::with_capacity(prepared.activation_plan().peak_elems());
+            let mut out = vec![f32::NAN; prepared.output_shape().iter().product()];
+            prepared.run_planned_into(&input, Some(&pool), &mut ws, &mut acts, &mut out)?; // warm-up
+            let walks = 4usize;
+            winoconv::trace::reserve(walks * prepared.trace_spans_per_walk() + 64);
+            winoconv::trace::set_enabled(true);
+            for _ in 0..walks {
+                prepared.run_planned_into(&input, Some(&pool), &mut ws, &mut acts, &mut out)?;
+            }
+            winoconv::trace::set_enabled(false);
+            let profiles = winoconv::trace::roofline::build_profiles(
+                &prepared.layer_infos(),
+                &winoconv::trace::take(),
+            );
+            print!(
+                "{}",
+                winoconv::trace::roofline::render(
+                    &format!("{model}: per-layer roofline ({walks} walks, {dtype})"),
+                    &profiles,
+                )
             );
         }
 

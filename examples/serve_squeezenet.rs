@@ -40,6 +40,14 @@ fn main() -> winoconv::Result<()> {
     );
     let prepared = PreparedModel::prepare(model.name(), &graph, &shape, Scheme::WinogradWhereSuitable)?;
 
+    // Tracing stays ON for the whole serve: the dispatcher records its
+    // queue-wait/gather/compute/scatter phases and every walk its layer +
+    // engine-stage spans into this pre-reserved ring (overflow drops, never
+    // allocates) — and steady-state serving must *still* never allocate,
+    // which the arena assert at shutdown pins.
+    winoconv::trace::reserve(1 << 16);
+    winoconv::trace::set_enabled(true);
+
     // ---- Phase 1: closed-loop, batch 1 (the paper's measurement) ----
     let engine = InferenceEngine::start(
         prepared,
@@ -97,6 +105,31 @@ fn main() -> winoconv::Result<()> {
         winoconv::Error::Runtime("engine still referenced".into())
     })?;
     engine.shutdown();
+
+    // Observability wrap-up: the whole serve ran with the span sink
+    // enabled, so zero arena growth here proves tracing kept the
+    // steady-state no-allocation invariant under real concurrent load.
+    winoconv::trace::set_enabled(false);
+    let spans = winoconv::trace::take();
+    let serve_spans = spans
+        .iter()
+        .filter(|s| s.kind == winoconv::trace::SpanKind::Serve)
+        .count();
+    println!(
+        "\ntrace: {} spans captured ({serve_spans} dispatcher-phase, {} dropped on ring overflow)",
+        spans.len(),
+        winoconv::trace::dropped(),
+    );
+    assert_eq!(
+        snap.arena_grows, 0,
+        "steady-state serving must not allocate with tracing enabled"
+    );
+    assert_eq!(
+        snap.arena_fallbacks, 0,
+        "the dispatcher's dedicated arenas must never hit the fallback path"
+    );
+    println!("\n# Prometheus exposition (scrape target output)");
+    print!("{}", snap.prometheus());
     println!("\ndone — record these numbers in EXPERIMENTS.md E4");
     Ok(())
 }

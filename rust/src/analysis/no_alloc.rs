@@ -37,6 +37,16 @@ const HOT_FNS: &[(&str, &str)] = &[
     ("rust/src/workspace.rs", "take"),
     ("rust/src/workspace.rs", "split2"),
     ("rust/src/workspace.rs", "ensure"),
+    // The span sink's steady-state recording path: everything a traced
+    // walk executes per span (the ring itself is pre-reserved).
+    ("rust/src/trace/mod.rs", "now_ns"),
+    ("rust/src/trace/mod.rs", "enabled"),
+    ("rust/src/trace/mod.rs", "begin"),
+    ("rust/src/trace/mod.rs", "end_stage"),
+    ("rust/src/trace/mod.rs", "record"),
+    ("rust/src/trace/mod.rs", "record_*"),
+    ("rust/src/trace/mod.rs", "set_current_layer"),
+    ("rust/src/trace/mod.rs", "pack_w0"),
 ];
 
 /// `Type::method` allocating constructors.

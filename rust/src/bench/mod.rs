@@ -159,7 +159,7 @@ pub fn report(name: &str, s: &Summary) {
 
 /// Pretty milliseconds for table cells.
 pub fn ms(ns: f64) -> String {
-    format!("{:.2}", ns / 1e6)
+    format!("{:.2}", crate::util::stats::ns_to_ms(ns))
 }
 
 /// Pretty speedup factor.

@@ -223,13 +223,39 @@ impl DepthwiseConvolution {
         let out_addr = out.as_mut_ptr() as usize;
         let (ph, pw) = self.pad;
         if ph == 0 && pw == 0 {
+            // No staging copy, but the Pack span is still recorded (~0 ns)
+            // so the per-engine stage census stays fixed at two.
+            let stage_t = crate::trace::begin();
+            crate::trace::end_stage(
+                stage_t,
+                crate::trace::Stage::Pack,
+                crate::trace::AlgoCode::Depthwise,
+            );
+            let stage_t = crate::trace::begin();
             self.conv_rows(input, n, oh, ow, bias, act, pool, out_addr);
+            crate::trace::end_stage(
+                stage_t,
+                crate::trace::Stage::Compute,
+                crate::trace::AlgoCode::Depthwise,
+            );
         } else {
+            let stage_t = crate::trace::begin();
             let staging = ws.take(self.staging_elems_for(n, h, w));
             input.pad_spatial_into(ph, ph, pw, pw, staging);
             let pshape = [n, h + 2 * ph, w + 2 * pw, c];
             let padded = TensorView::new(&pshape, staging)?;
+            crate::trace::end_stage(
+                stage_t,
+                crate::trace::Stage::Pack,
+                crate::trace::AlgoCode::Depthwise,
+            );
+            let stage_t = crate::trace::begin();
             self.conv_rows(&padded, n, oh, ow, bias, act, pool, out_addr);
+            crate::trace::end_stage(
+                stage_t,
+                crate::trace::Stage::Compute,
+                crate::trace::AlgoCode::Depthwise,
+            );
         }
         Ok(())
     }

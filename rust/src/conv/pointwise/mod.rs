@@ -170,7 +170,23 @@ impl PointwiseConvolution {
         out: &mut [f32],
     ) -> Result<()> {
         let (n, h, w) = self.check_fused_args(input, bias, out.len())?;
-        self.gemm_rows(input, n, h, w, pool, ws, out, &BiasAct { bias, act })
+        // Zero-copy engine: no patch matrix, so the Pack span is ~0 ns —
+        // recorded anyway to keep the per-engine stage census fixed at two
+        // (stride-2 row gathers happen inside the GEMM sweep).
+        let stage_t = crate::trace::begin();
+        crate::trace::end_stage(
+            stage_t,
+            crate::trace::Stage::Pack,
+            crate::trace::AlgoCode::Pointwise,
+        );
+        let stage_t = crate::trace::begin();
+        let r = self.gemm_rows(input, n, h, w, pool, ws, out, &BiasAct { bias, act });
+        crate::trace::end_stage(
+            stage_t,
+            crate::trace::Stage::Gemm,
+            crate::trace::AlgoCode::Pointwise,
+        );
+        r
     }
 
     /// Allocating wrapper over
@@ -213,7 +229,16 @@ impl PointwiseConvolution {
         if res.len() != out.len() {
             bail_shape!("residual has {} elems, output has {}", res.len(), out.len());
         }
-        self.gemm_rows(
+        // Same fixed two-stage census as run_fused_into: a ~0 ns Pack span
+        // (zero-copy A operand), then the GEMM + fused-residual epilogue.
+        let stage_t = crate::trace::begin();
+        crate::trace::end_stage(
+            stage_t,
+            crate::trace::Stage::Pack,
+            crate::trace::AlgoCode::Pointwise,
+        );
+        let stage_t = crate::trace::begin();
+        let r = self.gemm_rows(
             input,
             n,
             h,
@@ -222,7 +247,13 @@ impl PointwiseConvolution {
             ws,
             out,
             &BiasActAdd { bias, act, res, ldr: self.cout },
-        )
+        );
+        crate::trace::end_stage(
+            stage_t,
+            crate::trace::Stage::Gemm,
+            crate::trace::AlgoCode::Pointwise,
+        );
+        r
     }
 
     /// Allocating twin of

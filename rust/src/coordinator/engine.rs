@@ -8,6 +8,7 @@ use super::queue::{Request, RequestQueue, Response};
 use crate::nn::{PreparedBatch, PreparedModel};
 use crate::parallel::ThreadPool;
 use crate::tensor::{Tensor, TensorView};
+use crate::trace;
 use crate::workspace::Workspace;
 use crate::{Error, Result};
 use std::collections::HashMap;
@@ -161,11 +162,20 @@ impl InferenceEngine {
                                 }
                                 let k = run.len();
                                 let plan = &plans[k - 1];
+                                let tr = trace::enabled();
                                 let t0 = Instant::now();
+                                let batch_t0 = if tr { trace::now_ns() } else { 0 };
                                 for (i, req) in run.iter().enumerate() {
                                     staging_in.data_mut()
                                         [i * frame_in..(i + 1) * frame_in]
                                         .copy_from_slice(req.input.data());
+                                }
+                                if tr {
+                                    trace::record_serve(
+                                        trace::Stage::Gather,
+                                        batch_t0,
+                                        trace::now_ns().saturating_sub(batch_t0),
+                                    );
                                 }
                                 // One batched planned walk for the whole
                                 // batch: every weight panel streams through
@@ -186,9 +196,28 @@ impl InferenceEngine {
                                 });
                                 let compute = t0.elapsed();
                                 metrics.record_batch(k);
+                                if tr {
+                                    trace::record_serve(
+                                        trace::Stage::Compute,
+                                        batch_t0,
+                                        compute.as_nanos() as u64,
+                                    );
+                                }
+                                let scatter_t0 = if tr { trace::now_ns() } else { 0 };
                                 for (i, req) in run.into_iter().enumerate() {
                                     let queued =
                                         t0.saturating_duration_since(req.submitted);
+                                    if tr {
+                                        // Synthetic interval ending at batch
+                                        // start: how long this request sat in
+                                        // the queue before the walk began.
+                                        let q = queued.as_nanos() as u64;
+                                        trace::record_serve(
+                                            trace::Stage::QueueWait,
+                                            batch_t0.saturating_sub(q),
+                                            q,
+                                        );
+                                    }
                                     let resp = match &result {
                                         Ok(()) => {
                                             let mut output =
@@ -216,6 +245,13 @@ impl InferenceEngine {
                                     let mut slots = mailbox.slots.lock().unwrap();
                                     slots.insert(req.id, resp);
                                     mailbox.ready.notify_all();
+                                }
+                                if tr {
+                                    trace::record_serve(
+                                        trace::Stage::Scatter,
+                                        scatter_t0,
+                                        trace::now_ns().saturating_sub(scatter_t0),
+                                    );
                                 }
                                 // Surface arena health once per batch: a
                                 // regression that starts allocating in

@@ -1,10 +1,22 @@
 //! Serving metrics: counters and latency reservoirs with percentile
 //! snapshots (the numbers the paper's deployment claim — frames/sec on the
 //! big cluster — is made of).
+//!
+//! Latency/batch-size reservoirs are **bounded**: a fixed-capacity
+//! deterministic [`Reservoir`] sampler per stream, so memory stays constant
+//! under sustained load while percentiles stay statistically sound (exact
+//! below the cap, uniform samples above it; means and maxima are tracked
+//! exactly either way). [`MetricsSnapshot::prometheus`] renders the whole
+//! snapshot in Prometheus text exposition format for scraping.
 
 use crate::nn::DispatchCounts;
+use crate::util::stats::{ns_to_ms, percentile_sorted, Reservoir};
 use std::sync::Mutex;
 use std::time::Instant;
+
+/// Samples kept per latency/batch stream. Below this count snapshots are
+/// exact, so short runs (and the unit tests) see unchanged numbers.
+const RESERVOIR_CAP: usize = 4096;
 
 /// Thread-safe metrics registry for one engine.
 pub struct ServerMetrics {
@@ -21,10 +33,10 @@ impl std::fmt::Debug for ServerMetrics {
 struct Inner {
     completed: u64,
     rejected: u64,
-    queue_ns: Vec<u64>,
-    compute_ns: Vec<u64>,
-    e2e_ns: Vec<u64>,
-    batch_sizes: Vec<u64>,
+    queue_ns: Reservoir,
+    compute_ns: Reservoir,
+    e2e_ns: Reservoir,
+    batch_sizes: Reservoir,
     arena_fallbacks: u64,
     arena_grows: u64,
     dispatch: DispatchCounts,
@@ -87,10 +99,11 @@ impl ServerMetrics {
             inner: Mutex::new(Inner {
                 completed: 0,
                 rejected: 0,
-                queue_ns: Vec::new(),
-                compute_ns: Vec::new(),
-                e2e_ns: Vec::new(),
-                batch_sizes: Vec::new(),
+                // Distinct seeds so the four streams decorrelate.
+                queue_ns: Reservoir::new(RESERVOIR_CAP, 0x71),
+                compute_ns: Reservoir::new(RESERVOIR_CAP, 0x72),
+                e2e_ns: Reservoir::new(RESERVOIR_CAP, 0x73),
+                batch_sizes: Reservoir::new(RESERVOIR_CAP, 0x74),
                 arena_fallbacks: 0,
                 arena_grows: 0,
                 dispatch: DispatchCounts::default(),
@@ -103,9 +116,9 @@ impl ServerMetrics {
     pub fn record(&self, queue_ns: u64, compute_ns: u64, e2e_ns: u64) {
         let mut m = self.inner.lock().unwrap();
         m.completed += 1;
-        m.queue_ns.push(queue_ns);
-        m.compute_ns.push(compute_ns);
-        m.e2e_ns.push(e2e_ns);
+        m.queue_ns.record(queue_ns as f64);
+        m.compute_ns.record(compute_ns as f64);
+        m.e2e_ns.record(e2e_ns as f64);
     }
 
     /// Record a backpressure rejection.
@@ -115,7 +128,7 @@ impl ServerMetrics {
 
     /// Record one dispatched batch of `n` frames.
     pub fn record_batch(&self, n: usize) {
-        self.inner.lock().unwrap().batch_sizes.push(n as u64);
+        self.inner.lock().unwrap().batch_sizes.record(n as f64);
     }
 
     /// Update the arena-health gauges (current fallback and grow counts —
@@ -138,25 +151,13 @@ impl ServerMetrics {
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().unwrap();
         let uptime = self.started.elapsed().as_secs_f64().max(1e-9);
-        let pct = |xs: &[u64]| -> (f64, f64, f64) {
-            if xs.is_empty() {
+        let pct = |r: &Reservoir| -> (f64, f64, f64) {
+            if r.is_empty() {
                 return (0.0, 0.0, 0.0);
             }
-            let mut v: Vec<f64> = xs.iter().map(|&x| x as f64).collect();
-            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            let p = |q: f64| crate::util::stats::percentile_sorted(&v, q) / 1e6;
+            let v = r.sorted();
+            let p = |q: f64| ns_to_ms(percentile_sorted(&v, q));
             (p(50.0), p(90.0), p(99.0))
-        };
-        let mean_queue_ms = if m.queue_ns.is_empty() {
-            0.0
-        } else {
-            m.queue_ns.iter().sum::<u64>() as f64 / m.queue_ns.len() as f64 / 1e6
-        };
-        let batches = m.batch_sizes.len() as u64;
-        let mean_batch = if m.batch_sizes.is_empty() {
-            0.0
-        } else {
-            m.batch_sizes.iter().sum::<u64>() as f64 / m.batch_sizes.len() as f64
         };
         MetricsSnapshot {
             completed: m.completed,
@@ -166,10 +167,10 @@ impl ServerMetrics {
             e2e_ms: pct(&m.e2e_ns),
             compute_ms: pct(&m.compute_ns),
             queue_ms: pct(&m.queue_ns),
-            mean_queue_ms,
-            batches,
-            mean_batch,
-            max_batch_seen: m.batch_sizes.iter().copied().max().unwrap_or(0),
+            mean_queue_ms: ns_to_ms(m.queue_ns.mean()),
+            batches: m.batch_sizes.seen(),
+            mean_batch: m.batch_sizes.mean(),
+            max_batch_seen: m.batch_sizes.max() as u64,
             arena_fallbacks: m.arena_fallbacks,
             arena_grows: m.arena_grows,
             dispatch: m.dispatch,
@@ -207,6 +208,129 @@ impl MetricsSnapshot {
             self.arena_grows,
             self.dispatch,
         )
+    }
+
+    /// Prometheus text-format exposition of the full snapshot: counters for
+    /// request/batch totals and per-algorithm dispatch lanes, gauges for
+    /// uptime/throughput/arena health, and `quantile`-labelled summaries
+    /// for the three latency streams — the scrape-able serving surface.
+    pub fn prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        fn scalar(out: &mut String, name: &str, help: &str, ty: &str, v: f64) {
+            let _ = writeln!(out, "# HELP winoconv_{name} {help}");
+            let _ = writeln!(out, "# TYPE winoconv_{name} {ty}");
+            let _ = writeln!(out, "winoconv_{name} {v}");
+        }
+        fn summary_ms(
+            out: &mut String,
+            name: &str,
+            help: &str,
+            q: (f64, f64, f64),
+            count: u64,
+        ) {
+            let _ = writeln!(out, "# HELP winoconv_{name} {help}");
+            let _ = writeln!(out, "# TYPE winoconv_{name} summary");
+            let _ = writeln!(out, "winoconv_{name}{{quantile=\"0.5\"}} {}", q.0);
+            let _ = writeln!(out, "winoconv_{name}{{quantile=\"0.9\"}} {}", q.1);
+            let _ = writeln!(out, "winoconv_{name}{{quantile=\"0.99\"}} {}", q.2);
+            let _ = writeln!(out, "winoconv_{name}_count {count}");
+        }
+        let mut s = String::new();
+        scalar(
+            &mut s,
+            "requests_completed_total",
+            "Completed requests.",
+            "counter",
+            self.completed as f64,
+        );
+        scalar(
+            &mut s,
+            "requests_rejected_total",
+            "Requests rejected by backpressure.",
+            "counter",
+            self.rejected as f64,
+        );
+        scalar(&mut s, "uptime_seconds", "Seconds since engine start.", "gauge", self.uptime_s);
+        scalar(
+            &mut s,
+            "throughput_fps",
+            "Completed requests per second.",
+            "gauge",
+            self.throughput_fps,
+        );
+        summary_ms(
+            &mut s,
+            "e2e_latency_ms",
+            "End-to-end request latency in milliseconds.",
+            self.e2e_ms,
+            self.completed,
+        );
+        summary_ms(
+            &mut s,
+            "compute_latency_ms",
+            "Batched-compute latency in milliseconds.",
+            self.compute_ms,
+            self.completed,
+        );
+        summary_ms(
+            &mut s,
+            "queue_wait_ms",
+            "Queue-wait latency in milliseconds.",
+            self.queue_ms,
+            self.completed,
+        );
+        scalar(
+            &mut s,
+            "queue_wait_mean_ms",
+            "Exact mean queue wait in milliseconds.",
+            "gauge",
+            self.mean_queue_ms,
+        );
+        scalar(&mut s, "batches_total", "Dispatched batches.", "counter", self.batches as f64);
+        scalar(
+            &mut s,
+            "batch_size_mean",
+            "Exact mean frames per dispatched batch.",
+            "gauge",
+            self.mean_batch,
+        );
+        scalar(
+            &mut s,
+            "batch_size_max",
+            "Largest batch dispatched so far.",
+            "gauge",
+            self.max_batch_seen as f64,
+        );
+        scalar(
+            &mut s,
+            "arena_fallbacks",
+            "Mutex-contention arena fallbacks (must stay 0).",
+            "gauge",
+            self.arena_fallbacks as f64,
+        );
+        scalar(
+            &mut s,
+            "arena_grows",
+            "Arena grow events (non-zero after warm-up is a regression).",
+            "gauge",
+            self.arena_grows as f64,
+        );
+        let _ = writeln!(s, "# HELP winoconv_dispatch_total Conv dispatches by algorithm lane.");
+        let _ = writeln!(s, "# TYPE winoconv_dispatch_total counter");
+        let d = &self.dispatch;
+        for (lane, v) in [
+            ("winograd", d.winograd),
+            ("im2row", d.im2row),
+            ("depthwise", d.depthwise),
+            ("pointwise", d.pointwise),
+            ("direct", d.direct),
+            ("im2row_i8", d.im2row_i8),
+            ("depthwise_i8", d.depthwise_i8),
+            ("pointwise_i8", d.pointwise_i8),
+        ] {
+            let _ = writeln!(s, "winoconv_dispatch_total{{algo=\"{lane}\"}} {v}");
+        }
+        s
     }
 }
 
@@ -265,6 +389,130 @@ mod tests {
         assert_eq!(s.arena_fallbacks, 2);
         assert_eq!(s.arena_grows, 3);
         assert!(s.report().contains("arena fallbacks/grows: 2/3"));
+    }
+
+    /// Minimal Prometheus text-format checker: every non-comment,
+    /// non-blank line must be `name 〈float〉` or `name{k="v",...} 〈float〉`
+    /// with a legal metric name, and every `# TYPE` must name a known type.
+    fn assert_valid_prometheus(text: &str) {
+        fn valid_name(n: &str) -> bool {
+            !n.is_empty()
+                && n.chars().next().map(|c| c.is_ascii_alphabetic() || c == '_').unwrap()
+                && n.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+        }
+        let mut samples = 0usize;
+        for line in text.lines() {
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let ty = rest.split_whitespace().nth(1).expect("TYPE line has a type");
+                assert!(
+                    ["counter", "gauge", "summary", "histogram", "untyped"].contains(&ty),
+                    "bad TYPE: {line}"
+                );
+                continue;
+            }
+            if line.starts_with('#') {
+                continue;
+            }
+            let (series, value) = line.rsplit_once(' ').expect("sample line has a value");
+            assert!(value.parse::<f64>().is_ok(), "unparsable value in: {line}");
+            let name = match series.split_once('{') {
+                None => series,
+                Some((name, labels)) => {
+                    let body = labels.strip_suffix('}').expect("balanced label braces");
+                    for pair in body.split(',') {
+                        let (k, v) = pair.split_once('=').expect("label k=v");
+                        assert!(valid_name(k), "bad label name in: {line}");
+                        assert!(
+                            v.starts_with('"') && v.ends_with('"') && v.len() >= 2,
+                            "unquoted label value in: {line}"
+                        );
+                    }
+                    name
+                }
+            };
+            assert!(valid_name(name), "bad metric name in: {line}");
+            samples += 1;
+        }
+        assert!(samples > 0, "no samples in exposition");
+    }
+
+    #[test]
+    fn prometheus_exposition_is_valid_and_complete() {
+        let m = ServerMetrics::new();
+        for i in 1..=50u64 {
+            m.record(i * 1000, i * 2000, i * 3000);
+        }
+        m.record_rejected();
+        m.record_batch(4);
+        m.record_arena_health(0, 0);
+        m.record_dispatch_counts(DispatchCounts {
+            winograd: 9,
+            im2row: 2,
+            depthwise: 0,
+            pointwise: 5,
+            direct: 0,
+            im2row_i8: 0,
+            depthwise_i8: 0,
+            pointwise_i8: 0,
+        });
+        let text = m.snapshot().prometheus();
+        assert_valid_prometheus(&text);
+        // Every snapshot field surfaces as a series.
+        for needle in [
+            "winoconv_requests_completed_total 50",
+            "winoconv_requests_rejected_total 1",
+            "winoconv_uptime_seconds",
+            "winoconv_throughput_fps",
+            "winoconv_e2e_latency_ms{quantile=\"0.5\"}",
+            "winoconv_e2e_latency_ms{quantile=\"0.99\"}",
+            "winoconv_compute_latency_ms{quantile=\"0.9\"}",
+            "winoconv_queue_wait_ms{quantile=\"0.5\"}",
+            "winoconv_queue_wait_ms_count 50",
+            "winoconv_queue_wait_mean_ms",
+            "winoconv_batches_total 1",
+            "winoconv_batch_size_mean 4",
+            "winoconv_batch_size_max 4",
+            "winoconv_arena_fallbacks 0",
+            "winoconv_arena_grows 0",
+            "winoconv_dispatch_total{algo=\"winograd\"} 9",
+            "winoconv_dispatch_total{algo=\"pointwise\"} 5",
+            "winoconv_dispatch_total{algo=\"im2row_i8\"} 0",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn empty_prometheus_exposition_is_valid_too() {
+        assert_valid_prometheus(&ServerMetrics::new().snapshot().prometheus());
+    }
+
+    /// The satellite fix this PR makes: a million records must not grow the
+    /// registry without bound — the reservoirs cap, while counters, means
+    /// and maxima stay exact and percentiles stay plausible.
+    #[test]
+    fn sustained_load_stays_bounded_and_sound() {
+        let m = ServerMetrics::new();
+        for i in 0..1_000_000u64 {
+            // Uniform ramp 0..1ms so true percentiles are known.
+            m.record(i % 1_000_000, 1, 1);
+            if i % 8 == 0 {
+                m.record_batch((i % 7 + 1) as usize);
+            }
+        }
+        let s = m.snapshot();
+        assert_eq!(s.completed, 1_000_000);
+        assert_eq!(s.batches, 125_000);
+        assert_eq!(s.max_batch_seen, 7);
+        // True p50 of the 0..1e6 ns ramp is 0.5 ms; the sampled estimate
+        // must land well within the sampling error of a 4096-slot uniform
+        // reservoir (±~5%).
+        assert!((s.queue_ms.0 - 0.5).abs() < 0.05, "p50={}", s.queue_ms.0);
+        assert!(s.queue_ms.2 > s.queue_ms.0);
+        assert!((s.mean_queue_ms - 0.5).abs() < 1e-3, "exact mean {}", s.mean_queue_ms);
     }
 
     #[test]

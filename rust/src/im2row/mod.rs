@@ -270,6 +270,7 @@ impl Im2RowConvolution {
         let (staging, patches) =
             ws.split2(self.staging_elems_for(n, h, w), self.patch_elems_for(n, h, w)?);
         let pshape = [n, h + 2 * ph, w + 2 * pw, c];
+        let stage_t = crate::trace::begin();
         if staging.is_empty() {
             self.fill_patches(input, n, oh, ow, pool, patches);
         } else {
@@ -277,6 +278,8 @@ impl Im2RowConvolution {
             let padded = TensorView::new(&pshape, staging)?;
             self.fill_patches(&padded, n, oh, ow, pool, patches);
         }
+        crate::trace::end_stage(stage_t, crate::trace::Stage::Pack, crate::trace::AlgoCode::Im2Row);
+        let stage_t = crate::trace::begin();
         sgemm_prepacked_fused(
             rows,
             patches,
@@ -288,6 +291,7 @@ impl Im2RowConvolution {
             pool,
             &BiasAct { bias, act },
         );
+        crate::trace::end_stage(stage_t, crate::trace::Stage::Gemm, crate::trace::AlgoCode::Im2Row);
         Ok(())
     }
 }

@@ -15,6 +15,12 @@
 //!   fusion hooks both conv schemes build on: packed-A written directly by
 //!   producers (transform-as-pack) and per-micro-tile [`gemm::Epilogue`]s
 //!   (bias/ReLU, inverse-transform gather) fired while C is cache-hot.
+//! * [`trace`] — zero-steady-state-allocation span tracing: a pre-allocated
+//!   lock-free slot buffer the planned executor (layer spans), the engines
+//!   (pack/transform/GEMM stage spans) and the coordinator dispatcher
+//!   (serve spans) record into, with a per-layer roofline profile
+//!   ([`trace::roofline`], the `winoconv profile` subcommand) and a
+//!   chrome://tracing exporter on top.
 //! * [`workspace`] — the reusable per-thread arena type backing both of the
 //!   engine's memory pools: conv scratch (packed-A / patch matrix /
 //!   padded-input staging, sized to the largest layer) and the planned
@@ -81,6 +87,7 @@ pub mod tensor;
 pub mod parallel;
 pub mod gemm;
 pub mod workspace;
+pub mod trace;
 pub mod winograd;
 pub mod im2row;
 pub mod quant;

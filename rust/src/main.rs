@@ -7,6 +7,9 @@
 //!   (Table 1 row for one model).
 //! * `serve --model <name>`    — run the serving coordinator on synthetic
 //!   frames and print latency/throughput metrics.
+//! * `profile --model <name>`  — traced planned walks reduced to a per-layer
+//!   roofline table (FLOPs, bytes, GFLOP/s, arithmetic intensity, % time);
+//!   `--chrome <path>` dumps the raw spans as chrome://tracing JSON.
 //! * `verify`                  — cross-check the Rust engine against the
 //!   AOT JAX/Pallas artifacts via PJRT.
 //! * `variants`                — list shipped Winograd variants and their
@@ -21,6 +24,7 @@ use winoconv::nn::{PreparedModel, Scheme};
 use winoconv::parallel::ThreadPool;
 use winoconv::quant::Dtype;
 use winoconv::tensor::{Tensor, TensorView};
+use winoconv::trace::{self, roofline};
 use winoconv::util::cli::Args;
 use winoconv::winograd::{WinogradConvolution, WinogradVariant};
 use winoconv::workspace::Workspace;
@@ -46,6 +50,7 @@ fn main() {
         "layers" => cmd_layers(&args),
         "network" => cmd_network(&args),
         "serve" => cmd_serve(&args),
+        "profile" => cmd_profile(&args),
         "verify" => cmd_verify(&args),
         "variants" => cmd_variants(),
         other => Err(Error::Config(format!("unknown subcommand {other:?}"))),
@@ -66,6 +71,7 @@ fn print_help() {
          \x20 layers   --model <vgg16|vgg19|googlenet|inception-v3|squeezenet|mobilenet-v1|mobilenet-v2|resnet-18|resnet-50> [--threads N] [--quick]\n\
          \x20 network  --model <name> [--threads N] [--reps N] [--batch N] [--dtype f32|int8] [--quick]\n\
          \x20 serve    --model <name> [--threads N] [--seconds S]\n\
+         \x20 profile  --model <name> [--threads N] [--walks N] [--dtype f32|int8] [--chrome FILE] [--quick]\n\
          \x20 verify   [--artifacts DIR]\n\
          \x20 variants"
     );
@@ -269,6 +275,69 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     println!("{}", engine.metrics().report());
     engine.shutdown();
+    Ok(())
+}
+
+/// Traced planned walks over one model, reduced to the per-layer roofline
+/// table: FLOPs and bytes from prepare-time geometry, nanoseconds from the
+/// layer spans the walk records into the pre-reserved trace ring — the
+/// walks themselves stay allocation-free. `--chrome <path>` additionally
+/// dumps the raw spans (layer + engine-stage lanes) as chrome://tracing
+/// JSON.
+fn cmd_profile(args: &Args) -> Result<()> {
+    let model = parse_model(args)?;
+    let threads: usize = args.get_parse_or("threads", 4)?;
+    let walks: usize = args.get_parse_or("walks", if args.flag("quick") { 2 } else { 8 })?;
+    let dtype: Dtype = args.get_parse_or("dtype", Dtype::F32)?;
+    if walks == 0 {
+        return Err(Error::Config("--walks must be at least 1".into()));
+    }
+    let pool = ThreadPool::new(threads);
+    let graph = model.build(1)?;
+    let shape = model.input_shape(1);
+    let prepared = PreparedModel::prepare_with_dtype(
+        model.name(),
+        &graph,
+        &shape,
+        Scheme::WinogradWhereSuitable,
+        dtype,
+    )?;
+    let input = Tensor::randn(&shape, 7);
+    let mut ws = Workspace::with_capacity(prepared.workspace_elems());
+    let mut acts = Workspace::with_capacity(prepared.activation_plan().peak_elems());
+    let mut out = vec![f32::NAN; prepared.output_shape().iter().product()];
+    // Warm-up untraced: page weights in and settle the arenas first so the
+    // profile measures steady state.
+    prepared.run_planned_into(&input, Some(&pool), &mut ws, &mut acts, &mut out)?;
+    trace::reserve(walks * prepared.trace_spans_per_walk() + 64);
+    trace::set_enabled(true);
+    for _ in 0..walks {
+        prepared.run_planned_into(&input, Some(&pool), &mut ws, &mut acts, &mut out)?;
+    }
+    trace::set_enabled(false);
+    let spans = trace::take();
+    let infos = prepared.layer_infos();
+    let profiles = roofline::build_profiles(&infos, &spans);
+    print!(
+        "{}",
+        roofline::render(
+            &format!("{model}: per-layer roofline ({walks} walks, {threads} threads, {dtype})"),
+            &profiles,
+        )
+    );
+    if trace::dropped() > 0 {
+        eprintln!("warning: {} spans dropped (trace ring full)", trace::dropped());
+    }
+    if let Some(path) = args.get("chrome") {
+        let n_nodes = infos.iter().map(|i| i.node as usize + 1).max().unwrap_or(0);
+        let mut names = vec![String::from("op"); n_nodes];
+        for i in &infos {
+            names[i.node as usize] = i.name.clone();
+        }
+        std::fs::write(path, trace::export_chrome(&spans, &names))
+            .map_err(|e| Error::Config(format!("writing {path}: {e}")))?;
+        println!("chrome trace written to {path} ({} spans)", spans.len());
+    }
     Ok(())
 }
 

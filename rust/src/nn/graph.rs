@@ -25,6 +25,7 @@ use crate::quant::{
     Dtype, QuantDepthwiseConvolution, QuantIm2RowConvolution, QuantPointwiseConvolution,
 };
 use crate::tensor::{Tensor, TensorView};
+use crate::trace;
 use crate::winograd::WinogradConvolution;
 use crate::workspace::Workspace;
 use crate::{bail_shape, bail_unsupported, Result};
@@ -817,6 +818,117 @@ impl PreparedModel {
         self.census
     }
 
+    /// Trace spans one planned walk records with tracing enabled: one
+    /// layer span per executed (non-passthrough) node plus each bound
+    /// engine's fixed stage-span count (f32 engines 2, int8 engines 3,
+    /// the grouped fallback 0). Static after prepare, so callers can size
+    /// the sink exactly ([`trace::reserve`]) and CI can pin
+    /// `trace::len() == walks × trace_spans_per_walk()`. Batched walks
+    /// record the same count — each engine is entered once per walk
+    /// regardless of `nb`.
+    pub fn trace_spans_per_walk(&self) -> usize {
+        self.prepared
+            .iter()
+            .map(|p| match p {
+                PreparedOp::Passthrough => 0,
+                PreparedOp::Conv { conv, .. } => {
+                    1 + match conv {
+                        PreparedConv::Winograd(_)
+                        | PreparedConv::Im2Row(_)
+                        | PreparedConv::Depthwise(_)
+                        | PreparedConv::Pointwise(_) => 2,
+                        PreparedConv::DirectGrouped { .. } => 0,
+                        PreparedConv::Im2RowI8(_)
+                        | PreparedConv::DepthwiseI8(_)
+                        | PreparedConv::PointwiseI8(_) => 3,
+                    }
+                }
+                PreparedOp::PointwiseResidual { .. } => 1 + 2,
+                PreparedOp::Other(_) => 1,
+            })
+            .sum()
+    }
+
+    /// Prepare-time roofline description of every executed node — name,
+    /// kind, bound algorithm lane, output shape and a static FLOP/byte
+    /// cost model — keyed by graph-node index for joining with traced
+    /// layer spans via [`trace::roofline::build_profiles`]. Multiply–adds
+    /// count as 2 FLOPs (the paper's convention); bytes are compulsory
+    /// input + weight + output traffic, with int8 lanes streaming their
+    /// offline-quantized weights at 1 byte/element.
+    pub fn layer_infos(&self) -> Vec<trace::roofline::LayerInfo> {
+        use trace::roofline::{LayerCost, LayerInfo};
+        let mut infos = Vec::new();
+        for (idx, node) in self.nodes.iter().enumerate() {
+            let p = &self.prepared[idx];
+            if matches!(p, PreparedOp::Passthrough) {
+                continue;
+            }
+            let out_shape = self.shapes[idx].clone();
+            let out_elems: u64 = out_shape.iter().product::<usize>() as u64;
+            let in_elems =
+                |i: usize| -> u64 { self.shapes[i].iter().product::<usize>() as u64 };
+            let algo = prepared_algo(p);
+            let wbytes: u64 = if algo.dtype_code() == 1 { 1 } else { 4 };
+            let (flops, bytes, kind) = match p {
+                PreparedOp::Conv { .. } => {
+                    let Op::Conv { desc, .. } = &node.op else {
+                        unreachable!("conv binding only happens on conv nodes")
+                    };
+                    let taps = (desc.kernel.0 * desc.kernel.1 * desc.cin / desc.groups) as u64;
+                    let w = desc.cout as u64 * taps;
+                    (
+                        2 * out_elems * taps,
+                        (in_elems(node.inputs[0]) + out_elems) * 4 + w * wbytes,
+                        "conv",
+                    )
+                }
+                PreparedOp::PointwiseResidual { x, res, .. } => {
+                    // The fused 1×1 GEMM + residual add (+ activation) as
+                    // one pass: conv MACs plus one add per output element.
+                    let c = *self.shapes[*x].last().unwrap() as u64;
+                    let m = *out_shape.last().unwrap() as u64;
+                    (
+                        2 * out_elems * c + out_elems,
+                        (in_elems(*x) + in_elems(*res) + out_elems) * 4 + c * m * wbytes,
+                        "conv",
+                    )
+                }
+                PreparedOp::Other(op) => {
+                    let inputs: u64 = node.inputs.iter().map(|&i| in_elems(i)).sum();
+                    let flops = match op {
+                        Op::MaxPool { kernel, .. } | Op::AvgPool { kernel, .. } => {
+                            out_elems * (kernel.0 * kernel.1) as u64
+                        }
+                        Op::GlobalAvgPool => inputs,
+                        Op::Fc { weights, .. } => {
+                            2 * out_shape[0] as u64 * weights.len() as u64
+                        }
+                        Op::Lrn { size, .. } => out_elems * (2 * *size + 3) as u64,
+                        // Single-pass elementwise traffic: concat copies,
+                        // softmax's transcendentals, relu clamps, adds.
+                        _ => inputs.max(out_elems),
+                    };
+                    let wb = match op {
+                        Op::Fc { weights, .. } => weights.len() as u64 * 4,
+                        _ => 0,
+                    };
+                    (flops, (inputs + out_elems) * 4 + wb, node.op.kind())
+                }
+                PreparedOp::Passthrough => unreachable!("filtered above"),
+            };
+            infos.push(LayerInfo {
+                node: idx as u32,
+                name: node.name.clone(),
+                kind: kind.to_string(),
+                algo,
+                out_shape,
+                cost: LayerCost { flops, bytes },
+            });
+        }
+        infos
+    }
+
     /// Built-in arena statistics: `(bytes, grow_count)` summed over the
     /// scratch and activation arenas. `grow_count` must stay 0 across
     /// inferences — both arenas are pre-sized at prepare time.
@@ -1084,11 +1196,23 @@ impl PreparedModel {
     ) -> Result<()> {
         let arena = acts.take(self.plan.peak_elems() * nb);
         let base = arena.as_mut_ptr();
+        // One relaxed load per walk decides all span recording — with the
+        // sink disabled the executor pays nothing else.
+        let tr = trace::enabled();
 
         for (idx, node) in self.nodes.iter().enumerate() {
             // Clock reads only when the caller asked for timings — the
             // planned serving path pays no per-node clock_gettime.
             let t0 = per_layer.is_some().then(Instant::now);
+            let traced = tr && !matches!(self.prepared[idx], PreparedOp::Passthrough);
+            let span_t0 = if traced {
+                // Publish the node index so the engines' stage spans
+                // attribute to this layer without signature changes.
+                trace::set_current_layer(idx as u32);
+                trace::now_ns()
+            } else {
+                0
+            };
             // Borrowed view of a producer's planned arena window (or of the
             // caller's input tensor for the graph input).
             //
@@ -1253,6 +1377,17 @@ impl PreparedModel {
                     }
                 }
             };
+            if traced {
+                let s = &shapes[idx];
+                let dim = |i: usize| s.get(i).copied().unwrap_or(1) as u32;
+                trace::record_layer(
+                    idx as u32,
+                    prepared_algo(&self.prepared[idx]),
+                    [dim(0), dim(1), dim(2), dim(3)],
+                    span_t0,
+                    trace::now_ns().saturating_sub(span_t0),
+                );
+            }
             if let (Some(timings), Some(t0)) = (per_layer.as_deref_mut(), t0) {
                 timings.push(LayerTiming {
                     name: node.name.clone(),
@@ -1284,6 +1419,24 @@ impl PreparedModel {
             }
         }
         Ok(())
+    }
+}
+
+/// The trace-span algorithm lane a prepared op executes on.
+fn prepared_algo(p: &PreparedOp) -> trace::AlgoCode {
+    match p {
+        PreparedOp::Conv { conv, .. } => match conv {
+            PreparedConv::Winograd(_) => trace::AlgoCode::Winograd,
+            PreparedConv::Im2Row(_) => trace::AlgoCode::Im2Row,
+            PreparedConv::Depthwise(_) => trace::AlgoCode::Depthwise,
+            PreparedConv::Pointwise(_) => trace::AlgoCode::Pointwise,
+            PreparedConv::DirectGrouped { .. } => trace::AlgoCode::Direct,
+            PreparedConv::Im2RowI8(_) => trace::AlgoCode::Im2RowI8,
+            PreparedConv::DepthwiseI8(_) => trace::AlgoCode::DepthwiseI8,
+            PreparedConv::PointwiseI8(_) => trace::AlgoCode::PointwiseI8,
+        },
+        PreparedOp::PointwiseResidual { .. } => trace::AlgoCode::Pointwise,
+        PreparedOp::Passthrough | PreparedOp::Other(_) => trace::AlgoCode::None,
     }
 }
 
@@ -2096,6 +2249,143 @@ mod tests {
             .zip(oracle.data())
             .fold(0f32, |a, (&x, &y)| a.max((x - y).abs()));
         assert!(drift <= 0.25, "softmax drift {drift} vs f32 oracle");
+    }
+
+    /// The trace-span census and the roofline cost model are static
+    /// prepare-time facts — hand-counted here against the engine stage
+    /// model (f32 engines 2 stage spans, int8 engines 3, one layer span
+    /// per executed node).
+    #[test]
+    fn trace_census_and_layer_costs_are_static() {
+        let g = tiny_graph(47);
+        let m =
+            PreparedModel::prepare("tiny", &g, &[1, 8, 8, 3], Scheme::WinogradWhereSuitable)
+                .unwrap();
+        // 7 executed nodes (input is passthrough) + 2 stage spans each for
+        // conv1 (im2row — 3·8 channels below the Winograd gate) and conv2
+        // (Winograd-bound).
+        assert_eq!(m.trace_spans_per_walk(), 11);
+        let infos = m.layer_infos();
+        assert_eq!(infos.len(), 7);
+        assert!(infos.iter().all(|i| i.cost.flops > 0 && i.cost.bytes > 0));
+        let conv2 = infos.iter().find(|i| i.name == "conv2").unwrap();
+        assert_eq!(conv2.algo, trace::AlgoCode::Winograd);
+        assert_eq!(conv2.kind, "conv");
+        assert_eq!(conv2.out_shape, vec![1, 8, 8, 16]);
+        // 2 FLOPs per MAC × out elems × taps (3·3·8), f32 traffic on
+        // input (8·8·8), output (8·8·16) and weights (16·3·3·8).
+        assert_eq!(conv2.cost.flops, 2 * (8 * 8 * 16) * (3 * 3 * 8));
+        assert_eq!(conv2.cost.bytes, (512 + 1024) * 4 + 1152 * 4);
+        let fc = infos.iter().find(|i| i.name == "fc").unwrap();
+        assert_eq!(fc.algo, trace::AlgoCode::None);
+        assert_eq!(fc.cost.flops, 2 * 240, "fc: 2·N·K·M with [24,10] weights");
+
+        // Int8 binding: every quantized engine records 3 stage spans, and
+        // its offline-quantized weights stream at 1 byte/element.
+        let g8 = residual_block_graph(49);
+        let m8 = PreparedModel::prepare_with_dtype(
+            "mbblock",
+            &g8,
+            &[1, 10, 10, 8],
+            Scheme::Im2RowOnly,
+            Dtype::Int8,
+        )
+        .unwrap();
+        // input 0 + three quantized convs (1+3 each) + add 1 + clamp 1.
+        assert_eq!(m8.trace_spans_per_walk(), 14);
+        let pw = m8.layer_infos().into_iter().find(|i| i.name == "pw_expand").unwrap();
+        assert_eq!(pw.algo, trace::AlgoCode::PointwiseI8);
+        assert_eq!(pw.cost.bytes, (800 + 1600) * 4 + 16 * 8);
+
+        // The f32 "ours" residual block fuses pw_linear → add → clamp into
+        // one PointwiseResidual at the clamp's position: 3 executed nodes,
+        // each 1 layer + 2 stage spans.
+        let gf = residual_block_graph(49);
+        let mf = PreparedModel::prepare(
+            "mbblock",
+            &gf,
+            &[1, 10, 10, 8],
+            Scheme::WinogradWhereSuitable,
+        )
+        .unwrap();
+        assert_eq!(mf.trace_spans_per_walk(), 9);
+        let infos = mf.layer_infos();
+        assert_eq!(infos.len(), 3);
+        let fused = infos.iter().find(|i| i.name == "clamp").unwrap();
+        assert_eq!(fused.algo, trace::AlgoCode::Pointwise);
+        assert_eq!(fused.kind, "conv", "the fused chain profiles as its conv");
+    }
+
+    /// Tracing integration: with the sink enabled, planned walks record a
+    /// layer span per executed node carrying the algo/shape `layer_infos`
+    /// describes, the engines add their stage spans, the roofline join
+    /// profiles every node — and the arenas still never grow. Lower-bound
+    /// assertions only: other tests may record into the global sink during
+    /// our enabled window (exact counts are pinned by the `ablation_trace`
+    /// bench in its own process).
+    #[test]
+    fn traced_walk_records_layer_and_stage_spans() {
+        let _guard = trace::TEST_LOCK.lock().unwrap();
+        let g = residual_block_graph(53);
+        let m = PreparedModel::prepare(
+            "mbblock",
+            &g,
+            &[1, 10, 10, 8],
+            Scheme::WinogradWhereSuitable,
+        )
+        .unwrap();
+        let walks = 2usize;
+        trace::reserve(4096.max(walks * m.trace_spans_per_walk() + 256));
+        let input = Tensor::randn(&[1, 10, 10, 8], 3);
+        let mut ws = Workspace::with_capacity(m.workspace_elems());
+        let mut acts = Workspace::with_capacity(m.activation_plan().peak_elems());
+        let mut out = vec![0.0f32; m.output_shape().iter().product()];
+        trace::set_enabled(true);
+        for _ in 0..walks {
+            m.run_planned_into(&input, None, &mut ws, &mut acts, &mut out).unwrap();
+        }
+        trace::set_enabled(false);
+        let spans = trace::take();
+        assert!(
+            spans.len() >= walks * m.trace_spans_per_walk(),
+            "{} spans < {} walks × {} per walk",
+            spans.len(),
+            walks,
+            m.trace_spans_per_walk()
+        );
+        // Tracing must not break the zero-alloc walk.
+        assert_eq!(ws.grow_count(), 0, "tracing grew the scratch arena");
+        assert_eq!(acts.grow_count(), 0, "tracing grew the activation arena");
+        let infos = m.layer_infos();
+        for info in &infos {
+            let dim = |i: usize| info.out_shape.get(i).copied().unwrap_or(1) as u32;
+            let want = [dim(0), dim(1), dim(2), dim(3)];
+            let n = spans
+                .iter()
+                .filter(|s| {
+                    s.kind == trace::SpanKind::Layer
+                        && s.layer == info.node
+                        && s.algo == info.algo
+                        && s.shape == want
+                })
+                .count();
+            assert!(n >= walks, "node {} ({}): {n} layer spans", info.node, info.name);
+        }
+        // Stage spans attribute to our executed conv nodes.
+        for node in [1u32, 2] {
+            assert!(
+                spans
+                    .iter()
+                    .any(|s| s.kind == trace::SpanKind::Stage && s.layer == node),
+                "no stage span for node {node}"
+            );
+        }
+        // Roofline join + render over the real spans.
+        let ps = trace::roofline::build_profiles(&infos, &spans);
+        assert_eq!(ps.len(), infos.len(), "every executed node profiles");
+        assert!(ps.iter().all(|p| p.spans >= walks as u64));
+        let table = trace::roofline::render("mbblock roofline", &ps);
+        assert!(table.contains("pw_expand") && table.contains("network:"));
     }
 
     /// Shape inference guards the new ops: Add requires exactly two

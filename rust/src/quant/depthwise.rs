@@ -169,6 +169,7 @@ impl QuantDepthwiseConvolution {
         let (hp, wp) = (h + 2 * ph, w + 2 * pw);
         let staging_bytes = n * hp * wp * c;
 
+        let stage_t = crate::trace::begin();
         let q = choose_act_quant(input.data());
         let staging = &mut as_u8_mut(ws.take(elems_for_bytes(staging_bytes)))[..staging_bytes];
         if ph != 0 || pw != 0 {
@@ -183,6 +184,21 @@ impl QuantDepthwiseConvolution {
                 quantize_u8_into(srow, q, drow);
             }
         }
+        crate::trace::end_stage(
+            stage_t,
+            crate::trace::Stage::Quantize,
+            crate::trace::AlgoCode::DepthwiseI8,
+        );
+        // Padding is folded into the quantize pass (zp-byte borders), so
+        // the Pack span is ~0 ns — recorded anyway to keep the int8 engine
+        // stage census fixed at three.
+        let stage_t = crate::trace::begin();
+        crate::trace::end_stage(
+            stage_t,
+            crate::trace::Stage::Pack,
+            crate::trace::AlgoCode::DepthwiseI8,
+        );
+        let stage_t = crate::trace::begin();
 
         let (sh, sw) = self.stride;
         let a_scale = q.scale;
@@ -226,6 +242,11 @@ impl QuantDepthwiseConvolution {
             Some(pool) => pool.parallel_for(n * oh, row_job),
             None => (0..n * oh).for_each(row_job),
         }
+        crate::trace::end_stage(
+            stage_t,
+            crate::trace::Stage::Compute,
+            crate::trace::AlgoCode::DepthwiseI8,
+        );
         Ok(())
     }
 }

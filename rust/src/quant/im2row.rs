@@ -162,6 +162,7 @@ impl QuantIm2RowConvolution {
 
         // Quantize into the padded staging; the border is zp bytes, which
         // dequantize to exactly 0.0 (zero padding for free).
+        let stage_t = crate::trace::begin();
         if ph != 0 || pw != 0 {
             staging.fill(q.zp as u8);
         }
@@ -173,9 +174,21 @@ impl QuantIm2RowConvolution {
                 quantize_u8_into(srow, q, drow);
             }
         }
+        crate::trace::end_stage(
+            stage_t,
+            crate::trace::Stage::Quantize,
+            crate::trace::AlgoCode::Im2RowI8,
+        );
 
+        let stage_t = crate::trace::begin();
         self.fill_patches(staging, n, sph, spw, oh, ow, pool, patches);
+        crate::trace::end_stage(
+            stage_t,
+            crate::trace::Stage::Pack,
+            crate::trace::AlgoCode::Im2RowI8,
+        );
 
+        let stage_t = crate::trace::begin();
         let epi = QDequantBiasAct {
             out_addr: out.as_mut_ptr() as usize,
             ldc: self.m,
@@ -186,7 +199,13 @@ impl QuantIm2RowConvolution {
             bias,
             act,
         };
-        qgemm_prepacked_fused(rows, patches, &self.b.packed, pool, &epi)
+        let r = qgemm_prepacked_fused(rows, patches, &self.b.packed, pool, &epi);
+        crate::trace::end_stage(
+            stage_t,
+            crate::trace::Stage::Gemm,
+            crate::trace::AlgoCode::Im2RowI8,
+        );
+        r
     }
 
     /// Gather the u8 patch matrix `[N·OH·OW, KH·KW·C]` from the padded

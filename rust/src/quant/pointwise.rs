@@ -133,6 +133,7 @@ impl QuantPointwiseConvolution {
             );
         }
 
+        let stage_t = crate::trace::begin();
         let q = choose_act_quant(input.data());
         let a_bytes = rows * c;
         let qa = &mut as_u8_mut(ws.take(elems_for_bytes(a_bytes)))[..a_bytes];
@@ -167,7 +168,21 @@ impl QuantPointwiseConvolution {
                 None => (0..n * oh).for_each(gather_row),
             }
         }
+        crate::trace::end_stage(
+            stage_t,
+            crate::trace::Stage::Quantize,
+            crate::trace::AlgoCode::PointwiseI8,
+        );
+        // The quantized A buffer *is* the GEMM operand — no separate patch
+        // pack, so the Pack span is ~0 ns (kept for the fixed census).
+        let stage_t = crate::trace::begin();
+        crate::trace::end_stage(
+            stage_t,
+            crate::trace::Stage::Pack,
+            crate::trace::AlgoCode::PointwiseI8,
+        );
 
+        let stage_t = crate::trace::begin();
         let epi = QDequantBiasAct {
             out_addr: out.as_mut_ptr() as usize,
             ldc: self.cout,
@@ -178,7 +193,13 @@ impl QuantPointwiseConvolution {
             bias,
             act,
         };
-        qgemm_prepacked_fused(rows, qa, &self.b.packed, pool, &epi)
+        let r = qgemm_prepacked_fused(rows, qa, &self.b.packed, pool, &epi);
+        crate::trace::end_stage(
+            stage_t,
+            crate::trace::Stage::Gemm,
+            crate::trace::AlgoCode::PointwiseI8,
+        );
+        r
     }
 }
 

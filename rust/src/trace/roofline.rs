@@ -1,0 +1,205 @@
+//! Per-layer roofline profiles on top of the raw trace spans — the
+//! runtime's Table 2 view: every layer with its FLOPs, bytes moved,
+//! achieved GFLOP/s, arithmetic intensity and share of network time.
+//!
+//! Costs are derived from conv geometry at prepare time (the `nn` layer
+//! builds a [`LayerInfo`] per node via `PreparedModel::layer_infos`);
+//! timings come from the layer spans of a traced walk. A layer's
+//! arithmetic intensity (FLOPs per byte of input + weights + output) says
+//! which side of the roofline it sits on: low-intensity layers (1×1 convs,
+//! pools) are bandwidth-bound and gain nothing from a faster kernel, the
+//! high-intensity 3×3 mid-network layers are exactly where the paper's
+//! Winograd scheme pays.
+
+use super::{AlgoCode, Span, SpanKind};
+use crate::bench::Table;
+
+/// Static work/traffic cost of one layer, derived from its geometry.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LayerCost {
+    /// Multiply–adds counted as 2 FLOPs each (the paper's convention).
+    pub flops: u64,
+    /// Input + weights + output traffic in bytes (dtype-aware, compulsory
+    /// misses only — the roofline's denominator).
+    pub bytes: u64,
+}
+
+/// Prepare-time description of one graph node for the profile consumers.
+#[derive(Debug, Clone)]
+pub struct LayerInfo {
+    /// Graph-node index (the span `layer` field).
+    pub node: u32,
+    /// Layer name as the zoo/table prints it.
+    pub name: String,
+    /// Op kind ("conv", "maxpool", "fc", ...).
+    pub kind: String,
+    /// Bound algorithm lane.
+    pub algo: AlgoCode,
+    /// Output shape `[N, H, W, C]`-ish (as inferred).
+    pub out_shape: Vec<usize>,
+    /// Static cost model.
+    pub cost: LayerCost,
+}
+
+/// One profiled layer: static cost + measured nanoseconds.
+#[derive(Debug, Clone)]
+pub struct LayerProfile {
+    /// Prepare-time info.
+    pub info: LayerInfo,
+    /// Summed layer-span nanoseconds across the profiled walks.
+    pub ns: u64,
+    /// Layer spans aggregated (== walk count in a clean profile run).
+    pub spans: u64,
+}
+
+impl LayerProfile {
+    /// Achieved GFLOP/s (total FLOPs over total time).
+    pub fn gflops(&self) -> f64 {
+        if self.ns == 0 {
+            return 0.0;
+        }
+        (self.info.cost.flops * self.spans) as f64 / self.ns as f64
+    }
+
+    /// Arithmetic intensity in FLOPs / byte.
+    pub fn intensity(&self) -> f64 {
+        if self.info.cost.bytes == 0 {
+            return 0.0;
+        }
+        self.info.cost.flops as f64 / self.info.cost.bytes as f64
+    }
+}
+
+/// Join prepare-time [`LayerInfo`]s with the layer spans of a traced walk:
+/// per node, sum span durations and count spans. Nodes that never ran
+/// (passthrough) are omitted.
+pub fn build_profiles(infos: &[LayerInfo], spans: &[Span]) -> Vec<LayerProfile> {
+    infos
+        .iter()
+        .filter_map(|info| {
+            let mut ns = 0u64;
+            let mut n = 0u64;
+            for s in spans {
+                if s.kind == SpanKind::Layer && s.layer == info.node {
+                    ns += s.dur_ns;
+                    n += 1;
+                }
+            }
+            if n == 0 {
+                return None;
+            }
+            Some(LayerProfile {
+                info: info.clone(),
+                ns,
+                spans: n,
+            })
+        })
+        .collect()
+}
+
+/// Render the per-layer roofline table (every layer, network order) plus a
+/// whole-network summary line.
+pub fn render(title: &str, profiles: &[LayerProfile]) -> String {
+    let total_ns: u64 = profiles.iter().map(|p| p.ns).sum();
+    let total_flops: u64 = profiles.iter().map(|p| p.info.cost.flops * p.spans).sum();
+    let mut table = Table::new(
+        title,
+        &["layer", "kind", "algo", "out shape", "ms", "% time", "GFLOP/s", "FLOP/byte"],
+    );
+    for p in profiles {
+        let shape = p
+            .info
+            .out_shape
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join("x");
+        table.row(&[
+            p.info.name.clone(),
+            p.info.kind.clone(),
+            p.info.algo.name().to_string(),
+            shape,
+            format!("{:.3}", crate::util::stats::ns_to_ms(p.ns as f64 / p.spans as f64)),
+            format!("{:.1}", 100.0 * p.ns as f64 / total_ns.max(1) as f64),
+            format!("{:.2}", p.gflops()),
+            format!("{:.2}", p.intensity()),
+        ]);
+    }
+    let mut out = table.render();
+    out.push_str(&format!(
+        "network: {:.2} ms/walk, {:.2} GFLOP/walk, {:.2} GFLOP/s overall\n",
+        crate::util::stats::ns_to_ms(total_ns as f64)
+            / profiles.iter().map(|p| p.spans).max().unwrap_or(1) as f64,
+        total_flops as f64 / 1e9 / profiles.iter().map(|p| p.spans).max().unwrap_or(1) as f64,
+        if total_ns == 0 { 0.0 } else { total_flops as f64 / total_ns as f64 },
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn info(node: u32, name: &str, algo: AlgoCode, flops: u64, bytes: u64) -> LayerInfo {
+        LayerInfo {
+            node,
+            name: name.to_string(),
+            kind: "conv".to_string(),
+            algo,
+            out_shape: vec![1, 8, 8, 16],
+            cost: LayerCost { flops, bytes },
+        }
+    }
+
+    fn layer_span(node: u32, dur_ns: u64) -> Span {
+        Span {
+            kind: SpanKind::Layer,
+            code: 0,
+            algo: AlgoCode::Winograd,
+            dtype: 0,
+            layer: node,
+            shape: [1, 8, 8, 16],
+            t0_ns: 0,
+            dur_ns,
+        }
+    }
+
+    #[test]
+    fn profiles_join_costs_with_span_time() {
+        let infos = [
+            info(0, "conv1", AlgoCode::Winograd, 2_000_000, 100_000),
+            info(3, "conv2", AlgoCode::Im2Row, 1_000_000, 500_000),
+            info(5, "never-ran", AlgoCode::None, 1, 1),
+        ];
+        // Two walks: node 0 spans twice, node 3 once.
+        let spans = [layer_span(0, 1_000_000), layer_span(0, 3_000_000), layer_span(3, 500_000)];
+        let ps = build_profiles(&infos, &spans);
+        assert_eq!(ps.len(), 2, "unran nodes are omitted");
+        assert_eq!(ps[0].ns, 4_000_000);
+        assert_eq!(ps[0].spans, 2);
+        // 2 MFLOP x 2 walks over 4 ms = 1 GFLOP/s.
+        assert!((ps[0].gflops() - 1.0).abs() < 1e-9, "{}", ps[0].gflops());
+        assert!((ps[0].intensity() - 20.0).abs() < 1e-9);
+        assert!((ps[1].gflops() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn render_lists_every_layer_and_totals() {
+        let infos = [
+            info(0, "conv1", AlgoCode::Winograd, 2_000_000, 100_000),
+            info(1, "conv2", AlgoCode::Pointwise, 500_000, 400_000),
+        ];
+        let spans = [layer_span(0, 1_000_000), layer_span(1, 1_000_000)];
+        let ps = build_profiles(&infos, &spans);
+        let s = render("demo roofline", &ps);
+        assert!(s.contains("demo roofline"));
+        assert!(s.contains("conv1"));
+        assert!(s.contains("conv2"));
+        assert!(s.contains("winograd"));
+        assert!(s.contains("pointwise"));
+        assert!(s.contains("GFLOP/s"));
+        assert!(s.contains("network:"));
+        // 50/50 time split.
+        assert!(s.contains("50.0"));
+    }
+}

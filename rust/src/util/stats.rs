@@ -79,6 +79,104 @@ pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
     sorted[lo] * (1.0 - frac) + sorted[hi] * frac
 }
 
+/// Nanoseconds → milliseconds. The one conversion every latency report
+/// performs; centralized so percentile call sites stop hand-rolling `/ 1e6`.
+#[inline]
+pub fn ns_to_ms(ns: f64) -> f64 {
+    ns / 1e6
+}
+
+/// Fixed-capacity uniform reservoir sampler (Vitter's Algorithm R) with a
+/// deterministic seedable PRNG — bounded-memory percentile estimation for
+/// long-running servers. The first `cap` records are kept verbatim (so
+/// short runs stay *exact*); afterwards each new record replaces a kept one
+/// with probability `cap / seen`, keeping the sample uniform over the whole
+/// stream. Exact running mean / max / count are tracked separately so those
+/// stats never degrade to estimates.
+#[derive(Debug, Clone)]
+pub struct Reservoir {
+    sample: Vec<f64>,
+    cap: usize,
+    seen: u64,
+    sum: f64,
+    max: f64,
+    rng: crate::util::rng::XorShiftRng,
+}
+
+impl Reservoir {
+    /// New reservoir keeping at most `cap` samples (`cap` > 0).
+    pub fn new(cap: usize, seed: u64) -> Reservoir {
+        assert!(cap > 0, "reservoir capacity must be positive");
+        Reservoir {
+            sample: Vec::with_capacity(cap),
+            cap,
+            seen: 0,
+            sum: 0.0,
+            max: f64::NEG_INFINITY,
+            rng: crate::util::rng::XorShiftRng::new(seed),
+        }
+    }
+
+    /// Record one observation.
+    pub fn record(&mut self, x: f64) {
+        self.seen += 1;
+        self.sum += x;
+        if x > self.max {
+            self.max = x;
+        }
+        if self.sample.len() < self.cap {
+            self.sample.push(x);
+        } else {
+            // Algorithm R: keep with probability cap/seen, evicting a
+            // uniformly random kept sample.
+            let j = (self.rng.next_u64() % self.seen) as usize;
+            if j < self.cap {
+                self.sample[j] = x;
+            }
+        }
+    }
+
+    /// Total observations recorded (not capped).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Samples currently kept (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.sample.len()
+    }
+
+    /// True before the first record.
+    pub fn is_empty(&self) -> bool {
+        self.seen == 0
+    }
+
+    /// Exact running mean over *all* observations (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.seen == 0 {
+            0.0
+        } else {
+            self.sum / self.seen as f64
+        }
+    }
+
+    /// Exact running maximum over all observations (0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.seen == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// The kept sample, sorted ascending — feed to [`percentile_sorted`].
+    pub fn sorted(&self) -> Vec<f64> {
+        let mut v = self.sample.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v
+    }
+}
+
 /// Format a duration given in nanoseconds with an auto-selected unit.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
@@ -86,7 +184,7 @@ pub fn fmt_ns(ns: f64) -> String {
     } else if ns < 1e6 {
         format!("{:.2} µs", ns / 1e3)
     } else if ns < 1e9 {
-        format!("{:.2} ms", ns / 1e6)
+        format!("{:.2} ms", ns_to_ms(ns))
     } else {
         format!("{:.3} s", ns / 1e9)
     }
@@ -132,6 +230,93 @@ mod tests {
         assert_eq!(percentile_sorted(&xs, 0.0), 0.0);
         assert_eq!(percentile_sorted(&xs, 50.0), 5.0);
         assert_eq!(percentile_sorted(&xs, 100.0), 10.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn percentile_of_empty_slice_panics() {
+        let _ = percentile_sorted(&[], 50.0);
+    }
+
+    #[test]
+    fn percentile_single_element_is_that_element() {
+        for q in [0.0, 37.5, 50.0, 100.0] {
+            assert_eq!(percentile_sorted(&[42.0], q), 42.0);
+        }
+    }
+
+    #[test]
+    fn percentile_extremes_hit_min_and_max() {
+        let xs = [1.0, 2.0, 5.0, 9.0, 100.0];
+        assert_eq!(percentile_sorted(&xs, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&xs, 100.0), 100.0);
+    }
+
+    #[test]
+    fn percentile_duplicate_heavy_distribution() {
+        // 99 copies of 10 and one 1000: every percentile below the last
+        // rank must sit on the plateau, p100 on the outlier.
+        let mut xs = vec![10.0; 99];
+        xs.push(1000.0);
+        assert_eq!(percentile_sorted(&xs, 50.0), 10.0);
+        assert_eq!(percentile_sorted(&xs, 98.0), 10.0);
+        assert_eq!(percentile_sorted(&xs, 100.0), 1000.0);
+        // p99 interpolates between the plateau and the outlier.
+        let p99 = percentile_sorted(&xs, 99.0);
+        assert!(p99 > 10.0 && p99 < 1000.0, "{p99}");
+    }
+
+    #[test]
+    fn ns_to_ms_converts() {
+        assert_eq!(ns_to_ms(1_500_000.0), 1.5);
+        assert_eq!(ns_to_ms(0.0), 0.0);
+    }
+
+    #[test]
+    fn reservoir_million_records_stays_at_cap() {
+        let mut r = Reservoir::new(1024, 7);
+        for i in 0..1_000_000u64 {
+            r.record(i as f64);
+        }
+        assert_eq!(r.len(), 1024);
+        assert_eq!(r.seen(), 1_000_000);
+        // Exact stats survive the sampling.
+        assert_eq!(r.max(), 999_999.0);
+        assert!((r.mean() - 499_999.5).abs() < 1e-6, "{}", r.mean());
+        // The sampled median of a uniform ramp lands near the true median.
+        let sorted = r.sorted();
+        let p50 = percentile_sorted(&sorted, 50.0);
+        assert!((p50 - 500_000.0).abs() < 100_000.0, "p50={p50}");
+    }
+
+    #[test]
+    fn reservoir_is_deterministic_for_same_seed() {
+        let mut a = Reservoir::new(64, 99);
+        let mut b = Reservoir::new(64, 99);
+        for i in 0..10_000u64 {
+            let x = (i * 2654435761 % 1000) as f64;
+            a.record(x);
+            b.record(x);
+        }
+        assert_eq!(a.sorted(), b.sorted());
+        let mut c = Reservoir::new(64, 100);
+        for i in 0..10_000u64 {
+            c.record((i * 2654435761 % 1000) as f64);
+        }
+        assert_ne!(a.sorted(), c.sorted(), "different seeds keep different samples");
+    }
+
+    #[test]
+    fn reservoir_below_cap_is_exact() {
+        let mut r = Reservoir::new(128, 3);
+        for x in [5.0, 1.0, 9.0] {
+            r.record(x);
+        }
+        assert_eq!(r.sorted(), vec![1.0, 5.0, 9.0]);
+        assert_eq!(r.mean(), 5.0);
+        assert_eq!(r.max(), 9.0);
+        assert!(!r.is_empty());
+        assert_eq!(Reservoir::new(4, 1).mean(), 0.0);
     }
 
     #[test]

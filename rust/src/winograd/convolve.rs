@@ -437,6 +437,13 @@ impl WinogradConvolution {
             );
         }
         let out_addr = out.as_mut_ptr() as usize;
+        // Stage tracing: transform/GEMM nanoseconds accumulate across the
+        // region blocks, recorded as two synthetic-interval spans after the
+        // sweep (one relaxed load when disabled).
+        let tr = crate::trace::enabled();
+        let span_t0 = if tr { crate::trace::now_ns() } else { 0 };
+        let mut transform_ns = 0u64;
+        let mut gemm_ns = 0u64;
 
         // One staging buffer + packed-A block for the whole layer, reused
         // across blocks (two disjoint arena borrows, zero heap traffic).
@@ -466,6 +473,7 @@ impl WinogradConvolution {
                 zeroed_for_bm = Some(bm);
             }
             {
+                let stage_t = if tr { crate::trace::now_ns() } else { 0 };
                 let a_addr = a_blk.as_mut_ptr() as usize;
                 let a_len = tiles * tile_stride;
                 let padded_in = &padded;
@@ -514,6 +522,9 @@ impl WinogradConvolution {
                     Some(pool) => pool.parallel_for(bm, transform_region),
                     None => (0..bm).for_each(transform_region),
                 }
+                if tr {
+                    transform_ns += crate::trace::now_ns().saturating_sub(stage_t);
+                }
             }
 
             // Stage 2: x² batched GEMMs over the packed panels; the gather
@@ -537,7 +548,21 @@ impl WinogradConvolution {
                 bias,
                 act,
             };
+            let stage_t = if tr { crate::trace::now_ns() } else { 0 };
             bgd.run_packed_fused(pool, &a_blk[..tiles * tile_stride], &self.u_packed, &gather);
+            if tr {
+                gemm_ns += crate::trace::now_ns().saturating_sub(stage_t);
+            }
+        }
+        if tr {
+            use crate::trace::{AlgoCode, Stage};
+            crate::trace::record_stage_at(Stage::Transform, AlgoCode::Winograd, span_t0, transform_ns);
+            crate::trace::record_stage_at(
+                Stage::Gemm,
+                AlgoCode::Winograd,
+                span_t0 + transform_ns,
+                gemm_ns,
+            );
         }
 
         Ok(())
